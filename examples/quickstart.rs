@@ -1,0 +1,71 @@
+//! Quickstart: build the paper's federation, download a file every way
+//! the paper's clients can, and inspect what the system did.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use stashcache::config::defaults::paper_federation;
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::sim::workload::FileRef;
+use stashcache::util::ByteSize;
+
+fn main() {
+    // 1. The federation of the paper: 10 caches (Figure 2), 5 compute
+    //    sites (§4.1), origins on the Stash filesystem at Chicago.
+    let mut fed = FedSim::build(paper_federation());
+    println!(
+        "federation up: {} caches, {} proxies, {} origins, {} redirectors",
+        fed.caches.len(),
+        fed.proxies.len(),
+        fed.origins.len(),
+        fed.redirectors.instances.len()
+    );
+
+    // 2. A researcher's 2.3 GB dataset (the paper's 95th-pct file).
+    let file = FileRef {
+        path: "/ospool/ligo/data/quickstart.dat".into(),
+        size: ByteSize(2_335_000_000),
+        version: 1,
+    };
+
+    let site = fed.topo.site_index("syracuse").unwrap();
+
+    // 3. Download via the HTTP proxy (baseline) and via StashCache,
+    //    twice each — the four passes of §4.1.
+    for (label, method) in [
+        ("curl via HTTP proxy (cold)", DownloadMethod::HttpProxy),
+        ("curl via HTTP proxy (hot) ", DownloadMethod::HttpProxy),
+        ("stashcp via cache   (cold)", DownloadMethod::Stash),
+        ("stashcp via cache   (hot) ", DownloadMethod::Stash),
+    ] {
+        let rec = fed.download(site, &file, method);
+        println!(
+            "{label}: {:>9.2} Mbps in {} (terminal hit: {})",
+            rec.rate_mbps(),
+            rec.duration,
+            rec.cache_hit
+        );
+    }
+
+    // 4. What the infrastructure saw.
+    let cache = &fed.caches[&site];
+    println!(
+        "\nsyracuse cache: {} resident, usage {}, hit bytes {}, fetched {}",
+        cache.resident_files(),
+        cache.usage(),
+        ByteSize(cache.stats.bytes_served_hit),
+        ByteSize(cache.stats.bytes_fetched_origin),
+    );
+    let proxy = &fed.proxies[&site];
+    println!(
+        "syracuse proxy: {} objects, pass-through-too-large {}",
+        proxy.object_count(),
+        proxy.stats.passthrough_too_large
+    );
+    println!(
+        "monitoring: {} reports aggregated, ligo usage {:?}",
+        fed.aggregator.reports,
+        fed.aggregator.experiment_usage("ligo").map(|u| ByteSize(u.bytes_read))
+    );
+}

@@ -1,0 +1,63 @@
+"""AOT lowering: JAX (L2+L1) → HLO text artifacts for the rust runtime.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange is **HLO text**, not a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. The
+computation is built with ``return_tuple=True`` so the rust side
+always unwraps a 1-tuple (see /opt/xla-example/README.md).
+
+Python never runs on the request path: after this script writes
+``artifacts/*.hlo.txt`` the rust binary is self-contained.
+"""
+
+import argparse
+import json
+import pathlib
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Yield (name, hlo_text, arg_shapes) for every artifact."""
+    for name, fn, example_args in model.jitted_with_shapes():
+        lowered = fn.lower(*example_args)
+        text = to_hlo_text(lowered)
+        shapes = [list(a.shape) for a in example_args]
+        yield name, text, shapes
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {}
+    for name, text, shapes in lower_all():
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest[name] = {"file": path.name, "arg_shapes": shapes}
+        print(f"wrote {path} ({len(text)} chars)")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: log-spaced file-size histogram.
+
+The monitoring aggregator bins every transferred file's size into 64
+log10-spaced buckets (Table 2's percentile machinery, paper §3.2/§4).
+Binning a batch is a scatter — data-dependent addressing that maps
+poorly to systolic hardware — so the kernel uses the TPU idiom: turn
+the scatter into a dense **one-hot mask reduction**. Each grid step
+builds a (BLOCK_N, BINS) comparison mask and column-sums it; on real
+TPU the same mask matmul'd against identity runs on the MXU in
+bfloat16 (DESIGN.md §Hardware-Adaptation).
+
+The output block is shared by every grid step (index map is constant),
+giving the standard Pallas accumulator pattern: step 0 zeroes, every
+step adds its partial counts.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BINS = ref.HIST_BINS
+BLOCK_N = 512
+
+
+def _hist_kernel(sizes_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sizes = sizes_ref[...]  # (BLOCK_N,)
+    lg = jnp.log10(jnp.maximum(sizes, 1.0))
+    frac = (lg - jnp.float32(ref.HIST_LOG_MIN)) / jnp.float32(
+        ref.HIST_LOG_MAX - ref.HIST_LOG_MIN
+    )
+    idx = jnp.clip(jnp.floor(frac * BINS), 0, BINS - 1).astype(jnp.int32)
+    valid = sizes > 0.0
+    # Dense one-hot: (BLOCK_N, BINS) — MXU-friendly on real hardware.
+    one_hot = (idx[:, None] == jax.lax.iota(jnp.int32, BINS)[None, :]) & valid[:, None]
+    out_ref[...] += one_hot.astype(jnp.float32).sum(axis=0)
+
+
+def usage_hist(sizes):
+    """(N,) float32 byte sizes → (BINS,) float32 counts.
+
+    N must be a multiple of BLOCK_N (the AOT wrapper pads with zeros,
+    which are ignored as invalid).
+    """
+    (n,) = sizes.shape
+    assert n % BLOCK_N == 0, sizes.shape
+    grid = (n // BLOCK_N,)
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_N,), lambda i: (i,))],
+        # Every step accumulates into the same (BINS,) block.
+        out_specs=pl.BlockSpec((BINS,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((BINS,), jnp.float32),
+        interpret=True,
+    )(sizes.astype(jnp.float32))

@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal of the build-time layer: every
+kernel in this package must match its reference to float32 tolerance
+(pytest + hypothesis sweep them in ``python/tests``), and the rust side
+re-implements the same formulas (``rust/src/geoip``, ``monitoring``)
+so the three layers agree on the numbers.
+
+Constants here must stay in lock-step with the rust twins:
+
+* ``EARTH_RADIUS_KM``  ↔ ``geoip::EARTH_RADIUS_KM``
+* ``LOAD_PENALTY_KM``  ↔ ``geoip::LOAD_PENALTY_KM``
+* ``HIST_*``           ↔ ``monitoring::aggregator::{HIST_BINS, ...}``
+* transfer model       ↔ ``sim::estimate`` (rust)
+"""
+
+import jax.numpy as jnp
+
+# --- geo scoring -----------------------------------------------------------
+
+EARTH_RADIUS_KM = 6371.0088  # IUGG mean Earth radius
+LOAD_PENALTY_KM = 1500.0     # km of distance one unit of cache load costs
+
+def haversine_km(lat1, lon1, lat2, lon2):
+    """Great-circle distance (km) between degree coordinates."""
+    phi1, phi2 = jnp.radians(lat1), jnp.radians(lat2)
+    dphi = jnp.radians(lat2 - lat1)
+    dlam = jnp.radians(lon2 - lon1)
+    a = jnp.sin(dphi / 2.0) ** 2 + jnp.cos(phi1) * jnp.cos(phi2) * jnp.sin(dlam / 2.0) ** 2
+    return 2.0 * EARTH_RADIUS_KM * jnp.arcsin(jnp.minimum(jnp.sqrt(a), 1.0))
+
+def pairwise_haversine(clients, caches):
+    """(C,2) × (K,2) degree coords → (C,K) distances in km."""
+    lat1 = clients[:, 0:1]  # (C,1)
+    lon1 = clients[:, 1:2]
+    lat2 = caches[None, :, 0]  # (1,K)
+    lon2 = caches[None, :, 1]
+    return haversine_km(lat1, lon1, lat2, lon2)
+
+def geo_score(clients, caches, loads):
+    """Nearest-cache ranking scores: distance + load penalty.
+
+    Must match ``geoip::RustGeoBackend::score``.
+    """
+    return pairwise_haversine(clients, caches) + loads[None, :] * LOAD_PENALTY_KM
+
+# --- usage histogram ---------------------------------------------------------
+
+HIST_BINS = 64
+HIST_LOG_MIN = 0.0   # log10(1 B)
+HIST_LOG_MAX = 13.0  # log10(10 TB)
+
+def usage_hist(sizes):
+    """(N,) file sizes in bytes → (HIST_BINS,) float32 counts.
+
+    Log10-spaced bins over [1 B, 10 TB]; non-positive sizes are padding
+    and fall in no bin. Must match
+    ``monitoring::aggregator::size_to_bin``.
+    """
+    lg = jnp.log10(jnp.maximum(sizes, 1.0))
+    frac = (lg - HIST_LOG_MIN) / (HIST_LOG_MAX - HIST_LOG_MIN)
+    idx = jnp.clip(jnp.floor(frac * HIST_BINS), 0, HIST_BINS - 1).astype(jnp.int32)
+    valid = sizes > 0.0
+    one_hot = (idx[:, None] == jnp.arange(HIST_BINS)[None, :]) & valid[:, None]
+    return one_hot.astype(jnp.float32).sum(axis=0)
+
+# --- transfer-time estimate --------------------------------------------------
+
+HANDSHAKE_ROUNDS = 3.0       # TCP + application handshakes before data
+STREAM_HALF_SAT = 2.0        # streams at which multi-stream reaches 2/3 bw
+
+def transfer_est(batch):
+    """(N,4) [bytes, rtt_ms, bottleneck_bps, streams] → (N,) seconds.
+
+    A simple analytic WAN model used by the simulator's fast-path
+    estimator: handshake rounds at the RTT, then bulk bytes at the
+    bottleneck scaled by multi-stream efficiency
+    ``streams / (streams + STREAM_HALF_SAT)`` (XRootD's multi-stream
+    advantage over single-stream HTTP, paper §3.1). Must match
+    ``sim::estimate::transfer_secs``.
+    """
+    bytes_, rtt_ms, bw, streams = (batch[:, 0], batch[:, 1], batch[:, 2], batch[:, 3])
+    startup = HANDSHAKE_ROUNDS * rtt_ms / 1e3
+    eff = streams / (streams + STREAM_HALF_SAT)
+    bulk = bytes_ / jnp.maximum(bw * eff, 1.0)
+    return startup + bulk

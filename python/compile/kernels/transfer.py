@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: batched WAN transfer-time estimator.
+
+The simulator's fast-path estimator prices many candidate transfers at
+once (which cache to fetch from, proxy vs cache paths) without running
+the flow-level allocator. Pure element-wise VPU work over a (BLOCK_N,
+4) tile — the simplest of the three kernels, included because it sits
+on the L3 scheduler's decision path.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_N = 128
+
+
+def _transfer_kernel(batch_ref, out_ref):
+    b = batch_ref[...]  # (BLOCK_N, 4)
+    bytes_ = b[:, 0]
+    rtt_ms = b[:, 1]
+    bw = b[:, 2]
+    streams = b[:, 3]
+    startup = jnp.float32(ref.HANDSHAKE_ROUNDS) * rtt_ms / 1e3
+    eff = streams / (streams + jnp.float32(ref.STREAM_HALF_SAT))
+    bulk = bytes_ / jnp.maximum(bw * eff, 1.0)
+    out_ref[...] = startup + bulk
+
+
+def transfer_est(batch):
+    """(N,4) [bytes, rtt_ms, bottleneck_bps, streams] → (N,) seconds."""
+    n, four = batch.shape
+    assert four == 4 and n % BLOCK_N == 0, batch.shape
+    grid = (n // BLOCK_N,)
+    return pl.pallas_call(
+        _transfer_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_N, 4), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(batch.astype(jnp.float32))

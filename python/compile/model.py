@@ -1,0 +1,75 @@
+"""L2 JAX model: the federation's AOT-compiled compute graphs.
+
+Three jitted functions, each calling its L1 Pallas kernel, lowered
+once at build time (``aot.py``) and executed from the rust coordinator
+through PJRT (``rust/src/runtime``). Shapes are fixed — HLO is
+shape-monomorphic — and the rust side pads batches to them:
+
+* ``geo_score``:    (64,2) clients × (16,2) caches × (16,) loads → (64,16)
+* ``usage_hist``:   (4096,) sizes → (64,) bin counts
+* ``transfer_est``: (256,4) transfer params → (256,) seconds
+
+Padding conventions (mirrored in ``runtime``):
+* geo_score — pad clients with any coords (rows ignored by caller);
+  pad caches at (0,0) with load 1e6 so they never win a ranking.
+* usage_hist — pad sizes with 0 (explicitly invalid, lands in no bin).
+* transfer_est — pad rows with zeros; outputs ignored by caller.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import haversine, histogram, ref, transfer
+
+# Fixed AOT shapes.
+GEO_CLIENTS = 64
+GEO_CACHES = 16
+HIST_N = 4096
+HIST_BINS = ref.HIST_BINS
+TRANSFER_N = 256
+
+
+def geo_score(clients, caches, loads):
+    """Nearest-cache ranking scores (lower = better).
+
+    distance_km + load × LOAD_PENALTY_KM, exactly
+    ``geoip::RustGeoBackend`` on the rust side.
+    """
+    dist = haversine.pairwise_haversine(clients, caches)
+    return dist + loads[None, :] * jnp.float32(ref.LOAD_PENALTY_KM)
+
+
+def usage_hist(sizes):
+    """File-size histogram (Table 2's binning)."""
+    return histogram.usage_hist(sizes)
+
+
+def transfer_est(batch):
+    """Batched WAN transfer-time estimates."""
+    return transfer.transfer_est(batch)
+
+
+def jitted_with_shapes():
+    """(name, jitted_fn, example_args) for every AOT artifact."""
+    f32 = jnp.float32
+    return [
+        (
+            "geo_score",
+            jax.jit(geo_score),
+            (
+                jax.ShapeDtypeStruct((GEO_CLIENTS, 2), f32),
+                jax.ShapeDtypeStruct((GEO_CACHES, 2), f32),
+                jax.ShapeDtypeStruct((GEO_CACHES,), f32),
+            ),
+        ),
+        (
+            "usage_hist",
+            jax.jit(usage_hist),
+            (jax.ShapeDtypeStruct((HIST_N,), f32),),
+        ),
+        (
+            "transfer_est",
+            jax.jit(transfer_est),
+            (jax.ShapeDtypeStruct((TRANSFER_N, 4), f32),),
+        ),
+    ]

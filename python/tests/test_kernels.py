@@ -1,0 +1,159 @@
+"""Kernel-vs-reference correctness: the build-time gate.
+
+Every Pallas kernel must match its pure-jnp oracle (`kernels.ref`) to
+float32 tolerance. Hypothesis sweeps values (shapes are fixed by the
+AOT contract; the padded-batch semantics are swept too).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from compile.kernels import haversine, histogram, ref, transfer
+
+# Deterministic, moderate example counts: this runs in `make test`.
+SETTINGS = settings(
+    max_examples=40,
+    deadline=None,
+    suppress_health_check=[HealthCheck.large_base_example, HealthCheck.too_slow],
+)
+
+f32 = np.float32
+
+# --- haversine ---------------------------------------------------------------
+
+coords = st.tuples(
+    st.floats(-89.9, 89.9, allow_nan=False),
+    st.floats(-180.0, 180.0, allow_nan=False),
+)
+
+
+@SETTINGS
+@given(st.lists(coords, min_size=16, max_size=16), st.lists(coords, min_size=8, max_size=8))
+def test_haversine_matches_ref(client_pts, cache_pts):
+    clients = jnp.array(client_pts, dtype=f32)
+    caches = jnp.array(cache_pts, dtype=f32)
+    got = haversine.pairwise_haversine(clients, caches)
+    want = ref.pairwise_haversine(clients, caches)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_haversine_multi_block():
+    # 64 clients = 4 grid steps; block boundaries must be seamless.
+    rng = np.random.default_rng(7)
+    clients = jnp.array(
+        np.stack([rng.uniform(-89, 89, 64), rng.uniform(-180, 180, 64)], axis=1),
+        dtype=f32,
+    )
+    caches = jnp.array(
+        np.stack([rng.uniform(-89, 89, 16), rng.uniform(-180, 180, 16)], axis=1),
+        dtype=f32,
+    )
+    got = haversine.pairwise_haversine(clients, caches)
+    want = ref.pairwise_haversine(clients, caches)
+    assert got.shape == (64, 16)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_haversine_known_distance():
+    # Chicago → Lincoln NE ≈ 750 km (same fixture as the rust tests).
+    clients = jnp.array([[41.7886, -87.5987]] * 16, dtype=f32)
+    caches = jnp.array([[40.8202, -96.7005]] * 8, dtype=f32)
+    got = haversine.pairwise_haversine(clients, caches)
+    assert 700.0 < float(got[0, 0]) < 820.0
+
+
+def test_haversine_zero_distance():
+    pt = jnp.array([[12.34, 56.78]] * 16, dtype=f32)
+    got = haversine.pairwise_haversine(pt, pt[:8])
+    np.testing.assert_allclose(got, np.zeros((16, 8)), atol=1e-3)
+
+
+# --- histogram ---------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    st.lists(
+        st.floats(1.0, 1e13, allow_nan=False),
+        min_size=histogram.BLOCK_N,
+        max_size=histogram.BLOCK_N,
+    )
+)
+def test_histogram_matches_ref(sizes):
+    x = jnp.array(sizes, dtype=f32)
+    got = histogram.usage_hist(x)
+    want = ref.usage_hist(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_histogram_multi_block_accumulates():
+    rng = np.random.default_rng(3)
+    x = jnp.array(10.0 ** rng.uniform(0, 13, 4 * histogram.BLOCK_N), dtype=f32)
+    got = histogram.usage_hist(x)
+    want = ref.usage_hist(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(got.sum()) == 4 * histogram.BLOCK_N
+
+
+def test_histogram_padding_ignored():
+    x = np.zeros(histogram.BLOCK_N, dtype=f32)
+    x[:10] = 1e6
+    got = histogram.usage_hist(jnp.array(x))
+    assert float(got.sum()) == 10.0, "zero padding must land in no bin"
+
+
+def test_histogram_bin_edges_match_rust():
+    # size_to_bin in rust: bin(1) == 0, bin(10TB) == 63.
+    x = np.zeros(histogram.BLOCK_N, dtype=f32)
+    x[0] = 1.0
+    x[1] = 9.99e12
+    got = np.asarray(histogram.usage_hist(jnp.array(x)))
+    assert got[0] == 1.0
+    assert got[histogram.BINS - 1] == 1.0
+
+
+# --- transfer ----------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(1.0, 1e10),        # bytes
+            st.floats(0.1, 300.0),       # rtt ms
+            st.floats(1e5, 1.25e10),     # bottleneck B/s
+            st.floats(1.0, 64.0),        # streams
+        ),
+        min_size=transfer.BLOCK_N,
+        max_size=transfer.BLOCK_N,
+    )
+)
+def test_transfer_matches_ref(rows):
+    batch = jnp.array(rows, dtype=f32)
+    got = transfer.transfer_est(batch)
+    want = ref.transfer_est(batch)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_transfer_monotone_in_bytes():
+    base = np.tile(np.array([1e6, 20.0, 1e8, 4.0], dtype=f32), (transfer.BLOCK_N, 1))
+    bigger = base.copy()
+    bigger[:, 0] *= 10
+    t1 = transfer.transfer_est(jnp.array(base))
+    t2 = transfer.transfer_est(jnp.array(bigger))
+    assert np.all(np.asarray(t2) > np.asarray(t1))
+
+
+def test_transfer_multistream_faster():
+    one = np.tile(np.array([1e9, 20.0, 1e8, 1.0], dtype=f32), (transfer.BLOCK_N, 1))
+    many = one.copy()
+    many[:, 3] = 16.0
+    t1 = transfer.transfer_est(jnp.array(one))
+    t16 = transfer.transfer_est(jnp.array(many))
+    assert np.all(np.asarray(t16) < np.asarray(t1)), "multi-stream must win (paper §3.1)"
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,221 @@
+//! Ablation benches for the design choices DESIGN.md calls out.
+//!
+//! A. Proxy TTL — reproduces §5's "expiration of files within the HTTP
+//!    proxies" and quantifies how expiry forces origin re-downloads.
+//! B. CVMFS chunk size — the 24 MB choice (§3.1) vs smaller/larger
+//!    chunks for partial-file reads.
+//! C. Cache capacity — watermark-eviction pressure vs hit rate.
+//! D. GeoIP — nearest-cache selection vs a random cache.
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::client::cvmfs::CvmfsClient;
+use stashcache::config::defaults::paper_federation;
+use stashcache::config::{CacheConfig, ProxyConfig};
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::proxy::{MissReason, ProxyLookup, ProxyServer};
+use stashcache::sim::workload::FileRef;
+use stashcache::util::{ByteSize, Pcg64, SimTime};
+
+fn main() {
+    let mut shape = harness::Shape::new();
+    ablate_proxy_ttl(&mut shape);
+    ablate_chunk_size(&mut shape);
+    ablate_cache_capacity(&mut shape);
+    ablate_geoip(&mut shape);
+    shape.finish("ablations");
+}
+
+/// A: sweep proxy TTL; measure expired-refetch fraction over a
+/// looping workload (the paper's test loop).
+fn ablate_proxy_ttl(shape: &mut harness::Shape) {
+    println!("== Ablation A: proxy TTL vs expiry refetch rate ==");
+    let mut rates = Vec::new();
+    for ttl in [120.0, 1_800.0, 86_400.0] {
+        let mut p = ProxyServer::new(
+            "sq",
+            ProxyConfig {
+                capacity: ByteSize::gb(100),
+                max_object: ByteSize::gb(1),
+                ttl_secs: ttl,
+                per_conn_gbps: 1.0,
+            },
+        );
+        // Loop over 20 files repeatedly, 60 s apart, for 3 hours.
+        let mut expired = 0u64;
+        let mut requests = 0u64;
+        let mut t = 0.0;
+        while t < 3.0 * 3_600.0 {
+            for i in 0..20 {
+                let url = format!("/f{i}");
+                requests += 1;
+                match p.lookup(&url, 500_000_000, SimTime::from_secs_f64(t)) {
+                    ProxyLookup::Miss { reason: MissReason::Expired, .. } => {
+                        expired += 1;
+                        p.commit(&url, 500_000_000, SimTime::from_secs_f64(t));
+                    }
+                    ProxyLookup::Miss { cacheable: true, .. } => {
+                        p.commit(&url, 500_000_000, SimTime::from_secs_f64(t));
+                    }
+                    _ => {}
+                }
+                t += 60.0;
+            }
+        }
+        let rate = expired as f64 / requests as f64;
+        println!("  ttl {ttl:>8.0}s: expired refetches {:.1}%", rate * 100.0);
+        rates.push(rate);
+    }
+    shape.check(
+        rates[0] > rates[1] && rates[1] > rates[2],
+        "shorter proxy TTL causes more expiry refetches (paper §5)",
+    );
+    shape.check(rates[2] < 0.01, "day-long TTL nearly eliminates expiry");
+}
+
+/// B: CVMFS chunk size for a partial reader (reads 10% of each file).
+fn ablate_chunk_size(shape: &mut harness::Shape) {
+    println!("== Ablation B: chunk size vs bytes fetched (partial reads) ==");
+    let file_size: u64 = 2_400_000_000;
+    let read_bytes: u64 = file_size / 10;
+    let mut fetched = Vec::new();
+    for chunk_mb in [4u64, 24, 96] {
+        // Patch the client's chunking via a fresh client + manual math:
+        // CvmfsClient has CVMFS_CHUNK fixed (matching production), so
+        // compute the fetched volume analytically for the sweep and
+        // verify the 24 MB case against the real client.
+        let chunk = chunk_mb * 1_000_000;
+        let chunks_touched = read_bytes.div_ceil(chunk) + 1; // offset straddle
+        let bytes = chunks_touched * chunk;
+        println!(
+            "  chunk {chunk_mb:>3} MB: ~{:.2} GB fetched for a {:.2} GB read",
+            bytes as f64 / 1e9,
+            read_bytes as f64 / 1e9
+        );
+        fetched.push(bytes);
+    }
+    let mut client = CvmfsClient::new(ByteSize::gb(4));
+    let plan = client.plan_read("/f", 0, read_bytes, file_size);
+    let real: u64 = plan.remote_chunks.iter().map(|&(_, _, l)| l).sum();
+    println!(
+        "  real client (24 MB): {:.2} GB fetched",
+        real as f64 / 1e9
+    );
+    shape.check(
+        real <= fetched[1],
+        "real 24MB client fetches no more than the analytic bound",
+    );
+    shape.check(
+        real < file_size / 5,
+        "partial reads avoid whole-file transfer (the CVMFS win, §3.1)",
+    );
+    shape.check(
+        fetched[2] > fetched[1],
+        "oversized chunks over-fetch on partial reads",
+    );
+}
+
+/// C: cache capacity pressure under a Zipf re-read workload.
+fn ablate_cache_capacity(shape: &mut harness::Shape) {
+    println!("== Ablation C: cache capacity vs hit rate / evictions ==");
+    let mut hit_rates = Vec::new();
+    for cap_gb in [2u64, 20, 200] {
+        let mut cfg = paper_federation();
+        for s in &mut cfg.sites {
+            if let Some(c) = &mut s.cache {
+                *c = CacheConfig {
+                    capacity: ByteSize::gb(cap_gb),
+                    ..*c
+                };
+            }
+        }
+        let mut fed = FedSim::build(cfg);
+        let mut rng = Pcg64::new(7, 7);
+        let site = fed.topo.site_index("syracuse").unwrap();
+        let zipf = stashcache::util::Zipf::new(200, 1.1);
+        for _ in 0..300 {
+            let i = zipf.sample(&mut rng);
+            let f = FileRef {
+                path: format!("/ospool/ligo/data/f{i:06}.dat"),
+                size: ByteSize::mb(400 + (i % 7) * 100),
+                version: 1,
+            };
+            fed.download(site, &f, DownloadMethod::Stash);
+        }
+        let c = &fed.caches[&site];
+        let hits = c.stats.bytes_served_hit as f64;
+        let total = (c.stats.bytes_served_hit + c.stats.bytes_served_miss) as f64;
+        let hr = hits / total;
+        println!(
+            "  capacity {cap_gb:>3} GB: hit rate {:.1}%, evictions {}",
+            hr * 100.0,
+            c.stats.evictions
+        );
+        hit_rates.push((hr, c.stats.evictions));
+    }
+    shape.check(
+        hit_rates[0].0 < hit_rates[2].0,
+        "bigger cache ⇒ higher hit rate",
+    );
+    shape.check(
+        hit_rates[0].1 > hit_rates[2].1,
+        "smaller cache ⇒ more watermark evictions",
+    );
+}
+
+/// D: GeoIP nearest-cache vs random cache selection.
+///
+/// Distance costs round trips: the GeoIP lookup, connection
+/// establishment and redirector discovery all pay the path RTT, so
+/// nearest-cache selection wins for the short/medium transfers that
+/// dominate the workload (Table 2: p50 < 500 MB). (The flow model has
+/// no TCP-window/RTT throughput coupling, so for multi-GB transfers a
+/// distant well-provisioned cache can tie a nearby one — a documented
+/// simplification, DESIGN.md §2.)
+fn ablate_geoip(shape: &mut harness::Shape) {
+    println!("== Ablation D: GeoIP nearest vs random cache ==");
+    // Nearest: the normal path.
+    let mut nearest = FedSim::build(paper_federation());
+    let site = nearest.topo.site_index("bellarmine").unwrap();
+    let f = |i: u64| FileRef {
+        path: format!("/ospool/des/data/f{i:06}.dat"),
+        size: ByteSize::mb(25),
+        version: 1,
+    };
+    let mut t_nearest = 0.0;
+    for i in 0..10 {
+        t_nearest += nearest
+            .download(site, &f(i), DownloadMethod::Stash)
+            .duration
+            .as_secs_f64();
+    }
+    // "Random": force the amsterdam cache by zeroing every other
+    // cache's appeal — emulate by measuring a transatlantic fetch
+    // through the same machinery (worst case of random selection).
+    let mut cfg = paper_federation();
+    cfg.sites.retain(|s| {
+        s.cache.is_none() || s.name == "amsterdam" || s.worker_slots > 0
+    });
+    for s in &mut cfg.sites {
+        if s.worker_slots > 0 && s.name != "amsterdam" {
+            s.cache = None; // strip local caches so amsterdam is nearest
+        }
+    }
+    let mut random = FedSim::build(cfg);
+    let site_r = random.topo.site_index("bellarmine").unwrap();
+    let mut t_random = 0.0;
+    for i in 0..10 {
+        t_random += random
+            .download(site_r, &f(i), DownloadMethod::Stash)
+            .duration
+            .as_secs_f64();
+    }
+    println!(
+        "  nearest: {t_nearest:.1}s for 10 files; farthest-random: {t_random:.1}s"
+    );
+    shape.check(
+        t_random > t_nearest,
+        "GeoIP nearest-cache beats distant selection",
+    );
+}

@@ -1,0 +1,48 @@
+//! Figure 4: one year of StashCache federation usage, weekly series.
+//!
+//! A 52-week workload with the eyeballed production intensity profile
+//! (ramp + campaign bursts) runs through the monitoring pipeline; the
+//! weekly series is read from the aggregator, like the paper's
+//! dashboard read the OSG database.
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::report::paper;
+
+fn main() {
+    // A year at a scaled-down arrival rate (shape, not volume).
+    let (chart, csv) = harness::timed("fig4", || paper::fig4(364.0, 1.2));
+    println!("{chart}");
+    println!("{}", csv.to_csv());
+
+    // Parse weekly bytes back out of the CSV table for shape checks.
+    let weekly: Vec<u64> = csv
+        .rows
+        .iter()
+        .map(|r| r[1].parse().expect("bytes column"))
+        .collect();
+    let mut shape = harness::Shape::new();
+    shape.check(weekly.len() >= 50, "about a year of weekly buckets");
+    let q1: u64 = weekly.iter().take(13).sum();
+    let q4: u64 = weekly.iter().rev().take(13).sum();
+    shape.check(
+        q4 > 2 * q1,
+        "usage grows through the year (paper: visible ramp)",
+    );
+    let peak = *weekly.iter().max().unwrap();
+    let median = {
+        let mut w = weekly.clone();
+        w.sort_unstable();
+        w[w.len() / 2]
+    };
+    shape.check(
+        peak > 2 * median,
+        "bursty campaign weeks stand out (paper: spiky profile)",
+    );
+    shape.check(
+        weekly.iter().filter(|&&b| b > 0).count() >= weekly.len() - 4,
+        "federation is active nearly every week",
+    );
+    shape.finish("fig4_usage_year");
+}

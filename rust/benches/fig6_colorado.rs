@@ -1,0 +1,42 @@
+//! Figure 6: Colorado cache performance (paper §5).
+//!
+//! "Using the HTTP Proxies provide faster download speeds than using
+//! StashCache in all filesizes. This could be because the HTTP proxy
+//! has fast networking to the wide area network, while the worker
+//! nodes have slower networking to the nearest StashCache cache."
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::config::defaults;
+use stashcache::report::paper;
+
+fn main() {
+    let results = harness::timed("fig6 scenario", paper::run_scenario);
+    let (chart, csv) = paper::fig_site_performance(&results, "colorado");
+    println!("{chart}");
+    println!("{}", csv.to_csv());
+
+    let mut shape = harness::Shape::new();
+    for (label, size) in defaults::test_file_sizes() {
+        let http = results
+            .rate("colorado", &label, "http", "cold")
+            .expect("http rate");
+        let stash_cold = results
+            .rate("colorado", &label, "stash", "cold")
+            .expect("stash cold");
+        let stash_hot = results
+            .rate("colorado", &label, "stash", "hot")
+            .expect("stash hot");
+        // HTTP wins at every size — even against warm StashCache.
+        shape.check(
+            http > stash_cold && http > stash_hot,
+            &format!("{size}: HTTP proxy beats StashCache (cold and hot)"),
+        );
+        shape.check(
+            stash_hot >= stash_cold * 0.999,
+            &format!("{size}: cached StashCache >= cold StashCache"),
+        );
+    }
+    shape.finish("fig6_colorado");
+}

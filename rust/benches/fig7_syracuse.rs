@@ -1,0 +1,57 @@
+//! Figure 7: Syracuse cache performance (paper §5).
+//!
+//! "You will notice that the cached StashCache is always better than
+//! the non-cached. Also, for large data transfers, StashCache is
+//! faster than HTTP proxies."
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::config::defaults;
+use stashcache::report::paper;
+use stashcache::util::bytes::GB;
+
+fn main() {
+    let results = harness::timed("fig7 scenario", paper::run_scenario);
+    let (chart, csv) = paper::fig_site_performance(&results, "syracuse");
+    println!("{chart}");
+    println!("{}", csv.to_csv());
+
+    let mut shape = harness::Shape::new();
+    for (label, size) in defaults::test_file_sizes() {
+        let cold = results
+            .rate("syracuse", &label, "stash", "cold")
+            .expect("cold");
+        let hot = results
+            .rate("syracuse", &label, "stash", "hot")
+            .expect("hot");
+        shape.check(
+            hot >= cold * 0.999,
+            &format!("{size}: cached StashCache always better than non-cached"),
+        );
+    }
+    // Large transfers favour StashCache (mean over passes).
+    let mean = |label: &str, tool: &str| results.mean_secs("syracuse", label, tool).unwrap();
+    shape.check(
+        mean("f10g", "stash") < mean("f10g", "http"),
+        "10GB: StashCache faster than HTTP proxy",
+    );
+    // Small files favour the proxy.
+    shape.check(
+        mean("p01", "stash") > mean("p01", "http"),
+        "5.7KB: HTTP proxy faster than StashCache",
+    );
+    shape.check(
+        mean("p05", "stash") > mean("p05", "http"),
+        "22.8MB: HTTP proxy faster than StashCache",
+    );
+    // Sanity: the 10 GB hot-stash rate exceeds 500 Mbps on a 10G LAN
+    // cache (delivery is link-limited, not implementation-limited).
+    let hot10 = results.rate("syracuse", "f10g", "stash", "hot").unwrap();
+    shape.check(
+        hot10 > 500.0,
+        &format!("10GB hot delivery is fast ({hot10:.0} Mbps)"),
+    );
+    let _ = GB;
+    shape.finish("fig7_syracuse");
+}

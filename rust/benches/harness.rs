@@ -1,0 +1,63 @@
+//! Shared bench harness (no criterion offline — DESIGN.md §2 row 17).
+//!
+//! Each bench target regenerates one paper artifact, prints it with
+//! wall-clock timing, and asserts the *shape* the paper reports (who
+//! wins, where the crossovers are). A shape violation exits non-zero
+//! so `cargo bench` doubles as a reproduction regression gate.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub struct Shape {
+    failures: Vec<String>,
+}
+
+impl Shape {
+    pub fn new() -> Self {
+        Shape { failures: Vec::new() }
+    }
+
+    /// Record a shape expectation.
+    pub fn check(&mut self, ok: bool, what: &str) {
+        if ok {
+            println!("  shape OK  {what}");
+        } else {
+            println!("  shape FAIL {what}");
+            self.failures.push(what.to_string());
+        }
+    }
+
+    /// Exit non-zero if any expectation failed.
+    pub fn finish(self, bench: &str) {
+        if self.failures.is_empty() {
+            println!("[{bench}] all shape checks passed");
+        } else {
+            println!("[{bench}] {} SHAPE CHECK(S) FAILED:", self.failures.len());
+            for f in &self.failures {
+                println!("  - {f}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Run and time a closure.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let start = Instant::now();
+    let out = f();
+    println!("[{label}] wall time: {:.2?}", start.elapsed());
+    out
+}
+
+/// Throughput helper: run `f` `iters` times, report ops/sec.
+pub fn throughput(label: &str, iters: u64, mut f: impl FnMut(u64)) -> f64 {
+    let start = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let rate = iters as f64 / secs;
+    println!("[{label}] {iters} iters in {secs:.3}s = {rate:.0} ops/s");
+    rate
+}

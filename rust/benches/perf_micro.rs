@@ -1,0 +1,195 @@
+//! Performance micro-benches for the §Perf pass (EXPERIMENTS.md).
+//!
+//! Hot paths: the flow allocator (every transfer start/finish), the
+//! cache read planner (every request), the monitoring codec+collector
+//! (every open/close), the GeoIP scorer (every stashcp startup; both
+//! the rust and the PJRT-artifact backends), and whole downloads
+//! end-to-end.
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::cache::CacheServer;
+use stashcache::config::defaults::paper_federation;
+use stashcache::config::CacheConfig;
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::geoip::{GeoScoreBackend, RustGeoBackend};
+use stashcache::monitoring::bus::Bus;
+use stashcache::monitoring::collector::Collector;
+use stashcache::monitoring::packets::{self, Envelope, Packet};
+use stashcache::netsim::{FlowSpec, Network};
+use stashcache::runtime::{GeoScorer, Runtime};
+use stashcache::sim::workload::FileRef;
+use stashcache::util::{ByteSize, Pcg64, SimTime};
+
+fn main() {
+    let mut shape = harness::Shape::new();
+
+    // --- netsim: flow churn ------------------------------------------------
+    {
+        let mut net = Network::new();
+        let links: Vec<_> = (0..40).map(|_| net.add_link_gbps(10.0)).collect();
+        let mut rng = Pcg64::new(1, 1);
+        let mut t = SimTime::ZERO;
+        let rate = harness::throughput("netsim flow churn (~30 active)", 30_000, |i| {
+            let path = vec![
+                links[(i % 40) as usize],
+                links[((i * 7 + 3) % 40) as usize],
+            ];
+            net.start_flow(
+                FlowSpec { path, bytes: 1 + rng.gen_range(1_000, 1_000_000), rate_cap: None },
+                t,
+            );
+            // Keep a bounded concurrent set: drain completions down to
+            // 20 whenever the population exceeds 40.
+            while net.active_flows() > 40 {
+                let tc = net.next_completion().expect("active flows");
+                t = tc;
+                net.advance(tc);
+            }
+        });
+        shape.check(rate > 20_000.0, "netsim sustains >20k flow ops/s");
+    }
+
+    // --- netsim: event processing ------------------------------------------
+    {
+        let mut net = Network::new();
+        let link = net.add_link_gbps(10.0);
+        let mut events = 0u64;
+        let start = std::time::Instant::now();
+        let mut t = SimTime::ZERO;
+        for _ in 0..50_000 {
+            net.start_flow(
+                FlowSpec { path: vec![link], bytes: 1_000_000, rate_cap: None },
+                t,
+            );
+            while let Some(tc) = net.next_completion() {
+                t = tc;
+                events += net.advance(tc).len() as u64;
+            }
+        }
+        let secs = start.elapsed().as_secs_f64();
+        println!(
+            "[netsim completions] {events} completions in {secs:.3}s = {:.0}/s",
+            events as f64 / secs
+        );
+        shape.check(events as f64 / secs > 100_000.0, "netsim >100k completions/s");
+    }
+
+    // --- cache planner -------------------------------------------------------
+    {
+        let mut cache = CacheServer::new(
+            "bench",
+            CacheConfig {
+                capacity: ByteSize::tb(8),
+                ..CacheConfig::default()
+            },
+        );
+        let mut rng = Pcg64::new(2, 2);
+        let rate = harness::throughput("cache plan_read+commit", 100_000, |i| {
+            let path = format!("/f{}", rng.gen_range(0, 2_000));
+            let size = 2_400_000_000u64;
+            let off = rng.gen_range(0, size - 1_000);
+            let now = SimTime(i);
+            let plan = cache.plan_read(&path, off, 1_000, size, 1, now);
+            if !plan.fetch.is_empty() {
+                cache.begin_fetch(&path, &plan.fetch);
+                cache.commit_chunks(&path, &plan.fetch, now);
+            }
+        });
+        shape.check(rate > 100_000.0, "cache planner >100k reqs/s");
+    }
+
+    // --- monitoring codec + collector ---------------------------------------
+    {
+        let mut collector = Collector::new();
+        collector.register_server(1, "bench");
+        let mut bus = Bus::new();
+        let mut sub = bus.subscribe(stashcache::monitoring::collector::TRANSFER_TOPIC);
+        let rate = harness::throughput("monitoring open+close join", 100_000, |i| {
+            let open = packets::encode(&Envelope {
+                server_id: 1,
+                timestamp: SimTime(i),
+                packet: Packet::FileOpen {
+                    file_id: i as u32,
+                    user_id: 1,
+                    file_size: 1_000,
+                    path: "/ospool/ligo/f".into(),
+                },
+            });
+            let close = packets::encode(&Envelope {
+                server_id: 1,
+                timestamp: SimTime(i + 1),
+                packet: Packet::FileClose {
+                    file_id: i as u32,
+                    bytes_read: 1_000,
+                    bytes_written: 0,
+                    read_ops: 1,
+                    write_ops: 0,
+                },
+            });
+            collector.ingest_datagram(&open, &mut bus);
+            collector.ingest_datagram(&close, &mut bus);
+            while sub.recv(&mut bus).is_some() {}
+            if i % 1024 == 0 {
+                bus.compact(stashcache::monitoring::collector::TRANSFER_TOPIC);
+            }
+        });
+        // One login missing → all reports say "unknown"; that's fine
+        // for throughput purposes.
+        shape.check(rate > 100_000.0, "collector >100k transfer joins/s");
+    }
+
+    // --- GeoIP scorers: rust vs PJRT artifact --------------------------------
+    {
+        let cfg = paper_federation();
+        let caches: Vec<stashcache::geoip::CacheSite> = cfg
+            .cache_sites()
+            .map(|s| stashcache::geoip::CacheSite {
+                name: s.name.clone(),
+                lat: s.lat,
+                lon: s.lon,
+            })
+            .collect();
+        let loads = vec![0.1; caches.len()];
+        let clients: Vec<(f64, f64)> = (0..64).map(|i| (30.0 + i as f64 * 0.3, -100.0)).collect();
+
+        let mut rust_backend = RustGeoBackend;
+        let rust_rate = harness::throughput("geo score rust (64-client batch)", 2_000, |_| {
+            let _ = rust_backend.score(&clients, &caches, &loads);
+        });
+
+        let rt = Runtime::new().expect("artifacts built (make artifacts)");
+        let mut pjrt = GeoScorer::load(&rt).expect("geo_score artifact");
+        let pjrt_rate = harness::throughput("geo score PJRT (64-client batch)", 2_000, |_| {
+            let _ = GeoScorer::score(&mut pjrt, &clients, &caches.iter().map(|c| (c.lat, c.lon)).collect::<Vec<_>>(), &loads);
+        });
+        println!(
+            "  PJRT/rust batch-rate ratio: {:.2} (compiled artifact overhead)",
+            pjrt_rate / rust_rate
+        );
+        shape.check(
+            pjrt_rate > 200.0,
+            "PJRT geo scorer sustains >200 64-client batches/s",
+        );
+    }
+
+    // --- end-to-end downloads -------------------------------------------------
+    {
+        let mut fed = FedSim::build(paper_federation());
+        let site = fed.topo.site_index("syracuse").unwrap();
+        let mut rng = Pcg64::new(3, 3);
+        let rate = harness::throughput("fedsim end-to-end downloads", 5_000, |_| {
+            let i = rng.gen_range(0, 500);
+            let f = FileRef {
+                path: format!("/ospool/gwosc/data/f{i:06}.dat"),
+                size: ByteSize::mb(100),
+                version: 1,
+            };
+            fed.download(site, &f, DownloadMethod::Stash);
+        });
+        shape.check(rate > 2_000.0, "end-to-end >2k simulated downloads/s");
+    }
+
+    shape.finish("perf_micro");
+}

@@ -1,0 +1,59 @@
+//! Table 2: file-size percentiles of transferred files (paper §4.1).
+//!
+//! The percentiles come out of the monitoring aggregator's log-spaced
+//! histogram — the same binning the AOT `usage_hist` Pallas kernel
+//! computes — with an exact-reservoir cross-check.
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::report::paper;
+use stashcache::sim::usage::UsageConfig;
+use stashcache::util::bytes::{GB, MB};
+
+fn main() {
+    let ucfg = UsageConfig {
+        days: 3.0,
+        jobs_per_hour: Some(150.0),
+        background_flows: 2,
+        weekly_intensity: Vec::new(),
+        wan_bucket_secs: 3_600.0,
+    };
+    let (table, est) = harness::timed("table2", || paper::table2(&ucfg));
+    println!("{}", table.render());
+
+    let get = |p: f64| {
+        est.iter()
+            .find(|(pp, _)| (*pp - p).abs() < 1e-9)
+            .map(|(_, b)| b.as_f64())
+            .expect("percentile row")
+    };
+    let paper_vals = [
+        (5.0, 22.801 * MB as f64),
+        (25.0, 170.131 * MB as f64),
+        (50.0, 467.852 * MB as f64),
+        (75.0, 493.337 * MB as f64),
+        (95.0, 2.335 * GB as f64),
+        (99.0, 2.335 * GB as f64),
+    ];
+    let mut shape = harness::Shape::new();
+    for (p, want) in paper_vals {
+        let got = get(p);
+        let ratio = got / want;
+        shape.check(
+            (0.4..2.5).contains(&ratio),
+            &format!("p{p:.0}: {got:.3e} within ~1 bin of paper {want:.3e} (ratio {ratio:.2})"),
+        );
+    }
+    // The distinctive features: p50 ≈ p75 (dominant mode), p95 == p99.
+    shape.check(
+        get(75.0) / get(50.0) < 1.6,
+        "p50 and p75 nearly coincide (dominant ~480 MB mode)",
+    );
+    shape.check(
+        get(99.0) / get(95.0) < 1.6,
+        "p95 and p99 nearly coincide (pinned 2.335 GB mode)",
+    );
+    shape.check(get(1.0) < 10.0 * MB as f64, "p1 is a tiny file");
+    shape.finish("table2_percentiles");
+}

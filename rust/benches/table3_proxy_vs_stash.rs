@@ -1,0 +1,54 @@
+//! Table 3: HTTP proxy vs StashCache percent difference in download
+//! time, per site, for the 2.3 GB and 10 GB files (paper §5).
+//!
+//! Runs the full §4.1 DAGMan scenario (five sites serially, four
+//! downloads per file) and checks every cell's *sign* against the
+//! paper, plus the headline claims of §5/§6.
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::report::paper;
+
+fn main() {
+    let results = harness::timed("table3 scenario", paper::run_scenario);
+    println!("{}", paper::table3(&results).render());
+
+    let mut shape = harness::Shape::new();
+    let d = |site: &str, label: &str| results.pct_difference(site, label).expect("cell");
+
+    // Paper Table 3 signs: negative ⇒ StashCache faster.
+    shape.check(d("bellarmine", "p95") < 0.0, "bellarmine 2.3GB negative (paper -68.5%)");
+    shape.check(d("bellarmine", "f10g") < 0.0, "bellarmine 10GB negative (paper -10.0%)");
+    shape.check(
+        d("syracuse", "p95").abs() < 25.0,
+        "syracuse 2.3GB a near-tie (paper +0.9%)",
+    );
+    shape.check(d("syracuse", "f10g") < 0.0, "syracuse 10GB negative (paper -26.3%)");
+    shape.check(d("colorado", "p95") > 50.0, "colorado 2.3GB strongly positive (paper +506.5%)");
+    shape.check(d("colorado", "f10g") > 50.0, "colorado 10GB strongly positive (paper +245.9%)");
+    shape.check(d("nebraska", "p95") < 0.0, "nebraska 2.3GB negative (paper -12.1%)");
+    shape.check(d("nebraska", "f10g") < 0.0, "nebraska 10GB negative (paper -2.1%)");
+    shape.check(d("chicago", "p95") > 0.0, "chicago 2.3GB positive (paper +30.6%)");
+    shape.check(d("chicago", "f10g") < 0.0, "chicago 10GB negative (paper -7.7%)");
+
+    // §5: "For most of the tests, the very large file was downloaded
+    // faster with StashCache" — 4 of 5 sites negative at 10 GB.
+    let negative_10g = ["bellarmine", "syracuse", "nebraska", "chicago"]
+        .iter()
+        .filter(|s| d(s, "f10g") < 0.0)
+        .count();
+    shape.check(
+        negative_10g == 4,
+        "10GB: StashCache wins at the four non-outlier sites",
+    );
+    // §6: "for small files less than 500MB, HTTP proxies provide
+    // better performance" — positive %Δ at p50 for every site.
+    for site in ["bellarmine", "syracuse", "colorado", "nebraska", "chicago"] {
+        shape.check(
+            d(site, "p01") > 0.0,
+            &format!("{site}: 5.7KB file faster via HTTP proxy"),
+        );
+    }
+    shape.finish("table3_proxy_vs_stash");
+}

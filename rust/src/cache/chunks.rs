@@ -1,0 +1,184 @@
+//! Chunk residency bitmap.
+//!
+//! A file of `file_size` bytes split into fixed `chunk_size` chunks
+//! (CVMFS uses 24 MB — paper §3.1); the set tracks which chunks are
+//! resident in a cache. Backed by a `u64` bitmap, so multi-GB files at
+//! 24 MB chunks cost a few dozen words.
+
+/// Fixed-chunking bitmap over one file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkSet {
+    words: Vec<u64>,
+    total: u64,
+    file_size: u64,
+    chunk_size: u64,
+    set_count: u64,
+}
+
+impl ChunkSet {
+    /// Create an empty set for a file. Zero-byte files have one
+    /// (empty) chunk so whole-file logic stays uniform.
+    pub fn new(file_size: u64, chunk_size: u64) -> Self {
+        assert!(chunk_size > 0, "chunk size must be positive");
+        let total = if file_size == 0 {
+            1
+        } else {
+            file_size.div_ceil(chunk_size)
+        };
+        ChunkSet {
+            words: vec![0; total.div_ceil(64) as usize],
+            total,
+            file_size,
+            chunk_size,
+            set_count: 0,
+        }
+    }
+
+    /// Number of chunks the file spans.
+    pub fn total_chunks(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count_set(&self) -> u64 {
+        self.set_count
+    }
+
+    pub fn is_set(&self, chunk: u64) -> bool {
+        assert!(chunk < self.total, "chunk {chunk} out of {}", self.total);
+        self.words[(chunk / 64) as usize] & (1 << (chunk % 64)) != 0
+    }
+
+    /// Mark a chunk resident. Idempotent.
+    pub fn set(&mut self, chunk: u64) {
+        assert!(chunk < self.total, "chunk {chunk} out of {}", self.total);
+        let w = &mut self.words[(chunk / 64) as usize];
+        let bit = 1 << (chunk % 64);
+        if *w & bit == 0 {
+            *w |= bit;
+            self.set_count += 1;
+        }
+    }
+
+    /// Clear a chunk. Idempotent.
+    pub fn clear(&mut self, chunk: u64) {
+        assert!(chunk < self.total, "chunk {chunk} out of {}", self.total);
+        let w = &mut self.words[(chunk / 64) as usize];
+        let bit = 1 << (chunk % 64);
+        if *w & bit != 0 {
+            *w &= !bit;
+            self.set_count -= 1;
+        }
+    }
+
+    /// Bytes of a chunk (the last chunk may be short).
+    pub fn chunk_bytes(&self, chunk: u64) -> u64 {
+        assert!(chunk < self.total);
+        let start = chunk * self.chunk_size;
+        (start + self.chunk_size).min(self.file_size) - start
+    }
+
+    /// Total bytes of resident chunks.
+    pub fn resident_bytes(&self) -> u64 {
+        if self.set_count == self.total {
+            return self.file_size;
+        }
+        let mut bytes = self.set_count * self.chunk_size;
+        // If the (short) last chunk is set, correct for its true size.
+        if self.total > 0 && self.is_set(self.total - 1) {
+            bytes = bytes - self.chunk_size + self.chunk_bytes(self.total - 1);
+        }
+        bytes
+    }
+
+    /// Iterate resident chunk indices.
+    pub fn iter_set(&self) -> impl Iterator<Item = u64> + '_ {
+        (0..self.total).filter(|&c| self.is_set(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_count_rounding() {
+        assert_eq!(ChunkSet::new(100, 100).total_chunks(), 1);
+        assert_eq!(ChunkSet::new(101, 100).total_chunks(), 2);
+        assert_eq!(ChunkSet::new(0, 100).total_chunks(), 1);
+        assert_eq!(ChunkSet::new(1, 100).total_chunks(), 1);
+        // > 64 chunks exercises multi-word bitmaps.
+        assert_eq!(ChunkSet::new(100 * 200, 100).total_chunks(), 200);
+    }
+
+    #[test]
+    fn set_clear_idempotent() {
+        let mut s = ChunkSet::new(1_000, 100);
+        s.set(3);
+        s.set(3);
+        assert_eq!(s.count_set(), 1);
+        assert!(s.is_set(3));
+        s.clear(3);
+        s.clear(3);
+        assert_eq!(s.count_set(), 0);
+    }
+
+    #[test]
+    fn last_chunk_short() {
+        let s = ChunkSet::new(250, 100);
+        assert_eq!(s.chunk_bytes(0), 100);
+        assert_eq!(s.chunk_bytes(2), 50);
+    }
+
+    #[test]
+    fn resident_bytes_with_short_tail() {
+        let mut s = ChunkSet::new(250, 100);
+        s.set(2); // the short one
+        assert_eq!(s.resident_bytes(), 50);
+        s.set(0);
+        assert_eq!(s.resident_bytes(), 150);
+        s.set(1);
+        assert_eq!(s.resident_bytes(), 250);
+    }
+
+    #[test]
+    fn multiword_iteration() {
+        let mut s = ChunkSet::new(100 * 130, 100);
+        for c in [0u64, 63, 64, 65, 129] {
+            s.set(c);
+        }
+        let got: Vec<u64> = s.iter_set().collect();
+        assert_eq!(got, vec![0, 63, 64, 65, 129]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn out_of_range_panics() {
+        ChunkSet::new(100, 100).is_set(1);
+    }
+
+    #[test]
+    fn property_resident_bytes_matches_manual_sum() {
+        use crate::util::prop::check;
+        check("chunkset byte accounting", 80, |g| {
+            let file_size = g.u64(1, 10_000);
+            let chunk_size = g.u64(1, 500);
+            let mut s = ChunkSet::new(file_size, chunk_size);
+            for _ in 0..g.usize(0, 40) {
+                let c = g.u64(0, s.total_chunks() - 1);
+                if g.bool() {
+                    s.set(c);
+                } else {
+                    s.clear(c);
+                }
+            }
+            let manual: u64 = s.iter_set().map(|c| s.chunk_bytes(c)).sum();
+            (
+                manual == s.resident_bytes() && s.count_set() == s.iter_set().count() as u64,
+                format!(
+                    "file={file_size} chunk={chunk_size} manual={manual} got={}",
+                    s.resident_bytes()
+                ),
+            )
+        });
+    }
+}

@@ -1,0 +1,483 @@
+//! StashCache cache server (the XRootD caching proxy, from scratch).
+//!
+//! Paper §3: "Caches also use XRootD to capture data requests from
+//! clients, download data from the origins, and to manage the cache
+//! space. The caches receive data requests from the client, check the
+//! local cache, and if necessary locate and download the requested
+//! data from the origins."
+//!
+//! The store is **chunk-granular** ([`chunks::ChunkSet`]): CVMFS reads
+//! 24 MB chunks and may fetch only portions of a file (§3.1), so a file
+//! can be partially resident. Space is managed with high/low watermark
+//! LRU eviction — "the resource provider can reclaim space in the cache
+//! without worry of causing workflow failures" (§1): in-flight files
+//! are pinned and never evicted mid-transfer.
+//!
+//! Concurrent misses for the same chunk coalesce onto one origin fetch
+//! ([`CacheServer::begin_fetch`] returns the chunks that still need a
+//! fetch; chunks already being fetched join the in-flight set).
+
+pub mod chunks;
+
+use crate::config::CacheConfig;
+use crate::util::{ByteSize, SimTime};
+use chunks::ChunkSet;
+use std::collections::HashMap;
+
+/// Per-file cache residency state.
+#[derive(Debug)]
+struct CachedFile {
+    /// Which chunks are resident.
+    resident: ChunkSet,
+    /// Which chunks are currently being fetched from the origin.
+    in_flight: ChunkSet,
+    file_size: u64,
+    /// Content version (origin mtime). A version change invalidates
+    /// all resident chunks — the consistency behaviour CVMFS checksums
+    /// give the production system.
+    version: u64,
+    last_access: SimTime,
+    /// Monotone tiebreaker for equal `last_access`.
+    access_seq: u64,
+    /// Active transfers pinning this file (not evictable).
+    pins: u32,
+}
+
+/// Counters the monitoring pipeline scrapes.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub bytes_served_hit: u64,
+    pub bytes_served_miss: u64,
+    pub bytes_fetched_origin: u64,
+    pub requests: u64,
+    pub whole_file_hits: u64,
+    pub evictions: u64,
+    pub bytes_evicted: u64,
+    pub invalidations: u64,
+}
+
+/// A read request's plan: which bytes are already here, which chunk
+/// ranges must come from the origin, and which are already on the way.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReadPlan {
+    /// Bytes of the request satisfied from resident chunks.
+    pub hit_bytes: u64,
+    /// Bytes that miss (need origin traffic, counting whole chunks).
+    pub miss_bytes: u64,
+    /// Chunk indices this caller must fetch (not resident, not in flight).
+    pub fetch: Vec<u64>,
+    /// Chunk indices already being fetched by another request —
+    /// the caller waits for them instead of re-fetching (coalescing).
+    pub join: Vec<u64>,
+}
+
+/// The cache server state machine.
+#[derive(Debug)]
+pub struct CacheServer {
+    pub name: String,
+    pub cfg: CacheConfig,
+    files: HashMap<String, CachedFile>,
+    usage: u64,
+    seq: u64,
+    pub stats: CacheStats,
+}
+
+impl CacheServer {
+    pub fn new(name: impl Into<String>, cfg: CacheConfig) -> Self {
+        CacheServer {
+            name: name.into(),
+            cfg,
+            files: HashMap::new(),
+            usage: 0,
+            seq: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn usage(&self) -> ByteSize {
+        ByteSize(self.usage)
+    }
+
+    /// Load factor in [0, 1] (feeds the GeoIP load penalty).
+    pub fn load_factor(&self) -> f64 {
+        self.usage as f64 / self.cfg.capacity.as_u64() as f64
+    }
+
+    pub fn resident_files(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Is the whole file resident (and current)?
+    pub fn contains_whole(&self, path: &str, version: u64) -> bool {
+        self.files.get(path).is_some_and(|f| {
+            f.version == version && f.resident.count_set() == f.resident.total_chunks()
+        })
+    }
+
+    fn chunk_size(&self) -> u64 {
+        self.cfg.chunk_size.as_u64().max(1)
+    }
+
+    /// Plan a read of `[offset, offset+len)` from `path` whose current
+    /// origin metadata is `(file_size, version)`. Stale versions are
+    /// invalidated here. Updates LRU recency and request stats.
+    pub fn plan_read(
+        &mut self,
+        path: &str,
+        offset: u64,
+        len: u64,
+        file_size: u64,
+        version: u64,
+        now: SimTime,
+    ) -> ReadPlan {
+        assert!(
+            offset.checked_add(len).is_some_and(|e| e <= file_size),
+            "read past EOF: {path} {offset}+{len} > {file_size}"
+        );
+        self.stats.requests += 1;
+        let chunk = self.chunk_size();
+
+        // Version check — stale content is dropped before planning.
+        if let Some(f) = self.files.get(path) {
+            if f.version != version {
+                self.invalidate(path);
+            }
+        }
+
+        let seq = self.bump_seq();
+        let f = self
+            .files
+            .entry(path.to_string())
+            .or_insert_with(|| CachedFile {
+                resident: ChunkSet::new(file_size, chunk),
+                in_flight: ChunkSet::new(file_size, chunk),
+                file_size,
+                version,
+                last_access: now,
+                access_seq: seq,
+                pins: 0,
+            });
+        f.last_access = now;
+        f.access_seq = seq;
+
+        if len == 0 {
+            return ReadPlan { hit_bytes: 0, miss_bytes: 0, fetch: vec![], join: vec![] };
+        }
+        let first = offset / chunk;
+        let last = (offset + len - 1) / chunk;
+        let mut plan = ReadPlan {
+            hit_bytes: 0,
+            miss_bytes: 0,
+            fetch: Vec::new(),
+            join: Vec::new(),
+        };
+        for c in first..=last {
+            // Bytes of the request inside chunk c.
+            let c_start = c * chunk;
+            let c_end = (c_start + chunk).min(file_size);
+            let lo = offset.max(c_start);
+            let hi = (offset + len).min(c_end);
+            let req_bytes = hi - lo;
+            if f.resident.is_set(c) {
+                plan.hit_bytes += req_bytes;
+            } else {
+                plan.miss_bytes += req_bytes;
+                if f.in_flight.is_set(c) {
+                    plan.join.push(c);
+                } else {
+                    plan.fetch.push(c);
+                }
+            }
+        }
+        if plan.miss_bytes == 0 {
+            self.stats.whole_file_hits += 1;
+        }
+        plan
+    }
+
+    /// Mark chunks as being fetched and pin the file. The caller must
+    /// later call [`Self::commit_chunks`] (success) or
+    /// [`Self::abort_fetch`] (failure) exactly once.
+    pub fn begin_fetch(&mut self, path: &str, chunk_ids: &[u64]) {
+        let f = self.files.get_mut(path).expect("plan_read first");
+        for &c in chunk_ids {
+            debug_assert!(!f.resident.is_set(c), "fetching resident chunk");
+            f.in_flight.set(c);
+        }
+        f.pins += 1;
+    }
+
+    /// Chunks arrived from the origin: make them resident, account
+    /// bytes, unpin, and run watermark eviction if needed.
+    pub fn commit_chunks(&mut self, path: &str, chunk_ids: &[u64], now: SimTime) {
+        let chunk = self.chunk_size();
+        let seq = self.bump_seq();
+        let f = self.files.get_mut(path).expect("unknown file in commit");
+        let mut added = 0u64;
+        for &c in chunk_ids {
+            f.in_flight.clear(c);
+            if !f.resident.is_set(c) {
+                f.resident.set(c);
+                let c_start = c * chunk;
+                added += (c_start + chunk).min(f.file_size) - c_start;
+            }
+        }
+        f.pins = f.pins.saturating_sub(1);
+        f.last_access = now;
+        f.access_seq = seq;
+        self.usage += added;
+        self.stats.bytes_fetched_origin += added;
+        self.maybe_evict(now);
+    }
+
+    /// Fetch failed: clear in-flight marks and unpin.
+    pub fn abort_fetch(&mut self, path: &str, chunk_ids: &[u64]) {
+        if let Some(f) = self.files.get_mut(path) {
+            for &c in chunk_ids {
+                f.in_flight.clear(c);
+            }
+            f.pins = f.pins.saturating_sub(1);
+        }
+    }
+
+    /// Account bytes served to a client (hit or post-fetch).
+    pub fn record_served(&mut self, hit_bytes: u64, miss_bytes: u64) {
+        self.stats.bytes_served_hit += hit_bytes;
+        self.stats.bytes_served_miss += miss_bytes;
+    }
+
+    /// Drop all residency for `path` (version change / admin purge).
+    pub fn invalidate(&mut self, path: &str) {
+        if let Some(f) = self.files.remove(path) {
+            let freed = f.resident.resident_bytes();
+            self.usage -= freed;
+            self.stats.invalidations += 1;
+        }
+    }
+
+    /// Watermark eviction: when usage exceeds `high_watermark ×
+    /// capacity`, evict whole files in LRU order (skipping pinned
+    /// files) until usage falls to `low_watermark × capacity`.
+    fn maybe_evict(&mut self, _now: SimTime) {
+        let cap = self.cfg.capacity.as_u64() as f64;
+        let high = (self.cfg.high_watermark * cap) as u64;
+        if self.usage <= high {
+            return;
+        }
+        let low = (self.cfg.low_watermark * cap) as u64;
+        // LRU order: (last_access, access_seq).
+        let mut victims: Vec<(SimTime, u64, String)> = self
+            .files
+            .iter()
+            .filter(|(_, f)| f.pins == 0)
+            .map(|(p, f)| (f.last_access, f.access_seq, p.clone()))
+            .collect();
+        victims.sort();
+        for (_, _, path) in victims {
+            if self.usage <= low {
+                break;
+            }
+            let f = self.files.remove(&path).expect("victim exists");
+            let freed = f.resident.resident_bytes();
+            self.usage -= freed;
+            self.stats.evictions += 1;
+            self.stats.bytes_evicted += freed;
+        }
+    }
+
+    fn bump_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Expose (path → resident bytes) snapshot for reports/tests.
+    pub fn residency_snapshot(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> = self
+            .files
+            .iter()
+            .map(|(p, f)| (p.clone(), f.resident.resident_bytes()))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity: u64, chunk: u64) -> CacheConfig {
+        CacheConfig {
+            capacity: ByteSize(capacity),
+            high_watermark: 0.9,
+            low_watermark: 0.6,
+            chunk_size: ByteSize(chunk),
+            per_conn_gbps: 8.0,
+        }
+    }
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn cold_read_is_all_miss() {
+        let mut c = CacheServer::new("x", cfg(10_000, 100));
+        let plan = c.plan_read("/f", 0, 250, 250, 1, t(0.0));
+        assert_eq!(plan.hit_bytes, 0);
+        assert_eq!(plan.miss_bytes, 250);
+        assert_eq!(plan.fetch, vec![0, 1, 2]);
+        assert!(plan.join.is_empty());
+    }
+
+    #[test]
+    fn commit_makes_chunks_resident() {
+        let mut c = CacheServer::new("x", cfg(10_000, 100));
+        let plan = c.plan_read("/f", 0, 250, 250, 1, t(0.0));
+        c.begin_fetch("/f", &plan.fetch);
+        c.commit_chunks("/f", &plan.fetch, t(1.0));
+        // Usage counts whole chunks, capped at file size: 100+100+50.
+        assert_eq!(c.usage().as_u64(), 250);
+        let plan2 = c.plan_read("/f", 0, 250, 250, 1, t(2.0));
+        assert_eq!(plan2.hit_bytes, 250);
+        assert_eq!(plan2.miss_bytes, 0);
+        assert!(c.contains_whole("/f", 1));
+    }
+
+    #[test]
+    fn partial_read_fetches_only_touched_chunks() {
+        let mut c = CacheServer::new("x", cfg(100_000, 100));
+        // Read bytes [150, 350) of a 1000-byte file: chunks 1, 2, 3.
+        let plan = c.plan_read("/f", 150, 200, 1_000, 1, t(0.0));
+        assert_eq!(plan.fetch, vec![1, 2, 3]);
+        assert_eq!(plan.miss_bytes, 200);
+    }
+
+    #[test]
+    fn concurrent_fetch_coalesces() {
+        let mut c = CacheServer::new("x", cfg(10_000, 100));
+        let p1 = c.plan_read("/f", 0, 200, 200, 1, t(0.0));
+        c.begin_fetch("/f", &p1.fetch);
+        // Second reader while chunks are in flight.
+        let p2 = c.plan_read("/f", 0, 200, 200, 1, t(0.1));
+        assert!(p2.fetch.is_empty(), "no duplicate fetch");
+        assert_eq!(p2.join, vec![0, 1]);
+        c.commit_chunks("/f", &p1.fetch, t(1.0));
+        let p3 = c.plan_read("/f", 0, 200, 200, 1, t(2.0));
+        assert_eq!(p3.hit_bytes, 200);
+    }
+
+    #[test]
+    fn version_change_invalidates() {
+        let mut c = CacheServer::new("x", cfg(10_000, 100));
+        let p = c.plan_read("/f", 0, 100, 100, 1, t(0.0));
+        c.begin_fetch("/f", &p.fetch);
+        c.commit_chunks("/f", &p.fetch, t(1.0));
+        assert_eq!(c.usage().as_u64(), 100);
+        // Same path, new version.
+        let p2 = c.plan_read("/f", 0, 100, 100, 2, t(2.0));
+        assert_eq!(p2.miss_bytes, 100, "stale chunks dropped");
+        assert_eq!(c.stats.invalidations, 1);
+    }
+
+    #[test]
+    fn watermark_eviction_lru_order() {
+        // capacity 1000, high 900, low 600, chunk 100.
+        let mut c = CacheServer::new("x", cfg(1_000, 100));
+        for (i, name) in ["/a", "/b", "/c", "/d"].iter().enumerate() {
+            let p = c.plan_read(name, 0, 200, 200, 1, t(i as f64));
+            c.begin_fetch(name, &p.fetch);
+            c.commit_chunks(name, &p.fetch, t(i as f64 + 0.5));
+        }
+        assert_eq!(c.usage().as_u64(), 800); // under high mark, nothing evicted
+        // Touch /a so /b becomes LRU.
+        c.plan_read("/a", 0, 10, 200, 1, t(10.0));
+        // Fifth file pushes usage to 1000 > 900 → evict to <= 600.
+        let p = c.plan_read("/e", 0, 200, 200, 1, t(11.0));
+        c.begin_fetch("/e", &p.fetch);
+        c.commit_chunks("/e", &p.fetch, t(11.5));
+        assert!(c.usage().as_u64() <= 600, "usage {}", c.usage());
+        // /b and /c (oldest untouched) evicted; /a survived the touch.
+        let snap = c.residency_snapshot();
+        let names: Vec<&str> = snap.iter().map(|(p, _)| p.as_str()).collect();
+        assert!(names.contains(&"/a"), "recently-touched survives: {names:?}");
+        assert!(!names.contains(&"/b"), "LRU victim evicted: {names:?}");
+        assert!(c.stats.evictions >= 2);
+    }
+
+    #[test]
+    fn pinned_files_not_evicted() {
+        let mut c = CacheServer::new("x", cfg(1_000, 100));
+        // /a resident and pinned by an in-flight fetch of more chunks.
+        let p = c.plan_read("/a", 0, 500, 1_000, 1, t(0.0));
+        c.begin_fetch("/a", &p.fetch);
+        c.commit_chunks("/a", &p.fetch, t(0.5));
+        let p2 = c.plan_read("/a", 500, 100, 1_000, 1, t(0.6));
+        c.begin_fetch("/a", &p2.fetch); // pin /a
+        // Fill with another file to cross the watermark.
+        let p3 = c.plan_read("/b", 0, 500, 500, 1, t(1.0));
+        c.begin_fetch("/b", &p3.fetch);
+        c.commit_chunks("/b", &p3.fetch, t(1.5));
+        // /a was LRU but pinned; /b itself is pinned-free after commit.
+        let snap = c.residency_snapshot();
+        assert!(snap.iter().any(|(p, _)| p == "/a"), "pinned file survives");
+    }
+
+    #[test]
+    fn zero_len_read() {
+        let mut c = CacheServer::new("x", cfg(1_000, 100));
+        let p = c.plan_read("/f", 50, 0, 100, 1, t(0.0));
+        assert_eq!(p, ReadPlan { hit_bytes: 0, miss_bytes: 0, fetch: vec![], join: vec![] });
+    }
+
+    #[test]
+    #[should_panic(expected = "read past EOF")]
+    fn read_past_eof_panics() {
+        let mut c = CacheServer::new("x", cfg(1_000, 100));
+        c.plan_read("/f", 90, 20, 100, 1, t(0.0));
+    }
+
+    #[test]
+    fn abort_fetch_unpins_and_clears() {
+        let mut c = CacheServer::new("x", cfg(1_000, 100));
+        let p = c.plan_read("/f", 0, 100, 100, 1, t(0.0));
+        c.begin_fetch("/f", &p.fetch);
+        c.abort_fetch("/f", &p.fetch);
+        // Chunks can be fetched again (not stuck in flight).
+        let p2 = c.plan_read("/f", 0, 100, 100, 1, t(1.0));
+        assert_eq!(p2.fetch, vec![0]);
+        assert!(p2.join.is_empty());
+    }
+
+    #[test]
+    fn property_usage_equals_sum_of_residency() {
+        use crate::util::prop::check;
+        check("cache usage accounting", 40, |g| {
+            let chunk = 100u64;
+            let mut c = CacheServer::new("p", cfg(100_000, chunk));
+            let n_ops = g.usize(1, 30);
+            for i in 0..n_ops {
+                let fnum = g.u64(0, 5);
+                let file = format!("/f{fnum}");
+                let size = 150 * (fnum + 1); // fixed size per file
+                let off = g.u64(0, size - 1);
+                let len = g.u64(0, size - off);
+                let now = t(i as f64);
+                let p = c.plan_read(&file, off, len, size, 1, now);
+                if !p.fetch.is_empty() {
+                    c.begin_fetch(&file, &p.fetch);
+                    if g.bool() {
+                        c.commit_chunks(&file, &p.fetch, now);
+                    } else {
+                        c.abort_fetch(&file, &p.fetch);
+                    }
+                }
+            }
+            let sum: u64 = c.residency_snapshot().iter().map(|(_, b)| b).sum();
+            (
+                sum == c.usage().as_u64(),
+                format!("sum {} != usage {}", sum, c.usage()),
+            )
+        });
+    }
+}

@@ -1,0 +1,362 @@
+//! Hand-rolled CLI (no clap offline — DESIGN.md §2 row 15).
+
+use anyhow::{bail, Context, Result};
+use stashcache::config::{defaults, FederationConfig};
+use stashcache::federation::{backend::GeoBackend, FedSim};
+use stashcache::report::{self, paper};
+use stashcache::sim::scenario::{self, ScenarioConfig};
+use stashcache::sim::usage::UsageConfig;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Parsed flags: `--key value` pairs plus positionals.
+#[derive(Debug, Default)]
+pub struct Flags {
+    flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Self> {
+        let mut out = Flags::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    out.flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_config(flags: &Flags) -> Result<FederationConfig> {
+    match flags.get("config") {
+        Some(path) => FederationConfig::from_file(std::path::Path::new(path)),
+        None => Ok(defaults::paper_federation()),
+    }
+}
+
+fn geo_backend(flags: &Flags) -> Result<GeoBackend> {
+    match flags.get("runtime").unwrap_or("rust") {
+        "rust" => Ok(GeoBackend::rust()),
+        "pjrt" => GeoBackend::pjrt().context("loading PJRT geo_score artifact"),
+        other => bail!("--runtime must be rust|pjrt, got {other:?}"),
+    }
+}
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "topology" => cmd_topology(&flags),
+        "scenario" => cmd_scenario(&flags),
+        "usage" => cmd_usage(&flags),
+        "report" => cmd_report(&flags),
+        "init-config" => cmd_init_config(&flags),
+        "live-demo" => cmd_live_demo(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `stashcache help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "stashcache — StashCache federation reproduction (PEARC '19)\n\n\
+         commands:\n\
+           topology                         show sites, caches, proxies, origins\n\
+           scenario [--sites a,b] [--repeats N] [--runtime rust|pjrt]\n\
+                                            run the §4.1 benchmark (Figs 6-8, Table 3)\n\
+           usage --days D [--jobs-per-hour J]\n\
+                                            run a usage simulation (Tables 1-2, Fig 4)\n\
+           report --all --out-dir DIR       regenerate every paper table/figure\n\
+           init-config [PATH]               write an example federation TOML\n\
+           live-demo                        run the real TCP/UDP federation on loopback\n\
+         common flags:\n\
+           --config PATH                    federation TOML (default: built-in paper topology)\n"
+    );
+}
+
+fn cmd_topology(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let mut t = report::Table::new(
+        format!("Federation {:?} (Figure 2 deployment)", cfg.name),
+        &["Site", "Lat", "Lon", "Workers", "Cache", "Proxy", "WAN Gbps"],
+    );
+    for s in &cfg.sites {
+        t.row(vec![
+            s.name.clone(),
+            format!("{:.3}", s.lat),
+            format!("{:.3}", s.lon),
+            s.worker_slots.to_string(),
+            s.cache.map_or("-".into(), |c| c.capacity.to_string()),
+            s.proxy.map_or("-".into(), |p| p.capacity.to_string()),
+            format!("{:.0}", s.links.wan_gbps),
+        ]);
+    }
+    println!("{}", t.render());
+    let mut o = report::Table::new("Origins", &["Name", "Site", "Prefix"]);
+    for org in &cfg.origins {
+        o.row(vec![org.name.clone(), org.site.clone(), org.prefix.clone()]);
+    }
+    println!("{}", o.render());
+    println!(
+        "redirectors: {} (round-robin HA)\nworkload experiments: {}",
+        cfg.redirector_instances,
+        cfg.workload.experiments.len()
+    );
+    Ok(())
+}
+
+fn cmd_scenario(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let mut scenario_cfg = ScenarioConfig {
+        repeats: flags.get_usize("repeats", 1)?,
+        ..ScenarioConfig::default()
+    };
+    if let Some(sites) = flags.get("sites") {
+        scenario_cfg.sites = sites.split(',').map(str::to_string).collect();
+    }
+    let mut fed = FedSim::build_with_backend(cfg, geo_backend(flags)?);
+    let results = scenario::run_on(&mut fed, &scenario_cfg);
+    println!("{}", paper::table3(&results).render());
+    for site in &scenario_cfg.sites {
+        let (chart, _) = paper::fig_site_performance(&results, site);
+        println!("{chart}");
+    }
+    let (chart, _) = paper::fig8_small_file(&results);
+    println!("{chart}");
+    Ok(())
+}
+
+fn cmd_usage(flags: &Flags) -> Result<()> {
+    let _cfg = load_config(flags)?;
+    let ucfg = UsageConfig {
+        days: flags.get_f64("days", 3.0)?,
+        jobs_per_hour: Some(flags.get_f64("jobs-per-hour", 120.0)?),
+        ..paper::default_usage_cfg()
+    };
+    let (t1, _) = paper::table1(&ucfg);
+    println!("{}", t1.render());
+    let (t2, _) = paper::table2(&ucfg);
+    println!("{}", t2.render());
+    Ok(())
+}
+
+fn cmd_report(flags: &Flags) -> Result<()> {
+    let out_dir = PathBuf::from(flags.get("out-dir").unwrap_or("reports"));
+    let all = flags.has("all");
+    let which = flags.get("only").unwrap_or("");
+    let want = |name: &str| all || which.split(',').any(|w| w == name);
+    std::fs::create_dir_all(&out_dir)?;
+
+    if want("table1") || want("table2") {
+        let ucfg = paper::default_usage_cfg();
+        if want("table1") {
+            let (t, _) = paper::table1(&ucfg);
+            report::write_artifact(&out_dir, "table1.txt", &t.render())?;
+            report::write_artifact(&out_dir, "table1.csv", &t.to_csv())?;
+            println!("{}", t.render());
+        }
+        if want("table2") {
+            let (t, _) = paper::table2(&ucfg);
+            report::write_artifact(&out_dir, "table2.txt", &t.render())?;
+            report::write_artifact(&out_dir, "table2.csv", &t.to_csv())?;
+            println!("{}", t.render());
+        }
+    }
+    if want("table3") || want("fig6") || want("fig7") || want("fig8") {
+        let results = paper::run_scenario();
+        if want("table3") {
+            let t = paper::table3(&results);
+            report::write_artifact(&out_dir, "table3.txt", &t.render())?;
+            report::write_artifact(&out_dir, "table3.csv", &t.to_csv())?;
+            println!("{}", t.render());
+        }
+        for (fig, site) in [("fig6", "colorado"), ("fig7", "syracuse")] {
+            if want(fig) {
+                let (chart, csv) = paper::fig_site_performance(&results, site);
+                report::write_artifact(&out_dir, &format!("{fig}_{site}.txt"), &chart)?;
+                report::write_artifact(&out_dir, &format!("{fig}_{site}.csv"), &csv.to_csv())?;
+                println!("{chart}");
+            }
+        }
+        if want("fig8") {
+            let (chart, csv) = paper::fig8_small_file(&results);
+            report::write_artifact(&out_dir, "fig8.txt", &chart)?;
+            report::write_artifact(&out_dir, "fig8.csv", &csv.to_csv())?;
+            println!("{chart}");
+        }
+    }
+    if want("fig4") {
+        let (chart, csv) = paper::fig4(364.0, 0.6);
+        report::write_artifact(&out_dir, "fig4.txt", &chart)?;
+        report::write_artifact(&out_dir, "fig4.csv", &csv.to_csv())?;
+        println!("{chart}");
+    }
+    if want("fig5") {
+        let (chart, csv, _) = paper::fig5(2.0, 80.0);
+        report::write_artifact(&out_dir, "fig5.txt", &chart)?;
+        report::write_artifact(&out_dir, "fig5.csv", &csv.to_csv())?;
+        println!("{chart}");
+    }
+    println!("reports written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_init_config(flags: &Flags) -> Result<()> {
+    let path = flags
+        .positional
+        .first()
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("federation.toml"));
+    std::fs::write(&path, defaults::example_toml())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_live_demo(_flags: &Flags) -> Result<()> {
+    use stashcache::config::CacheConfig;
+    use stashcache::live::{
+        client::LiveCacheEndpoint, stashcp_live, CollectorDaemon, LiveCache, LiveOrigin,
+        LiveRedirector,
+    };
+    use stashcache::util::ByteSize;
+
+    println!("starting live federation on loopback...");
+    let files: Vec<(&str, u64, u64)> = vec![
+        ("/ospool/demo/input-a.dat", 4_000_000, 1),
+        ("/ospool/demo/input-b.dat", 9_500_000, 1),
+    ];
+    let origin = LiveOrigin::start("stash-origin", "/ospool/demo", &files)?;
+    println!("  origin      {}", origin.addr);
+    let redirector =
+        LiveRedirector::start(vec![("/ospool/demo".into(), origin.addr.clone())])?;
+    println!("  redirector  {}", redirector.addr);
+    let monitor = CollectorDaemon::start(vec![(0, "cache-nebraska".into()), (1, "cache-chicago".into())])?;
+    println!("  collector   {} (UDP)", monitor.addr);
+
+    let cache_cfg = CacheConfig {
+        capacity: ByteSize::gb(1),
+        chunk_size: ByteSize::mb(4),
+        ..Default::default()
+    };
+    let c1 = LiveCache::start(
+        "cache-nebraska",
+        0,
+        cache_cfg,
+        redirector.addr.clone(),
+        monitor.addr.clone(),
+    )?;
+    let c2 = LiveCache::start(
+        "cache-chicago",
+        1,
+        cache_cfg,
+        redirector.addr.clone(),
+        monitor.addr.clone(),
+    )?;
+    println!("  caches      {} {}", c1.addr, c2.addr);
+
+    let endpoints = vec![
+        LiveCacheEndpoint {
+            site: stashcache::geoip::CacheSite {
+                name: "nebraska".into(),
+                lat: 40.8202,
+                lon: -96.7005,
+            },
+            addr: c1.addr.clone(),
+        },
+        LiveCacheEndpoint {
+            site: stashcache::geoip::CacheSite {
+                name: "chicago".into(),
+                lat: 41.7886,
+                lon: -87.5987,
+            },
+            addr: c2.addr.clone(),
+        },
+    ];
+    for (path, size, _) in &files {
+        for pass in ["cold", "hot "] {
+            let t = stashcp_live(path, 39.7, -104.9, &endpoints)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            println!(
+                "  stashcp {path} ({size}B) via {}: {pass} verified={} in {:?}",
+                t.cache_used, t.verified, t.wall
+            );
+        }
+    }
+    // Let the UDP close packets land.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    println!(
+        "  monitoring: {} transfer reports, demo usage = {:?} bytes",
+        monitor.reports(),
+        monitor.experiment_bytes("demo")
+    );
+    println!("live demo OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parse_forms() {
+        let f = Flags::parse(&[
+            "--days".into(),
+            "3".into(),
+            "--all".into(),
+            "--out-dir=reports".into(),
+            "pos".into(),
+        ])
+        .unwrap();
+        assert_eq!(f.get_f64("days", 0.0).unwrap(), 3.0);
+        assert!(f.has("all"));
+        assert_eq!(f.get("out-dir"), Some("reports"));
+        assert_eq!(f.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let f = Flags::parse(&["--days".into(), "abc".into()]).unwrap();
+        assert!(f.get_f64("days", 0.0).is_err());
+    }
+}

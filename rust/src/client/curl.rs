@@ -1,0 +1,70 @@
+//! Plain HTTP download client (curl) — the baseline path of §4.1.
+//!
+//! "The first time it uses curl to download through the HTTP cache."
+//! The proxy address comes from the job environment (`http_proxy`), so
+//! there is no nearest-service lookup: "the HTTP client has the
+//! nearest proxy provided to it from the environment" (§5). curl is
+//! also stashcp's third fallback, pointed at a cache's HTTP interface
+//! instead of the proxy.
+
+use crate::util::Duration;
+
+/// Simple request description for the drivers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub url: String,
+    pub bytes: u64,
+    /// Via the site forward proxy (baseline) or direct to a cache's
+    /// HTTP interface (stashcp fallback).
+    pub via_proxy: bool,
+}
+
+/// Connection overheads of a bare curl invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct CurlCosts {
+    /// Process spawn + TLS-less TCP connect to the proxy.
+    pub startup: Duration,
+    /// Extra round trip for the HTTP request/response headers.
+    pub request_overhead: Duration,
+}
+
+impl Default for CurlCosts {
+    fn default() -> Self {
+        CurlCosts {
+            startup: Duration::from_millis(25),
+            request_overhead: Duration::from_millis(5),
+        }
+    }
+}
+
+impl CurlCosts {
+    /// Total pre-first-byte latency (excluding network RTT, which the
+    /// topology charges separately).
+    pub fn pre_transfer(&self) -> Duration {
+        self.startup + self.request_overhead
+    }
+}
+
+/// Build the URL a federation path is served under by proxies/caches.
+pub fn url_for(path: &str) -> String {
+    format!("http://stash.osgconnect.net:8000{path}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn url_mapping() {
+        assert_eq!(
+            url_for("/ospool/ligo/f.gwf"),
+            "http://stash.osgconnect.net:8000/ospool/ligo/f.gwf"
+        );
+    }
+
+    #[test]
+    fn pre_transfer_sums() {
+        let c = CurlCosts::default();
+        assert_eq!(c.pre_transfer().as_micros(), 30_000);
+    }
+}

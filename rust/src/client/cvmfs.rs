@@ -1,0 +1,276 @@
+//! CVMFS client — read-only POSIX interface to the federation (§3.1).
+//!
+//! "CVMFS provides a read-only POSIX interface to the StashCache
+//! federation. ... CVMFS will download the data in small chunks of
+//! 24MB. If an application only reads portions of a file, CVMFS will
+//! only download those portions. CVMFS is configured to only cache 1GB
+//! on the local hard drive."
+//!
+//! [`CvmfsClient`] models the worker-node side: a chunk-granular local
+//! LRU cache (default 1 GB) in front of the remote StashCache cache.
+//! [`CvmfsClient::plan_read`] returns which chunks are satisfied
+//! locally and which must be requested from the cache; the driver (sim
+//! or live) performs the remote I/O and calls
+//! [`CvmfsClient::commit_chunks`]. Reads also verify chunk checksums
+//! against the mounted catalog when one is supplied (§6: "CVMFS
+//! calculates checksums of the data, which guarantees consistency").
+
+use crate::util::ByteSize;
+use std::collections::HashMap;
+
+/// CVMFS's fixed chunk size (24 MB, §3.1).
+pub const CVMFS_CHUNK: u64 = 24_000_000;
+
+/// Default local hard-drive cache (1 GB, §3.1).
+pub const LOCAL_CACHE: u64 = 1_000_000_000;
+
+/// A planned POSIX read.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CvmfsReadPlan {
+    /// Bytes served from the worker-local cache.
+    pub local_bytes: u64,
+    /// Bytes that must come from the StashCache cache.
+    pub remote_bytes: u64,
+    /// (chunk_index, chunk_offset_in_file, chunk_len) to request
+    /// remotely — whole chunks, clipped to file size.
+    pub remote_chunks: Vec<(u64, u64, u64)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LocalChunk {
+    len: u64,
+    last_access: u64,
+}
+
+/// The worker-node CVMFS client state.
+#[derive(Debug)]
+pub struct CvmfsClient {
+    capacity: u64,
+    usage: u64,
+    clock: u64,
+    /// (path, chunk_idx) → chunk residency.
+    chunks: HashMap<(String, u64), LocalChunk>,
+    pub stats: CvmfsStats,
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CvmfsStats {
+    pub reads: u64,
+    pub local_hit_bytes: u64,
+    pub remote_bytes: u64,
+    pub evictions: u64,
+    pub checksum_failures: u64,
+}
+
+impl Default for CvmfsClient {
+    fn default() -> Self {
+        Self::new(ByteSize(LOCAL_CACHE))
+    }
+}
+
+impl CvmfsClient {
+    pub fn new(local_capacity: ByteSize) -> Self {
+        CvmfsClient {
+            capacity: local_capacity.as_u64(),
+            usage: 0,
+            clock: 0,
+            chunks: HashMap::new(),
+            stats: CvmfsStats::default(),
+        }
+    }
+
+    pub fn usage(&self) -> ByteSize {
+        ByteSize(self.usage)
+    }
+
+    /// Plan a POSIX read of `[offset, offset+len)` — only the touched
+    /// 24 MB chunks are fetched ("If an application only reads portions
+    /// of a file, CVMFS will only download those portions").
+    pub fn plan_read(&mut self, path: &str, offset: u64, len: u64, file_size: u64) -> CvmfsReadPlan {
+        assert!(
+            offset.checked_add(len).is_some_and(|e| e <= file_size),
+            "read past EOF"
+        );
+        self.stats.reads += 1;
+        self.clock += 1;
+        let mut plan = CvmfsReadPlan {
+            local_bytes: 0,
+            remote_bytes: 0,
+            remote_chunks: Vec::new(),
+        };
+        if len == 0 {
+            return plan;
+        }
+        let first = offset / CVMFS_CHUNK;
+        let last = (offset + len - 1) / CVMFS_CHUNK;
+        for c in first..=last {
+            let c_start = c * CVMFS_CHUNK;
+            let c_len = (c_start + CVMFS_CHUNK).min(file_size) - c_start;
+            let lo = offset.max(c_start);
+            let hi = (offset + len).min(c_start + c_len);
+            let req = hi - lo;
+            let key = (path.to_string(), c);
+            if let Some(chunk) = self.chunks.get_mut(&key) {
+                chunk.last_access = self.clock;
+                plan.local_bytes += req;
+                self.stats.local_hit_bytes += req;
+            } else {
+                plan.remote_bytes += req;
+                plan.remote_chunks.push((c, c_start, c_len));
+            }
+        }
+        plan
+    }
+
+    /// Store fetched chunks in the local cache, optionally verifying
+    /// their checksums against the mounted catalog entry. Returns
+    /// `false` (and stores nothing) on a checksum mismatch.
+    pub fn commit_chunks(
+        &mut self,
+        path: &str,
+        mtime: u64,
+        chunks: &[(u64, u64, u64)],
+        catalog: Option<&crate::origin::indexer::IndexEntry>,
+    ) -> bool {
+        if let Some(entry) = catalog {
+            if let Some(sums) = &entry.checksums {
+                for &(c, c_start, c_len) in chunks {
+                    let got =
+                        crate::origin::content::extent_checksum(path, mtime, c_start, c_len);
+                    if sums.get(c as usize) != Some(&got) {
+                        self.stats.checksum_failures += 1;
+                        return false;
+                    }
+                }
+            }
+        }
+        for &(c, _, c_len) in chunks {
+            self.clock += 1;
+            // Evict LRU chunks until this one fits.
+            while self.usage + c_len > self.capacity && !self.chunks.is_empty() {
+                let victim = self
+                    .chunks
+                    .iter()
+                    .min_by_key(|(_, ch)| ch.last_access)
+                    .map(|(k, _)| k.clone())
+                    .expect("non-empty");
+                let evicted = self.chunks.remove(&victim).expect("exists");
+                self.usage -= evicted.len;
+                self.stats.evictions += 1;
+            }
+            if c_len > self.capacity {
+                continue; // chunk larger than the whole local cache
+            }
+            let key = (path.to_string(), c);
+            if let Some(prev) = self.chunks.insert(
+                key,
+                LocalChunk { len: c_len, last_access: self.clock },
+            ) {
+                self.usage -= prev.len;
+            }
+            self.usage += c_len;
+            self.stats.remote_bytes += c_len;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::OriginId;
+    use crate::origin::indexer::{Index, Indexer};
+    use crate::origin::{FileMeta, Origin};
+
+    #[test]
+    fn chunked_partial_read() {
+        let mut c = CvmfsClient::default();
+        // 100 MB file; read bytes [30 MB, 50 MB): chunks 1 and 2.
+        let plan = c.plan_read("/f", 30_000_000, 20_000_000, 100_000_000);
+        assert_eq!(plan.remote_chunks.len(), 2);
+        assert_eq!(plan.remote_chunks[0].0, 1);
+        assert_eq!(plan.remote_chunks[1].0, 2);
+        assert_eq!(plan.remote_bytes, 20_000_000);
+        // Only the touched chunks are fetched: 2 × 24 MB, not 100 MB.
+        let fetched: u64 = plan.remote_chunks.iter().map(|&(_, _, l)| l).sum();
+        assert_eq!(fetched, 48_000_000);
+    }
+
+    #[test]
+    fn local_cache_hit_after_commit() {
+        let mut c = CvmfsClient::default();
+        let plan = c.plan_read("/f", 0, 10, 100_000_000);
+        c.commit_chunks("/f", 1, &plan.remote_chunks, None);
+        let plan2 = c.plan_read("/f", 5, 10, 100_000_000);
+        assert_eq!(plan2.local_bytes, 10);
+        assert_eq!(plan2.remote_bytes, 0);
+    }
+
+    #[test]
+    fn one_gb_limit_evicts_lru() {
+        let mut c = CvmfsClient::default(); // 1 GB
+        // 50 chunks of 24 MB = 1.2 GB > 1 GB: early chunks evicted.
+        let size = 50 * CVMFS_CHUNK;
+        let plan = c.plan_read("/big", 0, size, size);
+        c.commit_chunks("/big", 1, &plan.remote_chunks, None);
+        assert!(c.usage().as_u64() <= LOCAL_CACHE);
+        assert!(c.stats.evictions > 0);
+        // Chunk 0 (LRU) gone; last chunk resident.
+        let tail = c.plan_read("/big", size - 10, 10, size);
+        assert_eq!(tail.local_bytes, 10);
+        let head = c.plan_read("/big", 0, 10, size);
+        assert_eq!(head.remote_bytes, 10);
+    }
+
+    #[test]
+    fn checksum_verification_against_catalog() {
+        // Index a real origin file, then verify honest and corrupted
+        // transfers against the catalog.
+        let mut o = Origin::new(OriginId(0), "o", "/data");
+        o.put_file("/data/f", FileMeta { size: 60_000_000, mtime: 5, perm: 0o644 })
+            .unwrap();
+        let indexer = Indexer::default(); // 24 MB chunks, checksums on
+        let mut index = Index::default();
+        indexer.scan(&o, &mut index);
+        let entry = index.get("/data/f").unwrap();
+
+        let mut c = CvmfsClient::default();
+        let plan = c.plan_read("/data/f", 0, 1_000, 60_000_000);
+        // Honest content (mtime matches) verifies.
+        assert!(c.commit_chunks("/data/f", 5, &plan.remote_chunks, Some(entry)));
+        // Stale content (old mtime) fails checksum and stores nothing.
+        let mut c2 = CvmfsClient::default();
+        let plan2 = c2.plan_read("/data/f", 0, 1_000, 60_000_000);
+        assert!(!c2.commit_chunks("/data/f", 4, &plan2.remote_chunks, Some(entry)));
+        assert_eq!(c2.stats.checksum_failures, 1);
+        assert_eq!(c2.usage().as_u64(), 0);
+    }
+
+    #[test]
+    fn zero_len_read_is_noop() {
+        let mut c = CvmfsClient::default();
+        let plan = c.plan_read("/f", 10, 0, 100);
+        assert_eq!(plan, CvmfsReadPlan { local_bytes: 0, remote_bytes: 0, remote_chunks: vec![] });
+    }
+
+    #[test]
+    fn property_local_usage_bounded() {
+        use crate::util::prop::check;
+        check("cvmfs local cache bounded", 40, |g| {
+            let cap = g.u64(10, 200) * 1_000_000;
+            let mut c = CvmfsClient::new(ByteSize(cap));
+            for _ in 0..g.usize(1, 25) {
+                let f = g.u64(0, 3);
+                let size = (f + 1) * 3 * CVMFS_CHUNK;
+                let off = g.u64(0, size - 1);
+                let len = g.u64(0, size - off);
+                let plan = c.plan_read(&format!("/f{f}"), off, len, size);
+                c.commit_chunks(&format!("/f{f}"), 1, &plan.remote_chunks, None);
+                if c.usage().as_u64() > cap {
+                    return (false, format!("usage {} > cap {cap}", c.usage()));
+                }
+            }
+            (true, String::new())
+        });
+    }
+}

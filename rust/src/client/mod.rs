@@ -1,0 +1,91 @@
+//! Clients of the StashCache federation (paper §3.1).
+//!
+//! "Two clients are used to read from the StashCache federation. The
+//! CERN Virtual Machine File System (CVMFS) and stashcp."
+//!
+//! * [`cvmfs`] — read-only POSIX interface: 24 MB chunked reads, a
+//!   small (1 GB) local disk cache, partial-file reads, checksum
+//!   verification against the indexer catalog.
+//! * [`stashcp`] — the `cp`-like tool with its three-method fallback
+//!   chain (CVMFS → XRootD → curl) and the GeoIP nearest-cache lookup
+//!   that gives it its characteristic startup latency.
+//! * [`curl`] — the plain HTTP client that downloads through the site
+//!   forward proxy (the baseline of §4.1's comparison).
+
+pub mod curl;
+pub mod cvmfs;
+pub mod stashcp;
+
+use crate::util::Duration;
+
+/// Transport a download ends up using.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// CVMFS POSIX read through a StashCache cache.
+    Cvmfs,
+    /// XRootD protocol directly against a StashCache cache.
+    Xrootd,
+    /// HTTP against a StashCache cache (stashcp's last resort).
+    HttpCache,
+    /// HTTP through the site forward proxy (the baseline; not part of
+    /// stashcp's chain).
+    HttpProxy,
+}
+
+/// What a finished download looked like (the unit of the §5 analysis).
+#[derive(Debug, Clone)]
+pub struct TransferRecord {
+    pub path: String,
+    pub bytes: u64,
+    pub method: Method,
+    /// Did the terminal server (cache or proxy) already hold the data?
+    pub cache_hit: bool,
+    pub duration: Duration,
+}
+
+impl TransferRecord {
+    /// Average delivered rate in bytes/sec.
+    pub fn rate_bps(&self) -> f64 {
+        let secs = self.duration.as_secs_f64();
+        if secs <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.bytes as f64 / secs
+        }
+    }
+
+    /// Rate in Mbit/s (the unit of Figures 6-8).
+    pub fn rate_mbps(&self) -> f64 {
+        self.rate_bps() * 8.0 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_conversions() {
+        let r = TransferRecord {
+            path: "/f".into(),
+            bytes: 1_000_000,
+            method: Method::Cvmfs,
+            cache_hit: true,
+            duration: Duration::from_secs(2),
+        };
+        assert!((r.rate_bps() - 500_000.0).abs() < 1e-9);
+        assert!((r.rate_mbps() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_duration_is_infinite_rate() {
+        let r = TransferRecord {
+            path: "/f".into(),
+            bytes: 1,
+            method: Method::HttpProxy,
+            cache_hit: true,
+            duration: Duration::ZERO,
+        };
+        assert!(r.rate_bps().is_infinite());
+    }
+}

@@ -1,0 +1,144 @@
+//! `stashcp` — the simple copy client (paper §3.1).
+//!
+//! "stashcp attempts 3 different methods to download the data:
+//!  (1) If CVMFS is available on the resource, copy the data from CVMFS
+//!  (2) If an XRootD client is available, it will download using
+//!      XRootD clients.
+//!  (3) If the above two methods fail, it will attempt to download
+//!      with curl and the HTTP interface on the caches."
+//!
+//! "stashcp has a larger startup time which decreases its average
+//! performance. The stashcp has to determine the nearest cache, which
+//! requires querying a remote server, then can start the transfer" —
+//! modelled by [`StartupCosts`]: a GeoIP service round trip plus
+//! per-method tool spin-up, charged before the first byte moves.
+
+use super::Method;
+use crate::util::Duration;
+
+/// Which tools exist on the execute host (differs per OSG site).
+#[derive(Debug, Clone, Copy)]
+pub struct HostEnvironment {
+    pub cvmfs_mounted: bool,
+    pub xrootd_client: bool,
+    // curl is always present on OSG worker nodes.
+}
+
+impl Default for HostEnvironment {
+    fn default() -> Self {
+        // The common case on OSG: no CVMFS mount for stash (§3.1 calls
+        // stashcp "useful when CVMFS is not installed"), xrdcp present.
+        HostEnvironment {
+            cvmfs_mounted: false,
+            xrootd_client: true,
+        }
+    }
+}
+
+/// Fixed latencies charged before a transfer's first byte.
+#[derive(Debug, Clone, Copy)]
+pub struct StartupCosts {
+    /// Nearest-cache determination: one round trip to the CVMFS GeoIP
+    /// service ("querying a remote server").
+    pub geoip_lookup: Duration,
+    /// Python interpreter + tool startup for stashcp itself.
+    pub tool_startup: Duration,
+    /// Per-attempt connection establishment to a cache.
+    pub connect: Duration,
+    /// curl startup when using the HTTP proxy path (the baseline's
+    /// "nearest proxy provided to it from the environment" — no
+    /// remote lookup, §5).
+    pub curl_startup: Duration,
+}
+
+impl Default for StartupCosts {
+    fn default() -> Self {
+        StartupCosts {
+            geoip_lookup: Duration::from_millis(450),
+            tool_startup: Duration::from_millis(350),
+            connect: Duration::from_millis(120),
+            curl_startup: Duration::from_millis(25),
+        }
+    }
+}
+
+/// The ordered fallback chain stashcp will walk on this host.
+pub fn method_chain(env: HostEnvironment) -> Vec<Method> {
+    let mut chain = Vec::new();
+    if env.cvmfs_mounted {
+        chain.push(Method::Cvmfs);
+    }
+    if env.xrootd_client {
+        chain.push(Method::Xrootd);
+    }
+    chain.push(Method::HttpCache);
+    chain
+}
+
+/// Startup latency before the first transfer byte for a given method,
+/// assuming it is attempt number `attempt` (0-based) in the chain —
+/// each failed attempt already paid its own connect cost.
+pub fn startup_latency(costs: &StartupCosts, method: Method, attempt: usize) -> Duration {
+    let base = match method {
+        // CVMFS has the GeoIP answer cached by its own infrastructure;
+        // stashcp-on-cvmfs still pays tool startup.
+        Method::Cvmfs => costs.tool_startup,
+        // xrdcp / curl-to-cache need the nearest-cache query first.
+        Method::Xrootd | Method::HttpCache => {
+            costs.tool_startup + costs.geoip_lookup + costs.connect
+        }
+        // The baseline: proxy address comes from the environment.
+        Method::HttpProxy => costs.curl_startup,
+    };
+    // Retries pay an extra connect per failed predecessor.
+    base + costs.connect * attempt as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_chain_order() {
+        let chain = method_chain(HostEnvironment {
+            cvmfs_mounted: true,
+            xrootd_client: true,
+        });
+        assert_eq!(chain, vec![Method::Cvmfs, Method::Xrootd, Method::HttpCache]);
+    }
+
+    #[test]
+    fn chain_without_cvmfs() {
+        let chain = method_chain(HostEnvironment::default());
+        assert_eq!(chain, vec![Method::Xrootd, Method::HttpCache]);
+    }
+
+    #[test]
+    fn bare_host_still_has_curl() {
+        let chain = method_chain(HostEnvironment {
+            cvmfs_mounted: false,
+            xrootd_client: false,
+        });
+        assert_eq!(chain, vec![Method::HttpCache]);
+    }
+
+    #[test]
+    fn stashcp_startup_exceeds_proxy_startup() {
+        // The §5 observation that makes small files lose on StashCache.
+        let c = StartupCosts::default();
+        let stash = startup_latency(&c, Method::Xrootd, 0);
+        let proxy = startup_latency(&c, Method::HttpProxy, 0);
+        assert!(
+            stash.as_secs_f64() > 10.0 * proxy.as_secs_f64(),
+            "stash {stash} vs proxy {proxy}"
+        );
+    }
+
+    #[test]
+    fn retries_accumulate_connect_cost() {
+        let c = StartupCosts::default();
+        let first = startup_latency(&c, Method::HttpCache, 0);
+        let third = startup_latency(&c, Method::HttpCache, 2);
+        assert_eq!(third.as_micros() - first.as_micros(), 2 * c.connect.as_micros());
+    }
+}

@@ -1,0 +1,436 @@
+//! Built-in federation description reproducing the paper's testbed.
+//!
+//! * **Cache deployment** (Figure 2): caches at six universities
+//!   (Syracuse, Nebraska, Chicago, UCSD, Caltech, Florida), three
+//!   Internet2 PoPs (New York, Kansas City, Houston) and the
+//!   University of Amsterdam — ten caches total, real coordinates.
+//! * **Compute sites** (§4.1): "the top 5 sites providing opportunistic
+//!   computing": Syracuse, Colorado, Bellarmine, Nebraska, Chicago.
+//! * **Origin**: the test dataset "was hosted on the Stash filesystem
+//!   at the University of Chicago" (§4.1); production origins for each
+//!   experiment also live there in this reproduction.
+//!
+//! Link profiles are *calibrated*, not measured: the paper gives no
+//! bandwidth tables, so per-site numbers were tuned until the shape of
+//! Figures 6-8 and Table 3 matched (see EXPERIMENTS.md). The defining
+//! features are taken from the paper's own explanations:
+//!   * Colorado "prioritize[s] bandwidth to the HTTP proxy" and its
+//!     workers have "slower networking to the nearest StashCache
+//!     cache" (§5) — it has no local cache, a fat proxy path, and a
+//!     thin worker WAN path.
+//!   * Syracuse/Nebraska/Chicago host local caches on the worker LAN.
+//!   * Bellarmine is a small site whose proxy WAN path is thin, while
+//!     the nearest I2 cache is well connected.
+
+use super::schema::*;
+use crate::util::bytes::{ByteSize, GB, KB, MB};
+
+/// Names of the five compute sites the paper tested (§4.1), in the
+/// order of Table 3.
+pub const COMPUTE_SITES: [&str; 5] = [
+    "bellarmine",
+    "syracuse",
+    "colorado",
+    "nebraska",
+    "chicago",
+];
+
+/// The eight test file sizes of §4.1 (Table 2 percentiles minus the
+/// duplicate 99th, plus the forward-looking 10 GB file).
+pub fn test_file_sizes() -> Vec<(String, ByteSize)> {
+    vec![
+        ("p01".into(), ByteSize(5_797)),                    // 5.797 KB
+        ("p05".into(), ByteSize::from_f64(22.801, MB)),     // 22.801 MB
+        ("p25".into(), ByteSize::from_f64(170.131, MB)),    // 170.131 MB
+        ("p50".into(), ByteSize::from_f64(467.852, MB)),    // 467.852 MB
+        ("p75".into(), ByteSize::from_f64(493.337, MB)),    // 493.337 MB
+        ("p95".into(), ByteSize::from_f64(2.335, GB)),      // 2.335 GB
+        ("f10g".into(), ByteSize::gb(10)),                  // 10 GB
+    ]
+}
+
+/// Full paper federation: 12 sites (5 compute, 10 caches, 3 overlap),
+/// one origin per experiment at Chicago.
+pub fn paper_federation() -> FederationConfig {
+    let mut sites = Vec::new();
+
+    // --- compute sites (§4.1) --------------------------------------------
+    // Syracuse: hosts a local cache on the worker LAN ("installed a
+    // cache locally to minimize outbound requests", §4). StashCache
+    // wins for large files here (Fig 7, Table 3: 10GB -26.3%).
+    sites.push(SiteConfig {
+        name: "syracuse".into(),
+        lat: 43.0392,
+        lon: -76.1351,
+        worker_slots: 64,
+        links: LinkProfile {
+            wan_gbps: 10.0,
+            proxy_lan_gbps: 10.0,
+            proxy_wan_gbps: 10.0,
+            worker_wan_gbps: 5.0,
+            cache_lan_gbps: 10.0,
+            cache_wan_gbps: 10.0,
+            lan_rtt_ms: 0.3,
+        },
+        proxy: Some(ProxyConfig {
+            per_conn_gbps: 1.1,
+            ..ProxyConfig::default()
+        }),
+        // University-host cache: single-client delivery tops out near
+        // the proxy's (old storage host) — calibrated so 2.3 GB is a
+        // near-tie with the proxy (Table 3: +0.9%).
+        cache: Some(CacheConfig {
+            per_conn_gbps: 1.0,
+            ..CacheConfig::default()
+        }),
+    });
+
+    // Colorado: the paper's outlier. No local cache; proxy path is
+    // heavily provisioned while the worker WAN path is thin, so HTTP
+    // wins at every file size (Fig 6, Table 3: +506%/+246%).
+    sites.push(SiteConfig {
+        name: "colorado".into(),
+        lat: 40.0076,
+        lon: -105.2659,
+        worker_slots: 48,
+        links: LinkProfile {
+            wan_gbps: 40.0,
+            proxy_lan_gbps: 40.0,
+            proxy_wan_gbps: 40.0,
+            worker_wan_gbps: 1.0,
+            cache_lan_gbps: 10.0, // unused (no local cache)
+            cache_wan_gbps: 10.0,
+            lan_rtt_ms: 0.3,
+        },
+        proxy: Some(ProxyConfig {
+            per_conn_gbps: 6.0,
+            ..ProxyConfig::default()
+        }),
+        cache: None,
+    });
+
+    // Bellarmine: small site, thin shared proxy/WAN path; the nearest
+    // I2 cache is comparatively well connected, so StashCache wins
+    // decisively at 2.3 GB (-68.5%).
+    sites.push(SiteConfig {
+        name: "bellarmine".into(),
+        lat: 38.2186,
+        lon: -85.7123,
+        worker_slots: 16,
+        links: LinkProfile {
+            wan_gbps: 3.0,
+            proxy_lan_gbps: 1.0,
+            proxy_wan_gbps: 1.0,
+            worker_wan_gbps: 3.0,
+            cache_lan_gbps: 10.0, // unused (no local cache)
+            cache_wan_gbps: 10.0,
+            lan_rtt_ms: 0.4,
+        },
+        proxy: Some(ProxyConfig {
+            per_conn_gbps: 0.35,
+            ..ProxyConfig::default()
+        }),
+        cache: None,
+    });
+
+    // Nebraska: local cache; StashCache modestly ahead for large files
+    // (Table 3: -12.1% / -2.1%).
+    sites.push(SiteConfig {
+        name: "nebraska".into(),
+        lat: 40.8202,
+        lon: -96.7005,
+        worker_slots: 96,
+        links: LinkProfile {
+            wan_gbps: 100.0,
+            proxy_lan_gbps: 10.0,
+            proxy_wan_gbps: 10.0,
+            worker_wan_gbps: 10.0,
+            cache_lan_gbps: 10.0,
+            cache_wan_gbps: 10.0,
+            lan_rtt_ms: 0.2,
+        },
+        proxy: Some(ProxyConfig {
+            per_conn_gbps: 1.6,
+            ..ProxyConfig::default()
+        }),
+        cache: Some(CacheConfig {
+            per_conn_gbps: 1.6,
+            ..CacheConfig::default()
+        }),
+    });
+
+    // Chicago: local cache *and* the origin is on campus, so the HTTP
+    // path to the origin is short and fast; proxy wins at 2.3 GB
+    // (+30.6%) but loses at 10 GB (-7.7%).
+    sites.push(SiteConfig {
+        name: "chicago".into(),
+        lat: 41.7886,
+        lon: -87.5987,
+        worker_slots: 64,
+        links: LinkProfile {
+            wan_gbps: 100.0,
+            proxy_lan_gbps: 10.0,
+            proxy_wan_gbps: 20.0,
+            worker_wan_gbps: 8.0,
+            cache_lan_gbps: 10.0,
+            cache_wan_gbps: 10.0,
+            lan_rtt_ms: 0.2,
+        },
+        proxy: Some(ProxyConfig {
+            per_conn_gbps: 2.2,
+            ..ProxyConfig::default()
+        }),
+        cache: Some(CacheConfig {
+            per_conn_gbps: 1.5,
+            ..CacheConfig::default()
+        }),
+    });
+
+    // --- cache-only sites (Figure 2) --------------------------------------
+    let cache_only: [(&str, f64, f64); 7] = [
+        ("ucsd", 32.8801, -117.2340),
+        ("caltech", 34.1377, -118.1253),
+        ("florida", 29.6436, -82.3549),
+        ("i2-newyork", 40.7128, -74.0060),
+        ("i2-kansascity", 39.0997, -94.5786),
+        ("i2-houston", 29.7604, -95.3698),
+        ("amsterdam", 52.3676, 4.9041),
+    ];
+    for (name, lat, lon) in cache_only {
+        sites.push(SiteConfig {
+            name: name.into(),
+            lat,
+            lon,
+            worker_slots: 0,
+            links: LinkProfile {
+                // Paper §1: caches are "guaranteed to have at least
+                // 10Gbps networking and several TB's of caching
+                // storage"; I2 PoPs sit on the backbone.
+                wan_gbps: if name.starts_with("i2-") { 100.0 } else { 10.0 },
+                ..LinkProfile::default()
+            },
+            proxy: None,
+            cache: Some(CacheConfig::default()),
+        });
+    }
+
+    // --- origins -----------------------------------------------------------
+    // The test dataset and all experiment origins live on the Stash
+    // filesystem at Chicago (§4.1). One origin prefix per experiment.
+    let mut origins = vec![OriginConfig {
+        name: "stash-chicago".into(),
+        site: "chicago".into(),
+        prefix: "/osgconnect/public".into(),
+    }];
+    for e in paper_workload().experiments {
+        origins.push(OriginConfig {
+            name: format!("origin-{}", e.name),
+            site: "chicago".into(),
+            prefix: format!("/ospool/{}", e.name),
+        });
+    }
+
+    FederationConfig {
+        name: "osg-stashcache".into(),
+        seed: 20190728, // PEARC '19 started July 28
+        redirector_instances: 2,
+        sites,
+        origins,
+        workload: paper_workload(),
+    }
+}
+
+/// Workload mix from Table 1 (top users, 6 months ending Feb 2019).
+/// Shares are the paper's byte totals.
+pub fn paper_workload() -> WorkloadConfig {
+    let experiments = [
+        ("gwosc", 1_079_000.0),        // Open Gravitational Wave Research, 1.079 PB
+        ("des", 709_051.0),            // Dark Energy Survey, 709.051 TB
+        ("minerva", 514_794.0),        // MINERvA, 514.794 TB
+        ("ligo", 228_324.0),           // LIGO, 228.324 TB
+        ("osg-testing", 184_773.0),    // Continuous Testing, 184.773 TB
+        ("nova", 24_317.0),            // NOvA, 24.317 TB
+        ("lsst", 18_966.0),            // LSST, 18.966 TB
+        ("bioinformatics", 17_566.0),  // Bioinformatics, 17.566 TB
+        ("dune", 11_677.0),            // DUNE, 11.677 TB
+    ]
+    .into_iter()
+    .map(|(name, share)| ExperimentMix {
+        name: name.to_string(),
+        share,
+    })
+    .collect();
+
+    WorkloadConfig {
+        experiments,
+        // Scientific working sets are heavily reused (LIGO jobs share
+        // frame files); a skewed Zipf over a few thousand hot files is
+        // what makes the caches effective (Fig 5's 9× WAN drop).
+        zipf_s: 1.2,
+        files_per_experiment: 5_000,
+        size_dist: paper_size_distribution(),
+        jobs_per_hour: 1_200.0,
+        files_per_job: (1, 6),
+    }
+}
+
+/// Log-normal mixture fitted to the Table 2 file-size percentiles:
+///
+/// | pct | paper      |
+/// |-----|------------|
+/// |  1  | 5.797 KB   |
+/// |  5  | 22.801 MB  |
+/// | 25  | 170.131 MB |
+/// | 50  | 467.852 MB |
+/// | 75  | 493.337 MB |
+/// | 95  | 2.335 GB   |
+/// | 99  | 2.335 GB   |
+///
+/// Three components: a small-file tail (logs, JSON), a dominant
+/// ~470-490 MB mode (the 50th and 75th percentiles nearly coincide —
+/// frame files), and a multi-GB analysis-dataset mode that saturates
+/// near 2.335 GB (95th == 99th percentile in the paper, suggesting a
+/// hard popular-file size). Verified by `table2_percentiles`.
+pub fn paper_size_distribution() -> SizeDistribution {
+    SizeDistribution {
+        components: vec![
+            // ~2% tiny files (logs/JSON) centred at the 1st-pctile 6 KB.
+            (0.02, (6.0 * KB as f64).ln(), 1.5),
+            // ~26% small-to-medium spanning p5 (22.8 MB) → p25 (170 MB).
+            (0.26, (62.0 * MB as f64).ln(), 0.84),
+            // ~62% the dominant ~476 MB mode (p50 ≈ p75), narrow.
+            (0.62, (476.0 * MB as f64).ln(), 0.05),
+            // ~10% large analysis files pinned at 2.335 GB (p95 == p99).
+            (0.10, (2.335 * GB as f64).ln(), 0.02),
+        ],
+        min: ByteSize(512),
+        max: ByteSize::gb(10),
+    }
+}
+
+/// An example TOML config equivalent to a trimmed `paper_federation()`;
+/// written by `stashcache init-config` and parsed in tests to keep the
+/// parser and the builder honest with each other.
+pub fn example_toml() -> String {
+    r#"# StashCache federation config (subset of the built-in paper topology)
+[federation]
+name = "osg-stashcache"
+seed = 20190728
+redirector_instances = 2
+
+[[site]]
+name = "syracuse"
+lat = 43.0392
+lon = -76.1351
+worker_slots = 64
+[site.links]
+wan_gbps = 10.0
+proxy_lan_gbps = 10.0
+proxy_wan_gbps = 10.0
+worker_wan_gbps = 5.0
+cache_lan_gbps = 10.0
+cache_wan_gbps = 10.0
+lan_rtt_ms = 0.3
+[site.proxy]
+capacity = "100GB"
+max_object = "1GB"
+ttl_secs = 3600.0
+per_conn_gbps = 1.1
+[site.cache]
+capacity = "8TB"
+high_watermark = 0.95
+low_watermark = 0.85
+chunk_size = "24MB"
+per_conn_gbps = 8.0
+
+[[site]]
+name = "chicago"
+lat = 41.7886
+lon = -87.5987
+worker_slots = 64
+[site.proxy]
+capacity = "100GB"
+[site.cache]
+capacity = "8TB"
+
+[[origin]]
+name = "stash-chicago"
+site = "chicago"
+prefix = "/osgconnect/public"
+"#
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_federation_shape() {
+        let cfg = paper_federation();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.sites.len(), 12);
+        assert_eq!(cfg.cache_sites().count(), 10, "Fig 2: ten caches");
+        assert_eq!(cfg.compute_sites().count(), 5, "§4.1: five test sites");
+        // The three overlap sites host both workers and caches.
+        for name in ["syracuse", "nebraska", "chicago"] {
+            let s = cfg.site(name).unwrap();
+            assert!(s.cache.is_some() && s.worker_slots > 0, "{name}");
+        }
+        for name in ["colorado", "bellarmine"] {
+            assert!(cfg.site(name).unwrap().cache.is_none(), "{name}");
+        }
+    }
+
+    #[test]
+    fn origins_cover_experiments() {
+        let cfg = paper_federation();
+        for e in &cfg.workload.experiments {
+            assert!(
+                cfg.origins
+                    .iter()
+                    .any(|o| o.prefix == format!("/ospool/{}", e.name)),
+                "origin for {}",
+                e.name
+            );
+        }
+    }
+
+    #[test]
+    fn table1_order_preserved() {
+        let w = paper_workload();
+        let shares: Vec<f64> = w.experiments.iter().map(|e| e.share).collect();
+        let mut sorted = shares.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(shares, sorted, "Table 1 is sorted by usage");
+        assert_eq!(w.experiments[0].name, "gwosc");
+        assert!((w.experiments[0].share / w.experiments[8].share - 92.4).abs() < 0.5);
+    }
+
+    #[test]
+    fn size_distribution_weights_sum_to_one() {
+        let d = paper_size_distribution();
+        let total: f64 = d.components.iter().map(|c| c.0).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn test_files_match_table2() {
+        let files = test_file_sizes();
+        assert_eq!(files.len(), 7, "99th == 95th, so 6 percentile files + 10GB");
+        assert_eq!(files[0].1, ByteSize(5_797));
+        assert_eq!(files[5].1, ByteSize(2_335_000_000));
+        assert_eq!(files[6].1, ByteSize::gb(10));
+    }
+
+    #[test]
+    fn example_toml_parses() {
+        let cfg = FederationConfig::from_toml(&example_toml()).unwrap();
+        assert_eq!(cfg.name, "osg-stashcache");
+        assert_eq!(cfg.sites.len(), 2);
+        assert_eq!(
+            cfg.site("syracuse").unwrap().proxy.unwrap().per_conn_gbps,
+            1.1
+        );
+    }
+}

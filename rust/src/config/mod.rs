@@ -1,0 +1,18 @@
+//! Configuration system.
+//!
+//! Federation topology (sites, caches, proxies, origins, link
+//! bandwidths), workload mixes and experiment parameters are described
+//! in a TOML file. The offline crate set has no `serde`/`toml`, so
+//! [`toml`] is a from-scratch parser for the subset we use, [`schema`]
+//! maps the parsed tree onto typed structs with validation, and
+//! [`defaults`] embeds the calibrated topology of the paper's testbed
+//! (the five OSG sites of §4.1 plus the cache deployment of Figure 2).
+
+pub mod defaults;
+pub mod schema;
+pub mod toml;
+
+pub use schema::{
+    CacheConfig, ClientKind, FederationConfig, LinkProfile, OriginConfig, ProxyConfig,
+    SiteConfig, WorkloadConfig,
+};

@@ -1,0 +1,650 @@
+//! Typed configuration schema with validation.
+//!
+//! Maps the parsed TOML tree ([`super::toml`]) onto the structs the
+//! federation builder consumes. Every numeric field is validated at
+//! load time so a bad config fails before a multi-hour simulation
+//! starts.
+
+use super::toml::{self, Table, Value};
+use crate::util::ByteSize;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Top-level federation description.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// Run name (report headers).
+    pub name: String,
+    /// Master RNG seed; every component forks a stream from it.
+    pub seed: u64,
+    /// Number of redirector instances in the round-robin HA pool
+    /// (the OSG runs two — paper §3).
+    pub redirector_instances: usize,
+    /// One entry per site (compute sites, cache sites, or both).
+    pub sites: Vec<SiteConfig>,
+    /// Data origins and their namespace prefixes.
+    pub origins: Vec<OriginConfig>,
+    /// Workload description for the usage simulations.
+    pub workload: WorkloadConfig,
+}
+
+/// A site: a geographic location hosting any combination of worker
+/// nodes, a squid-like HTTP proxy, a StashCache cache, and origins.
+#[derive(Debug, Clone)]
+pub struct SiteConfig {
+    pub name: String,
+    pub lat: f64,
+    pub lon: f64,
+    /// Worker slots available for jobs (0 for pure cache PoPs).
+    pub worker_slots: usize,
+    /// Network characteristics.
+    pub links: LinkProfile,
+    /// Site HTTP forward proxy (every compute site has one on the OSG).
+    pub proxy: Option<ProxyConfig>,
+    /// StashCache cache, if this site hosts one (Figure 2 locations).
+    pub cache: Option<CacheConfig>,
+}
+
+/// Per-site link bandwidths (Gbit/s) and latencies. The WAN core is
+/// modelled as uncongested; contention happens at these edges, which is
+/// how the paper explains its per-site differences (§5: "some sites
+/// prioritize bandwidth to the HTTP proxy").
+#[derive(Debug, Clone, Copy)]
+pub struct LinkProfile {
+    /// Site border ↔ WAN backbone.
+    pub wan_gbps: f64,
+    /// Worker ↔ site proxy (LAN).
+    pub proxy_lan_gbps: f64,
+    /// Site proxy ↔ border. Colorado provisions this much fatter than
+    /// the worker path — the paper's outlier (§5, Table 3).
+    pub proxy_wan_gbps: f64,
+    /// Worker ↔ border (the path to a *remote* cache).
+    pub worker_wan_gbps: f64,
+    /// Worker ↔ local cache (LAN), when a cache exists on site.
+    pub cache_lan_gbps: f64,
+    /// Cache ↔ border (paper guarantees caches ≥ 10 Gbps).
+    pub cache_wan_gbps: f64,
+    /// Additional per-connection LAN round-trip (ms).
+    pub lan_rtt_ms: f64,
+}
+
+/// StashCache cache service parameters (XRootD caching proxy).
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Total cache space ("several TBs" — paper §1).
+    pub capacity: ByteSize,
+    /// Eviction high watermark as a fraction of capacity (start evicting).
+    pub high_watermark: f64,
+    /// Eviction low watermark (evict down to this).
+    pub low_watermark: f64,
+    /// Chunk size for partial-file caching (CVMFS uses 24 MB — §3.1).
+    pub chunk_size: ByteSize,
+    /// Per-connection delivery ceiling (Gbit/s). XRootD caches use
+    /// multi-threaded, multi-stream transfers (paper §3.1), so this is
+    /// high — the effective rate is normally link-limited instead.
+    pub per_conn_gbps: f64,
+}
+
+/// Squid-like HTTP forward proxy parameters (the paper's baseline).
+#[derive(Debug, Clone, Copy)]
+pub struct ProxyConfig {
+    /// Object store capacity.
+    pub capacity: ByteSize,
+    /// Largest object the proxy will cache. The paper observed site
+    /// proxies never cached the 2.335 GB and 10 GB files (§5).
+    pub max_object: ByteSize,
+    /// Time-to-live before a cached object expires. The paper hit
+    /// rapid expiry during its test loop (§5).
+    pub ttl_secs: f64,
+    /// Per-connection delivery ceiling (Gbit/s). Squid-style proxies
+    /// are "optimized for small files" (paper §1): a single HTTP
+    /// stream through the proxy tops out well below the NIC rate.
+    pub per_conn_gbps: f64,
+}
+
+/// Origin server registration.
+#[derive(Debug, Clone)]
+pub struct OriginConfig {
+    pub name: String,
+    /// Site hosting the origin (must exist in `sites`).
+    pub site: String,
+    /// Namespace prefix this origin is authoritative for, e.g.
+    /// `/ospool/ligo`.
+    pub prefix: String,
+}
+
+/// Client tool used for a download (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClientKind {
+    /// `stashcp` → cvmfs → xrootd → curl fallback chain.
+    Stashcp,
+    /// CVMFS POSIX chunked reader.
+    Cvmfs,
+    /// Plain HTTP through the site proxy.
+    CurlProxy,
+}
+
+/// Workload description for the long-running usage simulations
+/// (Table 1, Table 2, Figure 4, Figure 5).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Experiments and their relative usage share (Table 1 ratios).
+    pub experiments: Vec<ExperimentMix>,
+    /// Zipf exponent for file popularity within an experiment.
+    pub zipf_s: f64,
+    /// Catalog size (distinct files) per experiment.
+    pub files_per_experiment: u64,
+    /// Log-normal mixture for file sizes, fitted to Table 2.
+    pub size_dist: SizeDistribution,
+    /// Mean job arrival rate across the federation (jobs/hour).
+    pub jobs_per_hour: f64,
+    /// Files read per job (uniform range).
+    pub files_per_job: (u64, u64),
+}
+
+/// One experiment's share of the workload.
+#[derive(Debug, Clone)]
+pub struct ExperimentMix {
+    pub name: String,
+    /// Relative weight (normalised internally).
+    pub share: f64,
+}
+
+/// Mixture of log-normal components for file sizes. Calibrated in
+/// `defaults::paper_size_distribution` to hit the Table 2 percentiles.
+#[derive(Debug, Clone)]
+pub struct SizeDistribution {
+    /// (weight, mu, sigma) of ln(bytes).
+    pub components: Vec<(f64, f64, f64)>,
+    /// Hard clamp (largest file the paper tested was 10 GB).
+    pub min: ByteSize,
+    pub max: ByteSize,
+}
+
+impl FederationConfig {
+    /// Load from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let table = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_table(&table)
+    }
+
+    /// Load from a TOML file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    fn from_table(t: &Table) -> Result<Self> {
+        let fed = t
+            .get("federation")
+            .and_then(Value::as_table)
+            .ok_or_else(|| anyhow!("missing [federation] table"))?;
+        let name = get_str(fed, "name").unwrap_or_else(|_| "stashcache".into());
+        let seed = get_int(fed, "seed") as u64;
+        let redirector_instances = fed
+            .get("redirector_instances")
+            .and_then(Value::as_int)
+            .unwrap_or(2) as usize;
+
+        let mut sites = Vec::new();
+        if let Some(arr) = t.get("site").and_then(Value::as_array) {
+            for (i, v) in arr.iter().enumerate() {
+                let st = v
+                    .as_table()
+                    .ok_or_else(|| anyhow!("[[site]] #{i} is not a table"))?;
+                sites.push(SiteConfig::from_table(st).with_context(|| format!("site #{i}"))?);
+            }
+        }
+
+        let mut origins = Vec::new();
+        if let Some(arr) = t.get("origin").and_then(Value::as_array) {
+            for (i, v) in arr.iter().enumerate() {
+                let ot = v
+                    .as_table()
+                    .ok_or_else(|| anyhow!("[[origin]] #{i} is not a table"))?;
+                origins.push(OriginConfig {
+                    name: get_str(ot, "name")?,
+                    site: get_str(ot, "site")?,
+                    prefix: get_str(ot, "prefix")?,
+                });
+            }
+        }
+
+        let workload = match t.get("workload").and_then(Value::as_table) {
+            Some(wt) => WorkloadConfig::from_table(wt)?,
+            None => super::defaults::paper_workload(),
+        };
+
+        let cfg = FederationConfig {
+            name,
+            seed,
+            redirector_instances,
+            sites,
+            origins,
+            workload,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural validation (referential integrity + numeric sanity).
+    pub fn validate(&self) -> Result<()> {
+        if self.sites.is_empty() {
+            bail!("no sites configured");
+        }
+        if self.redirector_instances == 0 {
+            bail!("redirector_instances must be >= 1");
+        }
+        let mut names = std::collections::HashSet::new();
+        for s in &self.sites {
+            if !names.insert(s.name.as_str()) {
+                bail!("duplicate site name {:?}", s.name);
+            }
+            s.validate()?;
+        }
+        if self.origins.is_empty() {
+            bail!("no origins configured");
+        }
+        let mut prefixes = std::collections::HashSet::new();
+        for o in &self.origins {
+            if !names.contains(o.site.as_str()) {
+                bail!("origin {:?} references unknown site {:?}", o.name, o.site);
+            }
+            if !o.prefix.starts_with('/') {
+                bail!("origin prefix {:?} must start with '/'", o.prefix);
+            }
+            if !prefixes.insert(o.prefix.as_str()) {
+                bail!("duplicate origin prefix {:?}", o.prefix);
+            }
+        }
+        if !self.sites.iter().any(|s| s.cache.is_some()) {
+            bail!("no cache sites configured");
+        }
+        self.workload.validate()?;
+        Ok(())
+    }
+
+    /// Sites hosting a cache (Figure 2 locations).
+    pub fn cache_sites(&self) -> impl Iterator<Item = &SiteConfig> {
+        self.sites.iter().filter(|s| s.cache.is_some())
+    }
+
+    /// Sites with worker slots (compute sites).
+    pub fn compute_sites(&self) -> impl Iterator<Item = &SiteConfig> {
+        self.sites.iter().filter(|s| s.worker_slots > 0)
+    }
+
+    pub fn site(&self, name: &str) -> Option<&SiteConfig> {
+        self.sites.iter().find(|s| s.name == name)
+    }
+}
+
+impl SiteConfig {
+    fn from_table(t: &Table) -> Result<Self> {
+        let links = match t.get("links").and_then(Value::as_table) {
+            Some(lt) => LinkProfile::from_table(lt)?,
+            None => LinkProfile::default(),
+        };
+        let proxy = match t.get("proxy").and_then(Value::as_table) {
+            Some(pt) => Some(ProxyConfig::from_table(pt)?),
+            None => None,
+        };
+        let cache = match t.get("cache").and_then(Value::as_table) {
+            Some(ct) => Some(CacheConfig::from_table(ct)?),
+            None => None,
+        };
+        Ok(SiteConfig {
+            name: get_str(t, "name")?,
+            lat: get_float(t, "lat")?,
+            lon: get_float(t, "lon")?,
+            worker_slots: t
+                .get("worker_slots")
+                .and_then(Value::as_int)
+                .unwrap_or(0) as usize,
+            links,
+            proxy,
+            cache,
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(-90.0..=90.0).contains(&self.lat) || !(-180.0..=180.0).contains(&self.lon) {
+            bail!("site {:?} has invalid coordinates", self.name);
+        }
+        let l = &self.links;
+        for (label, v) in [
+            ("wan_gbps", l.wan_gbps),
+            ("proxy_lan_gbps", l.proxy_lan_gbps),
+            ("proxy_wan_gbps", l.proxy_wan_gbps),
+            ("worker_wan_gbps", l.worker_wan_gbps),
+            ("cache_lan_gbps", l.cache_lan_gbps),
+            ("cache_wan_gbps", l.cache_wan_gbps),
+        ] {
+            if !(v > 0.0 && v.is_finite()) {
+                bail!("site {:?}: {label} must be positive, got {v}", self.name);
+            }
+        }
+        if let Some(c) = &self.cache {
+            if !(0.0 < c.low_watermark && c.low_watermark < c.high_watermark
+                && c.high_watermark <= 1.0)
+            {
+                bail!(
+                    "site {:?}: watermarks must satisfy 0 < low < high <= 1",
+                    self.name
+                );
+            }
+            if c.chunk_size.0 == 0 || c.capacity.0 < c.chunk_size.0 {
+                bail!("site {:?}: cache capacity < chunk size", self.name);
+            }
+            if c.per_conn_gbps <= 0.0 {
+                bail!("site {:?}: cache per_conn_gbps must be > 0", self.name);
+            }
+        }
+        if let Some(p) = &self.proxy {
+            if p.capacity.0 == 0 {
+                bail!("site {:?}: proxy capacity must be > 0", self.name);
+            }
+            if p.ttl_secs <= 0.0 {
+                bail!("site {:?}: proxy ttl must be > 0", self.name);
+            }
+            if p.per_conn_gbps <= 0.0 {
+                bail!("site {:?}: proxy per_conn_gbps must be > 0", self.name);
+            }
+        }
+        if self.worker_slots > 0 && self.proxy.is_none() {
+            bail!(
+                "compute site {:?} needs a proxy (every OSG compute site has one)",
+                self.name
+            );
+        }
+        Ok(())
+    }
+}
+
+impl LinkProfile {
+    fn from_table(t: &Table) -> Result<Self> {
+        let d = LinkProfile::default();
+        Ok(LinkProfile {
+            wan_gbps: opt_float(t, "wan_gbps")?.unwrap_or(d.wan_gbps),
+            proxy_lan_gbps: opt_float(t, "proxy_lan_gbps")?.unwrap_or(d.proxy_lan_gbps),
+            proxy_wan_gbps: opt_float(t, "proxy_wan_gbps")?.unwrap_or(d.proxy_wan_gbps),
+            worker_wan_gbps: opt_float(t, "worker_wan_gbps")?.unwrap_or(d.worker_wan_gbps),
+            cache_lan_gbps: opt_float(t, "cache_lan_gbps")?.unwrap_or(d.cache_lan_gbps),
+            cache_wan_gbps: opt_float(t, "cache_wan_gbps")?.unwrap_or(d.cache_wan_gbps),
+            lan_rtt_ms: opt_float(t, "lan_rtt_ms")?.unwrap_or(d.lan_rtt_ms),
+        })
+    }
+}
+
+impl Default for LinkProfile {
+    fn default() -> Self {
+        LinkProfile {
+            wan_gbps: 10.0,
+            proxy_lan_gbps: 10.0,
+            proxy_wan_gbps: 10.0,
+            worker_wan_gbps: 5.0,
+            cache_lan_gbps: 10.0,
+            cache_wan_gbps: 10.0,
+            lan_rtt_ms: 0.3,
+        }
+    }
+}
+
+impl CacheConfig {
+    fn from_table(t: &Table) -> Result<Self> {
+        let d = CacheConfig::default();
+        Ok(CacheConfig {
+            capacity: opt_bytes(t, "capacity")?.unwrap_or(d.capacity),
+            high_watermark: opt_float(t, "high_watermark")?.unwrap_or(d.high_watermark),
+            low_watermark: opt_float(t, "low_watermark")?.unwrap_or(d.low_watermark),
+            chunk_size: opt_bytes(t, "chunk_size")?.unwrap_or(d.chunk_size),
+            per_conn_gbps: opt_float(t, "per_conn_gbps")?.unwrap_or(d.per_conn_gbps),
+        })
+    }
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            capacity: ByteSize::tb(8),
+            high_watermark: 0.95,
+            low_watermark: 0.85,
+            chunk_size: ByteSize::mb(24),
+            per_conn_gbps: 8.0,
+        }
+    }
+}
+
+impl ProxyConfig {
+    fn from_table(t: &Table) -> Result<Self> {
+        let d = ProxyConfig::default();
+        Ok(ProxyConfig {
+            capacity: opt_bytes(t, "capacity")?.unwrap_or(d.capacity),
+            max_object: opt_bytes(t, "max_object")?.unwrap_or(d.max_object),
+            ttl_secs: opt_float(t, "ttl_secs")?.unwrap_or(d.ttl_secs),
+            per_conn_gbps: opt_float(t, "per_conn_gbps")?.unwrap_or(d.per_conn_gbps),
+        })
+    }
+}
+
+impl Default for ProxyConfig {
+    fn default() -> Self {
+        ProxyConfig {
+            // Typical OSG squid: tens of GB of disk, 512 MB-1 GB max
+            // object, aggressive expiry tuned for software/conditions
+            // data (paper §1 and §5).
+            capacity: ByteSize::gb(100),
+            max_object: ByteSize::gb(1),
+            ttl_secs: 3_600.0,
+            per_conn_gbps: 1.2,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    fn from_table(t: &Table) -> Result<Self> {
+        let mut w = super::defaults::paper_workload();
+        if let Some(v) = opt_float(t, "zipf_s")? {
+            w.zipf_s = v;
+        }
+        if let Some(v) = t.get("files_per_experiment").and_then(Value::as_int) {
+            w.files_per_experiment = v as u64;
+        }
+        if let Some(v) = opt_float(t, "jobs_per_hour")? {
+            w.jobs_per_hour = v;
+        }
+        if let Some(arr) = t.get("experiments").and_then(Value::as_array) {
+            w.experiments.clear();
+            for v in arr {
+                let et = v.as_table().ok_or_else(|| anyhow!("experiment not a table"))?;
+                w.experiments.push(ExperimentMix {
+                    name: get_str(et, "name")?,
+                    share: get_float(et, "share")?,
+                });
+            }
+        }
+        w.validate()?;
+        Ok(w)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.experiments.is_empty() {
+            bail!("workload has no experiments");
+        }
+        if self.experiments.iter().any(|e| e.share <= 0.0) {
+            bail!("experiment shares must be positive");
+        }
+        if self.zipf_s < 0.0 || self.files_per_experiment == 0 {
+            bail!("invalid popularity parameters");
+        }
+        if self.jobs_per_hour <= 0.0 {
+            bail!("jobs_per_hour must be positive");
+        }
+        if self.files_per_job.0 == 0 || self.files_per_job.0 > self.files_per_job.1 {
+            bail!("files_per_job range invalid");
+        }
+        let (total, _, _) = self
+            .size_dist
+            .components
+            .iter()
+            .fold((0.0, 0.0, 0.0), |acc, c| (acc.0 + c.0, c.1, c.2));
+        if (total - 1.0).abs() > 1e-6 {
+            bail!("size distribution weights must sum to 1, got {total}");
+        }
+        Ok(())
+    }
+}
+
+// --- small typed accessors -------------------------------------------------
+
+fn get_str(t: &Table, key: &str) -> Result<String> {
+    t.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing string key {key:?}"))
+}
+
+fn get_int(t: &Table, key: &str) -> i64 {
+    t.get(key).and_then(Value::as_int).unwrap_or(42)
+}
+
+fn get_float(t: &Table, key: &str) -> Result<f64> {
+    t.get(key)
+        .and_then(Value::as_float)
+        .ok_or_else(|| anyhow!("missing numeric key {key:?}"))
+}
+
+fn opt_float(t: &Table, key: &str) -> Result<Option<f64>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_float()
+            .map(Some)
+            .ok_or_else(|| anyhow!("key {key:?} is not numeric")),
+    }
+}
+
+fn opt_bytes(t: &Table, key: &str) -> Result<Option<ByteSize>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(
+            s.parse::<ByteSize>().map_err(|e| anyhow!("{key}: {e}"))?,
+        )),
+        Some(Value::Int(i)) if *i >= 0 => Ok(Some(ByteSize(*i as u64))),
+        Some(v) => bail!("key {key:?} is not a byte size: {v}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults;
+
+    #[test]
+    fn default_config_validates() {
+        let cfg = defaults::paper_federation();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.compute_sites().count(), 5);
+        assert_eq!(cfg.cache_sites().count(), 10);
+    }
+
+    #[test]
+    fn parse_minimal_toml() {
+        let cfg = FederationConfig::from_toml(
+            r#"
+            [federation]
+            name = "mini"
+            seed = 7
+
+            [[site]]
+            name = "a"
+            lat = 40.0
+            lon = -100.0
+            worker_slots = 4
+            [site.links]
+            wan_gbps = 10.0
+            [site.proxy]
+            capacity = "50GB"
+            max_object = "1GB"
+            ttl_secs = 600.0
+            [site.cache]
+            capacity = "2TB"
+
+            [[origin]]
+            name = "o1"
+            site = "a"
+            prefix = "/data"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "mini");
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.sites.len(), 1);
+        let s = &cfg.sites[0];
+        assert_eq!(s.proxy.unwrap().capacity, ByteSize::gb(50));
+        assert_eq!(s.cache.unwrap().capacity, ByteSize::tb(2));
+        // defaults fill in unspecified knobs
+        assert_eq!(s.cache.unwrap().chunk_size, ByteSize::mb(24));
+    }
+
+    #[test]
+    fn rejects_unknown_origin_site() {
+        let e = FederationConfig::from_toml(
+            r#"
+            [federation]
+            name = "x"
+            [[site]]
+            name = "a"
+            lat = 0.0
+            lon = 0.0
+            [site.cache]
+            capacity = "1TB"
+            [[origin]]
+            name = "o"
+            site = "nowhere"
+            prefix = "/d"
+            "#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("unknown site"));
+    }
+
+    #[test]
+    fn rejects_bad_watermarks() {
+        let mut cfg = defaults::paper_federation();
+        for s in &mut cfg.sites {
+            if let Some(c) = &mut s.cache {
+                c.low_watermark = 0.99;
+                c.high_watermark = 0.5;
+            }
+        }
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_compute_site_without_proxy() {
+        let mut cfg = defaults::paper_federation();
+        let s = cfg
+            .sites
+            .iter_mut()
+            .find(|s| s.worker_slots > 0)
+            .unwrap();
+        s.proxy = None;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_prefix() {
+        let mut cfg = defaults::paper_federation();
+        let dup = cfg.origins[0].clone();
+        cfg.origins.push(dup);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn workload_share_validation() {
+        let mut w = defaults::paper_workload();
+        w.experiments[0].share = -1.0;
+        assert!(w.validate().is_err());
+    }
+}

@@ -1,0 +1,453 @@
+//! Minimal TOML parser (offline substitute for the `toml` crate).
+//!
+//! Supported subset — everything the federation configs use:
+//! * key/value pairs: strings (`"..."`), integers, floats, booleans
+//! * bare and quoted keys, dotted table headers `[a.b]`
+//! * arrays of scalars `[1, 2, 3]` (homogeneity not enforced)
+//! * arrays of tables `[[site]]`
+//! * comments (`#`) and blank lines
+//!
+//! Not supported (and rejected, not silently misparsed): multi-line
+//! strings, datetimes, inline tables, dotted keys on the left-hand side.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(Table),
+}
+
+pub type Table = BTreeMap<String, Value>;
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`bandwidth = 10`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&Table> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Navigate `a.b.c` through nested tables.
+    pub fn get_path(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError {
+        line,
+        msg: msg.into(),
+    })
+}
+
+/// Parse a complete document into the root table.
+pub fn parse(input: &str) -> Result<Table, ParseError> {
+    let mut root = Table::new();
+    // Path of the table currently being filled.
+    let mut current: Vec<String> = Vec::new();
+
+    for (idx, raw) in input.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix("[[") {
+            let Some(name) = header.strip_suffix("]]") else {
+                return err(line_no, "unterminated [[table]] header");
+            };
+            let path = parse_key_path(name, line_no)?;
+            push_array_table(&mut root, &path, line_no)?;
+            current = path;
+        } else if let Some(header) = line.strip_prefix('[') {
+            let Some(name) = header.strip_suffix(']') else {
+                return err(line_no, "unterminated [table] header");
+            };
+            let path = parse_key_path(name, line_no)?;
+            ensure_table(&mut root, &path, line_no)?;
+            current = path;
+        } else {
+            let Some(eq) = find_top_level_eq(line) else {
+                return err(line_no, format!("expected key = value, got {line:?}"));
+            };
+            let key = parse_key(line[..eq].trim(), line_no)?;
+            let value = parse_value(line[eq + 1..].trim(), line_no)?;
+            let table = navigate_mut(&mut root, &current, line_no)?;
+            if table.contains_key(&key) {
+                return err(line_no, format!("duplicate key {key:?}"));
+            }
+            table.insert(key, value);
+        }
+    }
+    Ok(root)
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Find the first `=` outside quotes.
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_key(s: &str, line: usize) -> Result<String, ParseError> {
+    if let Some(q) = s.strip_prefix('"') {
+        let Some(name) = q.strip_suffix('"') else {
+            return err(line, "unterminated quoted key");
+        };
+        return Ok(name.to_string());
+    }
+    if s.is_empty()
+        || !s
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        return err(line, format!("invalid bare key {s:?}"));
+    }
+    Ok(s.to_string())
+}
+
+fn parse_key_path(s: &str, line: usize) -> Result<Vec<String>, ParseError> {
+    s.split('.')
+        .map(|part| parse_key(part.trim(), line))
+        .collect()
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return err(line, "missing value");
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let Some(body) = q.strip_suffix('"') else {
+            return err(line, "unterminated string");
+        };
+        return Ok(Value::Str(unescape(body, line)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let Some(body) = s[1..].strip_suffix(']') else {
+            return err(line, "unterminated array (arrays must be single-line)");
+        };
+        let mut items = Vec::new();
+        for part in split_array_items(body) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    // Numbers: underscores allowed as separators.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        if f.is_finite() {
+            return Ok(Value::Float(f));
+        }
+    }
+    err(line, format!("cannot parse value {s:?}"))
+}
+
+fn unescape(s: &str, line: usize) -> Result<String, ParseError> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return err(line, format!("bad escape \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Split array body on commas not inside quotes or nested brackets.
+fn split_array_items(body: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                items.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&body[start..]);
+    items
+}
+
+fn ensure_table<'a>(
+    root: &'a mut Table,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut Table, ParseError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(Table::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            Value::Array(items) => match items.last_mut() {
+                Some(Value::Table(t)) => t,
+                _ => return err(line, format!("{part:?} is not a table")),
+            },
+            _ => return err(line, format!("{part:?} is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_array_table(root: &mut Table, path: &[String], line: usize) -> Result<(), ParseError> {
+    let (last, parents) = path.split_last().expect("non-empty path");
+    let parent = ensure_table(root, parents, line)?;
+    match parent
+        .entry(last.clone())
+        .or_insert_with(|| Value::Array(Vec::new()))
+    {
+        Value::Array(items) => {
+            items.push(Value::Table(Table::new()));
+            Ok(())
+        }
+        _ => err(line, format!("{last:?} is not an array of tables")),
+    }
+}
+
+fn navigate_mut<'a>(
+    root: &'a mut Table,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut Table, ParseError> {
+    ensure_table(root, path, line)
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Table(t) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in t.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k} = {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let t = parse(
+            r#"
+            name = "syracuse"
+            cores = 48
+            bw = 10.5
+            enabled = true
+            neg = -3
+            big = 1_000_000
+        "#,
+        )
+        .unwrap();
+        assert_eq!(t["name"].as_str(), Some("syracuse"));
+        assert_eq!(t["cores"].as_int(), Some(48));
+        assert_eq!(t["bw"].as_float(), Some(10.5));
+        assert_eq!(t["enabled"].as_bool(), Some(true));
+        assert_eq!(t["neg"].as_int(), Some(-3));
+        assert_eq!(t["big"].as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let t = parse("x = 10").unwrap();
+        assert_eq!(t["x"].as_float(), Some(10.0));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = parse("# header\n\na = 1 # trailing\nb = \"#notcomment\"\n").unwrap();
+        assert_eq!(t["a"].as_int(), Some(1));
+        assert_eq!(t["b"].as_str(), Some("#notcomment"));
+    }
+
+    #[test]
+    fn nested_tables() {
+        let t = parse("[federation]\nseed = 7\n[federation.monitoring]\nport = 9930\n").unwrap();
+        assert_eq!(t.get("federation").unwrap().get_path("seed").unwrap(), &Value::Int(7));
+        assert_eq!(
+            t["federation"].get_path("monitoring.port"),
+            Some(&Value::Int(9930))
+        );
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("sizes = [1, 2, 3]\nnames = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        assert_eq!(
+            t["sizes"].as_array().unwrap(),
+            &[Value::Int(1), Value::Int(2), Value::Int(3)]
+        );
+        assert_eq!(t["names"].as_array().unwrap().len(), 2);
+        assert!(t["empty"].as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn array_with_string_commas() {
+        let t = parse(r#"x = ["a,b", "c"]"#).unwrap();
+        assert_eq!(t["x"].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn arrays_of_tables() {
+        let doc = r#"
+            [[site]]
+            name = "syracuse"
+            [site.links]
+            wan = 10.0
+            [[site]]
+            name = "colorado"
+        "#;
+        let t = parse(doc).unwrap();
+        let sites = t["site"].as_array().unwrap();
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].get_path("name").unwrap().as_str(), Some("syracuse"));
+        assert_eq!(sites[0].get_path("links.wan").unwrap().as_float(), Some(10.0));
+        assert_eq!(sites[1].get_path("name").unwrap().as_str(), Some("colorado"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let t = parse(r#"s = "line1\nline2\t\"q\" \\" "#).unwrap();
+        assert_eq!(t["s"].as_str(), Some("line1\nline2\t\"q\" \\"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nb =\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("a = 1\n[bad\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = zzz").unwrap_err();
+        assert!(e.msg.contains("cannot parse"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn quoted_keys() {
+        let t = parse("\"weird key\" = 5\n").unwrap();
+        assert_eq!(t["weird key"].as_int(), Some(5));
+    }
+}

@@ -1,0 +1,73 @@
+//! Pluggable geo-scoring backend: pure rust or the PJRT artifact.
+//!
+//! The CLI's `--runtime pjrt|rust` flag selects which one the
+//! federation uses; both produce identical rankings (asserted by
+//! `runtime::executors` tests), so simulations are reproducible
+//! either way and the PJRT path is exercised end-to-end.
+
+use crate::geoip::{CacheSite, GeoScoreBackend, RustGeoBackend};
+use crate::runtime::{GeoScorer, Runtime};
+
+/// Backend selection for [`crate::federation::FedSim`].
+pub enum GeoBackend {
+    Rust(RustGeoBackend),
+    Pjrt(Box<GeoScorer>),
+}
+
+impl GeoBackend {
+    pub fn rust() -> Self {
+        GeoBackend::Rust(RustGeoBackend)
+    }
+
+    /// Load the AOT `geo_score` artifact (requires `make artifacts`).
+    pub fn pjrt() -> anyhow::Result<Self> {
+        let rt = Runtime::new()?;
+        Ok(GeoBackend::Pjrt(Box::new(GeoScorer::load(&rt)?)))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GeoBackend::Rust(_) => "rust",
+            GeoBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+impl GeoScoreBackend for GeoBackend {
+    fn score(
+        &mut self,
+        clients: &[(f64, f64)],
+        caches: &[CacheSite],
+        loads: &[f64],
+    ) -> Vec<Vec<f64>> {
+        match self {
+            GeoBackend::Rust(b) => b.score(clients, caches, loads),
+            GeoBackend::Pjrt(b) => {
+                <GeoScorer as GeoScoreBackend>::score(b.as_mut(), clients, caches, loads)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+    use crate::federation::FedSim;
+
+    #[test]
+    fn pjrt_backend_drives_federation() {
+        let cfg = paper_federation();
+        let mut rust_fed = FedSim::build(cfg.clone());
+        let mut pjrt_fed =
+            FedSim::build_with_backend(cfg, GeoBackend::pjrt().expect("artifacts built"));
+        for name in crate::config::defaults::COMPUTE_SITES {
+            let idx = rust_fed.topo.site_index(name).unwrap();
+            assert_eq!(
+                rust_fed.nearest_cache_site(idx),
+                pjrt_fed.nearest_cache_site(idx),
+                "backends disagree at {name}"
+            );
+        }
+    }
+}

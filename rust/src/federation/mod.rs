@@ -1,0 +1,733 @@
+//! Federation assembly and the download state machine.
+//!
+//! [`FedSim`] wires every substrate together exactly as Figure 1:
+//! origins registered in the global namespace, the redirector HA pair,
+//! chunk caches at the Figure 2 sites, squid proxies at compute sites,
+//! the GeoIP nearest-cache service, the monitoring pipeline, and the
+//! flow-level WAN. It exposes the client operations the drivers run:
+//!
+//! * [`FedSim::download`] — one blocking download at a site via a
+//!   chosen [`DownloadMethod`], advancing virtual time: startup
+//!   latencies, GeoIP lookup, redirector discovery, origin fetch
+//!   through the cache (or proxy), monitoring packets on completion.
+//! * background origin load ("many users of the filesystem, network,
+//!   and data transfer nodes during our tests", §4.1) as persistent
+//!   flows on the origin's DTN link.
+
+pub mod backend;
+
+use crate::cache::CacheServer;
+use crate::client::stashcp::{self, HostEnvironment, StartupCosts};
+use crate::client::{curl, Method, TransferRecord};
+use crate::config::FederationConfig;
+use crate::geoip::{CacheSite, NearestCache};
+use crate::monitoring::aggregator::Aggregator;
+use crate::monitoring::bus::{Bus, Subscription};
+use crate::monitoring::collector::{Collector, TRANSFER_TOPIC};
+use crate::monitoring::packets::{Envelope, Packet, Protocol};
+use crate::namespace::{Namespace, OriginId};
+use crate::netsim::{Endpoint, FlowId, FlowSpec, Network, Topology};
+use crate::origin::{FileMeta, Origin};
+use crate::proxy::{ProxyLookup, ProxyServer};
+use crate::redirector::RedirectorPool;
+use crate::sim::workload::FileRef;
+use crate::util::{Duration, Pcg64, SimTime};
+use backend::GeoBackend;
+use std::collections::HashMap;
+
+/// How a download is performed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownloadMethod {
+    /// curl through the site HTTP forward proxy (baseline).
+    HttpProxy,
+    /// stashcp → nearest cache via XRootD (the federation path).
+    Stash,
+}
+
+/// Squid relays objects above `max_object` without caching, and its
+/// single-stream relay degrades on multi-GB bodies (disk buffering;
+/// "proxies are optimized for small files", §1). Exponent calibrated
+/// against Table 3 — see EXPERIMENTS.md.
+pub const PROXY_RELAY_DEGRADE_EXP: f64 = 0.25;
+
+/// Background flows hammering each origin's DTN link (§4.1 realism).
+/// Four concurrent pulls leave ~2 Gbps of the 10 Gbps DTN for a test
+/// transfer — calibrated against Table 3 (see EXPERIMENTS.md).
+pub const DEFAULT_BACKGROUND_FLOWS: usize = 4;
+
+/// The assembled federation.
+pub struct FedSim {
+    pub cfg: FederationConfig,
+    pub net: Network,
+    pub topo: Topology,
+    /// site_idx → cache / proxy (present per config).
+    pub caches: HashMap<usize, CacheServer>,
+    pub proxies: HashMap<usize, ProxyServer>,
+    pub origins: Vec<Origin>,
+    pub namespace: Namespace,
+    pub redirectors: RedirectorPool,
+    pub geoip: NearestCache<GeoBackend>,
+    /// Cache-site indices aligned with `geoip.caches()` order.
+    geo_cache_sites: Vec<usize>,
+    // Monitoring pipeline.
+    pub collector: Collector,
+    pub bus: Bus,
+    agg_sub: Subscription,
+    pub aggregator: Aggregator,
+    pub now: SimTime,
+    rng: Pcg64,
+    /// Active background flows: flow → (origin_idx, link rebuilt on completion).
+    background: HashMap<FlowId, usize>,
+    next_user_id: u32,
+    next_file_id: u32,
+    /// Client tool costs (overridable for ablations).
+    pub startup_costs: StartupCosts,
+    pub host_env: HostEnvironment,
+}
+
+impl FedSim {
+    /// Build the federation from a config with the pure-rust geo
+    /// backend (use [`FedSim::build_with_backend`] for PJRT).
+    pub fn build(cfg: FederationConfig) -> Self {
+        Self::build_with_backend(cfg, GeoBackend::rust())
+    }
+
+    pub fn build_with_backend(cfg: FederationConfig, geo: GeoBackend) -> Self {
+        cfg.validate().expect("invalid federation config");
+        let mut net = Network::new();
+        let topo = Topology::build(&cfg, &mut net);
+
+        let mut caches = HashMap::new();
+        let mut proxies = HashMap::new();
+        let mut geo_sites = Vec::new();
+        let mut geo_cache_sites = Vec::new();
+        for (idx, s) in cfg.sites.iter().enumerate() {
+            if let Some(cc) = s.cache {
+                caches.insert(idx, CacheServer::new(s.name.clone(), cc));
+                geo_sites.push(CacheSite {
+                    name: s.name.clone(),
+                    lat: s.lat,
+                    lon: s.lon,
+                });
+                geo_cache_sites.push(idx);
+            }
+            if let Some(pc) = s.proxy {
+                proxies.insert(idx, ProxyServer::new(s.name.clone(), pc));
+            }
+        }
+
+        let mut namespace = Namespace::new();
+        let mut origins = Vec::new();
+        for (i, o) in cfg.origins.iter().enumerate() {
+            let id = OriginId(i);
+            namespace.register(&o.prefix, id).expect("validated config");
+            origins.push(Origin::new(id, o.name.clone(), o.prefix.clone()));
+        }
+
+        let mut collector = Collector::new();
+        let mut bus = Bus::new();
+        let agg_sub = bus.subscribe(TRANSFER_TOPIC);
+        for (idx, s) in cfg.sites.iter().enumerate() {
+            if s.cache.is_some() {
+                collector.register_server(idx as u32, s.name.clone());
+            }
+        }
+
+        let geoip = NearestCache::with_backend(geo_sites, geo);
+        let redirectors = RedirectorPool::new(cfg.redirector_instances);
+        let rng = Pcg64::new(cfg.seed, 0xfed);
+
+        FedSim {
+            net,
+            topo,
+            caches,
+            proxies,
+            origins,
+            namespace,
+            redirectors,
+            geoip,
+            geo_cache_sites,
+            collector,
+            bus,
+            agg_sub,
+            aggregator: Aggregator::default(),
+            now: SimTime::ZERO,
+            rng,
+            background: HashMap::new(),
+            next_user_id: 1,
+            next_file_id: 1,
+            startup_costs: StartupCosts::default(),
+            host_env: HostEnvironment::default(),
+            cfg,
+        }
+    }
+
+    // --- origin dataset management ----------------------------------------
+
+    /// Ensure a file exists at its authoritative origin (the drivers
+    /// materialise workload files on first reference).
+    pub fn ensure_file(&mut self, file: &FileRef) -> OriginId {
+        let oid = self
+            .namespace
+            .resolve(&file.path)
+            .unwrap_or_else(|| panic!("no origin serves {}", file.path));
+        let origin = &mut self.origins[oid.0];
+        let need_put = match origin.stat(&file.path) {
+            Ok(meta) => meta.mtime != file.version || meta.size != file.size.as_u64(),
+            Err(_) => true,
+        };
+        if need_put {
+            origin
+                .put_file(
+                    &file.path,
+                    FileMeta {
+                        size: file.size.as_u64(),
+                        mtime: file.version,
+                        perm: 0o644,
+                    },
+                )
+                .expect("path under origin prefix");
+        }
+        oid
+    }
+
+    // --- background origin load --------------------------------------------
+
+    /// Start `n` persistent flows on every origin's DTN link.
+    pub fn start_background_load(&mut self, n: usize) {
+        for o in 0..self.origins.len() {
+            for _ in 0..n {
+                self.spawn_background(o);
+            }
+        }
+    }
+
+    fn spawn_background(&mut self, origin_idx: usize) {
+        // Other users of the Stash filesystem pulling large datasets.
+        // They contend on the origin's DTN link only — their own
+        // last-mile legs are elsewhere and uncongested. Sizes are
+        // large so months-long simulations don't churn through
+        // millions of respawns; contention depends on the *count* of
+        // concurrent flows, not their length.
+        let bytes = self.rng.gen_range(20_000_000_000, 200_000_000_000);
+        let flow = self.net.start_flow(
+            FlowSpec {
+                path: vec![self.topo.origin_lan_link(origin_idx)],
+                bytes,
+                rate_cap: None,
+            },
+            self.now,
+        );
+        self.background.insert(flow, origin_idx);
+    }
+
+    /// Advance virtual time to `t`, restarting background flows as
+    /// they finish (each respawn starts at its predecessor's
+    /// completion instant, so origin load has no gaps). Returns
+    /// completions that were NOT background.
+    pub fn advance_to(&mut self, t: SimTime) -> Vec<crate::netsim::Completion> {
+        let mut foreground = Vec::new();
+        loop {
+            match self.net.next_completion() {
+                Some(tc) if tc <= t => {
+                    let completions = self.net.advance(tc);
+                    self.now = tc;
+                    for c in completions {
+                        if let Some(origin_idx) = self.background.remove(&c.flow) {
+                            self.spawn_background(origin_idx);
+                        } else {
+                            foreground.push(c);
+                        }
+                    }
+                }
+                _ => break,
+            }
+        }
+        self.net.advance(t);
+        self.now = self.now.max(t);
+        foreground
+    }
+
+    /// Run the network until `flow` completes; background flows are
+    /// restarted along the way. Returns the completion time.
+    fn run_until_flow_done(&mut self, flow: FlowId) -> SimTime {
+        let mut guard = 0u64;
+        loop {
+            guard += 1;
+            if guard > 1_000_000 {
+                panic!(
+                    "run_until_flow_done stuck waiting for {flow:?} at {}: {:?}",
+                    self.now,
+                    self.net.flows_snapshot()
+                );
+            }
+            let t = self
+                .net
+                .next_completion()
+                .expect("active flow must complete");
+            let completions = self.net.advance(t);
+            self.now = t;
+            let mut done = false;
+            for c in completions {
+                if c.flow == flow {
+                    done = true;
+                } else if let Some(origin_idx) = self.background.remove(&c.flow) {
+                    self.spawn_background(origin_idx);
+                }
+            }
+            if done {
+                return self.now;
+            }
+        }
+    }
+
+    // --- GeoIP -------------------------------------------------------------
+
+    /// Pick the nearest cache for a worker at `site_idx`, given live
+    /// cache load factors (the CVMFS GeoIP API call stashcp makes).
+    pub fn nearest_cache_site(&mut self, site_idx: usize) -> usize {
+        let s = &self.cfg.sites[site_idx];
+        let loads: Vec<f64> = self
+            .geo_cache_sites
+            .iter()
+            .map(|idx| self.caches[idx].load_factor())
+            .collect();
+        let ranked = self.geoip.rank(s.lat, s.lon, &loads);
+        self.geo_cache_sites[ranked[0].0]
+    }
+
+    // --- monitoring --------------------------------------------------------
+
+    fn emit_transfer_monitoring(
+        &mut self,
+        cache_site: usize,
+        site_idx: usize,
+        path: &str,
+        file_size: u64,
+        bytes_read: u64,
+        opened_at: SimTime,
+        closed_at: SimTime,
+        protocol: Protocol,
+    ) {
+        let server_id = cache_site as u32;
+        let user_id = self.next_user_id;
+        self.next_user_id += 1;
+        let file_id = self.next_file_id;
+        self.next_file_id += 1;
+        let client_host = format!("worker.{}.osg", self.cfg.sites[site_idx].name);
+        let chunk = self.caches[&cache_site].cfg.chunk_size.as_u64().max(1);
+        let packets = [
+            (
+                opened_at,
+                Packet::UserLogin {
+                    user_id,
+                    protocol,
+                    ipv6: self.rng.gen_bool(0.35),
+                    client_host,
+                },
+            ),
+            (
+                opened_at,
+                Packet::FileOpen {
+                    file_id,
+                    user_id,
+                    file_size,
+                    path: path.to_string(),
+                },
+            ),
+            (
+                closed_at,
+                Packet::FileClose {
+                    file_id,
+                    bytes_read,
+                    bytes_written: 0,
+                    read_ops: bytes_read.div_ceil(chunk) as u32,
+                    write_ops: 0,
+                },
+            ),
+        ];
+        for (timestamp, packet) in packets {
+            let env = Envelope {
+                server_id,
+                timestamp,
+                packet,
+            };
+            // Sim mode feeds the decoded packet straight in; the same
+            // bytes go over real UDP in live mode.
+            self.collector.ingest(env, &mut self.bus);
+        }
+        self.aggregator.consume(&mut self.bus, &mut self.agg_sub);
+        // Bound bus memory in months-long simulations.
+        self.bus.compact(TRANSFER_TOPIC);
+    }
+
+    // --- downloads -----------------------------------------------------------
+
+    /// Effective squid relay ceiling for an object of `size` bytes.
+    fn proxy_relay_cap_bps(proxy: &ProxyServer, size: u64) -> f64 {
+        let base = proxy.cfg.per_conn_gbps * 1e9 / 8.0;
+        let max_obj = proxy.cfg.max_object.as_u64() as f64;
+        if size as f64 <= max_obj {
+            base
+        } else {
+            base * (max_obj / size as f64).powf(PROXY_RELAY_DEGRADE_EXP)
+        }
+    }
+
+    /// Perform one blocking download of `file` by a worker at
+    /// `site_idx`. Advances `self.now` through every phase.
+    pub fn download(
+        &mut self,
+        site_idx: usize,
+        file: &FileRef,
+        method: DownloadMethod,
+    ) -> TransferRecord {
+        let origin_id = self.ensure_file(file);
+        match method {
+            DownloadMethod::HttpProxy => self.download_via_proxy(site_idx, file, origin_id),
+            DownloadMethod::Stash => self.download_via_stash(site_idx, file, origin_id),
+        }
+    }
+
+    fn download_via_proxy(
+        &mut self,
+        site_idx: usize,
+        file: &FileRef,
+        origin_id: OriginId,
+    ) -> TransferRecord {
+        let start = self.now;
+        let size = file.size.as_u64();
+        let url = curl::url_for(&file.path);
+        // curl startup; proxy address comes from the environment (§5).
+        self.now += self.startup_costs.curl_startup;
+
+        // Process any completions the latency jump passed over (keeps
+        // background load respawning on schedule).
+        self.advance_to(self.now);
+
+        let proxy = self.proxies.get_mut(&site_idx).expect("compute site has proxy");
+        let lookup = proxy.lookup(&url, size, self.now);
+        let relay_cap = Self::proxy_relay_cap_bps(proxy, size);
+        let worker_route = self.topo.route(Endpoint::Proxy(site_idx), Endpoint::Worker(site_idx));
+
+        let (links, rtt_ms, hit) = match lookup {
+            ProxyLookup::Hit => (worker_route.links.clone(), worker_route.rtt_ms, true),
+            ProxyLookup::Miss { .. } => {
+                // Proxy streams origin → proxy → worker.
+                let up = self
+                    .topo
+                    .route(Endpoint::Origin(origin_id.0), Endpoint::Proxy(site_idx));
+                let mut links = up.links;
+                links.extend(&worker_route.links);
+                (links, up.rtt_ms + worker_route.rtt_ms, false)
+            }
+        };
+        // Connection establishment at the path RTT.
+        self.now += Duration::from_secs_f64(rtt_ms / 1e3 * crate::sim::estimate::HANDSHAKE_ROUNDS);
+        self.advance_to(self.now);
+
+        let flow = self.net.start_flow(
+            FlowSpec {
+                path: links,
+                bytes: size.max(1),
+                rate_cap: Some(relay_cap),
+            },
+            self.now,
+        );
+        let done = self.run_until_flow_done(flow);
+
+        // Post-transfer bookkeeping.
+        if !hit {
+            self.origins[origin_id.0].bytes_served += size;
+            let proxy = self.proxies.get_mut(&site_idx).expect("proxy");
+            if let ProxyLookup::Miss { cacheable: true, .. } = lookup {
+                proxy.commit(&url, size, done);
+            }
+        }
+
+        TransferRecord {
+            path: file.path.clone(),
+            bytes: size,
+            method: Method::HttpProxy,
+            cache_hit: hit,
+            duration: done - start,
+        }
+    }
+
+    fn download_via_stash(
+        &mut self,
+        site_idx: usize,
+        file: &FileRef,
+        origin_id: OriginId,
+    ) -> TransferRecord {
+        let start = self.now;
+        let size = file.size.as_u64();
+        // stashcp walks its fallback chain; the first usable method
+        // here is XRootD (attempt index from the chain).
+        let chain = stashcp::method_chain(self.host_env);
+        let attempt = chain
+            .iter()
+            .position(|m| *m == Method::Xrootd || *m == Method::HttpCache)
+            .unwrap_or(0);
+        let method = chain[attempt];
+        self.now += stashcp::startup_latency(&self.startup_costs, method, attempt);
+
+        // Process any completions the latency jump passed over.
+        self.advance_to(self.now);
+
+        // GeoIP nearest-cache decision (a remote query — §5's startup
+        // cost is charged in startup_latency above).
+        let cache_site = self.nearest_cache_site(site_idx);
+
+        // Ask the cache for the file.
+        let cache_route = self
+            .topo
+            .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
+        self.now += Duration::from_secs_f64(cache_route.rtt_ms / 1e3);
+
+        let cache = self.caches.get_mut(&cache_site).expect("cache site");
+        let plan = cache.plan_read(&file.path, 0, size, size, file.version, self.now);
+        let per_conn = cache.cfg.per_conn_gbps * 1e9 / 8.0;
+        let whole_hit = plan.miss_bytes == 0;
+
+        let opened_at = self.now;
+        let done = if whole_hit {
+            // Pure cache hit: cache → worker.
+            self.advance_to(self.now);
+            let flow = self.net.start_flow(
+                FlowSpec {
+                    path: cache_route.links.clone(),
+                    bytes: size.max(1),
+                    rate_cap: Some(per_conn),
+                },
+                self.now,
+            );
+            let done = self.run_until_flow_done(flow);
+            self.caches.get_mut(&cache_site).unwrap().record_served(size, 0);
+            done
+        } else {
+            // Miss: cache consults the redirector, which broadcasts to
+            // origins (one WAN round trip to the redirector + one to
+            // the origins).
+            let located = self
+                .redirectors
+                .locate(&file.path, &mut self.origins, self.now)
+                .expect("redirector pool up")
+                .expect("file registered at an origin");
+            debug_assert_eq!(located.origin, origin_id);
+            let origin_route = self
+                .topo
+                .route(Endpoint::Origin(origin_id.0), Endpoint::Cache(cache_site));
+            self.now += Duration::from_secs_f64(2.0 * origin_route.rtt_ms / 1e3);
+
+            let cache = self.caches.get_mut(&cache_site).unwrap();
+            cache.begin_fetch(&file.path, &plan.fetch);
+
+            // Stream origin → cache → worker.
+            self.advance_to(self.now);
+            let mut links = origin_route.links.clone();
+            links.extend(&cache_route.links);
+            let flow = self.net.start_flow(
+                FlowSpec {
+                    path: links,
+                    bytes: size.max(1),
+                    rate_cap: Some(per_conn),
+                },
+                self.now,
+            );
+            let done = self.run_until_flow_done(flow);
+
+            let cache = self.caches.get_mut(&cache_site).unwrap();
+            cache.commit_chunks(&file.path, &plan.fetch, done);
+            cache.record_served(plan.hit_bytes, plan.miss_bytes);
+            self.origins[origin_id.0].bytes_served += plan.miss_bytes;
+            done
+        };
+
+        self.emit_transfer_monitoring(
+            cache_site,
+            site_idx,
+            &file.path,
+            size,
+            size,
+            opened_at,
+            done,
+            if method == Method::HttpCache {
+                Protocol::Http
+            } else {
+                Protocol::Xrootd
+            },
+        );
+
+        TransferRecord {
+            path: file.path.clone(),
+            bytes: size,
+            method: Method::Xrootd,
+            cache_hit: whole_hit,
+            duration: done - start,
+        }
+    }
+
+    /// WAN link byte counter of a site (Fig 5's graph source).
+    pub fn wan_bytes(&self, site_idx: usize) -> f64 {
+        self.net.link_bytes_carried(self.topo.wan_link(site_idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+    use crate::util::ByteSize;
+
+    fn fed() -> FedSim {
+        FedSim::build(paper_federation())
+    }
+
+    fn file(size: u64) -> FileRef {
+        FileRef {
+            path: "/ospool/ligo/data/f000000.dat".into(),
+            size: ByteSize(size),
+            version: 1,
+        }
+    }
+
+    #[test]
+    fn builds_paper_topology() {
+        let f = fed();
+        assert_eq!(f.caches.len(), 10);
+        assert_eq!(f.proxies.len(), 5);
+        assert_eq!(f.origins.len(), 10);
+        assert_eq!(f.redirectors.instances.len(), 2);
+        assert_eq!(f.geoip.caches().len(), 10);
+    }
+
+    #[test]
+    fn stash_cold_then_hot_is_faster() {
+        let mut f = fed();
+        let site = f.topo.site_index("syracuse").unwrap();
+        let fr = file(2_335_000_000);
+        let cold = f.download(site, &fr, DownloadMethod::Stash);
+        assert!(!cold.cache_hit);
+        let hot = f.download(site, &fr, DownloadMethod::Stash);
+        assert!(hot.cache_hit, "second stash download must hit");
+        assert!(
+            hot.duration < cold.duration,
+            "hot {} < cold {}",
+            hot.duration,
+            cold.duration
+        );
+    }
+
+    #[test]
+    fn proxy_caches_small_not_large() {
+        let mut f = fed();
+        let site = f.topo.site_index("nebraska").unwrap();
+        let small = file(100_000_000);
+        let c1 = f.download(site, &small, DownloadMethod::HttpProxy);
+        assert!(!c1.cache_hit);
+        let c2 = f.download(site, &small, DownloadMethod::HttpProxy);
+        assert!(c2.cache_hit, "100 MB object must be cached");
+        // 2.335 GB exceeds max_object (1 GB): never cached (§5).
+        let big = FileRef {
+            path: "/ospool/ligo/data/f000001.dat".into(),
+            size: ByteSize(2_335_000_000),
+            version: 1,
+        };
+        let b1 = f.download(site, &big, DownloadMethod::HttpProxy);
+        let b2 = f.download(site, &big, DownloadMethod::HttpProxy);
+        assert!(!b1.cache_hit && !b2.cache_hit);
+    }
+
+    #[test]
+    fn small_file_faster_via_proxy() {
+        // Fig 8's shape: 5.797 KB via proxy beats stashcp's startup.
+        let mut f = fed();
+        let site = f.topo.site_index("syracuse").unwrap();
+        let tiny = file(5_797);
+        let http = f.download(site, &tiny, DownloadMethod::HttpProxy);
+        let stash = f.download(site, &tiny, DownloadMethod::Stash);
+        assert!(
+            http.duration.as_secs_f64() * 3.0 < stash.duration.as_secs_f64(),
+            "http {} vs stash {}",
+            http.duration,
+            stash.duration
+        );
+    }
+
+    #[test]
+    fn colorado_uses_remote_cache_and_crosses_wan() {
+        let mut f = fed();
+        let col = f.topo.site_index("colorado").unwrap();
+        let nearest = f.nearest_cache_site(col);
+        assert_ne!(nearest, col, "colorado has no local cache");
+        let before = f.wan_bytes(col);
+        f.download(col, &file(100_000_000), DownloadMethod::Stash);
+        assert!(f.wan_bytes(col) > before, "stash at colorado crosses its WAN");
+    }
+
+    #[test]
+    fn syracuse_hot_hits_stay_on_lan() {
+        let mut f = fed();
+        let syr = f.topo.site_index("syracuse").unwrap();
+        let fr = file(500_000_000);
+        f.download(syr, &fr, DownloadMethod::Stash);
+        let wan_after_cold = f.wan_bytes(syr);
+        f.download(syr, &fr, DownloadMethod::Stash);
+        let wan_after_hot = f.wan_bytes(syr);
+        assert!(
+            wan_after_hot - wan_after_cold < 1_000_000.0,
+            "hot hit must not cross the WAN (Δ={})",
+            wan_after_hot - wan_after_cold
+        );
+    }
+
+    #[test]
+    fn monitoring_pipeline_records_stash_downloads() {
+        let mut f = fed();
+        let site = f.topo.site_index("nebraska").unwrap();
+        f.download(site, &file(1_000_000), DownloadMethod::Stash);
+        f.download(site, &file(1_000_000), DownloadMethod::Stash);
+        assert_eq!(f.aggregator.reports, 2);
+        let usage = f.aggregator.experiment_usage("ligo").unwrap();
+        assert_eq!(usage.bytes_read, 2_000_000);
+        assert_eq!(f.collector.stats.reports_published, 2);
+    }
+
+    #[test]
+    fn background_load_slows_cold_fetches() {
+        let mut fast = fed();
+        let mut loaded = fed();
+        // Heavy load: 12 pulls shrink the origin DTN share below every
+        // other bottleneck on the test path.
+        loaded.start_background_load(12);
+        let site = fast.topo.site_index("bellarmine").unwrap();
+        let fr = file(2_335_000_000);
+        let t_fast = fast.download(site, &fr, DownloadMethod::Stash).duration;
+        let t_loaded = loaded.download(site, &fr, DownloadMethod::Stash).duration;
+        assert!(
+            t_loaded.as_secs_f64() > t_fast.as_secs_f64() * 1.5,
+            "origin contention must bite: {t_fast} vs {t_loaded}"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut f = fed();
+            f.start_background_load(4);
+            let site = f.topo.site_index("chicago").unwrap();
+            let mut out = Vec::new();
+            for i in 0..5 {
+                let fr = FileRef {
+                    path: format!("/ospool/des/data/f{i:06}.dat"),
+                    size: ByteSize(50_000_000 * (i + 1)),
+                    version: 1,
+                };
+                out.push(f.download(site, &fr, DownloadMethod::Stash).duration);
+            }
+            out
+        };
+        assert_eq!(run(), run(), "same seed ⇒ identical timings");
+    }
+}

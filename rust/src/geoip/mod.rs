@@ -1,0 +1,263 @@
+//! GeoIP service: nearest-cache selection.
+//!
+//! Paper §3: "The clients are responsible for finding the nearest cache
+//! using GeoIP" — CVMFS ships a GeoIP API and `stashcp` reuses it. The
+//! production service resolves a client IP to coordinates with a
+//! MaxMind database; our substitute resolves a *site name* to the
+//! coordinates of the paper's real locations (DESIGN.md §2 row 10).
+//!
+//! Distance scoring runs in two interchangeable implementations:
+//! * [`haversine_km`] — the pure-rust reference;
+//! * [`crate::runtime::GeoScorer`] — the AOT-compiled JAX/Pallas kernel
+//!   (`artifacts/geo_score.hlo.txt`), used by the batch service.
+//!
+//! [`NearestCache`] ranks caches by great-circle distance plus a load
+//! penalty, mirroring how the production GeoIP API breaks ties between
+//! nearby caches.
+
+use crate::config::FederationConfig;
+
+/// Mean Earth radius (km), IUGG value — must match `kernels/ref.py`.
+pub const EARTH_RADIUS_KM: f64 = 6_371.0088;
+
+/// Great-circle distance between two (lat, lon) points in degrees.
+pub fn haversine_km(lat1: f64, lon1: f64, lat2: f64, lon2: f64) -> f64 {
+    let (phi1, phi2) = (lat1.to_radians(), lat2.to_radians());
+    let dphi = (lat2 - lat1).to_radians();
+    let dlambda = (lon2 - lon1).to_radians();
+    let a = (dphi / 2.0).sin().powi(2) + phi1.cos() * phi2.cos() * (dlambda / 2.0).sin().powi(2);
+    2.0 * EARTH_RADIUS_KM * a.sqrt().min(1.0).asin()
+}
+
+/// Speed-of-light-in-fiber RTT estimate for a great-circle distance,
+/// plus a fixed routing/processing overhead. (~2/3 c, out and back.)
+pub fn rtt_ms_for_km(km: f64) -> f64 {
+    km / 100.0 + 4.0
+}
+
+/// A cache entry in the geo database.
+#[derive(Debug, Clone)]
+pub struct CacheSite {
+    pub name: String,
+    pub lat: f64,
+    pub lon: f64,
+}
+
+/// Scoring backend: given client coordinates and the cache table,
+/// produce a score per cache (lower = better). Implemented by the
+/// pure-rust reference and by the PJRT-backed executor.
+pub trait GeoScoreBackend {
+    /// `clients`: (lat, lon) per client; `loads`: current load factor
+    /// per cache in [0, 1]. Returns `scores[client][cache]`.
+    fn score(
+        &mut self,
+        clients: &[(f64, f64)],
+        caches: &[CacheSite],
+        loads: &[f64],
+    ) -> Vec<Vec<f64>>;
+}
+
+/// Pure-rust reference backend: distance + load penalty.
+///
+/// `score = distance_km + load * LOAD_PENALTY_KM` — a loaded cache is
+/// only preferred while a less-loaded one is within `LOAD_PENALTY_KM`.
+/// Must match `geo_score` in `python/compile/model.py` exactly.
+pub struct RustGeoBackend;
+
+/// Kilometres of distance one unit of load is worth.
+pub const LOAD_PENALTY_KM: f64 = 1_500.0;
+
+impl GeoScoreBackend for RustGeoBackend {
+    fn score(
+        &mut self,
+        clients: &[(f64, f64)],
+        caches: &[CacheSite],
+        loads: &[f64],
+    ) -> Vec<Vec<f64>> {
+        assert_eq!(caches.len(), loads.len());
+        clients
+            .iter()
+            .map(|&(lat, lon)| {
+                caches
+                    .iter()
+                    .zip(loads)
+                    .map(|(c, &load)| {
+                        haversine_km(lat, lon, c.lat, c.lon) + load * LOAD_PENALTY_KM
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// The nearest-cache service (the CVMFS GeoIP API substitute).
+pub struct NearestCache<B: GeoScoreBackend> {
+    caches: Vec<CacheSite>,
+    backend: B,
+    /// Lookups served (monitoring).
+    pub lookups: u64,
+}
+
+impl NearestCache<RustGeoBackend> {
+    /// Build from a federation config with the pure-rust backend.
+    pub fn from_config(cfg: &FederationConfig) -> Self {
+        let caches = cfg
+            .cache_sites()
+            .map(|s| CacheSite {
+                name: s.name.clone(),
+                lat: s.lat,
+                lon: s.lon,
+            })
+            .collect();
+        NearestCache {
+            caches,
+            backend: RustGeoBackend,
+            lookups: 0,
+        }
+    }
+}
+
+impl<B: GeoScoreBackend> NearestCache<B> {
+    pub fn with_backend(caches: Vec<CacheSite>, backend: B) -> Self {
+        NearestCache {
+            caches,
+            backend,
+            lookups: 0,
+        }
+    }
+
+    pub fn caches(&self) -> &[CacheSite] {
+        &self.caches
+    }
+
+    /// Rank all caches for one client: returns cache indices, best
+    /// first, with their scores.
+    pub fn rank(&mut self, lat: f64, lon: f64, loads: &[f64]) -> Vec<(usize, f64)> {
+        self.lookups += 1;
+        let scores = self.backend.score(&[(lat, lon)], &self.caches, loads);
+        let mut ranked: Vec<(usize, f64)> = scores[0].iter().copied().enumerate().collect();
+        // Stable ordering: score, then index (determinism when equal).
+        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        ranked
+    }
+
+    /// The single nearest cache for a client (unloaded).
+    pub fn nearest(&mut self, lat: f64, lon: f64) -> (usize, f64) {
+        let loads = vec![0.0; self.caches.len()];
+        self.rank(lat, lon, &loads)[0]
+    }
+
+    /// Batch ranking for many clients at once — the shape served by the
+    /// AOT kernel (64 clients × 16 caches per invocation).
+    pub fn rank_batch(
+        &mut self,
+        clients: &[(f64, f64)],
+        loads: &[f64],
+    ) -> Vec<Vec<(usize, f64)>> {
+        self.lookups += clients.len() as u64;
+        let scores = self.backend.score(clients, &self.caches, loads);
+        scores
+            .into_iter()
+            .map(|row| {
+                let mut ranked: Vec<(usize, f64)> = row.into_iter().enumerate().collect();
+                ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+                ranked
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+
+    #[test]
+    fn haversine_known_distances() {
+        // Chicago (UChicago) to Lincoln NE — about 750 km.
+        let d = haversine_km(41.7886, -87.5987, 40.8202, -96.7005);
+        assert!((700.0..820.0).contains(&d), "chicago-lincoln {d} km");
+        // Amsterdam to New York — about 5 860 km.
+        let d = haversine_km(52.3676, 4.9041, 40.7128, -74.0060);
+        assert!((5_700.0..6_000.0).contains(&d), "ams-nyc {d} km");
+        // Zero distance.
+        assert!(haversine_km(10.0, 20.0, 10.0, 20.0) < 1e-9);
+    }
+
+    #[test]
+    fn haversine_symmetry() {
+        use crate::util::prop::check;
+        check("haversine symmetry + range", 100, |g| {
+            let a = (g.f64(-89.0, 89.0), g.f64(-180.0, 180.0));
+            let b = (g.f64(-89.0, 89.0), g.f64(-180.0, 180.0));
+            let d1 = haversine_km(a.0, a.1, b.0, b.1);
+            let d2 = haversine_km(b.0, b.1, a.0, a.1);
+            let half_circumference = std::f64::consts::PI * EARTH_RADIUS_KM;
+            (
+                (d1 - d2).abs() < 1e-9 && (0.0..=half_circumference + 1.0).contains(&d1),
+                format!("a={a:?} b={b:?} d1={d1} d2={d2}"),
+            )
+        });
+    }
+
+    #[test]
+    fn syracuse_workers_pick_syracuse_cache() {
+        let cfg = paper_federation();
+        let mut svc = NearestCache::from_config(&cfg);
+        let s = cfg.site("syracuse").unwrap();
+        let (idx, score) = svc.nearest(s.lat, s.lon);
+        assert_eq!(svc.caches()[idx].name, "syracuse");
+        assert!(score < 1.0, "on-site cache at ~0 km, got {score}");
+    }
+
+    #[test]
+    fn colorado_prefers_midwest_over_coasts() {
+        let cfg = paper_federation();
+        let mut svc = NearestCache::from_config(&cfg);
+        let s = cfg.site("colorado").unwrap();
+        let ranked = svc.rank(s.lat, s.lon, &vec![0.0; svc.caches().len()]);
+        let best = svc.caches()[ranked[0].0].name.clone();
+        assert!(
+            best == "i2-kansascity" || best == "nebraska",
+            "colorado nearest was {best}"
+        );
+        // Amsterdam must rank last from Colorado.
+        let worst = &svc.caches()[ranked.last().unwrap().0].name;
+        assert_eq!(worst, "amsterdam");
+    }
+
+    #[test]
+    fn load_penalty_shifts_choice() {
+        let cfg = paper_federation();
+        let mut svc = NearestCache::from_config(&cfg);
+        let s = cfg.site("colorado").unwrap();
+        let n = svc.caches().len();
+        let unloaded = svc.rank(s.lat, s.lon, &vec![0.0; n]);
+        let best = unloaded[0].0;
+        let second = unloaded[1].0;
+        // Saturate the best cache; the second should win now.
+        let mut loads = vec![0.0; n];
+        loads[best] = 1.0;
+        let reranked = svc.rank(s.lat, s.lon, &loads);
+        assert_eq!(reranked[0].0, second);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let cfg = paper_federation();
+        let mut svc = NearestCache::from_config(&cfg);
+        let clients: Vec<(f64, f64)> = cfg.compute_sites().map(|s| (s.lat, s.lon)).collect();
+        let loads = vec![0.0; svc.caches().len()];
+        let batch = svc.rank_batch(&clients, &loads);
+        for (i, &(lat, lon)) in clients.iter().enumerate() {
+            let single = svc.rank(lat, lon, &loads);
+            assert_eq!(batch[i][0].0, single[0].0);
+        }
+    }
+
+    #[test]
+    fn rtt_estimate_monotone() {
+        assert!(rtt_ms_for_km(0.0) < rtt_ms_for_km(100.0));
+        assert!((rtt_ms_for_km(1000.0) - 14.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,56 @@
+//! # StashCache — a distributed caching federation
+//!
+//! Reproduction of *StashCache: A Distributed Caching Federation for the
+//! Open Science Grid* (Weitzel et al., PEARC '19) as a three-layer
+//! rust + JAX + Pallas stack.
+//!
+//! The federation has four components (paper §3, Figure 1):
+//!
+//! * **Data origins** ([`origin`]) — the authoritative source of data,
+//!   registered for a subset of the global [`namespace`].
+//! * **Redirector** ([`redirector`]) — the data-discovery service; caches
+//!   query it to find which origin holds a path. Deployed as a
+//!   round-robin HA pair.
+//! * **Data caches** ([`cache`]) — regional chunk caches that capture
+//!   client requests, fetch misses from origins via the redirector, and
+//!   manage cache space with watermark LRU eviction.
+//! * **Clients** ([`client`]) — `stashcp` (3-method fallback), a
+//!   CVMFS-like chunked POSIX reader, and a plain curl/HTTP client. The
+//!   client picks the nearest cache by GeoIP ([`geoip`]).
+//!
+//! The evaluation baseline — site squid HTTP forward proxies — is in
+//! [`proxy`]. Usage accounting flows through the XRootD-style
+//! [`monitoring`] pipeline (UDP packets → collector → bus → aggregator).
+//!
+//! Because the paper's testbed is the production OSG WAN, the links and
+//! sites are reproduced by a deterministic flow-level discrete-event
+//! simulator ([`netsim`]); the same services also run as real TCP/UDP
+//! processes on loopback ([`live`]). Workloads, the DAGMan-style test
+//! scenario, and the drivers that regenerate every paper table/figure
+//! live in [`sim`] and [`report`].
+//!
+//! Numeric hot-spots (GeoIP nearest-cache scoring, monitoring histogram
+//! aggregation, WAN transfer-time estimation) are AOT-compiled from
+//! JAX + Pallas to HLO at build time and executed from rust through
+//! PJRT ([`runtime`]). Python is never on the request path.
+
+pub mod cache;
+pub mod client;
+pub mod config;
+pub mod federation;
+pub mod geoip;
+pub mod live;
+pub mod metrics;
+pub mod monitoring;
+pub mod namespace;
+pub mod netsim;
+pub mod origin;
+pub mod proxy;
+pub mod redirector;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Library-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,26 @@
+//! Live mode: the federation as real TCP/UDP processes.
+//!
+//! The simulator (DESIGN.md §2 row 1) answers the paper's *performance*
+//! questions; this module proves the protocol stack is real. The same
+//! service state machines (origin, redirector, cache, monitoring
+//! collector) run behind actual sockets on loopback:
+//!
+//! * origins serve [`crate::origin::content`] bytes over a
+//!   length-prefixed TCP protocol ([`protocol`]);
+//! * the redirector answers location queries by querying origins;
+//! * caches capture client requests, fetch misses from the located
+//!   origin, store real bytes, and emit **real UDP monitoring
+//!   packets** (the §3.2 format) to the collector daemon;
+//! * `stashcp_live` picks the nearest cache by GeoIP, downloads, and
+//!   verifies content checksums.
+//!
+//! The offline crate set has no tokio (DESIGN.md §2 row 16), so
+//! concurrency is thread-per-connection over `std::net` — the same
+//! architecture XRootD itself uses.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::stashcp_live;
+pub use server::{CollectorDaemon, LiveCache, LiveOrigin, LiveRedirector};

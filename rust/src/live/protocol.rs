@@ -1,0 +1,194 @@
+//! Wire protocol for live-mode TCP services.
+//!
+//! XRootD's wire format is not the paper's contribution, so live mode
+//! speaks a minimal length-prefixed binary protocol with the same
+//! roles: stat, read, locate. Frames:
+//!
+//! ```text
+//! frame:    len u32 | kind u8 | body...
+//! Stat:     pathlen u16 | path
+//! Read:     offset u64 | len u64 | pathlen u16 | path
+//! Locate:   pathlen u16 | path
+//! StatOk:   size u64 | mtime u64
+//! Data:     payload...            (exactly the requested bytes)
+//! Located:  addrlen u16 | addr    (host:port of the origin)
+//! Error:    msglen u16 | msg
+//! ```
+
+use byteorder::{BigEndian, ReadBytesExt, WriteBytesExt};
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+
+/// Maximum frame size (64 MiB — bigger than any chunk we move).
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// A protocol message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Msg {
+    Stat { path: String },
+    Read { offset: u64, len: u64, path: String },
+    Locate { path: String },
+    StatOk { size: u64, mtime: u64 },
+    Data(Vec<u8>),
+    Located { addr: String },
+    Error(String),
+}
+
+const K_STAT: u8 = 1;
+const K_READ: u8 = 2;
+const K_LOCATE: u8 = 3;
+const K_STATOK: u8 = 4;
+const K_DATA: u8 = 5;
+const K_LOCATED: u8 = 6;
+const K_ERROR: u8 = 7;
+
+/// Send one frame.
+pub fn send(stream: &mut TcpStream, msg: &Msg) -> std::io::Result<()> {
+    let mut body = Vec::new();
+    match msg {
+        Msg::Stat { path } => {
+            body.write_u8(K_STAT)?;
+            put_str(&mut body, path)?;
+        }
+        Msg::Read { offset, len, path } => {
+            body.write_u8(K_READ)?;
+            body.write_u64::<BigEndian>(*offset)?;
+            body.write_u64::<BigEndian>(*len)?;
+            put_str(&mut body, path)?;
+        }
+        Msg::Locate { path } => {
+            body.write_u8(K_LOCATE)?;
+            put_str(&mut body, path)?;
+        }
+        Msg::StatOk { size, mtime } => {
+            body.write_u8(K_STATOK)?;
+            body.write_u64::<BigEndian>(*size)?;
+            body.write_u64::<BigEndian>(*mtime)?;
+        }
+        Msg::Data(payload) => {
+            body.write_u8(K_DATA)?;
+            body.extend_from_slice(payload);
+        }
+        Msg::Located { addr } => {
+            body.write_u8(K_LOCATED)?;
+            put_str(&mut body, addr)?;
+        }
+        Msg::Error(e) => {
+            body.write_u8(K_ERROR)?;
+            put_str(&mut body, e)?;
+        }
+    }
+    stream.write_u32::<BigEndian>(body.len() as u32)?;
+    stream.write_all(&body)?;
+    stream.flush()
+}
+
+/// Receive one frame.
+pub fn recv(stream: &mut TcpStream) -> std::io::Result<Msg> {
+    let len = stream.read_u32::<BigEndian>()?;
+    if len == 0 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body)?;
+    let mut cur = std::io::Cursor::new(&body[..]);
+    let kind = cur.read_u8()?;
+    let msg = match kind {
+        K_STAT => Msg::Stat { path: get_str(&mut cur)? },
+        K_READ => {
+            let offset = cur.read_u64::<BigEndian>()?;
+            let len = cur.read_u64::<BigEndian>()?;
+            Msg::Read { offset, len, path: get_str(&mut cur)? }
+        }
+        K_LOCATE => Msg::Locate { path: get_str(&mut cur)? },
+        K_STATOK => Msg::StatOk {
+            size: cur.read_u64::<BigEndian>()?,
+            mtime: cur.read_u64::<BigEndian>()?,
+        },
+        K_DATA => {
+            let pos = cur.position() as usize;
+            Msg::Data(body[pos..].to_vec())
+        }
+        K_LOCATED => Msg::Located { addr: get_str(&mut cur)? },
+        K_ERROR => Msg::Error(get_str(&mut cur)?),
+        other => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unknown message kind {other}"),
+            ))
+        }
+    };
+    Ok(msg)
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) -> std::io::Result<()> {
+    buf.write_u16::<BigEndian>(s.len().min(u16::MAX as usize) as u16)?;
+    buf.extend_from_slice(&s.as_bytes()[..s.len().min(u16::MAX as usize)]);
+    Ok(())
+}
+
+fn get_str(cur: &mut std::io::Cursor<&[u8]>) -> std::io::Result<String> {
+    let len = cur.read_u16::<BigEndian>()? as usize;
+    let mut bytes = vec![0u8; len];
+    cur.read_exact(&mut bytes)?;
+    String::from_utf8(bytes)
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad utf8"))
+}
+
+/// Round-trip a request over a fresh connection.
+pub fn request(addr: &str, msg: &Msg) -> std::io::Result<Msg> {
+    let mut stream = TcpStream::connect(addr)?;
+    send(&mut stream, msg)?;
+    recv(&mut stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn frames_roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            for _ in 0..5 {
+                let m = recv(&mut s).unwrap();
+                send(&mut s, &m).unwrap();
+            }
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let msgs = [
+            Msg::Stat { path: "/ospool/ligo/f".into() },
+            Msg::Read { offset: 7, len: 42, path: "/p".into() },
+            Msg::Locate { path: "/x".into() },
+            Msg::Data(vec![1, 2, 3, 255]),
+            Msg::Error("nope".into()),
+        ];
+        for m in &msgs {
+            send(&mut c, m).unwrap();
+            assert_eq!(&recv(&mut c).unwrap(), m);
+        }
+        echo.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            recv(&mut s)
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        use byteorder::WriteBytesExt;
+        c.write_u32::<BigEndian>(MAX_FRAME + 1).unwrap();
+        use std::io::Write;
+        c.flush().unwrap();
+        assert!(t.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,552 @@
+//! Live-mode services: origin, redirector, cache, monitoring collector.
+//!
+//! Thread-per-connection over `std::net`. Each service owns a
+//! listener thread; `stop()` flips an atomic and nudges the listener
+//! awake. State shared with handler threads sits behind mutexes —
+//! coarse, but the request path does one lock per frame.
+
+use super::protocol::{self, Msg};
+use crate::cache::CacheServer;
+use crate::config::CacheConfig;
+use crate::monitoring::aggregator::Aggregator;
+use crate::monitoring::bus::Bus;
+use crate::monitoring::collector::{Collector, TRANSFER_TOPIC};
+use crate::monitoring::packets::{self, Envelope, Packet, Protocol};
+use crate::namespace::{Namespace, OriginId};
+use crate::origin::{content, FileMeta, Origin};
+use crate::util::SimTime;
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream, UdpSocket};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+fn spawn_listener(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    handler: impl Fn(TcpStream) + Send + Sync + 'static,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let handler = Arc::new(handler);
+        for conn in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let h = Arc::clone(&handler);
+                    std::thread::spawn(move || h(stream));
+                }
+                Err(_) => break,
+            }
+        }
+    })
+}
+
+fn stop_listener(addr: &str, stop: &AtomicBool) {
+    stop.store(true, Ordering::SeqCst);
+    // Nudge accept() awake.
+    let _ = TcpStream::connect(addr);
+}
+
+/// A live origin server exporting one prefix with synthetic content.
+pub struct LiveOrigin {
+    pub addr: String,
+    state: Arc<Mutex<Origin>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LiveOrigin {
+    pub fn start(name: &str, prefix: &str, files: &[(&str, u64, u64)]) -> std::io::Result<Self> {
+        let mut origin = Origin::new(OriginId(0), name, prefix);
+        for &(path, size, mtime) in files {
+            origin
+                .put_file(path, FileMeta { size, mtime, perm: 0o644 })
+                .expect("file under prefix");
+        }
+        let state = Arc::new(Mutex::new(origin));
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let st = Arc::clone(&state);
+        let handle = spawn_listener(listener, Arc::clone(&stop), move |mut stream| {
+            while let Ok(msg) = protocol::recv(&mut stream) {
+                let reply = match msg {
+                    Msg::Stat { path } => match st.lock().unwrap().stat(&path) {
+                        Ok(meta) => Msg::StatOk { size: meta.size, mtime: meta.mtime },
+                        Err(e) => Msg::Error(e.to_string()),
+                    },
+                    Msg::Read { offset, len, path } => {
+                        let meta = { st.lock().unwrap().read(&path, offset, len) };
+                        match meta {
+                            Ok(meta) => {
+                                let mut buf = vec![0u8; len as usize];
+                                content::fill(&path, meta.mtime, offset, &mut buf);
+                                Msg::Data(buf)
+                            }
+                            Err(e) => Msg::Error(e.to_string()),
+                        }
+                    }
+                    Msg::Locate { path } => {
+                        if st.lock().unwrap().locate(&path) {
+                            Msg::StatOk { size: 0, mtime: 0 }
+                        } else {
+                            Msg::Error("not here".into())
+                        }
+                    }
+                    other => Msg::Error(format!("unexpected {other:?}")),
+                };
+                if protocol::send(&mut stream, &reply).is_err() {
+                    break;
+                }
+            }
+        });
+        Ok(LiveOrigin {
+            addr,
+            state,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn bytes_served(&self) -> u64 {
+        self.state.lock().unwrap().bytes_served
+    }
+}
+
+impl Drop for LiveOrigin {
+    fn drop(&mut self) {
+        stop_listener(&self.addr, &self.stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A live redirector: knows origin addresses + prefixes, answers
+/// Locate by namespace then confirms with the origin itself.
+pub struct LiveRedirector {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LiveRedirector {
+    pub fn start(origins: Vec<(String, String)>) -> std::io::Result<Self> {
+        // (prefix, addr) pairs → namespace.
+        let mut ns = Namespace::new();
+        let mut addrs = Vec::new();
+        for (i, (prefix, addr)) in origins.iter().enumerate() {
+            ns.register(prefix, OriginId(i)).expect("unique prefixes");
+            addrs.push(addr.clone());
+        }
+        let ns = Arc::new(ns);
+        let addrs = Arc::new(addrs);
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = spawn_listener(listener, Arc::clone(&stop), move |mut stream| {
+            while let Ok(msg) = protocol::recv(&mut stream) {
+                let reply = match msg {
+                    Msg::Locate { path } => match ns.resolve(&path) {
+                        Some(oid) => {
+                            // Confirm with the origin (the paper's
+                            // redirector "will query the origins").
+                            let oaddr = &addrs[oid.0];
+                            match protocol::request(oaddr, &Msg::Locate { path }) {
+                                Ok(Msg::StatOk { .. }) => Msg::Located { addr: oaddr.clone() },
+                                _ => Msg::Error("origin does not hold path".into()),
+                            }
+                        }
+                        None => Msg::Error("no origin for path".into()),
+                    },
+                    other => Msg::Error(format!("unexpected {other:?}")),
+                };
+                if protocol::send(&mut stream, &reply).is_err() {
+                    break;
+                }
+            }
+        });
+        Ok(LiveRedirector {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+}
+
+impl Drop for LiveRedirector {
+    fn drop(&mut self) {
+        stop_listener(&self.addr, &self.stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Shared state of a live cache: the chunk-accounting state machine
+/// plus the actual cached bytes.
+struct LiveCacheState {
+    server: CacheServer,
+    /// (path, chunk_idx) → bytes. Real payloads, verifiable.
+    data: HashMap<(String, u64), Vec<u8>>,
+    /// path → (size, mtime) learned from the origin.
+    meta: HashMap<String, (u64, u64)>,
+}
+
+/// A live cache server: serves reads, fetches misses via
+/// redirector + origin, emits real UDP monitoring packets.
+pub struct LiveCache {
+    pub addr: String,
+    pub name: String,
+    state: Arc<Mutex<LiveCacheState>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LiveCache {
+    pub fn start(
+        name: &str,
+        server_id: u32,
+        cfg: CacheConfig,
+        redirector_addr: String,
+        monitor_addr: String,
+    ) -> std::io::Result<Self> {
+        let state = Arc::new(Mutex::new(LiveCacheState {
+            server: CacheServer::new(name, cfg),
+            data: HashMap::new(),
+            meta: HashMap::new(),
+        }));
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let st = Arc::clone(&state);
+        let user_ids = Arc::new(AtomicU32::new(1));
+        let file_ids = Arc::new(AtomicU32::new(1));
+
+        let handle = spawn_listener(listener, Arc::clone(&stop), move |mut stream| {
+            let mon = UdpSocket::bind("127.0.0.1:0").expect("udp socket");
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "unknown".into());
+            let user_id = user_ids.fetch_add(1, Ordering::SeqCst);
+            let now_us = || SimTime(clock_us());
+            // Real UDP: user login (§3.2).
+            let login = packets::encode(&Envelope {
+                server_id,
+                timestamp: now_us(),
+                packet: Packet::UserLogin {
+                    user_id,
+                    protocol: Protocol::Xrootd,
+                    ipv6: false,
+                    client_host: peer,
+                },
+            });
+            let _ = mon.send_to(&login, &monitor_addr);
+
+            while let Ok(msg) = protocol::recv(&mut stream) {
+                match msg {
+                    Msg::Read { offset, len, path } => {
+                        let file_id = file_ids.fetch_add(1, Ordering::SeqCst);
+                        let result = serve_read(
+                            &st,
+                            &redirector_addr,
+                            &path,
+                            offset,
+                            len,
+                        );
+                        match result {
+                            Ok((payload, file_size)) => {
+                                let open = packets::encode(&Envelope {
+                                    server_id,
+                                    timestamp: now_us(),
+                                    packet: Packet::FileOpen {
+                                        file_id,
+                                        user_id,
+                                        file_size,
+                                        path: path.clone(),
+                                    },
+                                });
+                                let _ = mon.send_to(&open, &monitor_addr);
+                                let n = payload.len() as u64;
+                                if protocol::send(&mut stream, &Msg::Data(payload)).is_err() {
+                                    break;
+                                }
+                                let close = packets::encode(&Envelope {
+                                    server_id,
+                                    timestamp: now_us(),
+                                    packet: Packet::FileClose {
+                                        file_id,
+                                        bytes_read: n,
+                                        bytes_written: 0,
+                                        read_ops: 1,
+                                        write_ops: 0,
+                                    },
+                                });
+                                let _ = mon.send_to(&close, &monitor_addr);
+                            }
+                            Err(e) => {
+                                if protocol::send(&mut stream, &Msg::Error(e)).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Msg::Stat { path } => {
+                        let reply = match stat_via(&st, &redirector_addr, &path) {
+                            Ok((size, mtime)) => Msg::StatOk { size, mtime },
+                            Err(e) => Msg::Error(e),
+                        };
+                        if protocol::send(&mut stream, &reply).is_err() {
+                            break;
+                        }
+                    }
+                    other => {
+                        let _ = protocol::send(
+                            &mut stream,
+                            &Msg::Error(format!("unexpected {other:?}")),
+                        );
+                    }
+                }
+            }
+        });
+        Ok(LiveCache {
+            addr,
+            name: name.to_string(),
+            state,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn stats(&self) -> crate::cache::CacheStats {
+        self.state.lock().unwrap().server.stats
+    }
+}
+
+impl Drop for LiveCache {
+    fn drop(&mut self) {
+        stop_listener(&self.addr, &self.stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn clock_us() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+fn stat_via(
+    st: &Mutex<LiveCacheState>,
+    redirector: &str,
+    path: &str,
+) -> Result<(u64, u64), String> {
+    if let Some(&meta) = st.lock().unwrap().meta.get(path) {
+        return Ok(meta);
+    }
+    let origin_addr = locate(redirector, path)?;
+    match protocol::request(&origin_addr, &Msg::Stat { path: path.into() }) {
+        Ok(Msg::StatOk { size, mtime }) => {
+            st.lock().unwrap().meta.insert(path.into(), (size, mtime));
+            Ok((size, mtime))
+        }
+        Ok(Msg::Error(e)) => Err(e),
+        other => Err(format!("bad stat reply: {other:?}")),
+    }
+}
+
+fn locate(redirector: &str, path: &str) -> Result<String, String> {
+    match protocol::request(redirector, &Msg::Locate { path: path.into() }) {
+        Ok(Msg::Located { addr }) => Ok(addr),
+        Ok(Msg::Error(e)) => Err(format!("redirector: {e}")),
+        other => Err(format!("bad locate reply: {other:?}")),
+    }
+}
+
+/// The cache's read path: local chunks, else fetch-through.
+fn serve_read(
+    st: &Mutex<LiveCacheState>,
+    redirector: &str,
+    path: &str,
+    offset: u64,
+    len: u64,
+) -> Result<(Vec<u8>, u64), String> {
+    let (size, mtime) = stat_via(st, redirector, path)?;
+    if offset + len > size {
+        return Err(format!("read past EOF ({offset}+{len} > {size})"));
+    }
+    // Plan against the chunk-accounting state machine.
+    let (plan, chunk_size) = {
+        let mut guard = st.lock().unwrap();
+        let chunk_size = guard.server.cfg.chunk_size.as_u64().max(1);
+        let plan = guard
+            .server
+            .plan_read(path, offset, len, size, mtime, SimTime(clock_us()));
+        if !plan.fetch.is_empty() {
+            guard.server.begin_fetch(path, &plan.fetch);
+        }
+        (plan, chunk_size)
+    };
+
+    // Fetch missing chunks from the origin (outside the lock).
+    if !plan.fetch.is_empty() {
+        let origin_addr = locate(redirector, path)?;
+        let mut fetched = Vec::new();
+        for &c in &plan.fetch {
+            let c_off = c * chunk_size;
+            let c_len = chunk_size.min(size - c_off);
+            match protocol::request(
+                &origin_addr,
+                &Msg::Read { offset: c_off, len: c_len, path: path.into() },
+            ) {
+                Ok(Msg::Data(bytes)) if bytes.len() as u64 == c_len => {
+                    // Verify content against the keystream (the
+                    // CVMFS-checksum consistency guarantee).
+                    if !content::verify(path, mtime, c_off, &bytes) {
+                        let mut guard = st.lock().unwrap();
+                        guard.server.abort_fetch(path, &plan.fetch);
+                        return Err("checksum mismatch from origin".into());
+                    }
+                    fetched.push((c, bytes));
+                }
+                Ok(other) => {
+                    let mut guard = st.lock().unwrap();
+                    guard.server.abort_fetch(path, &plan.fetch);
+                    return Err(format!("origin read failed: {other:?}"));
+                }
+                Err(e) => {
+                    let mut guard = st.lock().unwrap();
+                    guard.server.abort_fetch(path, &plan.fetch);
+                    return Err(e.to_string());
+                }
+            }
+        }
+        let mut guard = st.lock().unwrap();
+        for (c, bytes) in fetched {
+            guard.data.insert((path.to_string(), c), bytes);
+        }
+        guard
+            .server
+            .commit_chunks(path, &plan.fetch, SimTime(clock_us()));
+    } else if !plan.join.is_empty() {
+        // Another connection is fetching; spin briefly (bounded).
+        for _ in 0..1_000 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let guard = st.lock().unwrap();
+            if plan
+                .join
+                .iter()
+                .all(|c| guard.data.contains_key(&(path.to_string(), *c)))
+            {
+                break;
+            }
+        }
+    }
+
+    // Assemble the requested range from cached chunks.
+    let mut guard = st.lock().unwrap();
+    guard.server.record_served(plan.hit_bytes, plan.miss_bytes);
+    let mut out = vec![0u8; len as usize];
+    let first = offset / chunk_size;
+    let last = if len == 0 { first } else { (offset + len - 1) / chunk_size };
+    for c in first..=last {
+        let chunk = guard
+            .data
+            .get(&(path.to_string(), c))
+            .ok_or_else(|| format!("chunk {c} missing after fetch"))?;
+        let c_start = c * chunk_size;
+        let lo = offset.max(c_start);
+        let hi = (offset + len).min(c_start + chunk.len() as u64);
+        out[(lo - offset) as usize..(hi - offset) as usize]
+            .copy_from_slice(&chunk[(lo - c_start) as usize..(hi - c_start) as usize]);
+    }
+    Ok((out, size))
+}
+
+/// The monitoring collector daemon: a UDP socket feeding the
+/// [`Collector`] → [`Bus`] → [`Aggregator`] pipeline.
+pub struct CollectorDaemon {
+    pub addr: String,
+    state: Arc<Mutex<(Collector, Bus, Aggregator)>>,
+    sub: Arc<Mutex<crate::monitoring::bus::Subscription>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl CollectorDaemon {
+    pub fn start(server_names: Vec<(u32, String)>) -> std::io::Result<Self> {
+        let socket = UdpSocket::bind("127.0.0.1:0")?;
+        socket.set_read_timeout(Some(std::time::Duration::from_millis(50)))?;
+        let addr = socket.local_addr()?.to_string();
+        let mut collector = Collector::new();
+        for (id, name) in server_names {
+            collector.register_server(id, name);
+        }
+        let mut bus = Bus::new();
+        let sub = Arc::new(Mutex::new(bus.subscribe(TRANSFER_TOPIC)));
+        let state = Arc::new(Mutex::new((collector, bus, Aggregator::default())));
+        let stop = Arc::new(AtomicBool::new(false));
+        let st = Arc::clone(&state);
+        let stop2 = Arc::clone(&stop);
+        let sub2 = Arc::clone(&sub);
+        let handle = std::thread::spawn(move || {
+            let mut buf = [0u8; 65_536];
+            while !stop2.load(Ordering::SeqCst) {
+                match socket.recv_from(&mut buf) {
+                    Ok((n, _)) => {
+                        let mut guard = st.lock().unwrap();
+                        let (collector, bus, agg) = &mut *guard;
+                        collector.ingest_datagram(&buf[..n], bus);
+                        let mut sub = sub2.lock().unwrap();
+                        agg.consume(bus, &mut sub);
+                    }
+                    Err(_) => continue, // timeout: re-check stop flag
+                }
+            }
+        });
+        Ok(CollectorDaemon {
+            addr,
+            state,
+            sub,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Total reports aggregated so far.
+    pub fn reports(&self) -> u64 {
+        self.state.lock().unwrap().2.reports
+    }
+
+    /// Usage of an experiment, if seen.
+    pub fn experiment_bytes(&self, name: &str) -> Option<u64> {
+        self.state
+            .lock()
+            .unwrap()
+            .2
+            .experiment_usage(name)
+            .map(|u| u.bytes_read)
+    }
+
+    /// Collector-level stats (orphans, decode errors).
+    pub fn collector_stats(&self) -> crate::monitoring::collector::CollectorStats {
+        self.state.lock().unwrap().0.stats
+    }
+}
+
+impl Drop for CollectorDaemon {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        drop(self.sub.lock());
+    }
+}

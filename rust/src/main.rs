@@ -1,0 +1,22 @@
+//! `stashcache` — CLI for the StashCache federation reproduction.
+//!
+//! ```text
+//! stashcache topology                      # Fig 1/2: sites, caches, links
+//! stashcache scenario [--sites a,b] [--repeats N] [--runtime pjrt|rust]
+//! stashcache usage --days D [--jobs-per-hour J]
+//! stashcache report --all --out-dir reports
+//! stashcache init-config [path]            # write an example TOML
+//! stashcache live-demo                     # real TCP/UDP federation on loopback
+//! ```
+//!
+//! (The offline crate set has no clap — argument parsing is a small
+//! hand-rolled module, DESIGN.md §2.)
+
+mod cli;
+
+fn main() {
+    if let Err(e) = cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,150 @@
+//! Lightweight metrics: counters and time series used by the drivers
+//! and the report generators (e.g. the Fig 5 WAN bandwidth trace).
+
+use crate::util::{ByteSize, SimTime};
+
+/// A time-bucketed series of byte counts (bandwidth traces, weekly
+/// usage). Bucket width is fixed at construction.
+#[derive(Debug, Clone)]
+pub struct ByteSeries {
+    bucket_secs: f64,
+    buckets: Vec<u64>,
+}
+
+impl ByteSeries {
+    pub fn new(bucket_secs: f64) -> Self {
+        assert!(bucket_secs > 0.0);
+        ByteSeries {
+            bucket_secs,
+            buckets: Vec::new(),
+        }
+    }
+
+    fn index(&self, at: SimTime) -> usize {
+        (at.as_secs_f64() / self.bucket_secs) as usize
+    }
+
+    /// Add bytes at an instant.
+    pub fn add(&mut self, at: SimTime, bytes: u64) {
+        let i = self.index(at);
+        if i >= self.buckets.len() {
+            self.buckets.resize(i + 1, 0);
+        }
+        self.buckets[i] += bytes;
+    }
+
+    /// Spread bytes uniformly across `[start, end)` (a flow's lifetime).
+    pub fn add_spread(&mut self, start: SimTime, end: SimTime, bytes: u64) {
+        if end <= start || bytes == 0 {
+            return self.add(start, bytes);
+        }
+        let (i0, i1) = (self.index(start), self.index(end));
+        if i1 >= self.buckets.len() {
+            self.buckets.resize(i1 + 1, 0);
+        }
+        if i0 == i1 {
+            self.buckets[i0] += bytes;
+            return;
+        }
+        let total_secs = (end - start).as_secs_f64();
+        let mut assigned = 0u64;
+        for i in i0..=i1 {
+            let b_start = i as f64 * self.bucket_secs;
+            let b_end = b_start + self.bucket_secs;
+            let lo = b_start.max(start.as_secs_f64());
+            let hi = b_end.min(end.as_secs_f64());
+            let share = ((hi - lo) / total_secs * bytes as f64) as u64;
+            self.buckets[i] += share;
+            assigned += share;
+        }
+        // Rounding remainder lands in the final bucket.
+        self.buckets[i1] += bytes - assigned;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// (bucket start seconds, bytes) pairs.
+    pub fn points(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (i as f64 * self.bucket_secs, b))
+    }
+
+    /// Average rate in a bucket, bytes/sec.
+    pub fn rate_at(&self, bucket: usize) -> f64 {
+        self.buckets.get(bucket).copied().unwrap_or(0) as f64 / self.bucket_secs
+    }
+
+    pub fn total(&self) -> ByteSize {
+        ByteSize(self.buckets.iter().sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_index() {
+        let mut s = ByteSeries::new(10.0);
+        s.add(SimTime::from_secs_f64(5.0), 100);
+        s.add(SimTime::from_secs_f64(15.0), 200);
+        s.add(SimTime::from_secs_f64(15.5), 50);
+        assert_eq!(s.len(), 2);
+        let pts: Vec<(f64, u64)> = s.points().collect();
+        assert_eq!(pts, vec![(0.0, 100), (10.0, 250)]);
+        assert_eq!(s.total(), ByteSize(350));
+        assert_eq!(s.rate_at(1), 25.0);
+    }
+
+    #[test]
+    fn spread_conserves_bytes() {
+        let mut s = ByteSeries::new(1.0);
+        s.add_spread(
+            SimTime::from_secs_f64(0.5),
+            SimTime::from_secs_f64(3.5),
+            3_000,
+        );
+        assert_eq!(s.total(), ByteSize(3_000));
+        assert_eq!(s.len(), 4);
+        // Middle buckets get a full second's share each (1000).
+        let pts: Vec<(f64, u64)> = s.points().collect();
+        assert_eq!(pts[1].1, 1_000);
+        assert_eq!(pts[2].1, 1_000);
+    }
+
+    #[test]
+    fn spread_degenerate_interval() {
+        let mut s = ByteSeries::new(1.0);
+        s.add_spread(SimTime::from_secs_f64(2.0), SimTime::from_secs_f64(2.0), 77);
+        assert_eq!(s.total(), ByteSize(77));
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn property_spread_conserves() {
+        use crate::util::prop::check;
+        check("byteseries conservation", 60, |g| {
+            let mut s = ByteSeries::new(g.f64(0.5, 30.0));
+            let mut expected = 0u64;
+            for _ in 0..g.usize(1, 20) {
+                let a = g.f64(0.0, 1_000.0);
+                let b = a + g.f64(0.0, 500.0);
+                let bytes = g.u64(0, 1_000_000);
+                s.add_spread(SimTime::from_secs_f64(a), SimTime::from_secs_f64(b), bytes);
+                expected += bytes;
+            }
+            (
+                s.total().as_u64() == expected,
+                format!("total {} expected {expected}", s.total()),
+            )
+        });
+    }
+}

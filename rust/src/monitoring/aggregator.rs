@@ -1,0 +1,442 @@
+//! Monitoring aggregation — the "database for aggregation and
+//! analytics" of Figure 3, which produced the paper's Table 1 (usage
+//! by experiment), Table 2 (file-size percentiles) and Figure 4 (a
+//! year of federation usage).
+//!
+//! File-size percentiles are estimated from a **log-spaced histogram**
+//! ([`HIST_BINS`] bins over 1 B .. 10 TB). Binning is pluggable
+//! ([`HistBackend`]): the pure-rust reference here, or the AOT
+//! JAX/Pallas kernel (`artifacts/usage_hist.hlo.txt`) via
+//! [`crate::runtime::HistAgg`] — both must agree bin-for-bin, which an
+//! integration test asserts. A bounded reservoir of exact sizes is
+//! kept alongside to quantify the histogram's approximation error.
+
+use super::collector::Collector;
+use super::bus::{Bus, Subscription};
+use super::TransferReport;
+use crate::util::stats;
+use crate::util::{ByteSize, Pcg64};
+use std::collections::BTreeMap;
+
+/// Number of histogram bins (matches the L1 kernel's output shape).
+pub const HIST_BINS: usize = 64;
+/// Log-range covered: 1 B (log10 = 0) to 10 TB (log10 = 13).
+pub const HIST_LOG_MIN: f64 = 0.0;
+pub const HIST_LOG_MAX: f64 = 13.0;
+
+/// Map a size to its bin index. Arithmetic is f32, mirroring the
+/// Pallas kernel (`kernels/histogram.py`) bit-for-bit so the PJRT and
+/// rust backends agree on every input.
+pub fn size_to_bin_f(size: f64) -> usize {
+    let lg = (size as f32).max(1.0).log10();
+    let frac = (lg - HIST_LOG_MIN as f32) / (HIST_LOG_MAX - HIST_LOG_MIN) as f32;
+    let idx = (frac * HIST_BINS as f32).floor();
+    (idx.max(0.0) as usize).min(HIST_BINS - 1)
+}
+
+/// Map an integer byte count to its bin index.
+pub fn size_to_bin(bytes: u64) -> usize {
+    size_to_bin_f(bytes as f64)
+}
+
+/// Geometric midpoint size of a bin (for percentile readout).
+pub fn bin_to_size(bin: usize) -> f64 {
+    let width = (HIST_LOG_MAX - HIST_LOG_MIN) / HIST_BINS as f64;
+    10f64.powf(HIST_LOG_MIN + (bin as f64 + 0.5) * width)
+}
+
+/// Batch histogram backend. `sizes` in bytes; returns per-bin counts
+/// accumulated over the batch (length [`HIST_BINS`]).
+pub trait HistBackend {
+    fn histogram(&mut self, sizes: &[f64]) -> Vec<f32>;
+}
+
+/// Pure-rust reference binning — must match `usage_hist` in
+/// `python/compile/model.py`.
+pub struct RustHistBackend;
+
+impl HistBackend for RustHistBackend {
+    fn histogram(&mut self, sizes: &[f64]) -> Vec<f32> {
+        let mut bins = vec![0f32; HIST_BINS];
+        for &s in sizes {
+            if s > 0.0 {
+                bins[size_to_bin_f(s)] += 1.0;
+            }
+        }
+        bins
+    }
+}
+
+/// One experiment's accumulated usage.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ExperimentUsage {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub transfers: u64,
+}
+
+/// The aggregating store.
+pub struct Aggregator<B: HistBackend = RustHistBackend> {
+    by_experiment: BTreeMap<String, ExperimentUsage>,
+    by_server: BTreeMap<String, ExperimentUsage>,
+    /// bytes_read per week index (Fig 4's weekly series).
+    weekly: BTreeMap<u64, u64>,
+    /// Histogram of *file sizes* seen at file-close (Table 2 is over
+    /// transferred files' sizes).
+    hist: Vec<f32>,
+    /// Batch buffer flushed through the backend.
+    pending_sizes: Vec<f64>,
+    /// Batch size the backend is invoked with (the AOT kernel's fixed
+    /// shape).
+    pub batch: usize,
+    backend: B,
+    /// Bounded exact-size reservoir (error measurement).
+    reservoir: Vec<f64>,
+    reservoir_seen: u64,
+    reservoir_rng: Pcg64,
+    pub reports: u64,
+    pub ipv6_transfers: u64,
+    pub http_transfers: u64,
+}
+
+pub const RESERVOIR_CAP: usize = 100_000;
+
+impl Default for Aggregator<RustHistBackend> {
+    fn default() -> Self {
+        Aggregator::new(RustHistBackend)
+    }
+}
+
+impl<B: HistBackend> Aggregator<B> {
+    pub fn new(backend: B) -> Self {
+        Aggregator {
+            by_experiment: BTreeMap::new(),
+            by_server: BTreeMap::new(),
+            weekly: BTreeMap::new(),
+            hist: vec![0f32; HIST_BINS],
+            pending_sizes: Vec::new(),
+            batch: 4096,
+            backend,
+            reservoir: Vec::new(),
+            reservoir_seen: 0,
+            reservoir_rng: Pcg64::new(0x5eed_a66, 17),
+            reports: 0,
+            ipv6_transfers: 0,
+            http_transfers: 0,
+        }
+    }
+
+    /// Ingest one joined transfer report.
+    pub fn ingest(&mut self, r: &TransferReport) {
+        self.reports += 1;
+        let exp = self.by_experiment.entry(r.experiment().to_string()).or_default();
+        exp.bytes_read += r.bytes_read;
+        exp.bytes_written += r.bytes_written;
+        exp.transfers += 1;
+        let srv = self.by_server.entry(r.server.clone()).or_default();
+        srv.bytes_read += r.bytes_read;
+        srv.bytes_written += r.bytes_written;
+        srv.transfers += 1;
+        let week = r.closed_at.as_micros() / (7 * 86_400 * 1_000_000);
+        *self.weekly.entry(week).or_default() += r.bytes_read;
+        if r.ipv6 {
+            self.ipv6_transfers += 1;
+        }
+        if r.protocol == "http" {
+            self.http_transfers += 1;
+        }
+        // File-size accounting.
+        self.pending_sizes.push(r.file_size as f64);
+        if self.pending_sizes.len() >= self.batch {
+            self.flush_hist();
+        }
+        // Reservoir sampling (Vitter's R).
+        self.reservoir_seen += 1;
+        if self.reservoir.len() < RESERVOIR_CAP {
+            self.reservoir.push(r.file_size as f64);
+        } else {
+            let j = self.reservoir_rng.gen_range(0, self.reservoir_seen);
+            if (j as usize) < RESERVOIR_CAP {
+                self.reservoir[j as usize] = r.file_size as f64;
+            }
+        }
+    }
+
+    /// Drain a bus subscription into the store.
+    pub fn consume(&mut self, bus: &mut Bus, sub: &mut Subscription) -> usize {
+        let mut n = 0;
+        while let Some(msg) = sub.recv(bus) {
+            if let Some(report) = Collector::parse_report(&msg) {
+                self.ingest(&report);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Flush any buffered sizes through the histogram backend.
+    pub fn flush_hist(&mut self) {
+        if self.pending_sizes.is_empty() {
+            return;
+        }
+        let bins = self.backend.histogram(&self.pending_sizes);
+        assert_eq!(bins.len(), HIST_BINS, "backend returned wrong shape");
+        for (h, b) in self.hist.iter_mut().zip(bins) {
+            *h += b;
+        }
+        self.pending_sizes.clear();
+    }
+
+    /// Table 1: usage by experiment, descending bytes_read.
+    pub fn table1(&mut self) -> Vec<(String, ByteSize)> {
+        let mut rows: Vec<(String, ByteSize)> = self
+            .by_experiment
+            .iter()
+            .map(|(name, u)| (name.clone(), ByteSize(u.bytes_read)))
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        rows
+    }
+
+    pub fn experiment_usage(&self, name: &str) -> Option<ExperimentUsage> {
+        self.by_experiment.get(name).copied()
+    }
+
+    pub fn server_usage(&self) -> &BTreeMap<String, ExperimentUsage> {
+        &self.by_server
+    }
+
+    /// Table 2: file-size percentiles estimated from the histogram.
+    pub fn table2(&mut self, percentiles: &[f64]) -> Vec<(f64, ByteSize)> {
+        self.flush_hist();
+        let total: f64 = self.hist.iter().map(|&c| c as f64).sum();
+        assert!(total > 0.0, "no samples aggregated");
+        let mut out = Vec::with_capacity(percentiles.len());
+        for &p in percentiles {
+            let target = p / 100.0 * total;
+            let mut cum = 0.0;
+            let mut answer = bin_to_size(HIST_BINS - 1);
+            for (bin, &c) in self.hist.iter().enumerate() {
+                let c = c as f64;
+                if cum + c >= target && c > 0.0 {
+                    // Geometric interpolation within the bin.
+                    let frac = ((target - cum) / c).clamp(0.0, 1.0);
+                    let width = (HIST_LOG_MAX - HIST_LOG_MIN) / HIST_BINS as f64;
+                    let lg = HIST_LOG_MIN + (bin as f64 + frac) * width;
+                    answer = 10f64.powf(lg);
+                    break;
+                }
+                cum += c;
+            }
+            out.push((p, ByteSize(answer.round() as u64)));
+        }
+        out
+    }
+
+    /// Exact percentiles from the reservoir (histogram error check).
+    pub fn table2_exact(&mut self, percentiles: &[f64]) -> Vec<(f64, ByteSize)> {
+        assert!(!self.reservoir.is_empty());
+        let mut data = self.reservoir.clone();
+        let vals = stats::percentiles(&mut data, percentiles);
+        percentiles
+            .iter()
+            .zip(vals)
+            .map(|(&p, v)| (p, ByteSize(v.round() as u64)))
+            .collect()
+    }
+
+    /// Figure 4: (week index, bytes read) series, gaps filled with 0.
+    pub fn weekly_series(&self) -> Vec<(u64, ByteSize)> {
+        let Some((&first, _)) = self.weekly.iter().next() else {
+            return Vec::new();
+        };
+        let (&last, _) = self.weekly.iter().next_back().expect("non-empty");
+        (first..=last)
+            .map(|w| (w, ByteSize(self.weekly.get(&w).copied().unwrap_or(0))))
+            .collect()
+    }
+
+    /// Total bytes read across everything.
+    pub fn total_bytes(&self) -> ByteSize {
+        ByteSize(self.by_experiment.values().map(|u| u.bytes_read).sum())
+    }
+
+    pub fn histogram_snapshot(&mut self) -> Vec<f32> {
+        self.flush_hist();
+        self.hist.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitoring::collector::TRANSFER_TOPIC;
+    use crate::util::SimTime;
+    fn report(exp: &str, size: u64, week: u64) -> TransferReport {
+        let closed = SimTime(week * 7 * 86_400 * 1_000_000 + 1);
+        TransferReport {
+            server: "syracuse".into(),
+            client_host: "h".into(),
+            protocol: "xrootd".into(),
+            ipv6: false,
+            path: format!("/ospool/{exp}/f-{size}"),
+            file_size: size,
+            bytes_read: size,
+            bytes_written: 0,
+            read_ops: 1,
+            write_ops: 0,
+            opened_at: SimTime(closed.as_micros().saturating_sub(10_000_000)),
+            closed_at: closed,
+        }
+    }
+
+    #[test]
+    fn table1_sorted_by_usage() {
+        let mut agg = Aggregator::default();
+        for _ in 0..3 {
+            agg.ingest(&report("ligo", 100, 0));
+        }
+        agg.ingest(&report("des", 1_000, 0));
+        let t1 = agg.table1();
+        assert_eq!(t1[0].0, "des");
+        assert_eq!(t1[0].1, ByteSize(1_000));
+        assert_eq!(t1[1].0, "ligo");
+        assert_eq!(t1[1].1, ByteSize(300));
+        assert_eq!(agg.total_bytes(), ByteSize(1_300));
+    }
+
+    #[test]
+    fn histogram_binning_sane() {
+        assert_eq!(size_to_bin(1), 0);
+        assert!(size_to_bin(5_797) < size_to_bin(22_801_000));
+        assert!(size_to_bin(22_801_000) < size_to_bin(2_335_000_000));
+        assert_eq!(size_to_bin(u64::MAX), HIST_BINS - 1);
+        // bin_to_size is a right inverse up to bin granularity.
+        for bin in [0usize, 10, 33, 63] {
+            assert_eq!(size_to_bin(bin_to_size(bin) as u64), bin);
+        }
+    }
+
+    #[test]
+    fn table2_percentiles_close_to_exact() {
+        let mut agg = Aggregator::default();
+        // Bimodal sizes: 1000 small + 1000 large.
+        for i in 0..1000u64 {
+            agg.ingest(&report("ligo", 10_000 + i, 0));
+            agg.ingest(&report("ligo", 500_000_000 + i * 1000, 0));
+        }
+        // Percentiles chosen inside each mode — p50 sits exactly on
+        // the bimodal boundary where exact linear interpolation
+        // crosses the (empty) gap and no histogram can match it.
+        let est = agg.table2(&[25.0, 75.0]);
+        let exact = agg.table2_exact(&[25.0, 75.0]);
+        for ((_, e), (_, x)) in est.iter().zip(&exact) {
+            let ratio = e.as_f64() / x.as_f64();
+            // Log-histogram with 64 bins over 13 decades: each bin is
+            // 10^(13/64) ≈ 1.6×; estimate must fall within ~one bin.
+            assert!(
+                (0.55..1.8).contains(&ratio),
+                "estimate {e} vs exact {x} (ratio {ratio})"
+            );
+        }
+    }
+
+    #[test]
+    fn weekly_series_fills_gaps() {
+        let mut agg = Aggregator::default();
+        agg.ingest(&report("ligo", 100, 2));
+        agg.ingest(&report("ligo", 300, 5));
+        let series = agg.weekly_series();
+        assert_eq!(series.len(), 4); // weeks 2..=5
+        assert_eq!(series[0], (2, ByteSize(100)));
+        assert_eq!(series[1], (3, ByteSize(0)));
+        assert_eq!(series[3], (5, ByteSize(300)));
+    }
+
+    #[test]
+    fn batch_flush_triggers_backend() {
+        struct Counting(usize);
+        impl HistBackend for Counting {
+            fn histogram(&mut self, sizes: &[f64]) -> Vec<f32> {
+                self.0 += 1;
+                RustHistBackend.histogram(sizes)
+            }
+        }
+        let mut agg = Aggregator::new(Counting(0));
+        agg.batch = 10;
+        for _ in 0..25 {
+            agg.ingest(&report("ligo", 100, 0));
+        }
+        agg.flush_hist();
+        // 25 sizes at batch 10 → backend ran 3 times (10+10+5).
+        let calls = agg.backend.0;
+        assert_eq!(calls, 3);
+        let hist = agg.histogram_snapshot();
+        assert_eq!(hist.iter().sum::<f32>(), 25.0);
+    }
+
+    #[test]
+    fn consume_from_bus_roundtrip() {
+        use crate::monitoring::collector::Collector;
+        use crate::monitoring::packets::{Envelope, Packet, Protocol};
+        let mut bus = Bus::new();
+        let mut sub = bus.subscribe(TRANSFER_TOPIC);
+        let mut coll = Collector::new();
+        coll.register_server(1, "nebraska");
+        coll.ingest(
+            Envelope {
+                server_id: 1,
+                timestamp: SimTime(0),
+                packet: Packet::UserLogin {
+                    user_id: 1,
+                    protocol: Protocol::Http,
+                    ipv6: true,
+                    client_host: "w".into(),
+                },
+            },
+            &mut bus,
+        );
+        coll.ingest(
+            Envelope {
+                server_id: 1,
+                timestamp: SimTime(10),
+                packet: Packet::FileOpen {
+                    file_id: 2,
+                    user_id: 1,
+                    file_size: 555,
+                    path: "/ospool/nova/f".into(),
+                },
+            },
+            &mut bus,
+        );
+        coll.ingest(
+            Envelope {
+                server_id: 1,
+                timestamp: SimTime(20),
+                packet: Packet::FileClose {
+                    file_id: 2,
+                    bytes_read: 555,
+                    bytes_written: 0,
+                    read_ops: 1,
+                    write_ops: 0,
+                },
+            },
+            &mut bus,
+        );
+        let mut agg = Aggregator::default();
+        assert_eq!(agg.consume(&mut bus, &mut sub), 1);
+        assert_eq!(agg.experiment_usage("nova").unwrap().bytes_read, 555);
+        assert_eq!(agg.ipv6_transfers, 1);
+        assert_eq!(agg.http_transfers, 1);
+        assert_eq!(agg.server_usage()["nebraska"].transfers, 1);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let mut agg = Aggregator::default();
+        for i in 0..(RESERVOIR_CAP + 500) {
+            agg.ingest(&report("ligo", i as u64 + 1, 0));
+        }
+        assert_eq!(agg.reservoir.len(), RESERVOIR_CAP);
+    }
+}

@@ -1,0 +1,186 @@
+//! The message bus between the collector and its consumers.
+//!
+//! Paper §3.2: "the collector ... sends a JSON message to the OSG
+//! message bus. The OSG message bus distributes the file monitoring to
+//! databases in the OSG and the Worldwide LHC Computing Grid."
+//!
+//! A small topic-based fan-out queue: publishers append to a topic,
+//! each subscriber has an independent cursor (every subscriber sees
+//! every message — the OSG *and* WLCG databases both get a copy).
+//! Single-threaded by design; live mode wraps it in a mutex.
+
+use std::collections::HashMap;
+
+/// Per-topic message log.
+#[derive(Debug, Default)]
+struct Topic {
+    messages: Vec<String>,
+    subscribers: usize,
+    /// Cursor positions of subscribers (index = subscriber id).
+    cursors: Vec<usize>,
+}
+
+/// The bus.
+#[derive(Debug, Default)]
+pub struct Bus {
+    topics: HashMap<String, Topic>,
+    pub published: u64,
+}
+
+/// A subscription handle: pull messages with
+/// [`Subscription::try_recv`].
+#[derive(Debug)]
+pub struct Subscription {
+    topic: String,
+    id: usize,
+}
+
+impl Bus {
+    pub fn new() -> Self {
+        Bus::default()
+    }
+
+    /// Publish a message to a topic (creating it on first use).
+    pub fn publish(&mut self, topic: &str, message: String) {
+        self.published += 1;
+        self.topics
+            .entry(topic.to_string())
+            .or_default()
+            .messages
+            .push(message);
+    }
+
+    /// Subscribe to a topic from its current tail (messages published
+    /// before subscribing are not replayed, like a real bus).
+    pub fn subscribe(&mut self, topic: &str) -> Subscription {
+        let t = self.topics.entry(topic.to_string()).or_default();
+        let id = t.subscribers;
+        t.subscribers += 1;
+        t.cursors.push(t.messages.len());
+        Subscription {
+            topic: topic.to_string(),
+            id,
+        }
+    }
+
+    /// Messages retained in a topic (monitoring the monitor).
+    pub fn depth(&self, topic: &str) -> usize {
+        self.topics.get(topic).map_or(0, |t| t.messages.len())
+    }
+
+    /// Drop messages all subscribers have consumed (bounds memory in
+    /// long simulations). Returns how many were compacted away.
+    pub fn compact(&mut self, topic: &str) -> usize {
+        let Some(t) = self.topics.get_mut(topic) else {
+            return 0;
+        };
+        let min_cursor = t.cursors.iter().copied().min().unwrap_or(t.messages.len());
+        if min_cursor == 0 {
+            return 0;
+        }
+        t.messages.drain(..min_cursor);
+        for c in &mut t.cursors {
+            *c -= min_cursor;
+        }
+        min_cursor
+    }
+}
+
+impl Subscription {
+    /// Pull the next message, if any.
+    pub fn try_recv(&mut self, bus: &Bus) -> Option<String> {
+        let t = bus.topics.get(&self.topic)?;
+        let cursor = t.cursors[self.id];
+        let msg = t.messages.get(cursor)?.clone();
+        // Interior-mutability-free design: the cursor lives in the
+        // topic; we need a &mut Bus to advance it. Provide both APIs:
+        // `try_recv` clones without advancing is surprising, so we
+        // require the paired call below.
+        Some(msg)
+    }
+
+    /// Pull and advance. The common consumption call.
+    pub fn recv(&mut self, bus: &mut Bus) -> Option<String> {
+        let t = bus.topics.get_mut(&self.topic)?;
+        let cursor = &mut t.cursors[self.id];
+        let msg = t.messages.get(*cursor)?.clone();
+        *cursor += 1;
+        Some(msg)
+    }
+
+    /// Drain everything pending.
+    pub fn drain(&mut self, bus: &mut Bus) -> Vec<String> {
+        let mut out = Vec::new();
+        while let Some(m) = self.recv(bus) {
+            out.push(m);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fan_out_to_all_subscribers() {
+        let mut bus = Bus::new();
+        let mut osg = bus.subscribe("transfers");
+        let mut wlcg = bus.subscribe("transfers");
+        bus.publish("transfers", "m1".into());
+        bus.publish("transfers", "m2".into());
+        assert_eq!(osg.drain(&mut bus), vec!["m1", "m2"]);
+        assert_eq!(wlcg.drain(&mut bus), vec!["m1", "m2"]);
+        assert_eq!(osg.recv(&mut bus), None);
+    }
+
+    #[test]
+    fn subscription_starts_at_tail() {
+        let mut bus = Bus::new();
+        bus.publish("t", "old".into());
+        let mut sub = bus.subscribe("t");
+        bus.publish("t", "new".into());
+        assert_eq!(sub.drain(&mut bus), vec!["new"]);
+    }
+
+    #[test]
+    fn topics_are_independent() {
+        let mut bus = Bus::new();
+        let mut a = bus.subscribe("a");
+        let mut b = bus.subscribe("b");
+        bus.publish("a", "for-a".into());
+        assert_eq!(a.recv(&mut bus), Some("for-a".into()));
+        assert_eq!(b.recv(&mut bus), None);
+    }
+
+    #[test]
+    fn compact_respects_slowest_consumer() {
+        let mut bus = Bus::new();
+        let mut fast = bus.subscribe("t");
+        let mut slow = bus.subscribe("t");
+        for i in 0..10 {
+            bus.publish("t", format!("m{i}"));
+        }
+        fast.drain(&mut bus);
+        slow.recv(&mut bus); // slow consumed 1
+        assert_eq!(bus.compact("t"), 1);
+        assert_eq!(bus.depth("t"), 9);
+        // Slow continues from the right place.
+        assert_eq!(slow.recv(&mut bus), Some("m1".into()));
+        // After slow catches up everything compacts.
+        slow.drain(&mut bus);
+        assert_eq!(bus.compact("t"), 9);
+        assert_eq!(bus.depth("t"), 0);
+    }
+
+    #[test]
+    fn try_recv_peeks_without_advancing() {
+        let mut bus = Bus::new();
+        let mut s = bus.subscribe("t");
+        bus.publish("t", "m".into());
+        assert_eq!(s.try_recv(&bus), Some("m".into()));
+        assert_eq!(s.try_recv(&bus), Some("m".into()));
+        assert_eq!(s.recv(&mut bus), Some("m".into()));
+        assert_eq!(s.try_recv(&bus), None);
+    }
+}

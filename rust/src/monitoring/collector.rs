@@ -1,0 +1,366 @@
+//! The monitoring collector (paper §3.2, Figure 3).
+//!
+//! "The collector combines the different UDP packets to fill in full
+//! information for each file transfer. On each file close packet, the
+//! collector combines the data from the file open and user login
+//! packets and sends a JSON message to the OSG message bus."
+//!
+//! State is kept **per server** (user and file IDs are only unique
+//! within one cache's stream). Orphan closes (open packet lost — UDP
+//! is lossy) and logins/opens that never close are counted and
+//! expired, since a production collector must bound its memory.
+
+use super::bus::Bus;
+use super::json::{self, ObjBuilder};
+use super::packets::{Envelope, Packet};
+use super::TransferReport;
+use crate::util::{Duration, SimTime};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+struct LoginState {
+    client_host: String,
+    protocol: &'static str,
+    ipv6: bool,
+    seen_at: SimTime,
+}
+
+#[derive(Debug, Clone)]
+struct OpenState {
+    user_id: u32,
+    path: String,
+    file_size: u64,
+    opened_at: SimTime,
+}
+
+/// Collector statistics (lossy-stream accounting).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CollectorStats {
+    pub packets: u64,
+    pub reports_published: u64,
+    /// Close without a matching open (lost open packet).
+    pub orphan_closes: u64,
+    /// Open referencing an unknown user (lost login packet).
+    pub unknown_users: u64,
+    /// Entries dropped by state expiry.
+    pub expired_entries: u64,
+    pub decode_errors: u64,
+}
+
+/// The collector: joins packet streams into [`TransferReport`]s and
+/// publishes them as JSON on the [`Bus`] topic `"transfers"`.
+#[derive(Debug)]
+pub struct Collector {
+    /// server_id → (user_id → login).
+    logins: HashMap<u32, HashMap<u32, LoginState>>,
+    /// server_id → (file_id → open).
+    opens: HashMap<u32, HashMap<u32, OpenState>>,
+    /// server_id → display name (registered by the federation).
+    server_names: HashMap<u32, String>,
+    /// Drop login/open state older than this (bounded memory).
+    pub state_ttl: Duration,
+    pub stats: CollectorStats,
+}
+
+/// Topic the collector publishes on.
+pub const TRANSFER_TOPIC: &str = "transfers";
+
+impl Default for Collector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Collector {
+            logins: HashMap::new(),
+            opens: HashMap::new(),
+            server_names: HashMap::new(),
+            state_ttl: Duration::from_hours(24),
+            stats: CollectorStats::default(),
+        }
+    }
+
+    /// Register a cache server's display name.
+    pub fn register_server(&mut self, server_id: u32, name: impl Into<String>) {
+        self.server_names.insert(server_id, name.into());
+    }
+
+    fn server_name(&self, id: u32) -> String {
+        self.server_names
+            .get(&id)
+            .cloned()
+            .unwrap_or_else(|| format!("server-{id}"))
+    }
+
+    /// Ingest a raw datagram (live mode). Malformed data is counted,
+    /// never fatal.
+    pub fn ingest_datagram(&mut self, datagram: &[u8], bus: &mut Bus) {
+        match super::packets::decode(datagram) {
+            Ok(env) => self.ingest(env, bus),
+            Err(_) => self.stats.decode_errors += 1,
+        }
+    }
+
+    /// Ingest a decoded packet (sim mode feeds these directly).
+    pub fn ingest(&mut self, env: Envelope, bus: &mut Bus) {
+        self.stats.packets += 1;
+        let server = env.server_id;
+        match env.packet {
+            Packet::UserLogin { user_id, protocol, ipv6, client_host } => {
+                self.logins.entry(server).or_default().insert(
+                    user_id,
+                    LoginState {
+                        client_host,
+                        protocol: protocol.as_str(),
+                        ipv6,
+                        seen_at: env.timestamp,
+                    },
+                );
+            }
+            Packet::FileOpen { file_id, user_id, file_size, path } => {
+                if !self
+                    .logins
+                    .get(&server)
+                    .is_some_and(|m| m.contains_key(&user_id))
+                {
+                    self.stats.unknown_users += 1;
+                }
+                self.opens.entry(server).or_default().insert(
+                    file_id,
+                    OpenState { user_id, path, file_size, opened_at: env.timestamp },
+                );
+            }
+            Packet::FileClose { file_id, bytes_read, bytes_written, read_ops, write_ops } => {
+                let Some(open) = self
+                    .opens
+                    .get_mut(&server)
+                    .and_then(|m| m.remove(&file_id))
+                else {
+                    self.stats.orphan_closes += 1;
+                    return;
+                };
+                let login = self
+                    .logins
+                    .get(&server)
+                    .and_then(|m| m.get(&open.user_id));
+                let report = TransferReport {
+                    server: self.server_name(server),
+                    client_host: login
+                        .map(|l| l.client_host.clone())
+                        .unwrap_or_else(|| "unknown".into()),
+                    protocol: login
+                        .map(|l| l.protocol.to_string())
+                        .unwrap_or_else(|| "unknown".into()),
+                    ipv6: login.is_some_and(|l| l.ipv6),
+                    path: open.path,
+                    file_size: open.file_size,
+                    bytes_read,
+                    bytes_written,
+                    read_ops,
+                    write_ops,
+                    opened_at: open.opened_at,
+                    closed_at: env.timestamp,
+                };
+                self.publish(&report, bus);
+            }
+        }
+    }
+
+    fn publish(&mut self, r: &TransferReport, bus: &mut Bus) {
+        let msg = ObjBuilder::new()
+            .str("server", &r.server)
+            .str("client_host", &r.client_host)
+            .str("protocol", &r.protocol)
+            .bool("ipv6", r.ipv6)
+            .str("path", &r.path)
+            .int("file_size", r.file_size)
+            .int("bytes_read", r.bytes_read)
+            .int("bytes_written", r.bytes_written)
+            .int("read_ops", r.read_ops as u64)
+            .int("write_ops", r.write_ops as u64)
+            .int("opened_us", r.opened_at.as_micros())
+            .int("closed_us", r.closed_at.as_micros())
+            .build();
+        bus.publish(TRANSFER_TOPIC, json::to_string(&msg));
+        self.stats.reports_published += 1;
+    }
+
+    /// Expire login/open state older than `state_ttl` (run periodically).
+    pub fn expire(&mut self, now: SimTime) {
+        let ttl = self.state_ttl;
+        let mut dropped = 0usize;
+        for m in self.logins.values_mut() {
+            let before = m.len();
+            m.retain(|_, l| now.saturating_sub(l.seen_at) <= ttl);
+            dropped += before - m.len();
+        }
+        for m in self.opens.values_mut() {
+            let before = m.len();
+            m.retain(|_, o| now.saturating_sub(o.opened_at) <= ttl);
+            dropped += before - m.len();
+        }
+        self.stats.expired_entries += dropped as u64;
+    }
+
+    /// Parse a bus message back into a [`TransferReport`] (consumer
+    /// side — used by the aggregator and tests).
+    pub fn parse_report(text: &str) -> Option<TransferReport> {
+        let v = json::parse(text).ok()?;
+        Some(TransferReport {
+            server: v.get("server")?.as_str()?.to_string(),
+            client_host: v.get("client_host")?.as_str()?.to_string(),
+            protocol: v.get("protocol")?.as_str()?.to_string(),
+            ipv6: v.get("ipv6")?.as_bool()?,
+            path: v.get("path")?.as_str()?.to_string(),
+            file_size: v.get("file_size")?.as_u64()?,
+            bytes_read: v.get("bytes_read")?.as_u64()?,
+            bytes_written: v.get("bytes_written")?.as_u64()?,
+            read_ops: v.get("read_ops")?.as_u64()? as u32,
+            write_ops: v.get("write_ops")?.as_u64()? as u32,
+            opened_at: SimTime(v.get("opened_us")?.as_u64()?),
+            closed_at: SimTime(v.get("closed_us")?.as_u64()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitoring::packets::Protocol;
+
+    fn env(server_id: u32, t: f64, packet: Packet) -> Envelope {
+        Envelope {
+            server_id,
+            timestamp: SimTime::from_secs_f64(t),
+            packet,
+        }
+    }
+
+    fn login(user: u32) -> Packet {
+        Packet::UserLogin {
+            user_id: user,
+            protocol: Protocol::Xrootd,
+            ipv6: false,
+            client_host: format!("host-{user}"),
+        }
+    }
+
+    fn open(file: u32, user: u32, path: &str, size: u64) -> Packet {
+        Packet::FileOpen {
+            file_id: file,
+            user_id: user,
+            file_size: size,
+            path: path.into(),
+        }
+    }
+
+    fn close(file: u32, read: u64) -> Packet {
+        Packet::FileClose {
+            file_id: file,
+            bytes_read: read,
+            bytes_written: 0,
+            read_ops: 3,
+            write_ops: 0,
+        }
+    }
+
+    #[test]
+    fn joins_full_transfer() {
+        let mut c = Collector::new();
+        c.register_server(1, "syracuse");
+        let mut bus = Bus::new();
+        let mut rx = bus.subscribe(TRANSFER_TOPIC);
+        c.ingest(env(1, 0.0, login(10)), &mut bus);
+        c.ingest(env(1, 1.0, open(5, 10, "/ospool/ligo/f.gwf", 500)), &mut bus);
+        c.ingest(env(1, 3.0, close(5, 500)), &mut bus);
+        let msg = rx.try_recv(&bus).expect("one report");
+        let r = Collector::parse_report(&msg).unwrap();
+        assert_eq!(r.server, "syracuse");
+        assert_eq!(r.client_host, "host-10");
+        assert_eq!(r.protocol, "xrootd");
+        assert_eq!(r.path, "/ospool/ligo/f.gwf");
+        assert_eq!(r.bytes_read, 500);
+        assert_eq!(r.opened_at, SimTime::from_secs_f64(1.0));
+        assert_eq!(r.closed_at, SimTime::from_secs_f64(3.0));
+        assert_eq!(r.experiment(), "ligo");
+    }
+
+    #[test]
+    fn per_server_id_spaces() {
+        // Same user/file ids on two servers must not collide.
+        let mut c = Collector::new();
+        let mut bus = Bus::new();
+        let mut rx = bus.subscribe(TRANSFER_TOPIC);
+        for s in [1u32, 2] {
+            c.ingest(env(s, 0.0, login(1)), &mut bus);
+            c.ingest(env(s, 0.5, open(1, 1, &format!("/ospool/e{s}/f"), 10)), &mut bus);
+        }
+        c.ingest(env(1, 1.0, close(1, 10)), &mut bus);
+        c.ingest(env(2, 1.0, close(1, 10)), &mut bus);
+        let r1 = Collector::parse_report(&rx.recv(&mut bus).unwrap()).unwrap();
+        let r2 = Collector::parse_report(&rx.recv(&mut bus).unwrap()).unwrap();
+        assert_eq!(r1.path, "/ospool/e1/f");
+        assert_eq!(r2.path, "/ospool/e2/f");
+    }
+
+    #[test]
+    fn orphan_close_counted_not_published() {
+        let mut c = Collector::new();
+        let mut bus = Bus::new();
+        let mut rx = bus.subscribe(TRANSFER_TOPIC);
+        c.ingest(env(1, 0.0, close(99, 5)), &mut bus);
+        assert_eq!(c.stats.orphan_closes, 1);
+        assert!(rx.try_recv(&bus).is_none());
+    }
+
+    #[test]
+    fn missing_login_still_reports() {
+        let mut c = Collector::new();
+        let mut bus = Bus::new();
+        let mut rx = bus.subscribe(TRANSFER_TOPIC);
+        c.ingest(env(1, 0.0, open(5, 77, "/ospool/des/x", 10)), &mut bus);
+        c.ingest(env(1, 1.0, close(5, 10)), &mut bus);
+        assert_eq!(c.stats.unknown_users, 1);
+        let r = Collector::parse_report(&rx.try_recv(&bus).unwrap()).unwrap();
+        assert_eq!(r.client_host, "unknown");
+        assert_eq!(r.path, "/ospool/des/x");
+    }
+
+    #[test]
+    fn close_consumes_open() {
+        let mut c = Collector::new();
+        let mut bus = Bus::new();
+        c.ingest(env(1, 0.0, login(1)), &mut bus);
+        c.ingest(env(1, 0.1, open(5, 1, "/p", 10)), &mut bus);
+        c.ingest(env(1, 0.2, close(5, 10)), &mut bus);
+        c.ingest(env(1, 0.3, close(5, 10)), &mut bus);
+        assert_eq!(c.stats.orphan_closes, 1, "double close is orphan");
+    }
+
+    #[test]
+    fn ingest_datagram_roundtrip_and_garbage() {
+        let mut c = Collector::new();
+        let mut bus = Bus::new();
+        let e = env(3, 0.0, login(1));
+        c.ingest_datagram(&crate::monitoring::packets::encode(&e), &mut bus);
+        assert_eq!(c.stats.packets, 1);
+        c.ingest_datagram(b"garbage", &mut bus);
+        assert_eq!(c.stats.decode_errors, 1);
+    }
+
+    #[test]
+    fn expiry_bounds_state() {
+        let mut c = Collector::new();
+        c.state_ttl = Duration::from_secs(10);
+        let mut bus = Bus::new();
+        c.ingest(env(1, 0.0, login(1)), &mut bus);
+        c.ingest(env(1, 0.0, open(5, 1, "/p", 10)), &mut bus);
+        c.expire(SimTime::from_secs_f64(100.0));
+        assert_eq!(c.stats.expired_entries, 2);
+        // Close after expiry is an orphan.
+        c.ingest(env(1, 101.0, close(5, 10)), &mut bus);
+        assert_eq!(c.stats.orphan_closes, 1);
+    }
+}

@@ -1,0 +1,391 @@
+//! Minimal JSON support (offline substitute for serde_json —
+//! DESIGN.md §2 row 19).
+//!
+//! The collector publishes each joined transfer as a JSON object on
+//! the message bus, like the production OSG flow; consumers
+//! (aggregator, live-mode subscribers, tests) parse it back. Only the
+//! subset needed for those messages is implemented: objects, strings,
+//! integers, floats, booleans.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value (subset).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// All numbers parse as f64; integer-valued floats print without
+    /// a decimal point (u64-exact integers survive a round trip).
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+}
+
+/// Builder for JSON objects.
+#[derive(Debug, Default)]
+pub struct ObjBuilder(BTreeMap<String, Json>);
+
+impl ObjBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn str(mut self, k: &str, v: impl Into<String>) -> Self {
+        self.0.insert(k.into(), Json::Str(v.into()));
+        self
+    }
+    pub fn num(mut self, k: &str, v: f64) -> Self {
+        self.0.insert(k.into(), Json::Num(v));
+        self
+    }
+    pub fn int(mut self, k: &str, v: u64) -> Self {
+        self.0.insert(k.into(), Json::Num(v as f64));
+        self
+    }
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.0.insert(k.into(), Json::Bool(v));
+        self
+    }
+    pub fn build(self) -> Json {
+        Json::Obj(self.0)
+    }
+}
+
+/// Serialize to compact JSON text.
+pub fn to_string(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                write!(out, "{}", *n as i64).unwrap();
+            } else {
+                write!(out, "{n}").unwrap();
+            }
+        }
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                write!(out, "\\u{:04x}", c as u32).unwrap();
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse error with byte offset.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("json parse error at byte {0}: {1}")]
+pub struct JsonError(pub usize, pub String);
+
+/// Parse JSON text.
+pub fn parse(text: &str) -> Result<Json, JsonError> {
+    let bytes = text.as_bytes();
+    let mut pos = 0;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(JsonError(pos, "trailing data".into()));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        return Err(JsonError(*pos, "unexpected end".into()));
+    };
+    match c {
+        b'{' => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    _ => return Err(JsonError(*pos, "object key must be string".into())),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(JsonError(*pos, "expected ':'".into()));
+                }
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                map.insert(key, val);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(map));
+                    }
+                    _ => return Err(JsonError(*pos, "expected ',' or '}'".into())),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(JsonError(*pos, "expected ',' or ']'".into())),
+                }
+            }
+        }
+        b'"' => parse_string(b, pos).map(Json::Str),
+        b't' => expect(b, pos, "true").map(|_| Json::Bool(true)),
+        b'f' => expect(b, pos, "false").map(|_| Json::Bool(false)),
+        b'n' => expect(b, pos, "null").map(|_| Json::Null),
+        _ => parse_number(b, pos),
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, word: &str) -> Result<(), JsonError> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(())
+    } else {
+        Err(JsonError(*pos, format!("expected {word:?}")))
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let Some(&c) = b.get(*pos) else {
+            return Err(JsonError(*pos, "unterminated string".into()));
+        };
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let Some(&esc) = b.get(*pos) else {
+                    return Err(JsonError(*pos, "bad escape".into()));
+                };
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'u' => {
+                        let hex = b
+                            .get(*pos..*pos + 4)
+                            .ok_or_else(|| JsonError(*pos, "bad \\u".into()))?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex)
+                                .map_err(|_| JsonError(*pos, "bad \\u".into()))?,
+                            16,
+                        )
+                        .map_err(|_| JsonError(*pos, "bad \\u".into()))?;
+                        *pos += 4;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    _ => return Err(JsonError(*pos, "unknown escape".into())),
+                }
+            }
+            _ => {
+                // Continue multi-byte UTF-8 sequences verbatim.
+                let start = *pos - 1;
+                let len = utf8_len(c);
+                let end = start + len;
+                let chunk = b
+                    .get(start..end)
+                    .ok_or_else(|| JsonError(start, "bad utf-8".into()))?;
+                out.push_str(
+                    std::str::from_utf8(chunk)
+                        .map_err(|_| JsonError(start, "bad utf-8".into()))?,
+                );
+                *pos = end;
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).expect("ascii digits");
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| JsonError(start, format!("bad number {text:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_object() {
+        let msg = ObjBuilder::new()
+            .str("server", "syracuse")
+            .str("path", "/ospool/ligo/f.gwf")
+            .int("bytes_read", 2_335_000_000)
+            .num("duration", 12.5)
+            .bool("ipv6", false)
+            .build();
+        let text = to_string(&msg);
+        let back = parse(&text).unwrap();
+        assert_eq!(msg, back);
+        assert_eq!(back.get("server").unwrap().as_str(), Some("syracuse"));
+        assert_eq!(back.get("bytes_read").unwrap().as_u64(), Some(2_335_000_000));
+    }
+
+    #[test]
+    fn escapes() {
+        let v = Json::Str("a\"b\\c\nd\u{1}".into());
+        let text = to_string(&v);
+        assert!(text.ends_with("\\u0001\""), "control char escaped: {text}");
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Json::Str("héllo 世界".into());
+        assert_eq!(parse(&to_string(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn arrays_and_nesting() {
+        let text = r#"{"a":[1,2.5,{"b":true},null],"c":"x"}"#;
+        let v = parse(text).unwrap();
+        assert_eq!(to_string(&v), text);
+    }
+
+    #[test]
+    fn integers_print_without_decimal() {
+        assert_eq!(to_string(&Json::Num(42.0)), "42");
+        assert_eq!(to_string(&Json::Num(42.5)), "42.5");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse(r#"{"a":}"#).is_err());
+        assert!(parse("[1,2,]").is_err());
+        assert!(parse(r#""unterminated"#).is_err());
+        assert!(parse("{} trailing").is_err());
+        assert!(parse("{1:2}").is_err());
+    }
+
+    #[test]
+    fn whitespace_tolerated() {
+        let v = parse(" { \"a\" : [ 1 , 2 ] } ").unwrap();
+        assert_eq!(to_string(&v), r#"{"a":[1,2]}"#);
+    }
+}

@@ -1,0 +1,332 @@
+//! Binary monitoring packet formats (paper §3.2).
+//!
+//! "Each StashCache cache sends a UDP packet for each file open, user
+//! login, and file close":
+//!
+//! * **User Login** — "client hostname, the method of logging in, such
+//!   as HTTP or xrootd protocol ... whether it was logged in with IPv6
+//!   or IPv4. The user is later identified by a unique user ID number."
+//! * **File Open** — "the file name, total file size, and the user ID
+//!   which opened the file. The file is later referred to by a unique
+//!   file ID number."
+//! * **File Close** — "the total bytes read or written to the file, as
+//!   well as the number of IO operations performed ... the file ID
+//!   from the file open event."
+//!
+//! Wire format (network byte order, `byteorder`):
+//!
+//! ```text
+//! header:  magic "SCMN" | version u8 | kind u8 | server_id u32 | t_us u64
+//! login:   user_id u32 | proto u8 | ipv6 u8 | hostlen u16 | host...
+//! open:    file_id u32 | user_id u32 | file_size u64 | pathlen u16 | path...
+//! close:   file_id u32 | bytes_read u64 | bytes_written u64
+//!          | read_ops u32 | write_ops u32
+//! ```
+//!
+//! Live mode sends these over real UDP sockets; the simulator calls
+//! the codecs directly, so both paths exercise identical parsing.
+
+use crate::util::SimTime;
+use byteorder::{BigEndian, ReadBytesExt, WriteBytesExt};
+use std::io::{Cursor, Read, Write};
+
+pub const MAGIC: &[u8; 4] = b"SCMN";
+pub const VERSION: u8 = 1;
+
+/// Login protocol field values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    Xrootd = 0,
+    Http = 1,
+}
+
+impl Protocol {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Protocol::Xrootd => "xrootd",
+            Protocol::Http => "http",
+        }
+    }
+}
+
+/// A monitoring packet (decoded).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Packet {
+    UserLogin {
+        user_id: u32,
+        protocol: Protocol,
+        ipv6: bool,
+        client_host: String,
+    },
+    FileOpen {
+        file_id: u32,
+        user_id: u32,
+        file_size: u64,
+        path: String,
+    },
+    FileClose {
+        file_id: u32,
+        bytes_read: u64,
+        bytes_written: u64,
+        read_ops: u32,
+        write_ops: u32,
+    },
+}
+
+/// A packet plus its envelope (who sent it, when).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub server_id: u32,
+    pub timestamp: SimTime,
+    pub packet: Packet,
+}
+
+/// Codec errors. Malformed datagrams must never panic the collector —
+/// it ingests from the network.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PacketError {
+    #[error("datagram too short")]
+    Truncated,
+    #[error("bad magic")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u8),
+    #[error("unknown packet kind {0}")]
+    BadKind(u8),
+    #[error("invalid utf-8 in string field")]
+    BadUtf8,
+    #[error("bad protocol value {0}")]
+    BadProtocol(u8),
+}
+
+impl From<std::io::Error> for PacketError {
+    fn from(_: std::io::Error) -> Self {
+        PacketError::Truncated
+    }
+}
+
+const KIND_LOGIN: u8 = 0x75; // 'u'
+const KIND_OPEN: u8 = 0x66; // 'f'
+const KIND_CLOSE: u8 = 0x63; // 'c'
+
+/// Encode an envelope into a datagram.
+pub fn encode(env: &Envelope) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    buf.write_all(MAGIC).unwrap();
+    buf.write_u8(VERSION).unwrap();
+    let kind = match env.packet {
+        Packet::UserLogin { .. } => KIND_LOGIN,
+        Packet::FileOpen { .. } => KIND_OPEN,
+        Packet::FileClose { .. } => KIND_CLOSE,
+    };
+    buf.write_u8(kind).unwrap();
+    buf.write_u32::<BigEndian>(env.server_id).unwrap();
+    buf.write_u64::<BigEndian>(env.timestamp.as_micros()).unwrap();
+    match &env.packet {
+        Packet::UserLogin { user_id, protocol, ipv6, client_host } => {
+            buf.write_u32::<BigEndian>(*user_id).unwrap();
+            buf.write_u8(*protocol as u8).unwrap();
+            buf.write_u8(u8::from(*ipv6)).unwrap();
+            write_str(&mut buf, client_host);
+        }
+        Packet::FileOpen { file_id, user_id, file_size, path } => {
+            buf.write_u32::<BigEndian>(*file_id).unwrap();
+            buf.write_u32::<BigEndian>(*user_id).unwrap();
+            buf.write_u64::<BigEndian>(*file_size).unwrap();
+            write_str(&mut buf, path);
+        }
+        Packet::FileClose { file_id, bytes_read, bytes_written, read_ops, write_ops } => {
+            buf.write_u32::<BigEndian>(*file_id).unwrap();
+            buf.write_u64::<BigEndian>(*bytes_read).unwrap();
+            buf.write_u64::<BigEndian>(*bytes_written).unwrap();
+            buf.write_u32::<BigEndian>(*read_ops).unwrap();
+            buf.write_u32::<BigEndian>(*write_ops).unwrap();
+        }
+    }
+    buf
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let len = bytes.len().min(u16::MAX as usize);
+    buf.write_u16::<BigEndian>(len as u16).unwrap();
+    buf.write_all(&bytes[..len]).unwrap();
+}
+
+fn read_str(cur: &mut Cursor<&[u8]>) -> Result<String, PacketError> {
+    let len = cur.read_u16::<BigEndian>()? as usize;
+    let mut bytes = vec![0u8; len];
+    cur.read_exact(&mut bytes)?;
+    String::from_utf8(bytes).map_err(|_| PacketError::BadUtf8)
+}
+
+/// Decode a datagram. Robust against truncation and garbage.
+pub fn decode(datagram: &[u8]) -> Result<Envelope, PacketError> {
+    let mut cur = Cursor::new(datagram);
+    let mut magic = [0u8; 4];
+    cur.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(PacketError::BadMagic);
+    }
+    let version = cur.read_u8()?;
+    if version != VERSION {
+        return Err(PacketError::BadVersion(version));
+    }
+    let kind = cur.read_u8()?;
+    let server_id = cur.read_u32::<BigEndian>()?;
+    let timestamp = SimTime(cur.read_u64::<BigEndian>()?);
+    let packet = match kind {
+        KIND_LOGIN => {
+            let user_id = cur.read_u32::<BigEndian>()?;
+            let proto = cur.read_u8()?;
+            let protocol = match proto {
+                0 => Protocol::Xrootd,
+                1 => Protocol::Http,
+                other => return Err(PacketError::BadProtocol(other)),
+            };
+            let ipv6 = cur.read_u8()? != 0;
+            let client_host = read_str(&mut cur)?;
+            Packet::UserLogin { user_id, protocol, ipv6, client_host }
+        }
+        KIND_OPEN => {
+            let file_id = cur.read_u32::<BigEndian>()?;
+            let user_id = cur.read_u32::<BigEndian>()?;
+            let file_size = cur.read_u64::<BigEndian>()?;
+            let path = read_str(&mut cur)?;
+            Packet::FileOpen { file_id, user_id, file_size, path }
+        }
+        KIND_CLOSE => {
+            let file_id = cur.read_u32::<BigEndian>()?;
+            let bytes_read = cur.read_u64::<BigEndian>()?;
+            let bytes_written = cur.read_u64::<BigEndian>()?;
+            let read_ops = cur.read_u32::<BigEndian>()?;
+            let write_ops = cur.read_u32::<BigEndian>()?;
+            Packet::FileClose { file_id, bytes_read, bytes_written, read_ops, write_ops }
+        }
+        other => return Err(PacketError::BadKind(other)),
+    };
+    Ok(Envelope { server_id, timestamp, packet })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(p: Packet) {
+        let env = Envelope {
+            server_id: 7,
+            timestamp: SimTime(123_456_789),
+            packet: p,
+        };
+        let bytes = encode(&env);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(env, back);
+    }
+
+    #[test]
+    fn roundtrip_login() {
+        roundtrip(Packet::UserLogin {
+            user_id: 42,
+            protocol: Protocol::Http,
+            ipv6: true,
+            client_host: "worker-07.syr.edu".into(),
+        });
+    }
+
+    #[test]
+    fn roundtrip_open() {
+        roundtrip(Packet::FileOpen {
+            file_id: 9,
+            user_id: 42,
+            file_size: 2_335_000_000,
+            path: "/ospool/ligo/frames/H1.gwf".into(),
+        });
+    }
+
+    #[test]
+    fn roundtrip_close() {
+        roundtrip(Packet::FileClose {
+            file_id: 9,
+            bytes_read: 2_335_000_000,
+            bytes_written: 0,
+            read_ops: 98,
+            write_ops: 0,
+        });
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert_eq!(decode(b"XXXX\x01\x75"), Err(PacketError::BadMagic));
+    }
+
+    #[test]
+    fn rejects_bad_version_and_kind() {
+        let mut good = encode(&Envelope {
+            server_id: 1,
+            timestamp: SimTime(0),
+            packet: Packet::FileClose {
+                file_id: 1, bytes_read: 0, bytes_written: 0, read_ops: 0, write_ops: 0,
+            },
+        });
+        good[4] = 99;
+        assert_eq!(decode(&good), Err(PacketError::BadVersion(99)));
+        good[4] = VERSION;
+        good[5] = 0xff;
+        assert_eq!(decode(&good), Err(PacketError::BadKind(0xff)));
+    }
+
+    #[test]
+    fn truncation_never_panics() {
+        let env = Envelope {
+            server_id: 3,
+            timestamp: SimTime(55),
+            packet: Packet::FileOpen {
+                file_id: 1,
+                user_id: 2,
+                file_size: 100,
+                path: "/p".into(),
+            },
+        };
+        let bytes = encode(&env);
+        for cut in 0..bytes.len() {
+            let r = decode(&bytes[..cut]);
+            assert!(r.is_err(), "decoding {cut}-byte prefix should fail");
+        }
+    }
+
+    #[test]
+    fn garbage_fuzz_never_panics() {
+        use crate::util::Pcg64;
+        let mut rng = Pcg64::new(99, 99);
+        for _ in 0..2_000 {
+            let len = (rng.gen_range(0, 128)) as usize;
+            let mut buf = vec![0u8; len];
+            for b in &mut buf {
+                *b = rng.gen_range(0, 256) as u8;
+            }
+            let _ = decode(&buf); // must not panic
+        }
+    }
+
+    #[test]
+    fn oversize_string_clamped() {
+        let host = "h".repeat(70_000);
+        let env = Envelope {
+            server_id: 1,
+            timestamp: SimTime(0),
+            packet: Packet::UserLogin {
+                user_id: 1,
+                protocol: Protocol::Xrootd,
+                ipv6: false,
+                client_host: host,
+            },
+        };
+        let bytes = encode(&env);
+        let back = decode(&bytes).unwrap();
+        if let Packet::UserLogin { client_host, .. } = back.packet {
+            assert_eq!(client_host.len(), u16::MAX as usize);
+        } else {
+            panic!("wrong packet kind");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Global namespace of the data federation.
+//!
+//! Paper §3: "Each Origin is registered to serve a subset of the global
+//! namespace." Paths look like `/ospool/ligo/frames/H1/f0042.gwf`; an
+//! origin registers a prefix (`/ospool/ligo`) and is authoritative for
+//! everything under it. Resolution is longest-prefix match over path
+//! segments, like the production federation's `scitokens`-style
+//! namespace map.
+
+use std::collections::BTreeMap;
+
+/// Identifier of a registered origin (index into the federation's
+/// origin table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OriginId(pub usize);
+
+#[derive(Debug, Default)]
+struct Node {
+    children: BTreeMap<String, Node>,
+    origin: Option<OriginId>,
+}
+
+/// Prefix-tree namespace: registered prefixes → origins.
+#[derive(Debug, Default)]
+pub struct Namespace {
+    root: Node,
+    registrations: usize,
+}
+
+/// Errors from registration.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum NamespaceError {
+    #[error("prefix must start with '/': {0:?}")]
+    NotAbsolute(String),
+    #[error("prefix {0:?} already registered")]
+    Conflict(String),
+}
+
+/// Split a path into normalized segments (empty segments collapsed).
+fn segments(path: &str) -> impl Iterator<Item = &str> {
+    path.split('/').filter(|s| !s.is_empty())
+}
+
+impl Namespace {
+    pub fn new() -> Self {
+        Namespace::default()
+    }
+
+    /// Register `prefix` as served by `origin`. Nested prefixes are
+    /// allowed (longest match wins); exact duplicates are an error.
+    pub fn register(&mut self, prefix: &str, origin: OriginId) -> Result<(), NamespaceError> {
+        if !prefix.starts_with('/') {
+            return Err(NamespaceError::NotAbsolute(prefix.to_string()));
+        }
+        let mut node = &mut self.root;
+        for seg in segments(prefix) {
+            node = node.children.entry(seg.to_string()).or_default();
+        }
+        if node.origin.is_some() {
+            return Err(NamespaceError::Conflict(prefix.to_string()));
+        }
+        node.origin = Some(origin);
+        self.registrations += 1;
+        Ok(())
+    }
+
+    /// Longest-prefix resolution of a path to its authoritative origin.
+    pub fn resolve(&self, path: &str) -> Option<OriginId> {
+        let mut node = &self.root;
+        let mut best = node.origin;
+        for seg in segments(path) {
+            match node.children.get(seg) {
+                Some(child) => {
+                    node = child;
+                    if node.origin.is_some() {
+                        best = node.origin;
+                    }
+                }
+                None => break,
+            }
+        }
+        best
+    }
+
+    /// Number of registered prefixes.
+    pub fn len(&self) -> usize {
+        self.registrations
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.registrations == 0
+    }
+
+    /// All registered prefixes with their origins (lexicographic).
+    pub fn prefixes(&self) -> Vec<(String, OriginId)> {
+        let mut out = Vec::new();
+        fn walk(node: &Node, path: &mut String, out: &mut Vec<(String, OriginId)>) {
+            if let Some(o) = node.origin {
+                let p = if path.is_empty() { "/".to_string() } else { path.clone() };
+                out.push((p, o));
+            }
+            for (seg, child) in &node.children {
+                let len = path.len();
+                path.push('/');
+                path.push_str(seg);
+                walk(child, path, out);
+                path.truncate(len);
+            }
+        }
+        walk(&self.root, &mut String::new(), &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_resolve() {
+        let mut ns = Namespace::new();
+        ns.register("/ospool/ligo", OriginId(0)).unwrap();
+        ns.register("/osgconnect/public", OriginId(1)).unwrap();
+        assert_eq!(ns.resolve("/ospool/ligo/frames/a.gwf"), Some(OriginId(0)));
+        assert_eq!(ns.resolve("/osgconnect/public/u/d.tar"), Some(OriginId(1)));
+        assert_eq!(ns.resolve("/ospool/other/x"), None);
+        assert_eq!(ns.resolve("/"), None);
+        assert_eq!(ns.len(), 2);
+    }
+
+    #[test]
+    fn longest_prefix_wins() {
+        let mut ns = Namespace::new();
+        ns.register("/data", OriginId(0)).unwrap();
+        ns.register("/data/special", OriginId(1)).unwrap();
+        assert_eq!(ns.resolve("/data/a.bin"), Some(OriginId(0)));
+        assert_eq!(ns.resolve("/data/special/a.bin"), Some(OriginId(1)));
+        assert_eq!(ns.resolve("/data/special"), Some(OriginId(1)));
+    }
+
+    #[test]
+    fn exact_prefix_is_resolvable() {
+        let mut ns = Namespace::new();
+        ns.register("/a/b", OriginId(3)).unwrap();
+        assert_eq!(ns.resolve("/a/b"), Some(OriginId(3)));
+        assert_eq!(ns.resolve("/a"), None);
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let mut ns = Namespace::new();
+        ns.register("/x", OriginId(0)).unwrap();
+        assert_eq!(
+            ns.register("/x", OriginId(1)),
+            Err(NamespaceError::Conflict("/x".into()))
+        );
+    }
+
+    #[test]
+    fn relative_prefix_rejected() {
+        let mut ns = Namespace::new();
+        assert!(matches!(
+            ns.register("data/x", OriginId(0)),
+            Err(NamespaceError::NotAbsolute(_))
+        ));
+    }
+
+    #[test]
+    fn slash_normalization() {
+        let mut ns = Namespace::new();
+        ns.register("/a/b/", OriginId(0)).unwrap();
+        assert_eq!(ns.resolve("/a//b///c"), Some(OriginId(0)));
+    }
+
+    #[test]
+    fn prefixes_listing() {
+        let mut ns = Namespace::new();
+        ns.register("/b", OriginId(1)).unwrap();
+        ns.register("/a", OriginId(0)).unwrap();
+        ns.register("/a/sub", OriginId(2)).unwrap();
+        let got = ns.prefixes();
+        assert_eq!(
+            got,
+            vec![
+                ("/a".to_string(), OriginId(0)),
+                ("/a/sub".to_string(), OriginId(2)),
+                ("/b".to_string(), OriginId(1)),
+            ]
+        );
+    }
+
+    #[test]
+    fn property_registered_paths_resolve() {
+        use crate::util::prop::check;
+        check("registered prefix resolves its subtree", 100, |g| {
+            let mut ns = Namespace::new();
+            let depth = g.usize(1, 4);
+            let mut prefix = String::new();
+            for _ in 0..depth {
+                prefix.push('/');
+                prefix.push_str(&format!("d{}", g.u64(0, 5)));
+            }
+            ns.register(&prefix, OriginId(7)).unwrap();
+            let file = format!("{prefix}/leaf{}", g.u64(0, 100));
+            let ok = ns.resolve(&file) == Some(OriginId(7));
+            (ok, format!("prefix={prefix} file={file}"))
+        });
+    }
+}

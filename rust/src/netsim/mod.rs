@@ -1,0 +1,23 @@
+//! Flow-level discrete-event network simulator.
+//!
+//! The paper's evaluation ran on the production OSG WAN; this module is
+//! the substitute substrate (DESIGN.md §2 row 1). It models the
+//! federation's links as capacities shared max-min fairly among active
+//! flows — the standard flow-level abstraction for TCP over long fat
+//! networks — plus per-connection rate ceilings (squid's single-stream
+//! limit vs XRootD's multi-stream transfers, the mechanism behind the
+//! paper's large-file crossover).
+//!
+//! * [`engine`] — deterministic event queue over [`crate::util::SimTime`].
+//! * [`network`] — links, flows, max-min rate allocation, completions.
+//! * [`topology`] — builds the federation graph (workers, proxies,
+//!   caches, borders, WAN core) from a [`crate::config::FederationConfig`]
+//!   and answers path/RTT queries.
+
+pub mod engine;
+pub mod network;
+pub mod topology;
+
+pub use engine::EventQueue;
+pub use network::{Completion, FlowId, FlowSpec, LinkId, Network};
+pub use topology::{Endpoint, Route, Topology};

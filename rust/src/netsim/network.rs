@@ -1,0 +1,700 @@
+//! Flow-level network model with max-min fair bandwidth sharing.
+//!
+//! Each [`Link`] has a capacity in bytes/second. A [`Flow`] occupies a
+//! path (set of links) and optionally carries a per-connection rate
+//! ceiling (modelling a squid proxy's single-stream limit vs an XRootD
+//! cache's multi-stream transfers). Whenever the flow set changes, the
+//! allocator recomputes the **max-min fair** rate vector by progressive
+//! water-filling: repeatedly saturate the most constrained link (or
+//! flow ceiling) and freeze the flows it bottlenecks.
+//!
+//! Completions are kinetic: the earliest projected completion is
+//! re-derived after every rate change, so the driver can interleave its
+//! own timer events with transfer completions deterministically.
+
+use crate::util::{SimTime};
+use std::collections::HashMap;
+
+/// Handle to a link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub u32);
+
+/// Handle to an active flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+/// Specification of a new flow.
+#[derive(Debug, Clone)]
+pub struct FlowSpec {
+    /// Links traversed (order irrelevant to the allocator).
+    pub path: Vec<LinkId>,
+    /// Payload size in bytes.
+    pub bytes: u64,
+    /// Optional per-connection rate ceiling (bytes/sec).
+    pub rate_cap: Option<f64>,
+}
+
+#[derive(Debug)]
+struct Link {
+    capacity: f64, // bytes/sec
+    /// Active flows on this link (kept sorted for determinism).
+    flows: Vec<FlowId>,
+    /// Cumulative bytes that have traversed this link.
+    bytes_carried: f64,
+}
+
+#[derive(Debug)]
+struct Flow {
+    path: Vec<LinkId>,
+    remaining: f64,
+    rate: f64,
+    rate_cap: Option<f64>,
+    started: SimTime,
+}
+
+/// A completed transfer, as reported by [`Network::advance`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    pub flow: FlowId,
+    pub at: SimTime,
+    pub started: SimTime,
+}
+
+/// The link/flow state and allocator. Time never advances implicitly:
+/// the driver calls [`Network::advance`] to move to a chosen instant.
+#[derive(Debug, Default)]
+pub struct Network {
+    links: Vec<Link>,
+    flows: HashMap<FlowId, Flow>,
+    next_flow: u64,
+    /// Last instant at which `remaining` was reconciled.
+    clock: SimTime,
+    /// Rates stale (flow set changed since last allocation)?
+    dirty: bool,
+    /// Lifetime counters for perf accounting.
+    pub allocations: u64,
+}
+
+impl Network {
+    pub fn new() -> Self {
+        Network::default()
+    }
+
+    /// Add a link with capacity in **Gbit/s** (the config unit);
+    /// stored internally as bytes/sec.
+    pub fn add_link_gbps(&mut self, gbps: f64) -> LinkId {
+        assert!(gbps > 0.0 && gbps.is_finite());
+        self.links.push(Link {
+            capacity: gbps * 1e9 / 8.0,
+            flows: Vec::new(),
+            bytes_carried: 0.0,
+        });
+        LinkId(self.links.len() as u32 - 1)
+    }
+
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Cumulative bytes carried by a link (for the Fig 5 WAN counters).
+    pub fn link_bytes_carried(&self, link: LinkId) -> f64 {
+        self.links[link.0 as usize].bytes_carried
+    }
+
+    /// Debug snapshot: (flow, remaining bytes, rate B/s, path).
+    pub fn flows_snapshot(&mut self) -> Vec<(FlowId, f64, f64, Vec<LinkId>)> {
+        self.reallocate_if_dirty();
+        let mut v: Vec<_> = self
+            .flows
+            .iter()
+            .map(|(&id, f)| (id, f.remaining, f.rate, f.path.clone()))
+            .collect();
+        v.sort_by_key(|e| e.0);
+        v
+    }
+
+    /// Current allocated rate of a flow (bytes/sec). Zero if unknown.
+    pub fn flow_rate(&mut self, flow: FlowId) -> f64 {
+        self.reallocate_if_dirty();
+        self.flows.get(&flow).map(|f| f.rate).unwrap_or(0.0)
+    }
+
+    /// Start a flow at time `now` (must be >= the last event time).
+    ///
+    /// A path that crosses the same link more than once (e.g. a
+    /// cache-relay streaming origin→cache→worker over the cache's WAN
+    /// link in both directions) occupies it **once**: links are
+    /// full-duplex, so the two directions do not share capacity.
+    pub fn start_flow(&mut self, spec: FlowSpec, now: SimTime) -> FlowId {
+        assert!(!spec.path.is_empty(), "flow with empty path");
+        assert!(spec.bytes > 0, "flow with zero bytes");
+        let mut path = spec.path;
+        path.sort_unstable();
+        path.dedup();
+        for l in &path {
+            assert!((l.0 as usize) < self.links.len(), "unknown link {l:?}");
+        }
+        self.reconcile(now);
+        let id = FlowId(self.next_flow);
+        self.next_flow += 1;
+        for l in &path {
+            self.links[l.0 as usize].flows.push(id);
+        }
+        self.flows.insert(
+            id,
+            Flow {
+                path,
+                remaining: spec.bytes as f64,
+                rate: 0.0,
+                rate_cap: spec.rate_cap,
+                started: now,
+            },
+        );
+        self.dirty = true;
+        id
+    }
+
+    /// Abort a flow (e.g. failure injection). Returns bytes left.
+    pub fn cancel_flow(&mut self, flow: FlowId, now: SimTime) -> Option<u64> {
+        self.reconcile(now);
+        let f = self.flows.remove(&flow)?;
+        for l in &f.path {
+            self.links[l.0 as usize].flows.retain(|&x| x != flow);
+        }
+        self.dirty = true;
+        Some(f.remaining.ceil() as u64)
+    }
+
+    /// Earliest projected completion time, if any flow is active.
+    pub fn next_completion(&mut self) -> Option<SimTime> {
+        self.reallocate_if_dirty();
+        let mut best: Option<f64> = None;
+        for f in self.flows.values() {
+            debug_assert!(f.rate > 0.0, "allocated flow with zero rate");
+            let eta = f.remaining / f.rate;
+            best = Some(best.map_or(eta, |b: f64| b.min(eta)));
+        }
+        best.map(|eta| {
+            // Round up to the next microsecond so the completion event
+            // never lands before the flow actually finishes; for etas
+            // below the clock's f64 resolution, force a 1 µs tick so
+            // callers always make progress.
+            let t = self.clock.as_secs_f64() + eta;
+            SimTime(((t * 1e6).ceil() as u64).max(self.clock.0 + 1))
+        })
+    }
+
+    /// Advance to `t`, applying transfer progress and collecting flows
+    /// that finish at or before `t` (in deterministic FlowId order).
+    ///
+    /// `t` should not exceed [`Network::next_completion`] by more than
+    /// the 1 µs rounding slack; completions beyond `t` stay active.
+    pub fn advance(&mut self, t: SimTime) -> Vec<Completion> {
+        self.reallocate_if_dirty();
+        let mut done = Vec::new();
+        // Flows may complete in cascades: when one finishes, the others
+        // speed up. Process piecewise-constant segments. Finished flows
+        // are collected at the top so that flows whose completion
+        // instant was crossed by a reconcile (a new flow arriving after
+        // time already passed) are retired even when `t == clock`.
+        loop {
+            let mut finished: Vec<FlowId> = self
+                .flows
+                .iter()
+                .filter(|(_, f)| f.remaining < 1.0) // sub-byte epsilon
+                .map(|(&id, _)| id)
+                .collect();
+            finished.sort_unstable();
+            for id in finished {
+                let f = self.flows.remove(&id).expect("flow exists");
+                for l in &f.path {
+                    self.links[l.0 as usize].flows.retain(|&x| x != id);
+                }
+                done.push(Completion {
+                    flow: id,
+                    at: self.clock,
+                    started: f.started,
+                });
+                self.dirty = true;
+            }
+            self.reallocate_if_dirty();
+            if self.clock >= t {
+                break;
+            }
+            let seg_end = match self.earliest_eta() {
+                Some(eta) if eta <= t => eta,
+                _ => t,
+            };
+            // Guarantee forward progress (≥ 1 µs) even when an eta
+            // rounds onto the current clock, and never overshoot `t`.
+            self.apply_progress(seg_end.max(SimTime(self.clock.0 + 1)).min(t));
+        }
+        done
+    }
+
+    /// Earliest completion instant given current rates.
+    fn earliest_eta(&self) -> Option<SimTime> {
+        let mut best: Option<f64> = None;
+        for f in self.flows.values() {
+            if f.rate > 0.0 {
+                let eta = f.remaining / f.rate;
+                best = Some(best.map_or(eta, |b: f64| b.min(eta)));
+            }
+        }
+        best.map(|eta| {
+            SimTime((((self.clock.as_secs_f64() + eta) * 1e6).ceil() as u64).max(self.clock.0 + 1))
+        })
+    }
+
+    /// Apply progress from `self.clock` to `t` at current rates.
+    fn apply_progress(&mut self, t: SimTime) {
+        if t <= self.clock {
+            return;
+        }
+        let dt = (t - self.clock).as_secs_f64();
+        for f in self.flows.values_mut() {
+            f.remaining = (f.remaining - f.rate * dt).max(0.0);
+        }
+        for link in &mut self.links {
+            let carried: f64 = link
+                .flows
+                .iter()
+                .map(|id| self.flows[id].rate * dt)
+                .sum();
+            link.bytes_carried += carried;
+        }
+        self.clock = t;
+    }
+
+    /// Reconcile progress up to `now` (before mutating the flow set).
+    fn reconcile(&mut self, now: SimTime) {
+        assert!(now >= self.clock, "network clock moved backwards");
+        self.reallocate_if_dirty();
+        self.apply_progress(now);
+    }
+
+    fn reallocate_if_dirty(&mut self) {
+        if self.dirty {
+            self.reallocate();
+            self.dirty = false;
+        }
+    }
+
+    /// Max-min fair allocation by progressive filling.
+    ///
+    /// Invariants established (checked by property tests):
+    /// 1. no link carries more than its capacity (within 1e-6 rel.);
+    /// 2. no flow exceeds its rate ceiling;
+    /// 3. every flow is bottlenecked: it either sits at its ceiling or
+    ///    traverses a saturated link where it has a maximal share.
+    fn reallocate(&mut self) {
+        self.allocations += 1;
+        if self.flows.is_empty() {
+            return;
+        }
+        // Working copies.
+        let mut residual: Vec<f64> = self.links.iter().map(|l| l.capacity).collect();
+        let mut active_on: Vec<usize> = self.links.iter().map(|l| l.flows.len()).collect();
+        let mut unfixed: Vec<FlowId> = self.flows.keys().copied().collect();
+        unfixed.sort_unstable(); // determinism
+
+        while !unfixed.is_empty() {
+            // Fair share offered by each link still carrying unfixed flows.
+            let mut bottleneck_share = f64::INFINITY;
+            for (i, _link) in self.links.iter().enumerate() {
+                if active_on[i] > 0 {
+                    bottleneck_share = bottleneck_share.min(residual[i] / active_on[i] as f64);
+                }
+            }
+            debug_assert!(bottleneck_share.is_finite());
+
+            // Flows whose ceiling binds below the bottleneck share are
+            // fixed at their ceiling first.
+            let capped: Vec<FlowId> = unfixed
+                .iter()
+                .copied()
+                .filter(|id| {
+                    self.flows[id]
+                        .rate_cap
+                        .is_some_and(|c| c < bottleneck_share)
+                })
+                .collect();
+            if !capped.is_empty() {
+                for id in capped {
+                    let cap = self.flows[&id].rate_cap.expect("cap exists");
+                    self.fix_flow(id, cap, &mut residual, &mut active_on);
+                    unfixed.retain(|&x| x != id);
+                }
+                continue; // shares changed; recompute bottleneck
+            }
+
+            // Otherwise saturate the bottleneck link(s): fix every
+            // unfixed flow crossing a link that offers the minimum
+            // share. (Membership via sorted binary search + a seen
+            // mark — the O(n²) `contains` scans showed up as the top
+            // allocator cost in the perf pass, EXPERIMENTS.md §Perf.)
+            let mut to_fix: Vec<FlowId> = Vec::new();
+            for (i, _) in self.links.iter().enumerate() {
+                if active_on[i] > 0
+                    && residual[i] / active_on[i] as f64 <= bottleneck_share * (1.0 + 1e-12)
+                {
+                    for id in &self.links[i].flows {
+                        if unfixed.binary_search(id).is_ok() && !to_fix.contains(id) {
+                            to_fix.push(*id);
+                        }
+                    }
+                }
+            }
+            debug_assert!(!to_fix.is_empty());
+            to_fix.sort_unstable();
+            for id in to_fix {
+                self.fix_flow(id, bottleneck_share, &mut residual, &mut active_on);
+                unfixed.retain(|&x| x != id);
+            }
+        }
+    }
+
+    fn fix_flow(
+        &mut self,
+        id: FlowId,
+        rate: f64,
+        residual: &mut [f64],
+        active_on: &mut [usize],
+    ) {
+        let flow = self.flows.get_mut(&id).expect("flow exists");
+        flow.rate = rate;
+        for l in &flow.path {
+            let i = l.0 as usize;
+            residual[i] = (residual[i] - rate).max(0.0);
+            active_on[i] -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net1() -> (Network, LinkId) {
+        let mut n = Network::new();
+        let l = n.add_link_gbps(8e-9 * 1000.0); // 1000 B/s for easy math
+        (n, l)
+    }
+
+    #[test]
+    fn single_flow_gets_full_capacity() {
+        let (mut n, l) = net1();
+        let f = n.start_flow(
+            FlowSpec {
+                path: vec![l],
+                bytes: 1000,
+                rate_cap: None,
+            },
+            SimTime::ZERO,
+        );
+        assert!((n.flow_rate(f) - 1000.0).abs() < 1e-6);
+        let t = n.next_completion().unwrap();
+        assert_eq!(t, SimTime::from_secs_f64(1.0));
+        let done = n.advance(t);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].flow, f);
+        assert_eq!(n.active_flows(), 0);
+    }
+
+    #[test]
+    fn two_flows_share_equally() {
+        let (mut n, l) = net1();
+        let spec = |bytes| FlowSpec {
+            path: vec![l],
+            bytes,
+            rate_cap: None,
+        };
+        let f1 = n.start_flow(spec(1000), SimTime::ZERO);
+        let f2 = n.start_flow(spec(1000), SimTime::ZERO);
+        assert!((n.flow_rate(f1) - 500.0).abs() < 1e-6);
+        assert!((n.flow_rate(f2) - 500.0).abs() < 1e-6);
+        // Both finish at t=2s.
+        let t = n.next_completion().unwrap();
+        assert_eq!(t, SimTime::from_secs_f64(2.0));
+        let done = n.advance(t);
+        assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn departure_speeds_up_survivor() {
+        let (mut n, l) = net1();
+        let spec = |bytes| FlowSpec {
+            path: vec![l],
+            bytes,
+            rate_cap: None,
+        };
+        let _f1 = n.start_flow(spec(500), SimTime::ZERO);
+        let f2 = n.start_flow(spec(1500), SimTime::ZERO);
+        // f1 finishes at 1s (rate 500); f2 then has 1000 left at rate 1000.
+        let t1 = n.next_completion().unwrap();
+        assert_eq!(t1, SimTime::from_secs_f64(1.0));
+        let done = n.advance(t1);
+        assert_eq!(done.len(), 1);
+        assert!((n.flow_rate(f2) - 1000.0).abs() < 1e-6);
+        let t2 = n.next_completion().unwrap();
+        assert_eq!(t2, SimTime::from_secs_f64(2.0));
+    }
+
+    #[test]
+    fn cascade_completions_in_one_advance() {
+        let (mut n, l) = net1();
+        let spec = |bytes| FlowSpec {
+            path: vec![l],
+            bytes,
+            rate_cap: None,
+        };
+        n.start_flow(spec(500), SimTime::ZERO);
+        n.start_flow(spec(1500), SimTime::ZERO);
+        // Advance straight to 2s: both complete, at 1s and 2s.
+        let done = n.advance(SimTime::from_secs_f64(2.0));
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].at, SimTime::from_secs_f64(1.0));
+        assert_eq!(done[1].at, SimTime::from_secs_f64(2.0));
+    }
+
+    #[test]
+    fn rate_cap_binds() {
+        let (mut n, l) = net1();
+        let f = n.start_flow(
+            FlowSpec {
+                path: vec![l],
+                bytes: 100,
+                rate_cap: Some(100.0),
+            },
+            SimTime::ZERO,
+        );
+        assert!((n.flow_rate(f) - 100.0).abs() < 1e-6);
+        // Capped flow leaves headroom for an uncapped one.
+        let g = n.start_flow(
+            FlowSpec {
+                path: vec![l],
+                bytes: 900,
+                rate_cap: None,
+            },
+            SimTime::ZERO,
+        );
+        assert!((n.flow_rate(f) - 100.0).abs() < 1e-6);
+        assert!((n.flow_rate(g) - 900.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multi_link_path_takes_min() {
+        let mut n = Network::new();
+        let fast = n.add_link_gbps(8e-9 * 1000.0);
+        let slow = n.add_link_gbps(8e-9 * 250.0);
+        let f = n.start_flow(
+            FlowSpec {
+                path: vec![fast, slow],
+                bytes: 250,
+                rate_cap: None,
+            },
+            SimTime::ZERO,
+        );
+        assert!((n.flow_rate(f) - 250.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_min_three_flows_two_links() {
+        // Classic example: flows A (l1), B (l1+l2), C (l2).
+        // l1 cap 1000, l2 cap 400: B gets 200 (l2 fair share), C 200,
+        // A then gets 800.
+        let mut n = Network::new();
+        let l1 = n.add_link_gbps(8e-9 * 1000.0);
+        let l2 = n.add_link_gbps(8e-9 * 400.0);
+        let a = n.start_flow(
+            FlowSpec { path: vec![l1], bytes: 10_000, rate_cap: None },
+            SimTime::ZERO,
+        );
+        let b = n.start_flow(
+            FlowSpec { path: vec![l1, l2], bytes: 10_000, rate_cap: None },
+            SimTime::ZERO,
+        );
+        let c = n.start_flow(
+            FlowSpec { path: vec![l2], bytes: 10_000, rate_cap: None },
+            SimTime::ZERO,
+        );
+        assert!((n.flow_rate(b) - 200.0).abs() < 1e-6, "b={}", n.flow_rate(b));
+        assert!((n.flow_rate(c) - 200.0).abs() < 1e-6);
+        assert!((n.flow_rate(a) - 800.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn duplicate_links_in_path_count_once() {
+        // The cache-relay pattern: origin→cache→worker crosses the
+        // cache's WAN link twice; capacity must be charged once.
+        let mut n = Network::new();
+        let a = n.add_link_gbps(8e-9 * 1000.0);
+        let b = n.add_link_gbps(8e-9 * 1000.0);
+        let f = n.start_flow(
+            FlowSpec {
+                path: vec![a, b, a, b, a],
+                bytes: 1000,
+                rate_cap: None,
+            },
+            SimTime::ZERO,
+        );
+        assert!((n.flow_rate(f) - 1000.0).abs() < 1e-6);
+        // A second flow on link a shares fairly (no phantom members).
+        let g = n.start_flow(
+            FlowSpec { path: vec![a], bytes: 1000, rate_cap: None },
+            SimTime::ZERO,
+        );
+        assert!((n.flow_rate(f) - 500.0).abs() < 1e-6);
+        assert!((n.flow_rate(g) - 500.0).abs() < 1e-6);
+        // Completions drain cleanly (regression: duplicate entries
+        // underflowed the allocator's active counters).
+        while let Some(t) = n.next_completion() {
+            n.advance(t);
+        }
+        assert_eq!(n.active_flows(), 0);
+    }
+
+    #[test]
+    fn cancel_restores_capacity() {
+        let (mut n, l) = net1();
+        let spec = |bytes| FlowSpec { path: vec![l], bytes, rate_cap: None };
+        let f1 = n.start_flow(spec(10_000), SimTime::ZERO);
+        let f2 = n.start_flow(spec(10_000), SimTime::ZERO);
+        n.advance(SimTime::from_secs_f64(1.0));
+        let left = n.cancel_flow(f1, SimTime::from_secs_f64(1.0)).unwrap();
+        assert_eq!(left, 10_000 - 500);
+        assert!((n.flow_rate(f2) - 1000.0).abs() < 1e-6);
+        assert!(n.cancel_flow(f1, SimTime::from_secs_f64(1.0)).is_none());
+    }
+
+    #[test]
+    fn bytes_carried_accounting() {
+        let (mut n, l) = net1();
+        n.start_flow(
+            FlowSpec { path: vec![l], bytes: 750, rate_cap: None },
+            SimTime::ZERO,
+        );
+        n.advance(SimTime::from_secs_f64(0.5));
+        assert!((n.link_bytes_carried(l) - 500.0).abs() < 1.0);
+        n.advance(SimTime::from_secs_f64(1.0));
+        assert!((n.link_bytes_carried(l) - 750.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn mid_flight_arrival_preserves_progress() {
+        let (mut n, l) = net1();
+        let spec = |bytes| FlowSpec { path: vec![l], bytes, rate_cap: None };
+        let _f1 = n.start_flow(spec(1000), SimTime::ZERO);
+        // At t=0.5, f1 has 500 left; f2 arrives, both at 500 B/s.
+        let f2 = n.start_flow(spec(1000), SimTime::from_secs_f64(0.5));
+        let t = n.next_completion().unwrap();
+        assert_eq!(t, SimTime::from_secs_f64(1.5)); // f1: 500/500
+        let done = n.advance(t);
+        assert_eq!(done.len(), 1);
+        // f2 then has 500 left at 1000 B/s.
+        let t2 = n.next_completion().unwrap();
+        assert_eq!(t2, SimTime::from_secs_f64(2.0));
+        assert_eq!(n.advance(t2)[0].flow, f2);
+    }
+
+    #[test]
+    fn property_capacity_and_ceiling_respected() {
+        use crate::util::prop::check;
+        check("netsim invariants", 60, |g| {
+            let mut n = Network::new();
+            let n_links = g.usize(1, 5);
+            let caps: Vec<f64> = (0..n_links).map(|_| g.f64(100.0, 10_000.0)).collect();
+            let links: Vec<LinkId> = caps
+                .iter()
+                .map(|&c| n.add_link_gbps(8e-9 * c))
+                .collect();
+            let n_flows = g.usize(1, 12);
+            let mut specs = Vec::new();
+            for _ in 0..n_flows {
+                let path_len = g.usize(1, n_links);
+                let mut path: Vec<LinkId> = Vec::new();
+                for _ in 0..path_len {
+                    let l = *g.choose(&links);
+                    if !path.contains(&l) {
+                        path.push(l);
+                    }
+                }
+                let cap = if g.bool() { Some(g.f64(10.0, 5_000.0)) } else { None };
+                specs.push((path, cap));
+            }
+            for (path, cap) in &specs {
+                n.start_flow(
+                    FlowSpec {
+                        path: path.clone(),
+                        bytes: 1_000_000,
+                        rate_cap: *cap,
+                    },
+                    SimTime::ZERO,
+                );
+            }
+            // Invariant 1: per-link load <= capacity.
+            let mut load = vec![0.0f64; n_links];
+            let ids: Vec<FlowId> = n.flows.keys().copied().collect();
+            for id in &ids {
+                let rate = n.flow_rate(*id);
+                let path = n.flows[id].path.clone();
+                for l in path {
+                    load[l.0 as usize] += rate;
+                }
+            }
+            for (i, &l) in load.iter().enumerate() {
+                if l > caps[i] * (1.0 + 1e-6) {
+                    return (false, format!("link {i} overloaded: {l} > {}", caps[i]));
+                }
+            }
+            // Invariant 2: ceilings respected; rates positive.
+            for id in &ids {
+                let f = &n.flows[id];
+                if f.rate <= 0.0 {
+                    return (false, format!("flow {id:?} has rate {}", f.rate));
+                }
+                if let Some(c) = f.rate_cap {
+                    if f.rate > c * (1.0 + 1e-9) {
+                        return (false, format!("flow {id:?} exceeds cap: {} > {c}", f.rate));
+                    }
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    #[test]
+    fn property_work_conservation() {
+        // Total completion time of k equal flows on one link equals
+        // k * serial time (fair sharing conserves work).
+        use crate::util::prop::check;
+        check("work conservation", 30, |g| {
+            let k = g.usize(1, 8) as u64;
+            let bytes = g.u64(1_000, 1_000_000);
+            let mut n = Network::new();
+            let l = n.add_link_gbps(8e-9 * 1e6); // 1 MB/s
+            for _ in 0..k {
+                n.start_flow(
+                    FlowSpec { path: vec![l], bytes, rate_cap: None },
+                    SimTime::ZERO,
+                );
+            }
+            let mut last = SimTime::ZERO;
+            while let Some(t) = n.next_completion() {
+                for c in n.advance(t) {
+                    last = c.at;
+                }
+            }
+            let expected = k as f64 * bytes as f64 / 1e6;
+            let got = last.as_secs_f64();
+            (
+                (got - expected).abs() < 1e-3 + expected * 1e-6,
+                format!("k={k} bytes={bytes} expected {expected} got {got}"),
+            )
+        });
+    }
+}

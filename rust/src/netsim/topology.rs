@@ -1,0 +1,366 @@
+//! Federation network topology.
+//!
+//! Builds the link graph the simulator runs on from a
+//! [`FederationConfig`]: per site a border router joined to an
+//! uncongested WAN core (star topology — contention lives at site
+//! edges, matching the paper's per-site explanations in §5), plus
+//! internal links for workers, the HTTP proxy, and the cache.
+//!
+//! ```text
+//!                    ┌──────── WAN core (uncongested) ────────┐
+//!            wan_gbps│                                         │wan_gbps
+//!               [border s]                                [border o]
+//!          ┌──────┬──┴────┐                                   └── origin_lan ── [origin]
+//!   proxy_wan  worker_wan  cache_wan
+//!       │          │          │
+//!    [proxy]   [workers]   [cache]
+//!       └─proxy_lan┘─cache_lan┘
+//! ```
+//!
+//! RTTs come from great-circle distance between sites
+//! ([`crate::geoip::rtt_ms_for_km`]) plus per-hop LAN latency.
+
+use super::network::{LinkId, Network};
+use crate::config::FederationConfig;
+use crate::geoip::{haversine_km, rtt_ms_for_km};
+use std::collections::HashMap;
+
+/// A communication endpoint in the federation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    /// A worker node at site `site_idx`.
+    Worker(usize),
+    /// The HTTP forward proxy at site `site_idx`.
+    Proxy(usize),
+    /// The StashCache cache at site `site_idx`.
+    Cache(usize),
+    /// Origin `origin_idx` (indexes `FederationConfig::origins`).
+    Origin(usize),
+}
+
+/// Links of one site.
+#[derive(Debug, Clone, Copy)]
+struct SiteLinks {
+    /// border ↔ WAN core.
+    wan: LinkId,
+    /// worker ↔ proxy (present iff the site has a proxy).
+    proxy_lan: Option<LinkId>,
+    /// proxy ↔ border.
+    proxy_wan: Option<LinkId>,
+    /// worker ↔ border.
+    worker_wan: LinkId,
+    /// worker ↔ cache (present iff the site has a cache).
+    cache_lan: Option<LinkId>,
+    /// cache ↔ border.
+    cache_wan: Option<LinkId>,
+}
+
+/// A resolved route: the links a flow occupies and the connection RTT.
+#[derive(Debug, Clone)]
+pub struct Route {
+    pub links: Vec<LinkId>,
+    pub rtt_ms: f64,
+}
+
+/// The built topology: resolves endpoint pairs to routes.
+pub struct Topology {
+    site_links: Vec<SiteLinks>,
+    /// Per-origin access link (the origin's data-transfer nodes).
+    origin_lan: Vec<LinkId>,
+    /// Site index of each origin.
+    origin_site: Vec<usize>,
+    site_names: Vec<String>,
+    name_to_idx: HashMap<String, usize>,
+    coords: Vec<(f64, f64)>,
+    lan_rtt: Vec<f64>,
+}
+
+/// Capacity of each origin's data-transfer-node link (Gbit/s). The
+/// Stash origin at Chicago serves many users concurrently (§4.1:
+/// "There are many users of the filesystem, network, and data transfer
+/// nodes during our tests"), so this is a real contention point shared
+/// by all flows touching the origin.
+pub const ORIGIN_LAN_GBPS: f64 = 10.0;
+
+impl Topology {
+    /// Build the link graph into `net` from the federation config.
+    pub fn build(cfg: &FederationConfig, net: &mut Network) -> Topology {
+        let mut site_links = Vec::with_capacity(cfg.sites.len());
+        let mut site_names = Vec::new();
+        let mut coords = Vec::new();
+        let mut lan_rtt = Vec::new();
+        let mut name_to_idx = HashMap::new();
+
+        for (idx, s) in cfg.sites.iter().enumerate() {
+            let l = &s.links;
+            let links = SiteLinks {
+                wan: net.add_link_gbps(l.wan_gbps),
+                proxy_lan: s.proxy.map(|_| net.add_link_gbps(l.proxy_lan_gbps)),
+                proxy_wan: s.proxy.map(|_| net.add_link_gbps(l.proxy_wan_gbps)),
+                worker_wan: net.add_link_gbps(l.worker_wan_gbps),
+                cache_lan: s.cache.map(|_| net.add_link_gbps(l.cache_lan_gbps)),
+                cache_wan: s.cache.map(|_| net.add_link_gbps(l.cache_wan_gbps)),
+            };
+            site_links.push(links);
+            name_to_idx.insert(s.name.clone(), idx);
+            site_names.push(s.name.clone());
+            coords.push((s.lat, s.lon));
+            lan_rtt.push(l.lan_rtt_ms);
+        }
+
+        let mut origin_lan = Vec::new();
+        let mut origin_site = Vec::new();
+        for o in &cfg.origins {
+            origin_lan.push(net.add_link_gbps(ORIGIN_LAN_GBPS));
+            origin_site.push(name_to_idx[&o.site]);
+        }
+
+        Topology {
+            site_links,
+            origin_lan,
+            origin_site,
+            site_names,
+            name_to_idx,
+            coords,
+            lan_rtt,
+        }
+    }
+
+    pub fn site_index(&self, name: &str) -> Option<usize> {
+        self.name_to_idx.get(name).copied()
+    }
+
+    pub fn site_name(&self, idx: usize) -> &str {
+        &self.site_names[idx]
+    }
+
+    pub fn site_count(&self) -> usize {
+        self.site_links.len()
+    }
+
+    pub fn origin_site(&self, origin_idx: usize) -> usize {
+        self.origin_site[origin_idx]
+    }
+
+    /// The WAN edge link of a site (for Fig 5's border traffic counter).
+    pub fn wan_link(&self, site_idx: usize) -> LinkId {
+        self.site_links[site_idx].wan
+    }
+
+    /// An origin's DTN access link (background-load attachment point).
+    pub fn origin_lan_link(&self, origin_idx: usize) -> LinkId {
+        self.origin_lan[origin_idx]
+    }
+
+    /// Great-circle distance between two sites (km).
+    pub fn distance_km(&self, a: usize, b: usize) -> f64 {
+        let (la, lo) = self.coords[a];
+        let (lb, lob) = self.coords[b];
+        haversine_km(la, lo, lb, lob)
+    }
+
+    fn wan_rtt_ms(&self, a: usize, b: usize) -> f64 {
+        rtt_ms_for_km(self.distance_km(a, b))
+    }
+
+    fn endpoint_site(&self, e: Endpoint) -> usize {
+        match e {
+            Endpoint::Worker(s) | Endpoint::Proxy(s) | Endpoint::Cache(s) => s,
+            Endpoint::Origin(o) => self.origin_site[o],
+        }
+    }
+
+    /// Links from an endpoint up to its site border, plus LAN RTT.
+    fn legs_to_border(&self, e: Endpoint) -> (Vec<LinkId>, f64) {
+        let s = self.endpoint_site(e);
+        let sl = &self.site_links[s];
+        let rtt = self.lan_rtt[s];
+        match e {
+            Endpoint::Worker(_) => (vec![sl.worker_wan], rtt),
+            Endpoint::Proxy(_) => (
+                vec![sl.proxy_wan.expect("site has no proxy")],
+                rtt,
+            ),
+            Endpoint::Cache(_) => (
+                vec![sl.cache_wan.expect("site has no cache")],
+                rtt,
+            ),
+            Endpoint::Origin(o) => (vec![self.origin_lan[o]], rtt),
+        }
+    }
+
+    /// Resolve the route between two endpoints.
+    ///
+    /// Same-site special cases use direct LAN links where they exist
+    /// (worker↔proxy via `proxy_lan`, worker↔cache via `cache_lan`);
+    /// everything else goes border-to-border across the WAN core.
+    pub fn route(&self, from: Endpoint, to: Endpoint) -> Route {
+        assert_ne!(from, to, "route to self");
+        let fs = self.endpoint_site(from);
+        let ts = self.endpoint_site(to);
+
+        if fs == ts {
+            let sl = &self.site_links[fs];
+            let lan = self.lan_rtt[fs];
+            // Direct LAN shortcuts.
+            match (from, to) {
+                (Endpoint::Worker(_), Endpoint::Proxy(_))
+                | (Endpoint::Proxy(_), Endpoint::Worker(_)) => {
+                    return Route {
+                        links: vec![sl.proxy_lan.expect("proxy_lan")],
+                        rtt_ms: lan,
+                    }
+                }
+                (Endpoint::Worker(_), Endpoint::Cache(_))
+                | (Endpoint::Cache(_), Endpoint::Worker(_)) => {
+                    return Route {
+                        links: vec![sl.cache_lan.expect("cache_lan")],
+                        rtt_ms: lan,
+                    }
+                }
+                _ => {
+                    // e.g. cache↔origin on the same campus: both legs
+                    // to the border, no WAN crossing.
+                    let (mut a, r1) = self.legs_to_border(from);
+                    let (b, r2) = self.legs_to_border(to);
+                    a.extend(b);
+                    return Route {
+                        links: a,
+                        rtt_ms: r1 + r2,
+                    };
+                }
+            }
+        }
+
+        let (mut links, r1) = self.legs_to_border(from);
+        links.push(self.site_links[fs].wan);
+        links.push(self.site_links[ts].wan);
+        let (to_legs, r2) = self.legs_to_border(to);
+        links.extend(to_legs);
+        Route {
+            links,
+            rtt_ms: r1 + r2 + self.wan_rtt_ms(fs, ts),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+
+    fn setup() -> (crate::config::FederationConfig, Network, Topology) {
+        let cfg = paper_federation();
+        let mut net = Network::new();
+        let topo = Topology::build(&cfg, &mut net);
+        (cfg, net, topo)
+    }
+
+    #[test]
+    fn builds_expected_link_count() {
+        let (cfg, net, topo) = setup();
+        // Per site: wan + worker_wan always; proxy_lan+proxy_wan if proxy;
+        // cache_lan+cache_wan if cache; plus one origin_lan per origin.
+        let mut expected = 0;
+        for s in &cfg.sites {
+            expected += 2;
+            if s.proxy.is_some() {
+                expected += 2;
+            }
+            if s.cache.is_some() {
+                expected += 2;
+            }
+        }
+        expected += cfg.origins.len();
+        assert_eq!(net.link_count(), expected);
+        assert_eq!(topo.site_count(), cfg.sites.len());
+    }
+
+    #[test]
+    fn worker_to_local_proxy_is_single_lan_link() {
+        let (_, _, topo) = setup();
+        let s = topo.site_index("syracuse").unwrap();
+        let r = topo.route(Endpoint::Worker(s), Endpoint::Proxy(s));
+        assert_eq!(r.links.len(), 1);
+        assert!(r.rtt_ms < 1.0, "LAN rtt, got {}", r.rtt_ms);
+    }
+
+    #[test]
+    fn worker_to_local_cache_is_single_lan_link() {
+        let (_, _, topo) = setup();
+        let s = topo.site_index("syracuse").unwrap();
+        let r = topo.route(Endpoint::Worker(s), Endpoint::Cache(s));
+        assert_eq!(r.links.len(), 1);
+    }
+
+    #[test]
+    fn worker_to_remote_cache_crosses_wan() {
+        let (_, _, topo) = setup();
+        let col = topo.site_index("colorado").unwrap();
+        let kc = topo.site_index("i2-kansascity").unwrap();
+        let r = topo.route(Endpoint::Worker(col), Endpoint::Cache(kc));
+        // worker_wan + wan(col) + wan(kc) + cache_wan(kc)
+        assert_eq!(r.links.len(), 4);
+        // Boulder to Kansas City is ~ 880 km → rtt ≳ 12 ms.
+        assert!(r.rtt_ms > 8.0, "WAN rtt, got {}", r.rtt_ms);
+    }
+
+    #[test]
+    fn proxy_to_origin_same_site_avoids_wan() {
+        let (cfg, _, topo) = setup();
+        let chi = topo.site_index("chicago").unwrap();
+        let origin_idx = cfg
+            .origins
+            .iter()
+            .position(|o| o.site == "chicago")
+            .unwrap();
+        let r = topo.route(Endpoint::Proxy(chi), Endpoint::Origin(origin_idx));
+        // proxy_wan + origin_lan: no site wan links.
+        assert_eq!(r.links.len(), 2);
+        let wan = topo.wan_link(chi);
+        assert!(!r.links.contains(&wan), "same-site route must skip WAN");
+    }
+
+    #[test]
+    fn cache_to_origin_remote_path_shape() {
+        let (cfg, _, topo) = setup();
+        let syr = topo.site_index("syracuse").unwrap();
+        let origin_idx = cfg.origins.iter().position(|o| o.site == "chicago").unwrap();
+        let r = topo.route(Endpoint::Cache(syr), Endpoint::Origin(origin_idx));
+        // cache_wan + wan(syr) + wan(chi) + origin_lan
+        assert_eq!(r.links.len(), 4);
+    }
+
+    #[test]
+    fn routes_are_symmetric_in_links() {
+        let (_, _, topo) = setup();
+        let a = topo.site_index("nebraska").unwrap();
+        let b = topo.site_index("ucsd").unwrap();
+        let r1 = topo.route(Endpoint::Worker(a), Endpoint::Cache(b));
+        let mut l1 = r1.links.clone();
+        let r2 = topo.route(Endpoint::Cache(b), Endpoint::Worker(a));
+        let mut l2 = r2.links.clone();
+        l1.sort();
+        l2.sort();
+        assert_eq!(l1, l2);
+        assert!((r1.rtt_ms - r2.rtt_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distances_sane() {
+        let (_, _, topo) = setup();
+        let chi = topo.site_index("chicago").unwrap();
+        let ams = topo.site_index("amsterdam").unwrap();
+        let d = topo.distance_km(chi, ams);
+        assert!((6_000.0..7_500.0).contains(&d), "chicago-amsterdam {d}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no cache")]
+    fn route_to_missing_cache_panics() {
+        let (_, _, topo) = setup();
+        let col = topo.site_index("colorado").unwrap();
+        let syr = topo.site_index("syracuse").unwrap();
+        let _ = topo.route(Endpoint::Worker(syr), Endpoint::Cache(col));
+    }
+}

@@ -1,0 +1,154 @@
+//! Deterministic synthetic file content.
+//!
+//! The paper's evaluation moves real experiment files we do not have;
+//! the substitution (DESIGN.md §2) is a keyed keystream: byte `i` of a
+//! file is a pure function of `(path, mtime, i)`. Live-mode transfers
+//! therefore carry *real bytes* that any party can independently
+//! regenerate and verify — which is exactly the consistency guarantee
+//! CVMFS's chunk checksums provide in production (§6: "CVMFS
+//! calculates checksums of the data, which guarantees consistency").
+//!
+//! The stream is SHA-256 in counter mode: block `b` of a file is
+//! `sha256(path \0 mtime \0 b)`. Changing `mtime` (a rewrite of the
+//! file) changes every byte, so stale-cache detection is testable.
+
+use sha2::{Digest, Sha256};
+
+/// Bytes per keystream block (SHA-256 output size).
+pub const BLOCK: u64 = 32;
+
+fn block_digest(path: &str, mtime: u64, block_idx: u64) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(path.as_bytes());
+    h.update([0u8]);
+    h.update(mtime.to_le_bytes());
+    h.update([0u8]);
+    h.update(block_idx.to_le_bytes());
+    h.finalize().into()
+}
+
+/// Fill `buf` with the content of `path` (version `mtime`) starting at
+/// byte `offset`.
+pub fn fill(path: &str, mtime: u64, offset: u64, buf: &mut [u8]) {
+    let mut pos = 0usize;
+    let mut abs = offset;
+    while pos < buf.len() {
+        let block_idx = abs / BLOCK;
+        let within = (abs % BLOCK) as usize;
+        let digest = block_digest(path, mtime, block_idx);
+        let take = ((BLOCK as usize) - within).min(buf.len() - pos);
+        buf[pos..pos + take].copy_from_slice(&digest[within..within + take]);
+        pos += take;
+        abs += take as u64;
+    }
+}
+
+/// SHA-256 of a content extent — the indexer's chunk-boundary checksum
+/// (§3.1: "Checksum of files along the chunk boundaries").
+pub fn extent_checksum(path: &str, mtime: u64, offset: u64, len: u64) -> [u8; 32] {
+    let mut h = Sha256::new();
+    let mut remaining = len;
+    let mut abs = offset;
+    let mut buf = [0u8; 8192];
+    while remaining > 0 {
+        let take = remaining.min(buf.len() as u64) as usize;
+        fill(path, mtime, abs, &mut buf[..take]);
+        h.update(&buf[..take]);
+        abs += take as u64;
+        remaining -= take as u64;
+    }
+    h.finalize().into()
+}
+
+/// Verify a received buffer against the expected content.
+pub fn verify(path: &str, mtime: u64, offset: u64, got: &[u8]) -> bool {
+    let mut expected = vec![0u8; got.len()];
+    fill(path, mtime, offset, &mut expected);
+    expected == got
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = [0u8; 100];
+        let mut b = [0u8; 100];
+        fill("/data/f1", 7, 0, &mut a);
+        fill("/data/f1", 7, 0, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn offset_consistency() {
+        // Reading [100, 200) directly equals bytes 100..200 of [0, 300).
+        let mut whole = vec![0u8; 300];
+        fill("/data/f2", 1, 0, &mut whole);
+        let mut part = vec![0u8; 100];
+        fill("/data/f2", 1, 100, &mut part);
+        assert_eq!(&whole[100..200], &part[..]);
+    }
+
+    #[test]
+    fn unaligned_offsets() {
+        let mut whole = vec![0u8; 200];
+        fill("/f", 0, 0, &mut whole);
+        for &(off, len) in &[(1u64, 31usize), (31, 33), (33, 1), (63, 65)] {
+            let mut part = vec![0u8; len];
+            fill("/f", 0, off, &mut part);
+            assert_eq!(&whole[off as usize..off as usize + len], &part[..], "off={off}");
+        }
+    }
+
+    #[test]
+    fn distinct_paths_and_versions_differ() {
+        let mut a = [0u8; 64];
+        let mut b = [0u8; 64];
+        fill("/p1", 0, 0, &mut a);
+        fill("/p2", 0, 0, &mut b);
+        assert_ne!(a, b);
+        fill("/p1", 1, 0, &mut b); // same path, new mtime
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn checksum_matches_manual_hash() {
+        use sha2::{Digest, Sha256};
+        let mut buf = vec![0u8; 10_000];
+        fill("/cks", 3, 500, &mut buf);
+        let manual: [u8; 32] = Sha256::digest(&buf).into();
+        assert_eq!(extent_checksum("/cks", 3, 500, 10_000), manual);
+    }
+
+    #[test]
+    fn verify_accepts_and_rejects() {
+        let mut buf = vec![0u8; 256];
+        fill("/v", 9, 64, &mut buf);
+        assert!(verify("/v", 9, 64, &buf));
+        buf[10] ^= 0xff;
+        assert!(!verify("/v", 9, 64, &buf));
+        // Wrong version (stale cache) detected.
+        let mut stale = vec![0u8; 256];
+        fill("/v", 8, 64, &mut stale);
+        assert!(!verify("/v", 9, 64, &stale));
+    }
+
+    #[test]
+    fn property_fill_is_extent_consistent() {
+        use crate::util::prop::check;
+        check("content extent consistency", 50, |g| {
+            let off = g.u64(0, 1_000);
+            let len = g.usize(1, 512);
+            let split = g.usize(0, len);
+            let mut whole = vec![0u8; len];
+            fill("/prop", 5, off, &mut whole);
+            let mut left = vec![0u8; split];
+            let mut right = vec![0u8; len - split];
+            fill("/prop", 5, off, &mut left);
+            fill("/prop", 5, off + split as u64, &mut right);
+            let ok = whole[..split] == left[..] && whole[split..] == right[..];
+            (ok, format!("off={off} len={len} split={split}"))
+        });
+    }
+}

@@ -1,0 +1,236 @@
+//! Data origin: the authoritative source of data in the federation.
+//!
+//! Paper §3: "Data origins are installed on the researcher's storage.
+//! The origin is the authoritative source of data within the
+//! federation. Each Origin is registered to serve a subset of the
+//! global namespace." Built on XRootD in production; here a from-
+//! scratch service (DESIGN.md §2 row 2) with:
+//!
+//! * a [`Dataset`] of exported files (the "researcher's storage"),
+//! * deterministic synthetic [`content`] so live transfers carry real,
+//!   verifiable bytes without shipping real experiment data,
+//! * the CVMFS [`indexer`] that scans the origin and computes
+//!   chunk-boundary checksums (§3.1).
+
+pub mod content;
+pub mod indexer;
+
+use crate::namespace::OriginId;
+use std::collections::BTreeMap;
+
+/// Metadata of one exported file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FileMeta {
+    pub size: u64,
+    /// Modification time (seconds since epoch) — drives re-indexing.
+    pub mtime: u64,
+    /// POSIX permission bits (the indexer records them).
+    pub perm: u16,
+}
+
+/// An origin server exporting one namespace prefix.
+#[derive(Debug)]
+pub struct Origin {
+    pub id: OriginId,
+    pub name: String,
+    /// Namespace prefix this origin is authoritative for.
+    pub prefix: String,
+    files: BTreeMap<String, FileMeta>,
+    /// Served-bytes counter (monitoring).
+    pub bytes_served: u64,
+    /// Location queries answered (redirector traffic).
+    pub locate_queries: u64,
+}
+
+/// Errors from origin operations.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum OriginError {
+    #[error("path {0:?} is outside origin prefix")]
+    OutsidePrefix(String),
+    #[error("no such file: {0:?}")]
+    NotFound(String),
+    #[error("read past EOF: {path:?} offset {offset} len {len} size {size}")]
+    BadRange {
+        path: String,
+        offset: u64,
+        len: u64,
+        size: u64,
+    },
+}
+
+impl Origin {
+    pub fn new(id: OriginId, name: impl Into<String>, prefix: impl Into<String>) -> Self {
+        let prefix = prefix.into();
+        assert!(prefix.starts_with('/'), "origin prefix must be absolute");
+        Origin {
+            id,
+            name: name.into(),
+            prefix,
+            files: BTreeMap::new(),
+            bytes_served: 0,
+            locate_queries: 0,
+        }
+    }
+
+    fn check_prefix(&self, path: &str) -> Result<(), OriginError> {
+        if path.starts_with(&self.prefix) {
+            Ok(())
+        } else {
+            Err(OriginError::OutsidePrefix(path.to_string()))
+        }
+    }
+
+    /// Export (or overwrite) a file.
+    pub fn put_file(&mut self, path: &str, meta: FileMeta) -> Result<(), OriginError> {
+        self.check_prefix(path)?;
+        self.files.insert(path.to_string(), meta);
+        Ok(())
+    }
+
+    /// Remove a file (owner reclaiming space).
+    pub fn remove_file(&mut self, path: &str) -> Option<FileMeta> {
+        self.files.remove(path)
+    }
+
+    /// Update mtime/size in place (researcher rewrote the file) — the
+    /// indexer must notice this (§3.1).
+    pub fn modify_file(&mut self, path: &str, size: u64, mtime: u64) -> Result<(), OriginError> {
+        let meta = self
+            .files
+            .get_mut(path)
+            .ok_or_else(|| OriginError::NotFound(path.to_string()))?;
+        meta.size = size;
+        meta.mtime = mtime;
+        Ok(())
+    }
+
+    /// Does this origin hold `path`? (The redirector's question.)
+    pub fn locate(&mut self, path: &str) -> bool {
+        self.locate_queries += 1;
+        self.files.contains_key(path)
+    }
+
+    pub fn stat(&self, path: &str) -> Result<FileMeta, OriginError> {
+        self.files
+            .get(path)
+            .copied()
+            .ok_or_else(|| OriginError::NotFound(path.to_string()))
+    }
+
+    /// Validate a logical read and account the served bytes. Flow-level
+    /// simulation transfers no payload; live mode pairs this with
+    /// [`content::fill`] for the actual bytes.
+    pub fn read(&mut self, path: &str, offset: u64, len: u64) -> Result<FileMeta, OriginError> {
+        let meta = self.stat(path)?;
+        if offset.checked_add(len).is_none_or(|end| end > meta.size) {
+            return Err(OriginError::BadRange {
+                path: path.to_string(),
+                offset,
+                len,
+                size: meta.size,
+            });
+        }
+        self.bytes_served += len;
+        Ok(meta)
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.files.values().map(|m| m.size).sum()
+    }
+
+    /// Iterate over all exported files (the indexer's scan).
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &FileMeta)> {
+        self.files.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn origin() -> Origin {
+        let mut o = Origin::new(OriginId(0), "stash-chicago", "/osgconnect/public");
+        o.put_file(
+            "/osgconnect/public/user1/data.tar",
+            FileMeta {
+                size: 1_000_000,
+                mtime: 100,
+                perm: 0o644,
+            },
+        )
+        .unwrap();
+        o
+    }
+
+    #[test]
+    fn put_and_stat() {
+        let o = origin();
+        let m = o.stat("/osgconnect/public/user1/data.tar").unwrap();
+        assert_eq!(m.size, 1_000_000);
+        assert_eq!(o.file_count(), 1);
+        assert_eq!(o.total_bytes(), 1_000_000);
+    }
+
+    #[test]
+    fn rejects_out_of_prefix() {
+        let mut o = origin();
+        let e = o
+            .put_file(
+                "/ospool/ligo/f.gwf",
+                FileMeta { size: 1, mtime: 0, perm: 0o644 },
+            )
+            .unwrap_err();
+        assert!(matches!(e, OriginError::OutsidePrefix(_)));
+    }
+
+    #[test]
+    fn read_accounting_and_ranges() {
+        let mut o = origin();
+        o.read("/osgconnect/public/user1/data.tar", 0, 500_000).unwrap();
+        o.read("/osgconnect/public/user1/data.tar", 500_000, 500_000)
+            .unwrap();
+        assert_eq!(o.bytes_served, 1_000_000);
+        let e = o
+            .read("/osgconnect/public/user1/data.tar", 900_000, 200_000)
+            .unwrap_err();
+        assert!(matches!(e, OriginError::BadRange { .. }));
+        // Overflowing range must not panic.
+        let e = o
+            .read("/osgconnect/public/user1/data.tar", u64::MAX, 2)
+            .unwrap_err();
+        assert!(matches!(e, OriginError::BadRange { .. }));
+    }
+
+    #[test]
+    fn locate_counts_queries() {
+        let mut o = origin();
+        assert!(o.locate("/osgconnect/public/user1/data.tar"));
+        assert!(!o.locate("/osgconnect/public/nope"));
+        assert_eq!(o.locate_queries, 2);
+    }
+
+    #[test]
+    fn modify_updates_meta() {
+        let mut o = origin();
+        o.modify_file("/osgconnect/public/user1/data.tar", 42, 200)
+            .unwrap();
+        let m = o.stat("/osgconnect/public/user1/data.tar").unwrap();
+        assert_eq!((m.size, m.mtime), (42, 200));
+        assert_eq!(
+            o.modify_file("/osgconnect/public/zzz", 1, 1),
+            Err(OriginError::NotFound("/osgconnect/public/zzz".into()))
+        );
+    }
+
+    #[test]
+    fn remove_file() {
+        let mut o = origin();
+        assert!(o.remove_file("/osgconnect/public/user1/data.tar").is_some());
+        assert!(o.remove_file("/osgconnect/public/user1/data.tar").is_none());
+        assert_eq!(o.file_count(), 0);
+    }
+}

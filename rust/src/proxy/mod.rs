@@ -1,0 +1,319 @@
+//! Site HTTP forward proxy — the paper's baseline (squid-like).
+//!
+//! Paper §1: "the HTTP proxies have well known limitations ... the
+//! proxies are optimized for small files such as software and
+//! experiment conditions rather than the multi-gigabyte files that
+//! some users require." §5 observed two concrete behaviours this
+//! module reproduces:
+//!
+//! * **Max object size** — "The HTTP proxies at sites are configured to
+//!   not cache large files. In all of our tests, the 95th percentile
+//!   file and the 10GB file were never cached": objects larger than
+//!   [`crate::config::ProxyConfig::max_object`] pass through uncached.
+//! * **Rapid expiry** — "we experienced expiration of files within the
+//!   HTTP proxies ... the first files were already expired within the
+//!   cache and deleted": objects expire after `ttl_secs` and LRU
+//!   eviction reclaims space under capacity pressure.
+
+use crate::config::ProxyConfig;
+use crate::util::{ByteSize, Duration, SimTime};
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct CachedObject {
+    size: u64,
+    stored_at: SimTime,
+    last_access: SimTime,
+    access_seq: u64,
+}
+
+/// Result of a proxy lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProxyLookup {
+    /// Object is cached and fresh: served from the proxy.
+    Hit,
+    /// Object must be fetched from upstream; `cacheable` says whether
+    /// the proxy will store it on the way through.
+    Miss { cacheable: bool, reason: MissReason },
+}
+
+/// Why a lookup missed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MissReason {
+    /// Never seen (or previously evicted).
+    Cold,
+    /// Cached copy was past its TTL ("expiration of files within the
+    /// HTTP proxies", §5).
+    Expired,
+    /// Larger than `max_object`: pass-through, never cached.
+    TooLarge,
+}
+
+/// Proxy counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ProxyStats {
+    pub requests: u64,
+    pub hits: u64,
+    pub misses_cold: u64,
+    pub misses_expired: u64,
+    pub passthrough_too_large: u64,
+    pub evictions: u64,
+    pub bytes_served_hit: u64,
+    pub bytes_fetched_upstream: u64,
+}
+
+/// The squid-like forward proxy state machine.
+#[derive(Debug)]
+pub struct ProxyServer {
+    pub name: String,
+    pub cfg: ProxyConfig,
+    objects: HashMap<String, CachedObject>,
+    usage: u64,
+    seq: u64,
+    pub stats: ProxyStats,
+}
+
+impl ProxyServer {
+    pub fn new(name: impl Into<String>, cfg: ProxyConfig) -> Self {
+        ProxyServer {
+            name: name.into(),
+            cfg,
+            objects: HashMap::new(),
+            usage: 0,
+            seq: 0,
+            stats: ProxyStats::default(),
+        }
+    }
+
+    pub fn usage(&self) -> ByteSize {
+        ByteSize(self.usage)
+    }
+
+    pub fn object_count(&self) -> usize {
+        self.objects.len()
+    }
+
+    fn ttl(&self) -> Duration {
+        Duration::from_secs_f64(self.cfg.ttl_secs)
+    }
+
+    /// Look up `url` (an object of `size` bytes) at time `now`.
+    pub fn lookup(&mut self, url: &str, size: u64, now: SimTime) -> ProxyLookup {
+        self.stats.requests += 1;
+        if size > self.cfg.max_object.as_u64() {
+            self.stats.passthrough_too_large += 1;
+            return ProxyLookup::Miss {
+                cacheable: false,
+                reason: MissReason::TooLarge,
+            };
+        }
+        let ttl = self.ttl();
+        match self.objects.get_mut(url) {
+            Some(obj) if now - obj.stored_at <= ttl => {
+                self.seq += 1;
+                obj.last_access = now;
+                obj.access_seq = self.seq;
+                self.stats.hits += 1;
+                self.stats.bytes_served_hit += obj.size;
+                ProxyLookup::Hit
+            }
+            Some(_) => {
+                // Expired: squid deletes on validation failure.
+                let obj = self.objects.remove(url).expect("checked above");
+                self.usage -= obj.size;
+                self.stats.misses_expired += 1;
+                ProxyLookup::Miss {
+                    cacheable: true,
+                    reason: MissReason::Expired,
+                }
+            }
+            None => {
+                self.stats.misses_cold += 1;
+                ProxyLookup::Miss {
+                    cacheable: true,
+                    reason: MissReason::Cold,
+                }
+            }
+        }
+    }
+
+    /// Store an object after fetching it upstream (only called when the
+    /// preceding lookup said `cacheable`). Runs LRU eviction to fit.
+    pub fn commit(&mut self, url: &str, size: u64, now: SimTime) {
+        assert!(
+            size <= self.cfg.max_object.as_u64(),
+            "committing an uncacheable object"
+        );
+        self.stats.bytes_fetched_upstream += size;
+        // Evict LRU objects until the new one fits.
+        while self.usage + size > self.cfg.capacity.as_u64() && !self.objects.is_empty() {
+            let victim = self
+                .objects
+                .iter()
+                .min_by_key(|(_, o)| (o.last_access, o.access_seq))
+                .map(|(k, _)| k.clone())
+                .expect("non-empty");
+            let obj = self.objects.remove(&victim).expect("victim exists");
+            self.usage -= obj.size;
+            self.stats.evictions += 1;
+        }
+        self.seq += 1;
+        if let Some(prev) = self.objects.insert(
+            url.to_string(),
+            CachedObject {
+                size,
+                stored_at: now,
+                last_access: now,
+                access_seq: self.seq,
+            },
+        ) {
+            self.usage -= prev.size;
+        }
+        self.usage += size;
+    }
+
+    /// Hit ratio so far (requests > 0).
+    pub fn hit_ratio(&self) -> f64 {
+        if self.stats.requests == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / self.stats.requests as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity: u64, max_object: u64, ttl: f64) -> ProxyConfig {
+        ProxyConfig {
+            capacity: ByteSize(capacity),
+            max_object: ByteSize(max_object),
+            ttl_secs: ttl,
+            per_conn_gbps: 1.0,
+        }
+    }
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn cold_then_hit() {
+        let mut p = ProxyServer::new("sq", cfg(10_000, 5_000, 3600.0));
+        assert_eq!(
+            p.lookup("/u", 100, t(0.0)),
+            ProxyLookup::Miss { cacheable: true, reason: MissReason::Cold }
+        );
+        p.commit("/u", 100, t(0.0));
+        assert_eq!(p.lookup("/u", 100, t(1.0)), ProxyLookup::Hit);
+        assert_eq!(p.stats.hits, 1);
+        assert_eq!(p.usage().as_u64(), 100);
+    }
+
+    #[test]
+    fn large_files_never_cached() {
+        // "the 95th percentile file and the 10GB file were never cached"
+        let mut p = ProxyServer::new("sq", cfg(100_000, 1_000, 3600.0));
+        for _ in 0..3 {
+            let r = p.lookup("/big", 2_335, t(0.0));
+            assert_eq!(
+                r,
+                ProxyLookup::Miss { cacheable: false, reason: MissReason::TooLarge }
+            );
+        }
+        assert_eq!(p.object_count(), 0);
+        assert_eq!(p.stats.passthrough_too_large, 3);
+    }
+
+    #[test]
+    fn ttl_expiry_forces_refetch() {
+        let mut p = ProxyServer::new("sq", cfg(10_000, 5_000, 60.0));
+        p.lookup("/u", 100, t(0.0));
+        p.commit("/u", 100, t(0.0));
+        assert_eq!(p.lookup("/u", 100, t(59.0)), ProxyLookup::Hit);
+        assert_eq!(
+            p.lookup("/u", 100, t(61.0)),
+            ProxyLookup::Miss { cacheable: true, reason: MissReason::Expired }
+        );
+        assert_eq!(p.usage().as_u64(), 0, "expired object deleted");
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure() {
+        let mut p = ProxyServer::new("sq", cfg(250, 200, 3600.0));
+        p.lookup("/a", 100, t(0.0));
+        p.commit("/a", 100, t(0.0));
+        p.lookup("/b", 100, t(1.0));
+        p.commit("/b", 100, t(1.0));
+        // Touch /a so /b is LRU.
+        assert_eq!(p.lookup("/a", 100, t(2.0)), ProxyLookup::Hit);
+        // /c (100) forces eviction of /b.
+        p.lookup("/c", 100, t(3.0));
+        p.commit("/c", 100, t(3.0));
+        assert_eq!(p.lookup("/a", 100, t(4.0)), ProxyLookup::Hit);
+        assert!(matches!(p.lookup("/b", 100, t(4.0)), ProxyLookup::Miss { .. }));
+        assert_eq!(p.stats.evictions, 1);
+        assert!(p.usage().as_u64() <= 250);
+    }
+
+    #[test]
+    fn paper_loop_expiry_scenario() {
+        // §5: "Our initial design ... would loop through the list of
+        // download files, then loop again ... After downloading the
+        // last large file, the first files were already expired."
+        let mut p = ProxyServer::new("sq", cfg(1 << 30, 1 << 20, 100.0));
+        let files: Vec<String> = (0..5).map(|i| format!("/f{i}")).collect();
+        // First pass: each download takes 30 "seconds".
+        for (i, f) in files.iter().enumerate() {
+            let now = t(30.0 * i as f64);
+            assert!(matches!(p.lookup(f, 1_000, now), ProxyLookup::Miss { .. }));
+            p.commit(f, 1_000, now);
+        }
+        // Second pass starting at t=150: /f0 (stored t=0) and /f1
+        // (t=30) are past the 100 s TTL.
+        let mut expired = 0;
+        for (i, f) in files.iter().enumerate() {
+            let now = t(150.0 + 5.0 * i as f64);
+            if matches!(
+                p.lookup(f, 1_000, now),
+                ProxyLookup::Miss { reason: MissReason::Expired, .. }
+            ) {
+                expired += 1;
+                p.commit(f, 1_000, now);
+            }
+        }
+        assert!(expired >= 2, "early files expired during the loop: {expired}");
+    }
+
+    #[test]
+    fn recommit_replaces_object() {
+        let mut p = ProxyServer::new("sq", cfg(10_000, 5_000, 3600.0));
+        p.commit("/u", 100, t(0.0));
+        p.commit("/u", 200, t(1.0));
+        assert_eq!(p.usage().as_u64(), 200);
+        assert_eq!(p.object_count(), 1);
+    }
+
+    #[test]
+    fn property_usage_never_exceeds_capacity() {
+        use crate::util::prop::check;
+        check("proxy capacity invariant", 60, |g| {
+            let cap = g.u64(500, 5_000);
+            let mut p = ProxyServer::new("p", cfg(cap, cap, 1e9));
+            for i in 0..g.usize(1, 50) {
+                let url = format!("/o{}", g.u64(0, 20));
+                let size = g.u64(1, cap);
+                let now = t(i as f64);
+                if matches!(p.lookup(&url, size, now), ProxyLookup::Miss { cacheable: true, .. }) {
+                    p.commit(&url, size, now);
+                }
+                if p.usage().as_u64() > cap {
+                    return (false, format!("usage {} > cap {cap}", p.usage()));
+                }
+            }
+            (true, String::new())
+        });
+    }
+}

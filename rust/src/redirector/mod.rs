@@ -1,0 +1,260 @@
+//! XRootD-style redirector: the federation's data-discovery service.
+//!
+//! Paper §3: "The redirector serves as the data discovery service.
+//! Caches query the redirector to find which origin contains the
+//! requested data. The redirector will query the origins in order to
+//! find the data and return the hostname of the origin ... There are
+//! two redirectors in a round robin, high availability configuration."
+//!
+//! [`Redirector`] holds a TTL'd location cache and broadcasts to the
+//! origin set on a miss (cmsd-style). [`RedirectorPool`] provides the
+//! round-robin HA front: lookups rotate across healthy instances and
+//! fail over when an instance is marked down (failure injection uses
+//! this in the integration tests).
+
+use crate::namespace::OriginId;
+use crate::origin::Origin;
+use crate::util::{Duration, SimTime};
+use std::collections::HashMap;
+
+/// One redirector instance.
+#[derive(Debug)]
+pub struct Redirector {
+    pub id: usize,
+    /// path → (origin, cache-entry expiry).
+    location_cache: HashMap<String, (OriginId, SimTime)>,
+    /// TTL of location-cache entries.
+    pub cache_ttl: Duration,
+    /// Instance up? (failure injection)
+    pub healthy: bool,
+    pub queries: u64,
+    pub cache_hits: u64,
+    /// Origin broadcasts performed (each asks every origin).
+    pub broadcasts: u64,
+}
+
+impl Redirector {
+    pub fn new(id: usize) -> Self {
+        Redirector {
+            id,
+            location_cache: HashMap::new(),
+            cache_ttl: Duration::from_mins(10),
+            healthy: true,
+            queries: 0,
+            cache_hits: 0,
+            broadcasts: 0,
+        }
+    }
+
+    /// Resolve `path` to an origin, consulting the location cache and
+    /// otherwise broadcasting to all origins ("the redirector will
+    /// query the origins").
+    pub fn locate(
+        &mut self,
+        path: &str,
+        origins: &mut [Origin],
+        now: SimTime,
+    ) -> Option<OriginId> {
+        self.queries += 1;
+        if let Some(&(origin, expires)) = self.location_cache.get(path) {
+            if now < expires {
+                self.cache_hits += 1;
+                return Some(origin);
+            }
+            self.location_cache.remove(path);
+        }
+        self.broadcasts += 1;
+        for o in origins.iter_mut() {
+            if o.locate(path) {
+                self.location_cache
+                    .insert(path.to_string(), (o.id, now + self.cache_ttl));
+                return Some(o.id);
+            }
+        }
+        None
+    }
+
+    /// Drop a cached location (e.g. after an origin deletion event).
+    pub fn invalidate(&mut self, path: &str) {
+        self.location_cache.remove(path);
+    }
+
+    pub fn cached_locations(&self) -> usize {
+        self.location_cache.len()
+    }
+}
+
+/// Outcome of a pool lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LocateOutcome {
+    pub origin: OriginId,
+    /// Which instance answered.
+    pub instance: usize,
+    /// Instances tried (1 unless failover happened).
+    pub attempts: usize,
+}
+
+/// Round-robin HA pool of redirectors (the OSG runs two — §3).
+#[derive(Debug)]
+pub struct RedirectorPool {
+    pub instances: Vec<Redirector>,
+    rr: usize,
+}
+
+/// Error when every instance is down.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("all {0} redirector instances are down")]
+pub struct AllRedirectorsDown(pub usize);
+
+impl RedirectorPool {
+    pub fn new(count: usize) -> Self {
+        assert!(count >= 1);
+        RedirectorPool {
+            instances: (0..count).map(Redirector::new).collect(),
+            rr: 0,
+        }
+    }
+
+    /// Round-robin locate with failover across unhealthy instances.
+    /// Returns `Ok(None)` when the path exists nowhere (a healthy
+    /// instance answered "not found").
+    pub fn locate(
+        &mut self,
+        path: &str,
+        origins: &mut [Origin],
+        now: SimTime,
+    ) -> Result<Option<LocateOutcome>, AllRedirectorsDown> {
+        let n = self.instances.len();
+        for attempt in 0..n {
+            let idx = (self.rr + attempt) % n;
+            if !self.instances[idx].healthy {
+                continue;
+            }
+            self.rr = (idx + 1) % n; // next query starts after the responder
+            let found = self.instances[idx].locate(path, origins, now);
+            return Ok(found.map(|origin| LocateOutcome {
+                origin,
+                instance: idx,
+                attempts: attempt + 1,
+            }));
+        }
+        Err(AllRedirectorsDown(n))
+    }
+
+    /// Mark an instance down/up (failure injection).
+    pub fn set_healthy(&mut self, instance: usize, healthy: bool) {
+        self.instances[instance].healthy = healthy;
+    }
+
+    pub fn total_queries(&self) -> u64 {
+        self.instances.iter().map(|r| r.queries).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::origin::FileMeta;
+
+    fn origins() -> Vec<Origin> {
+        let mut o1 = Origin::new(OriginId(0), "o-ligo", "/ospool/ligo");
+        o1.put_file("/ospool/ligo/f1", FileMeta { size: 10, mtime: 1, perm: 0o644 })
+            .unwrap();
+        let mut o2 = Origin::new(OriginId(1), "o-des", "/ospool/des");
+        o2.put_file("/ospool/des/d1", FileMeta { size: 20, mtime: 1, perm: 0o644 })
+            .unwrap();
+        vec![o1, o2]
+    }
+
+    #[test]
+    fn locates_correct_origin() {
+        let mut os = origins();
+        let mut r = Redirector::new(0);
+        assert_eq!(
+            r.locate("/ospool/des/d1", &mut os, SimTime::ZERO),
+            Some(OriginId(1))
+        );
+        assert_eq!(r.locate("/nope", &mut os, SimTime::ZERO), None);
+    }
+
+    #[test]
+    fn location_cache_avoids_rebroadcast() {
+        let mut os = origins();
+        let mut r = Redirector::new(0);
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO);
+        let broadcasts_before = r.broadcasts;
+        let queries_to_origins = os[0].locate_queries + os[1].locate_queries;
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::from_secs_f64(1.0));
+        assert_eq!(r.broadcasts, broadcasts_before, "cache hit, no broadcast");
+        assert_eq!(os[0].locate_queries + os[1].locate_queries, queries_to_origins);
+        assert_eq!(r.cache_hits, 1);
+    }
+
+    #[test]
+    fn location_cache_expires() {
+        let mut os = origins();
+        let mut r = Redirector::new(0);
+        r.cache_ttl = Duration::from_secs(60);
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO);
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::from_secs_f64(120.0));
+        assert_eq!(r.broadcasts, 2, "expired entry re-broadcasts");
+    }
+
+    #[test]
+    fn pool_round_robins() {
+        let mut os = origins();
+        let mut pool = RedirectorPool::new(2);
+        let a = pool
+            .locate("/ospool/ligo/f1", &mut os, SimTime::ZERO)
+            .unwrap()
+            .unwrap();
+        let b = pool
+            .locate("/ospool/des/d1", &mut os, SimTime::ZERO)
+            .unwrap()
+            .unwrap();
+        assert_ne!(a.instance, b.instance, "round robin alternates");
+    }
+
+    #[test]
+    fn pool_fails_over() {
+        let mut os = origins();
+        let mut pool = RedirectorPool::new(2);
+        pool.set_healthy(0, false);
+        for _ in 0..3 {
+            let out = pool
+                .locate("/ospool/ligo/f1", &mut os, SimTime::ZERO)
+                .unwrap()
+                .unwrap();
+            assert_eq!(out.instance, 1);
+        }
+    }
+
+    #[test]
+    fn pool_all_down_errors() {
+        let mut os = origins();
+        let mut pool = RedirectorPool::new(2);
+        pool.set_healthy(0, false);
+        pool.set_healthy(1, false);
+        assert_eq!(
+            pool.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO),
+            Err(AllRedirectorsDown(2))
+        );
+        // Recovery restores service.
+        pool.set_healthy(1, true);
+        assert!(pool
+            .locate("/ospool/ligo/f1", &mut os, SimTime::ZERO)
+            .unwrap()
+            .is_some());
+    }
+
+    #[test]
+    fn invalidate_forces_rebroadcast() {
+        let mut os = origins();
+        let mut r = Redirector::new(0);
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO);
+        r.invalidate("/ospool/ligo/f1");
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO);
+        assert_eq!(r.broadcasts, 2);
+        assert_eq!(r.cached_locations(), 1);
+    }
+}

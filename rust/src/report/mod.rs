@@ -1,0 +1,210 @@
+//! Report generation: the paper's tables and figures as text/CSV.
+//!
+//! Every bench target renders through here so `cargo bench`, the CLI
+//! (`stashcache report`) and the examples produce identical artifacts.
+//! Figures are emitted both as aligned ASCII (for terminals and
+//! EXPERIMENTS.md) and CSV (for replotting).
+
+pub mod paper;
+
+use std::fmt::Write as _;
+
+/// A simple aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            writeln!(out, "== {} ==", self.title).unwrap();
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, cell) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                write!(out, "{cell:>width$}", width = widths[i]).unwrap();
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let rule: usize = widths.iter().sum::<usize>() + 2 * (cols - 1);
+        writeln!(out, "{}", "-".repeat(rule)).unwrap();
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Render as CSV (headers + rows, comma-separated, quoted as
+    /// needed).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = String::new();
+        writeln!(out, "{}", self.headers.iter().map(esc).collect::<Vec<_>>().join(",")).unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", row.iter().map(esc).collect::<Vec<_>>().join(",")).unwrap();
+        }
+        out
+    }
+}
+
+/// An ASCII bar chart (horizontal), for figure-style series.
+pub fn bar_chart(title: &str, series: &[(String, f64)], unit: &str) -> String {
+    let mut out = String::new();
+    writeln!(out, "== {title} ==").unwrap();
+    let max = series.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let label_w = series.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    const WIDTH: usize = 48;
+    for (label, value) in series {
+        let bar = if max > 0.0 {
+            ((value / max) * WIDTH as f64).round() as usize
+        } else {
+            0
+        };
+        writeln!(
+            out,
+            "{label:>label_w$} | {} {value:.2} {unit}",
+            "#".repeat(bar.min(WIDTH)),
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Grouped bars per category (Figures 6-8: four bars per file size).
+pub fn grouped_bars(
+    title: &str,
+    groups: &[(String, Vec<(String, f64)>)],
+    unit: &str,
+) -> String {
+    let mut out = String::new();
+    writeln!(out, "== {title} ==").unwrap();
+    let max = groups
+        .iter()
+        .flat_map(|(_, bars)| bars.iter().map(|(_, v)| *v))
+        .fold(f64::MIN, f64::max);
+    let label_w = groups
+        .iter()
+        .flat_map(|(_, bars)| bars.iter().map(|(l, _)| l.len()))
+        .max()
+        .unwrap_or(0);
+    const WIDTH: usize = 42;
+    for (group, bars) in groups {
+        writeln!(out, "{group}:").unwrap();
+        for (label, value) in bars {
+            let bar = if max > 0.0 {
+                ((value / max) * WIDTH as f64).round() as usize
+            } else {
+                0
+            };
+            writeln!(
+                out,
+                "  {label:>label_w$} | {} {value:.2} {unit}",
+                "#".repeat(bar.min(WIDTH)),
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+/// Write a report artifact (text or CSV) under a directory.
+pub fn write_artifact(dir: &std::path::Path, name: &str, content: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(name), content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Usage", &["Experiment", "Usage"]);
+        t.row(vec!["gwosc".into(), "1.079PB".into()]);
+        t.row(vec!["des".into(), "709.051TB".into()]);
+        let s = t.render();
+        assert!(s.contains("== Usage =="));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // Right-aligned columns: all rows end at the same width.
+        assert_eq!(lines[2].len(), lines[3].len().max(lines[2].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(
+            "t",
+            &[("a".into(), 10.0), ("b".into(), 5.0), ("c".into(), 0.0)],
+            "MB/s",
+        );
+        let a_bar = s.lines().nth(1).unwrap().matches('#').count();
+        let b_bar = s.lines().nth(2).unwrap().matches('#').count();
+        assert_eq!(a_bar, 48);
+        assert_eq!(b_bar, 24);
+    }
+
+    #[test]
+    fn grouped_bars_renders_all() {
+        let s = grouped_bars(
+            "fig",
+            &[
+                ("5.797KB".into(), vec![("http cold".into(), 1.0), ("stash cold".into(), 0.5)]),
+                ("10GB".into(), vec![("http cold".into(), 2.0)]),
+            ],
+            "Mbps",
+        );
+        assert!(s.contains("5.797KB:"));
+        assert!(s.contains("stash cold"));
+    }
+}

@@ -1,0 +1,295 @@
+//! Paper-artifact generators: one function per table/figure.
+//!
+//! Each runs the corresponding experiment on the default federation
+//! and renders the measured result next to the paper's published
+//! numbers, so `cargo bench` output reads as a reproduction report.
+//! The *shape* assertions (who wins, where) live in the bench targets
+//! and integration tests; EXPERIMENTS.md records the comparison.
+
+use super::{bar_chart, grouped_bars, Table};
+use crate::config::defaults::{self, paper_federation, COMPUTE_SITES};
+use crate::sim::scenario::{self, ScenarioConfig, ScenarioResults};
+use crate::sim::usage::{self, UsageConfig};
+use crate::util::ByteSize;
+
+/// Paper's Table 1 (for the side-by-side column).
+pub const PAPER_TABLE1: [(&str, &str); 9] = [
+    ("gwosc", "1.079PB"),
+    ("des", "709.051TB"),
+    ("minerva", "514.794TB"),
+    ("ligo", "228.324TB"),
+    ("osg-testing", "184.773TB"),
+    ("nova", "24.317TB"),
+    ("lsst", "18.966TB"),
+    ("bioinformatics", "17.566TB"),
+    ("dune", "11.677TB"),
+];
+
+/// Paper's Table 2.
+pub const PAPER_TABLE2: [(f64, &str); 7] = [
+    (1.0, "5.797KB"),
+    (5.0, "22.801MB"),
+    (25.0, "170.131MB"),
+    (50.0, "467.852MB"),
+    (75.0, "493.337MB"),
+    (95.0, "2.335GB"),
+    (99.0, "2.335GB"),
+];
+
+/// Paper's Table 3 (%Δ http→stash; negative ⇒ StashCache faster).
+pub const PAPER_TABLE3: [(&str, f64, f64); 5] = [
+    ("bellarmine", -68.5, -10.0),
+    ("syracuse", 0.9, -26.3),
+    ("colorado", 506.5, 245.9),
+    ("nebraska", -12.1, -2.1),
+    ("chicago", 30.6, -7.7),
+];
+
+/// Default six-month-equivalent usage run, scaled for minutes-level
+/// wall clock (the monitoring maths is volume-independent).
+pub fn default_usage_cfg() -> UsageConfig {
+    UsageConfig {
+        days: 3.0,
+        jobs_per_hour: Some(120.0),
+        background_flows: 2,
+        weekly_intensity: Vec::new(),
+        wan_bucket_secs: 1_800.0,
+    }
+}
+
+/// Table 1: top users by usage, measured vs paper share.
+pub fn table1(ucfg: &UsageConfig) -> (Table, Vec<(String, ByteSize)>) {
+    let mut out = usage::run(paper_federation(), ucfg);
+    let measured = out.aggregator().table1();
+    let total: f64 = measured.iter().map(|(_, b)| b.as_f64()).sum();
+    let paper_total: f64 = defaults::paper_workload()
+        .experiments
+        .iter()
+        .map(|e| e.share)
+        .sum();
+    let mut t = Table::new(
+        "Table 1: StashCache usage by experiment (measured via monitoring pipeline)",
+        &["Experiment", "Measured", "Share", "Paper share", "Paper usage"],
+    );
+    for (name, bytes) in &measured {
+        let paper_share = defaults::paper_workload()
+            .experiments
+            .iter()
+            .find(|e| e.name == *name)
+            .map(|e| e.share / paper_total * 100.0);
+        let paper_usage = PAPER_TABLE1
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, u)| *u)
+            .unwrap_or("-");
+        t.row(vec![
+            name.clone(),
+            bytes.to_string(),
+            format!("{:.1}%", bytes.as_f64() / total * 100.0),
+            paper_share.map_or("-".into(), |s| format!("{s:.1}%")),
+            paper_usage.to_string(),
+        ]);
+    }
+    (t, measured)
+}
+
+/// Table 2: file-size percentiles from the monitoring histogram.
+pub fn table2(ucfg: &UsageConfig) -> (Table, Vec<(f64, ByteSize)>) {
+    let mut out = usage::run(paper_federation(), ucfg);
+    let ps: Vec<f64> = PAPER_TABLE2.iter().map(|(p, _)| *p).collect();
+    let est = out.aggregator().table2(&ps);
+    let exact = out.aggregator().table2_exact(&ps);
+    let mut t = Table::new(
+        "Table 2: file-size percentiles (histogram kernel vs exact vs paper)",
+        &["Percentile", "Histogram", "Exact", "Paper"],
+    );
+    for (((p, hist), (_, ex)), (_, paper)) in est.iter().zip(&exact).zip(&PAPER_TABLE2) {
+        t.row(vec![
+            format!("{p:.0}"),
+            hist.to_string(),
+            ex.to_string(),
+            paper.to_string(),
+        ]);
+    }
+    (t, est)
+}
+
+/// Run the §4.1 scenario once for figures 6-8 and Table 3.
+pub fn run_scenario() -> ScenarioResults {
+    scenario::run(paper_federation(), &ScenarioConfig::default())
+}
+
+/// Table 3: percent difference per site for the 2.3 GB and 10 GB
+/// files, next to the paper's cells.
+pub fn table3(results: &ScenarioResults) -> Table {
+    let mut t = Table::new(
+        "Table 3: HTTP proxy vs StashCache, %Δ download time (negative ⇒ StashCache faster)",
+        &["Site", "2.3GB", "10GB", "paper 2.3GB", "paper 10GB"],
+    );
+    for (site, p23, p10) in PAPER_TABLE3 {
+        let m23 = results.pct_difference(site, "p95");
+        let m10 = results.pct_difference(site, "f10g");
+        t.row(vec![
+            site.to_string(),
+            m23.map_or("-".into(), |v| format!("{v:+.1}%")),
+            m10.map_or("-".into(), |v| format!("{v:+.1}%")),
+            format!("{p23:+.1}%"),
+            format!("{p10:+.1}%"),
+        ]);
+    }
+    t
+}
+
+/// Figures 6/7: per-filesize download speeds at one site, four bars
+/// each (http cold/hot, stash cold/hot), Mbit/s, higher is better.
+pub fn fig_site_performance(results: &ScenarioResults, site: &str) -> (String, Table) {
+    let mut groups = Vec::new();
+    let mut csv = Table::new(
+        format!("{site} cache performance (Mbps)"),
+        &["file", "http_cold", "http_hot", "stash_cold", "stash_hot"],
+    );
+    for (label, size) in defaults::test_file_sizes() {
+        let get = |tool: &str, pass: &str| results.rate(site, &label, tool, pass).unwrap_or(0.0);
+        let bars = vec![
+            ("http cold".to_string(), get("http", "cold")),
+            ("http hot".to_string(), get("http", "hot")),
+            ("stash cold".to_string(), get("stash", "cold")),
+            ("stash hot".to_string(), get("stash", "hot")),
+        ];
+        csv.row(vec![
+            format!("{size}"),
+            format!("{:.2}", bars[0].1),
+            format!("{:.2}", bars[1].1),
+            format!("{:.2}", bars[2].1),
+            format!("{:.2}", bars[3].1),
+        ]);
+        groups.push((size.to_string(), bars));
+    }
+    let chart = grouped_bars(
+        &format!("Figure ({site}): download speed by file size — higher is better"),
+        &groups,
+        "Mbps",
+    );
+    (chart, csv)
+}
+
+/// Figure 8: the 5.797 KB file across all five sites.
+pub fn fig8_small_file(results: &ScenarioResults) -> (String, Table) {
+    let mut groups = Vec::new();
+    let mut csv = Table::new(
+        "Small-file (5.797KB) performance (Mbps)",
+        &["site", "http_cold", "http_hot", "stash_cold", "stash_hot"],
+    );
+    for site in COMPUTE_SITES {
+        let get = |tool: &str, pass: &str| results.rate(site, "p01", tool, pass).unwrap_or(0.0);
+        let bars = vec![
+            ("http cold".to_string(), get("http", "cold")),
+            ("http hot".to_string(), get("http", "hot")),
+            ("stash cold".to_string(), get("stash", "cold")),
+            ("stash hot".to_string(), get("stash", "hot")),
+        ];
+        csv.row(vec![
+            site.to_string(),
+            format!("{:.3}", bars[0].1),
+            format!("{:.3}", bars[1].1),
+            format!("{:.3}", bars[2].1),
+            format!("{:.3}", bars[3].1),
+        ]);
+        groups.push((site.to_string(), bars));
+    }
+    let chart = grouped_bars(
+        "Figure 8: 5.7KB download speed — HTTP proxy wins everywhere",
+        &groups,
+        "Mbps",
+    );
+    (chart, csv)
+}
+
+/// Figure 4: a year of federation usage, weekly.
+pub fn fig4(days: f64, jobs_per_hour: f64) -> (String, Table) {
+    let ucfg = UsageConfig {
+        days,
+        jobs_per_hour: Some(jobs_per_hour),
+        // Usage volume, not contention, is Fig 4's subject — skip
+        // background load so a year simulates in seconds.
+        background_flows: 0,
+        weekly_intensity: usage::fig4_weekly_intensity(),
+        wan_bucket_secs: 6.0 * 3_600.0,
+    };
+    let mut out = usage::run(paper_federation(), &ucfg);
+    let weekly = out.aggregator().weekly_series();
+    let series: Vec<(String, f64)> = weekly
+        .iter()
+        .map(|(w, b)| (format!("week {w:02}"), b.as_f64() / 1e12))
+        .collect();
+    let chart = bar_chart("Figure 4: federation usage per week", &series, "TB");
+    let mut csv = Table::new("Weekly usage", &["week", "bytes"]);
+    for (w, b) in &weekly {
+        csv.row(vec![w.to_string(), b.as_u64().to_string()]);
+    }
+    (chart, csv)
+}
+
+/// Figure 5: Syracuse WAN bandwidth before/after local cache install.
+pub fn fig5(days: f64, jobs_per_hour: f64) -> (String, Table, usize) {
+    let ucfg = UsageConfig {
+        days,
+        jobs_per_hour: Some(jobs_per_hour),
+        background_flows: 1,
+        weekly_intensity: Vec::new(),
+        wan_bucket_secs: 1_800.0,
+    };
+    let (trace, install) = usage::fig5_before_after(paper_federation(), "syracuse", &ucfg);
+    let mut csv = Table::new(
+        "Syracuse WAN trace (30-min buckets)",
+        &["bucket_start_s", "bytes", "phase"],
+    );
+    let mut series = Vec::new();
+    for (i, (secs, bytes)) in trace.points().enumerate() {
+        let phase = if i < install { "before" } else { "after" };
+        csv.row(vec![format!("{secs:.0}"), bytes.to_string(), phase.into()]);
+        let marker = if i == install { ">>" } else { "  " };
+        series.push((
+            format!("{marker}{:>6.1}h", secs / 3600.0),
+            bytes as f64 * 8.0 / 1800.0 / 1e9, // Gbit/s average
+        ));
+    }
+    let chart = bar_chart(
+        "Figure 5: Syracuse WAN bandwidth (>> = cache installed)",
+        &series,
+        "Gbps",
+    );
+    (chart, csv, install)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_report_head_is_gwosc() {
+        let ucfg = UsageConfig {
+            days: 0.3,
+            jobs_per_hour: Some(60.0),
+            background_flows: 1,
+            ..default_usage_cfg()
+        };
+        let (t, measured) = table1(&ucfg);
+        // Tiny-scale runs are noisy; the head must be a top-share
+        // experiment and the render must carry the paper column.
+        assert!(
+            measured[0].0 == "gwosc" || measured[0].0 == "des",
+            "head: {measured:?}"
+        );
+        assert!(t.render().contains("1.079PB"));
+    }
+
+    #[test]
+    fn table3_references_paper_cells() {
+        // Rendering with an empty result set still shows paper values.
+        let t = table3(&ScenarioResults::default());
+        let s = t.render();
+        assert!(s.contains("+506.5%"));
+        assert!(s.contains("bellarmine"));
+    }
+}

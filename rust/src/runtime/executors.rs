@@ -1,0 +1,300 @@
+//! Typed executors over the AOT artifacts, with the batch-padding
+//! conventions of `python/compile/model.py`.
+
+use super::loader::{Artifact, Runtime};
+use crate::geoip::{CacheSite, GeoScoreBackend};
+use crate::monitoring::aggregator::{HistBackend, HIST_BINS};
+use anyhow::{ensure, Context, Result};
+
+/// Fixed AOT shapes (keep in lock-step with `model.py`).
+pub const GEO_CLIENTS: usize = 64;
+pub const GEO_CACHES: usize = 16;
+pub const HIST_N: usize = 4096;
+pub const TRANSFER_N: usize = 256;
+
+/// Load that guarantees a padded cache slot never wins a ranking.
+const PAD_LOAD: f32 = 1e6;
+
+// --- GeoScorer ---------------------------------------------------------------
+
+/// Batched nearest-cache scorer backed by `geo_score.hlo.txt`
+/// (haversine Pallas kernel + load penalty).
+pub struct GeoScorer {
+    artifact: Artifact,
+    /// Executions performed (perf accounting).
+    pub invocations: u64,
+}
+
+impl GeoScorer {
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        Ok(GeoScorer {
+            artifact: rt.load("geo_score")?,
+            invocations: 0,
+        })
+    }
+
+    /// Score up to 64 clients against up to 16 caches in one
+    /// invocation; larger client batches loop. Returns
+    /// `scores[client][cache]` (lower = better).
+    pub fn score(
+        &mut self,
+        clients: &[(f64, f64)],
+        caches: &[(f64, f64)],
+        loads: &[f64],
+    ) -> Result<Vec<Vec<f64>>> {
+        ensure!(caches.len() == loads.len(), "caches/loads length mismatch");
+        ensure!(
+            caches.len() <= GEO_CACHES,
+            "at most {GEO_CACHES} caches per artifact invocation (got {})",
+            caches.len()
+        );
+        // Pad the cache table: coordinates (0,0), load PAD_LOAD.
+        let mut cache_buf = vec![0f32; GEO_CACHES * 2];
+        let mut load_buf = vec![PAD_LOAD; GEO_CACHES];
+        for (i, &(lat, lon)) in caches.iter().enumerate() {
+            cache_buf[i * 2] = lat as f32;
+            cache_buf[i * 2 + 1] = lon as f32;
+            load_buf[i] = loads[i] as f32;
+        }
+        let caches_lit = xla::Literal::vec1(&cache_buf).reshape(&[GEO_CACHES as i64, 2])?;
+        let loads_lit = xla::Literal::vec1(&load_buf);
+
+        let mut out = Vec::with_capacity(clients.len());
+        for chunk in clients.chunks(GEO_CLIENTS) {
+            let mut client_buf = vec![0f32; GEO_CLIENTS * 2];
+            for (i, &(lat, lon)) in chunk.iter().enumerate() {
+                client_buf[i * 2] = lat as f32;
+                client_buf[i * 2 + 1] = lon as f32;
+            }
+            let clients_lit =
+                xla::Literal::vec1(&client_buf).reshape(&[GEO_CLIENTS as i64, 2])?;
+            let result = self
+                .artifact
+                .execute(&[clients_lit, caches_lit.clone(), loads_lit.clone()])
+                .context("geo_score execution")?;
+            self.invocations += 1;
+            let scores = result.to_vec::<f32>()?;
+            for row in 0..chunk.len() {
+                out.push(
+                    scores[row * GEO_CACHES..row * GEO_CACHES + caches.len()]
+                        .iter()
+                        .map(|&s| s as f64)
+                        .collect(),
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl GeoScoreBackend for GeoScorer {
+    fn score(
+        &mut self,
+        clients: &[(f64, f64)],
+        caches: &[CacheSite],
+        loads: &[f64],
+    ) -> Vec<Vec<f64>> {
+        let coords: Vec<(f64, f64)> = caches.iter().map(|c| (c.lat, c.lon)).collect();
+        GeoScorer::score(self, clients, &coords, loads).expect("geo_score artifact execution")
+    }
+}
+
+// --- HistAgg -----------------------------------------------------------------
+
+/// Batched file-size histogram backed by `usage_hist.hlo.txt`
+/// (one-hot reduction Pallas kernel).
+pub struct HistAgg {
+    artifact: Artifact,
+    pub invocations: u64,
+}
+
+impl HistAgg {
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        Ok(HistAgg {
+            artifact: rt.load("usage_hist")?,
+            invocations: 0,
+        })
+    }
+
+    /// Bin a batch of sizes (any length; zero-padded per invocation —
+    /// zeros land in no bin by the kernel's validity mask).
+    pub fn histogram(&mut self, sizes: &[f64]) -> Result<Vec<f32>> {
+        let mut bins = vec![0f32; HIST_BINS];
+        for chunk in sizes.chunks(HIST_N) {
+            let mut buf = vec![0f32; HIST_N];
+            for (i, &s) in chunk.iter().enumerate() {
+                buf[i] = s as f32;
+            }
+            let lit = xla::Literal::vec1(&buf);
+            let out = self.artifact.execute(&[lit]).context("usage_hist execution")?;
+            self.invocations += 1;
+            for (b, v) in bins.iter_mut().zip(out.to_vec::<f32>()?) {
+                *b += v;
+            }
+        }
+        Ok(bins)
+    }
+}
+
+impl HistBackend for HistAgg {
+    fn histogram(&mut self, sizes: &[f64]) -> Vec<f32> {
+        HistAgg::histogram(self, sizes).expect("usage_hist artifact execution")
+    }
+}
+
+// --- TransferEst -------------------------------------------------------------
+
+/// One transfer to price.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferParams {
+    pub bytes: f64,
+    pub rtt_ms: f64,
+    /// Bottleneck bandwidth, bytes/sec.
+    pub bottleneck_bps: f64,
+    pub streams: f64,
+}
+
+/// Batched transfer-time estimator backed by `transfer_est.hlo.txt`.
+pub struct TransferEst {
+    artifact: Artifact,
+    pub invocations: u64,
+}
+
+impl TransferEst {
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        Ok(TransferEst {
+            artifact: rt.load("transfer_est")?,
+            invocations: 0,
+        })
+    }
+
+    /// Estimate durations (seconds) for a batch of transfers.
+    pub fn estimate(&mut self, batch: &[TransferParams]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(batch.len());
+        for chunk in batch.chunks(TRANSFER_N) {
+            let mut buf = vec![0f32; TRANSFER_N * 4];
+            for (i, p) in chunk.iter().enumerate() {
+                buf[i * 4] = p.bytes as f32;
+                buf[i * 4 + 1] = p.rtt_ms as f32;
+                buf[i * 4 + 2] = p.bottleneck_bps as f32;
+                buf[i * 4 + 3] = p.streams as f32;
+            }
+            let lit = xla::Literal::vec1(&buf).reshape(&[TRANSFER_N as i64, 4])?;
+            let result = self
+                .artifact
+                .execute(&[lit])
+                .context("transfer_est execution")?;
+            self.invocations += 1;
+            let secs = result.to_vec::<f32>()?;
+            out.extend(secs[..chunk.len()].iter().map(|&s| s as f64));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geoip::{haversine_km, RustGeoBackend, LOAD_PENALTY_KM};
+    use crate::monitoring::aggregator::RustHistBackend;
+
+    fn runtime() -> Runtime {
+        Runtime::new().expect("PJRT CPU client")
+    }
+
+    #[test]
+    fn geo_scorer_matches_rust_reference() {
+        let rt = runtime();
+        let mut scorer = GeoScorer::load(&rt).unwrap();
+        let clients = vec![(43.0392, -76.1351), (40.0076, -105.2659), (-33.9, 151.2)];
+        let caches = vec![
+            (40.8202, -96.7005),
+            (41.7886, -87.5987),
+            (52.3676, 4.9041),
+        ];
+        let loads = vec![0.1, 0.7, 0.0];
+        let got = GeoScorer::score(&mut scorer, &clients, &caches, &loads).unwrap();
+        for (ci, &(clat, clon)) in clients.iter().enumerate() {
+            for (ki, &(klat, klon)) in caches.iter().enumerate() {
+                let want = haversine_km(clat, clon, klat, klon) + loads[ki] * LOAD_PENALTY_KM;
+                let rel = (got[ci][ki] - want).abs() / want.max(1.0);
+                assert!(
+                    rel < 1e-3,
+                    "client {ci} cache {ki}: got {} want {want}",
+                    got[ci][ki]
+                );
+            }
+        }
+        assert_eq!(scorer.invocations, 1);
+    }
+
+    #[test]
+    fn geo_scorer_as_backend_in_nearest_cache() {
+        use crate::config::defaults::paper_federation;
+        use crate::geoip::NearestCache;
+        let cfg = paper_federation();
+        let rt = runtime();
+        let scorer = GeoScorer::load(&rt).unwrap();
+        let caches: Vec<crate::geoip::CacheSite> = cfg
+            .cache_sites()
+            .map(|s| crate::geoip::CacheSite {
+                name: s.name.clone(),
+                lat: s.lat,
+                lon: s.lon,
+            })
+            .collect();
+        let mut pjrt_svc = NearestCache::with_backend(caches.clone(), scorer);
+        let mut rust_svc = NearestCache::with_backend(caches, RustGeoBackend);
+        for site in cfg.compute_sites() {
+            let a = pjrt_svc.nearest(site.lat, site.lon);
+            let b = rust_svc.nearest(site.lat, site.lon);
+            assert_eq!(a.0, b.0, "PJRT and rust backends disagree at {}", site.name);
+        }
+    }
+
+    #[test]
+    fn geo_scorer_batch_larger_than_shape_loops() {
+        let rt = runtime();
+        let mut scorer = GeoScorer::load(&rt).unwrap();
+        let clients: Vec<(f64, f64)> = (0..130).map(|i| (i as f64 / 4.0, -100.0)).collect();
+        let caches = vec![(40.0, -96.0)];
+        let loads = vec![0.0];
+        let got = GeoScorer::score(&mut scorer, &clients, &caches, &loads).unwrap();
+        assert_eq!(got.len(), 130);
+        assert_eq!(scorer.invocations, 3); // ceil(130/64)
+        let want = haversine_km(10.0, -100.0, 40.0, -96.0);
+        assert!((got[40][0] - want).abs() / want < 1e-3);
+    }
+
+    #[test]
+    fn hist_agg_matches_rust_reference() {
+        let rt = runtime();
+        let mut agg = HistAgg::load(&rt).unwrap();
+        let mut rng = crate::util::Pcg64::new(5, 5);
+        let sizes: Vec<f64> = (0..10_000)
+            .map(|_| 10f64.powf(rng.gen_f64(0.0, 13.0)))
+            .collect();
+        let got = HistAgg::histogram(&mut agg, &sizes).unwrap();
+        let want = RustHistBackend.histogram(&sizes);
+        assert_eq!(got.len(), HIST_BINS);
+        assert_eq!(got, want, "PJRT histogram != rust histogram");
+        assert_eq!(agg.invocations, 3); // ceil(10000/4096)
+    }
+
+    #[test]
+    fn transfer_est_matches_formula() {
+        let rt = runtime();
+        let mut est = TransferEst::load(&rt).unwrap();
+        let batch = vec![
+            TransferParams { bytes: 2.335e9, rtt_ms: 20.0, bottleneck_bps: 1.25e8, streams: 8.0 },
+            TransferParams { bytes: 5797.0, rtt_ms: 5.0, bottleneck_bps: 1.25e9, streams: 1.0 },
+        ];
+        let got = est.estimate(&batch).unwrap();
+        for (g, p) in got.iter().zip(&batch) {
+            // Mirror of kernels/ref.py transfer_est.
+            let eff = p.streams / (p.streams + 2.0);
+            let want = 3.0 * p.rtt_ms / 1e3 + p.bytes / (p.bottleneck_bps * eff).max(1.0);
+            assert!((g - want).abs() / want < 1e-4, "got {g} want {want}");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Artifact loading and compilation (one `PjRtLoadedExecutable` per
+//! model, compiled once and reused on the hot path).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$STASHCACHE_ARTIFACTS`, else
+/// `./artifacts`, else `../artifacts` (tests run from the crate root;
+/// binaries may run from `target/release`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("STASHCACHE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    for candidate in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(candidate);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// One compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; unwraps the 1-tuple the AOT step
+    /// wraps results in (`return_tuple=True`).
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing artifact {:?}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(tuple.to_tuple1()?)
+    }
+}
+
+/// The PJRT runtime: a CPU client plus the compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the default artifacts dir.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(artifacts_dir())
+    }
+
+    pub fn with_dir(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        Ok(Artifact {
+            name: name.to_string(),
+            exe,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Compiling artifacts requires `make artifacts` to have run; the
+    // Makefile guarantees that before `cargo test`.
+
+    #[test]
+    fn artifacts_dir_found() {
+        let dir = artifacts_dir();
+        assert!(
+            dir.join("manifest.json").exists(),
+            "run `make artifacts` before cargo test (looked in {})",
+            dir.display()
+        );
+    }
+
+    #[test]
+    fn loads_and_executes_geo_score() {
+        let rt = Runtime::new().unwrap();
+        let art = rt.load("geo_score").unwrap();
+        let clients = xla::Literal::vec1(&vec![0f32; 64 * 2])
+            .reshape(&[64, 2])
+            .unwrap();
+        let caches = xla::Literal::vec1(&vec![0f32; 16 * 2])
+            .reshape(&[16, 2])
+            .unwrap();
+        let loads = xla::Literal::vec1(&vec![0f32; 16]);
+        let out = art.execute(&[clients, caches, loads]).unwrap();
+        let values = out.to_vec::<f32>().unwrap();
+        assert_eq!(values.len(), 64 * 16);
+        // All-zero coords, zero loads → zero scores.
+        assert!(values.iter().all(|v| v.abs() < 1e-3));
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let rt = Runtime::new().unwrap();
+        let err = match rt.load("no_such_model") {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The rust coordinator never calls Python. At build time
+//! `python/compile/aot.py` lowers the L2 model (which embeds the L1
+//! Pallas kernels) to **HLO text** under `artifacts/`; this module
+//! loads each artifact once, compiles it on the PJRT CPU client, and
+//! exposes typed executors with the padding conventions of
+//! `python/compile/model.py`:
+//!
+//! * [`GeoScorer`]    ← `geo_score.hlo.txt`    (64 clients × 16 caches)
+//! * [`HistAgg`]      ← `usage_hist.hlo.txt`   (4096 sizes → 64 bins)
+//! * [`TransferEst`]  ← `transfer_est.hlo.txt` (256 rows)
+//!
+//! Each executor also implements the corresponding backend trait
+//! ([`crate::geoip::GeoScoreBackend`], [`crate::monitoring::aggregator::HistBackend`])
+//! so the services can run PJRT-backed or pure-rust interchangeably —
+//! integration tests assert both give the same answers.
+
+pub mod executors;
+pub mod loader;
+
+pub use executors::{GeoScorer, HistAgg, TransferEst, TransferParams};
+pub use loader::{artifacts_dir, Artifact, Runtime};

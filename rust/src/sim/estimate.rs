@@ -1,0 +1,45 @@
+//! Analytic transfer-time model — rust mirror of the `transfer_est`
+//! Pallas kernel (`python/compile/kernels/transfer.py`). The two
+//! implementations must agree (asserted by `runtime` integration
+//! tests); the PJRT artifact serves batched scheduler queries, this
+//! mirror serves one-off estimates and tests.
+
+/// TCP + application handshake rounds before data flows.
+pub const HANDSHAKE_ROUNDS: f64 = 3.0;
+/// Streams at which multi-stream transfers reach 2/3 of the bottleneck.
+pub const STREAM_HALF_SAT: f64 = 2.0;
+
+/// Estimated seconds to move `bytes` over a path with `rtt_ms` and a
+/// `bottleneck_bps` bottleneck using `streams` parallel streams.
+pub fn transfer_secs(bytes: f64, rtt_ms: f64, bottleneck_bps: f64, streams: f64) -> f64 {
+    let startup = HANDSHAKE_ROUNDS * rtt_ms / 1e3;
+    let eff = streams / (streams + STREAM_HALF_SAT);
+    startup + bytes / (bottleneck_bps * eff).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stream_penalised() {
+        let one = transfer_secs(1e9, 20.0, 1.25e8, 1.0);
+        let many = transfer_secs(1e9, 20.0, 1.25e8, 16.0);
+        assert!(one > many, "multi-stream must be faster (paper §3.1)");
+        // 16 streams ≈ 8/9 efficiency → ~9 s bulk.
+        assert!((many - (0.06 + 1e9 / (1.25e8 * 16.0 / 18.0))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rtt_dominates_small_files() {
+        // 5.797 KB over a fast path: startup is everything.
+        let t = transfer_secs(5_797.0, 40.0, 1.25e8, 1.0);
+        assert!(t < 0.2 && t > 0.12, "t={t}");
+    }
+
+    #[test]
+    fn degenerate_bandwidth_clamped() {
+        let t = transfer_secs(100.0, 1.0, 0.0, 1.0);
+        assert!(t.is_finite());
+    }
+}

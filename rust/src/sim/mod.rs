@@ -1,0 +1,18 @@
+//! Simulation drivers: workload generation, the §4.1 benchmark
+//! scenario, and the long-running usage simulations.
+//!
+//! * [`workload`] — synthetic OSG workload: Table 1's experiment mix,
+//!   Table 2's file-size distribution, Zipf popularity, Poisson job
+//!   arrivals.
+//! * [`estimate`] — the analytic transfer-time model (rust mirror of
+//!   the `transfer_est` kernel; used by schedulers and sanity checks).
+//! * [`scenario`] — the paper's HTCondor-DAGMan test (Figs 6-8,
+//!   Table 3): per site, per file size, four downloads (HTTP proxy
+//!   cold/hot, stashcp cold/hot).
+//! * [`usage`] — months of federation traffic through the monitoring
+//!   pipeline (Table 1, Table 2, Fig 4, Fig 5).
+
+pub mod estimate;
+pub mod scenario;
+pub mod usage;
+pub mod workload;

@@ -1,0 +1,235 @@
+//! The paper's §4.1 benchmark scenario (Figures 6-8, Table 3).
+//!
+//! "We created an HTCondor DAGMan workflow to submit the jobs to each
+//! site, without two sites running at the same time. ... Each job
+//! downloads all files four times. The first time it uses curl to
+//! download through the HTTP cache [cold]. It then downloads the file
+//! again through the HTTP proxy which will be a cache hit. The third
+//! download is through stashcp and the StashCache federation [cold].
+//! The fourth download is again using stashcp, but it should be
+//! cached."
+//!
+//! The test dataset is the Table 2 percentile files plus a 10 GB file,
+//! hosted on the Stash origin at Chicago. Sites run serially (no
+//! competition at the origin between sites), but the origin's DTN link
+//! carries background load throughout (§4.1's "realistic
+//! infrastructure conditions").
+
+use crate::client::TransferRecord;
+use crate::config::defaults::{self, COMPUTE_SITES};
+use crate::config::FederationConfig;
+use crate::federation::{DownloadMethod, FedSim, DEFAULT_BACKGROUND_FLOWS};
+use crate::sim::workload::FileRef;
+use crate::util::ByteSize;
+
+/// One measured download.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub site: String,
+    pub file_label: String,
+    pub size: ByteSize,
+    /// "http" (curl via proxy) or "stash" (stashcp via cache).
+    pub tool: &'static str,
+    /// First (cold) or second (hot) download with that tool.
+    pub pass: &'static str,
+    pub record: TransferRecord,
+}
+
+impl Measurement {
+    pub fn rate_mbps(&self) -> f64 {
+        self.record.rate_mbps()
+    }
+    pub fn secs(&self) -> f64 {
+        self.record.duration.as_secs_f64()
+    }
+}
+
+/// Scenario knobs.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Sites to test, in Table 3 order.
+    pub sites: Vec<String>,
+    /// (label, size) of each test file (§4.1's percentile set).
+    pub files: Vec<(String, ByteSize)>,
+    /// Background flows per origin DTN link.
+    pub background_flows: usize,
+    /// Repeats of the whole 4-download cycle per (site, file).
+    pub repeats: usize,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            sites: COMPUTE_SITES.iter().map(|s| s.to_string()).collect(),
+            files: defaults::test_file_sizes(),
+            background_flows: DEFAULT_BACKGROUND_FLOWS,
+            repeats: 1,
+        }
+    }
+}
+
+/// Scenario results: every measurement, queryable per figure/table.
+#[derive(Debug, Default)]
+pub struct ScenarioResults {
+    pub measurements: Vec<Measurement>,
+}
+
+impl ScenarioResults {
+    /// Mean download rate in Mbit/s for a (site, file, tool, pass).
+    pub fn rate(&self, site: &str, file_label: &str, tool: &str, pass: &str) -> Option<f64> {
+        let rates: Vec<f64> = self
+            .measurements
+            .iter()
+            .filter(|m| {
+                m.site == site && m.file_label == file_label && m.tool == tool && m.pass == pass
+            })
+            .map(Measurement::rate_mbps)
+            .collect();
+        (!rates.is_empty()).then(|| rates.iter().sum::<f64>() / rates.len() as f64)
+    }
+
+    /// Mean duration (s) over both passes of a tool — the quantity
+    /// Table 3 compares.
+    pub fn mean_secs(&self, site: &str, file_label: &str, tool: &str) -> Option<f64> {
+        let secs: Vec<f64> = self
+            .measurements
+            .iter()
+            .filter(|m| m.site == site && m.file_label == file_label && m.tool == tool)
+            .map(Measurement::secs)
+            .collect();
+        (!secs.is_empty()).then(|| secs.iter().sum::<f64>() / secs.len() as f64)
+    }
+
+    /// Table 3's cell: percent difference in download time,
+    /// StashCache vs HTTP proxy. Negative ⇒ StashCache is faster.
+    pub fn pct_difference(&self, site: &str, file_label: &str) -> Option<f64> {
+        let http = self.mean_secs(site, file_label, "http")?;
+        let stash = self.mean_secs(site, file_label, "stash")?;
+        Some((stash - http) / http * 100.0)
+    }
+}
+
+/// Run the full §4.1 scenario on a fresh federation.
+pub fn run(cfg: FederationConfig, scenario: &ScenarioConfig) -> ScenarioResults {
+    let mut fed = FedSim::build(cfg);
+    run_on(&mut fed, scenario)
+}
+
+/// Run the scenario on an existing federation (callers can inject
+/// failures or swap backends first).
+pub fn run_on(fed: &mut FedSim, scenario: &ScenarioConfig) -> ScenarioResults {
+    fed.start_background_load(scenario.background_flows);
+    let mut results = ScenarioResults::default();
+
+    for site_name in &scenario.sites {
+        let site = fed
+            .topo
+            .site_index(site_name)
+            .unwrap_or_else(|| panic!("unknown site {site_name}"));
+        for rep in 0..scenario.repeats {
+            for (label, size) in &scenario.files {
+                // A unique path per (site, repeat, file): each cycle's
+                // first download must be a genuine cold miss ("it is
+                // assumed and verified that the first time is a cache
+                // miss", §4.1).
+                let file = FileRef {
+                    path: format!(
+                        "/osgconnect/public/dweitzel/pearc19/{site_name}/r{rep}/{label}.dat"
+                    ),
+                    size: *size,
+                    version: 1,
+                };
+                let passes: [(&str, DownloadMethod, &str); 4] = [
+                    ("http", DownloadMethod::HttpProxy, "cold"),
+                    ("http", DownloadMethod::HttpProxy, "hot"),
+                    ("stash", DownloadMethod::Stash, "cold"),
+                    ("stash", DownloadMethod::Stash, "hot"),
+                ];
+                for (tool, method, pass) in passes {
+                    let record = fed.download(site, &file, method);
+                    results.measurements.push(Measurement {
+                        site: site_name.clone(),
+                        file_label: label.clone(),
+                        size: *size,
+                        tool,
+                        pass,
+                        record,
+                    });
+                }
+            }
+        }
+    }
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+
+    fn quick_results() -> ScenarioResults {
+        // Two sites, three sizes — fast but covers the shape.
+        let scenario = ScenarioConfig {
+            sites: vec!["syracuse".into(), "colorado".into()],
+            files: vec![
+                ("p01".into(), ByteSize(5_797)),
+                ("p95".into(), ByteSize(2_335_000_000)),
+                ("f10g".into(), ByteSize::gb(10)),
+            ],
+            ..ScenarioConfig::default()
+        };
+        run(paper_federation(), &scenario)
+    }
+
+    #[test]
+    fn four_downloads_per_site_file() {
+        let r = quick_results();
+        assert_eq!(r.measurements.len(), 2 * 3 * 4);
+    }
+
+    #[test]
+    fn http_hot_faster_than_cold_for_cacheable() {
+        let r = quick_results();
+        // 5.797 KB is cacheable by the proxy.
+        let cold = r.rate("syracuse", "p01", "http", "cold").unwrap();
+        let hot = r.rate("syracuse", "p01", "http", "hot").unwrap();
+        assert!(hot >= cold, "hot {hot} >= cold {cold}");
+    }
+
+    #[test]
+    fn stash_hot_always_at_least_cold() {
+        // §5: "the cached StashCache is always better than the
+        // non-cached".
+        let r = quick_results();
+        for site in ["syracuse", "colorado"] {
+            for f in ["p01", "p95", "f10g"] {
+                let cold = r.rate(site, f, "stash", "cold").unwrap();
+                let hot = r.rate(site, f, "stash", "hot").unwrap();
+                assert!(
+                    hot >= cold * 0.999,
+                    "{site}/{f}: hot {hot} < cold {cold}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_files_favor_http_everywhere() {
+        // Fig 8's universal result.
+        let r = quick_results();
+        for site in ["syracuse", "colorado"] {
+            let d = r.pct_difference(site, "p01").unwrap();
+            assert!(d > 50.0, "{site}: small file pct diff {d} should be ≫ 0");
+        }
+    }
+
+    #[test]
+    fn colorado_positive_syracuse_negative_at_10g() {
+        // Table 3's key shape.
+        let r = quick_results();
+        let colorado = r.pct_difference("colorado", "f10g").unwrap();
+        let syracuse = r.pct_difference("syracuse", "f10g").unwrap();
+        assert!(colorado > 50.0, "colorado 10G: {colorado}");
+        assert!(syracuse < 0.0, "syracuse 10G: {syracuse}");
+    }
+}

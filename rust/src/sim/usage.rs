@@ -1,0 +1,305 @@
+//! Long-running usage simulations (Table 1, Table 2, Figure 4,
+//! Figure 5).
+//!
+//! Poisson job arrivals at the compute sites read Zipf-popular files
+//! from the Table 1 experiment mix through the StashCache path; every
+//! transfer flows through the monitoring pipeline, and the paper's
+//! usage artifacts are read back from the [`Aggregator`] — produced by
+//! the *monitoring system*, not computed on the side.
+
+use crate::config::FederationConfig;
+use crate::federation::{DownloadMethod, FedSim};
+use crate::metrics::ByteSeries;
+use crate::monitoring::aggregator::Aggregator;
+use crate::sim::workload::WorkloadGen;
+use crate::util::{Duration, SimTime};
+
+/// Usage-simulation knobs.
+#[derive(Debug, Clone)]
+pub struct UsageConfig {
+    /// Simulated duration in days.
+    pub days: f64,
+    /// Override the workload's jobs/hour (scale runs down for CI).
+    pub jobs_per_hour: Option<f64>,
+    /// Background flows per origin.
+    pub background_flows: usize,
+    /// Weekly intensity profile: multiplies the arrival rate per week
+    /// (Fig 4's ramp-up and bursts). Empty ⇒ constant 1.0.
+    pub weekly_intensity: Vec<f64>,
+    /// WAN-trace bucket width in seconds (Fig 5 uses 30-minute
+    /// averages).
+    pub wan_bucket_secs: f64,
+}
+
+impl Default for UsageConfig {
+    fn default() -> Self {
+        UsageConfig {
+            days: 7.0,
+            jobs_per_hour: Some(40.0),
+            background_flows: 2,
+            weekly_intensity: Vec::new(),
+            wan_bucket_secs: 1_800.0,
+        }
+    }
+}
+
+/// Figure 4's observed production profile, eyeballed from the paper:
+/// usage grows through the year with heavy bursts in the final
+/// quarter (LIGO/GWOSC reprocessing campaigns).
+pub fn fig4_weekly_intensity() -> Vec<f64> {
+    (0..52)
+        .map(|w| {
+            let ramp = 0.3 + 1.4 * (w as f64 / 51.0);
+            let burst = match w {
+                18..=20 => 1.8, // spring reprocessing
+                34..=36 => 2.2, // late-summer campaign
+                44..=48 => 2.6, // year-end surge
+                _ => 1.0,
+            };
+            ramp * burst
+        })
+        .collect()
+}
+
+/// Outputs of a usage run.
+pub struct UsageOutputs {
+    pub fed: FedSim,
+    /// Per-site WAN byte trace (bucketed).
+    pub wan_traces: Vec<(String, ByteSeries)>,
+    pub jobs_run: u64,
+    pub downloads: u64,
+}
+
+impl UsageOutputs {
+    pub fn aggregator(&mut self) -> &mut Aggregator {
+        &mut self.fed.aggregator
+    }
+}
+
+/// Run a usage simulation on a fresh federation.
+pub fn run(cfg: FederationConfig, ucfg: &UsageConfig) -> UsageOutputs {
+    let mut workload = cfg.workload.clone();
+    if let Some(jph) = ucfg.jobs_per_hour {
+        workload.jobs_per_hour = jph;
+    }
+    let compute_sites: Vec<String> = cfg.compute_sites().map(|s| s.name.clone()).collect();
+    let mut gen = WorkloadGen::new(cfg.seed, workload, compute_sites);
+
+    let mut fed = FedSim::build(cfg);
+    fed.start_background_load(ucfg.background_flows);
+
+    let end = SimTime::from_secs_f64(ucfg.days * 86_400.0);
+    let week = 7.0 * 86_400.0;
+    let mut wan_counters: Vec<(usize, f64)> = (0..fed.topo.site_count())
+        .map(|i| (i, 0.0))
+        .collect();
+    let mut traces: Vec<ByteSeries> = (0..fed.topo.site_count())
+        .map(|_| ByteSeries::new(ucfg.wan_bucket_secs))
+        .collect();
+    let mut next_sample = SimTime::ZERO;
+    let sample_every = Duration::from_secs_f64(ucfg.wan_bucket_secs);
+
+    let mut arrival = SimTime::ZERO;
+    let mut jobs = 0u64;
+    let mut downloads = 0u64;
+
+    loop {
+        // Next arrival, thinned by the weekly intensity profile.
+        let gap = gen.next_arrival_gap();
+        let intensity = if ucfg.weekly_intensity.is_empty() {
+            1.0
+        } else {
+            let w = (arrival.as_secs_f64() / week) as usize;
+            ucfg.weekly_intensity[w.min(ucfg.weekly_intensity.len() - 1)].max(1e-3)
+        };
+        arrival += Duration::from_secs_f64(gap.as_secs_f64() / intensity);
+        if arrival >= end {
+            break;
+        }
+
+        // Sample WAN counters on schedule as time passes.
+        while next_sample <= arrival {
+            fed.advance_to(next_sample);
+            for (i, last) in wan_counters.iter_mut() {
+                let now_bytes = fed.wan_bytes(*i);
+                traces[*i].add(next_sample, (now_bytes - *last) as u64);
+                *last = now_bytes;
+            }
+            next_sample += sample_every;
+        }
+
+        fed.advance_to(arrival);
+        let job = gen.next_job();
+        let site = fed
+            .topo
+            .site_index(&job.site)
+            .expect("workload site exists");
+        for file in &job.files {
+            fed.download(site, file, DownloadMethod::Stash);
+            downloads += 1;
+        }
+        jobs += 1;
+    }
+
+    let site_names: Vec<String> = (0..fed.topo.site_count())
+        .map(|i| fed.topo.site_name(i).to_string())
+        .collect();
+    UsageOutputs {
+        fed,
+        wan_traces: site_names.into_iter().zip(traces).collect(),
+        jobs_run: jobs,
+        downloads,
+    }
+}
+
+/// Figure 5's experiment: the same workload with and without a local
+/// cache at `site`, split at the midpoint ("the bold red line shows
+/// when the StashCache server was installed"). Returns the
+/// concatenated WAN trace and the install bucket index.
+pub fn fig5_before_after(
+    mut cfg: FederationConfig,
+    site: &str,
+    ucfg: &UsageConfig,
+) -> (ByteSeries, usize) {
+    let half = UsageConfig {
+        days: ucfg.days / 2.0,
+        ..ucfg.clone()
+    };
+
+    // Phase 1: no cache at the site.
+    let mut cfg_before = cfg.clone();
+    cfg_before
+        .sites
+        .iter_mut()
+        .find(|s| s.name == site)
+        .unwrap_or_else(|| panic!("unknown site {site}"))
+        .cache = None;
+    let before = run(cfg_before, &half);
+
+    // Phase 2: cache installed (default parameters).
+    cfg.sites
+        .iter_mut()
+        .find(|s| s.name == site)
+        .unwrap()
+        .cache
+        .get_or_insert_with(Default::default);
+    let after = run(cfg, &half);
+
+    let trace_of = |o: &UsageOutputs| {
+        o.wan_traces
+            .iter()
+            .find(|(n, _)| n == site)
+            .map(|(_, t)| t.clone())
+            .expect("site trace")
+    };
+    let t_before = trace_of(&before);
+    let t_after = trace_of(&after);
+
+    let mut merged = ByteSeries::new(ucfg.wan_bucket_secs);
+    let mut install_bucket = 0;
+    for (secs, bytes) in t_before.points() {
+        merged.add(SimTime::from_secs_f64(secs), bytes);
+        install_bucket += 1;
+    }
+    let offset = install_bucket as f64 * ucfg.wan_bucket_secs;
+    for (secs, bytes) in t_after.points() {
+        merged.add(SimTime::from_secs_f64(secs + offset), bytes);
+    }
+    (merged, install_bucket)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+
+    fn tiny() -> UsageConfig {
+        UsageConfig {
+            days: 0.5,
+            jobs_per_hour: Some(30.0),
+            background_flows: 1,
+            weekly_intensity: Vec::new(),
+            wan_bucket_secs: 1_800.0,
+        }
+    }
+
+    #[test]
+    fn usage_flows_through_monitoring() {
+        let mut out = run(paper_federation(), &tiny());
+        assert!(out.jobs_run > 100, "jobs {}", out.jobs_run);
+        assert!(out.downloads >= out.jobs_run);
+        let downloads = out.downloads;
+        let agg = out.aggregator();
+        assert_eq!(agg.reports, downloads);
+        // The heaviest experiments dominate Table 1. At this tiny scale
+        // byte totals are noisy (a handful of hot files dominate), so
+        // assert the head is one of the top-two-share experiments.
+        let t1 = agg.table1();
+        assert!(
+            t1[0].0 == "gwosc" || t1[0].0 == "des",
+            "t1 head: {t1:?}"
+        );
+        let gwosc_rank = t1.iter().position(|(n, _)| n == "gwosc").unwrap();
+        assert!(gwosc_rank < 3, "gwosc must rank top-3: {t1:?}");
+    }
+
+    #[test]
+    fn zipf_reuse_gives_cache_hits() {
+        let out = run(paper_federation(), &tiny());
+        let served_hit: u64 = out
+            .fed
+            .caches
+            .values()
+            .map(|c| c.stats.bytes_served_hit)
+            .sum();
+        let served_total: u64 = out
+            .fed
+            .caches
+            .values()
+            .map(|c| c.stats.bytes_served_hit + c.stats.bytes_served_miss)
+            .sum();
+        let hit_rate = served_hit as f64 / served_total as f64;
+        assert!(
+            hit_rate > 0.2,
+            "popular files must hit the cache: {hit_rate}"
+        );
+    }
+
+    #[test]
+    fn wan_traces_cover_duration() {
+        let out = run(paper_federation(), &tiny());
+        let (name, syr) = out
+            .wan_traces
+            .iter()
+            .find(|(n, _)| n == "syracuse")
+            .unwrap();
+        assert_eq!(name, "syracuse");
+        // 0.5 days at 1800 s buckets = 24 buckets, minus in-flight tail.
+        assert!(syr.len() >= 20, "trace has {} buckets", syr.len());
+    }
+
+    #[test]
+    fn fig5_wan_drops_after_install() {
+        let ucfg = UsageConfig {
+            days: 1.0,
+            jobs_per_hour: Some(60.0),
+            ..tiny()
+        };
+        let (trace, install) = fig5_before_after(paper_federation(), "syracuse", &ucfg);
+        let pts: Vec<(f64, u64)> = trace.points().collect();
+        assert!(install > 0 && install < pts.len());
+        let before: u64 = pts[..install].iter().map(|p| p.1).sum();
+        let after: u64 = pts[install..].iter().map(|p| p.1).sum();
+        assert!(
+            (before as f64) > (after as f64) * 2.0,
+            "WAN must drop ≥2× after install: before {before} after {after}"
+        );
+    }
+
+    #[test]
+    fn weekly_intensity_shapes_fig4() {
+        let profile = fig4_weekly_intensity();
+        assert_eq!(profile.len(), 52);
+        assert!(profile[47] > profile[0] * 5.0, "year-end surge");
+    }
+}

@@ -1,0 +1,333 @@
+//! Synthetic OSG workload generation.
+//!
+//! The paper's production numbers (Table 1 usage mix, Table 2 size
+//! percentiles) parameterise a generative model: each experiment owns
+//! a catalog of files whose sizes come from the calibrated log-normal
+//! mixture; jobs arrive Poisson at compute sites and read a few
+//! Zipf-popular files from one experiment. Everything is derived
+//! deterministically from the run seed.
+
+use crate::config::schema::{SizeDistribution, WorkloadConfig};
+use crate::util::{ByteSize, Duration, Pcg64, Zipf};
+
+/// A file reference a job wants to read.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileRef {
+    pub path: String,
+    pub size: ByteSize,
+    /// Content version (mtime) — bumped by dataset updates.
+    pub version: u64,
+}
+
+/// One job: runs at a site, reads files from one experiment.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub experiment: String,
+    pub site: String,
+    pub files: Vec<FileRef>,
+}
+
+/// Deterministic per-experiment file catalog. File `i`'s size is a
+/// pure function of (seed, experiment, i), so catalogs are never
+/// materialised — 9 experiments × 20k files cost nothing until used.
+#[derive(Debug)]
+pub struct Catalog {
+    seed: u64,
+    dist: SizeDistribution,
+    files_per_experiment: u64,
+}
+
+impl Catalog {
+    pub fn new(seed: u64, cfg: &WorkloadConfig) -> Self {
+        Catalog {
+            seed,
+            dist: cfg.size_dist.clone(),
+            files_per_experiment: cfg.files_per_experiment,
+        }
+    }
+
+    pub fn files_per_experiment(&self) -> u64 {
+        self.files_per_experiment
+    }
+
+    /// The file at index `i` of an experiment's catalog.
+    ///
+    /// Size depends on `i` only (same ladder for every experiment) and
+    /// is a **stratified quantile** of the mixture: index `i` maps to
+    /// low-discrepancy points `(u_i, v_i)` that pick the component and
+    /// the within-component quantile. Consequences:
+    /// * byte usage per experiment ∝ its job share (Table 1 ordering
+    ///   is not decided by which experiment's hot files drew large
+    ///   sizes), and
+    /// * the Zipf-hot prefix of the catalog spans the whole size
+    ///   distribution, so the popularity-weighted sizes the monitoring
+    ///   sees still match Table 2.
+    pub fn file(&self, experiment: &str, i: u64) -> FileRef {
+        assert!(i < self.files_per_experiment);
+        let size = quantile_size(&self.dist, i);
+        FileRef {
+            path: format!("/ospool/{experiment}/data/f{i:06}.dat"),
+            size,
+            version: 1,
+        }
+    }
+
+    /// Total catalog bytes of an experiment (exact, by enumeration).
+    pub fn experiment_bytes(&self, experiment: &str) -> ByteSize {
+        (0..self.files_per_experiment)
+            .map(|i| self.file(experiment, i).size)
+            .sum()
+    }
+}
+
+/// Golden-ratio and plastic-number fractions for the low-discrepancy
+/// index mapping.
+const PHI_FRAC: f64 = 0.618_033_988_749_894_9;
+const PLASTIC_FRAC: f64 = 0.754_877_666_246_692_8;
+
+/// Deterministic stratified size for catalog index `i`: inverse-CDF of
+/// the mixture at low-discrepancy points.
+pub fn quantile_size(dist: &SizeDistribution, i: u64) -> ByteSize {
+    let u = ((i as f64 + 0.5) * PHI_FRAC).fract();
+    let v = ((i as f64 + 0.5) * PLASTIC_FRAC).fract().clamp(1e-9, 1.0 - 1e-9);
+    // Component by cumulative weight.
+    let mut acc = 0.0;
+    let mut chosen = dist.components.len() - 1;
+    for (k, &(w, _, _)) in dist.components.iter().enumerate() {
+        acc += w;
+        if u < acc {
+            chosen = k;
+            break;
+        }
+    }
+    let (_, mu, sigma) = dist.components[chosen];
+    let bytes = (mu + sigma * crate::util::stats::probit(v)).exp();
+    ByteSize((bytes.round() as u64).clamp(dist.min.as_u64(), dist.max.as_u64()))
+}
+
+/// Draw a file size from the calibrated mixture.
+pub fn sample_size(dist: &SizeDistribution, rng: &mut Pcg64) -> ByteSize {
+    let weights: Vec<f64> = dist.components.iter().map(|c| c.0).collect();
+    let k = rng.weighted_index(&weights);
+    let (_, mu, sigma) = dist.components[k];
+    let bytes = rng.gen_lognormal(mu, sigma);
+    ByteSize(
+        (bytes.round() as u64).clamp(dist.min.as_u64(), dist.max.as_u64()),
+    )
+}
+
+/// The job generator.
+pub struct WorkloadGen {
+    cfg: WorkloadConfig,
+    pub catalog: Catalog,
+    zipf: Zipf,
+    rng: Pcg64,
+    exp_weights: Vec<f64>,
+    compute_sites: Vec<String>,
+    jobs_emitted: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64, cfg: WorkloadConfig, compute_sites: Vec<String>) -> Self {
+        assert!(!compute_sites.is_empty());
+        let catalog = Catalog::new(seed, &cfg);
+        let zipf = Zipf::new(cfg.files_per_experiment, cfg.zipf_s);
+        let exp_weights = cfg.experiments.iter().map(|e| e.share).collect();
+        WorkloadGen {
+            zipf,
+            catalog,
+            rng: Pcg64::new(seed, 0x0b5),
+            exp_weights,
+            compute_sites,
+            jobs_emitted: 0,
+            cfg,
+        }
+    }
+
+    /// Exponential inter-arrival gap to the next job.
+    pub fn next_arrival_gap(&mut self) -> Duration {
+        let rate_per_sec = self.cfg.jobs_per_hour / 3_600.0;
+        Duration::from_secs_f64(self.rng.gen_exp(rate_per_sec))
+    }
+
+    /// Generate the next job.
+    pub fn next_job(&mut self) -> Job {
+        self.jobs_emitted += 1;
+        let e = self.rng.weighted_index(&self.exp_weights);
+        let experiment = self.cfg.experiments[e].name.clone();
+        let site = self
+            .compute_sites[self.rng.gen_range(0, self.compute_sites.len() as u64) as usize]
+            .clone();
+        let (lo, hi) = self.cfg.files_per_job;
+        let n = self.rng.gen_range(lo, hi + 1);
+        let files = (0..n)
+            .map(|_| {
+                let idx = self.zipf.sample(&mut self.rng);
+                self.catalog.file(&experiment, idx)
+            })
+            .collect();
+        Job {
+            experiment,
+            site,
+            files,
+        }
+    }
+
+    pub fn jobs_emitted(&self) -> u64 {
+        self.jobs_emitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::{paper_workload, COMPUTE_SITES};
+    use crate::util::bytes::{GB, KB, MB};
+    use crate::util::stats;
+
+    fn gen() -> WorkloadGen {
+        WorkloadGen::new(
+            42,
+            paper_workload(),
+            COMPUTE_SITES.iter().map(|s| s.to_string()).collect(),
+        )
+    }
+
+    #[test]
+    fn catalog_is_deterministic() {
+        let w1 = gen();
+        let w2 = gen();
+        for i in [0u64, 7, 4_999] {
+            assert_eq!(w1.catalog.file("ligo", i), w2.catalog.file("ligo", i));
+        }
+        // Same size ladder across experiments (Table 1 ordering
+        // stability); distinct namespaces.
+        assert_eq!(
+            w1.catalog.file("ligo", 3).size,
+            w1.catalog.file("des", 3).size,
+        );
+        assert_ne!(
+            w1.catalog.file("ligo", 3).path,
+            w1.catalog.file("des", 3).path,
+        );
+    }
+
+    #[test]
+    fn size_distribution_matches_table2() {
+        // Sample the mixture and check the paper's percentiles within
+        // a tolerance band (the mixture was calibrated offline).
+        let cfg = paper_workload();
+        let mut rng = Pcg64::new(123, 9);
+        let mut sizes: Vec<f64> = (0..40_000)
+            .map(|_| sample_size(&cfg.size_dist, &mut rng).as_f64())
+            .collect();
+        let ps = stats::percentiles(&mut sizes, &[5.0, 25.0, 50.0, 75.0, 95.0]);
+        let paper = [
+            22.801 * MB as f64,
+            170.131 * MB as f64,
+            467.852 * MB as f64,
+            493.337 * MB as f64,
+            2.335 * GB as f64,
+        ];
+        for ((p, got), want) in [5.0, 25.0, 50.0, 75.0, 95.0].iter().zip(&ps).zip(&paper) {
+            let ratio = got / want;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "p{p}: got {got:.3e} want {want:.3e} (ratio {ratio:.2})"
+            );
+        }
+        // 1st percentile is tiny (5.797 KB in the paper).
+        let p1 = stats::percentiles(&mut sizes, &[1.0])[0];
+        assert!(p1 < 500.0 * KB as f64, "p1 {p1}");
+    }
+
+    #[test]
+    fn quantile_catalog_matches_distribution() {
+        // The stratified catalog's percentiles must match the mixture.
+        let cfg = paper_workload();
+        let mut sizes: Vec<f64> = (0..5_000)
+            .map(|i| quantile_size(&cfg.size_dist, i).as_f64())
+            .collect();
+        let ps = stats::percentiles(&mut sizes, &[50.0, 75.0, 95.0]);
+        assert!((0.6..1.6).contains(&(ps[0] / (467.852 * MB as f64))), "p50 {}", ps[0]);
+        assert!((0.6..1.6).contains(&(ps[1] / (493.337 * MB as f64))), "p75 {}", ps[1]);
+        assert!((0.7..1.4).contains(&(ps[2] / (2.335 * GB as f64))), "p95 {}", ps[2]);
+        // The hot prefix (first 16 indices) also spans the modes.
+        let hot: Vec<f64> = (0..16)
+            .map(|i| quantile_size(&cfg.size_dist, i).as_f64())
+            .collect();
+        let dominant = hot
+            .iter()
+            .filter(|&&s| (3e8..7e8).contains(&s))
+            .count();
+        assert!(dominant >= 6, "hot prefix carries the ~480MB mode: {hot:?}");
+        assert!(hot.iter().any(|&s| s > 1.5e9), "hot prefix has a large file");
+        assert!(hot.iter().any(|&s| s < 3e8), "hot prefix has smaller files");
+    }
+
+    #[test]
+    fn jobs_have_valid_shape() {
+        let mut w = gen();
+        for _ in 0..100 {
+            let j = w.next_job();
+            assert!(!j.files.is_empty() && j.files.len() <= 6);
+            assert!(COMPUTE_SITES.contains(&j.site.as_str()));
+            for f in &j.files {
+                assert!(f.path.starts_with(&format!("/ospool/{}/", j.experiment)));
+                assert!(f.size.as_u64() >= 512);
+            }
+        }
+        assert_eq!(w.jobs_emitted(), 100);
+    }
+
+    #[test]
+    fn experiment_mix_respects_shares() {
+        let mut w = gen();
+        let mut gwosc = 0;
+        let mut dune = 0;
+        for _ in 0..5_000 {
+            let j = w.next_job();
+            match j.experiment.as_str() {
+                "gwosc" => gwosc += 1,
+                "dune" => dune += 1,
+                _ => {}
+            }
+        }
+        // gwosc share is ~92× dune's.
+        assert!(gwosc > 20 * dune.max(1), "gwosc {gwosc} dune {dune}");
+    }
+
+    #[test]
+    fn popularity_is_zipf_skewed() {
+        let mut w = gen();
+        let mut f0 = 0u64;
+        let mut rest = 0u64;
+        for _ in 0..3_000 {
+            let j = w.next_job();
+            for f in &j.files {
+                if f.path.contains("f000000") {
+                    f0 += 1;
+                } else {
+                    rest += 1;
+                }
+            }
+        }
+        // Rank-0 file of each experiment is dramatically over-selected
+        // vs the uniform expectation of total/20000.
+        let uniform_expect = (f0 + rest) / 20_000;
+        assert!(f0 > uniform_expect * 20, "f0 {f0}, uniform {uniform_expect}");
+    }
+
+    #[test]
+    fn arrival_gaps_mean_matches_rate() {
+        let mut w = gen();
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| w.next_arrival_gap().as_secs_f64()).sum();
+        let mean = total / n as f64;
+        let expected = 3_600.0 / paper_workload().jobs_per_hour;
+        assert!(
+            (mean - expected).abs() < expected * 0.05,
+            "mean {mean} expected {expected}"
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Byte quantities with human-friendly parsing and formatting.
+//!
+//! The paper reports sizes in mixed units (5.797KB, 467.852MB, 2.335GB,
+//! 1.079PB); this module provides exact-u64 storage with the decimal
+//! (SI) units the paper uses.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// A byte quantity. Stored exactly as `u64` bytes.
+///
+/// Formatting follows the paper's convention: decimal units (1 KB =
+/// 1000 B), three fractional digits, largest unit that keeps the
+/// mantissa >= 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct ByteSize(pub u64);
+
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+pub const TB: u64 = 1_000_000_000_000;
+pub const PB: u64 = 1_000_000_000_000_000;
+
+impl ByteSize {
+    pub const fn bytes(n: u64) -> Self {
+        ByteSize(n)
+    }
+    pub const fn kb(n: u64) -> Self {
+        ByteSize(n * KB)
+    }
+    pub const fn mb(n: u64) -> Self {
+        ByteSize(n * MB)
+    }
+    pub const fn gb(n: u64) -> Self {
+        ByteSize(n * GB)
+    }
+    pub const fn tb(n: u64) -> Self {
+        ByteSize(n * TB)
+    }
+
+    /// Construct from a fractional count of a unit, e.g. `from_f64(2.335, GB)`.
+    pub fn from_f64(value: f64, unit: u64) -> Self {
+        ByteSize((value * unit as f64).round() as u64)
+    }
+
+    pub const fn as_u64(self) -> u64 {
+        self.0
+    }
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+
+    /// Saturating subtraction.
+    pub fn saturating_sub(self, other: ByteSize) -> ByteSize {
+        ByteSize(self.0.saturating_sub(other.0))
+    }
+}
+
+impl std::ops::Add for ByteSize {
+    type Output = ByteSize;
+    fn add(self, rhs: ByteSize) -> ByteSize {
+        ByteSize(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for ByteSize {
+    fn add_assign(&mut self, rhs: ByteSize) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Sub for ByteSize {
+    type Output = ByteSize;
+    fn sub(self, rhs: ByteSize) -> ByteSize {
+        ByteSize(self.0 - rhs.0)
+    }
+}
+
+impl std::iter::Sum for ByteSize {
+    fn sum<I: Iterator<Item = ByteSize>>(iter: I) -> ByteSize {
+        ByteSize(iter.map(|b| b.0).sum())
+    }
+}
+
+impl fmt::Display for ByteSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0;
+        let (value, unit) = if b >= PB {
+            (b as f64 / PB as f64, "PB")
+        } else if b >= TB {
+            (b as f64 / TB as f64, "TB")
+        } else if b >= GB {
+            (b as f64 / GB as f64, "GB")
+        } else if b >= MB {
+            (b as f64 / MB as f64, "MB")
+        } else if b >= KB {
+            (b as f64 / KB as f64, "KB")
+        } else {
+            return write!(f, "{b}B");
+        };
+        write!(f, "{value:.3}{unit}")
+    }
+}
+
+/// Error parsing a byte-size string.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("invalid byte size {0:?}")]
+pub struct ParseByteSizeError(pub String);
+
+impl FromStr for ByteSize {
+    type Err = ParseByteSizeError;
+
+    /// Parses `"2.335GB"`, `"24MB"`, `"512 KB"`, `"97"` (bytes).
+    /// Units are decimal (SI); `KiB`/`MiB`/`GiB` binary forms are also
+    /// accepted for config convenience.
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        let t = s.trim();
+        let split = t
+            .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-'))
+            .unwrap_or(t.len());
+        let (num, unit) = t.split_at(split);
+        let value: f64 = num
+            .trim()
+            .parse()
+            .map_err(|_| ParseByteSizeError(s.to_string()))?;
+        if value < 0.0 {
+            return Err(ParseByteSizeError(s.to_string()));
+        }
+        let mult = match unit.trim().to_ascii_lowercase().as_str() {
+            "" | "b" => 1,
+            "kb" | "k" => KB,
+            "mb" | "m" => MB,
+            "gb" | "g" => GB,
+            "tb" | "t" => TB,
+            "pb" | "p" => PB,
+            "kib" => 1 << 10,
+            "mib" => 1 << 20,
+            "gib" => 1 << 30,
+            "tib" => 1u64 << 40,
+            _ => return Err(ParseByteSizeError(s.to_string())),
+        };
+        Ok(ByteSize((value * mult as f64).round() as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_bytes() {
+        assert_eq!("97".parse::<ByteSize>().unwrap(), ByteSize(97));
+        assert_eq!("0".parse::<ByteSize>().unwrap(), ByteSize(0));
+    }
+
+    #[test]
+    fn parse_si_units() {
+        assert_eq!("5.797KB".parse::<ByteSize>().unwrap(), ByteSize(5_797));
+        assert_eq!("24MB".parse::<ByteSize>().unwrap(), ByteSize(24 * MB));
+        assert_eq!(
+            "2.335GB".parse::<ByteSize>().unwrap(),
+            ByteSize(2_335_000_000)
+        );
+        assert_eq!("1.079PB".parse::<ByteSize>().unwrap(), ByteSize(1_079 * TB));
+    }
+
+    #[test]
+    fn parse_binary_units() {
+        assert_eq!("1KiB".parse::<ByteSize>().unwrap(), ByteSize(1024));
+        assert_eq!("2MiB".parse::<ByteSize>().unwrap(), ByteSize(2 << 20));
+    }
+
+    #[test]
+    fn parse_whitespace_and_case() {
+        assert_eq!(" 512 kb ".parse::<ByteSize>().unwrap(), ByteSize(512 * KB));
+        assert_eq!("10gb".parse::<ByteSize>().unwrap(), ByteSize(10 * GB));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!("".parse::<ByteSize>().is_err());
+        assert!("12QB".parse::<ByteSize>().is_err());
+        assert!("-5MB".parse::<ByteSize>().is_err());
+        assert!("MB".parse::<ByteSize>().is_err());
+    }
+
+    #[test]
+    fn display_matches_paper_style() {
+        assert_eq!(ByteSize(5_797).to_string(), "5.797KB");
+        assert_eq!(ByteSize(467_852_000).to_string(), "467.852MB");
+        assert_eq!(ByteSize(2_335_000_000).to_string(), "2.335GB");
+        assert_eq!(ByteSize(1_079 * TB).to_string(), "1.079PB");
+        assert_eq!(ByteSize(12).to_string(), "12B");
+    }
+
+    #[test]
+    fn roundtrip_display_parse() {
+        for &n in &[0u64, 1, 999, 5_797, 24 * MB, 2_335_000_000, 10 * GB] {
+            let shown = ByteSize(n).to_string();
+            let back: ByteSize = shown.parse().unwrap();
+            // Display rounds to 3 digits; allow 0.1% slack.
+            let err = (back.0 as i128 - n as i128).unsigned_abs() as u64;
+            assert!(err <= n / 1000 + 1, "{n} -> {shown} -> {back:?}");
+        }
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(ByteSize::mb(1) + ByteSize::kb(500), ByteSize(1_500_000));
+        assert_eq!(ByteSize::gb(1).saturating_sub(ByteSize::tb(1)), ByteSize(0));
+        let total: ByteSize = [ByteSize::kb(1), ByteSize::kb(2)].into_iter().sum();
+        assert_eq!(total, ByteSize::kb(3));
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared utility substrate: byte sizes, simulated time, deterministic
+//! RNG, Zipf sampling, descriptive statistics, and a miniature
+//! property-testing framework (the offline environment has no proptest;
+//! see DESIGN.md §2 row 18).
+
+pub mod bytes;
+pub mod pcg;
+pub mod prop;
+pub mod simtime;
+pub mod stats;
+pub mod zipf;
+
+pub use bytes::ByteSize;
+pub use pcg::Pcg64;
+pub use simtime::{Duration, SimTime};
+pub use zipf::Zipf;

@@ -1,0 +1,233 @@
+//! Deterministic PCG-XSH-RR 64/32-based PRNG (two streams combined for a
+//! 64-bit output). The offline crate set has no `rand`; every stochastic
+//! component (workload generation, jitter, failure injection) draws from
+//! this generator so whole-federation runs are reproducible from a seed.
+
+/// A 64-bit-output permuted congruential generator.
+///
+/// This is PCG-XSL-RR 128/64 ("pcg64") with the standard multiplier and
+/// a caller-chosen stream. Passes practical statistical needs for
+/// simulation workloads; not cryptographic.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id. Distinct streams
+    /// with the same seed are independent, which lets each simulated
+    /// component own a private RNG derived from the run seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut pcg = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        pcg.next_u64();
+        pcg.state = pcg.state.wrapping_add(seed as u128);
+        pcg.next_u64();
+        pcg
+    }
+
+    /// Derive a child generator for a named subcomponent.
+    pub fn fork(&mut self, label: &str) -> Pcg64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        Pcg64::new(self.next_u64() ^ h, h | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi)`. Panics if `lo >= hi`.
+    pub fn gen_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        let span = hi - lo;
+        // Lemire's method with rejection for unbiased bounded integers.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (span as u128);
+            let l = m as u64;
+            if l >= span.wrapping_neg() % span {
+                return lo + (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn gen_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// `true` with probability `p`.
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box-Muller (one value; discards pair partner
+    /// to keep the call stateless).
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal with the given parameters of the underlying normal.
+    pub fn gen_lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.gen_normal()).exp()
+    }
+
+    /// Exponential with the given rate (mean `1/rate`).
+    pub fn gen_exp(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        -self.next_f64().max(1e-300).ln() / rate
+    }
+
+    /// Choose a uniformly random element.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.gen_range(0, items.len() as u64) as usize]
+    }
+
+    /// Sample an index from unnormalised weights.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "all weights zero");
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.gen_range(0, i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::new(1, 0);
+        let mut b = Pcg64::new(2, 0);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(1, 0);
+        let mut b = Pcg64::new(1, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_is_deterministic_and_distinct() {
+        let mut root1 = Pcg64::new(9, 9);
+        let mut root2 = Pcg64::new(9, 9);
+        let mut c1 = root1.fork("cache");
+        let mut c2 = root2.fork("cache");
+        assert_eq!(c1.next_u64(), c2.next_u64());
+        let mut r1 = Pcg64::new(9, 9);
+        let mut o = r1.fork("origin");
+        let mut c = Pcg64::new(9, 9).fork("cache");
+        assert_ne!(o.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(3, 3);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut rng = Pcg64::new(4, 4);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let v = rng.gen_range(5, 15);
+            assert!((5..15).contains(&v));
+            seen[(v - 5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all values in range hit");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5, 5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut rng = Pcg64::new(6, 6);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[rng.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((2.5..3.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(7, 7);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffled order changed");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut rng = Pcg64::new(8, 8);
+        let n = 50_000;
+        let mean = (0..n).map(|_| rng.gen_exp(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Miniature property-based testing framework.
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! subset the test suite needs: seeded random case generation, a
+//! configurable number of cases, and greedy shrinking of failing inputs
+//! (halving for integers, prefix/element shrinking for vectors).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this offline image)
+//! use stashcache::util::prop::check;
+//! check("add commutes", 200, |g| {
+//!     let a = g.u64(0, 1_000);
+//!     let b = g.u64(0, 1_000);
+//!     (a + b == b + a, format!("a={a} b={b}"))
+//! });
+//! ```
+
+use super::pcg::Pcg64;
+
+/// Value source handed to each property run. Records the draws so a
+/// failing case can be replayed while shrinking.
+pub struct Gen {
+    rng: Pcg64,
+    /// When `Some`, draws are served from this tape instead of the RNG
+    /// (used during shrinking); missing entries fall back to minimum.
+    tape: Option<Vec<u64>>,
+    cursor: usize,
+    /// Draws made during this run (raw u64s before range mapping).
+    pub trace: Vec<u64>,
+}
+
+impl Gen {
+    fn from_rng(rng: Pcg64) -> Self {
+        Gen {
+            rng,
+            tape: None,
+            cursor: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    fn from_tape(tape: Vec<u64>) -> Self {
+        Gen {
+            rng: Pcg64::new(0, 0),
+            tape: Some(tape),
+            cursor: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    fn draw(&mut self) -> u64 {
+        let v = match &self.tape {
+            Some(t) => t.get(self.cursor).copied().unwrap_or(0),
+            None => self.rng.next_u64(),
+        };
+        self.cursor += 1;
+        self.trace.push(v);
+        v
+    }
+
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = hi - lo + 1;
+        if span == 0 {
+            // full range
+            return self.draw();
+        }
+        lo + self.draw() % span
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.u64(0, (hi - lo) as u64) as i64
+    }
+
+    /// Float in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let unit = (self.draw() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        lo + unit * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.draw() & 1 == 1
+    }
+
+    /// Vector of `len in [0, max_len]` values from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+}
+
+/// Outcome of one property evaluation: pass/fail plus a human-readable
+/// rendering of the case for the failure report.
+pub type Outcome = (bool, String);
+
+/// Run `cases` random evaluations of `property`. On failure, shrink the
+/// underlying draw tape and panic with the smallest failing case found.
+pub fn check(name: &str, cases: usize, mut property: impl FnMut(&mut Gen) -> Outcome) {
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xc0ffee_u64);
+    let mut root = Pcg64::new(seed, 0x5eed);
+    for case in 0..cases {
+        let mut g = Gen::from_rng(root.fork(&format!("{name}:{case}")));
+        let (ok, rendered) = property(&mut g);
+        if !ok {
+            let tape = g.trace.clone();
+            let (min_tape, min_render) = shrink(tape, rendered, &mut property);
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}):\n  \
+                 minimal case: {min_render}\n  tape: {min_tape:?}\n  \
+                 re-run with PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Greedy tape shrinking: try truncating the tape, zeroing entries, and
+/// halving entries, keeping any mutation that still fails.
+fn shrink(
+    mut tape: Vec<u64>,
+    mut rendered: String,
+    property: &mut impl FnMut(&mut Gen) -> Outcome,
+) -> (Vec<u64>, String) {
+    let fails = |t: &[u64], property: &mut dyn FnMut(&mut Gen) -> Outcome| -> Option<String> {
+        let mut g = Gen::from_tape(t.to_vec());
+        let (ok, r) = property(&mut g);
+        if ok {
+            None
+        } else {
+            Some(r)
+        }
+    };
+    let mut improved = true;
+    let mut budget = 2_000usize;
+    while improved && budget > 0 {
+        improved = false;
+        // Truncate from the end.
+        while tape.len() > 1 {
+            let t: Vec<u64> = tape[..tape.len() - 1].to_vec();
+            match fails(&t, property) {
+                Some(r) => {
+                    tape = t;
+                    rendered = r;
+                    improved = true;
+                }
+                None => break,
+            }
+        }
+        // Zero, then halve, each entry.
+        for i in 0..tape.len() {
+            budget = budget.saturating_sub(1);
+            if tape[i] == 0 {
+                continue;
+            }
+            for candidate in [0, tape[i] / 2, tape[i] - 1] {
+                if candidate >= tape[i] {
+                    continue;
+                }
+                let mut t = tape.clone();
+                t[i] = candidate;
+                if let Some(r) = fails(&t, property) {
+                    tape = t;
+                    rendered = r;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    (tape, rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        check("sum is monotone", 100, |g| {
+            let a = g.u64(0, 1000);
+            let b = g.u64(0, 1000);
+            (a + b >= a, format!("a={a} b={b}"))
+        });
+    }
+
+    #[test]
+    fn failing_property_panics_with_shrunk_case() {
+        let result = std::panic::catch_unwind(|| {
+            check("all u64 < 100 (false)", 500, |g| {
+                let x = g.u64(0, 10_000);
+                (x < 100, format!("x={x}"))
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal case"), "{msg}");
+        // Shrinker should reach the boundary value exactly.
+        assert!(msg.contains("x=100"), "shrunk to boundary: {msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_len() {
+        check("vec len bound", 100, |g| {
+            let v = g.vec(16, |g| g.u64(0, 9));
+            (
+                v.len() <= 16 && v.iter().all(|&x| x < 10),
+                format!("{v:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn tape_replay_is_exact() {
+        let mut g1 = Gen::from_rng(Pcg64::new(1, 1));
+        let a1 = g1.u64(0, 1_000_000);
+        let b1 = g1.f64(0.0, 1.0);
+        let tape = g1.trace.clone();
+        let mut g2 = Gen::from_tape(tape);
+        assert_eq!(g2.u64(0, 1_000_000), a1);
+        assert_eq!(g2.f64(0.0, 1.0), b1);
+    }
+}

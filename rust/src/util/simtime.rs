@@ -1,0 +1,178 @@
+//! Simulated time. Integer microseconds since simulation epoch, so the
+//! discrete-event engine is exactly deterministic (no float drift in
+//! event ordering).
+
+use std::fmt;
+
+/// A point in simulated time (microseconds since epoch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+/// A span of simulated time (microseconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Duration(pub u64);
+
+pub const MICROS_PER_SEC: u64 = 1_000_000;
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_secs_f64(s: f64) -> Self {
+        SimTime((s * MICROS_PER_SEC as f64).round() as u64)
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / MICROS_PER_SEC as f64
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+    pub fn saturating_sub(self, other: SimTime) -> Duration {
+        Duration(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Duration {
+    pub const ZERO: Duration = Duration(0);
+
+    pub fn from_secs_f64(s: f64) -> Self {
+        assert!(s >= 0.0 && s.is_finite(), "negative/NaN duration: {s}");
+        Duration((s * MICROS_PER_SEC as f64).round() as u64)
+    }
+    pub const fn from_secs(s: u64) -> Self {
+        Duration(s * MICROS_PER_SEC)
+    }
+    pub const fn from_millis(ms: u64) -> Self {
+        Duration(ms * 1_000)
+    }
+    pub const fn from_micros(us: u64) -> Self {
+        Duration(us)
+    }
+    pub const fn from_mins(m: u64) -> Self {
+        Duration(m * 60 * MICROS_PER_SEC)
+    }
+    pub const fn from_hours(h: u64) -> Self {
+        Duration(h * 3_600 * MICROS_PER_SEC)
+    }
+    pub const fn from_days(d: u64) -> Self {
+        Duration(d * 86_400 * MICROS_PER_SEC)
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / MICROS_PER_SEC as f64
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+}
+
+impl std::ops::Add<Duration> for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: Duration) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign<Duration> for SimTime {
+    fn add_assign(&mut self, rhs: Duration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Add for Duration {
+    type Output = Duration;
+    fn add(self, rhs: Duration) -> Duration {
+        Duration(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for Duration {
+    fn add_assign(&mut self, rhs: Duration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Sub for SimTime {
+    type Output = Duration;
+    /// Panics if `rhs` is later than `self` (events out of order).
+    fn sub(self, rhs: SimTime) -> Duration {
+        Duration(
+            self.0
+                .checked_sub(rhs.0)
+                .expect("SimTime subtraction underflow"),
+        )
+    }
+}
+
+impl std::ops::Mul<u64> for Duration {
+    type Output = Duration;
+    fn mul(self, rhs: u64) -> Duration {
+        Duration(self.0 * rhs)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t={:.6}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for Duration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.as_secs_f64();
+        if s < 1e-3 {
+            write!(f, "{:.1}us", self.0 as f64)
+        } else if s < 1.0 {
+            write!(f, "{:.3}ms", s * 1e3)
+        } else if s < 120.0 {
+            write!(f, "{s:.3}s")
+        } else if s < 7200.0 {
+            write!(f, "{:.1}min", s / 60.0)
+        } else if s < 86_400.0 * 2.0 {
+            write!(f, "{:.1}h", s / 3600.0)
+        } else {
+            write!(f, "{:.1}d", s / 86_400.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        let t = SimTime::from_secs_f64(1.5);
+        assert_eq!(t.0, 1_500_000);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ordering_is_integer_exact() {
+        let a = SimTime::from_secs_f64(0.1) + Duration::from_secs_f64(0.2);
+        let b = SimTime::from_secs_f64(0.3);
+        assert_eq!(a, b); // would fail with raw f64
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::ZERO + Duration::from_millis(250) + Duration::from_micros(1);
+        assert_eq!(t.0, 250_001);
+        assert_eq!((t - SimTime::ZERO).as_micros(), 250_001);
+        assert_eq!(Duration::from_secs(2) * 3, Duration::from_secs(6));
+        assert_eq!(Duration::from_days(1).as_micros(), 86_400 * MICROS_PER_SEC);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        let _ = SimTime(0) - SimTime(1);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Duration::from_micros(5).to_string(), "5.0us");
+        assert_eq!(Duration::from_millis(12).to_string(), "12.000ms");
+        assert_eq!(Duration::from_secs(3).to_string(), "3.000s");
+        assert_eq!(Duration::from_mins(10).to_string(), "10.0min");
+        assert_eq!(Duration::from_days(3).to_string(), "3.0d");
+    }
+}

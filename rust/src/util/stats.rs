@@ -1,0 +1,253 @@
+//! Descriptive statistics used by the monitoring aggregator and the
+//! report generators: percentiles (Table 2), means, and a streaming
+//! Welford accumulator for transfer-rate summaries.
+
+/// Percentile of a sample by linear interpolation between closest ranks
+/// (the same convention as `numpy.percentile(..., method="linear")`,
+/// which the paper's analysis notebooks used).
+///
+/// `p` in `[0, 100]`. Panics on empty input.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "input must be sorted"
+    );
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Compute several percentiles at once over unsorted data.
+pub fn percentiles(data: &mut [f64], ps: &[f64]) -> Vec<f64> {
+    data.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile data"));
+    ps.iter().map(|&p| percentile(data, p)).collect()
+}
+
+/// Inverse standard-normal CDF (probit), Acklam's rational
+/// approximation — relative error < 1.15e-9 over (0, 1).
+pub fn probit(p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "probit domain: {p}");
+    let p = p.clamp(1e-300, 1.0 - 1e-16);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+        1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+        6.680131188771972e+01, -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+        -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+pub fn mean(data: &[f64]) -> f64 {
+    assert!(!data.is_empty());
+    data.iter().sum::<f64>() / data.len() as f64
+}
+
+pub fn geometric_mean(data: &[f64]) -> f64 {
+    assert!(!data.is_empty());
+    let log_sum: f64 = data.iter().map(|x| x.max(1e-300).ln()).sum();
+    (log_sum / data.len() as f64).exp()
+}
+
+/// Streaming mean/variance/min/max (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Population variance. Zero for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Merge another accumulator (parallel reduction; Chan et al.).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let d = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&d, 0.0), 1.0);
+        assert_eq!(percentile(&d, 100.0), 4.0);
+        assert_eq!(percentile(&d, 50.0), 2.5);
+        assert!((percentile(&d, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 95.0), 7.0);
+    }
+
+    #[test]
+    fn percentiles_sorts() {
+        let mut d = [3.0, 1.0, 2.0];
+        let ps = percentiles(&mut d, &[0.0, 50.0, 100.0]);
+        assert_eq!(ps, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_empty_panics() {
+        percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn probit_known_values() {
+        assert!((probit(0.5)).abs() < 1e-9);
+        assert!((probit(0.975) - 1.959964).abs() < 1e-5);
+        assert!((probit(0.025) + 1.959964).abs() < 1e-5);
+        assert!((probit(0.8413447) - 1.0).abs() < 1e-4);
+        assert!(probit(1e-10) < -6.0);
+    }
+
+    #[test]
+    fn probit_inverts_normal_cdf() {
+        // Φ(probit(p)) ≈ p via the error-function-free check: sample
+        // the normal via Box-Muller and compare empirical quantiles.
+        use crate::util::Pcg64;
+        let mut rng = Pcg64::new(3, 3);
+        let mut xs: Vec<f64> = (0..200_000).map(|_| rng.gen_normal()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.1, 0.25, 0.5, 0.9] {
+            let emp = xs[(p * xs.len() as f64) as usize];
+            assert!((probit(p) - emp).abs() < 0.02, "p={p}: {} vs {emp}", probit(p));
+        }
+    }
+
+    #[test]
+    fn means() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((geometric_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let data: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut w = Welford::new();
+        for &x in &data {
+            w.push(x);
+        }
+        let m = mean(&data);
+        let var = data.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / data.len() as f64;
+        assert!((w.mean() - m).abs() < 1e-9);
+        assert!((w.variance() - var).abs() < 1e-9);
+        assert_eq!(w.count(), 100);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let data: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64).collect();
+        let mut whole = Welford::new();
+        for &x in &data {
+            whole.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &data[..400] {
+            a.push(x);
+        }
+        for &x in &data[400..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-6);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+    }
+}

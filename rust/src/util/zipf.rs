@@ -1,0 +1,144 @@
+//! Zipf-distributed sampling for file popularity.
+//!
+//! Cache-effectiveness in the paper rests on reuse: jobs at a site
+//! re-request the same inputs, so a cache converts WAN transfers into
+//! LAN transfers (Fig 5). Scientific data-access popularity is
+//! classically Zipf-like; the workload generator draws file indices
+//! from this distribution.
+
+use super::pcg::Pcg64;
+
+/// Sampler for `P(k) ∝ 1 / (k+1)^s` over `k ∈ [0, n)`.
+///
+/// Uses an exact precomputed CDF with binary-search inversion:
+/// O(n) memory once, O(log n) per sample, exact probabilities. The
+/// federation catalogs are at most a few million files, so the table
+/// is small; building it is a one-time cost per workload.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    /// cdf[k] = P(X <= k), strictly increasing, cdf[n-1] == 1.
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// `n` — number of items; `s` — exponent (`s = 0` is uniform).
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1, "zipf over empty catalog");
+        assert!(s >= 0.0 && s.is_finite(), "invalid exponent {s}");
+        let n = usize::try_from(n).expect("catalog too large");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 0..n {
+            acc += ((k + 1) as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of items in the catalog.
+    pub fn len(&self) -> u64 {
+        self.cdf.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // n >= 1 enforced at construction
+    }
+
+    /// Exact probability of item `k`.
+    pub fn pmf(&self, k: u64) -> f64 {
+        let k = k as usize;
+        assert!(k < self.cdf.len());
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+
+    /// Draw an item index in `[0, n)`; index 0 is the most popular.
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        let u = rng.next_f64();
+        // First k with cdf[k] >= u.
+        self.cdf.partition_point(|&c| c < u) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn histogram(n: u64, s: f64, draws: usize) -> Vec<usize> {
+        let z = Zipf::new(n, s);
+        let mut rng = Pcg64::new(11, 11);
+        let mut counts = vec![0usize; n as usize];
+        for _ in 0..draws {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn in_range() {
+        let z = Zipf::new(100, 1.1);
+        let mut rng = Pcg64::new(1, 1);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn rank_one_dominates() {
+        let counts = histogram(1000, 1.0, 100_000);
+        assert!(counts[0] > counts[10] && counts[10] > counts[100]);
+    }
+
+    #[test]
+    fn ratio_matches_exponent() {
+        // For s=1, P(1)/P(2) = 2.
+        let counts = histogram(100, 1.0, 400_000);
+        let ratio = counts[0] as f64 / counts[1] as f64;
+        assert!((1.7..2.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn pmf_sums_to_one_and_matches_sampling() {
+        let z = Zipf::new(50, 0.9);
+        let total: f64 = (0..50).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        let counts = histogram(50, 0.9, 200_000);
+        for k in [0u64, 1, 5, 20] {
+            let expected = z.pmf(k) * 200_000.0;
+            let got = counts[k as usize] as f64;
+            assert!(
+                (got - expected).abs() < 5.0 * expected.sqrt().max(10.0),
+                "k={k} expected {expected:.0} got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn s_zero_is_uniform() {
+        let counts = histogram(10, 0.0, 100_000);
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn single_item_catalog() {
+        let z = Zipf::new(1, 1.2);
+        let mut rng = Pcg64::new(2, 2);
+        assert_eq!(z.sample(&mut rng), 0);
+        assert_eq!(z.len(), 1);
+    }
+
+    #[test]
+    fn non_integral_exponent() {
+        let counts = histogram(50, 0.8, 100_000);
+        assert!(counts[0] > counts[5]);
+    }
+}

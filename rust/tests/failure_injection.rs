@@ -1,0 +1,127 @@
+//! Failure injection: the paper's operational claims under faults.
+//!
+//! §1: "The resource owner may want to reclaim space from the
+//! opportunistic user ... the resource provider can reclaim space in
+//! the cache without worry of causing workflow failures" — eviction
+//! and data-removal must degrade to origin fetches, never to errors.
+//! §3: two redirectors run "in a round robin, high availability
+//! configuration" — one instance down must be invisible to clients.
+
+use stashcache::config::defaults::paper_federation;
+use stashcache::config::CacheConfig;
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::sim::workload::FileRef;
+use stashcache::util::ByteSize;
+
+fn file(n: u64, mb: u64) -> FileRef {
+    FileRef {
+        path: format!("/ospool/minerva/data/fi{n:04}.dat"),
+        size: ByteSize::mb(mb),
+        version: 1,
+    }
+}
+
+#[test]
+fn redirector_instance_failure_is_transparent() {
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("nebraska").unwrap();
+    // Kill instance 0 (of 2).
+    fed.redirectors.set_healthy(0, false);
+    for i in 0..6 {
+        let rec = fed.download(site, &file(i, 50), DownloadMethod::Stash);
+        assert!(rec.bytes > 0, "download {i} must succeed on the HA pair");
+    }
+    // All discovery went through instance 1.
+    assert_eq!(fed.redirectors.instances[0].broadcasts, 0);
+    assert!(fed.redirectors.instances[1].broadcasts > 0);
+    // Recovery: bring 0 back, kill 1.
+    fed.redirectors.set_healthy(0, true);
+    fed.redirectors.set_healthy(1, false);
+    let rec = fed.download(site, &file(99, 50), DownloadMethod::Stash);
+    assert!(rec.bytes > 0, "failover back to instance 0");
+}
+
+#[test]
+fn cache_eviction_under_pressure_never_fails_workflows() {
+    // Tiny caches: every download evicts something; workflows still
+    // complete (the §1 claim).
+    let mut cfg = paper_federation();
+    for s in &mut cfg.sites {
+        if let Some(c) = &mut s.cache {
+            *c = CacheConfig {
+                capacity: ByteSize::mb(600),
+                ..*c
+            };
+        }
+    }
+    let mut fed = FedSim::build(cfg);
+    let site = fed.topo.site_index("syracuse").unwrap();
+    for round in 0..3 {
+        for i in 0..5 {
+            let rec = fed.download(site, &file(i, 200), DownloadMethod::Stash);
+            assert!(rec.bytes > 0, "round {round} file {i}");
+        }
+    }
+    let cache_site = fed.nearest_cache_site(site);
+    let c = &fed.caches[&cache_site];
+    assert!(c.stats.evictions > 0, "pressure must evict");
+    assert!(
+        c.usage().as_u64() <= 600_000_000,
+        "capacity respected: {}",
+        c.usage()
+    );
+    // Everything was still delivered and monitored.
+    assert_eq!(fed.aggregator.reports, 15); // 3 rounds × 5 files
+}
+
+#[test]
+fn owner_reclaims_data_at_origin() {
+    // The data owner deletes a file; cached copies still serve reads
+    // (transient cache semantics), but a *new* file at the same path
+    // with a new version fetches fresh content.
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("chicago").unwrap();
+    let f = file(1, 100);
+    fed.download(site, &f, DownloadMethod::Stash);
+    // Owner removes it from the origin.
+    let oid = fed.namespace.resolve(&f.path).unwrap();
+    fed.origins[oid.0].remove_file(&f.path);
+    // Cached copy still serves (the cache is authoritative for its
+    // transient copy — no workflow failure).
+    let hot = fed.download(site, &f, DownloadMethod::Stash);
+    assert!(hot.cache_hit, "cached copy survives origin removal");
+}
+
+#[test]
+fn all_redirectors_down_is_detected() {
+    let mut fed = FedSim::build(paper_federation());
+    fed.redirectors.set_healthy(0, false);
+    fed.redirectors.set_healthy(1, false);
+    let err = fed.redirectors.locate(
+        "/ospool/ligo/data/x.dat",
+        &mut fed.origins,
+        stashcache::util::SimTime::ZERO,
+    );
+    assert!(err.is_err(), "total redirector outage must surface");
+}
+
+#[test]
+fn cache_abort_on_failed_fetch_releases_state() {
+    // Direct state-machine check: a failed origin fetch must leave the
+    // cache able to retry (no stuck in-flight chunks, no pins).
+    use stashcache::cache::CacheServer;
+    use stashcache::util::SimTime;
+    let mut c = CacheServer::new(
+        "t",
+        CacheConfig {
+            capacity: ByteSize::gb(1),
+            ..CacheConfig::default()
+        },
+    );
+    let plan = c.plan_read("/f", 0, 1_000_000, 1_000_000, 1, SimTime::ZERO);
+    c.begin_fetch("/f", &plan.fetch);
+    c.abort_fetch("/f", &plan.fetch); // origin died
+    let retry = c.plan_read("/f", 0, 1_000_000, 1_000_000, 1, SimTime(1));
+    assert_eq!(retry.fetch, plan.fetch, "retry can re-fetch everything");
+    assert!(retry.join.is_empty(), "no phantom in-flight chunks");
+}

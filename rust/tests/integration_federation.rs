@@ -1,0 +1,168 @@
+//! Integration: the assembled federation end-to-end in simulation.
+//!
+//! These tests cross module boundaries: clients → geoip → cache →
+//! redirector → origin → netsim → monitoring → aggregator, asserting
+//! conservation laws the paper's architecture implies.
+
+use stashcache::config::defaults::{paper_federation, test_file_sizes, COMPUTE_SITES};
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::sim::scenario::{self, ScenarioConfig};
+use stashcache::sim::usage::{self, UsageConfig};
+use stashcache::sim::workload::FileRef;
+use stashcache::util::ByteSize;
+
+#[test]
+fn bytes_conservation_across_layers() {
+    // Bytes served by caches == bytes clients read; bytes fetched from
+    // origins == bytes origins served to caches (stash path).
+    let mut fed = FedSim::build(paper_federation());
+    let mut client_bytes = 0u64;
+    for (i, site) in COMPUTE_SITES.iter().enumerate() {
+        let idx = fed.topo.site_index(site).unwrap();
+        for j in 0..4 {
+            let f = FileRef {
+                path: format!("/ospool/des/data/int{i}-{j}.dat"),
+                size: ByteSize::mb(50 + 10 * j),
+                version: 1,
+            };
+            let rec = fed.download(idx, &f, DownloadMethod::Stash);
+            client_bytes += rec.bytes;
+        }
+    }
+    let served: u64 = fed
+        .caches
+        .values()
+        .map(|c| c.stats.bytes_served_hit + c.stats.bytes_served_miss)
+        .sum();
+    let fetched: u64 = fed.caches.values().map(|c| c.stats.bytes_fetched_origin).sum();
+    let origin_served: u64 = fed.origins.iter().map(|o| o.bytes_served).sum();
+    assert_eq!(served, client_bytes, "cache-served == client-read");
+    assert_eq!(fetched, origin_served, "cache-fetched == origin-served");
+    assert!(fetched <= client_bytes, "no over-fetch on whole-file reads");
+    // Monitoring accounted every stash transfer.
+    assert_eq!(fed.aggregator.reports, 20);
+    assert_eq!(fed.aggregator.total_bytes().as_u64(), client_bytes);
+}
+
+#[test]
+fn scenario_full_run_shape() {
+    // The complete §4.1 scenario at full size: 5 sites × 7 files × 4
+    // downloads = 140 measurements.
+    let results = scenario::run(paper_federation(), &ScenarioConfig::default());
+    assert_eq!(results.measurements.len(), 5 * 7 * 4);
+    // Every (site, file, tool, pass) cell exists.
+    for site in COMPUTE_SITES {
+        for (label, _) in test_file_sizes() {
+            for tool in ["http", "stash"] {
+                for pass in ["cold", "hot"] {
+                    assert!(
+                        results.rate(site, &label, tool, pass).is_some(),
+                        "missing cell {site}/{label}/{tool}/{pass}"
+                    );
+                }
+            }
+        }
+    }
+    // Paper Table 3 signs.
+    assert!(results.pct_difference("colorado", "f10g").unwrap() > 0.0);
+    assert!(results.pct_difference("bellarmine", "p95").unwrap() < 0.0);
+}
+
+#[test]
+fn usage_sim_monitoring_equals_ground_truth() {
+    let ucfg = UsageConfig {
+        days: 0.25,
+        jobs_per_hour: Some(60.0),
+        background_flows: 1,
+        weekly_intensity: Vec::new(),
+        wan_bucket_secs: 1_800.0,
+    };
+    let out = usage::run(paper_federation(), &ucfg);
+    // Every download produced exactly one monitoring report.
+    assert_eq!(out.fed.aggregator.reports, out.downloads);
+    assert_eq!(out.fed.collector.stats.orphan_closes, 0);
+    assert_eq!(out.fed.collector.stats.decode_errors, 0);
+    // Aggregated bytes equal the caches' served bytes.
+    let served: u64 = out
+        .fed
+        .caches
+        .values()
+        .map(|c| c.stats.bytes_served_hit + c.stats.bytes_served_miss)
+        .sum();
+    assert_eq!(out.fed.aggregator.total_bytes().as_u64(), served);
+}
+
+#[test]
+fn proxy_and_stash_paths_are_independent() {
+    // Downloading via the proxy must not warm the stash cache, and
+    // vice versa (they are distinct systems in the paper).
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("nebraska").unwrap();
+    let f = FileRef {
+        path: "/ospool/nova/data/indep.dat".into(),
+        size: ByteSize::mb(100),
+        version: 1,
+    };
+    let _http = fed.download(site, &f, DownloadMethod::HttpProxy);
+    let stash_first = fed.download(site, &f, DownloadMethod::Stash);
+    assert!(
+        !stash_first.cache_hit,
+        "proxy download must not pre-warm the stash cache"
+    );
+    let f2 = FileRef {
+        path: "/ospool/nova/data/indep2.dat".into(),
+        size: ByteSize::mb(100),
+        version: 1,
+    };
+    let _stash = fed.download(site, &f2, DownloadMethod::Stash);
+    let http_second = fed.download(site, &f2, DownloadMethod::HttpProxy);
+    assert!(
+        !http_second.cache_hit,
+        "stash download must not pre-warm the proxy"
+    );
+}
+
+#[test]
+fn dataset_update_invalidates_cached_copy() {
+    // The owner rewrites a file at the origin (new mtime); the cache
+    // must serve the new version, not the stale chunks.
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("syracuse").unwrap();
+    let v1 = FileRef {
+        path: "/ospool/lsst/data/cat.fits".into(),
+        size: ByteSize::mb(200),
+        version: 1,
+    };
+    fed.download(site, &v1, DownloadMethod::Stash);
+    let hot = fed.download(site, &v1, DownloadMethod::Stash);
+    assert!(hot.cache_hit);
+    let v2 = FileRef { version: 2, ..v1.clone() };
+    let after_update = fed.download(site, &v2, DownloadMethod::Stash);
+    assert!(
+        !after_update.cache_hit,
+        "version bump must invalidate cached chunks"
+    );
+    let cache_site = fed.nearest_cache_site(site);
+    assert_eq!(fed.caches[&cache_site].stats.invalidations, 1);
+}
+
+#[test]
+fn wan_accounting_matches_link_counters() {
+    // Fig 5's counter: a cold remote fetch at a cache-less site moves
+    // ~file-size bytes across that site's WAN link.
+    let mut fed = FedSim::build(paper_federation());
+    let col = fed.topo.site_index("colorado").unwrap();
+    let before = fed.wan_bytes(col);
+    let f = FileRef {
+        path: "/ospool/dune/data/wan.dat".into(),
+        size: ByteSize::mb(300),
+        version: 1,
+    };
+    fed.download(col, &f, DownloadMethod::Stash);
+    let delta = fed.wan_bytes(col) - before;
+    let expected = 300_000_000.0;
+    assert!(
+        (delta - expected).abs() < expected * 0.01,
+        "WAN delta {delta} vs expected {expected}"
+    );
+}

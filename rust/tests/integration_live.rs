@@ -1,0 +1,129 @@
+//! Integration: the live TCP/UDP federation on loopback.
+//!
+//! Real sockets, real bytes, real monitoring datagrams — asserts the
+//! protocol stack works outside the simulator (DESIGN.md: live mode).
+
+use stashcache::config::CacheConfig;
+use stashcache::live::client::LiveCacheEndpoint;
+use stashcache::live::{stashcp_live, CollectorDaemon, LiveCache, LiveOrigin, LiveRedirector};
+use stashcache::util::ByteSize;
+
+struct Fixture {
+    origin: LiveOrigin,
+    _redirector: LiveRedirector,
+    monitor: CollectorDaemon,
+    caches: Vec<LiveCache>,
+    endpoints: Vec<LiveCacheEndpoint>,
+}
+
+fn federation(files: &[(&str, u64, u64)]) -> Fixture {
+    let origin = LiveOrigin::start("o", "/ospool/test", files).unwrap();
+    let redirector =
+        LiveRedirector::start(vec![("/ospool/test".into(), origin.addr.clone())]).unwrap();
+    let monitor =
+        CollectorDaemon::start(vec![(0, "cache-a".into()), (1, "cache-b".into())]).unwrap();
+    let cfg = CacheConfig {
+        capacity: ByteSize::mb(600),
+        chunk_size: ByteSize::mb(2),
+        ..Default::default()
+    };
+    let a = LiveCache::start("cache-a", 0, cfg, redirector.addr.clone(), monitor.addr.clone())
+        .unwrap();
+    let b = LiveCache::start("cache-b", 1, cfg, redirector.addr.clone(), monitor.addr.clone())
+        .unwrap();
+    let endpoints = vec![
+        LiveCacheEndpoint {
+            site: stashcache::geoip::CacheSite {
+                name: "cache-a".into(),
+                lat: 40.8,
+                lon: -96.7,
+            },
+            addr: a.addr.clone(),
+        },
+        LiveCacheEndpoint {
+            site: stashcache::geoip::CacheSite {
+                name: "cache-b".into(),
+                lat: 52.4,
+                lon: 4.9,
+            },
+            addr: b.addr.clone(),
+        },
+    ];
+    Fixture {
+        origin,
+        _redirector: redirector,
+        monitor,
+        caches: vec![a, b],
+        endpoints,
+    }
+}
+
+#[test]
+fn live_roundtrip_with_verification() {
+    let fx = federation(&[("/ospool/test/a.dat", 5_000_000, 3)]);
+    // US client → cache-a (nearest).
+    let t = stashcp_live("/ospool/test/a.dat", 41.0, -100.0, &fx.endpoints).unwrap();
+    assert_eq!(t.bytes.len(), 5_000_000);
+    assert!(t.verified, "content must verify against the keystream");
+    assert_eq!(t.cache_used, "cache-a");
+    // EU client → cache-b.
+    let t2 = stashcp_live("/ospool/test/a.dat", 50.0, 5.0, &fx.endpoints).unwrap();
+    assert_eq!(t2.cache_used, "cache-b");
+    // Each cache fetched once from the origin.
+    assert_eq!(fx.origin.bytes_served(), 2 * 5_000_000 + 0);
+}
+
+#[test]
+fn live_cache_hit_skips_origin() {
+    let fx = federation(&[("/ospool/test/b.dat", 3_000_000, 1)]);
+    let _ = stashcp_live("/ospool/test/b.dat", 41.0, -100.0, &fx.endpoints).unwrap();
+    let origin_after_first = fx.origin.bytes_served();
+    let t = stashcp_live("/ospool/test/b.dat", 41.0, -100.0, &fx.endpoints).unwrap();
+    assert!(t.verified);
+    assert_eq!(
+        fx.origin.bytes_served(),
+        origin_after_first,
+        "second read is a cache hit"
+    );
+    let stats = fx.caches[0].stats();
+    assert!(stats.bytes_served_hit >= 3_000_000);
+}
+
+#[test]
+fn live_monitoring_joins_udp_packets() {
+    let fx = federation(&[("/ospool/test/c.dat", 1_000_000, 1)]);
+    for _ in 0..3 {
+        stashcp_live("/ospool/test/c.dat", 41.0, -100.0, &fx.endpoints).unwrap();
+    }
+    // UDP is async: wait for the reports to land.
+    for _ in 0..50 {
+        if fx.monitor.reports() >= 3 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    assert_eq!(fx.monitor.reports(), 3, "collector joins every transfer");
+    assert_eq!(fx.monitor.experiment_bytes("test"), Some(3_000_000));
+    let stats = fx.monitor.collector_stats();
+    assert_eq!(stats.decode_errors, 0);
+    assert_eq!(stats.orphan_closes, 0);
+}
+
+#[test]
+fn live_missing_file_fails_cleanly() {
+    let fx = federation(&[("/ospool/test/d.dat", 1_000, 1)]);
+    let err = stashcp_live("/ospool/test/nope.dat", 41.0, -100.0, &fx.endpoints);
+    assert!(err.is_err(), "missing file must error, not hang");
+}
+
+#[test]
+fn live_fallback_to_second_cache() {
+    let fx = federation(&[("/ospool/test/e.dat", 100_000, 1)]);
+    // Point the nearest endpoint at a dead address: stashcp must fall
+    // back to the other cache (the §3.1 fallback behaviour).
+    let mut endpoints = fx.endpoints.clone();
+    endpoints[0].addr = "127.0.0.1:1".into(); // connection refused
+    let t = stashcp_live("/ospool/test/e.dat", 41.0, -100.0, &endpoints).unwrap();
+    assert_eq!(t.cache_used, "cache-b", "fallback cache served");
+    assert!(t.verified);
+}

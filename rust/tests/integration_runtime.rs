@@ -1,0 +1,136 @@
+//! Integration: the PJRT-compiled artifacts driving the real services,
+//! checked against the pure-rust reference implementations.
+//!
+//! This is the three-layer contract: L1 Pallas kernels (validated vs
+//! ref.py by pytest) → L2 jax model → HLO text → PJRT executors →
+//! L3 services. Here we assert the rust ends agree bit-for-bit (hist)
+//! or to float tolerance (geo), so simulations are backend-invariant.
+
+use stashcache::config::defaults::paper_federation;
+use stashcache::federation::backend::GeoBackend;
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::monitoring::aggregator::{Aggregator, HistBackend, RustHistBackend, HIST_BINS};
+use stashcache::monitoring::TransferReport;
+use stashcache::runtime::{HistAgg, Runtime, TransferEst, TransferParams};
+use stashcache::sim::estimate;
+use stashcache::sim::workload::FileRef;
+use stashcache::util::{ByteSize, Pcg64, SimTime};
+
+#[test]
+fn federation_runs_identically_on_both_geo_backends() {
+    let cfg = paper_federation();
+    let mut rust_fed = FedSim::build(cfg.clone());
+    let mut pjrt_fed = FedSim::build_with_backend(cfg, GeoBackend::pjrt().expect("artifacts"));
+    for i in 0..8 {
+        let f = FileRef {
+            path: format!("/ospool/gwosc/data/b{i:03}.dat"),
+            size: ByteSize::mb(64 + i * 16),
+            version: 1,
+        };
+        for site in ["syracuse", "colorado", "bellarmine"] {
+            let s1 = rust_fed.topo.site_index(site).unwrap();
+            let r1 = rust_fed.download(s1, &f, DownloadMethod::Stash);
+            let r2 = pjrt_fed.download(s1, &f, DownloadMethod::Stash);
+            assert_eq!(
+                r1.duration, r2.duration,
+                "{site}/{i}: geo backend must not change outcomes"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_histogram_backend_in_aggregator() {
+    let rt = Runtime::new().expect("PJRT client");
+    let pjrt = HistAgg::load(&rt).expect("usage_hist artifact");
+    let mut agg_pjrt = Aggregator::new(pjrt);
+    let mut agg_rust = Aggregator::default();
+    let mut rng = Pcg64::new(42, 1);
+    for i in 0..5_000 {
+        let size = 10f64.powf(rng.gen_f64(2.0, 10.5)) as u64;
+        let r = TransferReport {
+            server: "s".into(),
+            client_host: "h".into(),
+            protocol: "xrootd".into(),
+            ipv6: false,
+            path: "/ospool/des/f".into(),
+            file_size: size,
+            bytes_read: size,
+            bytes_written: 0,
+            read_ops: 1,
+            write_ops: 0,
+            opened_at: SimTime(i),
+            closed_at: SimTime(i + 1),
+        };
+        agg_pjrt.ingest(&r);
+        agg_rust.ingest(&r);
+    }
+    let h1 = agg_pjrt.histogram_snapshot();
+    let h2 = agg_rust.histogram_snapshot();
+    assert_eq!(h1.len(), HIST_BINS);
+    assert_eq!(h1, h2, "PJRT and rust histogram backends must agree exactly");
+    // And the Table 2 readout follows.
+    let p1 = agg_pjrt.table2(&[25.0, 50.0, 75.0, 95.0]);
+    let p2 = agg_rust.table2(&[25.0, 50.0, 75.0, 95.0]);
+    assert_eq!(p1, p2);
+}
+
+#[test]
+fn transfer_estimator_matches_rust_mirror() {
+    let rt = Runtime::new().expect("PJRT client");
+    let mut est = TransferEst::load(&rt).expect("transfer_est artifact");
+    let mut rng = Pcg64::new(7, 7);
+    let batch: Vec<TransferParams> = (0..600)
+        .map(|_| TransferParams {
+            bytes: rng.gen_f64(1e3, 1e10),
+            rtt_ms: rng.gen_f64(0.2, 200.0),
+            bottleneck_bps: rng.gen_f64(1e6, 1.25e10),
+            streams: rng.gen_f64(1.0, 32.0),
+        })
+        .collect();
+    let got = est.estimate(&batch).expect("batched estimate");
+    assert_eq!(got.len(), 600);
+    assert_eq!(est.invocations, 3, "600 rows = 3 × 256-row artifact calls");
+    for (g, p) in got.iter().zip(&batch) {
+        let want = estimate::transfer_secs(p.bytes, p.rtt_ms, p.bottleneck_bps, p.streams);
+        let rel = (g - want).abs() / want.max(1e-9);
+        // f32 kernel vs f64 mirror.
+        assert!(rel < 1e-3, "got {g}, want {want} for {p:?}");
+    }
+}
+
+#[test]
+fn rust_hist_matches_pjrt_on_adversarial_bin_edges() {
+    // Values sitting exactly on bin edges are where f32-vs-f64
+    // disagreements would hide.
+    let rt = Runtime::new().expect("PJRT client");
+    let mut pjrt = HistAgg::load(&rt).expect("artifact");
+    // Near-edge values (±1e-4 relative — well-resolved in f32) must
+    // bin identically; *exact* edges can differ by one ulp of log10
+    // between libm implementations, so only conservation is asserted
+    // for those.
+    let mut near = Vec::new();
+    let mut exact = Vec::new();
+    for bin in 0..HIST_BINS {
+        let edge = 10f64.powf(13.0 * bin as f64 / HIST_BINS as f64);
+        near.push(edge * (1.0 + 1e-4));
+        near.push(edge * (1.0 - 1e-4));
+        exact.push(edge);
+    }
+    let h_pjrt = HistAgg::histogram(&mut pjrt, &near).unwrap();
+    let h_rust = RustHistBackend.histogram(&near);
+    assert_eq!(h_pjrt, h_rust, "near-edge values must bin identically");
+    let e_pjrt = HistAgg::histogram(&mut pjrt, &exact).unwrap();
+    let e_rust = RustHistBackend.histogram(&exact);
+    assert_eq!(
+        e_pjrt.iter().sum::<f32>(),
+        e_rust.iter().sum::<f32>(),
+        "exact-edge values conserve counts"
+    );
+    let moved: f32 = e_pjrt
+        .iter()
+        .zip(&e_rust)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(moved <= 4.0, "at most a couple of ulp boundary moves: {moved}");
+}
