@@ -1,0 +1,200 @@
+//! Concurrency scaling: 1 → 1024 simultaneous clients through the
+//! event-driven session engine.
+//!
+//! Two measurements:
+//!
+//! 1. **Scaling sweep** — campaigns of 1, 4, 16, 64, 256, 1024 jobs
+//!    arriving inside a 2 s window across the five §4.1 compute
+//!    sites: aggregate delivered Mbps and p50/p95/p99 download time
+//!    (the scenario-diversity half of the story: contention, cache
+//!    coalescing, origin DTN saturation).
+//! 2. **Engine throughput** — a warmed-cache campaign where downloads
+//!    are pure hits, so wall time is engine dispatch rather than
+//!    allocator physics; asserts ≥ 100k session-events/sec.
+//!
+//! Emits `BENCH_concurrency.json` for the perf trajectory.
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::config::defaults::paper_federation;
+use stashcache::federation::FedSim;
+use stashcache::sim::campaign::{self, CampaignConfig};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+struct Row {
+    clients: usize,
+    aggregate_mbps: f64,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    peak: usize,
+    joins: u64,
+    events: u64,
+    wall: f64,
+}
+
+fn sweep_cfg(jobs: usize) -> CampaignConfig {
+    CampaignConfig {
+        jobs,
+        arrival_window_secs: 2.0,
+        catalog_files: 256,
+        zipf_s: 1.1,
+        background_flows: 2,
+        ..CampaignConfig::default()
+    }
+}
+
+fn main() {
+    let mut shape = harness::Shape::new();
+    let mut rows: Vec<Row> = Vec::new();
+
+    println!("== concurrency scaling sweep ==");
+    println!(
+        "{:>8} {:>14} {:>9} {:>9} {:>9} {:>6} {:>7} {:>9} {:>9}",
+        "clients", "aggregate Mbps", "p50 s", "p95 s", "p99 s", "peak", "joins", "events", "evt/s"
+    );
+    for &n in &[1usize, 4, 16, 64, 256, 1024] {
+        let ccfg = sweep_cfg(n);
+        let start = Instant::now();
+        let r = campaign::run(paper_federation(), &ccfg);
+        let wall = start.elapsed().as_secs_f64();
+        let ps = r.duration_percentiles(&[50.0, 95.0, 99.0]);
+        shape.check(r.records.len() == n, &format!("{n}-client campaign completes every job"));
+        println!(
+            "{:>8} {:>14.0} {:>9.2} {:>9.2} {:>9.2} {:>6} {:>7} {:>9} {:>9.0}",
+            n,
+            r.aggregate_mbps(),
+            ps[0],
+            ps[1],
+            ps[2],
+            r.peak_concurrent,
+            r.coalesced_joins,
+            r.events_processed,
+            r.events_processed as f64 / wall.max(1e-9),
+        );
+        rows.push(Row {
+            clients: n,
+            aggregate_mbps: r.aggregate_mbps(),
+            p50: ps[0],
+            p95: ps[1],
+            p99: ps[2],
+            peak: r.peak_concurrent,
+            joins: r.coalesced_joins,
+            events: r.events_processed,
+            wall,
+        });
+    }
+
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    shape.check(
+        last.peak >= 768,
+        "1024-client campaign overlaps ≥768 sessions",
+    );
+    shape.check(last.joins > 0, "1024 clients on a Zipf catalog coalesce");
+    shape.check(
+        last.aggregate_mbps > 1_000.0,
+        "1024 clients push >1 Gbps aggregate (one client cannot)",
+    );
+    shape.check(
+        last.aggregate_mbps > first.aggregate_mbps * 0.8,
+        "aggregate throughput does not collapse under concurrency",
+    );
+    shape.check(
+        last.p95 > first.p95,
+        "contention stretches the p95 download time",
+    );
+
+    // Determinism under the bench config.
+    let a = campaign::run(paper_federation(), &sweep_cfg(64));
+    let b = campaign::run(paper_federation(), &sweep_cfg(64));
+    shape.check(a.records == b.records, "64-client campaign bit-reproducible");
+
+    // --- engine throughput on a warmed cache -----------------------------
+    // Cold pass warms every cache; the timed pass is pure hits, so the
+    // wall clock measures session-engine dispatch.
+    println!("\n== engine throughput (warmed caches) ==");
+    let warm_sites = vec!["syracuse".into(), "nebraska".into(), "chicago".into()];
+    let warm = CampaignConfig {
+        sites: warm_sites.clone(),
+        jobs: 2_048,
+        arrival_window_secs: 600.0,
+        catalog_files: 32,
+        zipf_s: 1.1,
+        background_flows: 0,
+        ..CampaignConfig::default()
+    };
+    let mut fed = FedSim::build(paper_federation());
+    let _ = campaign::run_on(&mut fed, &warm);
+    let timed = CampaignConfig {
+        seed: 7,
+        ..warm
+    };
+    let start = Instant::now();
+    let hot = campaign::run_on(&mut fed, &timed);
+    let wall = start.elapsed().as_secs_f64();
+    let rate = hot.events_processed as f64 / wall.max(1e-9);
+    let hit_sessions = hot
+        .records
+        .iter()
+        .filter(|r| r.record.cache_hit)
+        .count();
+    println!(
+        "sessions {} | hits {} | events {} | wall {:.3}s | {:.0} session-events/s",
+        hot.records.len(),
+        hit_sessions,
+        hot.events_processed,
+        wall,
+        rate
+    );
+    shape.check(
+        hot.records.len() == 2_048,
+        "warmed campaign completes every job",
+    );
+    shape.check(
+        hit_sessions * 10 >= hot.records.len() * 9,
+        "warmed pass is ≥90% cache hits",
+    );
+    shape.check(rate >= 100_000.0, "engine sustains ≥100k session-events/sec");
+
+    // --- BENCH_concurrency.json ------------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"concurrency_scaling\",\n  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"clients\": {}, \"aggregate_mbps\": {:.1}, \"p50_s\": {:.3}, \
+             \"p95_s\": {:.3}, \"p99_s\": {:.3}, \"peak_concurrent\": {}, \
+             \"coalesced_joins\": {}, \"sim_events\": {}, \"wall_s\": {:.4}, \
+             \"events_per_sec\": {:.0}}}",
+            r.clients,
+            r.aggregate_mbps,
+            r.p50,
+            r.p95,
+            r.p99,
+            r.peak,
+            r.joins,
+            r.events,
+            r.wall,
+            r.events as f64 / r.wall.max(1e-9),
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    let _ = write!(
+        json,
+        "  ],\n  \"engine\": {{\"sessions\": {}, \"events\": {}, \"wall_s\": {:.4}, \
+         \"events_per_sec\": {:.0}}}\n}}\n",
+        hot.records.len(),
+        hot.events_processed,
+        wall,
+        rate
+    );
+    match std::fs::write("BENCH_concurrency.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_concurrency.json"),
+        Err(e) => println!("\nWARNING: could not write BENCH_concurrency.json: {e}"),
+    }
+
+    shape.finish("concurrency_scaling");
+}

@@ -93,8 +93,8 @@ fn main() {
             let now = SimTime(i);
             let plan = cache.plan_read(&path, off, 1_000, size, 1, now);
             if !plan.fetch.is_empty() {
-                cache.begin_fetch(&path, &plan.fetch);
-                cache.commit_chunks(&path, &plan.fetch, now);
+                cache.begin_fetch(&path, 1, &plan.fetch);
+                cache.commit_chunks(&path, 1, &plan.fetch, now);
             }
         });
         shape.check(rate > 100_000.0, "cache planner >100k reqs/s");
@@ -159,19 +159,26 @@ fn main() {
             let _ = rust_backend.score(&clients, &caches, &loads);
         });
 
-        let rt = Runtime::new().expect("artifacts built (make artifacts)");
-        let mut pjrt = GeoScorer::load(&rt).expect("geo_score artifact");
-        let pjrt_rate = harness::throughput("geo score PJRT (64-client batch)", 2_000, |_| {
-            let _ = GeoScorer::score(&mut pjrt, &clients, &caches.iter().map(|c| (c.lat, c.lon)).collect::<Vec<_>>(), &loads);
-        });
-        println!(
-            "  PJRT/rust batch-rate ratio: {:.2} (compiled artifact overhead)",
-            pjrt_rate / rust_rate
-        );
-        shape.check(
-            pjrt_rate > 200.0,
-            "PJRT geo scorer sustains >200 64-client batches/s",
-        );
+        match Runtime::try_available() {
+            Some(rt) => {
+                let mut pjrt = GeoScorer::load(&rt).expect("geo_score artifact");
+                let cache_coords: Vec<(f64, f64)> =
+                    caches.iter().map(|c| (c.lat, c.lon)).collect();
+                let pjrt_rate =
+                    harness::throughput("geo score PJRT (64-client batch)", 2_000, |_| {
+                        let _ = GeoScorer::score(&mut pjrt, &clients, &cache_coords, &loads);
+                    });
+                println!(
+                    "  PJRT/rust batch-rate ratio: {:.2} (compiled artifact overhead)",
+                    pjrt_rate / rust_rate
+                );
+                shape.check(
+                    pjrt_rate > 200.0,
+                    "PJRT geo scorer sustains >200 64-client batches/s",
+                );
+            }
+            None => println!("  [skipped] PJRT geo scorer (runtime unavailable)"),
+        }
     }
 
     // --- end-to-end downloads -------------------------------------------------

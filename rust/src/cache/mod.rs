@@ -107,6 +107,12 @@ impl CacheServer {
         self.files.len()
     }
 
+    /// Current content version of a tracked file, if any (live callers
+    /// use this to validate their byte store against version churn).
+    pub fn version_of(&self, path: &str) -> Option<u64> {
+        self.files.get(path).map(|f| f.version)
+    }
+
     /// Is the whole file resident (and current)?
     pub fn contains_whole(&self, path: &str, version: u64) -> bool {
         self.files.get(path).is_some_and(|f| {
@@ -195,11 +201,17 @@ impl CacheServer {
         plan
     }
 
-    /// Mark chunks as being fetched and pin the file. The caller must
-    /// later call [`Self::commit_chunks`] (success) or
-    /// [`Self::abort_fetch`] (failure) exactly once.
-    pub fn begin_fetch(&mut self, path: &str, chunk_ids: &[u64]) {
+    /// Mark chunks as being fetched and pin the file. `version` must
+    /// match the entry the preceding [`Self::plan_read`] validated.
+    /// The caller must later call [`Self::commit_chunks`] (success) or
+    /// [`Self::abort_fetch`] (failure) exactly once, with the same
+    /// version.
+    pub fn begin_fetch(&mut self, path: &str, version: u64, chunk_ids: &[u64]) {
         let f = self.files.get_mut(path).expect("plan_read first");
+        assert_eq!(
+            f.version, version,
+            "begin_fetch version mismatch for {path}"
+        );
         for &c in chunk_ids {
             debug_assert!(!f.resident.is_set(c), "fetching resident chunk");
             f.in_flight.set(c);
@@ -209,10 +221,21 @@ impl CacheServer {
 
     /// Chunks arrived from the origin: make them resident, account
     /// bytes, unpin, and run watermark eviction if needed.
-    pub fn commit_chunks(&mut self, path: &str, chunk_ids: &[u64], now: SimTime) {
+    ///
+    /// A commit whose entry was invalidated or superseded by a newer
+    /// version while the fetch was in flight (concurrent version
+    /// churn) is discarded: stale bytes never become resident under
+    /// the new version, and the new version's pins are untouched.
+    pub fn commit_chunks(&mut self, path: &str, version: u64, chunk_ids: &[u64], now: SimTime) {
+        // Discard stale commits before any side effects (a no-op
+        // commit must not perturb the LRU sequence counter).
+        match self.files.get(path) {
+            Some(f) if f.version == version => {}
+            _ => return,
+        }
         let chunk = self.chunk_size();
         let seq = self.bump_seq();
-        let f = self.files.get_mut(path).expect("unknown file in commit");
+        let f = self.files.get_mut(path).expect("checked above");
         let mut added = 0u64;
         for &c in chunk_ids {
             f.in_flight.clear(c);
@@ -230,9 +253,13 @@ impl CacheServer {
         self.maybe_evict(now);
     }
 
-    /// Fetch failed: clear in-flight marks and unpin.
-    pub fn abort_fetch(&mut self, path: &str, chunk_ids: &[u64]) {
+    /// Fetch failed: clear in-flight marks and unpin (a no-op if the
+    /// entry was invalidated or superseded meanwhile).
+    pub fn abort_fetch(&mut self, path: &str, version: u64, chunk_ids: &[u64]) {
         if let Some(f) = self.files.get_mut(path) {
+            if f.version != version {
+                return;
+            }
             for &c in chunk_ids {
                 f.in_flight.clear(c);
             }
@@ -334,8 +361,8 @@ mod tests {
     fn commit_makes_chunks_resident() {
         let mut c = CacheServer::new("x", cfg(10_000, 100));
         let plan = c.plan_read("/f", 0, 250, 250, 1, t(0.0));
-        c.begin_fetch("/f", &plan.fetch);
-        c.commit_chunks("/f", &plan.fetch, t(1.0));
+        c.begin_fetch("/f", 1, &plan.fetch);
+        c.commit_chunks("/f", 1, &plan.fetch, t(1.0));
         // Usage counts whole chunks, capped at file size: 100+100+50.
         assert_eq!(c.usage().as_u64(), 250);
         let plan2 = c.plan_read("/f", 0, 250, 250, 1, t(2.0));
@@ -357,12 +384,12 @@ mod tests {
     fn concurrent_fetch_coalesces() {
         let mut c = CacheServer::new("x", cfg(10_000, 100));
         let p1 = c.plan_read("/f", 0, 200, 200, 1, t(0.0));
-        c.begin_fetch("/f", &p1.fetch);
+        c.begin_fetch("/f", 1, &p1.fetch);
         // Second reader while chunks are in flight.
         let p2 = c.plan_read("/f", 0, 200, 200, 1, t(0.1));
         assert!(p2.fetch.is_empty(), "no duplicate fetch");
         assert_eq!(p2.join, vec![0, 1]);
-        c.commit_chunks("/f", &p1.fetch, t(1.0));
+        c.commit_chunks("/f", 1, &p1.fetch, t(1.0));
         let p3 = c.plan_read("/f", 0, 200, 200, 1, t(2.0));
         assert_eq!(p3.hit_bytes, 200);
     }
@@ -371,8 +398,8 @@ mod tests {
     fn version_change_invalidates() {
         let mut c = CacheServer::new("x", cfg(10_000, 100));
         let p = c.plan_read("/f", 0, 100, 100, 1, t(0.0));
-        c.begin_fetch("/f", &p.fetch);
-        c.commit_chunks("/f", &p.fetch, t(1.0));
+        c.begin_fetch("/f", 1, &p.fetch);
+        c.commit_chunks("/f", 1, &p.fetch, t(1.0));
         assert_eq!(c.usage().as_u64(), 100);
         // Same path, new version.
         let p2 = c.plan_read("/f", 0, 100, 100, 2, t(2.0));
@@ -386,16 +413,16 @@ mod tests {
         let mut c = CacheServer::new("x", cfg(1_000, 100));
         for (i, name) in ["/a", "/b", "/c", "/d"].iter().enumerate() {
             let p = c.plan_read(name, 0, 200, 200, 1, t(i as f64));
-            c.begin_fetch(name, &p.fetch);
-            c.commit_chunks(name, &p.fetch, t(i as f64 + 0.5));
+            c.begin_fetch(name, 1, &p.fetch);
+            c.commit_chunks(name, 1, &p.fetch, t(i as f64 + 0.5));
         }
         assert_eq!(c.usage().as_u64(), 800); // under high mark, nothing evicted
         // Touch /a so /b becomes LRU.
         c.plan_read("/a", 0, 10, 200, 1, t(10.0));
         // Fifth file pushes usage to 1000 > 900 → evict to <= 600.
         let p = c.plan_read("/e", 0, 200, 200, 1, t(11.0));
-        c.begin_fetch("/e", &p.fetch);
-        c.commit_chunks("/e", &p.fetch, t(11.5));
+        c.begin_fetch("/e", 1, &p.fetch);
+        c.commit_chunks("/e", 1, &p.fetch, t(11.5));
         assert!(c.usage().as_u64() <= 600, "usage {}", c.usage());
         // /b and /c (oldest untouched) evicted; /a survived the touch.
         let snap = c.residency_snapshot();
@@ -410,14 +437,14 @@ mod tests {
         let mut c = CacheServer::new("x", cfg(1_000, 100));
         // /a resident and pinned by an in-flight fetch of more chunks.
         let p = c.plan_read("/a", 0, 500, 1_000, 1, t(0.0));
-        c.begin_fetch("/a", &p.fetch);
-        c.commit_chunks("/a", &p.fetch, t(0.5));
+        c.begin_fetch("/a", 1, &p.fetch);
+        c.commit_chunks("/a", 1, &p.fetch, t(0.5));
         let p2 = c.plan_read("/a", 500, 100, 1_000, 1, t(0.6));
-        c.begin_fetch("/a", &p2.fetch); // pin /a
+        c.begin_fetch("/a", 1, &p2.fetch); // pin /a
         // Fill with another file to cross the watermark.
         let p3 = c.plan_read("/b", 0, 500, 500, 1, t(1.0));
-        c.begin_fetch("/b", &p3.fetch);
-        c.commit_chunks("/b", &p3.fetch, t(1.5));
+        c.begin_fetch("/b", 1, &p3.fetch);
+        c.commit_chunks("/b", 1, &p3.fetch, t(1.5));
         // /a was LRU but pinned; /b itself is pinned-free after commit.
         let snap = c.residency_snapshot();
         assert!(snap.iter().any(|(p, _)| p == "/a"), "pinned file survives");
@@ -438,11 +465,34 @@ mod tests {
     }
 
     #[test]
+    fn stale_version_commit_discarded() {
+        // Concurrent version churn: a v2 reader invalidates and starts
+        // its own fetch while a v1 fetch is still in flight; the late
+        // v1 commit must not pollute the v2 entry or steal its pin.
+        let mut c = CacheServer::new("x", cfg(10_000, 100));
+        let p1 = c.plan_read("/f", 0, 200, 200, 1, t(0.0));
+        c.begin_fetch("/f", 1, &p1.fetch);
+        let p2 = c.plan_read("/f", 0, 200, 200, 2, t(0.1));
+        assert_eq!(p2.miss_bytes, 200, "v2 starts cold");
+        c.begin_fetch("/f", 2, &p2.fetch);
+        // v1 lands late: discarded.
+        c.commit_chunks("/f", 1, &p1.fetch, t(0.2));
+        assert_eq!(c.usage().as_u64(), 0, "stale bytes never become resident");
+        let p3 = c.plan_read("/f", 0, 200, 200, 2, t(0.3));
+        assert!(p3.fetch.is_empty(), "v2 fetch still owns the chunks");
+        assert_eq!(p3.join, vec![0, 1]);
+        // v2 commit proceeds normally.
+        c.commit_chunks("/f", 2, &p2.fetch, t(0.4));
+        assert!(c.contains_whole("/f", 2));
+        assert_eq!(c.usage().as_u64(), 200);
+    }
+
+    #[test]
     fn abort_fetch_unpins_and_clears() {
         let mut c = CacheServer::new("x", cfg(1_000, 100));
         let p = c.plan_read("/f", 0, 100, 100, 1, t(0.0));
-        c.begin_fetch("/f", &p.fetch);
-        c.abort_fetch("/f", &p.fetch);
+        c.begin_fetch("/f", 1, &p.fetch);
+        c.abort_fetch("/f", 1, &p.fetch);
         // Chunks can be fetched again (not stuck in flight).
         let p2 = c.plan_read("/f", 0, 100, 100, 1, t(1.0));
         assert_eq!(p2.fetch, vec![0]);
@@ -465,11 +515,11 @@ mod tests {
                 let now = t(i as f64);
                 let p = c.plan_read(&file, off, len, size, 1, now);
                 if !p.fetch.is_empty() {
-                    c.begin_fetch(&file, &p.fetch);
+                    c.begin_fetch(&file, 1, &p.fetch);
                     if g.bool() {
-                        c.commit_chunks(&file, &p.fetch, now);
+                        c.commit_chunks(&file, 1, &p.fetch, now);
                     } else {
-                        c.abort_fetch(&file, &p.fetch);
+                        c.abort_fetch(&file, 1, &p.fetch);
                     }
                 }
             }

@@ -2,8 +2,9 @@
 
 use anyhow::{bail, Context, Result};
 use stashcache::config::{defaults, FederationConfig};
-use stashcache::federation::{backend::GeoBackend, FedSim};
+use stashcache::federation::{backend::GeoBackend, DownloadMethod, FedSim};
 use stashcache::report::{self, paper};
+use stashcache::sim::campaign::{self, CampaignConfig};
 use stashcache::sim::scenario::{self, ScenarioConfig};
 use stashcache::sim::usage::UsageConfig;
 use std::collections::HashMap;
@@ -86,6 +87,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "topology" => cmd_topology(&flags),
         "scenario" => cmd_scenario(&flags),
+        "campaign" => cmd_campaign(&flags),
         "usage" => cmd_usage(&flags),
         "report" => cmd_report(&flags),
         "init-config" => cmd_init_config(&flags),
@@ -105,6 +107,11 @@ fn print_help() {
            topology                         show sites, caches, proxies, origins\n\
            scenario [--sites a,b] [--repeats N] [--runtime rust|pjrt]\n\
                                             run the §4.1 benchmark (Figs 6-8, Table 3)\n\
+           campaign [--jobs N] [--sites a,b] [--window SECS] [--zipf S]\n\
+                    [--catalog N] [--method stash|http] [--seed S]\n\
+                    [--experiment NAME] [--background N]\n\
+                                            run N concurrent Poisson/Zipf jobs through\n\
+                                            the session engine (coalescing, contention)\n\
            usage --days D [--jobs-per-hour J]\n\
                                             run a usage simulation (Tables 1-2, Fig 4)\n\
            report --all --out-dir DIR       regenerate every paper table/figure\n\
@@ -164,6 +171,116 @@ fn cmd_scenario(flags: &Flags) -> Result<()> {
     }
     let (chart, _) = paper::fig8_small_file(&results);
     println!("{chart}");
+    Ok(())
+}
+
+fn cmd_campaign(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let mut ccfg = CampaignConfig::default();
+    if let Some(sites) = flags.get("sites") {
+        ccfg.sites = sites.split(',').map(str::to_string).collect();
+    }
+    ccfg.method = match flags.get("method").unwrap_or("stash") {
+        "stash" => DownloadMethod::Stash,
+        "http" => DownloadMethod::HttpProxy,
+        other => bail!("--method must be stash|http, got {other:?}"),
+    };
+    // Validate sites up front so typos get a clean error, not a panic.
+    let mut seen = std::collections::HashSet::new();
+    for name in &ccfg.sites {
+        let site = cfg
+            .site(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown site {name:?} (see `stashcache topology`)"))?;
+        if ccfg.method == DownloadMethod::HttpProxy && site.proxy.is_none() {
+            bail!("site {name:?} has no HTTP proxy; use --method stash or another site");
+        }
+        if !seen.insert(name.clone()) {
+            bail!("duplicate site {name:?} in --sites");
+        }
+    }
+    ccfg.jobs = flags.get_usize("jobs", ccfg.jobs)?;
+    if ccfg.jobs == 0 {
+        bail!("--jobs must be at least 1");
+    }
+    ccfg.arrival_window_secs = flags.get_f64("window", ccfg.arrival_window_secs)?;
+    if ccfg.arrival_window_secs <= 0.0 {
+        bail!("--window must be positive (seconds)");
+    }
+    ccfg.zipf_s = flags.get_f64("zipf", ccfg.zipf_s)?;
+    ccfg.catalog_files = flags.get_usize("catalog", ccfg.catalog_files as usize)? as u64;
+    ccfg.background_flows = flags.get_usize("background", ccfg.background_flows)?;
+    ccfg.seed = flags.get_usize("seed", ccfg.seed as usize)? as u64;
+    if let Some(exp) = flags.get("experiment") {
+        ccfg.experiment = exp.to_string();
+    }
+    if !cfg
+        .workload
+        .experiments
+        .iter()
+        .any(|e| e.name == ccfg.experiment)
+    {
+        bail!(
+            "unknown experiment {:?} (known: {})",
+            ccfg.experiment,
+            cfg.workload
+                .experiments
+                .iter()
+                .map(|e| e.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+
+    let wall_start = std::time::Instant::now();
+    let results = campaign::run(cfg, &ccfg);
+    let wall = wall_start.elapsed().as_secs_f64();
+
+    let mut per_site = report::Table::new(
+        format!("Campaign: {} jobs, {} sites", ccfg.jobs, ccfg.sites.len()),
+        &["Site", "Jobs", "Mean s", "p95 s", "Hit %"],
+    );
+    for site in &ccfg.sites {
+        let recs: Vec<_> = results.records.iter().filter(|r| &r.site == site).collect();
+        if recs.is_empty() {
+            continue;
+        }
+        let mut secs: Vec<f64> = recs
+            .iter()
+            .map(|r| r.record.duration.as_secs_f64())
+            .collect();
+        let mean = stashcache::util::stats::mean(&secs);
+        let p95 = stashcache::util::stats::percentiles(&mut secs, &[95.0])[0];
+        let hits = recs.iter().filter(|r| r.record.cache_hit).count();
+        per_site.row(vec![
+            site.clone(),
+            recs.len().to_string(),
+            format!("{mean:.2}"),
+            format!("{p95:.2}"),
+            format!("{:.0}", 100.0 * hits as f64 / recs.len() as f64),
+        ]);
+    }
+    println!("{}", per_site.render());
+
+    let ps = results.duration_percentiles(&[50.0, 95.0, 99.0]);
+    println!(
+        "downloads {} | peak concurrent {} | coalesced joins {} | makespan {}",
+        results.records.len(),
+        results.peak_concurrent,
+        results.coalesced_joins,
+        results.makespan,
+    );
+    println!(
+        "aggregate {:.0} Mbps | p50 {:.2}s p95 {:.2}s p99 {:.2}s",
+        results.aggregate_mbps(),
+        ps[0],
+        ps[1],
+        ps[2],
+    );
+    println!(
+        "engine: {} events in {wall:.3}s wall = {:.0} events/s",
+        results.events_processed,
+        results.events_processed as f64 / wall.max(1e-9),
+    );
     Ok(())
 }
 

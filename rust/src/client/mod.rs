@@ -33,7 +33,7 @@ pub enum Method {
 }
 
 /// What a finished download looked like (the unit of the §5 analysis).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TransferRecord {
     pub path: String,
     pub bytes: u64,

@@ -77,12 +77,19 @@ impl Value {
 }
 
 /// Parse error with 1-based line number.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
     Err(ParseError {

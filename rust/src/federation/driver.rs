@@ -1,0 +1,607 @@
+//! The concurrent session engine: advances any number of in-flight
+//! download [`Session`]s by popping timer events from a deterministic
+//! [`EventQueue`] and routing [`crate::netsim::Network`] completions
+//! back to their owning sessions.
+//!
+//! ## Event loop
+//!
+//! The engine interleaves two event sources in virtual-time order:
+//!
+//! 1. its own timer queue (client startup latencies, connection RTTs,
+//!    redirector round trips, job arrivals), and
+//! 2. the flow-level network's projected completions.
+//!
+//! Ties go to the network — completions at or before the next timer
+//! are drained first — which reproduces the blocking engine's
+//! `advance_to` semantics exactly: a campaign of one serial job walks
+//! the same instants, draws the same RNG stream, and produces the same
+//! `TransferRecord`s as the pre-refactor code.
+//!
+//! Background origin load lives here too: a completed background flow
+//! respawns at its completion instant, so origin contention has no
+//! gaps regardless of how many sessions are in flight.
+//!
+//! ## Cross-session coalescing
+//!
+//! When a session's `plan_read` finds every missing chunk already in
+//! flight (another session is fetching the same file from the origin)
+//! it parks in [`Phase::JoinWait`]; the fetching session's
+//! `commit_chunks` wakes all waiters at the commit instant and they
+//! re-plan — typically into a pure cache hit that never touches the
+//! origin. This is the paper's §3 cache behaviour ("capture data
+//! requests from clients") finally firing *across* concurrent clients.
+
+use crate::client::stashcp;
+use crate::client::{curl, Method, TransferRecord};
+use crate::monitoring::packets::Protocol;
+use crate::netsim::{Completion, Endpoint, EventQueue, FlowId, FlowSpec};
+use crate::sim::workload::FileRef;
+use crate::util::{Duration, SimTime};
+use std::collections::HashMap;
+use super::session::{Phase, Session, SessionId, Xfer};
+use super::{DownloadMethod, FedSim};
+
+/// Events the engine schedules for itself.
+#[derive(Debug, Clone, Copy)]
+enum EngineEvent {
+    /// A session's arrival instant (job submission).
+    Start(SessionId),
+    /// A session's pending latency elapsed; advance its phase.
+    Timer(SessionId),
+}
+
+/// Engine counters (perf + concurrency observability).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    /// Timer events plus network completions processed.
+    pub events_processed: u64,
+    pub sessions_completed: u64,
+    /// Maximum number of simultaneously active sessions.
+    pub peak_concurrent: usize,
+    pub background_respawns: u64,
+    /// Sessions that parked in `JoinWait` at least once.
+    pub coalesced_joins: u64,
+}
+
+/// The event-driven download engine. Create one per batch of work; it
+/// borrows the [`FedSim`] only while spawning and running, so drivers
+/// can inspect the federation between runs.
+pub struct SessionEngine {
+    queue: EventQueue<EngineEvent>,
+    sessions: Vec<Session>,
+    /// Flow → owning session (foreground transfers only).
+    flow_owner: HashMap<FlowId, SessionId>,
+    /// (cache site, path) → sessions parked until the in-flight fetch
+    /// commits.
+    waiters: HashMap<(usize, String), Vec<SessionId>>,
+    /// Spawned sessions not yet `Done`.
+    outstanding: usize,
+    /// Started sessions not yet `Done`.
+    in_flight: usize,
+    /// Session ids in completion order.
+    completed: Vec<SessionId>,
+    pub stats: EngineStats,
+}
+
+impl SessionEngine {
+    /// An engine whose clock starts at `now` (the federation's current
+    /// virtual time).
+    pub fn new(now: SimTime) -> Self {
+        let mut queue = EventQueue::new();
+        queue.advance_to(now);
+        SessionEngine {
+            queue,
+            sessions: Vec::new(),
+            flow_owner: HashMap::new(),
+            waiters: HashMap::new(),
+            outstanding: 0,
+            in_flight: 0,
+            completed: Vec::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Current engine-queue clock (time of the last processed timer).
+    /// The federation's `fed.now` can be ahead of this after a run
+    /// whose final event was a flow completion — spawn follow-up
+    /// sessions at `fed.now`, not at this clock.
+    pub fn now(&self) -> SimTime {
+        self.queue.now()
+    }
+
+    pub fn session(&self, id: SessionId) -> &Session {
+        &self.sessions[id.0 as usize]
+    }
+
+    pub fn sessions(&self) -> &[Session] {
+        &self.sessions
+    }
+
+    /// Session ids in the order they finished.
+    pub fn completed(&self) -> &[SessionId] {
+        &self.completed
+    }
+
+    /// The finished record of a session (panics if not done).
+    pub fn record(&self, id: SessionId) -> TransferRecord {
+        self.sessions[id.0 as usize]
+            .record
+            .clone()
+            .expect("session not finished")
+    }
+
+    /// Schedule a download to begin at `at` (a job arrival). The file
+    /// is materialised at its origin immediately, mirroring the
+    /// blocking API.
+    pub fn spawn_at(
+        &mut self,
+        fed: &mut FedSim,
+        at: SimTime,
+        site_idx: usize,
+        file: FileRef,
+        method: DownloadMethod,
+    ) -> SessionId {
+        assert!(
+            at >= self.queue.now(),
+            "spawning a session in the past: {at} < {}",
+            self.queue.now()
+        );
+        // The network may be ahead of the timer queue (a run whose
+        // last event was a flow completion): spawning before `fed.now`
+        // would rewind the network clock mid-run.
+        assert!(
+            at >= fed.now,
+            "spawning a session before the federation clock: {at} < {}",
+            fed.now
+        );
+        let origin = fed.ensure_file(&file);
+        let id = SessionId(self.sessions.len() as u64);
+        self.sessions
+            .push(Session::new(id, site_idx, file, method, origin, at));
+        self.outstanding += 1;
+        self.queue.schedule_at(at, EngineEvent::Start(id));
+        id
+    }
+
+    /// Drive the federation until every spawned session has finished.
+    /// Background flows are respawned along the way and left running;
+    /// `fed.now` ends at the last processed instant.
+    pub fn run(&mut self, fed: &mut FedSim) {
+        let mut guard = 0u64;
+        while self.outstanding > 0 {
+            guard += 1;
+            assert!(
+                guard <= 500_000_000,
+                "session engine stuck: {} outstanding at {}",
+                self.outstanding,
+                self.queue.now()
+            );
+            let next_timer = self.queue.peek_time();
+            let next_net = fed.net.next_completion();
+            match (next_timer, next_net) {
+                // Network completions up to (and at) the next timer go
+                // first — the blocking engine's advance_to order.
+                (Some(te), Some(tn)) if tn <= te => self.step_network(fed, tn),
+                (None, Some(tn)) => self.step_network(fed, tn),
+                (Some(_), _) => self.step_timer(fed),
+                (None, None) => panic!(
+                    "session engine stalled: {} sessions outstanding with no pending events",
+                    self.outstanding
+                ),
+            }
+        }
+    }
+
+    /// Advance the network to `t` and dispatch its completions.
+    fn step_network(&mut self, fed: &mut FedSim, t: SimTime) {
+        fed.now = t;
+        let completions = fed.net.advance(t);
+        self.dispatch_completions(fed, completions, t);
+    }
+
+    /// Pop and dispatch the next timer event.
+    fn step_timer(&mut self, fed: &mut FedSim) {
+        let Some((t, ev)) = self.queue.pop() else {
+            return;
+        };
+        self.stats.events_processed += 1;
+        // Bring the network to the event instant. Completions whose
+        // projected (µs-rounded) instant lies past `t` but whose
+        // remaining bytes already hit zero are retired here rather
+        // than silently dropped.
+        fed.now = t;
+        let stragglers = fed.net.advance(t);
+        self.dispatch_completions(fed, stragglers, t);
+        match ev {
+            EngineEvent::Start(id) => self.on_start(fed, id, t),
+            EngineEvent::Timer(id) => self.on_timer(fed, id, t),
+        }
+    }
+
+    /// Route a batch of network completions: background flows respawn
+    /// at `t`, session flows advance their owners, anything else
+    /// (e.g. externally cancelled flows) is dropped.
+    fn dispatch_completions(&mut self, fed: &mut FedSim, completions: Vec<Completion>, t: SimTime) {
+        for c in completions {
+            self.stats.events_processed += 1;
+            if let Some(origin_idx) = fed.background.remove(&c.flow) {
+                fed.spawn_background(origin_idx);
+                self.stats.background_respawns += 1;
+            } else if let Some(sid) = self.flow_owner.remove(&c.flow) {
+                self.on_flow_done(fed, sid, t);
+            }
+        }
+    }
+
+    /// Job arrival: charge the client tool's startup latency.
+    fn on_start(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        self.in_flight += 1;
+        if self.in_flight > self.stats.peak_concurrent {
+            self.stats.peak_concurrent = self.in_flight;
+        }
+        let method = self.sessions[id.0 as usize].method;
+        match method {
+            DownloadMethod::HttpProxy => {
+                let delay = fed.startup_costs.curl_startup;
+                let s = &mut self.sessions[id.0 as usize];
+                s.url = curl::url_for(&s.file.path);
+                s.phase = Phase::ProxyLookup;
+                self.queue.schedule_at(t + delay, EngineEvent::Timer(id));
+            }
+            DownloadMethod::Stash => {
+                // stashcp walks its fallback chain; the first usable
+                // method here is XRootD (attempt index from the chain).
+                let chain = stashcp::method_chain(fed.host_env);
+                let attempt = chain
+                    .iter()
+                    .position(|m| *m == Method::Xrootd || *m == Method::HttpCache)
+                    .unwrap_or(0);
+                let transport = chain[attempt];
+                let delay = stashcp::startup_latency(&fed.startup_costs, transport, attempt);
+                let s = &mut self.sessions[id.0 as usize];
+                s.transport = transport;
+                s.phase = Phase::GeoResolve;
+                self.queue.schedule_at(t + delay, EngineEvent::Timer(id));
+            }
+        }
+    }
+
+    fn on_timer(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        match self.sessions[id.0 as usize].phase {
+            Phase::GeoResolve => self.geo_resolve(fed, id, t),
+            Phase::CacheCheck => self.cache_check(fed, id, t),
+            Phase::FetchBegin => self.fetch_begin(fed, id, t),
+            Phase::ProxyLookup => self.proxy_lookup(fed, id, t),
+            Phase::ProxyConnect => self.proxy_connect(fed, id, t),
+            phase => unreachable!("timer fired for session {id:?} in phase {phase:?}"),
+        }
+    }
+
+    /// (stash) Startup paid: GeoIP nearest-cache decision, then the
+    /// connection round trip to that cache.
+    fn geo_resolve(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        let site_idx = self.sessions[id.0 as usize].site_idx;
+        let cache_site = fed.nearest_cache_site(site_idx);
+        let route = fed
+            .topo
+            .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
+        let s = &mut self.sessions[id.0 as usize];
+        s.cache_site = Some(cache_site);
+        s.phase = Phase::CacheCheck;
+        self.queue.schedule_at(
+            t + Duration::from_secs_f64(route.rtt_ms / 1e3),
+            EngineEvent::Timer(id),
+        );
+    }
+
+    /// (stash) At the cache: plan the read. Whole hit serves directly;
+    /// a plan with fresh chunks fetches from the origin; a plan whose
+    /// missing chunks are all in flight parks in `JoinWait`.
+    fn cache_check(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        let (site_idx, cache_site, path, size, version, origin) = {
+            let s = &self.sessions[id.0 as usize];
+            (
+                s.site_idx,
+                s.cache_site.expect("geo_resolve ran"),
+                s.file.path.clone(),
+                s.file.size.as_u64(),
+                s.file.version,
+                s.origin,
+            )
+        };
+        let cache = fed.caches.get_mut(&cache_site).expect("cache site");
+        let plan = cache.plan_read(&path, 0, size, size, version, t);
+        let per_conn = cache.cfg.per_conn_gbps * 1e9 / 8.0;
+        let whole_hit = plan.miss_bytes == 0;
+        {
+            let s = &mut self.sessions[id.0 as usize];
+            s.per_conn = per_conn;
+            if s.opened_at.is_none() {
+                s.opened_at = Some(t);
+                s.initial_hit = whole_hit;
+            }
+        }
+
+        if whole_hit {
+            // Pure cache hit: cache → worker.
+            let route = fed
+                .topo
+                .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
+            let flow = fed.net.start_flow(
+                FlowSpec {
+                    path: route.links,
+                    bytes: size.max(1),
+                    rate_cap: Some(per_conn),
+                },
+                t,
+            );
+            self.flow_owner.insert(flow, id);
+            let s = &mut self.sessions[id.0 as usize];
+            s.flow = Some(flow);
+            s.phase = Phase::Transfer(Xfer::StashServe);
+        } else if plan.fetch.is_empty() {
+            // Every missing chunk is already on its way for another
+            // session: join that fetch instead of duplicating it.
+            let s = &mut self.sessions[id.0 as usize];
+            if s.joins == 0 {
+                self.stats.coalesced_joins += 1;
+            }
+            s.joins += 1;
+            s.phase = Phase::JoinWait;
+            self.waiters
+                .entry((cache_site, path))
+                .or_default()
+                .push(id);
+        } else {
+            // Miss: reserve the chunks *now* (before the discovery
+            // round trips) so any session planning inside that window
+            // joins this fetch instead of duplicating origin traffic.
+            // Timing-neutral for serial runs: nothing observes the
+            // in-flight bits between plan and fetch start there.
+            fed.caches
+                .get_mut(&cache_site)
+                .expect("cache site")
+                .begin_fetch(&path, version, &plan.fetch);
+            // The cache consults the redirector, which broadcasts to
+            // origins (one WAN round trip to the redirector + one to
+            // the origins).
+            let located = fed
+                .redirectors
+                .locate(&path, &mut fed.origins, t)
+                .expect("redirector pool up")
+                .expect("file registered at an origin");
+            debug_assert_eq!(located.origin, origin);
+            let origin_route = fed
+                .topo
+                .route(Endpoint::Origin(origin.0), Endpoint::Cache(cache_site));
+            let s = &mut self.sessions[id.0 as usize];
+            s.plan = Some(plan);
+            s.phase = Phase::FetchBegin;
+            self.queue.schedule_at(
+                t + Duration::from_secs_f64(2.0 * origin_route.rtt_ms / 1e3),
+                EngineEvent::Timer(id),
+            );
+        }
+    }
+
+    /// (stash) Discovery round trips paid (chunks were reserved at
+    /// plan time): stream origin → cache → worker.
+    fn fetch_begin(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        let (site_idx, cache_site, size, origin, per_conn) = {
+            let s = &self.sessions[id.0 as usize];
+            (
+                s.site_idx,
+                s.cache_site.expect("geo_resolve ran"),
+                s.file.size.as_u64(),
+                s.origin,
+                s.per_conn,
+            )
+        };
+        let origin_route = fed
+            .topo
+            .route(Endpoint::Origin(origin.0), Endpoint::Cache(cache_site));
+        let cache_route = fed
+            .topo
+            .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
+        let mut links = origin_route.links;
+        links.extend(&cache_route.links);
+        let flow = fed.net.start_flow(
+            FlowSpec {
+                path: links,
+                bytes: size.max(1),
+                rate_cap: Some(per_conn),
+            },
+            t,
+        );
+        self.flow_owner.insert(flow, id);
+        let s = &mut self.sessions[id.0 as usize];
+        s.flow = Some(flow);
+        s.phase = Phase::Transfer(Xfer::StashFetch);
+    }
+
+    /// (proxy) curl startup paid: squid lookup, then connection
+    /// establishment at the path RTT.
+    fn proxy_lookup(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        use crate::proxy::ProxyLookup;
+        let (site_idx, url, size, origin) = {
+            let s = &self.sessions[id.0 as usize];
+            (s.site_idx, s.url.clone(), s.file.size.as_u64(), s.origin)
+        };
+        let proxy = fed
+            .proxies
+            .get_mut(&site_idx)
+            .expect("compute site has proxy");
+        let lookup = proxy.lookup(&url, size, t);
+        let relay_cap = FedSim::proxy_relay_cap_bps(proxy, size);
+        let worker_route = fed
+            .topo
+            .route(Endpoint::Proxy(site_idx), Endpoint::Worker(site_idx));
+
+        let (links, rtt_ms, hit, cacheable) = match lookup {
+            ProxyLookup::Hit => (worker_route.links.clone(), worker_route.rtt_ms, true, false),
+            ProxyLookup::Miss { cacheable, .. } => {
+                // Proxy streams origin → proxy → worker.
+                let up = fed
+                    .topo
+                    .route(Endpoint::Origin(origin.0), Endpoint::Proxy(site_idx));
+                let mut links = up.links;
+                links.extend(&worker_route.links);
+                (links, up.rtt_ms + worker_route.rtt_ms, false, cacheable)
+            }
+        };
+        let s = &mut self.sessions[id.0 as usize];
+        s.proxy_hit = hit;
+        s.cacheable = cacheable;
+        s.relay_links = links;
+        s.relay_cap = relay_cap;
+        s.phase = Phase::ProxyConnect;
+        self.queue.schedule_at(
+            t + Duration::from_secs_f64(rtt_ms / 1e3 * crate::sim::estimate::HANDSHAKE_ROUNDS),
+            EngineEvent::Timer(id),
+        );
+    }
+
+    /// (proxy) Connected: start the relay flow.
+    fn proxy_connect(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        let (links, size, relay_cap) = {
+            let s = &self.sessions[id.0 as usize];
+            (s.relay_links.clone(), s.file.size.as_u64(), s.relay_cap)
+        };
+        let flow = fed.net.start_flow(
+            FlowSpec {
+                path: links,
+                bytes: size.max(1),
+                rate_cap: Some(relay_cap),
+            },
+            t,
+        );
+        self.flow_owner.insert(flow, id);
+        let s = &mut self.sessions[id.0 as usize];
+        s.flow = Some(flow);
+        s.phase = Phase::Transfer(Xfer::ProxyRelay);
+    }
+
+    /// A session's flow finished at `t`: post-transfer bookkeeping,
+    /// monitoring, waiter wake-ups, and the final record.
+    fn on_flow_done(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        let xfer = match self.sessions[id.0 as usize].phase {
+            Phase::Transfer(x) => x,
+            phase => unreachable!("flow completion for session {id:?} in phase {phase:?}"),
+        };
+        match xfer {
+            Xfer::StashServe => {
+                let (cache_site, size) = {
+                    let s = &self.sessions[id.0 as usize];
+                    (s.cache_site.expect("stash session"), s.file.size.as_u64())
+                };
+                fed.caches
+                    .get_mut(&cache_site)
+                    .expect("cache site")
+                    .record_served(size, 0);
+                self.emit_monitoring(fed, id, t);
+                self.finish(id, t, Method::Xrootd);
+            }
+            Xfer::StashFetch => {
+                let (cache_site, path, version, origin, plan) = {
+                    let s = &mut self.sessions[id.0 as usize];
+                    (
+                        s.cache_site.expect("stash session"),
+                        s.file.path.clone(),
+                        s.file.version,
+                        s.origin,
+                        s.plan.take().expect("fetch had a plan"),
+                    )
+                };
+                let cache = fed.caches.get_mut(&cache_site).expect("cache site");
+                cache.commit_chunks(&path, version, &plan.fetch, t);
+                cache.record_served(plan.hit_bytes, plan.miss_bytes);
+                fed.origins[origin.0].bytes_served += plan.miss_bytes;
+                // Chunks just became resident: wake sessions that
+                // joined this fetch so they can re-plan (usually into
+                // a pure hit).
+                self.wake_waiters(cache_site, &path, t);
+                self.emit_monitoring(fed, id, t);
+                self.finish(id, t, Method::Xrootd);
+            }
+            Xfer::ProxyRelay => {
+                let (site_idx, url, size, origin, hit, cacheable) = {
+                    let s = &self.sessions[id.0 as usize];
+                    (
+                        s.site_idx,
+                        s.url.clone(),
+                        s.file.size.as_u64(),
+                        s.origin,
+                        s.proxy_hit,
+                        s.cacheable,
+                    )
+                };
+                if !hit {
+                    fed.origins[origin.0].bytes_served += size;
+                    if cacheable {
+                        fed.proxies
+                            .get_mut(&site_idx)
+                            .expect("proxy")
+                            .commit(&url, size, t);
+                    }
+                }
+                self.finish(id, t, Method::HttpProxy);
+            }
+        }
+    }
+
+    /// Emit the monitoring packet trio for a finished stash transfer.
+    fn emit_monitoring(&mut self, fed: &mut FedSim, id: SessionId, closed_at: SimTime) {
+        let (cache_site, site_idx, path, size, opened_at, protocol) = {
+            let s = &self.sessions[id.0 as usize];
+            (
+                s.cache_site.expect("stash session"),
+                s.site_idx,
+                s.file.path.clone(),
+                s.file.size.as_u64(),
+                s.opened_at.expect("cache_check ran"),
+                if s.transport == Method::HttpCache {
+                    Protocol::Http
+                } else {
+                    Protocol::Xrootd
+                },
+            )
+        };
+        fed.emit_transfer_monitoring(
+            cache_site, site_idx, &path, size, size, opened_at, closed_at, protocol,
+        );
+    }
+
+    /// Wake every session parked on `(cache_site, path)`.
+    fn wake_waiters(&mut self, cache_site: usize, path: &str, t: SimTime) {
+        let Some(ids) = self.waiters.remove(&(cache_site, path.to_string())) else {
+            return;
+        };
+        for wid in ids {
+            let s = &mut self.sessions[wid.0 as usize];
+            debug_assert_eq!(s.phase, Phase::JoinWait);
+            s.phase = Phase::CacheCheck;
+            self.queue.schedule_at(t, EngineEvent::Timer(wid));
+        }
+    }
+
+    fn finish(&mut self, id: SessionId, t: SimTime, method: Method) {
+        let s = &mut self.sessions[id.0 as usize];
+        let cache_hit = match method {
+            Method::HttpProxy => s.proxy_hit,
+            _ => s.initial_hit,
+        };
+        s.record = Some(TransferRecord {
+            path: s.file.path.clone(),
+            bytes: s.file.size.as_u64(),
+            method,
+            cache_hit,
+            duration: t - s.arrival,
+        });
+        s.phase = Phase::Done;
+        s.flow = None;
+        self.outstanding -= 1;
+        self.in_flight -= 1;
+        self.completed.push(id);
+        self.stats.sessions_completed += 1;
+    }
+}

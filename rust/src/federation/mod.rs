@@ -1,24 +1,44 @@
-//! Federation assembly and the download state machine.
+//! Federation assembly and the concurrent download engine.
 //!
 //! [`FedSim`] wires every substrate together exactly as Figure 1:
 //! origins registered in the global namespace, the redirector HA pair,
 //! chunk caches at the Figure 2 sites, squid proxies at compute sites,
 //! the GeoIP nearest-cache service, the monitoring pipeline, and the
-//! flow-level WAN. It exposes the client operations the drivers run:
+//! flow-level WAN.
 //!
-//! * [`FedSim::download`] — one blocking download at a site via a
-//!   chosen [`DownloadMethod`], advancing virtual time: startup
-//!   latencies, GeoIP lookup, redirector discovery, origin fetch
-//!   through the cache (or proxy), monitoring packets on completion.
-//! * background origin load ("many users of the filesystem, network,
-//!   and data transfer nodes during our tests", §4.1) as persistent
-//!   flows on the origin's DTN link.
+//! Downloads are **sessions** ([`session::Session`]): small state
+//! machines (Startup → GeoIP → CacheCheck → OriginFetch/ProxyRelay →
+//! Serve → Monitor) advanced by the event-driven
+//! [`driver::SessionEngine`], which interleaves its timer queue with
+//! the network's flow completions. Any number of sessions may be in
+//! flight at once — hundreds of clients at many sites overlap on
+//! shared links, and the cache's chunk-level miss coalescing fires
+//! *across* concurrent clients (a session whose missing chunks are
+//! already being fetched joins that fetch instead of hitting the
+//! origin again). See `ARCHITECTURE.md` for the full state diagram.
+//!
+//! Two driver styles sit on top:
+//!
+//! * [`FedSim::download`] — the serial convenience API: one session,
+//!   run to completion. A serial campaign walks exactly the instants
+//!   the pre-engine blocking implementation walked, so the §4.1
+//!   artifacts (Table 3, Figures 6–8) are reproduced bit-for-bit.
+//! * [`driver::SessionEngine`] used directly (see
+//!   [`crate::sim::campaign`]) — spawn many sessions at their job
+//!   arrival instants and run them concurrently.
+//!
+//! Background origin load ("many users of the filesystem, network,
+//! and data transfer nodes during our tests", §4.1) runs as persistent
+//! flows on each origin's DTN link, respawned by whichever engine is
+//! advancing time.
 
 pub mod backend;
+pub mod driver;
+pub mod session;
 
 use crate::cache::CacheServer;
-use crate::client::stashcp::{self, HostEnvironment, StartupCosts};
-use crate::client::{curl, Method, TransferRecord};
+use crate::client::stashcp::{HostEnvironment, StartupCosts};
+use crate::client::TransferRecord;
 use crate::config::FederationConfig;
 use crate::geoip::{CacheSite, NearestCache};
 use crate::monitoring::aggregator::Aggregator;
@@ -26,12 +46,12 @@ use crate::monitoring::bus::{Bus, Subscription};
 use crate::monitoring::collector::{Collector, TRANSFER_TOPIC};
 use crate::monitoring::packets::{Envelope, Packet, Protocol};
 use crate::namespace::{Namespace, OriginId};
-use crate::netsim::{Endpoint, FlowId, FlowSpec, Network, Topology};
+use crate::netsim::{FlowId, FlowSpec, Network, Topology};
 use crate::origin::{FileMeta, Origin};
-use crate::proxy::{ProxyLookup, ProxyServer};
+use crate::proxy::ProxyServer;
 use crate::redirector::RedirectorPool;
 use crate::sim::workload::FileRef;
-use crate::util::{Duration, Pcg64, SimTime};
+use crate::util::{Pcg64, SimTime};
 use backend::GeoBackend;
 use std::collections::HashMap;
 
@@ -202,6 +222,21 @@ impl FedSim {
         }
     }
 
+    /// Idempotent variant: top up so each origin carries at least `n`
+    /// background flows. Repeated drivers (e.g. back-to-back campaigns
+    /// on one federation) call this so load does not accumulate.
+    pub fn ensure_background_load(&mut self, n: usize) {
+        let mut have = vec![0usize; self.origins.len()];
+        for &origin_idx in self.background.values() {
+            have[origin_idx] += 1;
+        }
+        for o in 0..self.origins.len() {
+            for _ in have[o]..n {
+                self.spawn_background(o);
+            }
+        }
+    }
+
     fn spawn_background(&mut self, origin_idx: usize) {
         // Other users of the Stash filesystem pulling large datasets.
         // They contend on the origin's DTN link only — their own
@@ -248,39 +283,6 @@ impl FedSim {
         foreground
     }
 
-    /// Run the network until `flow` completes; background flows are
-    /// restarted along the way. Returns the completion time.
-    fn run_until_flow_done(&mut self, flow: FlowId) -> SimTime {
-        let mut guard = 0u64;
-        loop {
-            guard += 1;
-            if guard > 1_000_000 {
-                panic!(
-                    "run_until_flow_done stuck waiting for {flow:?} at {}: {:?}",
-                    self.now,
-                    self.net.flows_snapshot()
-                );
-            }
-            let t = self
-                .net
-                .next_completion()
-                .expect("active flow must complete");
-            let completions = self.net.advance(t);
-            self.now = t;
-            let mut done = false;
-            for c in completions {
-                if c.flow == flow {
-                    done = true;
-                } else if let Some(origin_idx) = self.background.remove(&c.flow) {
-                    self.spawn_background(origin_idx);
-                }
-            }
-            if done {
-                return self.now;
-            }
-        }
-    }
-
     // --- GeoIP -------------------------------------------------------------
 
     /// Pick the nearest cache for a worker at `site_idx`, given live
@@ -298,6 +300,7 @@ impl FedSim {
 
     // --- monitoring --------------------------------------------------------
 
+    #[allow(clippy::too_many_arguments)]
     fn emit_transfer_monitoring(
         &mut self,
         cache_site: usize,
@@ -374,198 +377,23 @@ impl FedSim {
         }
     }
 
-    /// Perform one blocking download of `file` by a worker at
-    /// `site_idx`. Advances `self.now` through every phase.
+    /// Perform one download of `file` by a worker at `site_idx`,
+    /// running a single-session engine to completion (the serial
+    /// convenience API — the §4.1 drivers and tests use this).
+    ///
+    /// Timing-equivalent to the pre-engine blocking implementation:
+    /// the session walks the same instants, draws the same RNG
+    /// stream, and returns the same `TransferRecord`.
     pub fn download(
         &mut self,
         site_idx: usize,
         file: &FileRef,
         method: DownloadMethod,
     ) -> TransferRecord {
-        let origin_id = self.ensure_file(file);
-        match method {
-            DownloadMethod::HttpProxy => self.download_via_proxy(site_idx, file, origin_id),
-            DownloadMethod::Stash => self.download_via_stash(site_idx, file, origin_id),
-        }
-    }
-
-    fn download_via_proxy(
-        &mut self,
-        site_idx: usize,
-        file: &FileRef,
-        origin_id: OriginId,
-    ) -> TransferRecord {
-        let start = self.now;
-        let size = file.size.as_u64();
-        let url = curl::url_for(&file.path);
-        // curl startup; proxy address comes from the environment (§5).
-        self.now += self.startup_costs.curl_startup;
-
-        // Process any completions the latency jump passed over (keeps
-        // background load respawning on schedule).
-        self.advance_to(self.now);
-
-        let proxy = self.proxies.get_mut(&site_idx).expect("compute site has proxy");
-        let lookup = proxy.lookup(&url, size, self.now);
-        let relay_cap = Self::proxy_relay_cap_bps(proxy, size);
-        let worker_route = self.topo.route(Endpoint::Proxy(site_idx), Endpoint::Worker(site_idx));
-
-        let (links, rtt_ms, hit) = match lookup {
-            ProxyLookup::Hit => (worker_route.links.clone(), worker_route.rtt_ms, true),
-            ProxyLookup::Miss { .. } => {
-                // Proxy streams origin → proxy → worker.
-                let up = self
-                    .topo
-                    .route(Endpoint::Origin(origin_id.0), Endpoint::Proxy(site_idx));
-                let mut links = up.links;
-                links.extend(&worker_route.links);
-                (links, up.rtt_ms + worker_route.rtt_ms, false)
-            }
-        };
-        // Connection establishment at the path RTT.
-        self.now += Duration::from_secs_f64(rtt_ms / 1e3 * crate::sim::estimate::HANDSHAKE_ROUNDS);
-        self.advance_to(self.now);
-
-        let flow = self.net.start_flow(
-            FlowSpec {
-                path: links,
-                bytes: size.max(1),
-                rate_cap: Some(relay_cap),
-            },
-            self.now,
-        );
-        let done = self.run_until_flow_done(flow);
-
-        // Post-transfer bookkeeping.
-        if !hit {
-            self.origins[origin_id.0].bytes_served += size;
-            let proxy = self.proxies.get_mut(&site_idx).expect("proxy");
-            if let ProxyLookup::Miss { cacheable: true, .. } = lookup {
-                proxy.commit(&url, size, done);
-            }
-        }
-
-        TransferRecord {
-            path: file.path.clone(),
-            bytes: size,
-            method: Method::HttpProxy,
-            cache_hit: hit,
-            duration: done - start,
-        }
-    }
-
-    fn download_via_stash(
-        &mut self,
-        site_idx: usize,
-        file: &FileRef,
-        origin_id: OriginId,
-    ) -> TransferRecord {
-        let start = self.now;
-        let size = file.size.as_u64();
-        // stashcp walks its fallback chain; the first usable method
-        // here is XRootD (attempt index from the chain).
-        let chain = stashcp::method_chain(self.host_env);
-        let attempt = chain
-            .iter()
-            .position(|m| *m == Method::Xrootd || *m == Method::HttpCache)
-            .unwrap_or(0);
-        let method = chain[attempt];
-        self.now += stashcp::startup_latency(&self.startup_costs, method, attempt);
-
-        // Process any completions the latency jump passed over.
-        self.advance_to(self.now);
-
-        // GeoIP nearest-cache decision (a remote query — §5's startup
-        // cost is charged in startup_latency above).
-        let cache_site = self.nearest_cache_site(site_idx);
-
-        // Ask the cache for the file.
-        let cache_route = self
-            .topo
-            .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
-        self.now += Duration::from_secs_f64(cache_route.rtt_ms / 1e3);
-
-        let cache = self.caches.get_mut(&cache_site).expect("cache site");
-        let plan = cache.plan_read(&file.path, 0, size, size, file.version, self.now);
-        let per_conn = cache.cfg.per_conn_gbps * 1e9 / 8.0;
-        let whole_hit = plan.miss_bytes == 0;
-
-        let opened_at = self.now;
-        let done = if whole_hit {
-            // Pure cache hit: cache → worker.
-            self.advance_to(self.now);
-            let flow = self.net.start_flow(
-                FlowSpec {
-                    path: cache_route.links.clone(),
-                    bytes: size.max(1),
-                    rate_cap: Some(per_conn),
-                },
-                self.now,
-            );
-            let done = self.run_until_flow_done(flow);
-            self.caches.get_mut(&cache_site).unwrap().record_served(size, 0);
-            done
-        } else {
-            // Miss: cache consults the redirector, which broadcasts to
-            // origins (one WAN round trip to the redirector + one to
-            // the origins).
-            let located = self
-                .redirectors
-                .locate(&file.path, &mut self.origins, self.now)
-                .expect("redirector pool up")
-                .expect("file registered at an origin");
-            debug_assert_eq!(located.origin, origin_id);
-            let origin_route = self
-                .topo
-                .route(Endpoint::Origin(origin_id.0), Endpoint::Cache(cache_site));
-            self.now += Duration::from_secs_f64(2.0 * origin_route.rtt_ms / 1e3);
-
-            let cache = self.caches.get_mut(&cache_site).unwrap();
-            cache.begin_fetch(&file.path, &plan.fetch);
-
-            // Stream origin → cache → worker.
-            self.advance_to(self.now);
-            let mut links = origin_route.links.clone();
-            links.extend(&cache_route.links);
-            let flow = self.net.start_flow(
-                FlowSpec {
-                    path: links,
-                    bytes: size.max(1),
-                    rate_cap: Some(per_conn),
-                },
-                self.now,
-            );
-            let done = self.run_until_flow_done(flow);
-
-            let cache = self.caches.get_mut(&cache_site).unwrap();
-            cache.commit_chunks(&file.path, &plan.fetch, done);
-            cache.record_served(plan.hit_bytes, plan.miss_bytes);
-            self.origins[origin_id.0].bytes_served += plan.miss_bytes;
-            done
-        };
-
-        self.emit_transfer_monitoring(
-            cache_site,
-            site_idx,
-            &file.path,
-            size,
-            size,
-            opened_at,
-            done,
-            if method == Method::HttpCache {
-                Protocol::Http
-            } else {
-                Protocol::Xrootd
-            },
-        );
-
-        TransferRecord {
-            path: file.path.clone(),
-            bytes: size,
-            method: Method::Xrootd,
-            cache_hit: whole_hit,
-            duration: done - start,
-        }
+        let mut engine = driver::SessionEngine::new(self.now);
+        let id = engine.spawn_at(self, self.now, site_idx, file.clone(), method);
+        engine.run(self);
+        engine.record(id)
     }
 
     /// WAN link byte counter of a site (Fig 5's graph source).

@@ -1,0 +1,153 @@
+//! Download sessions: one small state machine per in-flight transfer.
+//!
+//! A [`Session`] is the event-driven replacement for the old blocking
+//! `FedSim::download` call stack. Every latency the blocking code
+//! modelled with `self.now += …` is now a timer event, and every
+//! `run_until_flow_done` is a completion routed back by the
+//! [`super::driver::SessionEngine`]. The phases correspond 1:1 to the
+//! paper's download anatomy:
+//!
+//! ```text
+//!  stashcp:  Pending ─▶ GeoResolve ─▶ CacheCheck ─┬▶ Transfer(Serve) ──────▶ Done
+//!            (arrival)  (startup +    (plan_read)  ├▶ FetchBegin ─▶ Transfer(Fetch) ─▶ Done
+//!                        GeoIP, RTT)               └▶ JoinWait ──▶ CacheCheck …
+//!  curl:     Pending ─▶ ProxyLookup ─▶ ProxyConnect ─▶ Transfer(Relay) ─▶ Done
+//! ```
+//!
+//! `JoinWait` is the state the blocking engine could never reach: a
+//! session whose missing chunks are *already being fetched* by another
+//! concurrent session parks until that fetch commits, then re-plans —
+//! the cache's chunk-level miss coalescing working across clients.
+
+use crate::cache::ReadPlan;
+use crate::client::{Method, TransferRecord};
+use crate::namespace::OriginId;
+use crate::netsim::{FlowId, LinkId};
+use crate::sim::workload::FileRef;
+use crate::util::SimTime;
+
+use super::DownloadMethod;
+
+/// Handle to a session within one [`super::driver::SessionEngine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+/// Which transfer a session's in-flight flow is performing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Xfer {
+    /// Whole-file cache hit: cache → worker.
+    StashServe,
+    /// Miss: origin → cache → worker stream.
+    StashFetch,
+    /// Proxy relay: (origin →) proxy → worker.
+    ProxyRelay,
+}
+
+/// Session state: what the *next* event for this session means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Scheduled but not started (waiting for its arrival event).
+    Pending,
+    /// (stash) Waiting for stashcp's startup latency (tool spin-up +
+    /// GeoIP query); on fire, resolve the nearest cache and pay the
+    /// cache-connection RTT.
+    GeoResolve,
+    /// (stash) At the cache — plan the read against resident chunks.
+    CacheCheck,
+    /// (stash) Chunks reserved and redirector answered — start the
+    /// origin stream once the discovery round trips have elapsed.
+    FetchBegin,
+    /// (stash) Missing chunks are in flight for another session; wait
+    /// for its commit, then re-plan.
+    JoinWait,
+    /// (proxy) Waiting for curl startup, then squid lookup.
+    ProxyLookup,
+    /// (proxy) Waiting for connection establishment to the proxy.
+    ProxyConnect,
+    /// Bytes moving: waiting for the flow completion.
+    Transfer(Xfer),
+    /// Finished; `record` is populated.
+    Done,
+}
+
+/// One download in flight (or finished).
+#[derive(Debug)]
+pub struct Session {
+    pub id: SessionId,
+    /// Compute site of the requesting worker.
+    pub site_idx: usize,
+    pub file: FileRef,
+    pub method: DownloadMethod,
+    /// Job-arrival instant (the blocking API's call time).
+    pub arrival: SimTime,
+    pub phase: Phase,
+    /// Authoritative origin (resolved at spawn).
+    pub(crate) origin: OriginId,
+
+    // --- stash path state -------------------------------------------------
+    /// Nearest cache chosen by GeoIP (stash only).
+    pub cache_site: Option<usize>,
+    /// Transport stashcp's fallback chain settled on.
+    pub(crate) transport: Method,
+    /// First `plan_read` instant (monitoring `FileOpen` timestamp).
+    pub(crate) opened_at: Option<SimTime>,
+    /// Was the *first* plan a whole-file hit? (`TransferRecord::cache_hit`.)
+    pub(crate) initial_hit: bool,
+    /// Plan of the fetch this session owns (miss path).
+    pub(crate) plan: Option<ReadPlan>,
+    /// Cache per-connection ceiling, bytes/sec.
+    pub(crate) per_conn: f64,
+    /// Times this session parked in `JoinWait` (coalescing observability).
+    pub joins: u32,
+
+    // --- proxy path state -------------------------------------------------
+    pub(crate) url: String,
+    pub(crate) proxy_hit: bool,
+    pub(crate) cacheable: bool,
+    pub(crate) relay_links: Vec<LinkId>,
+    pub(crate) relay_cap: f64,
+
+    // --- result -----------------------------------------------------------
+    pub(crate) flow: Option<FlowId>,
+    pub record: Option<TransferRecord>,
+}
+
+impl Session {
+    pub(crate) fn new(
+        id: SessionId,
+        site_idx: usize,
+        file: FileRef,
+        method: DownloadMethod,
+        origin: OriginId,
+        arrival: SimTime,
+    ) -> Self {
+        Session {
+            id,
+            site_idx,
+            file,
+            method,
+            arrival,
+            phase: Phase::Pending,
+            origin,
+            cache_site: None,
+            transport: Method::Xrootd,
+            opened_at: None,
+            initial_hit: false,
+            plan: None,
+            per_conn: 0.0,
+            joins: 0,
+            url: String::new(),
+            proxy_hit: false,
+            cacheable: false,
+            relay_links: Vec::new(),
+            relay_cap: 0.0,
+            flow: None,
+            record: None,
+        }
+    }
+
+    /// Is the session past its arrival and not yet finished?
+    pub fn is_active(&self) -> bool {
+        !matches!(self.phase, Phase::Pending | Phase::Done)
+    }
+}

@@ -390,7 +390,7 @@ fn serve_read(
             .server
             .plan_read(path, offset, len, size, mtime, SimTime(clock_us()));
         if !plan.fetch.is_empty() {
-            guard.server.begin_fetch(path, &plan.fetch);
+            guard.server.begin_fetch(path, mtime, &plan.fetch);
         }
         (plan, chunk_size)
     };
@@ -411,30 +411,35 @@ fn serve_read(
                     // CVMFS-checksum consistency guarantee).
                     if !content::verify(path, mtime, c_off, &bytes) {
                         let mut guard = st.lock().unwrap();
-                        guard.server.abort_fetch(path, &plan.fetch);
+                        guard.server.abort_fetch(path, mtime, &plan.fetch);
                         return Err("checksum mismatch from origin".into());
                     }
                     fetched.push((c, bytes));
                 }
                 Ok(other) => {
                     let mut guard = st.lock().unwrap();
-                    guard.server.abort_fetch(path, &plan.fetch);
+                    guard.server.abort_fetch(path, mtime, &plan.fetch);
                     return Err(format!("origin read failed: {other:?}"));
                 }
                 Err(e) => {
                     let mut guard = st.lock().unwrap();
-                    guard.server.abort_fetch(path, &plan.fetch);
+                    guard.server.abort_fetch(path, mtime, &plan.fetch);
                     return Err(e.to_string());
                 }
             }
         }
         let mut guard = st.lock().unwrap();
-        for (c, bytes) in fetched {
-            guard.data.insert((path.to_string(), c), bytes);
+        // Version churn while we were fetching: a newer-version reader
+        // invalidated the entry. Our commit would be discarded, so the
+        // byte store must not be overwritten with stale content either.
+        if guard.server.version_of(path) == Some(mtime) {
+            for (c, bytes) in fetched {
+                guard.data.insert((path.to_string(), c), bytes);
+            }
         }
         guard
             .server
-            .commit_chunks(path, &plan.fetch, SimTime(clock_us()));
+            .commit_chunks(path, mtime, &plan.fetch, SimTime(clock_us()));
     } else if !plan.join.is_empty() {
         // Another connection is fetching; spin briefly (bounded).
         for _ in 0..1_000 {

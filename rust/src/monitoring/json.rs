@@ -148,9 +148,16 @@ fn write_string(s: &str, out: &mut String) {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("json parse error at byte {0}: {1}")]
+#[derive(Debug, PartialEq)]
 pub struct JsonError(pub usize, pub String);
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.0, self.1)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 /// Parse JSON text.
 pub fn parse(text: &str) -> Result<Json, JsonError> {

@@ -83,21 +83,30 @@ pub struct Envelope {
 
 /// Codec errors. Malformed datagrams must never panic the collector —
 /// it ingests from the network.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PacketError {
-    #[error("datagram too short")]
     Truncated,
-    #[error("bad magic")]
     BadMagic,
-    #[error("unsupported version {0}")]
     BadVersion(u8),
-    #[error("unknown packet kind {0}")]
     BadKind(u8),
-    #[error("invalid utf-8 in string field")]
     BadUtf8,
-    #[error("bad protocol value {0}")]
     BadProtocol(u8),
 }
+
+impl std::fmt::Display for PacketError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PacketError::Truncated => write!(f, "datagram too short"),
+            PacketError::BadMagic => write!(f, "bad magic"),
+            PacketError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            PacketError::BadKind(k) => write!(f, "unknown packet kind {k}"),
+            PacketError::BadUtf8 => write!(f, "invalid utf-8 in string field"),
+            PacketError::BadProtocol(p) => write!(f, "bad protocol value {p}"),
+        }
+    }
+}
+
+impl std::error::Error for PacketError {}
 
 impl From<std::io::Error> for PacketError {
     fn from(_: std::io::Error) -> Self {

@@ -28,13 +28,22 @@ pub struct Namespace {
 }
 
 /// Errors from registration.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum NamespaceError {
-    #[error("prefix must start with '/': {0:?}")]
     NotAbsolute(String),
-    #[error("prefix {0:?} already registered")]
     Conflict(String),
 }
+
+impl std::fmt::Display for NamespaceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NamespaceError::NotAbsolute(p) => write!(f, "prefix must start with '/': {p:?}"),
+            NamespaceError::Conflict(p) => write!(f, "prefix {p:?} already registered"),
+        }
+    }
+}
+
+impl std::error::Error for NamespaceError {}
 
 /// Split a path into normalized segments (empty segments collapsed).
 fn segments(path: &str) -> impl Iterator<Item = &str> {

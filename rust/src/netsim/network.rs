@@ -313,7 +313,11 @@ impl Network {
             debug_assert!(bottleneck_share.is_finite());
 
             // Flows whose ceiling binds below the bottleneck share are
-            // fixed at their ceiling first.
+            // fixed at their ceiling first. `capped` inherits the sort
+            // order of `unfixed`, so one binary-searched retain sweep
+            // removes the whole round — the per-flow `retain` here was
+            // the O(n²) cost that capped the session engine at ~1k
+            // concurrent transfers.
             let capped: Vec<FlowId> = unfixed
                 .iter()
                 .copied()
@@ -324,37 +328,38 @@ impl Network {
                 })
                 .collect();
             if !capped.is_empty() {
-                for id in capped {
+                for &id in &capped {
                     let cap = self.flows[&id].rate_cap.expect("cap exists");
                     self.fix_flow(id, cap, &mut residual, &mut active_on);
-                    unfixed.retain(|&x| x != id);
                 }
+                unfixed.retain(|x| capped.binary_search(x).is_err());
                 continue; // shares changed; recompute bottleneck
             }
 
             // Otherwise saturate the bottleneck link(s): fix every
             // unfixed flow crossing a link that offers the minimum
-            // share. (Membership via sorted binary search + a seen
-            // mark — the O(n²) `contains` scans showed up as the top
-            // allocator cost in the perf pass, EXPERIMENTS.md §Perf.)
+            // share. Duplicates (a flow crossing two saturated links)
+            // are removed by one sort+dedup instead of a `contains`
+            // scan per push.
             let mut to_fix: Vec<FlowId> = Vec::new();
             for (i, _) in self.links.iter().enumerate() {
                 if active_on[i] > 0
                     && residual[i] / active_on[i] as f64 <= bottleneck_share * (1.0 + 1e-12)
                 {
                     for id in &self.links[i].flows {
-                        if unfixed.binary_search(id).is_ok() && !to_fix.contains(id) {
+                        if unfixed.binary_search(id).is_ok() {
                             to_fix.push(*id);
                         }
                     }
                 }
             }
-            debug_assert!(!to_fix.is_empty());
             to_fix.sort_unstable();
-            for id in to_fix {
+            to_fix.dedup();
+            debug_assert!(!to_fix.is_empty());
+            for &id in &to_fix {
                 self.fix_flow(id, bottleneck_share, &mut residual, &mut active_on);
-                unfixed.retain(|&x| x != id);
             }
+            unfixed.retain(|x| to_fix.binary_search(x).is_err());
         }
     }
 

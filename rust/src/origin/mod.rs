@@ -43,13 +43,10 @@ pub struct Origin {
 }
 
 /// Errors from origin operations.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum OriginError {
-    #[error("path {0:?} is outside origin prefix")]
     OutsidePrefix(String),
-    #[error("no such file: {0:?}")]
     NotFound(String),
-    #[error("read past EOF: {path:?} offset {offset} len {len} size {size}")]
     BadRange {
         path: String,
         offset: u64,
@@ -57,6 +54,26 @@ pub enum OriginError {
         size: u64,
     },
 }
+
+impl std::fmt::Display for OriginError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OriginError::OutsidePrefix(p) => write!(f, "path {p:?} is outside origin prefix"),
+            OriginError::NotFound(p) => write!(f, "no such file: {p:?}"),
+            OriginError::BadRange {
+                path,
+                offset,
+                len,
+                size,
+            } => write!(
+                f,
+                "read past EOF: {path:?} offset {offset} len {len} size {size}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for OriginError {}
 
 impl Origin {
     pub fn new(id: OriginId, name: impl Into<String>, prefix: impl Into<String>) -> Self {

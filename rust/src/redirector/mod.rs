@@ -102,9 +102,16 @@ pub struct RedirectorPool {
 }
 
 /// Error when every instance is down.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("all {0} redirector instances are down")]
+#[derive(Debug, PartialEq)]
 pub struct AllRedirectorsDown(pub usize);
+
+impl std::fmt::Display for AllRedirectorsDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "all {} redirector instances are down", self.0)
+    }
+}
+
+impl std::error::Error for AllRedirectorsDown {}
 
 impl RedirectorPool {
     pub fn new(count: usize) -> Self {

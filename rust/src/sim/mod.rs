@@ -9,9 +9,13 @@
 //! * [`scenario`] — the paper's HTCondor-DAGMan test (Figs 6-8,
 //!   Table 3): per site, per file size, four downloads (HTTP proxy
 //!   cold/hot, stashcp cold/hot).
+//! * [`campaign`] — the concurrent counterpart: Poisson job arrivals
+//!   at many sites at once, hundreds of overlapping sessions through
+//!   the event-driven engine (cross-client coalescing, contention).
 //! * [`usage`] — months of federation traffic through the monitoring
 //!   pipeline (Table 1, Table 2, Fig 4, Fig 5).
 
+pub mod campaign;
 pub mod estimate;
 pub mod scenario;
 pub mod usage;

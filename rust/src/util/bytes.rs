@@ -103,9 +103,16 @@ impl fmt::Display for ByteSize {
 }
 
 /// Error parsing a byte-size string.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("invalid byte size {0:?}")]
+#[derive(Debug, PartialEq)]
 pub struct ParseByteSizeError(pub String);
+
+impl fmt::Display for ParseByteSizeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid byte size {:?}", self.0)
+    }
+}
+
+impl std::error::Error for ParseByteSizeError {}
 
 impl FromStr for ByteSize {
     type Err = ParseByteSizeError;

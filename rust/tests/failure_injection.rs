@@ -119,8 +119,8 @@ fn cache_abort_on_failed_fetch_releases_state() {
         },
     );
     let plan = c.plan_read("/f", 0, 1_000_000, 1_000_000, 1, SimTime::ZERO);
-    c.begin_fetch("/f", &plan.fetch);
-    c.abort_fetch("/f", &plan.fetch); // origin died
+    c.begin_fetch("/f", 1, &plan.fetch);
+    c.abort_fetch("/f", 1, &plan.fetch); // origin died
     let retry = c.plan_read("/f", 0, 1_000_000, 1_000_000, 1, SimTime(1));
     assert_eq!(retry.fetch, plan.fetch, "retry can re-fetch everything");
     assert!(retry.join.is_empty(), "no phantom in-flight chunks");

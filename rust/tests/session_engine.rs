@@ -1,0 +1,206 @@
+//! Integration: the event-driven session engine.
+//!
+//! The three contracts the refactor must honour:
+//!
+//! 1. **Cross-client coalescing** — two concurrent sessions missing
+//!    the same file trigger exactly one origin fetch; both are served.
+//! 2. **Determinism** — a campaign with the same `Pcg64` seed yields a
+//!    bit-identical `TransferRecord` stream; the serial §4.1 scenario
+//!    is reproducible run-to-run through the engine.
+//! 3. **Serial equivalence** — a batch engine whose sessions do not
+//!    overlap produces exactly what sequential `FedSim::download`
+//!    calls produce.
+
+use stashcache::config::defaults::paper_federation;
+use stashcache::federation::driver::SessionEngine;
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::sim::campaign::{self, CampaignConfig};
+use stashcache::sim::scenario::{self, ScenarioConfig};
+use stashcache::sim::workload::FileRef;
+use stashcache::util::{ByteSize, Duration, SimTime};
+
+fn file(path: &str, bytes: u64) -> FileRef {
+    FileRef {
+        path: path.into(),
+        size: ByteSize(bytes),
+        version: 1,
+    }
+}
+
+#[test]
+fn cross_client_coalescing_single_origin_fetch() {
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("syracuse").unwrap();
+    let f = file("/ospool/des/data/coalesce.dat", 500_000_000);
+
+    let mut engine = SessionEngine::new(fed.now);
+    let t0 = fed.now;
+    let a = engine.spawn_at(&mut fed, t0, site, f.clone(), DownloadMethod::Stash);
+    // Second client lands mid-fetch: ~2 s into a ~4 s origin stream.
+    let b = engine.spawn_at(
+        &mut fed,
+        t0 + Duration::from_secs(2),
+        site,
+        f.clone(),
+        DownloadMethod::Stash,
+    );
+    engine.run(&mut fed);
+
+    let ra = engine.record(a);
+    let rb = engine.record(b);
+    assert_eq!(ra.bytes, 500_000_000);
+    assert_eq!(rb.bytes, 500_000_000);
+    assert!(!ra.cache_hit, "first session is the cold fetch");
+    assert!(!rb.cache_hit, "joiner missed at request time");
+    assert!(
+        engine.session(b).joins >= 1,
+        "second session must coalesce onto the first fetch"
+    );
+
+    // Both sessions used the same (local) cache, and the file's bytes
+    // were fetched from the origin exactly once.
+    let cache_site = engine.session(a).cache_site.unwrap();
+    assert_eq!(engine.session(b).cache_site, Some(cache_site));
+    let cache = &fed.caches[&cache_site];
+    assert_eq!(
+        cache.stats.bytes_fetched_origin, 500_000_000,
+        "coalescing must not duplicate origin traffic"
+    );
+    let origin_served: u64 = fed.origins.iter().map(|o| o.bytes_served).sum();
+    assert_eq!(origin_served, 500_000_000, "joiner never touched the origin");
+    // Both clients were fully served.
+    assert_eq!(
+        cache.stats.bytes_served_hit + cache.stats.bytes_served_miss,
+        1_000_000_000
+    );
+    // The joiner waited for the fetcher's commit, so it finishes after
+    // the fetcher despite requesting the same bytes.
+    assert_eq!(engine.completed(), &[a, b], "fetcher finishes first");
+}
+
+#[test]
+fn campaign_256_concurrent_clients_deterministic() {
+    // The acceptance campaign: ≥256 concurrent clients across ≥3
+    // sites, to completion, twice, bit-identically.
+    let ccfg = CampaignConfig {
+        jobs: 320,
+        arrival_window_secs: 2.0,
+        catalog_files: 64,
+        zipf_s: 1.0,
+        background_flows: 2,
+        ..CampaignConfig::default()
+    };
+    assert!(ccfg.sites.len() >= 3);
+    let r1 = campaign::run(paper_federation(), &ccfg);
+    assert_eq!(r1.records.len(), 320, "every job completes");
+    assert!(
+        r1.peak_concurrent >= 256,
+        "campaign must overlap ≥256 sessions, peak {}",
+        r1.peak_concurrent
+    );
+    assert!(
+        r1.coalesced_joins > 0,
+        "a hot catalog under this much concurrency must coalesce"
+    );
+    // Sessions ran at 3+ distinct sites.
+    let mut sites: Vec<&str> = r1.records.iter().map(|r| r.site.as_str()).collect();
+    sites.sort_unstable();
+    sites.dedup();
+    assert!(sites.len() >= 3, "sites covered: {sites:?}");
+
+    let r2 = campaign::run(paper_federation(), &ccfg);
+    assert_eq!(r1.records, r2.records, "same seed ⇒ identical record stream");
+    assert_eq!(r1.peak_concurrent, r2.peak_concurrent);
+    assert_eq!(r1.events_processed, r2.events_processed);
+}
+
+#[test]
+fn non_overlapping_batch_equals_sequential_downloads() {
+    // A batch engine whose second session arrives long after the first
+    // finishes must reproduce the serial blocking API exactly —
+    // including background-flow respawns in the idle gap.
+    let fa = file("/ospool/nova/data/serial-a.dat", 200_000_000);
+    let fb = file("/ospool/nova/data/serial-b.dat", 350_000_000);
+    let gap = SimTime::from_secs_f64(3_600.0);
+
+    // Leg 1: sequential convenience API.
+    let mut fed1 = FedSim::build(paper_federation());
+    fed1.start_background_load(2);
+    let site = fed1.topo.site_index("nebraska").unwrap();
+    let r1a = fed1.download(site, &fa, DownloadMethod::Stash);
+    fed1.advance_to(gap);
+    let r1b = fed1.download(site, &fb, DownloadMethod::Stash);
+
+    // Leg 2: one engine, both sessions spawned up front.
+    let mut fed2 = FedSim::build(paper_federation());
+    fed2.start_background_load(2);
+    let mut engine = SessionEngine::new(fed2.now);
+    let a = engine.spawn_at(&mut fed2, fed2.now, site, fa, DownloadMethod::Stash);
+    let b = engine.spawn_at(&mut fed2, gap, site, fb, DownloadMethod::Stash);
+    engine.run(&mut fed2);
+
+    assert_eq!(r1a, engine.record(a), "first download identical");
+    assert_eq!(r1b, engine.record(b), "second download identical");
+    // Monitoring saw the same two transfers in both legs.
+    assert_eq!(fed1.aggregator.reports, 2);
+    assert_eq!(fed2.aggregator.reports, 2);
+    assert_eq!(
+        fed1.aggregator.total_bytes().as_u64(),
+        fed2.aggregator.total_bytes().as_u64()
+    );
+}
+
+#[test]
+fn serial_scenario_reproducible_through_engine() {
+    // The §4.1 scenario (serial by construction) through the session
+    // engine: run-to-run bit reproducibility of every measurement.
+    let scenario_cfg = ScenarioConfig {
+        sites: vec!["syracuse".into(), "colorado".into()],
+        files: vec![
+            ("p01".into(), ByteSize(5_797)),
+            ("p95".into(), ByteSize(2_335_000_000)),
+        ],
+        ..ScenarioConfig::default()
+    };
+    let r1 = scenario::run(paper_federation(), &scenario_cfg);
+    let r2 = scenario::run(paper_federation(), &scenario_cfg);
+    let recs1: Vec<_> = r1.measurements.iter().map(|m| &m.record).collect();
+    let recs2: Vec<_> = r2.measurements.iter().map(|m| &m.record).collect();
+    assert_eq!(recs1, recs2, "serial scenario must be bit-reproducible");
+    // And the paper's headline shape survives the engine swap.
+    assert!(r1.pct_difference("colorado", "p95").unwrap() > 50.0);
+    assert!(r1.pct_difference("syracuse", "p95").unwrap().abs() < 25.0);
+}
+
+#[test]
+fn concurrent_proxy_sessions_share_the_proxy() {
+    // The engine handles concurrent HTTP-proxy sessions too: same
+    // object requested twice concurrently relays twice (squid caches
+    // only on commit), but a later session hits.
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("nebraska").unwrap();
+    let f = file("/ospool/nova/data/proxy-conc.dat", 100_000_000);
+
+    let mut engine = SessionEngine::new(fed.now);
+    let t0 = fed.now;
+    let a = engine.spawn_at(&mut fed, t0, site, f.clone(), DownloadMethod::HttpProxy);
+    let b = engine.spawn_at(
+        &mut fed,
+        t0 + Duration::from_millis(100),
+        site,
+        f.clone(),
+        DownloadMethod::HttpProxy,
+    );
+    engine.run(&mut fed);
+    assert!(!engine.record(a).cache_hit);
+    assert!(
+        !engine.record(b).cache_hit,
+        "second request arrived before the first committed"
+    );
+
+    // A third, later session hits the now-cached object.
+    let mut engine2 = SessionEngine::new(fed.now);
+    let c = engine2.spawn_at(&mut fed, fed.now, site, f, DownloadMethod::HttpProxy);
+    engine2.run(&mut fed);
+    assert!(engine2.record(c).cache_hit, "object cached after commit");
+}

@@ -1,0 +1,264 @@
+//! Offline subset of the `anyhow` crate API.
+//!
+//! The build environment has no network access, so this vendored shim
+//! provides the parts of `anyhow` the workspace actually uses: the
+//! string-backed [`Error`] with context layering, the [`Context`]
+//! extension trait for `Result` and `Option`, the `anyhow!`, `bail!`
+//! and `ensure!` macros, and the [`Result`] alias. Unlike the real
+//! crate it stringifies source errors instead of boxing them — ample
+//! for error *reporting*, which is all this codebase does with it.
+
+use std::fmt;
+
+/// A context-layered error. `Display` shows the outermost layer;
+/// `{:#}` (alternate) shows the whole chain outermost-first, separated
+/// by `": "`, matching real anyhow's formatting.
+pub struct Error {
+    /// Root message first; each added context is pushed on the end.
+    layers: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            layers: vec![message.to_string()],
+        }
+    }
+
+    fn push_context(&mut self, context: String) {
+        self.layers.push(context);
+    }
+
+    /// The outermost context (or the root message).
+    fn outermost(&self) -> &str {
+        self.layers.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Add context to this error (mirrors `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.push_context(context.to_string());
+        self
+    }
+
+    /// The error chain, outermost first (shim-local helper).
+    pub fn chain_messages(&self) -> impl Iterator<Item = &str> {
+        self.layers.iter().rev().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, layer) in self.layers.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{layer}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outermost())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outermost())?;
+        if self.layers.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for layer in self.layers.iter().rev().skip(1) {
+                write!(f, "\n    {layer}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes the blanket `From` below coherent (same trick as
+// the real crate).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(source: E) -> Self {
+        Error::msg(source)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub(crate) mod ext {
+    use super::Error;
+
+    /// Anything `.context()` can be called through: a std error (which
+    /// becomes the root of a new chain) or an existing [`Error`]
+    /// (which gains a layer). Mirrors anyhow's private `ext::StdError`.
+    pub trait StdError {
+        fn ext_context(self, context: String) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context(self, context: String) -> Error {
+            Error::msg(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context(self, context: String) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: gone");
+
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        let e = anyhow!("plain {}", 1);
+        assert_eq!(e.to_string(), "plain 1");
+        let from_string = anyhow!(String::from("already a message"));
+        assert_eq!(from_string.to_string(), "already a message");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root")
+        }
+        let e = inner().context("mid").context("top").unwrap_err();
+        assert_eq!(format!("{e:#}"), "top: mid: root");
+        assert_eq!(e.chain_messages().count(), 3);
+    }
+}

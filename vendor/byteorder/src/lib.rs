@@ -1,0 +1,162 @@
+//! Offline subset of the `byteorder` crate API: the [`ByteOrder`]
+//! trait for [`BigEndian`] / [`LittleEndian`], plus the
+//! [`ReadBytesExt`] / [`WriteBytesExt`] extension traits over
+//! `std::io` readers and writers. Only the fixed-width unsigned
+//! integer codecs this workspace uses are provided.
+
+use std::io::{self, Read, Write};
+
+/// Byte-order parameterization for the extension traits.
+pub trait ByteOrder {
+    fn read_u16(buf: &[u8; 2]) -> u16;
+    fn read_u32(buf: &[u8; 4]) -> u32;
+    fn read_u64(buf: &[u8; 8]) -> u64;
+    fn write_u16(buf: &mut [u8; 2], n: u16);
+    fn write_u32(buf: &mut [u8; 4], n: u32);
+    fn write_u64(buf: &mut [u8; 8], n: u64);
+}
+
+/// Network byte order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BigEndian {}
+
+/// Least-significant byte first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LittleEndian {}
+
+/// Alias matching the real crate.
+pub type NetworkEndian = BigEndian;
+
+impl ByteOrder for BigEndian {
+    fn read_u16(buf: &[u8; 2]) -> u16 {
+        u16::from_be_bytes(*buf)
+    }
+    fn read_u32(buf: &[u8; 4]) -> u32 {
+        u32::from_be_bytes(*buf)
+    }
+    fn read_u64(buf: &[u8; 8]) -> u64 {
+        u64::from_be_bytes(*buf)
+    }
+    fn write_u16(buf: &mut [u8; 2], n: u16) {
+        *buf = n.to_be_bytes();
+    }
+    fn write_u32(buf: &mut [u8; 4], n: u32) {
+        *buf = n.to_be_bytes();
+    }
+    fn write_u64(buf: &mut [u8; 8], n: u64) {
+        *buf = n.to_be_bytes();
+    }
+}
+
+impl ByteOrder for LittleEndian {
+    fn read_u16(buf: &[u8; 2]) -> u16 {
+        u16::from_le_bytes(*buf)
+    }
+    fn read_u32(buf: &[u8; 4]) -> u32 {
+        u32::from_le_bytes(*buf)
+    }
+    fn read_u64(buf: &[u8; 8]) -> u64 {
+        u64::from_le_bytes(*buf)
+    }
+    fn write_u16(buf: &mut [u8; 2], n: u16) {
+        *buf = n.to_le_bytes();
+    }
+    fn write_u32(buf: &mut [u8; 4], n: u32) {
+        *buf = n.to_le_bytes();
+    }
+    fn write_u64(buf: &mut [u8; 8], n: u64) {
+        *buf = n.to_le_bytes();
+    }
+}
+
+/// Read fixed-width integers from any `io::Read`.
+pub trait ReadBytesExt: Read {
+    fn read_u8(&mut self) -> io::Result<u8> {
+        let mut buf = [0u8; 1];
+        self.read_exact(&mut buf)?;
+        Ok(buf[0])
+    }
+
+    fn read_u16<T: ByteOrder>(&mut self) -> io::Result<u16> {
+        let mut buf = [0u8; 2];
+        self.read_exact(&mut buf)?;
+        Ok(T::read_u16(&buf))
+    }
+
+    fn read_u32<T: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut buf = [0u8; 4];
+        self.read_exact(&mut buf)?;
+        Ok(T::read_u32(&buf))
+    }
+
+    fn read_u64<T: ByteOrder>(&mut self) -> io::Result<u64> {
+        let mut buf = [0u8; 8];
+        self.read_exact(&mut buf)?;
+        Ok(T::read_u64(&buf))
+    }
+}
+
+impl<R: Read + ?Sized> ReadBytesExt for R {}
+
+/// Write fixed-width integers to any `io::Write`.
+pub trait WriteBytesExt: Write {
+    fn write_u8(&mut self, n: u8) -> io::Result<()> {
+        self.write_all(&[n])
+    }
+
+    fn write_u16<T: ByteOrder>(&mut self, n: u16) -> io::Result<()> {
+        let mut buf = [0u8; 2];
+        T::write_u16(&mut buf, n);
+        self.write_all(&buf)
+    }
+
+    fn write_u32<T: ByteOrder>(&mut self, n: u32) -> io::Result<()> {
+        let mut buf = [0u8; 4];
+        T::write_u32(&mut buf, n);
+        self.write_all(&buf)
+    }
+
+    fn write_u64<T: ByteOrder>(&mut self, n: u64) -> io::Result<()> {
+        let mut buf = [0u8; 8];
+        T::write_u64(&mut buf, n);
+        self.write_all(&buf)
+    }
+}
+
+impl<W: Write + ?Sized> WriteBytesExt for W {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_big_endian() {
+        let mut buf = Vec::new();
+        buf.write_u8(0xab).unwrap();
+        buf.write_u16::<BigEndian>(0x0102).unwrap();
+        buf.write_u32::<BigEndian>(0x0304_0506).unwrap();
+        buf.write_u64::<BigEndian>(0x0708_090a_0b0c_0d0e).unwrap();
+        assert_eq!(buf[1..3], [0x01, 0x02]);
+        let mut c = Cursor::new(buf);
+        assert_eq!(c.read_u8().unwrap(), 0xab);
+        assert_eq!(c.read_u16::<BigEndian>().unwrap(), 0x0102);
+        assert_eq!(c.read_u32::<BigEndian>().unwrap(), 0x0304_0506);
+        assert_eq!(c.read_u64::<BigEndian>().unwrap(), 0x0708_090a_0b0c_0d0e);
+    }
+
+    #[test]
+    fn little_endian_differs() {
+        let mut buf = Vec::new();
+        buf.write_u16::<LittleEndian>(0x0102).unwrap();
+        assert_eq!(buf, [0x02, 0x01]);
+        let mut c = Cursor::new(buf);
+        assert_eq!(c.read_u16::<LittleEndian>().unwrap(), 0x0102);
+    }
+
+    #[test]
+    fn short_read_errors() {
+        let mut c = Cursor::new(vec![0u8; 3]);
+        assert!(c.read_u64::<BigEndian>().is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Stub of the `xla` PJRT bindings used by `stashcache::runtime`.
+//!
+//! The offline build environment has no XLA/PJRT shared libraries, so
+//! this crate provides the exact API surface the runtime layer
+//! compiles against while reporting the backend as unavailable at
+//! *client creation* time: [`PjRtClient::cpu`] always returns an
+//! error, every caller already handles that path (the services fall
+//! back to the pure-rust backends), and PJRT-gated tests skip.
+//! Swapping this stub for the real bindings re-enables the
+//! AOT-artifact executors without any source change in `stashcache`.
+
+use std::fmt;
+
+/// Error type for every stub operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT runtime unavailable: built against the offline `xla` stub \
+         (vendor/xla); link the real xla bindings to enable AOT artifacts"
+            .to_string(),
+    )
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// A host literal (stub: carries no data — unreachable once client
+/// creation fails).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reinterpret with a new shape.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer holding an execution result (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A PJRT client (stub — creation always fails).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+
+    #[test]
+    fn literal_ops_error_cleanly() {
+        let lit = Literal::vec1(&[0f32; 4]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
