@@ -71,6 +71,16 @@ pub struct ReadPlan {
     pub join: Vec<u64>,
 }
 
+/// One watermark-eviction sweep: when space was reclaimed, and how
+/// much (monitoring/chaos reports correlate these with fault events).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictionSweep {
+    pub at: SimTime,
+    /// Whole files evicted by this sweep.
+    pub files: u32,
+    pub bytes: u64,
+}
+
 /// The cache server state machine.
 #[derive(Debug)]
 pub struct CacheServer {
@@ -80,6 +90,8 @@ pub struct CacheServer {
     usage: u64,
     seq: u64,
     pub stats: CacheStats,
+    /// Every eviction sweep, timestamped (empty until pressure).
+    pub eviction_log: Vec<EvictionSweep>,
 }
 
 impl CacheServer {
@@ -91,6 +103,7 @@ impl CacheServer {
             usage: 0,
             seq: 0,
             stats: CacheStats::default(),
+            eviction_log: Vec::new(),
         }
     }
 
@@ -284,8 +297,10 @@ impl CacheServer {
 
     /// Watermark eviction: when usage exceeds `high_watermark ×
     /// capacity`, evict whole files in LRU order (skipping pinned
-    /// files) until usage falls to `low_watermark × capacity`.
-    fn maybe_evict(&mut self, _now: SimTime) {
+    /// files) until usage falls to `low_watermark × capacity`. Each
+    /// sweep is timestamped in [`CacheServer::eviction_log`] so reports
+    /// can show *when* the resource provider reclaimed space.
+    fn maybe_evict(&mut self, now: SimTime) {
         let cap = self.cfg.capacity.as_u64() as f64;
         let high = (self.cfg.high_watermark * cap) as u64;
         if self.usage <= high {
@@ -300,6 +315,11 @@ impl CacheServer {
             .map(|(p, f)| (f.last_access, f.access_seq, p.clone()))
             .collect();
         victims.sort();
+        let mut sweep = EvictionSweep {
+            at: now,
+            files: 0,
+            bytes: 0,
+        };
         for (_, _, path) in victims {
             if self.usage <= low {
                 break;
@@ -309,12 +329,30 @@ impl CacheServer {
             self.usage -= freed;
             self.stats.evictions += 1;
             self.stats.bytes_evicted += freed;
+            sweep.files += 1;
+            sweep.bytes += freed;
+        }
+        if sweep.files > 0 {
+            self.eviction_log.push(sweep);
         }
     }
 
     fn bump_seq(&mut self) -> u64 {
         self.seq += 1;
         self.seq
+    }
+
+    /// Paths currently pinned by in-flight fetches (never evictable),
+    /// sorted for determinism.
+    pub fn pinned_paths(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .files
+            .iter()
+            .filter(|(_, f)| f.pins > 0)
+            .map(|(p, _)| p.clone())
+            .collect();
+        v.sort();
+        v
     }
 
     /// Expose (path → resident bytes) snapshot for reports/tests.
@@ -497,6 +535,101 @@ mod tests {
         let p2 = c.plan_read("/f", 0, 100, 100, 1, t(1.0));
         assert_eq!(p2.fetch, vec![0]);
         assert!(p2.join.is_empty());
+    }
+
+    #[test]
+    fn eviction_log_records_when_space_was_reclaimed() {
+        // capacity 1000, high 900, low 600, chunk 100: four 200-byte
+        // files fit; a fifth at t=5 must trigger a timestamped sweep.
+        let mut c = CacheServer::new("x", cfg(1_000, 100));
+        for (i, name) in ["/a", "/b", "/c", "/d"].iter().enumerate() {
+            let p = c.plan_read(name, 0, 200, 200, 1, t(i as f64));
+            c.begin_fetch(name, 1, &p.fetch);
+            c.commit_chunks(name, 1, &p.fetch, t(i as f64));
+        }
+        assert!(c.eviction_log.is_empty(), "no pressure yet");
+        let p = c.plan_read("/e", 0, 200, 200, 1, t(5.0));
+        c.begin_fetch("/e", 1, &p.fetch);
+        c.commit_chunks("/e", 1, &p.fetch, t(5.0));
+        assert_eq!(c.eviction_log.len(), 1);
+        let sweep = c.eviction_log[0];
+        assert_eq!(sweep.at, t(5.0), "sweep carries the commit instant");
+        assert_eq!(sweep.files as u64, c.stats.evictions);
+        assert_eq!(sweep.bytes, c.stats.bytes_evicted);
+        assert!(sweep.bytes >= 400, "evicted to the low watermark");
+    }
+
+    #[test]
+    fn property_invariants_under_randomized_op_sequences() {
+        // The §1 operational claim as invariants, under arbitrary
+        // interleavings of plan/begin_fetch/commit/abort:
+        //  1. usage always equals the sum of resident chunk bytes;
+        //  2. pinned (in-flight) files are never evicted;
+        //  3. usage never exceeds capacity after `maybe_evict` ran.
+        use crate::util::prop::check;
+        check("cache chaos invariants", 40, |g| {
+            // 10 files of 96..960 bytes (total 5280) against capacity
+            // 4000 (high 3600 / low 2400): eviction pressure is
+            // reachable, while the ≤2 concurrently pinned files
+            // (≤1920 B) always fit under the low watermark.
+            let chunk = 64u64;
+            let capacity = 4_000u64;
+            let mut c = CacheServer::new("p", cfg(capacity, chunk));
+            let mut inflight: Vec<(String, Vec<u64>)> = Vec::new();
+            let n_ops = g.usize(1, 50);
+            for i in 0..n_ops {
+                let now = t(i as f64);
+                match g.usize(0, 2) {
+                    0 if inflight.len() < 2 => {
+                        let fnum = g.u64(0, 9);
+                        let file = format!("/f{fnum}");
+                        let size = 96 * (fnum + 1);
+                        let off = g.u64(0, size - 1);
+                        let len = g.u64(0, size - off);
+                        let p = c.plan_read(&file, off, len, size, 1, now);
+                        if !p.fetch.is_empty() {
+                            c.begin_fetch(&file, 1, &p.fetch);
+                            inflight.push((file, p.fetch.clone()));
+                        }
+                    }
+                    1 => {
+                        if !inflight.is_empty() {
+                            let (f, ch) = inflight.remove(0);
+                            c.commit_chunks(&f, 1, &ch, now);
+                        }
+                    }
+                    _ => {
+                        if let Some((f, ch)) = inflight.pop() {
+                            c.abort_fetch(&f, 1, &ch);
+                        }
+                    }
+                }
+                // Invariant 1: usage == sum of resident bytes.
+                let sum: u64 = c.residency_snapshot().iter().map(|(_, b)| b).sum();
+                if sum != c.usage().as_u64() {
+                    return (
+                        false,
+                        format!("op {i}: sum {} != usage {}", sum, c.usage()),
+                    );
+                }
+                // Invariant 2: every in-flight fetch still pins its
+                // file (eviction must have skipped it).
+                let pinned = c.pinned_paths();
+                for (path, _) in &inflight {
+                    if !pinned.contains(path) {
+                        return (false, format!("op {i}: pinned {path} evicted"));
+                    }
+                }
+                // Invariant 3: capacity respected after eviction.
+                if c.usage().as_u64() > capacity {
+                    return (
+                        false,
+                        format!("op {i}: usage {} > capacity {capacity}", c.usage()),
+                    );
+                }
+            }
+            (true, String::new())
+        });
     }
 
     #[test]

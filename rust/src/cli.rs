@@ -2,11 +2,13 @@
 
 use anyhow::{bail, Context, Result};
 use stashcache::config::{defaults, FederationConfig};
+use stashcache::fault::{FaultKind, FaultTimeline};
 use stashcache::federation::{backend::GeoBackend, DownloadMethod, FedSim};
 use stashcache::report::{self, paper};
-use stashcache::sim::campaign::{self, CampaignConfig};
+use stashcache::sim::campaign::{self, CampaignConfig, CampaignResults};
 use stashcache::sim::scenario::{self, ScenarioConfig};
 use stashcache::sim::usage::UsageConfig;
+use stashcache::util::SimTime;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
@@ -88,6 +90,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "topology" => cmd_topology(&flags),
         "scenario" => cmd_scenario(&flags),
         "campaign" => cmd_campaign(&flags),
+        "chaos" => cmd_chaos(&flags),
         "usage" => cmd_usage(&flags),
         "report" => cmd_report(&flags),
         "init-config" => cmd_init_config(&flags),
@@ -112,6 +115,13 @@ fn print_help() {
                     [--experiment NAME] [--background N]\n\
                                             run N concurrent Poisson/Zipf jobs through\n\
                                             the session engine (coalescing, contention)\n\
+           chaos    [campaign flags] [--kill-cache SITE [--down-at S] [--up-at S]]\n\
+                    [--cut-wan SITE [--cut-at S] [--heal-at S]]\n\
+                    [--degrade-origin N [--factor F] [--degrade-at S] [--restore-at S]]\n\
+                    [--kill-redirector N [--redir-down-at S] [--redir-up-at S]]\n\
+                                            campaign with mid-transfer faults; sessions\n\
+                                            fail over; prints the availability report\n\
+                                            (default: single-cache outage at peak load)\n\
            usage --days D [--jobs-per-hour J]\n\
                                             run a usage simulation (Tables 1-2, Fig 4)\n\
            report --all --out-dir DIR       regenerate every paper table/figure\n\
@@ -174,8 +184,8 @@ fn cmd_scenario(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn cmd_campaign(flags: &Flags) -> Result<()> {
-    let cfg = load_config(flags)?;
+/// Parse the campaign knobs shared by `campaign` and `chaos`.
+fn parse_campaign(flags: &Flags, cfg: &FederationConfig) -> Result<CampaignConfig> {
     let mut ccfg = CampaignConfig::default();
     if let Some(sites) = flags.get("sites") {
         ccfg.sites = sites.split(',').map(str::to_string).collect();
@@ -230,11 +240,11 @@ fn cmd_campaign(flags: &Flags) -> Result<()> {
                 .join(", ")
         );
     }
+    Ok(ccfg)
+}
 
-    let wall_start = std::time::Instant::now();
-    let results = campaign::run(cfg, &ccfg);
-    let wall = wall_start.elapsed().as_secs_f64();
-
+/// Render the per-site table and summary lines for a finished campaign.
+fn print_campaign(ccfg: &CampaignConfig, results: &CampaignResults, wall: f64) {
     let mut per_site = report::Table::new(
         format!("Campaign: {} jobs, {} sites", ccfg.jobs, ccfg.sites.len()),
         &["Site", "Jobs", "Mean s", "p95 s", "Hit %"],
@@ -281,6 +291,160 @@ fn cmd_campaign(flags: &Flags) -> Result<()> {
         results.events_processed,
         results.events_processed as f64 / wall.max(1e-9),
     );
+}
+
+fn cmd_campaign(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let ccfg = parse_campaign(flags, &cfg)?;
+    let wall_start = std::time::Instant::now();
+    let results = campaign::run(cfg, &ccfg);
+    print_campaign(&ccfg, &results, wall_start.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// `stashcache chaos`: a campaign with mid-transfer faults. With no
+/// fault flags, runs the canonical drill — the first campaign site's
+/// nearest cache dies at mid-window and never comes back; every
+/// session fails over (or falls back to the origin) and the run still
+/// completes every download.
+fn cmd_chaos(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let ccfg = parse_campaign(flags, &cfg)?;
+    let mut fed = FedSim::build_with_backend(cfg, geo_backend(flags)?);
+    let window = ccfg.arrival_window_secs;
+    let mut faults = FaultTimeline::new();
+
+    if let Some(site) = flags.get("kill-cache") {
+        let idx = fed
+            .topo
+            .site_index(site)
+            .ok_or_else(|| anyhow::anyhow!("unknown site {site:?}"))?;
+        if !fed.caches.contains_key(&idx) {
+            bail!("site {site:?} has no cache (see `stashcache topology`)");
+        }
+        let down_at = flags.get_f64("down-at", window * 0.5)?;
+        let down = SimTime::from_secs_f64(down_at);
+        if flags.has("up-at") {
+            let up_at = flags.get_f64("up-at", 0.0)?;
+            if up_at <= down_at {
+                bail!("--up-at ({up_at}) must be after --down-at ({down_at})");
+            }
+            faults.cache_outage(idx, down, SimTime::from_secs_f64(up_at));
+        } else {
+            // No recovery: the cache stays dark for the whole run.
+            faults.push(down, FaultKind::CacheDown { site: idx });
+        }
+    }
+    if let Some(site) = flags.get("cut-wan") {
+        let idx = fed
+            .topo
+            .site_index(site)
+            .ok_or_else(|| anyhow::anyhow!("unknown site {site:?}"))?;
+        let cut_at = flags.get_f64("cut-at", window * 0.25)?;
+        let heal_at = flags.get_f64("heal-at", window * 0.75)?;
+        if heal_at <= cut_at {
+            bail!("--heal-at ({heal_at}) must be after --cut-at ({cut_at})");
+        }
+        faults.link_outage(
+            fed.topo.wan_link(idx),
+            SimTime::from_secs_f64(cut_at),
+            SimTime::from_secs_f64(heal_at),
+        );
+    }
+    if flags.has("degrade-origin") {
+        let origin = flags.get_usize("degrade-origin", 0)?;
+        if origin >= fed.origins.len() {
+            bail!("origin index {origin} out of range (have {})", fed.origins.len());
+        }
+        let factor = flags.get_f64("factor", 0.1)?;
+        if factor <= 0.0 || factor > 1.0 {
+            bail!("--factor must be in (0, 1], got {factor}");
+        }
+        let degrade_at = flags.get_f64("degrade-at", 0.0)?;
+        let restore_at = flags.get_f64("restore-at", window * 2.0)?;
+        if restore_at <= degrade_at {
+            bail!("--restore-at ({restore_at}) must be after --degrade-at ({degrade_at})");
+        }
+        faults.origin_brownout(
+            origin,
+            factor,
+            SimTime::from_secs_f64(degrade_at),
+            SimTime::from_secs_f64(restore_at),
+        );
+    }
+    if flags.has("kill-redirector") {
+        let instance = flags.get_usize("kill-redirector", 0)?;
+        if instance >= fed.redirectors.instances.len() {
+            bail!(
+                "redirector index {instance} out of range (have {})",
+                fed.redirectors.instances.len()
+            );
+        }
+        let down_at = flags.get_f64("redir-down-at", 0.0)?;
+        let up_at = flags.get_f64("redir-up-at", window)?;
+        if up_at <= down_at {
+            bail!("--redir-up-at ({up_at}) must be after --redir-down-at ({down_at})");
+        }
+        faults.redirector_outage(
+            instance,
+            SimTime::from_secs_f64(down_at),
+            SimTime::from_secs_f64(up_at),
+        );
+    }
+    if faults.is_empty() {
+        // The canonical drill: single-cache outage at peak load.
+        let first_site = fed
+            .topo
+            .site_index(&ccfg.sites[0])
+            .expect("site validated above");
+        let victim = fed.nearest_cache_site(first_site);
+        println!(
+            "no fault flags given: killing cache {} at t={:.1}s (no recovery)\n",
+            fed.topo.site_name(victim),
+            window * 0.5,
+        );
+        faults.push(
+            SimTime::from_secs_f64(window * 0.5),
+            FaultKind::CacheDown { site: victim },
+        );
+    }
+
+    let wall_start = std::time::Instant::now();
+    let results = campaign::run_on_with_faults(&mut fed, &ccfg, &faults);
+    print_campaign(&ccfg, &results.campaign, wall_start.elapsed().as_secs_f64());
+    println!("\nfault log:");
+    for ev in &results.fault_log {
+        println!("  {} {:?}", ev.at, ev.kind);
+    }
+    if fed.pending_faults() > 0 {
+        println!(
+            "  ({} scheduled fault(s) fell after the last completion and were not applied)",
+            fed.pending_faults()
+        );
+    }
+    println!();
+    println!("{}", paper::availability_table(&results.availability).render());
+    // When space was reclaimed (the §1 claim is that this never breaks
+    // a workflow — correlate these instants with the fault log above).
+    let mut cache_sites: Vec<usize> = fed.caches.keys().copied().collect();
+    cache_sites.sort_unstable();
+    for site in cache_sites {
+        let cache = &fed.caches[&site];
+        if cache.eviction_log.is_empty() {
+            continue;
+        }
+        let bytes: u64 = cache.eviction_log.iter().map(|s| s.bytes).sum();
+        let files: u32 = cache.eviction_log.iter().map(|s| s.files).sum();
+        println!(
+            "evictions at {}: {} sweeps ({} files, {}) between {} and {}",
+            fed.topo.site_name(site),
+            cache.eviction_log.len(),
+            files,
+            stashcache::util::ByteSize(bytes),
+            cache.eviction_log.first().expect("non-empty").at,
+            cache.eviction_log.last().expect("non-empty").at,
+        );
+    }
     Ok(())
 }
 

@@ -30,6 +30,10 @@ pub enum Method {
     /// HTTP through the site forward proxy (the baseline; not part of
     /// stashcp's chain).
     HttpProxy,
+    /// HTTP directly against the data origin — the federation's
+    /// last-resort fallback when no cache (or proxy) can serve the
+    /// transfer (failure injection / chaos scenarios).
+    HttpOrigin,
 }
 
 /// What a finished download looked like (the unit of the §5 analysis).

@@ -89,6 +89,9 @@ pub fn startup_latency(costs: &StartupCosts, method: Method, attempt: usize) -> 
         }
         // The baseline: proxy address comes from the environment.
         Method::HttpProxy => costs.curl_startup,
+        // Direct-to-origin fallback: plain curl against the origin's
+        // HTTP interface — no GeoIP query, one fresh connection.
+        Method::HttpOrigin => costs.curl_startup + costs.connect,
     };
     // Retries pay an extra connect per failed predecessor.
     base + costs.connect * attempt as u64

@@ -1,0 +1,172 @@
+//! Fault timeline: scheduled mid-run failures of federation components.
+//!
+//! The paper's core operational claim (§1, §3) is that opportunistic
+//! resources can vanish at any moment — "the resource provider can
+//! reclaim space in the cache without worry of causing workflow
+//! failures" — and in production (the OSDF follow-up work) cache
+//! hosts, links, and origins go down routinely while thousands of
+//! transfers are in flight. This module is the deterministic chaos
+//! layer that reproduces those outages:
+//!
+//! * [`FaultKind`] / [`FaultEvent`] — what fails, and when.
+//! * [`FaultTimeline`] — a builder for scheduled fault sequences,
+//!   injected into a federation with
+//!   [`crate::federation::FedSim::inject_faults`].
+//! * [`FaultState`] — the live health view (which caches are down,
+//!   per-cache accumulated downtime) the engine and GeoIP consult.
+//!
+//! The engine ([`crate::federation::driver::SessionEngine`]) treats the
+//! fault schedule as a third event source next to its timer queue and
+//! the network's completions: network completions at or before a fault
+//! instant drain first (a transfer that finished, finished), then the
+//! fault applies, then same-instant timers observe the post-fault
+//! world. Sessions whose cache dies mid-transfer abort their in-flight
+//! chunks, wake any joined waiters, and re-enter `GeoResolve` with the
+//! dead cache excluded; after [`MAX_FAILOVER_RETRIES`] failed attempts
+//! they stream directly from the origin. See `ARCHITECTURE.md` ("Fault
+//! layer") for the full event flow.
+
+pub mod timeline;
+
+pub use timeline::FaultTimeline;
+
+use crate::netsim::LinkId;
+use crate::util::{Duration, SimTime};
+use std::collections::BTreeMap;
+
+/// Mid-transfer failures re-resolve (GeoIP + reconnect) and retry this
+/// many times before the session gives up on caches entirely and
+/// streams from the origin (stashcp's last-resort behaviour).
+pub const MAX_FAILOVER_RETRIES: u32 = 3;
+
+/// Poll interval for a direct-to-origin session whose own path is cut:
+/// there is nothing left to fail over to, so it waits for the link to
+/// heal and tries again.
+pub const DIRECT_RETRY_BACKOFF: Duration = Duration::from_secs(2);
+
+/// One kind of component failure (or recovery).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The cache at `cfg.sites[site]` becomes unreachable. In-flight
+    /// transfers it serves abort; its disk contents survive.
+    CacheDown { site: usize },
+    /// The cache comes back (warm: resident chunks survived).
+    CacheUp { site: usize },
+    /// The origin's DTN link capacity is scaled by `factor` in (0, 1]
+    /// (brownout: many users, a failed disk array, a drained node).
+    OriginDegraded { origin: usize, factor: f64 },
+    /// The origin's DTN link returns to full capacity.
+    OriginRestored { origin: usize },
+    /// A network link is severed: every flow crossing it dies and new
+    /// flows cannot use it until restored.
+    LinkCut { link: LinkId },
+    /// The link comes back up.
+    LinkRestored { link: LinkId },
+    /// A redirector instance stops answering (HA pair degrades).
+    RedirectorDown { instance: usize },
+    /// The redirector instance recovers.
+    RedirectorUp { instance: usize },
+}
+
+/// A scheduled fault: `kind` applies at virtual time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub kind: FaultKind,
+}
+
+/// Live component-health view, updated as fault events apply and read
+/// by the engine (connection checks) and GeoIP (down caches are never
+/// ranked). Also the per-cache downtime ledger for the availability
+/// section of the report.
+#[derive(Debug, Default, Clone)]
+pub struct FaultState {
+    /// cache site → instant the current outage began.
+    down_since: BTreeMap<usize, SimTime>,
+    /// cache site → accumulated downtime over *closed* outages.
+    downtime: BTreeMap<usize, Duration>,
+    /// cache site → number of outages started.
+    outages: BTreeMap<usize, u32>,
+}
+
+impl FaultState {
+    /// Is this cache site currently unreachable?
+    pub fn is_cache_down(&self, site: usize) -> bool {
+        self.down_since.contains_key(&site)
+    }
+
+    /// Mark a cache down at `now` (idempotent: a duplicate down event
+    /// does not restart the outage clock).
+    pub(crate) fn cache_down(&mut self, site: usize, now: SimTime) {
+        if let std::collections::btree_map::Entry::Vacant(e) = self.down_since.entry(site) {
+            e.insert(now);
+            *self.outages.entry(site).or_insert(0) += 1;
+        }
+    }
+
+    /// Mark a cache back up at `now`, closing the open outage
+    /// (idempotent: up without a preceding down is a no-op).
+    pub(crate) fn cache_up(&mut self, site: usize, now: SimTime) {
+        if let Some(since) = self.down_since.remove(&site) {
+            *self.downtime.entry(site).or_insert(Duration::ZERO) += now.saturating_sub(since);
+        }
+    }
+
+    /// Outages started at this cache so far.
+    pub fn outages_of(&self, site: usize) -> u32 {
+        self.outages.get(&site).copied().unwrap_or(0)
+    }
+
+    /// Accumulated downtime of a cache, including a still-open outage
+    /// measured up to `now`.
+    pub fn downtime_of(&self, site: usize, now: SimTime) -> Duration {
+        let mut d = self.downtime.get(&site).copied().unwrap_or(Duration::ZERO);
+        if let Some(&since) = self.down_since.get(&site) {
+            d += now.saturating_sub(since);
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn downtime_accumulates_across_outages() {
+        let mut f = FaultState::default();
+        f.cache_down(3, t(10.0));
+        f.cache_up(3, t(25.0));
+        f.cache_down(3, t(100.0));
+        f.cache_up(3, t(105.0));
+        assert_eq!(f.downtime_of(3, t(200.0)), Duration::from_secs(20));
+        assert_eq!(f.outages_of(3), 2);
+        assert!(!f.is_cache_down(3));
+    }
+
+    #[test]
+    fn open_outage_counts_up_to_now() {
+        let mut f = FaultState::default();
+        f.cache_down(0, t(5.0));
+        assert!(f.is_cache_down(0));
+        assert_eq!(f.downtime_of(0, t(12.0)), Duration::from_secs(7));
+        // Other sites are unaffected.
+        assert!(!f.is_cache_down(1));
+        assert_eq!(f.downtime_of(1, t(12.0)), Duration::ZERO);
+    }
+
+    #[test]
+    fn duplicate_events_are_idempotent() {
+        let mut f = FaultState::default();
+        f.cache_down(2, t(1.0));
+        f.cache_down(2, t(3.0)); // must not restart the clock
+        f.cache_up(2, t(11.0));
+        f.cache_up(2, t(12.0)); // must not double-count
+        assert_eq!(f.downtime_of(2, t(20.0)), Duration::from_secs(10));
+        assert_eq!(f.outages_of(2), 1);
+    }
+}

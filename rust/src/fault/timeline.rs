@@ -1,0 +1,131 @@
+//! Builder for deterministic fault schedules.
+//!
+//! A [`FaultTimeline`] is just an ordered list of [`FaultEvent`]s with
+//! convenience constructors for the common fault shapes (an outage is a
+//! down/up pair, a brownout a degrade/restore pair). Inject one into a
+//! federation with [`crate::federation::FedSim::inject_faults`]; every
+//! engine driving that federation (serial `download`, campaigns, the
+//! §4.1 scenario) then applies the events at their scheduled instants.
+
+use crate::netsim::LinkId;
+use crate::util::SimTime;
+use super::{FaultEvent, FaultKind};
+
+/// An ordered set of scheduled faults.
+#[derive(Debug, Clone, Default)]
+pub struct FaultTimeline {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule one fault event.
+    pub fn push(&mut self, at: SimTime, kind: FaultKind) -> &mut Self {
+        self.events.push(FaultEvent { at, kind });
+        self
+    }
+
+    /// A cache outage: down at `down`, back (warm) at `up`.
+    pub fn cache_outage(&mut self, site: usize, down: SimTime, up: SimTime) -> &mut Self {
+        assert!(down < up, "outage must end after it starts");
+        self.push(down, FaultKind::CacheDown { site });
+        self.push(up, FaultKind::CacheUp { site })
+    }
+
+    /// A link outage: severed at `cut`, healed at `restore`.
+    pub fn link_outage(&mut self, link: LinkId, cut: SimTime, restore: SimTime) -> &mut Self {
+        assert!(cut < restore, "outage must end after it starts");
+        self.push(cut, FaultKind::LinkCut { link });
+        self.push(restore, FaultKind::LinkRestored { link })
+    }
+
+    /// An origin brownout: DTN capacity scaled by `factor` in (0, 1]
+    /// from `from` to `to`.
+    pub fn origin_brownout(
+        &mut self,
+        origin: usize,
+        factor: f64,
+        from: SimTime,
+        to: SimTime,
+    ) -> &mut Self {
+        assert!(
+            factor > 0.0 && factor <= 1.0,
+            "brownout factor must be in (0, 1], got {factor}"
+        );
+        assert!(from < to, "brownout must end after it starts");
+        self.push(from, FaultKind::OriginDegraded { origin, factor });
+        self.push(to, FaultKind::OriginRestored { origin })
+    }
+
+    /// A redirector-instance outage (the HA pair degrades to one).
+    pub fn redirector_outage(
+        &mut self,
+        instance: usize,
+        down: SimTime,
+        up: SimTime,
+    ) -> &mut Self {
+        assert!(down < up, "outage must end after it starts");
+        self.push(down, FaultKind::RedirectorDown { instance });
+        self.push(up, FaultKind::RedirectorUp { instance })
+    }
+
+    /// The scheduled events, in insertion order (the federation sorts
+    /// by time on injection; insertion order breaks ties).
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn builders_emit_paired_events() {
+        let mut tl = FaultTimeline::new();
+        tl.cache_outage(4, t(10.0), t(20.0))
+            .origin_brownout(0, 0.25, t(5.0), t(15.0));
+        assert_eq!(tl.len(), 4);
+        assert_eq!(
+            tl.events()[0],
+            FaultEvent {
+                at: t(10.0),
+                kind: FaultKind::CacheDown { site: 4 }
+            }
+        );
+        assert_eq!(
+            tl.events()[3],
+            FaultEvent {
+                at: t(15.0),
+                kind: FaultKind::OriginRestored { origin: 0 }
+            }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "outage must end after it starts")]
+    fn inverted_outage_panics() {
+        FaultTimeline::new().cache_outage(0, t(5.0), t(5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "brownout factor")]
+    fn zero_factor_panics() {
+        FaultTimeline::new().origin_brownout(0, 0.0, t(1.0), t(2.0));
+    }
+}

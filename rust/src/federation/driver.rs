@@ -30,16 +30,37 @@
 //! re-plan — typically into a pure cache hit that never touches the
 //! origin. This is the paper's §3 cache behaviour ("capture data
 //! requests from clients") finally firing *across* concurrent clients.
+//!
+//! ## Fault layer
+//!
+//! The federation's fault schedule ([`crate::fault`]) is a third event
+//! source: cache deaths abort the flows that cache was serving or
+//! filling (releasing reserved chunks via `abort_fetch` and waking any
+//! `JoinWait` joiners so they re-plan), link cuts kill every crossing
+//! flow and re-trigger max-min allocation for the survivors, origin
+//! brownouts rescale DTN capacity, and redirector outages degrade the
+//! HA pair. Interrupted sessions re-enter `GeoResolve` with the failed
+//! cache excluded, pay a fresh resolution latency per attempt, and
+//! after [`MAX_FAILOVER_RETRIES`] attempts stream directly from the
+//! origin — a chaos campaign completes every download or panics; it
+//! never silently drops one.
 
 use crate::client::stashcp;
 use crate::client::{curl, Method, TransferRecord};
+use crate::fault::{DIRECT_RETRY_BACKOFF, FaultEvent, FaultKind, MAX_FAILOVER_RETRIES};
 use crate::monitoring::packets::Protocol;
-use crate::netsim::{Completion, Endpoint, EventQueue, FlowId, FlowSpec};
+use crate::netsim::{Completion, Endpoint, EventQueue, FlowId, FlowSpec, LinkId};
 use crate::sim::workload::FileRef;
 use crate::util::{Duration, SimTime};
 use std::collections::HashMap;
 use super::session::{Phase, Session, SessionId, Xfer};
 use super::{DownloadMethod, FedSim};
+
+/// Are all links of a route currently up? (Flows must not start over a
+/// severed link; the session retries or fails over instead.)
+fn route_is_up(fed: &FedSim, links: &[LinkId]) -> bool {
+    links.iter().all(|&l| fed.net.link_is_up(l))
+}
 
 /// Events the engine schedules for itself.
 #[derive(Debug, Clone, Copy)]
@@ -50,8 +71,8 @@ enum EngineEvent {
     Timer(SessionId),
 }
 
-/// Engine counters (perf + concurrency observability).
-#[derive(Debug, Default, Clone, Copy)]
+/// Engine counters (perf + concurrency + fault observability).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct EngineStats {
     /// Timer events plus network completions processed.
     pub events_processed: u64,
@@ -61,6 +82,17 @@ pub struct EngineStats {
     pub background_respawns: u64,
     /// Sessions that parked in `JoinWait` at least once.
     pub coalesced_joins: u64,
+    /// Fault events applied (cache/link/origin/redirector transitions).
+    pub faults_applied: u64,
+    /// Mid-transfer aborts survived (flow cancelled, session re-planned).
+    pub failovers: u64,
+    /// Session re-resolution attempts after any failure.
+    pub retries: u64,
+    /// Bytes already transferred by flows that were then aborted
+    /// (wasted work the fault layer caused).
+    pub aborted_bytes: u64,
+    /// Sessions that gave up on caches and streamed from the origin.
+    pub direct_fallbacks: u64,
 }
 
 /// The event-driven download engine. Create one per batch of work; it
@@ -166,6 +198,15 @@ impl SessionEngine {
     /// Drive the federation until every spawned session has finished.
     /// Background flows are respawned along the way and left running;
     /// `fed.now` ends at the last processed instant.
+    ///
+    /// Three event sources interleave in virtual-time order: the
+    /// engine's timer queue, the network's projected completions, and
+    /// the federation's fault schedule. Completions at or before the
+    /// next timer-or-fault drain first (a transfer that finished at the
+    /// fault instant finished); a fault ties ahead of a timer at the
+    /// same instant, so same-instant timers observe the post-fault
+    /// world. Faults due after the last session completes stay pending
+    /// for the next engine run.
     pub fn run(&mut self, fed: &mut FedSim) {
         let mut guard = 0u64;
         while self.outstanding > 0 {
@@ -177,12 +218,24 @@ impl SessionEngine {
                 self.queue.now()
             );
             let next_timer = self.queue.peek_time();
+            let next_fault = fed.next_fault_at();
             let next_net = fed.net.next_completion();
-            match (next_timer, next_net) {
-                // Network completions up to (and at) the next timer go
-                // first — the blocking engine's advance_to order.
+            // Faults and timers compete for the scheduled slot; faults
+            // win ties. (A fault left over from an earlier engine run
+            // may be past-dated; it still sorts first and is applied at
+            // the current clock.)
+            let (next_sched, fault_first) = match (next_fault, next_timer) {
+                (Some(tf), Some(tt)) if tf <= tt => (Some(tf), true),
+                (Some(tf), None) => (Some(tf), true),
+                (_, tt) => (tt, false),
+            };
+            match (next_sched, next_net) {
+                // Network completions up to (and at) the next scheduled
+                // event go first — the blocking engine's advance_to
+                // order.
                 (Some(te), Some(tn)) if tn <= te => self.step_network(fed, tn),
                 (None, Some(tn)) => self.step_network(fed, tn),
+                (Some(_), _) if fault_first => self.step_fault(fed),
                 (Some(_), _) => self.step_timer(fed),
                 (None, None) => panic!(
                     "session engine stalled: {} sessions outstanding with no pending events",
@@ -215,6 +268,222 @@ impl SessionEngine {
         match ev {
             EngineEvent::Start(id) => self.on_start(fed, id, t),
             EngineEvent::Timer(id) => self.on_timer(fed, id, t),
+        }
+    }
+
+    /// Pop and apply the next scheduled fault. Past-dated faults (left
+    /// over from an earlier engine run on this federation) apply at the
+    /// current clock.
+    fn step_fault(&mut self, fed: &mut FedSim) {
+        let Some(ev) = fed.pop_fault() else {
+            return;
+        };
+        let t = ev.at.max(fed.now);
+        self.stats.events_processed += 1;
+        // Transfers that finished at or before the fault instant
+        // finished: drain them before the world changes.
+        fed.now = t;
+        let stragglers = fed.net.advance(t);
+        self.dispatch_completions(fed, stragglers, t);
+        self.on_fault(fed, ev.kind, t);
+    }
+
+    /// Apply one fault to the federation and unwind every session it
+    /// interrupts. All iteration orders are deterministic (session-id
+    /// order, sorted waiter keys, FlowId order from the network).
+    fn on_fault(&mut self, fed: &mut FedSim, kind: FaultKind, t: SimTime) {
+        self.stats.faults_applied += 1;
+        fed.fault_log.push(FaultEvent { at: t, kind });
+        match kind {
+            FaultKind::CacheDown { site } => {
+                fed.faults.cache_down(site, t);
+                // Abort every transfer this cache is serving or
+                // filling: the flow dies mid-stream, reserved chunks
+                // are released, and the session fails over.
+                let victims: Vec<SessionId> = self
+                    .sessions
+                    .iter()
+                    .filter(|s| {
+                        s.cache_site == Some(site)
+                            && matches!(
+                                s.phase,
+                                Phase::Transfer(Xfer::StashServe | Xfer::StashFetch)
+                            )
+                    })
+                    .map(|s| s.id)
+                    .collect();
+                for id in victims {
+                    self.cancel_session_flow(fed, id, t);
+                    self.on_flow_aborted(fed, id, t, Some(site));
+                }
+                // Wake sessions still parked on fetches at this cache
+                // (owners not yet transferring): they re-plan, find the
+                // cache dead, and fail over.
+                let mut parked: Vec<(usize, String)> = self
+                    .waiters
+                    .keys()
+                    .filter(|k| k.0 == site)
+                    .cloned()
+                    .collect();
+                parked.sort();
+                for (cache_site, path) in parked {
+                    self.wake_waiters(cache_site, &path, t);
+                }
+            }
+            FaultKind::CacheUp { site } => fed.faults.cache_up(site, t),
+            FaultKind::LinkCut { link } => {
+                for (flow, left) in fed.net.cut_link(link, t) {
+                    if let Some(origin_idx) = fed.background.remove(&flow) {
+                        // Re-attached when the link heals.
+                        fed.deferred_background.push(origin_idx);
+                    } else if let Some(id) = self.flow_owner.remove(&flow) {
+                        let (size, exclude) = {
+                            let s = &mut self.sessions[id.0 as usize];
+                            s.flow = None;
+                            (s.file.size.as_u64().max(1), s.cache_site)
+                        };
+                        self.stats.aborted_bytes += size.saturating_sub(left.min(size));
+                        self.on_flow_aborted(fed, id, t, exclude);
+                    }
+                }
+            }
+            FaultKind::LinkRestored { link } => {
+                fed.net.restore_link(link);
+                fed.respawn_deferred_background();
+            }
+            FaultKind::OriginDegraded { origin, factor } => {
+                let link = fed.topo.origin_lan_link(origin);
+                fed.net.scale_link_capacity(link, factor, t);
+            }
+            FaultKind::OriginRestored { origin } => {
+                let link = fed.topo.origin_lan_link(origin);
+                fed.net.scale_link_capacity(link, 1.0, t);
+            }
+            FaultKind::RedirectorDown { instance } => {
+                fed.redirectors.set_healthy(instance, false);
+            }
+            FaultKind::RedirectorUp { instance } => {
+                fed.redirectors.set_healthy(instance, true);
+            }
+        }
+    }
+
+    /// Cancel a session's in-flight flow (if any) and account the
+    /// wasted bytes it had already moved.
+    fn cancel_session_flow(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        if let Some(flow) = self.sessions[id.0 as usize].flow.take() {
+            self.flow_owner.remove(&flow);
+            if let Some(left) = fed.net.cancel_flow(flow, t) {
+                let size = self.sessions[id.0 as usize].file.size.as_u64().max(1);
+                self.stats.aborted_bytes += size.saturating_sub(left.min(size));
+            }
+        }
+    }
+
+    /// A session's transfer was aborted mid-flight (its flow is already
+    /// gone): release reserved chunks, wake joiners so they re-plan,
+    /// and fail the session over.
+    fn on_flow_aborted(
+        &mut self,
+        fed: &mut FedSim,
+        id: SessionId,
+        t: SimTime,
+        exclude: Option<usize>,
+    ) {
+        self.sessions[id.0 as usize].failovers += 1;
+        self.stats.failovers += 1;
+        if let Phase::Transfer(Xfer::StashFetch) = self.sessions[id.0 as usize].phase {
+            let (cache_site, path, version, plan) = {
+                let s = &mut self.sessions[id.0 as usize];
+                (
+                    s.cache_site.expect("stash fetch has a cache"),
+                    s.file.path.clone(),
+                    s.file.version,
+                    s.plan.take().expect("fetch had a plan"),
+                )
+            };
+            fed.caches
+                .get_mut(&cache_site)
+                .expect("cache site")
+                .abort_fetch(&path, version, &plan.fetch);
+            self.wake_waiters(cache_site, &path, t);
+        }
+        self.fail_session(fed, id, t, exclude);
+    }
+
+    /// Re-plan a failed session: exclude the cache it failed against,
+    /// pay a fresh resolution latency, and re-enter `GeoResolve` (or
+    /// `ProxyLookup`). After [`MAX_FAILOVER_RETRIES`] attempts the
+    /// session gives up on caches and streams from the origin.
+    fn fail_session(
+        &mut self,
+        fed: &mut FedSim,
+        id: SessionId,
+        t: SimTime,
+        exclude: Option<usize>,
+    ) {
+        self.stats.retries += 1;
+        let (method, transport, retries) = {
+            let s = &mut self.sessions[id.0 as usize];
+            if let Some(site) = exclude {
+                if !s.excluded_caches.contains(&site) {
+                    s.excluded_caches.push(site);
+                }
+            }
+            s.retries += 1;
+            s.plan = None;
+            s.flow = None;
+            s.cache_site = None;
+            (s.method, s.transport, s.retries)
+        };
+        let attempt = retries.min(8) as usize;
+        let give_up = retries > MAX_FAILOVER_RETRIES;
+        let (phase, delay) = if give_up {
+            (
+                Phase::DirectConnect,
+                stashcp::startup_latency(&fed.startup_costs, Method::HttpOrigin, attempt),
+            )
+        } else {
+            match method {
+                DownloadMethod::Stash => (
+                    Phase::GeoResolve,
+                    stashcp::startup_latency(&fed.startup_costs, transport, attempt),
+                ),
+                DownloadMethod::HttpProxy => (
+                    Phase::ProxyLookup,
+                    stashcp::startup_latency(&fed.startup_costs, Method::HttpProxy, attempt),
+                ),
+            }
+        };
+        self.sessions[id.0 as usize].phase = phase;
+        if give_up {
+            self.mark_direct(id);
+        }
+        self.queue.schedule_at(t + delay, EngineEvent::Timer(id));
+    }
+
+    /// Drop a session onto the direct-to-origin path (no cache is
+    /// reachable at all). Priced like the give-up path in
+    /// [`SessionEngine::fail_session`]: curl startup plus a fresh
+    /// connection per attempt.
+    fn enter_direct_fallback(&mut self, fed: &FedSim, id: SessionId, t: SimTime) {
+        let attempt = {
+            let s = &mut self.sessions[id.0 as usize];
+            s.phase = Phase::DirectConnect;
+            s.retries.min(8) as usize
+        };
+        self.mark_direct(id);
+        let delay = stashcp::startup_latency(&fed.startup_costs, Method::HttpOrigin, attempt);
+        self.queue.schedule_at(t + delay, EngineEvent::Timer(id));
+    }
+
+    /// Record that a session gave up on caches (counted once per
+    /// session no matter how it reached the direct path).
+    fn mark_direct(&mut self, id: SessionId) {
+        let s = &mut self.sessions[id.0 as usize];
+        if !s.direct {
+            s.direct = true;
+            self.stats.direct_fallbacks += 1;
         }
     }
 
@@ -273,15 +542,25 @@ impl SessionEngine {
             Phase::FetchBegin => self.fetch_begin(fed, id, t),
             Phase::ProxyLookup => self.proxy_lookup(fed, id, t),
             Phase::ProxyConnect => self.proxy_connect(fed, id, t),
+            Phase::DirectConnect => self.direct_connect(fed, id, t),
+            Phase::DirectFetch => self.direct_fetch(fed, id, t),
             phase => unreachable!("timer fired for session {id:?} in phase {phase:?}"),
         }
     }
 
-    /// (stash) Startup paid: GeoIP nearest-cache decision, then the
-    /// connection round trip to that cache.
+    /// (stash) Startup paid: GeoIP nearest-cache decision (skipping
+    /// down caches and caches this session already failed against),
+    /// then the connection round trip to that cache.
     fn geo_resolve(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
-        let site_idx = self.sessions[id.0 as usize].site_idx;
-        let cache_site = fed.nearest_cache_site(site_idx);
+        let (site_idx, excluded) = {
+            let s = &self.sessions[id.0 as usize];
+            (s.site_idx, s.excluded_caches.clone())
+        };
+        let Some(cache_site) = fed.nearest_cache_site_filtered(site_idx, &excluded) else {
+            // Every cache is excluded or down: stream from the origin.
+            self.enter_direct_fallback(fed, id, t);
+            return;
+        };
         let route = fed
             .topo
             .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
@@ -309,6 +588,13 @@ impl SessionEngine {
                 s.origin,
             )
         };
+        // The cache may have died while we were connecting (or while
+        // parked in JoinWait): a refused connection fails the session
+        // over to the next-nearest cache.
+        if fed.faults.is_cache_down(cache_site) {
+            self.fail_session(fed, id, t, Some(cache_site));
+            return;
+        }
         let cache = fed.caches.get_mut(&cache_site).expect("cache site");
         let plan = cache.plan_read(&path, 0, size, size, version, t);
         let per_conn = cache.cfg.per_conn_gbps * 1e9 / 8.0;
@@ -327,6 +613,11 @@ impl SessionEngine {
             let route = fed
                 .topo
                 .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
+            if !route_is_up(fed, &route.links) {
+                // The serve path is severed: treat like a dead cache.
+                self.fail_session(fed, id, t, Some(cache_site));
+                return;
+            }
             let flow = fed.net.start_flow(
                 FlowSpec {
                     path: route.links,
@@ -353,8 +644,21 @@ impl SessionEngine {
                 .or_default()
                 .push(id);
         } else {
-            // Miss: reserve the chunks *now* (before the discovery
-            // round trips) so any session planning inside that window
+            // Miss. The cache consults the redirector, which broadcasts
+            // to origins (one WAN round trip to the redirector + one to
+            // the origins). If every redirector instance is down the
+            // fetch cannot be located — back off and retry (chunks are
+            // not yet reserved, so nothing needs unwinding).
+            let located = match fed.redirectors.locate(&path, &mut fed.origins, t) {
+                Ok(outcome) => outcome.expect("file registered at an origin"),
+                Err(_) => {
+                    self.fail_session(fed, id, t, None);
+                    return;
+                }
+            };
+            debug_assert_eq!(located.origin, origin);
+            // Reserve the chunks *now* (before the discovery round
+            // trips elapse) so any session planning inside that window
             // joins this fetch instead of duplicating origin traffic.
             // Timing-neutral for serial runs: nothing observes the
             // in-flight bits between plan and fetch start there.
@@ -362,15 +666,6 @@ impl SessionEngine {
                 .get_mut(&cache_site)
                 .expect("cache site")
                 .begin_fetch(&path, version, &plan.fetch);
-            // The cache consults the redirector, which broadcasts to
-            // origins (one WAN round trip to the redirector + one to
-            // the origins).
-            let located = fed
-                .redirectors
-                .locate(&path, &mut fed.origins, t)
-                .expect("redirector pool up")
-                .expect("file registered at an origin");
-            debug_assert_eq!(located.origin, origin);
             let origin_route = fed
                 .topo
                 .route(Endpoint::Origin(origin.0), Endpoint::Cache(cache_site));
@@ -397,6 +692,11 @@ impl SessionEngine {
                 s.per_conn,
             )
         };
+        // The cache may have died during the discovery round trips.
+        if fed.faults.is_cache_down(cache_site) {
+            self.abort_reserved_fetch(fed, id, t, cache_site);
+            return;
+        }
         let origin_route = fed
             .topo
             .route(Endpoint::Origin(origin.0), Endpoint::Cache(cache_site));
@@ -405,6 +705,10 @@ impl SessionEngine {
             .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
         let mut links = origin_route.links;
         links.extend(&cache_route.links);
+        if !route_is_up(fed, &links) {
+            self.abort_reserved_fetch(fed, id, t, cache_site);
+            return;
+        }
         let flow = fed.net.start_flow(
             FlowSpec {
                 path: links,
@@ -417,6 +721,31 @@ impl SessionEngine {
         let s = &mut self.sessions[id.0 as usize];
         s.flow = Some(flow);
         s.phase = Phase::Transfer(Xfer::StashFetch);
+    }
+
+    /// A reserved (pinned) fetch cannot start: release the
+    /// reservation, wake joiners so they re-plan, and fail over.
+    fn abort_reserved_fetch(
+        &mut self,
+        fed: &mut FedSim,
+        id: SessionId,
+        t: SimTime,
+        cache_site: usize,
+    ) {
+        let (path, version, plan) = {
+            let s = &mut self.sessions[id.0 as usize];
+            (
+                s.file.path.clone(),
+                s.file.version,
+                s.plan.take().expect("fetch had a plan"),
+            )
+        };
+        fed.caches
+            .get_mut(&cache_site)
+            .expect("cache site")
+            .abort_fetch(&path, version, &plan.fetch);
+        self.wake_waiters(cache_site, &path, t);
+        self.fail_session(fed, id, t, Some(cache_site));
     }
 
     /// (proxy) curl startup paid: squid lookup, then connection
@@ -467,6 +796,13 @@ impl SessionEngine {
             let s = &self.sessions[id.0 as usize];
             (s.relay_links.clone(), s.file.size.as_u64(), s.relay_cap)
         };
+        if !route_is_up(fed, &links) {
+            // A cut link broke the relay path: retry the lookup after
+            // a backoff (curl reconnects; bounded by the direct-origin
+            // fallback like every other retry path).
+            self.fail_session(fed, id, t, None);
+            return;
+        }
         let flow = fed.net.start_flow(
             FlowSpec {
                 path: links,
@@ -479,6 +815,64 @@ impl SessionEngine {
         let s = &mut self.sessions[id.0 as usize];
         s.flow = Some(flow);
         s.phase = Phase::Transfer(Xfer::ProxyRelay);
+    }
+
+    /// (fallback) Connect straight to the origin. If the direct path
+    /// itself is cut there is nothing left to fail over to: poll for
+    /// the link to heal.
+    fn direct_connect(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        let (site_idx, origin) = {
+            let s = &self.sessions[id.0 as usize];
+            (s.site_idx, s.origin)
+        };
+        let route = fed
+            .topo
+            .route(Endpoint::Origin(origin.0), Endpoint::Worker(site_idx));
+        if !route_is_up(fed, &route.links) {
+            self.stats.retries += 1;
+            self.sessions[id.0 as usize].retries += 1;
+            self.queue
+                .schedule_at(t + DIRECT_RETRY_BACKOFF, EngineEvent::Timer(id));
+            return;
+        }
+        self.sessions[id.0 as usize].phase = Phase::DirectFetch;
+        self.queue.schedule_at(
+            t + Duration::from_secs_f64(2.0 * route.rtt_ms / 1e3),
+            EngineEvent::Timer(id),
+        );
+    }
+
+    /// (fallback) Request round trips paid: stream origin → worker.
+    fn direct_fetch(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
+        let (site_idx, origin, size) = {
+            let s = &self.sessions[id.0 as usize];
+            (s.site_idx, s.origin, s.file.size.as_u64())
+        };
+        let route = fed
+            .topo
+            .route(Endpoint::Origin(origin.0), Endpoint::Worker(site_idx));
+        if !route_is_up(fed, &route.links) {
+            // Cut during the round trips: back to polling.
+            self.stats.retries += 1;
+            let s = &mut self.sessions[id.0 as usize];
+            s.retries += 1;
+            s.phase = Phase::DirectConnect;
+            self.queue
+                .schedule_at(t + DIRECT_RETRY_BACKOFF, EngineEvent::Timer(id));
+            return;
+        }
+        let flow = fed.net.start_flow(
+            FlowSpec {
+                path: route.links,
+                bytes: size.max(1),
+                rate_cap: None,
+            },
+            t,
+        );
+        self.flow_owner.insert(flow, id);
+        let s = &mut self.sessions[id.0 as usize];
+        s.flow = Some(flow);
+        s.phase = Phase::Transfer(Xfer::DirectOrigin);
     }
 
     /// A session's flow finished at `t`: post-transfer bookkeeping,
@@ -546,6 +940,14 @@ impl SessionEngine {
                 }
                 self.finish(id, t, Method::HttpProxy);
             }
+            Xfer::DirectOrigin => {
+                let (origin, size) = {
+                    let s = &self.sessions[id.0 as usize];
+                    (s.origin, s.file.size.as_u64())
+                };
+                fed.origins[origin.0].bytes_served += size;
+                self.finish(id, t, Method::HttpOrigin);
+            }
         }
     }
 
@@ -588,6 +990,8 @@ impl SessionEngine {
         let s = &mut self.sessions[id.0 as usize];
         let cache_hit = match method {
             Method::HttpProxy => s.proxy_hit,
+            // Direct-to-origin never touched a cache's copy.
+            Method::HttpOrigin => false,
             _ => s.initial_hit,
         };
         s.record = Some(TransferRecord {

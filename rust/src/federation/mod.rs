@@ -40,6 +40,7 @@ use crate::cache::CacheServer;
 use crate::client::stashcp::{HostEnvironment, StartupCosts};
 use crate::client::TransferRecord;
 use crate::config::FederationConfig;
+use crate::fault::{FaultEvent, FaultState, FaultTimeline};
 use crate::geoip::{CacheSite, NearestCache};
 use crate::monitoring::aggregator::Aggregator;
 use crate::monitoring::bus::{Bus, Subscription};
@@ -53,7 +54,7 @@ use crate::redirector::RedirectorPool;
 use crate::sim::workload::FileRef;
 use crate::util::{Pcg64, SimTime};
 use backend::GeoBackend;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// How a download is performed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,6 +99,15 @@ pub struct FedSim {
     rng: Pcg64,
     /// Active background flows: flow → (origin_idx, link rebuilt on completion).
     background: HashMap<FlowId, usize>,
+    /// Background flows waiting for their origin's link to be restored.
+    deferred_background: Vec<usize>,
+    /// Live component-health view (down caches, downtime ledger).
+    pub faults: FaultState,
+    /// Scheduled faults not yet applied, sorted by time. Engines
+    /// driving this federation pop and apply them as they come due.
+    fault_schedule: VecDeque<FaultEvent>,
+    /// Faults applied so far, at their effective instants.
+    pub fault_log: Vec<FaultEvent>,
     next_user_id: u32,
     next_file_id: u32,
     /// Client tool costs (overridable for ablations).
@@ -174,6 +184,10 @@ impl FedSim {
             now: SimTime::ZERO,
             rng,
             background: HashMap::new(),
+            deferred_background: Vec::new(),
+            faults: FaultState::default(),
+            fault_schedule: VecDeque::new(),
+            fault_log: Vec::new(),
             next_user_id: 1,
             next_file_id: 1,
             startup_costs: StartupCosts::default(),
@@ -211,6 +225,35 @@ impl FedSim {
         oid
     }
 
+    // --- fault injection ----------------------------------------------------
+
+    /// Schedule a fault timeline against this federation. Events apply
+    /// at their instants while *any* engine is driving virtual time
+    /// (serial [`FedSim::download`] calls, campaigns, scenarios); an
+    /// event whose time has already passed when the next engine starts
+    /// is applied immediately at that engine's clock. May be called
+    /// repeatedly — the schedule stays sorted by time (ties keep
+    /// injection order).
+    pub fn inject_faults(&mut self, timeline: &FaultTimeline) {
+        self.fault_schedule.extend(timeline.events().iter().copied());
+        let mut v: Vec<FaultEvent> = self.fault_schedule.drain(..).collect();
+        v.sort_by_key(|e| e.at); // stable: equal instants keep order
+        self.fault_schedule = v.into();
+    }
+
+    /// Scheduled faults not yet applied.
+    pub fn pending_faults(&self) -> usize {
+        self.fault_schedule.len()
+    }
+
+    pub(crate) fn next_fault_at(&self) -> Option<SimTime> {
+        self.fault_schedule.front().map(|e| e.at)
+    }
+
+    pub(crate) fn pop_fault(&mut self) -> Option<FaultEvent> {
+        self.fault_schedule.pop_front()
+    }
+
     // --- background origin load --------------------------------------------
 
     /// Start `n` persistent flows on every origin's DTN link.
@@ -230,6 +273,9 @@ impl FedSim {
         for &origin_idx in self.background.values() {
             have[origin_idx] += 1;
         }
+        for &origin_idx in &self.deferred_background {
+            have[origin_idx] += 1;
+        }
         for o in 0..self.origins.len() {
             for _ in have[o]..n {
                 self.spawn_background(o);
@@ -238,6 +284,13 @@ impl FedSim {
     }
 
     fn spawn_background(&mut self, origin_idx: usize) {
+        // A cut DTN link cannot carry background load: park the flow
+        // until the link is restored (no RNG draw, so the deferral
+        // leaves other origins' streams untouched).
+        if !self.net.link_is_up(self.topo.origin_lan_link(origin_idx)) {
+            self.deferred_background.push(origin_idx);
+            return;
+        }
         // Other users of the Stash filesystem pulling large datasets.
         // They contend on the origin's DTN link only — their own
         // last-mile legs are elsewhere and uncongested. Sizes are
@@ -254,6 +307,18 @@ impl FedSim {
             self.now,
         );
         self.background.insert(flow, origin_idx);
+    }
+
+    /// Retry background flows parked on cut links (called when a link
+    /// is restored; flows whose links are still down re-park).
+    pub(crate) fn respawn_deferred_background(&mut self) {
+        if self.deferred_background.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.deferred_background);
+        for origin_idx in pending {
+            self.spawn_background(origin_idx);
+        }
     }
 
     /// Advance virtual time to `t`, restarting background flows as
@@ -287,7 +352,21 @@ impl FedSim {
 
     /// Pick the nearest cache for a worker at `site_idx`, given live
     /// cache load factors (the CVMFS GeoIP API call stashcp makes).
+    /// Panics if every cache in the federation is down.
     pub fn nearest_cache_site(&mut self, site_idx: usize) -> usize {
+        self.nearest_cache_site_filtered(site_idx, &[])
+            .expect("no cache in the federation is up")
+    }
+
+    /// Like [`FedSim::nearest_cache_site`], but skipping `excluded`
+    /// sites (caches a retrying client already failed against) and any
+    /// cache that is currently down ([`FaultState`]). `None` when no
+    /// cache remains — the caller must fall back to the origin.
+    pub fn nearest_cache_site_filtered(
+        &mut self,
+        site_idx: usize,
+        excluded: &[usize],
+    ) -> Option<usize> {
         let s = &self.cfg.sites[site_idx];
         let loads: Vec<f64> = self
             .geo_cache_sites
@@ -295,7 +374,10 @@ impl FedSim {
             .map(|idx| self.caches[idx].load_factor())
             .collect();
         let ranked = self.geoip.rank(s.lat, s.lon, &loads);
-        self.geo_cache_sites[ranked[0].0]
+        ranked
+            .iter()
+            .map(|&(i, _)| self.geo_cache_sites[i])
+            .find(|site| !excluded.contains(site) && !self.faults.is_cache_down(*site))
     }
 
     // --- monitoring --------------------------------------------------------

@@ -18,6 +18,13 @@
 //! session whose missing chunks are *already being fetched* by another
 //! concurrent session parks until that fetch commits, then re-plans —
 //! the cache's chunk-level miss coalescing working across clients.
+//!
+//! Under fault injection ([`crate::fault`]) any phase can fail: a dead
+//! cache or cut link aborts the transfer, the session re-enters
+//! `GeoResolve` with that cache excluded, and after
+//! [`crate::fault::MAX_FAILOVER_RETRIES`] attempts (or when no cache is
+//! reachable at all) it drops to the `DirectConnect → DirectFetch →
+//! Transfer(DirectOrigin)` last-resort path straight to the origin.
 
 use crate::cache::ReadPlan;
 use crate::client::{Method, TransferRecord};
@@ -41,6 +48,10 @@ pub enum Xfer {
     StashFetch,
     /// Proxy relay: (origin →) proxy → worker.
     ProxyRelay,
+    /// Last-resort fallback: origin → worker directly, bypassing every
+    /// cache and proxy (after repeated failovers, or when no cache is
+    /// reachable at all).
+    DirectOrigin,
 }
 
 /// Session state: what the *next* event for this session means.
@@ -64,6 +75,13 @@ pub enum Phase {
     ProxyLookup,
     /// (proxy) Waiting for connection establishment to the proxy.
     ProxyConnect,
+    /// (fallback) No cache or proxy can serve this session: connect to
+    /// the origin directly. Re-entered (after a backoff) while the
+    /// direct path itself is cut.
+    DirectConnect,
+    /// (fallback) Connected to the origin; start the direct stream once
+    /// the request round trips have elapsed.
+    DirectFetch,
     /// Bytes moving: waiting for the flow completion.
     Transfer(Xfer),
     /// Finished; `record` is populated.
@@ -99,6 +117,17 @@ pub struct Session {
     pub(crate) per_conn: f64,
     /// Times this session parked in `JoinWait` (coalescing observability).
     pub joins: u32,
+
+    // --- failover state ---------------------------------------------------
+    /// Caches this session failed against (excluded from re-resolution).
+    pub excluded_caches: Vec<usize>,
+    /// Mid-transfer aborts survived (cache death, link cut).
+    pub failovers: u32,
+    /// Re-resolution attempts after any failure (failovers, dead caches
+    /// discovered at connect time, redirector outages).
+    pub retries: u32,
+    /// Has this session given up on caches (direct-to-origin path)?
+    pub(crate) direct: bool,
 
     // --- proxy path state -------------------------------------------------
     pub(crate) url: String,
@@ -136,6 +165,10 @@ impl Session {
             plan: None,
             per_conn: 0.0,
             joins: 0,
+            excluded_caches: Vec::new(),
+            failovers: 0,
+            retries: 0,
+            direct: false,
             url: String::new(),
             proxy_hit: false,
             cacheable: false,

@@ -21,6 +21,10 @@
 //! The evaluation baseline — site squid HTTP forward proxies — is in
 //! [`proxy`]. Usage accounting flows through the XRootD-style
 //! [`monitoring`] pipeline (UDP packets → collector → bus → aggregator).
+//! Scheduled component failures — cache hosts, links, origins,
+//! redirector instances dying mid-transfer — live in [`fault`] and are
+//! applied by the session engine as first-class events; sessions fail
+//! over across caches and, as a last resort, stream from the origin.
 //!
 //! Because the paper's testbed is the production OSG WAN, the links and
 //! sites are reproduced by a deterministic flow-level discrete-event
@@ -37,6 +41,7 @@
 pub mod cache;
 pub mod client;
 pub mod config;
+pub mod fault;
 pub mod federation;
 pub mod geoip;
 pub mod live;

@@ -1,0 +1,114 @@
+//! Availability accounting: the fault layer's counters, shaped for the
+//! paper report's availability section.
+//!
+//! Production StashCache operations (and the OSDF follow-up monitoring
+//! work) track exactly these quantities: how long each cache was dark,
+//! how many transfers had to fail over, and how much transferred work
+//! was thrown away. A chaos campaign
+//! ([`crate::sim::campaign::run_with_faults`]) assembles one
+//! [`AvailabilityReport`] from the engine's counters and the
+//! federation's [`crate::fault::FaultState`] downtime ledger;
+//! [`crate::report::paper::availability_table`] renders it.
+
+use crate::util::Duration;
+
+/// Availability of one cache over an observation window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheAvailability {
+    pub site: String,
+    /// Outages that started during the window.
+    pub outages: u32,
+    /// Accumulated downtime (open outages counted to the window end).
+    pub downtime: Duration,
+}
+
+impl CacheAvailability {
+    /// Fraction of `window` the cache was serving, in [0, 1].
+    pub fn availability(&self, window: Duration) -> f64 {
+        if window.as_micros() == 0 {
+            return 1.0;
+        }
+        1.0 - (self.downtime.as_secs_f64() / window.as_secs_f64()).min(1.0)
+    }
+}
+
+/// Fault-layer counters over one run: the availability section of the
+/// report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AvailabilityReport {
+    /// Observation window: the run span from fault injection to the
+    /// last completion. Downtime is measured on the same clock, so
+    /// `downtime <= window` always holds.
+    pub window: Duration,
+    /// Per-cache downtime, in site order.
+    pub caches: Vec<CacheAvailability>,
+    /// Fault events applied during the run.
+    pub faults_applied: u64,
+    /// Mid-transfer aborts survived (flow cancelled, session re-planned).
+    pub failovers: u64,
+    /// Session re-resolution attempts after any failure.
+    pub retries: u64,
+    /// Bytes already transferred by flows that were then aborted.
+    pub aborted_bytes: u64,
+    /// Sessions that gave up on caches and streamed from the origin.
+    pub direct_fallbacks: u64,
+    /// Downloads that completed (a chaos run completes all of them or
+    /// panics — this equals the job count, never less).
+    pub downloads_completed: u64,
+}
+
+impl AvailabilityReport {
+    /// Mean cache availability over the window (1.0 when no cache has
+    /// downtime — or when there are no caches at all).
+    pub fn mean_availability(&self) -> f64 {
+        if self.caches.is_empty() {
+            return 1.0;
+        }
+        self.caches
+            .iter()
+            .map(|c| c.availability(self.window))
+            .sum::<f64>()
+            / self.caches.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn availability_math() {
+        let c = CacheAvailability {
+            site: "syracuse".into(),
+            outages: 1,
+            downtime: Duration::from_secs(25),
+        };
+        assert!((c.availability(Duration::from_secs(100)) - 0.75).abs() < 1e-12);
+        // Downtime longer than the window clamps to zero.
+        assert_eq!(c.availability(Duration::from_secs(10)), 0.0);
+        // Degenerate window: vacuously available.
+        assert_eq!(c.availability(Duration::ZERO), 1.0);
+    }
+
+    #[test]
+    fn mean_availability_averages_caches() {
+        let report = AvailabilityReport {
+            window: Duration::from_secs(100),
+            caches: vec![
+                CacheAvailability {
+                    site: "a".into(),
+                    outages: 1,
+                    downtime: Duration::from_secs(50),
+                },
+                CacheAvailability {
+                    site: "b".into(),
+                    outages: 0,
+                    downtime: Duration::ZERO,
+                },
+            ],
+            ..AvailabilityReport::default()
+        };
+        assert!((report.mean_availability() - 0.75).abs() < 1e-12);
+        assert_eq!(AvailabilityReport::default().mean_availability(), 1.0);
+    }
+}

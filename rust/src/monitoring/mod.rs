@@ -21,8 +21,11 @@
 //! * [`bus`] — the message bus between collector and consumers.
 //! * [`aggregator`] — the "database": per-experiment usage (Table 1),
 //!   file-size percentiles (Table 2), weekly usage series (Figure 4).
+//! * [`availability`] — fault-layer counters (per-cache downtime,
+//!   failovers, retries, aborted bytes) for the chaos reports.
 
 pub mod aggregator;
+pub mod availability;
 pub mod bus;
 pub mod collector;
 pub mod json;

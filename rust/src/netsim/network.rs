@@ -37,6 +37,11 @@ pub struct FlowSpec {
 #[derive(Debug)]
 struct Link {
     capacity: f64, // bytes/sec
+    /// Degradation factor in (0, 1]: effective capacity is
+    /// `capacity * factor` (origin brownouts, failure injection).
+    factor: f64,
+    /// Severed links carry no flows and reject new ones until restored.
+    up: bool,
     /// Active flows on this link (kept sorted for determinism).
     flows: Vec<FlowId>,
     /// Cumulative bytes that have traversed this link.
@@ -86,6 +91,8 @@ impl Network {
         assert!(gbps > 0.0 && gbps.is_finite());
         self.links.push(Link {
             capacity: gbps * 1e9 / 8.0,
+            factor: 1.0,
+            up: true,
             flows: Vec::new(),
             bytes_carried: 0.0,
         });
@@ -137,6 +144,10 @@ impl Network {
         path.dedup();
         for l in &path {
             assert!((l.0 as usize) < self.links.len(), "unknown link {l:?}");
+            assert!(
+                self.links[l.0 as usize].up,
+                "starting a flow over a down link {l:?}"
+            );
         }
         self.reconcile(now);
         let id = FlowId(self.next_flow);
@@ -167,6 +178,52 @@ impl Network {
         }
         self.dirty = true;
         Some(f.remaining.ceil() as u64)
+    }
+
+    /// Sever a link (failure injection): every flow crossing it is
+    /// killed and returned (with its remaining bytes, in `FlowId`
+    /// order), surviving flows are re-allocated max-min fairly, and new
+    /// flows may not use the link until [`Network::restore_link`].
+    pub fn cut_link(&mut self, link: LinkId, now: SimTime) -> Vec<(FlowId, u64)> {
+        self.reconcile(now);
+        let li = link.0 as usize;
+        let mut ids = self.links[li].flows.clone();
+        ids.sort_unstable();
+        let mut killed = Vec::with_capacity(ids.len());
+        for id in ids {
+            let f = self.flows.remove(&id).expect("flow on cut link");
+            for l in &f.path {
+                self.links[l.0 as usize].flows.retain(|&x| x != id);
+            }
+            killed.push((id, f.remaining.ceil() as u64));
+            self.dirty = true;
+        }
+        self.links[li].up = false;
+        killed
+    }
+
+    /// Bring a severed link back up (capacity and degradation factor
+    /// are as they were).
+    pub fn restore_link(&mut self, link: LinkId) {
+        self.links[link.0 as usize].up = true;
+    }
+
+    pub fn link_is_up(&self, link: LinkId) -> bool {
+        self.links[link.0 as usize].up
+    }
+
+    /// Scale a link's effective capacity by `factor` in (0, 1] —
+    /// origin brownouts and partial degradations. `1.0` restores full
+    /// capacity. Progress up to `now` is applied at the old rates
+    /// first; active flows are then re-allocated.
+    pub fn scale_link_capacity(&mut self, link: LinkId, factor: f64, now: SimTime) {
+        assert!(
+            factor > 0.0 && factor <= 1.0 && factor.is_finite(),
+            "capacity factor must be in (0, 1], got {factor}"
+        );
+        self.reconcile(now);
+        self.links[link.0 as usize].factor = factor;
+        self.dirty = true;
     }
 
     /// Earliest projected completion time, if any flow is active.
@@ -297,7 +354,7 @@ impl Network {
             return;
         }
         // Working copies.
-        let mut residual: Vec<f64> = self.links.iter().map(|l| l.capacity).collect();
+        let mut residual: Vec<f64> = self.links.iter().map(|l| l.capacity * l.factor).collect();
         let mut active_on: Vec<usize> = self.links.iter().map(|l| l.flows.len()).collect();
         let mut unfixed: Vec<FlowId> = self.flows.keys().copied().collect();
         unfixed.sort_unstable(); // determinism
@@ -574,6 +631,68 @@ mod tests {
         assert_eq!(left, 10_000 - 500);
         assert!((n.flow_rate(f2) - 1000.0).abs() < 1e-6);
         assert!(n.cancel_flow(f1, SimTime::from_secs_f64(1.0)).is_none());
+    }
+
+    #[test]
+    fn cut_link_kills_crossing_flows_and_blocks_new_ones() {
+        let mut n = Network::new();
+        let l1 = n.add_link_gbps(8e-9 * 1000.0);
+        let l2 = n.add_link_gbps(8e-9 * 1000.0);
+        let f = n.start_flow(
+            FlowSpec { path: vec![l1], bytes: 1000, rate_cap: None },
+            SimTime::ZERO,
+        );
+        let g = n.start_flow(
+            FlowSpec { path: vec![l1, l2], bytes: 2000, rate_cap: None },
+            SimTime::ZERO,
+        );
+        let h = n.start_flow(
+            FlowSpec { path: vec![l2], bytes: 2000, rate_cap: None },
+            SimTime::ZERO,
+        );
+        // Max-min gives every flow 500 B/s; at t=0.5 each moved 250 B.
+        let killed = n.cut_link(l1, SimTime::from_secs_f64(0.5));
+        assert_eq!(killed, vec![(f, 750), (g, 1750)]);
+        assert!(!n.link_is_up(l1));
+        assert_eq!(n.active_flows(), 1);
+        // The survivor re-allocates to the full l2 capacity.
+        assert!((n.flow_rate(h) - 1000.0).abs() < 1e-6);
+        // Restore: new flows may use the link again.
+        n.restore_link(l1);
+        assert!(n.link_is_up(l1));
+        let f2 = n.start_flow(
+            FlowSpec { path: vec![l1], bytes: 1000, rate_cap: None },
+            SimTime::from_secs_f64(0.5),
+        );
+        assert!((n.flow_rate(f2) - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "down link")]
+    fn start_flow_over_cut_link_panics() {
+        let (mut n, l) = net1();
+        n.cut_link(l, SimTime::ZERO);
+        n.start_flow(
+            FlowSpec { path: vec![l], bytes: 10, rate_cap: None },
+            SimTime::ZERO,
+        );
+    }
+
+    #[test]
+    fn degraded_link_slows_then_restores() {
+        let (mut n, l) = net1();
+        let f = n.start_flow(
+            FlowSpec { path: vec![l], bytes: 1000, rate_cap: None },
+            SimTime::ZERO,
+        );
+        n.scale_link_capacity(l, 0.5, SimTime::ZERO);
+        assert!((n.flow_rate(f) - 500.0).abs() < 1e-6);
+        assert_eq!(n.next_completion().unwrap(), SimTime::from_secs_f64(2.0));
+        // Restore at t=1: 500 B left at full rate → done at 1.5 s.
+        n.advance(SimTime::from_secs_f64(1.0));
+        n.scale_link_capacity(l, 1.0, SimTime::from_secs_f64(1.0));
+        assert!((n.flow_rate(f) - 1000.0).abs() < 1e-6);
+        assert_eq!(n.next_completion().unwrap(), SimTime::from_secs_f64(1.5));
     }
 
     #[test]

@@ -153,6 +153,12 @@ impl RedirectorPool {
         self.instances[instance].healthy = healthy;
     }
 
+    /// Instances currently answering (the availability report's view
+    /// of the HA pair).
+    pub fn healthy_count(&self) -> usize {
+        self.instances.iter().filter(|r| r.healthy).count()
+    }
+
     pub fn total_queries(&self) -> u64 {
         self.instances.iter().map(|r| r.queries).sum()
     }

@@ -16,12 +16,21 @@
 //! Everything derives from `Pcg64` streams seeded by
 //! `(federation seed) ^ (campaign seed)`, so identical configs give
 //! bit-identical [`TransferRecord`] streams.
+//!
+//! [`run_with_faults`] is the campaign-with-faults mode: a
+//! [`FaultTimeline`] of cache/link/origin/redirector outages applies
+//! mid-run, sessions fail over, and the results carry the availability
+//! ledger (per-cache downtime, failovers, retries, aborted bytes) next
+//! to the usual records. Fault application is deterministic, so chaos
+//! runs are bit-reproducible too.
 
 use crate::client::TransferRecord;
 use crate::config::defaults::COMPUTE_SITES;
 use crate::config::FederationConfig;
-use crate::federation::driver::SessionEngine;
+use crate::fault::{FaultEvent, FaultTimeline};
+use crate::federation::driver::{EngineStats, SessionEngine};
 use crate::federation::{DownloadMethod, FedSim};
+use crate::monitoring::availability::{AvailabilityReport, CacheAvailability};
 use crate::sim::workload::Catalog;
 use crate::util::{Duration, Pcg64, SimTime, Zipf};
 
@@ -88,10 +97,12 @@ pub struct CampaignResults {
     pub peak_concurrent: usize,
     /// Sessions that coalesced onto another session's origin fetch.
     pub coalesced_joins: u64,
-    /// Engine events processed (timers + completions).
+    /// Engine events processed (timers + completions + faults).
     pub events_processed: u64,
     /// First job arrival to last completion.
     pub makespan: Duration,
+    /// Full engine counters (failovers, retries, aborted bytes, …).
+    pub engine: EngineStats,
 }
 
 impl CampaignResults {
@@ -220,6 +231,90 @@ pub fn run_on(fed: &mut FedSim, ccfg: &CampaignConfig) -> CampaignResults {
         // First arrival → last completion (the idle lead-in before the
         // first Poisson arrival is not campaign time).
         makespan: fed.now - first_arrival.unwrap_or(base),
+        engine: engine.stats,
+    }
+}
+
+/// A campaign run under fault injection, plus the availability ledger.
+#[derive(Debug)]
+pub struct ChaosResults {
+    pub campaign: CampaignResults,
+    /// Faults applied during the run, at their effective instants.
+    pub fault_log: Vec<FaultEvent>,
+    /// Per-cache downtime and the fault-layer counters.
+    pub availability: AvailabilityReport,
+}
+
+/// Run a campaign with a fault timeline on a fresh federation. Every
+/// job still completes — sessions whose cache, link, or redirector
+/// dies mid-transfer fail over to another cache or fall back to the
+/// origin — and identical configs give bit-identical records, fault
+/// logs, and counters.
+pub fn run_with_faults(
+    cfg: FederationConfig,
+    ccfg: &CampaignConfig,
+    faults: &FaultTimeline,
+) -> ChaosResults {
+    let mut fed = FedSim::build(cfg);
+    run_on_with_faults(&mut fed, ccfg, faults)
+}
+
+/// Run a campaign with a fault timeline on an existing federation.
+pub fn run_on_with_faults(
+    fed: &mut FedSim,
+    ccfg: &CampaignConfig,
+    faults: &FaultTimeline,
+) -> ChaosResults {
+    fed.inject_faults(faults);
+    // One time base for the whole availability report: the run span
+    // [start, end]. Faults apply at clamped instants ≥ start, so
+    // downtime deltas can never exceed the window; snapshotting the
+    // ledger means a reused federation reports only *this* run.
+    let start = fed.now;
+    let log_start = fed.fault_log.len();
+    let mut cache_sites: Vec<usize> = fed.caches.keys().copied().collect();
+    cache_sites.sort_unstable();
+    let before: Vec<(u32, Duration)> = cache_sites
+        .iter()
+        .map(|&site| {
+            (
+                fed.faults.outages_of(site),
+                fed.faults.downtime_of(site, start),
+            )
+        })
+        .collect();
+    let campaign = run_on(fed, ccfg);
+    let window = fed.now - start;
+    let caches = cache_sites
+        .iter()
+        .zip(&before)
+        .map(|(&site, &(outages0, downtime0))| CacheAvailability {
+            site: fed.topo.site_name(site).to_string(),
+            outages: fed.faults.outages_of(site) - outages0,
+            downtime: Duration(
+                fed.faults
+                    .downtime_of(site, fed.now)
+                    .0
+                    .saturating_sub(downtime0.0),
+            ),
+        })
+        .collect();
+    let e = campaign.engine;
+    ChaosResults {
+        // Only this run's events — a reused federation keeps its full
+        // history in `fed.fault_log`.
+        fault_log: fed.fault_log[log_start..].to_vec(),
+        availability: AvailabilityReport {
+            window,
+            caches,
+            faults_applied: e.faults_applied,
+            failovers: e.failovers,
+            retries: e.retries,
+            aborted_bytes: e.aborted_bytes,
+            direct_fallbacks: e.direct_fallbacks,
+            downloads_completed: e.sessions_completed,
+        },
+        campaign,
     }
 }
 
@@ -297,6 +392,18 @@ mod tests {
         assert_eq!(a.records, b.records);
         assert_eq!(a.peak_concurrent, b.peak_concurrent);
         assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn empty_fault_timeline_is_identical_to_plain_run() {
+        let plain = run(paper_federation(), &small());
+        let chaos = run_with_faults(paper_federation(), &small(), &FaultTimeline::new());
+        assert_eq!(plain.records, chaos.campaign.records);
+        assert_eq!(plain.events_processed, chaos.campaign.events_processed);
+        assert_eq!(chaos.availability.failovers, 0);
+        assert_eq!(chaos.availability.faults_applied, 0);
+        assert!(chaos.fault_log.is_empty());
+        assert!((chaos.availability.mean_availability() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -116,7 +116,9 @@ pub fn run(cfg: FederationConfig, scenario: &ScenarioConfig) -> ScenarioResults 
 }
 
 /// Run the scenario on an existing federation (callers can inject
-/// failures or swap backends first).
+/// failures — [`FedSim::inject_faults`] — or swap backends first; the
+/// serial downloads apply scheduled faults as they come due, so the
+/// §4.1 cycle keeps completing through cache outages).
 pub fn run_on(fed: &mut FedSim, scenario: &ScenarioConfig) -> ScenarioResults {
     fed.start_background_load(scenario.background_flows);
     let mut results = ScenarioResults::default();
@@ -221,6 +223,39 @@ mod tests {
             let d = r.pct_difference(site, "p01").unwrap();
             assert!(d > 50.0, "{site}: small file pct diff {d} should be ≫ 0");
         }
+    }
+
+    #[test]
+    fn scenario_survives_cache_outage() {
+        use crate::fault::{FaultKind, FaultTimeline};
+        use crate::util::SimTime;
+        let mut fed = FedSim::build(paper_federation());
+        let syr = fed.topo.site_index("syracuse").unwrap();
+        // Syracuse's cache dies almost immediately and never recovers:
+        // the stash passes must fail over to a remote cache, not error.
+        let mut faults = FaultTimeline::new();
+        faults.push(
+            SimTime::from_secs_f64(1.0),
+            FaultKind::CacheDown { site: syr },
+        );
+        fed.inject_faults(&faults);
+        let scenario = ScenarioConfig {
+            sites: vec!["syracuse".into()],
+            files: vec![("p50".into(), ByteSize(467_852_000))],
+            repeats: 1,
+            ..ScenarioConfig::default()
+        };
+        let r = run_on(&mut fed, &scenario);
+        assert_eq!(r.measurements.len(), 4);
+        assert!(r.measurements.iter().all(|m| m.record.bytes > 0));
+        // The hot stash pass still hits — the *remote* cache kept it.
+        let hot = r
+            .measurements
+            .iter()
+            .find(|m| m.tool == "stash" && m.pass == "hot")
+            .unwrap();
+        assert!(hot.record.cache_hit, "failover cache serves the hot pass");
+        assert!(fed.faults.is_cache_down(syr));
     }
 
     #[test]

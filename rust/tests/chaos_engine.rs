@@ -1,0 +1,328 @@
+//! Integration: the fault-timeline chaos engine.
+//!
+//! The contracts under test:
+//!
+//! 1. **Zero failed downloads** — a single-cache outage at peak load
+//!    (the acceptance scenario) completes every job: sessions fail
+//!    over to other caches or fall back to the origin.
+//! 2. **Bit-reproducibility** — the same seed gives identical
+//!    `TransferRecord`s, fault log, and failover counters across runs.
+//! 3. **JoinWait safety** — sessions parked on a fetch that is aborted
+//!    by a mid-transfer cache death are woken and re-plan (never hang).
+//! 4. **Batch-vs-sequential equivalence** — a fault between two
+//!    non-overlapping sessions produces the same records whether the
+//!    sessions run in one engine or as sequential `download` calls.
+//! 5. **Link cuts and brownouts** — severed links kill and re-route
+//!    in-flight flows; degraded origins slow transfers; total
+//!    redirector outages are ridden out by retries.
+
+use stashcache::config::defaults::paper_federation;
+use stashcache::fault::{FaultKind, FaultTimeline};
+use stashcache::federation::driver::SessionEngine;
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::sim::campaign::{self, CampaignConfig};
+use stashcache::sim::workload::FileRef;
+use stashcache::util::{ByteSize, Duration, SimTime};
+
+fn file(path: &str, bytes: u64) -> FileRef {
+    FileRef {
+        path: path.into(),
+        size: ByteSize(bytes),
+        version: 1,
+    }
+}
+
+fn t(s: f64) -> SimTime {
+    SimTime::from_secs_f64(s)
+}
+
+fn chaos_campaign() -> CampaignConfig {
+    CampaignConfig {
+        sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+        jobs: 96,
+        arrival_window_secs: 4.0,
+        catalog_files: 32,
+        zipf_s: 1.1,
+        background_flows: 1,
+        ..CampaignConfig::default()
+    }
+}
+
+/// The acceptance scenario: syracuse's cache dies mid-window (peak
+/// load) and never recovers. Every download still completes, and the
+/// whole run — records, fault log, counters, downtime — is
+/// bit-identical under the same seed.
+#[test]
+fn single_cache_outage_at_peak_load_completes_and_reproduces() {
+    let ccfg = chaos_campaign();
+    let victim_name = "syracuse";
+    let run = || {
+        let mut fed = FedSim::build(paper_federation());
+        let victim = fed.topo.site_index(victim_name).unwrap();
+        let mut faults = FaultTimeline::new();
+        faults.push(t(2.0), FaultKind::CacheDown { site: victim });
+        campaign::run_on_with_faults(&mut fed, &ccfg, &faults)
+    };
+    let r1 = run();
+
+    // Zero failed downloads: every job completed with its full payload.
+    assert_eq!(r1.campaign.records.len(), 96, "every job completes");
+    assert!(r1.campaign.records.iter().all(|r| r.record.bytes > 0));
+    assert_eq!(r1.availability.downloads_completed, 96);
+
+    // The outage actually bit: transfers were aborted mid-flight and
+    // failed over.
+    assert_eq!(r1.availability.faults_applied, 1);
+    assert!(
+        r1.availability.failovers > 0,
+        "peak-load outage must abort in-flight transfers"
+    );
+    assert!(r1.availability.retries >= r1.availability.failovers);
+    assert!(r1.availability.aborted_bytes > 0);
+    let syr = r1
+        .availability
+        .caches
+        .iter()
+        .find(|c| c.site == victim_name)
+        .unwrap();
+    assert_eq!(syr.outages, 1);
+    assert!(
+        syr.downtime.as_secs_f64() > 0.0,
+        "open outage counts to the end of the run"
+    );
+    assert!(syr.availability(r1.availability.window) < 1.0);
+    assert!(r1.availability.mean_availability() < 1.0);
+
+    // Bit-reproducibility of the whole chaos run.
+    let r2 = run();
+    assert_eq!(r1.campaign.records, r2.campaign.records);
+    assert_eq!(r1.fault_log, r2.fault_log);
+    assert_eq!(r1.campaign.engine, r2.campaign.engine);
+    assert_eq!(r1.availability, r2.availability);
+}
+
+/// JoinWait sessions are woken and re-plan when the fetch they joined
+/// is aborted by a mid-transfer cache death — they never leak or hang.
+#[test]
+fn joinwait_woken_and_replans_on_cache_death() {
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("syracuse").unwrap();
+    let f = file("/ospool/des/data/join-abort.dat", 10_000_000_000);
+
+    // A starts the cold fetch at t0 (a 10 GB stream lasts well past
+    // 5 s); B lands at t0+2 s and joins A's in-flight fetch; the cache
+    // dies at 5 s with A mid-transfer and B parked.
+    let mut faults = FaultTimeline::new();
+    faults.push(t(5.0), FaultKind::CacheDown { site });
+    fed.inject_faults(&faults);
+
+    let mut engine = SessionEngine::new(fed.now);
+    let t0 = fed.now;
+    let a = engine.spawn_at(&mut fed, t0, site, f.clone(), DownloadMethod::Stash);
+    let b = engine.spawn_at(
+        &mut fed,
+        t0 + Duration::from_secs(2),
+        site,
+        f,
+        DownloadMethod::Stash,
+    );
+    engine.run(&mut fed);
+
+    assert_eq!(engine.completed().len(), 2, "no session leaks or hangs");
+    assert!(engine.session(b).joins >= 1, "B joined A's fetch");
+    assert!(
+        engine.session(a).failovers >= 1,
+        "A's transfer was aborted mid-flight"
+    );
+    assert!(engine.session(b).retries >= 1, "B re-planned after the abort");
+    assert_eq!(engine.record(a).bytes, 10_000_000_000);
+    assert_eq!(engine.record(b).bytes, 10_000_000_000);
+    // Neither was ultimately served by the dead cache.
+    assert_ne!(engine.session(a).cache_site, Some(site));
+    assert_ne!(engine.session(b).cache_site, Some(site));
+    assert!(engine.stats.aborted_bytes > 0, "A's partial stream was wasted");
+    assert!(fed.faults.is_cache_down(site));
+}
+
+/// A fault between two non-overlapping sessions: one batch engine and
+/// two sequential `download` calls walk the same records.
+#[test]
+fn chaos_batch_vs_sequential_equivalence() {
+    let fa = file("/ospool/nova/data/chaos-serial-a.dat", 200_000_000);
+    let fb = file("/ospool/nova/data/chaos-serial-b.dat", 350_000_000);
+    let gap = t(3_600.0);
+    // Nebraska's cache dies at t=300 s — after the first download
+    // finishes, long before the second arrives.
+    let outage_site = "nebraska";
+    let timeline = |fed: &FedSim| {
+        let mut tl = FaultTimeline::new();
+        tl.push(
+            t(300.0),
+            FaultKind::CacheDown {
+                site: fed.topo.site_index(outage_site).unwrap(),
+            },
+        );
+        tl
+    };
+
+    // Leg 1: sequential convenience API.
+    let mut fed1 = FedSim::build(paper_federation());
+    fed1.start_background_load(2);
+    fed1.inject_faults(&timeline(&fed1));
+    let site = fed1.topo.site_index(outage_site).unwrap();
+    let r1a = fed1.download(site, &fa, DownloadMethod::Stash);
+    fed1.advance_to(gap);
+    let r1b = fed1.download(site, &fb, DownloadMethod::Stash);
+
+    // Leg 2: one engine, both sessions spawned up front.
+    let mut fed2 = FedSim::build(paper_federation());
+    fed2.start_background_load(2);
+    fed2.inject_faults(&timeline(&fed2));
+    let mut engine = SessionEngine::new(fed2.now);
+    let a = engine.spawn_at(&mut fed2, fed2.now, site, fa, DownloadMethod::Stash);
+    let b = engine.spawn_at(&mut fed2, gap, site, fb, DownloadMethod::Stash);
+    engine.run(&mut fed2);
+
+    assert_eq!(r1a, engine.record(a), "pre-outage download identical");
+    assert_eq!(r1b, engine.record(b), "post-outage download identical");
+    // Both legs applied the fault, and the post-outage download went
+    // to a remote cache (nebraska's own cache is dark).
+    assert_eq!(fed1.fault_log.len(), 1);
+    assert_eq!(fed2.fault_log.len(), 1);
+    assert_ne!(engine.session(b).cache_site, Some(site));
+    assert!(!r1b.cache_hit, "failover cache starts cold");
+}
+
+/// A cut WAN link kills the in-flight fetch; the session retries, and
+/// completes once the link heals (via whatever path then works).
+#[test]
+fn wan_cut_mid_fetch_recovers_after_heal() {
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("syracuse").unwrap();
+    let wan = fed.topo.wan_link(site);
+    // Cut syracuse's border link at 2 s (mid cold fetch of a 10 GB
+    // file), heal at 30 s. Until then nothing reaches syracuse at all.
+    let mut faults = FaultTimeline::new();
+    faults.link_outage(wan, t(2.0), t(30.0));
+    fed.inject_faults(&faults);
+
+    let rec = fed.download(
+        site,
+        &file("/ospool/ligo/data/cut.dat", 10_000_000_000),
+        DownloadMethod::Stash,
+    );
+    assert_eq!(rec.bytes, 10_000_000_000);
+    assert!(
+        rec.duration.as_secs_f64() > 28.0,
+        "transfer had to outlast the outage, took {}",
+        rec.duration
+    );
+    assert_eq!(fed.fault_log.len(), 2, "cut and heal both applied");
+    assert!(fed.net.link_is_up(wan));
+}
+
+/// An origin brownout (DTN at 5% capacity) visibly slows a cold fetch
+/// relative to the un-degraded run.
+#[test]
+fn origin_brownout_slows_cold_fetches() {
+    let f = file("/ospool/des/data/brownout.dat", 2_335_000_000);
+    let run = |factor: Option<f64>| {
+        let mut fed = FedSim::build(paper_federation());
+        if let Some(factor) = factor {
+            let origin = fed.namespace.resolve(&f.path).unwrap();
+            let mut faults = FaultTimeline::new();
+            faults.push(
+                SimTime::ZERO,
+                FaultKind::OriginDegraded {
+                    origin: origin.0,
+                    factor,
+                },
+            );
+            fed.inject_faults(&faults);
+        }
+        let site = fed.topo.site_index("bellarmine").unwrap();
+        fed.download(site, &f, DownloadMethod::Stash).duration
+    };
+    let healthy = run(None);
+    let browned = run(Some(0.05));
+    assert!(
+        browned.as_secs_f64() > healthy.as_secs_f64() * 2.0,
+        "brownout must bite: healthy {healthy} vs browned {browned}"
+    );
+}
+
+/// Both redirector instances down when a cold miss needs discovery:
+/// bounded retries, then the direct-to-origin fallback completes the
+/// download without discovery at all. Once an instance recovers, the
+/// next download goes through a cache again.
+#[test]
+fn total_redirector_outage_falls_back_then_recovers() {
+    use stashcache::client::Method;
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("chicago").unwrap();
+    let mut faults = FaultTimeline::new();
+    // Down before the download starts; instance 0 returns at 8 s —
+    // after the first download's bounded retries give up, before the
+    // second download's retries do.
+    faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 0 });
+    faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 1 });
+    faults.push(t(8.0), FaultKind::RedirectorUp { instance: 0 });
+    fed.inject_faults(&faults);
+
+    let r1 = fed.download(
+        site,
+        &file("/ospool/ligo/data/redir-a.dat", 50_000_000),
+        DownloadMethod::Stash,
+    );
+    assert_eq!(r1.bytes, 50_000_000, "outage must not fail the workflow");
+    assert_eq!(
+        r1.method,
+        Method::HttpOrigin,
+        "with discovery dark, the session streams from the origin"
+    );
+    assert!(!r1.cache_hit);
+
+    // The next download retries discovery until instance 0 is back,
+    // then fetches through a cache as usual.
+    let r2 = fed.download(
+        site,
+        &file("/ospool/ligo/data/redir-b.dat", 50_000_000),
+        DownloadMethod::Stash,
+    );
+    assert_eq!(r2.bytes, 50_000_000);
+    assert_eq!(r2.method, Method::Xrootd, "pool recovered; discovery works");
+    assert_eq!(fed.redirectors.healthy_count(), 1);
+}
+
+/// Campaign determinism survives a *restored* outage too (down + up
+/// inside the window): two runs agree event-for-event.
+#[test]
+fn restored_outage_campaign_bit_identical() {
+    let ccfg = CampaignConfig {
+        jobs: 48,
+        arrival_window_secs: 6.0,
+        ..chaos_campaign()
+    };
+    let run = || {
+        let mut fed = FedSim::build(paper_federation());
+        let victim = fed.topo.site_index("chicago").unwrap();
+        let mut faults = FaultTimeline::new();
+        faults.cache_outage(victim, t(2.0), t(4.0));
+        campaign::run_on_with_faults(&mut fed, &ccfg, &faults)
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.campaign.records, r2.campaign.records);
+    assert_eq!(r1.fault_log, r2.fault_log);
+    assert_eq!(r1.availability, r2.availability);
+    assert_eq!(r1.campaign.records.len(), 48);
+    // The chicago cache's ledger shows the closed two-second outage.
+    let chi = r1
+        .availability
+        .caches
+        .iter()
+        .find(|c| c.site == "chicago")
+        .unwrap();
+    assert_eq!(chi.outages, 1);
+    assert_eq!(chi.downtime, Duration::from_secs(2));
+}
