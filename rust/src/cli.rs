@@ -2,6 +2,7 @@
 
 use anyhow::{bail, Context, Result};
 use stashcache::config::{defaults, FederationConfig};
+use stashcache::experiment::{self, GridSpec};
 use stashcache::fault::{FaultKind, FaultTimeline};
 use stashcache::federation::{backend::GeoBackend, DownloadMethod, FedSim};
 use stashcache::report::{self, paper};
@@ -91,6 +92,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "scenario" => cmd_scenario(&flags),
         "campaign" => cmd_campaign(&flags),
         "chaos" => cmd_chaos(&flags),
+        "sweep" => cmd_sweep(&flags),
         "usage" => cmd_usage(&flags),
         "report" => cmd_report(&flags),
         "init-config" => cmd_init_config(&flags),
@@ -103,33 +105,46 @@ pub fn run(args: Vec<String>) -> Result<()> {
     }
 }
 
+/// The usage text. Printed to stdout for `help`, and to **stderr** by
+/// `main` whenever a command fails (unknown subcommand, malformed
+/// flags, runtime errors), ahead of the error itself, so scripts
+/// always get usage next to a non-zero exit and the cause stays the
+/// last line.
+pub fn usage() -> String {
+    "stashcache — StashCache federation reproduction (PEARC '19)\n\n\
+     commands:\n\
+       topology                         show sites, caches, proxies, origins\n\
+       scenario [--sites a,b] [--repeats N] [--runtime rust|pjrt]\n\
+                                        run the §4.1 benchmark (Figs 6-8, Table 3)\n\
+       campaign [--jobs N] [--sites a,b] [--window SECS] [--zipf S]\n\
+                [--catalog N] [--method stash|http] [--seed S]\n\
+                [--experiment NAME] [--background N]\n\
+                                        run N concurrent Poisson/Zipf jobs through\n\
+                                        the session engine (coalescing, contention)\n\
+       chaos    [campaign flags] [--kill-cache SITE [--down-at S] [--up-at S]]\n\
+                [--cut-wan SITE [--cut-at S] [--heal-at S]]\n\
+                [--degrade-origin N [--factor F] [--degrade-at S] [--restore-at S]]\n\
+                [--kill-redirector N [--redir-down-at S] [--redir-up-at S]]\n\
+                                        campaign with mid-transfer faults; sessions\n\
+                                        fail over; prints the availability report\n\
+                                        (default: single-cache outage at peak load)\n\
+       sweep    [--preset smoke|proxy-vs-stash] [--grid PATH.toml]\n\
+                [--threads N] [--reps N] [--seed S] [--out-dir DIR]\n\
+                                        run a deterministic parameter grid in\n\
+                                        parallel; writes BENCH_sweep.json, CSVs and\n\
+                                        the proxy-vs-StashCache frontier report\n\
+       usage --days D [--jobs-per-hour J]\n\
+                                        run a usage simulation (Tables 1-2, Fig 4)\n\
+       report --all --out-dir DIR       regenerate every paper table/figure\n\
+       init-config [PATH]               write an example federation TOML\n\
+       live-demo                        run the real TCP/UDP federation on loopback\n\
+     common flags:\n\
+       --config PATH                    federation TOML (default: built-in paper topology)\n"
+        .to_string()
+}
+
 fn print_help() {
-    println!(
-        "stashcache — StashCache federation reproduction (PEARC '19)\n\n\
-         commands:\n\
-           topology                         show sites, caches, proxies, origins\n\
-           scenario [--sites a,b] [--repeats N] [--runtime rust|pjrt]\n\
-                                            run the §4.1 benchmark (Figs 6-8, Table 3)\n\
-           campaign [--jobs N] [--sites a,b] [--window SECS] [--zipf S]\n\
-                    [--catalog N] [--method stash|http] [--seed S]\n\
-                    [--experiment NAME] [--background N]\n\
-                                            run N concurrent Poisson/Zipf jobs through\n\
-                                            the session engine (coalescing, contention)\n\
-           chaos    [campaign flags] [--kill-cache SITE [--down-at S] [--up-at S]]\n\
-                    [--cut-wan SITE [--cut-at S] [--heal-at S]]\n\
-                    [--degrade-origin N [--factor F] [--degrade-at S] [--restore-at S]]\n\
-                    [--kill-redirector N [--redir-down-at S] [--redir-up-at S]]\n\
-                                            campaign with mid-transfer faults; sessions\n\
-                                            fail over; prints the availability report\n\
-                                            (default: single-cache outage at peak load)\n\
-           usage --days D [--jobs-per-hour J]\n\
-                                            run a usage simulation (Tables 1-2, Fig 4)\n\
-           report --all --out-dir DIR       regenerate every paper table/figure\n\
-           init-config [PATH]               write an example federation TOML\n\
-           live-demo                        run the real TCP/UDP federation on loopback\n\
-         common flags:\n\
-           --config PATH                    federation TOML (default: built-in paper topology)\n"
-    );
+    println!("{}", usage());
 }
 
 fn cmd_topology(flags: &Flags) -> Result<()> {
@@ -184,6 +199,38 @@ fn cmd_scenario(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Validate workload references against the federation: every site
+/// exists (typos get a clean error, not a worker panic), sites carry a
+/// proxy when the http method is in play, and the experiment is known.
+/// Shared by `campaign`, `chaos`, and `sweep`.
+fn validate_workload_refs(
+    cfg: &FederationConfig,
+    sites: &[String],
+    needs_proxy: bool,
+    experiment: &str,
+) -> Result<()> {
+    for name in sites {
+        let site = cfg
+            .site(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown site {name:?} (see `stashcache topology`)"))?;
+        if needs_proxy && site.proxy.is_none() {
+            bail!("site {name:?} has no HTTP proxy (required by the http method)");
+        }
+    }
+    if !cfg.workload.experiments.iter().any(|e| e.name == experiment) {
+        bail!(
+            "unknown experiment {experiment:?} (known: {})",
+            cfg.workload
+                .experiments
+                .iter()
+                .map(|e| e.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    Ok(())
+}
+
 /// Parse the campaign knobs shared by `campaign` and `chaos`.
 fn parse_campaign(flags: &Flags, cfg: &FederationConfig) -> Result<CampaignConfig> {
     let mut ccfg = CampaignConfig::default();
@@ -195,15 +242,8 @@ fn parse_campaign(flags: &Flags, cfg: &FederationConfig) -> Result<CampaignConfi
         "http" => DownloadMethod::HttpProxy,
         other => bail!("--method must be stash|http, got {other:?}"),
     };
-    // Validate sites up front so typos get a clean error, not a panic.
     let mut seen = std::collections::HashSet::new();
     for name in &ccfg.sites {
-        let site = cfg
-            .site(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown site {name:?} (see `stashcache topology`)"))?;
-        if ccfg.method == DownloadMethod::HttpProxy && site.proxy.is_none() {
-            bail!("site {name:?} has no HTTP proxy; use --method stash or another site");
-        }
         if !seen.insert(name.clone()) {
             bail!("duplicate site {name:?} in --sites");
         }
@@ -223,23 +263,12 @@ fn parse_campaign(flags: &Flags, cfg: &FederationConfig) -> Result<CampaignConfi
     if let Some(exp) = flags.get("experiment") {
         ccfg.experiment = exp.to_string();
     }
-    if !cfg
-        .workload
-        .experiments
-        .iter()
-        .any(|e| e.name == ccfg.experiment)
-    {
-        bail!(
-            "unknown experiment {:?} (known: {})",
-            ccfg.experiment,
-            cfg.workload
-                .experiments
-                .iter()
-                .map(|e| e.name.as_str())
-                .collect::<Vec<_>>()
-                .join(", ")
-        );
-    }
+    validate_workload_refs(
+        cfg,
+        &ccfg.sites,
+        ccfg.method == DownloadMethod::HttpProxy,
+        &ccfg.experiment,
+    )?;
     Ok(ccfg)
 }
 
@@ -444,6 +473,83 @@ fn cmd_chaos(flags: &Flags) -> Result<()> {
             cache.eviction_log.first().expect("non-empty").at,
             cache.eviction_log.last().expect("non-empty").at,
         );
+    }
+    Ok(())
+}
+
+/// `stashcache sweep`: expand a parameter grid into trials, run them
+/// across OS threads (bit-identical to a single-threaded run), print
+/// the per-cell summary + frontier, and write the sweep artifacts
+/// (`BENCH_sweep.json`, CSVs, markdown frontier) into `--out-dir`
+/// (default: the current directory, so CI gets a root artifact).
+fn cmd_sweep(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    if flags.has("grid") && flags.has("preset") {
+        bail!("--grid and --preset are mutually exclusive; pick one");
+    }
+    let mut grid = match flags.get("grid") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading grid TOML {path:?}"))?;
+            GridSpec::from_toml(&text)?
+        }
+        None => match flags.get("preset").unwrap_or("smoke") {
+            "smoke" => GridSpec::smoke(),
+            "proxy-vs-stash" => GridSpec::proxy_vs_stash(),
+            other => bail!("--preset must be smoke|proxy-vs-stash, got {other:?}"),
+        },
+    };
+    if flags.has("reps") {
+        grid.reps = flags.get_usize("reps", grid.reps)?;
+    }
+    if flags.has("seed") {
+        grid.root_seed = flags.get_usize("seed", grid.root_seed as usize)? as u64;
+    }
+    grid.validate()?;
+    validate_workload_refs(
+        &cfg,
+        &grid.sites,
+        grid.methods.contains(&DownloadMethod::HttpProxy),
+        &grid.experiment,
+    )?;
+    // Default to every core — trials are hermetic, so the pool scales
+    // until the grid runs out of work (the runner caps workers at the
+    // trial count).
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = flags.get_usize("threads", default_threads)?.max(1);
+
+    println!(
+        "sweep {:?}: {} trials ({} cells × {} rep(s)){} on {} thread(s)",
+        grid.name,
+        grid.trial_count(),
+        grid.trial_count() / grid.reps,
+        grid.reps,
+        if grid.table3_cell { " + Table 3 cell" } else { "" },
+        threads,
+    );
+    let wall_start = std::time::Instant::now();
+    let results = experiment::run_grid(&cfg, &grid, threads);
+    let wall = wall_start.elapsed().as_secs_f64();
+
+    println!("{}", experiment::artifact::cells_table(&results).render());
+    println!("{}", paper::frontier_table(&results).render());
+    if let Some(t3) = &results.table3 {
+        println!("{}", paper::sweep_table3(t3).render());
+    }
+    let events: u64 = results.trials.iter().map(|t| t.events_processed).sum();
+    println!(
+        "{} downloads | {} engine events in {wall:.2}s wall = {:.0} events/s across {threads} thread(s)",
+        results.total_downloads(),
+        events,
+        events as f64 / wall.max(1e-9),
+    );
+
+    let out_dir = PathBuf::from(flags.get("out-dir").unwrap_or("."));
+    let written = experiment::artifact::write_all(&out_dir, &results)?;
+    for path in written {
+        println!("wrote {}", path.display());
     }
     Ok(())
 }

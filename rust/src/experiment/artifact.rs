@@ -1,0 +1,290 @@
+//! Sweep artifacts: `BENCH_sweep.json`, CSVs, and the markdown
+//! frontier report.
+//!
+//! Everything here is a pure function of [`SweepResults`], so the
+//! artifact bytes inherit the runner's determinism guarantee — the
+//! acceptance test compares the JSON string of a 1-thread and an
+//! N-thread run directly. Rendering goes through [`crate::report`]
+//! (`Table` for CSV/markdown, [`crate::report::paper`] for the
+//! frontier and Table 3 views) so `cargo bench`, the CLI, and CI all
+//! emit identical bytes.
+
+use super::grid::method_name;
+use super::summary::SweepResults;
+use crate::report::{self, paper, Table};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Escape a string for JSON (Rust's `{:?}` is close but emits
+/// `\u{...}` braced escapes, which JSON rejects).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Canonical JSON artifact (hand-rolled — no serde offline).
+pub fn sweep_json(results: &SweepResults) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"bench\": \"sweep\",");
+    let _ = writeln!(out, "  \"grid\": {},", json_str(&results.grid.name));
+    let _ = writeln!(out, "  \"root_seed\": {},", results.grid.root_seed);
+    let _ = writeln!(out, "  \"reps\": {},", results.grid.reps);
+    let _ = writeln!(out, "  \"total_downloads\": {},", results.total_downloads());
+    out.push_str("  \"trials\": [\n");
+    for (i, t) in results.trials.iter().enumerate() {
+        // Seeds and digests are full-width u64s: emit them as JSON
+        // *strings*, since bare numbers above 2^53 get silently
+        // rounded by double-based JSON consumers (jq, JavaScript) —
+        // fatal for "re-run this cell with the seed from the
+        // artifact" and for digest comparison.
+        let _ = write!(
+            out,
+            "    {{\"index\": {}, \"cell\": {}, \"rep\": {}, \"seed\": \"{}\", \
+             \"downloads\": {}, \"hit_ratio\": {:.6}, \"origin_bytes\": {}, \
+             \"aggregate_mbps\": {:.4}, \"p50_s\": {:.6}, \"p95_s\": {:.6}, \
+             \"p99_s\": {:.6}, \"makespan_s\": {:.6}, \"peak_concurrent\": {}, \
+             \"coalesced_joins\": {}, \"faults_applied\": {}, \"failovers\": {}, \
+             \"direct_fallbacks\": {}, \"events\": {}, \"records_digest\": \"{}\"}}",
+            t.spec.index,
+            json_str(&t.spec.cell.label()),
+            t.spec.rep,
+            t.spec.seed,
+            t.downloads,
+            t.hit_ratio,
+            t.origin_bytes,
+            t.aggregate_mbps,
+            t.p50_s,
+            t.p95_s,
+            t.p99_s,
+            t.makespan_s,
+            t.peak_concurrent,
+            t.coalesced_joins,
+            t.faults_applied,
+            t.failovers,
+            t.direct_fallbacks,
+            t.events_processed,
+            t.records_digest,
+        );
+        out.push_str(if i + 1 < results.trials.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"cells\": [\n");
+    for (i, c) in results.cells.iter().enumerate() {
+        let m = |out: &mut String, name: &str, metric: &super::summary::Metric, last: bool| {
+            let _ = write!(
+                out,
+                "\"{name}\": {{\"mean\": {:.6}, \"stddev\": {:.6}, \"ci95\": {:.6}}}{}",
+                metric.mean,
+                metric.stddev,
+                metric.ci95,
+                if last { "" } else { ", " },
+            );
+        };
+        let _ = write!(
+            out,
+            "    {{\"cell\": {}, \"method\": {}, \"reps\": {}, ",
+            json_str(&c.cell.label()),
+            json_str(method_name(c.cell.method)),
+            c.reps,
+        );
+        m(&mut out, "hit_ratio", &c.hit_ratio, false);
+        m(&mut out, "origin_gb", &c.origin_gb, false);
+        m(&mut out, "aggregate_mbps", &c.aggregate_mbps, false);
+        m(&mut out, "p50_s", &c.p50_s, false);
+        m(&mut out, "p95_s", &c.p95_s, false);
+        m(&mut out, "p99_s", &c.p99_s, false);
+        m(&mut out, "failovers", &c.failovers, true);
+        out.push('}');
+        out.push_str(if i + 1 < results.cells.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]");
+    if let Some(t3) = &results.table3 {
+        out.push_str(",\n  \"table3\": [\n");
+        for (i, row) in t3.rows.iter().enumerate() {
+            let fmt = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.4}"),
+                None => "null".to_string(),
+            };
+            let _ = write!(
+                out,
+                "    {{\"site\": {}, \"pct_2_3gb\": {}, \"pct_10gb\": {}}}",
+                json_str(&row.site),
+                fmt(row.pct_2_3gb),
+                fmt(row.pct_10gb),
+            );
+            out.push_str(if i + 1 < t3.rows.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]");
+    }
+    out.push_str("\n}\n");
+    out
+}
+
+/// Per-trial flat table (CSV artifact).
+pub fn trials_table(results: &SweepResults) -> Table {
+    let mut t = Table::new(
+        format!("Sweep {:?}: trials", results.grid.name),
+        &[
+            "index", "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "rep",
+            "seed", "downloads", "hit_ratio", "origin_bytes", "aggregate_mbps", "p50_s",
+            "p95_s", "p99_s", "failovers", "digest",
+        ],
+    );
+    for o in &results.trials {
+        let c = &o.spec.cell;
+        t.row(vec![
+            o.spec.index.to_string(),
+            method_name(c.method).to_string(),
+            format!("{:.2}", c.capacity_scale),
+            c.jobs.to_string(),
+            format!("{:.1}", c.arrival_window_secs),
+            format!("{:.2}", c.zipf_s),
+            c.size_profile.name().to_string(),
+            c.fault_profile.name().to_string(),
+            o.spec.rep.to_string(),
+            o.spec.seed.to_string(),
+            o.downloads.to_string(),
+            format!("{:.4}", o.hit_ratio),
+            o.origin_bytes.to_string(),
+            format!("{:.2}", o.aggregate_mbps),
+            format!("{:.4}", o.p50_s),
+            format!("{:.4}", o.p95_s),
+            format!("{:.4}", o.p99_s),
+            o.failovers.to_string(),
+            o.records_digest.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Per-cell summary table (`mean ± ci95`; CSV + terminal artifact).
+pub fn cells_table(results: &SweepResults) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Sweep {:?}: {} cells × {} rep(s)",
+            results.grid.name,
+            results.cells.len(),
+            results.grid.reps,
+        ),
+        &[
+            "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "hit%",
+            "origin GB", "Mbps", "±ci95", "p50 s", "p95 s", "p99 s", "failovers",
+        ],
+    );
+    for c in &results.cells {
+        let k = &c.cell;
+        t.row(vec![
+            method_name(k.method).to_string(),
+            format!("{:.2}", k.capacity_scale),
+            k.jobs.to_string(),
+            format!("{:.1}", k.arrival_window_secs),
+            format!("{:.2}", k.zipf_s),
+            k.size_profile.name().to_string(),
+            k.fault_profile.name().to_string(),
+            format!("{:.1}", 100.0 * c.hit_ratio.mean),
+            format!("{:.2}", c.origin_gb.mean),
+            format!("{:.0}", c.aggregate_mbps.mean),
+            format!("{:.0}", c.aggregate_mbps.ci95),
+            format!("{:.2}", c.p50_s.mean),
+            format!("{:.2}", c.p95_s.mean),
+            format!("{:.2}", c.p99_s.mean),
+            format!("{:.1}", c.failovers.mean),
+        ]);
+    }
+    t
+}
+
+/// Write every sweep artifact under `dir`; returns the paths written.
+///
+/// `BENCH_sweep.json` lands directly in `dir` — CI runs the sweep from
+/// the repository root so the JSON is a root artifact.
+pub fn write_all(dir: &Path, results: &SweepResults) -> std::io::Result<Vec<PathBuf>> {
+    let mut written = Vec::new();
+    let mut emit = |name: &str, content: String| -> std::io::Result<()> {
+        report::write_artifact(dir, name, &content)?;
+        written.push(dir.join(name));
+        Ok(())
+    };
+    emit("BENCH_sweep.json", sweep_json(results))?;
+    emit("sweep_trials.csv", trials_table(results).to_csv())?;
+    emit("sweep_cells.csv", cells_table(results).to_csv())?;
+    let mut frontier = format!(
+        "# Sweep {:?}: HTTP proxy vs StashCache frontier\n\n",
+        results.grid.name
+    );
+    frontier.push_str(&paper::frontier_table(results).to_markdown());
+    if let Some(t3) = &results.table3 {
+        frontier.push('\n');
+        frontier.push_str(&paper::sweep_table3(t3).to_markdown());
+    }
+    emit("sweep_frontier.md", frontier)?;
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+    use crate::experiment::grid::GridSpec;
+    use crate::experiment::runner::run_grid;
+    use crate::federation::DownloadMethod;
+
+    fn small_results() -> SweepResults {
+        let grid = GridSpec {
+            jobs: vec![4],
+            reps: 1,
+            capacity_scales: vec![1.0],
+            methods: vec![DownloadMethod::Stash, DownloadMethod::HttpProxy],
+            fault_profiles: vec![crate::experiment::grid::FaultProfile::None],
+            catalog_files: 16,
+            background_flows: 0,
+            ..GridSpec::smoke()
+        };
+        run_grid(&paper_federation(), &grid, 1)
+    }
+
+    #[test]
+    fn json_carries_every_trial_and_cell() {
+        let r = small_results();
+        let json = sweep_json(&r);
+        assert!(json.contains("\"bench\": \"sweep\""));
+        assert_eq!(json.matches("\"index\":").count(), r.trials.len());
+        assert!(json.contains("records_digest"));
+        // Purely a function of the results: rendering twice is stable.
+        assert_eq!(json, sweep_json(&r));
+    }
+
+    #[test]
+    fn json_strings_escape_properly() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("a\nb\tc"), "\"a\\nb\\tc\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+        // Non-ASCII passes through un-escaped (valid UTF-8 JSON).
+        assert_eq!(json_str("café"), "\"café\"");
+    }
+
+    #[test]
+    fn tables_have_one_row_per_item() {
+        let r = small_results();
+        assert_eq!(trials_table(&r).rows.len(), r.trials.len());
+        assert_eq!(cells_table(&r).rows.len(), r.cells.len());
+        let csv = trials_table(&r).to_csv();
+        assert!(csv.lines().count() == r.trials.len() + 1);
+    }
+}

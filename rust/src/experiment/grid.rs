@@ -1,0 +1,715 @@
+//! Parameter grids: axes → cartesian product of [`TrialSpec`]s.
+//!
+//! A [`GridSpec`] names one value list per experimental axis (client
+//! method, cache capacity scale, client count, arrival window, Zipf
+//! skew, file-size mix, fault profile) plus the shared knobs every
+//! trial inherits (sites, catalog, background load). `trials()`
+//! expands the cartesian product, `reps` innermost, into a flat list
+//! of fully-resolved [`TrialSpec`]s.
+//!
+//! Every trial's campaign seed is **stateless**: a pure hash of the
+//! root seed, the cell's method-excluding label, and the repetition
+//! index. Adding an axis value, reordering axes, or changing `reps`
+//! never perturbs the seed (and therefore the result) of any other
+//! trial — the same property the campaign layer gives per-site RNG
+//! streams — and the stash/http twins of a cell share a seed so the
+//! frontier compares methods on identical workload draws.
+
+use crate::config::toml::{self, Value};
+use crate::federation::DownloadMethod;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Named file-size mixes a cell can run under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeProfile {
+    /// The calibrated Table 2 mixture (the default workload).
+    Paper,
+    /// Software/conditions-style traffic: mostly KB–MB objects (the
+    /// regime §6 says HTTP proxies are optimized for).
+    Small,
+    /// Analysis-dataset traffic: multi-GB files dominate (the regime
+    /// StashCache exists for).
+    Large,
+}
+
+impl SizeProfile {
+    pub fn name(self) -> &'static str {
+        match self {
+            SizeProfile::Paper => "paper",
+            SizeProfile::Small => "small",
+            SizeProfile::Large => "large",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "paper" => Some(SizeProfile::Paper),
+            "small" => Some(SizeProfile::Small),
+            "large" => Some(SizeProfile::Large),
+            _ => None,
+        }
+    }
+
+    /// Override the workload's size distribution (no-op for `Paper`).
+    pub fn apply(self, workload: &mut crate::config::WorkloadConfig) {
+        use crate::config::schema::SizeDistribution;
+        use crate::util::bytes::{GB, KB, MB};
+        match self {
+            SizeProfile::Paper => {}
+            SizeProfile::Small => {
+                workload.size_dist = SizeDistribution {
+                    components: vec![
+                        (0.40, (64.0 * KB as f64).ln(), 1.2),
+                        (0.50, (8.0 * MB as f64).ln(), 0.8),
+                        (0.10, (128.0 * MB as f64).ln(), 0.3),
+                    ],
+                    min: crate::util::ByteSize(512),
+                    max: crate::util::ByteSize::gb(1),
+                };
+            }
+            SizeProfile::Large => {
+                workload.size_dist = SizeDistribution {
+                    components: vec![
+                        (0.10, (476.0 * MB as f64).ln(), 0.10),
+                        (0.60, (2.335 * GB as f64).ln(), 0.05),
+                        (0.30, (6.0 * GB as f64).ln(), 0.20),
+                    ],
+                    min: crate::util::ByteSize::mb(1),
+                    max: crate::util::ByteSize::gb(10),
+                };
+            }
+        }
+    }
+}
+
+/// Named fault schedules a cell can run under. Instants are fractions
+/// of the cell's arrival window, so one profile scales across cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultProfile {
+    /// No faults (the timeline stays empty, so the run is
+    /// timing-identical to a plain campaign).
+    None,
+    /// The first campaign site's nearest cache dies at half the
+    /// arrival window and never recovers (the canonical chaos drill).
+    CacheOutage,
+    /// Origin 0's DTN capacity drops to 25% from 0.1·window to
+    /// 0.9·window.
+    OriginBrownout,
+}
+
+impl FaultProfile {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultProfile::None => "none",
+            FaultProfile::CacheOutage => "cache-outage",
+            FaultProfile::OriginBrownout => "origin-brownout",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "none" => Some(FaultProfile::None),
+            "cache-outage" => Some(FaultProfile::CacheOutage),
+            "origin-brownout" => Some(FaultProfile::OriginBrownout),
+            _ => None,
+        }
+    }
+}
+
+/// Canonical short name of a download method (axis values + labels).
+pub fn method_name(method: DownloadMethod) -> &'static str {
+    match method {
+        DownloadMethod::Stash => "stash",
+        DownloadMethod::HttpProxy => "http",
+    }
+}
+
+pub fn method_from_name(name: &str) -> Option<DownloadMethod> {
+    match name {
+        "stash" => Some(DownloadMethod::Stash),
+        "http" => Some(DownloadMethod::HttpProxy),
+        _ => None,
+    }
+}
+
+/// One point of the grid: the axis values a trial resolves to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellKey {
+    pub method: DownloadMethod,
+    /// Multiplier on every cache's configured capacity.
+    pub capacity_scale: f64,
+    /// Campaign job count (clients).
+    pub jobs: usize,
+    /// Poisson arrival window in seconds (rate = jobs / window).
+    pub arrival_window_secs: f64,
+    pub zipf_s: f64,
+    pub size_profile: SizeProfile,
+    pub fault_profile: FaultProfile,
+}
+
+impl CellKey {
+    /// Canonical label of the cell *excluding* the method axis — the
+    /// key the frontier report pairs proxy and StashCache cells on.
+    pub fn base_label(&self) -> String {
+        format!(
+            "cap={:.2} jobs={} window={:.1} zipf={:.2} sizes={} faults={}",
+            self.capacity_scale,
+            self.jobs,
+            self.arrival_window_secs,
+            self.zipf_s,
+            self.size_profile.name(),
+            self.fault_profile.name(),
+        )
+    }
+
+    /// Canonical label of the full cell (seed material + report rows).
+    pub fn label(&self) -> String {
+        format!("method={} {}", method_name(self.method), self.base_label())
+    }
+}
+
+/// One fully-resolved trial: a cell, a repetition, and its seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialSpec {
+    /// Position in grid order (result slot, independent of execution
+    /// order).
+    pub index: usize,
+    pub cell: CellKey,
+    pub rep: usize,
+    /// Campaign seed, derived statelessly from the root seed.
+    pub seed: u64,
+}
+
+/// SplitMix64 finalizer (good avalanche over the XOR-combined inputs).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Stateless per-trial seed: pure in (root, cell-minus-method, rep).
+///
+/// Deliberately hashes [`CellKey::base_label`] — *excluding* the
+/// method — so the stash and http twins of a frontier pair run the
+/// **identical workload realization** (same Poisson arrivals, same
+/// Zipf file draws). The frontier's %Δ then measures the method, not
+/// workload-draw noise, exactly like §4.1's four-passes-per-file
+/// design.
+pub fn trial_seed(root_seed: u64, cell: &CellKey, rep: usize) -> u64 {
+    let cell_hash = crate::util::fnv1a(cell.base_label().as_bytes());
+    splitmix64(root_seed ^ cell_hash ^ splitmix64(rep as u64 + 1))
+}
+
+/// The sweep description: one value list per axis plus shared knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridSpec {
+    pub name: String,
+    pub root_seed: u64,
+    /// Repetitions per cell (seeds differ per rep).
+    pub reps: usize,
+    // Axes.
+    pub methods: Vec<DownloadMethod>,
+    pub capacity_scales: Vec<f64>,
+    pub jobs: Vec<usize>,
+    pub arrival_windows: Vec<f64>,
+    pub zipf_s: Vec<f64>,
+    pub size_profiles: Vec<SizeProfile>,
+    pub fault_profiles: Vec<FaultProfile>,
+    // Shared trial knobs.
+    pub sites: Vec<String>,
+    pub experiment: String,
+    pub catalog_files: u64,
+    pub files_per_job: (u64, u64),
+    pub background_flows: usize,
+    /// Also run the §4.1 serial scenario once and report its Table 3
+    /// cells next to the campaign cells.
+    pub table3_cell: bool,
+}
+
+impl GridSpec {
+    /// A small default grid for smoke runs and CI: 2 methods ×
+    /// 2 capacities × 2 job counts × 2 fault profiles = 16 trials.
+    pub fn smoke() -> Self {
+        GridSpec {
+            name: "smoke".into(),
+            root_seed: 20190728,
+            reps: 1,
+            methods: vec![DownloadMethod::Stash, DownloadMethod::HttpProxy],
+            capacity_scales: vec![0.25, 1.0],
+            jobs: vec![8, 32],
+            arrival_windows: vec![20.0],
+            zipf_s: vec![1.1],
+            size_profiles: vec![SizeProfile::Paper],
+            fault_profiles: vec![FaultProfile::None, FaultProfile::CacheOutage],
+            sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+            experiment: "gwosc".into(),
+            catalog_files: 64,
+            files_per_job: (1, 1),
+            background_flows: 1,
+            table3_cell: false,
+        }
+    }
+
+    /// The headline preset: the paper's proxy-vs-StashCache comparison
+    /// as a frontier over job count and file-size mix, with the §4.1
+    /// Table 3 scenario reproduced as one cell of the grid.
+    pub fn proxy_vs_stash() -> Self {
+        GridSpec {
+            name: "proxy-vs-stash".into(),
+            root_seed: 20190728,
+            reps: 2,
+            methods: vec![DownloadMethod::Stash, DownloadMethod::HttpProxy],
+            capacity_scales: vec![1.0],
+            jobs: vec![16, 64],
+            arrival_windows: vec![30.0],
+            zipf_s: vec![1.1],
+            size_profiles: vec![SizeProfile::Paper, SizeProfile::Small],
+            fault_profiles: vec![FaultProfile::None],
+            sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+            experiment: "gwosc".into(),
+            catalog_files: 128,
+            files_per_job: (1, 1),
+            background_flows: 1,
+            table3_cell: true,
+        }
+    }
+
+    /// Number of campaign trials the grid expands to.
+    pub fn trial_count(&self) -> usize {
+        self.methods.len()
+            * self.capacity_scales.len()
+            * self.jobs.len()
+            * self.arrival_windows.len()
+            * self.zipf_s.len()
+            * self.size_profiles.len()
+            * self.fault_profiles.len()
+            * self.reps
+    }
+
+    /// Expand the cartesian product into grid order (`reps` innermost).
+    pub fn trials(&self) -> Vec<TrialSpec> {
+        let mut out = Vec::with_capacity(self.trial_count());
+        let mut index = 0;
+        for &method in &self.methods {
+            for &capacity_scale in &self.capacity_scales {
+                for &jobs in &self.jobs {
+                    for &arrival_window_secs in &self.arrival_windows {
+                        for &zipf_s in &self.zipf_s {
+                            for &size_profile in &self.size_profiles {
+                                for &fault_profile in &self.fault_profiles {
+                                    let cell = CellKey {
+                                        method,
+                                        capacity_scale,
+                                        jobs,
+                                        arrival_window_secs,
+                                        zipf_s,
+                                        size_profile,
+                                        fault_profile,
+                                    };
+                                    for rep in 0..self.reps {
+                                        out.push(TrialSpec {
+                                            index,
+                                            cell: cell.clone(),
+                                            rep,
+                                            seed: trial_seed(self.root_seed, &cell, rep),
+                                        });
+                                        index += 1;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Structural sanity (axes non-empty, values in range).
+    pub fn validate(&self) -> Result<()> {
+        if self.reps == 0 {
+            bail!("grid reps must be >= 1");
+        }
+        for (axis, empty) in [
+            ("methods", self.methods.is_empty()),
+            ("capacity_scales", self.capacity_scales.is_empty()),
+            ("jobs", self.jobs.is_empty()),
+            ("arrival_window_secs", self.arrival_windows.is_empty()),
+            ("zipf_s", self.zipf_s.is_empty()),
+            ("size_profiles", self.size_profiles.is_empty()),
+            ("fault_profiles", self.fault_profiles.is_empty()),
+        ] {
+            if empty {
+                bail!("grid axis {axis:?} is empty");
+            }
+        }
+        if self.capacity_scales.iter().any(|&s| s <= 0.0) {
+            bail!("capacity scales must be positive");
+        }
+        if self.jobs.iter().any(|&j| j == 0) {
+            bail!("job counts must be >= 1");
+        }
+        if self.arrival_windows.iter().any(|&w| w <= 0.0) {
+            bail!("arrival windows must be positive seconds");
+        }
+        if self.zipf_s.iter().any(|&z| z < 0.0) {
+            bail!("zipf skew must be >= 0");
+        }
+        // Duplicate axis values would replay identical cell labels —
+        // and therefore identical stateless seeds — corrupting cell
+        // statistics (zero-variance "reps") and the frontier pairing.
+        let unique = |mut labels: Vec<String>, axis: &str| -> Result<()> {
+            let n = labels.len();
+            labels.sort_unstable();
+            labels.dedup();
+            if labels.len() != n {
+                bail!("duplicate values in grid axis {axis:?}");
+            }
+            Ok(())
+        };
+        unique(
+            self.methods.iter().map(|&m| method_name(m).to_string()).collect(),
+            "methods",
+        )?;
+        unique(
+            self.capacity_scales.iter().map(|s| format!("{s:.2}")).collect(),
+            "capacity_scales",
+        )?;
+        unique(self.jobs.iter().map(|j| j.to_string()).collect(), "jobs")?;
+        unique(
+            self.arrival_windows.iter().map(|w| format!("{w:.1}")).collect(),
+            "arrival_window_secs",
+        )?;
+        unique(
+            self.zipf_s.iter().map(|z| format!("{z:.2}")).collect(),
+            "zipf_s",
+        )?;
+        unique(
+            self.size_profiles.iter().map(|p| p.name().to_string()).collect(),
+            "size_profiles",
+        )?;
+        unique(
+            self.fault_profiles.iter().map(|p| p.name().to_string()).collect(),
+            "fault_profiles",
+        )?;
+        if self.sites.is_empty() {
+            bail!("grid has no sites");
+        }
+        let mut names: Vec<&String> = self.sites.iter().collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.sites.len() {
+            bail!("duplicate sites in grid");
+        }
+        if self.files_per_job.0 == 0 || self.files_per_job.0 > self.files_per_job.1 {
+            bail!("files_per_job range invalid");
+        }
+        if self.catalog_files == 0 {
+            bail!("catalog_files must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Parse a grid from a `[sweep]` TOML table (axes as arrays).
+    ///
+    /// Strict: unknown keys, wrong-typed values, and negative integers
+    /// are errors — never silently replaced by defaults. Omitted keys
+    /// inherit the [`GridSpec::smoke`] baseline.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        const KNOWN_KEYS: [&str; 16] = [
+            "name", "seed", "reps", "methods", "capacity_scales", "jobs",
+            "arrival_window_secs", "zipf_s", "size_profiles", "fault_profiles", "sites",
+            "experiment", "catalog_files", "files_per_job", "background_flows", "table3_cell",
+        ];
+        let root = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let sweep = root
+            .get("sweep")
+            .and_then(Value::as_table)
+            .ok_or_else(|| anyhow!("grid TOML needs a [sweep] table"))?;
+        for key in sweep.keys() {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                bail!(
+                    "unknown key {key:?} in [sweep] (known: {})",
+                    KNOWN_KEYS.join(", ")
+                );
+            }
+        }
+        let mut grid = GridSpec::smoke();
+        if let Some(v) = sweep.get("name") {
+            grid.name = req_str(v, "name")?;
+        }
+        if let Some(v) = sweep.get("seed") {
+            grid.root_seed = req_uint(v, "seed")?;
+        }
+        if let Some(v) = sweep.get("reps") {
+            grid.reps = req_uint(v, "reps")? as usize;
+        }
+        if let Some(v) = sweep.get("methods") {
+            grid.methods = req_array(v, "methods")?
+                .iter()
+                .map(|v| {
+                    let name = req_str(v, "methods entry")?;
+                    method_from_name(&name)
+                        .ok_or_else(|| anyhow!("unknown method {name:?} (stash|http)"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = sweep.get("capacity_scales") {
+            grid.capacity_scales = float_array(v, "capacity_scales")?;
+        }
+        if let Some(v) = sweep.get("jobs") {
+            grid.jobs = req_array(v, "jobs")?
+                .iter()
+                .map(|v| req_uint(v, "jobs entry").map(|i| i as usize))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = sweep.get("arrival_window_secs") {
+            grid.arrival_windows = float_array(v, "arrival_window_secs")?;
+        }
+        if let Some(v) = sweep.get("zipf_s") {
+            grid.zipf_s = float_array(v, "zipf_s")?;
+        }
+        if let Some(v) = sweep.get("size_profiles") {
+            grid.size_profiles = req_array(v, "size_profiles")?
+                .iter()
+                .map(|v| {
+                    let name = req_str(v, "size_profiles entry")?;
+                    SizeProfile::from_name(&name)
+                        .ok_or_else(|| anyhow!("unknown size profile {name:?} (paper|small|large)"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = sweep.get("fault_profiles") {
+            grid.fault_profiles = req_array(v, "fault_profiles")?
+                .iter()
+                .map(|v| {
+                    let name = req_str(v, "fault_profiles entry")?;
+                    FaultProfile::from_name(&name).ok_or_else(|| {
+                        anyhow!("unknown fault profile {name:?} (none|cache-outage|origin-brownout)")
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = sweep.get("sites") {
+            grid.sites = req_array(v, "sites")?
+                .iter()
+                .map(|v| req_str(v, "sites entry"))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = sweep.get("experiment") {
+            grid.experiment = req_str(v, "experiment")?;
+        }
+        if let Some(v) = sweep.get("catalog_files") {
+            grid.catalog_files = req_uint(v, "catalog_files")?;
+        }
+        if let Some(v) = sweep.get("files_per_job") {
+            let items = req_array(v, "files_per_job")?;
+            if items.len() != 2 {
+                bail!("files_per_job must be [lo, hi]");
+            }
+            grid.files_per_job = (
+                req_uint(&items[0], "files_per_job lo")?,
+                req_uint(&items[1], "files_per_job hi")?,
+            );
+        }
+        if let Some(v) = sweep.get("background_flows") {
+            grid.background_flows = req_uint(v, "background_flows")? as usize;
+        }
+        if let Some(v) = sweep.get("table3_cell") {
+            grid.table3_cell = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("table3_cell must be a boolean"))?;
+        }
+        grid.validate().context("invalid sweep grid")?;
+        Ok(grid)
+    }
+}
+
+fn req_str(v: &Value, what: &str) -> Result<String> {
+    v.as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("{what} must be a string"))
+}
+
+fn req_uint(v: &Value, what: &str) -> Result<u64> {
+    let i = v.as_int().ok_or_else(|| anyhow!("{what} must be an integer"))?;
+    if i < 0 {
+        bail!("{what} must be non-negative, got {i}");
+    }
+    Ok(i as u64)
+}
+
+fn req_array<'a>(v: &'a Value, what: &str) -> Result<&'a [Value]> {
+    v.as_array().ok_or_else(|| anyhow!("{what} must be an array"))
+}
+
+fn float_array(v: &Value, what: &str) -> Result<Vec<f64>> {
+    req_array(v, what)?
+        .iter()
+        .map(|v| {
+            v.as_float()
+                .ok_or_else(|| anyhow!("{what} entries must be numbers"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_expansion_counts_and_orders() {
+        let grid = GridSpec {
+            reps: 2,
+            ..GridSpec::smoke()
+        };
+        let trials = grid.trials();
+        assert_eq!(trials.len(), grid.trial_count());
+        assert_eq!(trials.len(), 2 * 2 * 2 * 1 * 1 * 1 * 2 * 2);
+        // Indices are grid positions; reps of one cell are adjacent.
+        for (i, t) in trials.iter().enumerate() {
+            assert_eq!(t.index, i);
+        }
+        assert_eq!(trials[0].cell, trials[1].cell);
+        assert_eq!(trials[0].rep, 0);
+        assert_eq!(trials[1].rep, 1);
+        assert_ne!(trials[0].seed, trials[1].seed, "reps draw distinct seeds");
+    }
+
+    #[test]
+    fn trial_seeds_are_stateless() {
+        let grid = GridSpec::smoke();
+        let trials = grid.trials();
+        // Extending an axis must not change existing cells' seeds.
+        let bigger = GridSpec {
+            jobs: vec![8, 32, 128],
+            ..grid.clone()
+        };
+        let bigger_trials = bigger.trials();
+        for t in &trials {
+            let same = bigger_trials
+                .iter()
+                .find(|b| b.cell == t.cell && b.rep == t.rep)
+                .expect("cell survives axis extension");
+            assert_eq!(same.seed, t.seed, "seed perturbed for {}", t.cell.label());
+        }
+    }
+
+    #[test]
+    fn frontier_twins_share_workload_seeds() {
+        // The stash and http variants of one cell must draw the same
+        // arrivals/files: identical seed, per rep.
+        let grid = GridSpec {
+            reps: 2,
+            ..GridSpec::smoke()
+        };
+        let trials = grid.trials();
+        for t in trials.iter().filter(|t| t.cell.method == DownloadMethod::Stash) {
+            let twin = trials
+                .iter()
+                .find(|o| {
+                    o.cell.method == DownloadMethod::HttpProxy
+                        && o.cell.base_label() == t.cell.base_label()
+                        && o.rep == t.rep
+                })
+                .expect("http twin exists");
+            assert_eq!(t.seed, twin.seed, "pair {} rep {}", t.cell.base_label(), t.rep);
+        }
+    }
+
+    #[test]
+    fn labels_distinguish_cells() {
+        let grid = GridSpec::smoke();
+        let trials = grid.trials();
+        let mut labels: Vec<String> = trials.iter().map(|t| t.cell.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), grid.trial_count() / grid.reps);
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let text = r#"
+            [sweep]
+            name = "custom"
+            seed = 7
+            reps = 3
+            methods = ["stash", "http"]
+            capacity_scales = [0.5, 1.0]
+            jobs = [4]
+            arrival_window_secs = [10.0]
+            zipf_s = [1.3]
+            size_profiles = ["paper", "large"]
+            fault_profiles = ["none"]
+            sites = ["syracuse", "chicago"]
+            experiment = "gwosc"
+            catalog_files = 32
+            files_per_job = [1, 2]
+            background_flows = 0
+            table3_cell = true
+        "#;
+        let grid = GridSpec::from_toml(text).unwrap();
+        assert_eq!(grid.name, "custom");
+        assert_eq!(grid.root_seed, 7);
+        assert_eq!(grid.reps, 3);
+        assert_eq!(grid.methods.len(), 2);
+        assert_eq!(grid.capacity_scales, vec![0.5, 1.0]);
+        assert_eq!(grid.size_profiles, vec![SizeProfile::Paper, SizeProfile::Large]);
+        assert_eq!(grid.files_per_job, (1, 2));
+        assert!(grid.table3_cell);
+        assert_eq!(grid.trial_count(), 2 * 2 * 2 * 3);
+    }
+
+    #[test]
+    fn duplicate_axis_values_rejected() {
+        let grid = GridSpec {
+            jobs: vec![8, 8],
+            ..GridSpec::smoke()
+        };
+        assert!(grid.validate().is_err(), "repeated jobs value");
+        // Values that collide in the cell *label* (the seed material)
+        // are duplicates too, even if not bit-equal.
+        let grid = GridSpec {
+            zipf_s: vec![1.111, 1.112],
+            ..GridSpec::smoke()
+        };
+        assert!(grid.validate().is_err(), "label-colliding zipf values");
+        assert!(GridSpec::smoke().validate().is_ok());
+    }
+
+    #[test]
+    fn toml_rejects_bad_axes() {
+        assert!(GridSpec::from_toml("[sweep]\nmethods = [\"ftp\"]\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\nsize_profiles = [\"huge\"]\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\njobs = []\n").is_err());
+        assert!(GridSpec::from_toml("no sweep table = 1\n").is_err());
+    }
+
+    #[test]
+    fn toml_is_strict_about_keys_types_and_signs() {
+        // Negative integers must not wrap into huge unsigned values.
+        assert!(GridSpec::from_toml("[sweep]\nreps = -1\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\njobs = [-4]\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\ncatalog_files = -1\n").is_err());
+        // Wrong-typed scalars error instead of silently keeping the
+        // smoke default.
+        assert!(GridSpec::from_toml("[sweep]\nreps = \"3\"\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\ntable3_cell = 1\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\nmethods = \"stash\"\n").is_err());
+        // Misspelled keys error instead of being ignored.
+        let e = GridSpec::from_toml("[sweep]\ncapacity_scale = [0.5]\n").unwrap_err();
+        assert!(e.to_string().contains("unknown key"), "{e}");
+    }
+
+    #[test]
+    fn size_profiles_keep_weights_normalised() {
+        // FederationConfig::validate requires Σw == 1 for the mixture.
+        for p in [SizeProfile::Paper, SizeProfile::Small, SizeProfile::Large] {
+            let mut w = crate::config::defaults::paper_workload();
+            p.apply(&mut w);
+            let total: f64 = w.size_dist.components.iter().map(|c| c.0).sum();
+            assert!((total - 1.0).abs() < 1e-9, "{}: Σw = {total}", p.name());
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Experiment lab: deterministic parallel parameter sweeps.
+//!
+//! The paper's headline result is a *comparison* — HTTP proxies vs
+//! StashCache (§5) — but a single campaign explores one point of a
+//! much larger space. This layer turns that point into a **frontier**:
+//!
+//! * [`grid`] — parameter axes (client method, cache capacity scale,
+//!   client count, Poisson window, Zipf skew, file-size mix, fault
+//!   profile) expanded into a cartesian product of [`grid::TrialSpec`]s
+//!   with stateless per-trial seeds.
+//! * [`runner`] — a work-stealing pool of OS threads executing trials
+//!   through the existing [`crate::sim::campaign`] engine; each trial
+//!   owns its federation, so an N-thread run is bit-identical to a
+//!   1-thread run.
+//! * [`summary`] — per-trial metric vectors folded into per-cell
+//!   `mean ± CI` summaries via [`crate::util::stats`].
+//! * [`artifact`] — `BENCH_sweep.json`, CSVs, and the markdown
+//!   proxy-vs-StashCache frontier report.
+//!
+//! Drive it from the CLI: `stashcache sweep --preset proxy-vs-stash
+//! --threads 8` (or `--grid sweep.toml`). The `proxy-vs-stash` preset
+//! reproduces the §4.1 Table 3 scenario as one cell of the grid, so
+//! the paper's comparison appears in context — surrounded by the
+//! capacity/concurrency/size-mix frontier the paper could not run.
+//!
+//! This is the repo's first real OS-thread parallelism: simulation
+//! stays single-threaded and deterministic *inside* a trial, and the
+//! lab saturates cores *across* trials.
+
+pub mod artifact;
+pub mod grid;
+pub mod runner;
+pub mod summary;
+
+pub use grid::{CellKey, FaultProfile, GridSpec, SizeProfile, TrialSpec};
+pub use runner::run_grid;
+pub use summary::{CellSummary, SweepResults, Table3Cell, TrialOutcome};

@@ -1,0 +1,237 @@
+//! Parallel trial execution: a work-stealing pool of OS threads.
+//!
+//! Each trial is hermetic — it clones the base [`FederationConfig`],
+//! applies its cell's capacity scale and size profile, builds its own
+//! [`FedSim`], and runs one campaign (optionally under a fault
+//! timeline) through the deterministic session engine. Because no
+//! state is shared between trials, execution order cannot influence
+//! results: workers pull trial indices from a shared atomic counter
+//! (idle threads steal whatever work is left), write outcomes into
+//! per-trial slots, and the slot order restores grid order. A grid run
+//! on one thread and on N threads is therefore **bit-identical**, which
+//! `tests/experiment_sweep.rs` asserts over records, summaries, and
+//! the JSON artifact.
+
+use super::grid::{FaultProfile, GridSpec, TrialSpec};
+use super::summary::{self, SweepResults, Table3Cell, Table3Row, TrialOutcome};
+use crate::config::defaults::COMPUTE_SITES;
+use crate::config::FederationConfig;
+use crate::fault::{FaultKind, FaultTimeline};
+use crate::federation::FedSim;
+use crate::sim::campaign::{self, CampaignConfig, CampaignResults};
+use crate::sim::scenario::{self, ScenarioConfig};
+use crate::util::{ByteSize, SimTime};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Execute every trial of `grid` on `threads` OS threads (1 ⇒ inline
+/// on the caller's thread) and aggregate into [`SweepResults`].
+pub fn run_grid(base: &FederationConfig, grid: &GridSpec, threads: usize) -> SweepResults {
+    grid.validate().expect("invalid grid");
+    let trials = grid.trials();
+    let n = trials.len();
+    let workers = threads.max(1).min(n.max(1));
+
+    let (outcomes, table3): (Vec<TrialOutcome>, Option<Table3Cell>) = if workers <= 1 {
+        let outcomes = trials
+            .iter()
+            .map(|spec| execute_trial(base, grid, spec))
+            .collect();
+        // The Table 3 cell is the §4.1 serial scenario — one
+        // deterministic run, independent of the campaign trials.
+        (outcomes, grid.table3_cell.then(|| table3_cell(base)))
+    } else {
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<TrialOutcome>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let table3_slot: Mutex<Option<Table3Cell>> = Mutex::new(None);
+        std::thread::scope(|scope| {
+            if grid.table3_cell {
+                // The scenario is independent of every campaign trial;
+                // overlap it with the pool instead of paying its full
+                // runtime after the barrier.
+                scope.spawn(|| {
+                    *table3_slot.lock().expect("table3 lock") = Some(table3_cell(base));
+                });
+            }
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    // Dynamic scheduling: finished workers steal the
+                    // next unclaimed trial, so a long cell never
+                    // serialises the rest of the grid.
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = execute_trial(base, grid, &trials[i]);
+                    *slots[i].lock().expect("slot lock") = Some(out);
+                });
+            }
+        });
+        let outcomes = slots
+            .into_iter()
+            .map(|slot| slot.into_inner().expect("slot lock").expect("trial ran"))
+            .collect();
+        (outcomes, table3_slot.into_inner().expect("table3 lock"))
+    };
+
+    summary::summarize(grid, outcomes, table3)
+}
+
+/// Run one trial: config surgery, federation build, campaign.
+pub fn execute_trial(
+    base: &FederationConfig,
+    grid: &GridSpec,
+    spec: &TrialSpec,
+) -> TrialOutcome {
+    let mut cfg = base.clone();
+    let scale = spec.cell.capacity_scale;
+    if (scale - 1.0).abs() > 1e-12 {
+        // The axis constrains *both* storage tiers, so a cap=0.25
+        // frontier cell compares a quarter-size cache against a
+        // quarter-size proxy — not a shrunken cache vs a full proxy.
+        for site in &mut cfg.sites {
+            if let Some(cache) = &mut site.cache {
+                let scaled = (cache.capacity.as_f64() * scale).round() as u64;
+                // Keep the config valid: a cache can never be smaller
+                // than one chunk.
+                cache.capacity = ByteSize(scaled.max(cache.chunk_size.as_u64()));
+            }
+            if let Some(proxy) = &mut site.proxy {
+                let scaled = (proxy.capacity.as_f64() * scale).round() as u64;
+                // A proxy smaller than its own max object thrashes
+                // meaninglessly; clamp there.
+                proxy.capacity = ByteSize(scaled.max(proxy.max_object.as_u64()));
+            }
+        }
+    }
+    spec.cell.size_profile.apply(&mut cfg.workload);
+
+    let mut fed = FedSim::build(cfg);
+    let ccfg = CampaignConfig {
+        sites: grid.sites.clone(),
+        jobs: spec.cell.jobs,
+        arrival_window_secs: spec.cell.arrival_window_secs,
+        files_per_job: grid.files_per_job,
+        catalog_files: grid.catalog_files,
+        zipf_s: spec.cell.zipf_s,
+        experiment: grid.experiment.clone(),
+        background_flows: grid.background_flows,
+        method: spec.cell.method,
+        seed: spec.seed,
+    };
+
+    let window = spec.cell.arrival_window_secs;
+    let results: CampaignResults = match spec.cell.fault_profile {
+        FaultProfile::None => campaign::run_on(&mut fed, &ccfg),
+        FaultProfile::CacheOutage => {
+            let first = fed
+                .topo
+                .site_index(&grid.sites[0])
+                .unwrap_or_else(|| panic!("unknown grid site {}", grid.sites[0]));
+            let victim = fed.nearest_cache_site(first);
+            let mut faults = FaultTimeline::new();
+            faults.push(
+                SimTime::from_secs_f64(window * 0.5),
+                FaultKind::CacheDown { site: victim },
+            );
+            campaign::run_on_with_faults(&mut fed, &ccfg, &faults).campaign
+        }
+        FaultProfile::OriginBrownout => {
+            let mut faults = FaultTimeline::new();
+            faults.origin_brownout(
+                0,
+                0.25,
+                SimTime::from_secs_f64(window * 0.1),
+                SimTime::from_secs_f64(window * 0.9),
+            );
+            campaign::run_on_with_faults(&mut fed, &ccfg, &faults).campaign
+        }
+    };
+
+    summary::outcome_of(spec, &results, &fed)
+}
+
+/// The §4.1 serial DAGMan scenario, reduced to its Table 3 cells.
+pub fn table3_cell(base: &FederationConfig) -> Table3Cell {
+    let results = scenario::run(base.clone(), &ScenarioConfig::default());
+    Table3Cell {
+        rows: COMPUTE_SITES
+            .iter()
+            .map(|site| Table3Row {
+                site: site.to_string(),
+                pct_2_3gb: results.pct_difference(site, "p95"),
+                pct_10gb: results.pct_difference(site, "f10g"),
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+    use crate::federation::DownloadMethod;
+
+    fn tiny_grid() -> GridSpec {
+        GridSpec {
+            name: "tiny".into(),
+            reps: 2,
+            methods: vec![DownloadMethod::Stash],
+            capacity_scales: vec![1.0],
+            jobs: vec![6],
+            arrival_windows: vec![10.0],
+            zipf_s: vec![1.1],
+            size_profiles: vec![super::super::grid::SizeProfile::Paper],
+            fault_profiles: vec![FaultProfile::None],
+            sites: vec!["syracuse".into(), "nebraska".into()],
+            catalog_files: 16,
+            background_flows: 0,
+            table3_cell: false,
+            ..GridSpec::smoke()
+        }
+    }
+
+    #[test]
+    fn trial_is_hermetic_and_deterministic() {
+        let base = paper_federation();
+        let grid = tiny_grid();
+        let trials = grid.trials();
+        let a = execute_trial(&base, &grid, &trials[0]);
+        let b = execute_trial(&base, &grid, &trials[0]);
+        assert_eq!(a, b, "same spec, fresh federations ⇒ identical outcome");
+        assert_eq!(a.downloads, 6);
+        assert!(a.records_digest != 0);
+        // Different rep ⇒ different seed ⇒ different records.
+        let c = execute_trial(&base, &grid, &trials[1]);
+        assert_ne!(a.records_digest, c.records_digest);
+    }
+
+    #[test]
+    fn pool_runs_every_trial_once() {
+        let base = paper_federation();
+        let grid = tiny_grid();
+        let r = run_grid(&base, &grid, 3);
+        assert_eq!(r.trials.len(), grid.trial_count());
+        for (i, t) in r.trials.iter().enumerate() {
+            assert_eq!(t.spec.index, i, "grid order restored");
+            assert_eq!(t.downloads, 6);
+        }
+    }
+
+    #[test]
+    fn fault_profile_cells_fail_over() {
+        let base = paper_federation();
+        let grid = GridSpec {
+            fault_profiles: vec![FaultProfile::CacheOutage],
+            jobs: vec![12],
+            arrival_windows: vec![4.0],
+            reps: 1,
+            ..tiny_grid()
+        };
+        let r = run_grid(&base, &grid, 2);
+        assert_eq!(r.trials.len(), 1);
+        let t = &r.trials[0];
+        assert_eq!(t.downloads, 12, "every job completes despite the outage");
+    }
+}

@@ -1,0 +1,277 @@
+//! Trial → cell aggregation.
+//!
+//! A [`TrialOutcome`] is the flat metric vector of one campaign run
+//! (hit ratio, origin bytes, aggregate Mbps, duration percentiles,
+//! fault counters) plus a FNV digest of every [`TransferRecord`] —
+//! the digest is what makes "bit-identical across thread counts"
+//! cheap to assert. [`summarize`] folds reps of the same cell into a
+//! [`CellSummary`] of `mean ± CI` metrics via
+//! [`crate::util::stats::confidence_interval`].
+//!
+//! [`TransferRecord`]: crate::client::TransferRecord
+
+use super::grid::{CellKey, GridSpec, TrialSpec};
+use crate::client::Method;
+use crate::federation::FedSim;
+use crate::sim::campaign::{CampaignRecord, CampaignResults};
+use crate::util::stats;
+
+/// Measured metrics of one finished trial.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialOutcome {
+    pub spec: TrialSpec,
+    /// Completed downloads (== the cell's job × files count).
+    pub downloads: usize,
+    /// Fraction of downloads served by an already-warm cache/proxy.
+    pub hit_ratio: f64,
+    /// Bytes the caches and proxies pulled from origins upstream.
+    pub origin_bytes: u64,
+    pub aggregate_mbps: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub makespan_s: f64,
+    pub peak_concurrent: usize,
+    pub coalesced_joins: u64,
+    /// Fault events the engine applied during this trial.
+    pub faults_applied: u64,
+    pub failovers: u64,
+    pub direct_fallbacks: u64,
+    pub events_processed: u64,
+    /// FNV-1a over every transfer record (order, paths, bytes,
+    /// methods, hit flags, durations) — two runs agree on this iff
+    /// they produced identical records in identical order.
+    pub records_digest: u64,
+}
+
+fn method_tag(method: Method) -> u64 {
+    match method {
+        Method::Cvmfs => 0,
+        Method::Xrootd => 1,
+        Method::HttpCache => 2,
+        Method::HttpProxy => 3,
+        Method::HttpOrigin => 4,
+    }
+}
+
+/// Order-sensitive digest of a campaign's full record stream.
+pub fn digest_records(records: &[CampaignRecord]) -> u64 {
+    let mut h = crate::util::Fnv1a::new();
+    for r in records {
+        h.write_u64(r.session);
+        h.write(r.site.as_bytes());
+        h.write_u64(r.arrival.as_micros());
+        h.write(r.record.path.as_bytes());
+        h.write_u64(r.record.bytes);
+        h.write_u64(method_tag(r.record.method));
+        h.write_u64(r.record.cache_hit as u64);
+        h.write_u64(r.record.duration.as_micros());
+    }
+    h.finish()
+}
+
+/// Reduce one campaign (plus the federation it ran on, for the
+/// cache/proxy upstream counters) to a [`TrialOutcome`].
+pub fn outcome_of(spec: &TrialSpec, results: &CampaignResults, fed: &FedSim) -> TrialOutcome {
+    let downloads = results.records.len();
+    let hits = results
+        .records
+        .iter()
+        .filter(|r| r.record.cache_hit)
+        .count();
+    let origin_bytes: u64 = fed
+        .caches
+        .values()
+        .map(|c| c.stats.bytes_fetched_origin)
+        .sum::<u64>()
+        + fed
+            .proxies
+            .values()
+            .map(|p| p.stats.bytes_fetched_upstream)
+            .sum::<u64>();
+    let ps = results.duration_percentiles(&[50.0, 95.0, 99.0]);
+    TrialOutcome {
+        spec: spec.clone(),
+        downloads,
+        hit_ratio: if downloads == 0 {
+            0.0
+        } else {
+            hits as f64 / downloads as f64
+        },
+        origin_bytes,
+        aggregate_mbps: results.aggregate_mbps(),
+        p50_s: ps[0],
+        p95_s: ps[1],
+        p99_s: ps[2],
+        makespan_s: results.makespan.as_secs_f64(),
+        peak_concurrent: results.peak_concurrent,
+        coalesced_joins: results.coalesced_joins,
+        faults_applied: results.engine.faults_applied,
+        failovers: results.engine.failovers,
+        direct_fallbacks: results.engine.direct_fallbacks,
+        events_processed: results.events_processed,
+        records_digest: digest_records(&results.records),
+    }
+}
+
+/// `mean ± ci95` (plus the sample stddev) of one metric over a cell's
+/// reps. `ci95` is zero for single-rep cells.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub mean: f64,
+    pub stddev: f64,
+    pub ci95: f64,
+}
+
+impl Metric {
+    fn of(samples: &[f64]) -> Metric {
+        let (mean, ci95) = stats::confidence_interval(samples, 0.95);
+        Metric {
+            mean,
+            stddev: stats::stddev(samples),
+            ci95,
+        }
+    }
+}
+
+/// Aggregated metrics of one grid cell across its reps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSummary {
+    pub cell: CellKey,
+    pub reps: usize,
+    pub hit_ratio: Metric,
+    pub origin_gb: Metric,
+    pub aggregate_mbps: Metric,
+    pub p50_s: Metric,
+    pub p95_s: Metric,
+    pub p99_s: Metric,
+    pub failovers: Metric,
+}
+
+/// One row of the §4.1 Table 3 cell (percent difference in download
+/// time, StashCache vs HTTP proxy; negative ⇒ StashCache faster).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table3Row {
+    pub site: String,
+    pub pct_2_3gb: Option<f64>,
+    pub pct_10gb: Option<f64>,
+}
+
+/// The §4.1 serial scenario reproduced as one cell of the grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table3Cell {
+    pub rows: Vec<Table3Row>,
+}
+
+/// A finished sweep: the grid, every trial in grid order, per-cell
+/// summaries, and (optionally) the Table 3 scenario cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepResults {
+    pub grid: GridSpec,
+    pub trials: Vec<TrialOutcome>,
+    pub cells: Vec<CellSummary>,
+    pub table3: Option<Table3Cell>,
+}
+
+impl SweepResults {
+    /// Total downloads completed across every trial.
+    pub fn total_downloads(&self) -> usize {
+        self.trials.iter().map(|t| t.downloads).sum()
+    }
+}
+
+/// Fold trials (grid order, reps adjacent) into per-cell summaries.
+pub fn summarize(
+    grid: &GridSpec,
+    trials: Vec<TrialOutcome>,
+    table3: Option<Table3Cell>,
+) -> SweepResults {
+    let mut cells: Vec<CellSummary> = Vec::new();
+    let mut i = 0;
+    while i < trials.len() {
+        let cell = trials[i].spec.cell.clone();
+        let mut j = i;
+        while j < trials.len() && trials[j].spec.cell == cell {
+            j += 1;
+        }
+        let reps = &trials[i..j];
+        let col = |f: &dyn Fn(&TrialOutcome) -> f64| -> Vec<f64> { reps.iter().map(f).collect() };
+        cells.push(CellSummary {
+            cell,
+            reps: reps.len(),
+            hit_ratio: Metric::of(&col(&|t| t.hit_ratio)),
+            origin_gb: Metric::of(&col(&|t| t.origin_bytes as f64 / 1e9)),
+            aggregate_mbps: Metric::of(&col(&|t| t.aggregate_mbps)),
+            p50_s: Metric::of(&col(&|t| t.p50_s)),
+            p95_s: Metric::of(&col(&|t| t.p95_s)),
+            p99_s: Metric::of(&col(&|t| t.p99_s)),
+            failovers: Metric::of(&col(&|t| t.failovers as f64)),
+        });
+        i = j;
+    }
+    SweepResults {
+        grid: grid.clone(),
+        trials,
+        cells,
+        table3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::paper_federation;
+    use crate::experiment::grid::GridSpec;
+    use crate::experiment::runner::execute_trial;
+
+    #[test]
+    fn digest_is_order_and_content_sensitive() {
+        let base = paper_federation();
+        let grid = GridSpec {
+            jobs: vec![4],
+            reps: 2,
+            capacity_scales: vec![1.0],
+            fault_profiles: vec![crate::experiment::grid::FaultProfile::None],
+            methods: vec![crate::federation::DownloadMethod::Stash],
+            ..GridSpec::smoke()
+        };
+        let trials = grid.trials();
+        let a = execute_trial(&base, &grid, &trials[0]);
+        let b = execute_trial(&base, &grid, &trials[1]);
+        assert_ne!(
+            a.records_digest, b.records_digest,
+            "different seeds give different digests"
+        );
+    }
+
+    #[test]
+    fn summarize_groups_adjacent_reps() {
+        let base = paper_federation();
+        let grid = GridSpec {
+            jobs: vec![4, 8],
+            reps: 2,
+            capacity_scales: vec![1.0],
+            fault_profiles: vec![crate::experiment::grid::FaultProfile::None],
+            methods: vec![crate::federation::DownloadMethod::Stash],
+            catalog_files: 16,
+            background_flows: 0,
+            ..GridSpec::smoke()
+        };
+        let outcomes: Vec<TrialOutcome> = grid
+            .trials()
+            .iter()
+            .map(|t| execute_trial(&base, &grid, t))
+            .collect();
+        let r = summarize(&grid, outcomes, None);
+        assert_eq!(r.trials.len(), 4);
+        assert_eq!(r.cells.len(), 2, "two cells of two reps each");
+        for c in &r.cells {
+            assert_eq!(c.reps, 2);
+            // Multi-rep cells carry a spread (possibly zero) and the
+            // mean lies within the observed sample range.
+            assert!(c.aggregate_mbps.mean > 0.0);
+            assert!(c.aggregate_mbps.ci95 >= 0.0);
+        }
+        assert_eq!(r.total_downloads(), 4 + 4 + 8 + 8);
+    }
+}

@@ -31,7 +31,9 @@
 //! simulator ([`netsim`]); the same services also run as real TCP/UDP
 //! processes on loopback ([`live`]). Workloads, the DAGMan-style test
 //! scenario, and the drivers that regenerate every paper table/figure
-//! live in [`sim`] and [`report`].
+//! live in [`sim`] and [`report`]. The [`experiment`] lab fans whole
+//! parameter grids of such runs out across OS threads —
+//! deterministically — and reports proxy-vs-StashCache frontiers.
 //!
 //! Numeric hot-spots (GeoIP nearest-cache scoring, monitoring histogram
 //! aggregation, WAN transfer-time estimation) are AOT-compiled from
@@ -41,6 +43,7 @@
 pub mod cache;
 pub mod client;
 pub mod config;
+pub mod experiment;
 pub mod fault;
 pub mod federation;
 pub mod geoip;

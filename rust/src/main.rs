@@ -3,6 +3,7 @@
 //! ```text
 //! stashcache topology                      # Fig 1/2: sites, caches, links
 //! stashcache scenario [--sites a,b] [--repeats N] [--runtime pjrt|rust]
+//! stashcache sweep [--preset proxy-vs-stash] [--threads N]  # parallel grid
 //! stashcache usage --days D [--jobs-per-hour J]
 //! stashcache report --all --out-dir reports
 //! stashcache init-config [path]            # write an example TOML
@@ -16,6 +17,9 @@ mod cli;
 
 fn main() {
     if let Err(e) = cli::run(std::env::args().skip(1).collect()) {
+        // Usage first, error last, so the actual cause is the final
+        // (most visible) line on stderr.
+        eprintln!("{}", cli::usage());
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

@@ -199,6 +199,69 @@ mod tests {
     }
 
     #[test]
+    fn property_nested_prefix_beats_ancestor_any_insertion_order() {
+        use crate::util::prop::check;
+        check("longest prefix wins, insertion order irrelevant", 100, |g| {
+            // An ancestor prefix and a strictly deeper one under it.
+            let depth = g.usize(1, 3);
+            let mut ancestor = String::new();
+            for _ in 0..depth {
+                ancestor.push('/');
+                ancestor.push_str(&format!("d{}", g.u64(0, 4)));
+            }
+            let extra = g.usize(1, 3);
+            let mut nested = ancestor.clone();
+            for _ in 0..extra {
+                nested.push('/');
+                nested.push_str(&format!("n{}", g.u64(0, 4)));
+            }
+            // Register in both orders; resolution must not care.
+            let mut forward = Namespace::new();
+            forward.register(&ancestor, OriginId(0)).unwrap();
+            forward.register(&nested, OriginId(1)).unwrap();
+            let mut reverse = Namespace::new();
+            reverse.register(&nested, OriginId(1)).unwrap();
+            reverse.register(&ancestor, OriginId(0)).unwrap();
+
+            let deep_file = format!("{nested}/leaf{}", g.u64(0, 99));
+            let shallow_file = format!("{ancestor}/other{}", g.u64(0, 99));
+            for ns in [&forward, &reverse] {
+                if ns.resolve(&deep_file) != Some(OriginId(1)) {
+                    return (false, format!("deep {deep_file} under {nested}"));
+                }
+                if ns.resolve(&nested) != Some(OriginId(1)) {
+                    return (false, format!("exact {nested}"));
+                }
+                // A path under the ancestor that stays outside the
+                // nested subtree ("other…" can never match the "n…"
+                // segments) resolves to the ancestor.
+                if ns.resolve(&shallow_file) != Some(OriginId(0)) {
+                    return (false, format!("shallow {shallow_file} under {ancestor}"));
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    #[test]
+    fn property_unregistered_paths_resolve_to_none() {
+        use crate::util::prop::check;
+        check("unregistered subtrees resolve to None", 100, |g| {
+            let mut ns = Namespace::new();
+            ns.register("/registered/tree", OriginId(0)).unwrap();
+            // Random paths rooted outside the registered subtree.
+            let mut path = format!("/other{}", g.u64(0, 9));
+            for _ in 0..g.usize(0, 4) {
+                path.push('/');
+                path.push_str(&format!("s{}", g.u64(0, 9)));
+            }
+            let sibling = format!("/registered/other{}", g.u64(0, 9));
+            let ok = ns.resolve(&path).is_none() && ns.resolve(&sibling).is_none();
+            (ok, format!("path={path} sibling={sibling}"))
+        });
+    }
+
+    #[test]
     fn property_registered_paths_resolve() {
         use crate::util::prop::check;
         check("registered prefix resolves its subtree", 100, |g| {

@@ -241,6 +241,58 @@ mod tests {
     }
 
     #[test]
+    fn expiry_exactly_at_ttl_boundary_still_serves() {
+        // Freshness is `now - stored_at <= ttl`: an object is valid
+        // *through* the TTL instant and expired one microsecond after
+        // (squid's max-age semantics are inclusive).
+        let mut p = ProxyServer::new("sq", cfg(10_000, 5_000, 60.0));
+        p.lookup("/u", 100, t(0.0));
+        p.commit("/u", 100, t(0.0));
+        assert_eq!(p.lookup("/u", 100, t(60.0)), ProxyLookup::Hit, "age == ttl");
+        assert_eq!(
+            p.lookup("/u", 100, t(60.000001)),
+            ProxyLookup::Miss { cacheable: true, reason: MissReason::Expired },
+            "one microsecond past the ttl"
+        );
+        assert_eq!(p.stats.hits, 1);
+        assert_eq!(p.stats.misses_expired, 1);
+    }
+
+    #[test]
+    fn refetch_after_expiry_resets_stored_at_and_lru_position() {
+        // ttl 200 s, capacity for two 100-byte objects.
+        let mut p = ProxyServer::new("sq", cfg(250, 200, 200.0));
+        p.lookup("/a", 100, t(0.0));
+        p.commit("/a", 100, t(0.0));
+        p.lookup("/b", 100, t(10.0));
+        p.commit("/b", 100, t(10.0));
+        // /a expires (age 250 > 200) and is re-fetched at t=250. Its
+        // freshness clock must restart from the new commit...
+        assert_eq!(
+            p.lookup("/a", 100, t(250.0)),
+            ProxyLookup::Miss { cacheable: true, reason: MissReason::Expired }
+        );
+        p.commit("/a", 100, t(250.0));
+        assert_eq!(
+            p.lookup("/a", 100, t(420.0)),
+            ProxyLookup::Hit,
+            "age counts from the re-commit (170 < 200), not the original store"
+        );
+        // ...and its LRU position must be the re-commit, so the stale
+        // /b (last touched t=10) is the eviction victim, not /a.
+        p.lookup("/c", 100, t(430.0));
+        p.commit("/c", 100, t(430.0));
+        assert_eq!(p.lookup("/a", 100, t(431.0)), ProxyLookup::Hit, "/a survived");
+        assert_eq!(
+            p.lookup("/b", 100, t(431.0)),
+            ProxyLookup::Miss { cacheable: true, reason: MissReason::Cold },
+            "/b was evicted (LRU) — and as a *cold* miss, not expired: eviction deleted it"
+        );
+        assert_eq!(p.stats.evictions, 1);
+        assert!(p.usage().as_u64() <= 250);
+    }
+
+    #[test]
     fn lru_eviction_under_pressure() {
         let mut p = ProxyServer::new("sq", cfg(250, 200, 3600.0));
         p.lookup("/a", 100, t(0.0));

@@ -63,6 +63,32 @@ impl Table {
         out
     }
 
+    /// Render as a GitHub-flavoured markdown table (title as a
+    /// heading, pipes escaped).
+    pub fn to_markdown(&self) -> String {
+        let esc = |s: &String| s.replace('|', "\\|");
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            writeln!(out, "## {}\n", self.title).unwrap();
+        }
+        writeln!(
+            out,
+            "| {} |",
+            self.headers.iter().map(esc).collect::<Vec<_>>().join(" | ")
+        )
+        .unwrap();
+        writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| " --- ").collect::<Vec<_>>().join("|")
+        )
+        .unwrap();
+        for row in &self.rows {
+            writeln!(out, "| {} |", row.iter().map(esc).collect::<Vec<_>>().join(" | ")).unwrap();
+        }
+        out
+    }
+
     /// Render as CSV (headers + rows, comma-separated, quoted as
     /// needed).
     pub fn to_csv(&self) -> String {
@@ -170,6 +196,17 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn markdown_renders_header_rule_and_escapes() {
+        let mut t = Table::new("Frontier", &["Cell", "winner"]);
+        t.row(vec!["a|b".into(), "stash".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("## Frontier"));
+        assert!(md.contains("| Cell | winner |"));
+        assert!(md.contains("| --- | --- |"));
+        assert!(md.contains("a\\|b"));
     }
 
     #[test]

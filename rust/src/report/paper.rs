@@ -141,6 +141,75 @@ pub fn table3(results: &ScenarioResults) -> Table {
     t
 }
 
+/// Frontier report of a parameter sweep: every pair of grid cells
+/// that differ only in client method, HTTP proxy vs StashCache side
+/// by side (the Table 3 comparison generalised over cache capacity,
+/// concurrency, size mix, and fault profile). Negative %Δ ⇒ StashCache
+/// faster at the p95 download time, mirroring Table 3's convention.
+pub fn frontier_table(results: &crate::experiment::SweepResults) -> Table {
+    use crate::experiment::grid::method_name;
+    use crate::federation::DownloadMethod;
+    let mut t = Table::new(
+        format!(
+            "Frontier {:?}: HTTP proxy vs StashCache per cell (negative %Δ p95 ⇒ StashCache faster)",
+            results.grid.name
+        ),
+        &["Cell", "stash Mbps", "http Mbps", "stash p95 s", "http p95 s", "%Δ p95", "winner"],
+    );
+    for s in &results.cells {
+        if s.cell.method != DownloadMethod::Stash {
+            continue;
+        }
+        let Some(h) = results.cells.iter().find(|c| {
+            c.cell.method == DownloadMethod::HttpProxy
+                && c.cell.base_label() == s.cell.base_label()
+        }) else {
+            continue;
+        };
+        let pct = if h.p95_s.mean > 0.0 {
+            (s.p95_s.mean - h.p95_s.mean) / h.p95_s.mean * 100.0
+        } else {
+            0.0
+        };
+        let winner = if pct < 0.0 {
+            method_name(DownloadMethod::Stash)
+        } else {
+            method_name(DownloadMethod::HttpProxy)
+        };
+        t.row(vec![
+            s.cell.base_label(),
+            format!("{:.0}", s.aggregate_mbps.mean),
+            format!("{:.0}", h.aggregate_mbps.mean),
+            format!("{:.2}", s.p95_s.mean),
+            format!("{:.2}", h.p95_s.mean),
+            format!("{pct:+.1}%"),
+            winner.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The sweep's Table 3 cell next to the paper's published numbers
+/// (same convention as [`table3`]).
+pub fn sweep_table3(cell: &crate::experiment::Table3Cell) -> Table {
+    let mut t = Table::new(
+        "Table 3 cell: %Δ download time, HTTP proxy vs StashCache (§4.1 serial scenario)",
+        &["Site", "2.3GB", "10GB", "paper 2.3GB", "paper 10GB"],
+    );
+    for row in &cell.rows {
+        let paper = PAPER_TABLE3.iter().find(|(s, _, _)| *s == row.site);
+        let fmt = |v: Option<f64>| v.map_or("-".into(), |x| format!("{x:+.1}%"));
+        t.row(vec![
+            row.site.clone(),
+            fmt(row.pct_2_3gb),
+            fmt(row.pct_10gb),
+            paper.map_or("-".into(), |(_, p, _)| format!("{p:+.1}%")),
+            paper.map_or("-".into(), |(_, _, p)| format!("{p:+.1}%")),
+        ]);
+    }
+    t
+}
+
 /// Availability section: per-cache downtime and the fault-layer
 /// counters from a chaos run (the operational follow-on to the
 /// paper's §1 "reclaim space without causing workflow failures" claim:

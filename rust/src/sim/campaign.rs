@@ -133,12 +133,7 @@ impl CampaignResults {
 /// FNV-1a hash of a site name, used as that site's `Pcg64` stream id
 /// (odd so distinct names give distinct streams).
 fn site_stream(name: &str) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h | 1
+    crate::util::fnv1a(name.as_bytes()) | 1
 }
 
 /// Run a campaign on a fresh federation.

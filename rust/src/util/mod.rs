@@ -1,7 +1,7 @@
 //! Shared utility substrate: byte sizes, simulated time, deterministic
-//! RNG, Zipf sampling, descriptive statistics, and a miniature
-//! property-testing framework (the offline environment has no proptest;
-//! see DESIGN.md §2 row 18).
+//! RNG, Zipf sampling, descriptive statistics, FNV hashing, and a
+//! miniature property-testing framework (the offline environment has
+//! no proptest; see DESIGN.md §2 row 18).
 
 pub mod bytes;
 pub mod pcg;
@@ -14,3 +14,62 @@ pub use bytes::ByteSize;
 pub use pcg::Pcg64;
 pub use simtime::{Duration, SimTime};
 pub use zipf::Zipf;
+
+/// Streaming 64-bit FNV-1a hasher (seed derivation, record digests).
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+/// One-shot FNV-1a of a byte string.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Published FNV-1a/64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut h = Fnv1a::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv1a(b"foobar"));
+    }
+}

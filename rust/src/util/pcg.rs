@@ -33,11 +33,7 @@ impl Pcg64 {
 
     /// Derive a child generator for a named subcomponent.
     pub fn fork(&mut self, label: &str) -> Pcg64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in label.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
+        let h = crate::util::fnv1a(label.as_bytes());
         Pcg64::new(self.next_u64() ^ h, h | 1)
     }
 

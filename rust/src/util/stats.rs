@@ -80,6 +80,37 @@ pub fn geometric_mean(data: &[f64]) -> f64 {
     (log_sum / data.len() as f64).exp()
 }
 
+/// Sample standard deviation (n−1 denominator, Bessel-corrected).
+/// Zero for fewer than two samples. Panics on empty input.
+pub fn stddev(data: &[f64]) -> f64 {
+    assert!(!data.is_empty());
+    if data.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(data);
+    let ss: f64 = data.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (data.len() - 1) as f64).sqrt()
+}
+
+/// `(mean, half-width)` of a normal-approximation confidence interval
+/// at level `confidence` in (0, 1): `mean ± z · s / √n` with
+/// `z = probit((1 + confidence) / 2)`. The half-width is zero for
+/// fewer than two samples (no spread information). Multi-rep sweep
+/// cells report `mean ± half`.
+pub fn confidence_interval(data: &[f64], confidence: f64) -> (f64, f64) {
+    assert!(
+        confidence > 0.0 && confidence < 1.0,
+        "confidence must be in (0, 1), got {confidence}"
+    );
+    let m = mean(data);
+    if data.len() < 2 {
+        return (m, 0.0);
+    }
+    let z = probit((1.0 + confidence) / 2.0);
+    let half = z * stddev(data) / (data.len() as f64).sqrt();
+    (m, half)
+}
+
 /// Streaming mean/variance/min/max (Welford's algorithm).
 #[derive(Debug, Clone, Default)]
 pub struct Welford {
@@ -213,6 +244,37 @@ mod tests {
     fn means() {
         assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
         assert!((geometric_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_known_values() {
+        // Classic textbook sample: sample stddev = sqrt(32/7).
+        let d = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&d) - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        // Constant data has zero spread; singleton reports zero.
+        assert_eq!(stddev(&[3.0, 3.0, 3.0]), 0.0);
+        assert_eq!(stddev(&[42.0]), 0.0);
+    }
+
+    #[test]
+    fn confidence_interval_known_values() {
+        // mean 12, sample stddev 2, n = 3:
+        // half = 1.959964 * 2 / sqrt(3) = 2.263172...
+        let d = [10.0, 12.0, 14.0];
+        let (m, half) = confidence_interval(&d, 0.95);
+        assert!((m - 12.0).abs() < 1e-12);
+        assert!((half - 1.959964 * 2.0 / 3.0f64.sqrt()).abs() < 1e-4);
+        // Wider level ⇒ wider interval.
+        let (_, half99) = confidence_interval(&d, 0.99);
+        assert!(half99 > half);
+        // One sample ⇒ degenerate interval.
+        assert_eq!(confidence_interval(&[5.0], 0.95), (5.0, 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "confidence must be in (0, 1)")]
+    fn confidence_level_domain_checked() {
+        confidence_interval(&[1.0, 2.0], 1.0);
     }
 
     #[test]

@@ -1,0 +1,68 @@
+//! CLI robustness: bad invocations must exit non-zero with the usage
+//! text on stderr (scripts and CI depend on both).
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_stashcache"))
+        .args(args)
+        .output()
+        .expect("spawn stashcache binary")
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage_on_stderr() {
+    let out = run(&["frobnicate"]);
+    assert!(!out.status.success(), "unknown subcommand must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("unknown command"),
+        "stderr names the problem: {stderr}"
+    );
+    assert!(
+        stderr.contains("commands:") && stderr.contains("sweep"),
+        "stderr carries the usage text: {stderr}"
+    );
+}
+
+#[test]
+fn malformed_flag_fails_with_usage_on_stderr() {
+    let out = run(&["campaign", "--jobs", "notanumber"]);
+    assert!(!out.status.success(), "malformed flag must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("--jobs") && stderr.contains("notanumber"),
+        "stderr names the bad flag: {stderr}"
+    );
+    assert!(stderr.contains("commands:"), "stderr carries usage: {stderr}");
+}
+
+#[test]
+fn bad_flag_values_fail_cleanly() {
+    for args in [
+        &["campaign", "--jobs", "0"][..],
+        &["campaign", "--method", "carrier-pigeon"][..],
+        &["campaign", "--sites", "atlantis"][..],
+        &["sweep", "--preset", "nope"][..],
+        &["scenario", "--runtime", "abacus"][..],
+    ] {
+        let out = run(args);
+        assert!(
+            !out.status.success(),
+            "{args:?} must exit non-zero"
+        );
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains("error:"),
+            "{args:?} reports an error on stderr"
+        );
+    }
+}
+
+#[test]
+fn help_succeeds_on_stdout() {
+    let out = run(&["help"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("commands:") && stdout.contains("sweep"));
+    assert!(out.stderr.is_empty(), "help is not an error");
+}

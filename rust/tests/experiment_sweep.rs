@@ -1,0 +1,134 @@
+//! Acceptance tests for the experiment lab (ISSUE 3 tentpole).
+//!
+//! The determinism contract: a grid run on N OS threads is
+//! **bit-identical** to the same grid run single-threaded — per-trial
+//! records (via the FNV record digest), per-cell summaries, and the
+//! JSON artifact bytes. And the `proxy-vs-stash` preset reproduces the
+//! §4.1 Table 3 scenario as one cell of the grid, matching a direct
+//! `sim::scenario` run exactly.
+
+use stashcache::config::defaults::{paper_federation, COMPUTE_SITES};
+use stashcache::experiment::{artifact, grid::FaultProfile, grid::SizeProfile, run_grid, GridSpec};
+use stashcache::federation::DownloadMethod;
+use stashcache::report::paper;
+use stashcache::sim::scenario::{self, ScenarioConfig};
+
+/// 2 methods × 2 capacities × 2 fault profiles × 3 reps = 24 trials.
+fn acceptance_grid() -> GridSpec {
+    GridSpec {
+        name: "acceptance".into(),
+        root_seed: 7,
+        reps: 3,
+        methods: vec![DownloadMethod::Stash, DownloadMethod::HttpProxy],
+        capacity_scales: vec![0.5, 1.0],
+        jobs: vec![8],
+        arrival_windows: vec![15.0],
+        zipf_s: vec![1.3],
+        size_profiles: vec![SizeProfile::Paper],
+        fault_profiles: vec![FaultProfile::None, FaultProfile::CacheOutage],
+        sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+        experiment: "gwosc".into(),
+        catalog_files: 32,
+        files_per_job: (1, 1),
+        background_flows: 1,
+        table3_cell: false,
+    }
+}
+
+#[test]
+fn parallel_run_is_bit_identical_to_serial() {
+    let grid = acceptance_grid();
+    assert!(grid.trial_count() >= 24, "grid too small for the gate");
+
+    let serial = run_grid(&paper_federation(), &grid, 1);
+    let parallel = run_grid(&paper_federation(), &grid, 4);
+
+    assert_eq!(serial.trials.len(), grid.trial_count());
+    // Per-trial records: the digest covers every TransferRecord field
+    // in completion order, so equality here is record-level equality.
+    for (a, b) in serial.trials.iter().zip(&parallel.trials) {
+        assert_eq!(a.spec, b.spec);
+        assert_eq!(
+            a.records_digest, b.records_digest,
+            "trial {} ({}) diverged across thread counts",
+            a.spec.index,
+            a.spec.cell.label()
+        );
+    }
+    assert_eq!(serial.trials, parallel.trials, "full metric vectors");
+    assert_eq!(serial.cells, parallel.cells, "per-cell summaries");
+    assert_eq!(serial, parallel, "whole SweepResults");
+    assert_eq!(
+        artifact::sweep_json(&serial),
+        artifact::sweep_json(&parallel),
+        "JSON artifact bytes"
+    );
+}
+
+#[test]
+fn every_trial_completes_and_faulted_cells_differ() {
+    let grid = acceptance_grid();
+    let r = run_grid(&paper_federation(), &grid, 4);
+    // Every job of every trial completed, faults or not.
+    for t in &r.trials {
+        assert_eq!(t.downloads, 8, "trial {} lost jobs", t.spec.cell.label());
+    }
+    // The fault axis is live: cache-outage cells actually applied
+    // their CacheDown events mid-run.
+    let outage_faults: u64 = r
+        .trials
+        .iter()
+        .filter(|t| t.spec.cell.fault_profile == FaultProfile::CacheOutage)
+        .map(|t| t.faults_applied)
+        .sum();
+    assert!(
+        outage_faults > 0,
+        "cache-outage cells never applied their fault"
+    );
+    let none_faults: u64 = r
+        .trials
+        .iter()
+        .filter(|t| t.spec.cell.fault_profile == FaultProfile::None)
+        .map(|t| t.faults_applied)
+        .sum();
+    assert_eq!(none_faults, 0, "fault-free cells must stay fault-free");
+    // The frontier pairs every stash cell with its http twin.
+    let frontier = paper::frontier_table(&r);
+    assert_eq!(frontier.rows.len(), r.cells.len() / 2);
+}
+
+#[test]
+fn proxy_vs_stash_preset_reproduces_table3() {
+    let preset = GridSpec::proxy_vs_stash();
+    assert!(preset.table3_cell, "preset must carry the Table 3 cell");
+    let sweep = run_grid(&paper_federation(), &preset, 4);
+    let cell = sweep.table3.as_ref().expect("preset ran the Table 3 cell");
+
+    // The cell must match a direct §4.1 scenario run *exactly* — the
+    // sweep runs the same deterministic scenario on a fresh paper
+    // federation, so every percent-difference agrees to the bit.
+    let direct = scenario::run(paper_federation(), &ScenarioConfig::default());
+    assert_eq!(cell.rows.len(), COMPUTE_SITES.len());
+    for (row, site) in cell.rows.iter().zip(COMPUTE_SITES.iter()) {
+        assert_eq!(&row.site, site);
+        assert_eq!(
+            row.pct_2_3gb,
+            direct.pct_difference(site, "p95"),
+            "{site} 2.3GB cell"
+        );
+        assert_eq!(
+            row.pct_10gb,
+            direct.pct_difference(site, "f10g"),
+            "{site} 10GB cell"
+        );
+    }
+    // And the headline signs survive inside the sweep: Colorado's
+    // proxy wins big, Syracuse's local cache wins at 10 GB (Table 3).
+    let get = |site: &str| cell.rows.iter().find(|r| r.site == site).unwrap();
+    assert!(get("colorado").pct_2_3gb.unwrap() > 50.0);
+    assert!(get("syracuse").pct_10gb.unwrap() < 0.0);
+
+    // The campaign half of the preset produced the frontier around it.
+    assert_eq!(sweep.trials.len(), preset.trial_count());
+    assert!(!paper::frontier_table(&sweep).rows.is_empty());
+}
