@@ -5,6 +5,13 @@
 //! (every open/close), the GeoIP scorer (every stashcp startup; both
 //! the rust and the PJRT-artifact backends), and whole downloads
 //! end-to-end.
+//!
+//! The allocator-scaling section churns 1k/4k/16k concurrent flows
+//! through a star of 32 disjoint single-link "sites" (the warm-traffic
+//! shape of the federation topology) and emits `BENCH_netsim.json` at
+//! the repository root: events/s, allocator passes, and flows-touched
+//! per event — the perf-trajectory evidence that the component-local
+//! allocator costs O(affected component), not O(active flows).
 
 #[path = "harness.rs"]
 mod harness;
@@ -21,6 +28,7 @@ use stashcache::netsim::{FlowSpec, Network};
 use stashcache::runtime::{GeoScorer, Runtime};
 use stashcache::sim::workload::FileRef;
 use stashcache::util::{ByteSize, Pcg64, SimTime};
+use std::fmt::Write as _;
 
 fn main() {
     let mut shape = harness::Shape::new();
@@ -74,6 +82,141 @@ fn main() {
             events as f64 / secs
         );
         shape.check(events as f64 / secs > 100_000.0, "netsim >100k completions/s");
+    }
+
+    // --- netsim: component-local allocator scaling ---------------------------
+    // 32 disjoint single-link components (the shape warm federation
+    // traffic takes: one per site), 1k/4k/16k concurrent flows churned
+    // to steady state. The per-event allocator cost is the touched
+    // component (~flows/32), not the population — asserted below and
+    // recorded in BENCH_netsim.json as the perf trajectory's first
+    // point.
+    {
+        struct Tier {
+            flows: usize,
+            events: u64,
+            wall: f64,
+            allocations: u64,
+            components_touched: u64,
+            flows_refixed: u64,
+            peak_component: usize,
+        }
+        const SITES: usize = 32;
+        let mut tiers: Vec<Tier> = Vec::new();
+        println!("[netsim allocator scaling] {SITES} disjoint components");
+        for &n in &[1_024usize, 4_096, 16_384] {
+            let mut net = Network::new();
+            let links: Vec<_> = (0..SITES).map(|_| net.add_link_gbps(100.0)).collect();
+            let mut rng = Pcg64::new(9, n as u64);
+            // Fill to n concurrent flows, round-robin across sites.
+            let mut site_of: std::collections::HashMap<stashcache::netsim::FlowId, usize> =
+                std::collections::HashMap::with_capacity(n);
+            let mut t = SimTime::ZERO;
+            for i in 0..n {
+                let id = net.start_flow(
+                    FlowSpec {
+                        path: vec![links[i % SITES]],
+                        bytes: rng.gen_range(1_000_000, 10_000_000),
+                        rate_cap: None,
+                    },
+                    t,
+                );
+                site_of.insert(id, i % SITES);
+            }
+            // Steady-state churn: every completion is replaced at the
+            // same site and instant, holding each site at n/SITES.
+            let before = net.stats;
+            let target_events = (3 * n as u64).min(60_000);
+            let mut events = 0u64;
+            let start = std::time::Instant::now();
+            while events < target_events {
+                let tc = net.next_completion().expect("population is never empty");
+                t = tc;
+                for done in net.advance(tc) {
+                    events += 1; // completion
+                    let site = site_of.remove(&done.flow).expect("tracked flow");
+                    let id = net.start_flow(
+                        FlowSpec {
+                            path: vec![links[site]],
+                            bytes: rng.gen_range(1_000_000, 10_000_000),
+                            rate_cap: None,
+                        },
+                        t,
+                    );
+                    site_of.insert(id, site);
+                    events += 1; // respawn
+                }
+            }
+            let wall = start.elapsed().as_secs_f64();
+            let d_alloc = net.stats.allocations - before.allocations;
+            let d_comps = net.stats.components_touched - before.components_touched;
+            let d_refixed = net.stats.flows_refixed - before.flows_refixed;
+            let touched_per_event = d_refixed as f64 / events.max(1) as f64;
+            println!(
+                "  {n:>6} flows: {events} events in {wall:.3}s = {:.0}/s | {d_alloc} passes | \
+                 {:.1} flows/event ({:.1}% of active) | peak component {}",
+                events as f64 / wall.max(1e-9),
+                touched_per_event,
+                100.0 * touched_per_event / n as f64,
+                net.stats.peak_component,
+            );
+            shape.check(
+                net.active_flows() == n,
+                "churn holds the population constant",
+            );
+            shape.check(
+                touched_per_event < 0.10 * n as f64,
+                "allocator touches <10% of active flows per event",
+            );
+            shape.check(
+                net.stats.peak_component <= n / SITES + 1,
+                "components never exceed one site's flows",
+            );
+            tiers.push(Tier {
+                flows: n,
+                events,
+                wall,
+                allocations: d_alloc,
+                components_touched: d_comps,
+                flows_refixed: d_refixed,
+                peak_component: net.stats.peak_component,
+            });
+        }
+        shape.check(
+            tiers[0].events as f64 / tiers[0].wall.max(1e-9) > 50_000.0,
+            "1k-flow churn sustains >50k events/s",
+        );
+
+        // --- BENCH_netsim.json (repo root, CWD-independent) ---------------
+        let mut json = String::new();
+        json.push_str("{\n  \"bench\": \"netsim_allocator\",\n");
+        let _ = writeln!(json, "  \"sites\": {SITES},");
+        json.push_str("  \"tiers\": [\n");
+        for (i, t) in tiers.iter().enumerate() {
+            let _ = write!(
+                json,
+                "    {{\"flows\": {}, \"events\": {}, \"wall_s\": {:.4}, \
+                 \"events_per_sec\": {:.0}, \"allocator_passes\": {}, \
+                 \"components_touched\": {}, \"flows_refixed\": {}, \
+                 \"flows_touched_per_event\": {:.2}, \"peak_component\": {}}}",
+                t.flows,
+                t.events,
+                t.wall,
+                t.events as f64 / t.wall.max(1e-9),
+                t.allocations,
+                t.components_touched,
+                t.flows_refixed,
+                t.flows_refixed as f64 / t.events.max(1) as f64,
+                t.peak_component,
+            );
+            json.push_str(if i + 1 < tiers.len() { ",\n" } else { "\n" });
+        }
+        json.push_str("  ]\n}\n");
+        let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_netsim.json");
+        match std::fs::write(out, &json) {
+            Ok(()) => println!("  wrote {out}"),
+            Err(e) => println!("  WARNING: could not write {out}: {e}"),
+        }
     }
 
     // --- cache planner -------------------------------------------------------

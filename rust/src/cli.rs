@@ -118,9 +118,10 @@ pub fn usage() -> String {
                                         run the §4.1 benchmark (Figs 6-8, Table 3)\n\
        campaign [--jobs N] [--sites a,b] [--window SECS] [--zipf S]\n\
                 [--catalog N] [--method stash|http] [--seed S]\n\
-                [--experiment NAME] [--background N]\n\
+                [--experiment NAME] [--background N] [--profile]\n\
                                         run N concurrent Poisson/Zipf jobs through\n\
-                                        the session engine (coalescing, contention)\n\
+                                        the session engine (coalescing, contention);\n\
+                                        --profile prints allocator counters\n\
        chaos    [campaign flags] [--kill-cache SITE [--down-at S] [--up-at S]]\n\
                 [--cut-wan SITE [--cut-at S] [--heal-at S]]\n\
                 [--degrade-origin N [--factor F] [--degrade-at S] [--restore-at S]]\n\
@@ -130,9 +131,11 @@ pub fn usage() -> String {
                                         (default: single-cache outage at peak load)\n\
        sweep    [--preset smoke|proxy-vs-stash] [--grid PATH.toml]\n\
                 [--threads N] [--reps N] [--seed S] [--out-dir DIR]\n\
+                [--profile]\n\
                                         run a deterministic parameter grid in\n\
                                         parallel; writes BENCH_sweep.json, CSVs and\n\
-                                        the proxy-vs-StashCache frontier report\n\
+                                        the proxy-vs-StashCache frontier report;\n\
+                                        --profile prints allocator counters\n\
        usage --days D [--jobs-per-hour J]\n\
                                         run a usage simulation (Tables 1-2, Fig 4)\n\
        report --all --out-dir DIR       regenerate every paper table/figure\n\
@@ -272,6 +275,41 @@ fn parse_campaign(flags: &Flags, cfg: &FederationConfig) -> Result<CampaignConfi
     Ok(ccfg)
 }
 
+/// `--profile`: one allocator-counter line (component-local
+/// incremental max-min — see netsim::AllocStats and ARCHITECTURE.md).
+/// Shared by `campaign`/`chaos` (one run) and `sweep` (trial totals).
+fn allocator_profile_line(
+    passes: u64,
+    components: u64,
+    refixed: u64,
+    events: u64,
+    peak: usize,
+) -> String {
+    let per_event = if events == 0 {
+        0.0
+    } else {
+        refixed as f64 / events as f64
+    };
+    format!(
+        "allocator: {passes} passes | {components} components touched | \
+         {refixed} flows re-fixed ({per_event:.2} per event) | peak component {peak} flows"
+    )
+}
+
+fn print_allocator_profile(results: &CampaignResults) {
+    let e = &results.engine;
+    println!(
+        "{}",
+        allocator_profile_line(
+            e.allocator_passes,
+            e.components_touched,
+            e.flows_refixed,
+            results.events_processed,
+            e.peak_component,
+        )
+    );
+}
+
 /// Render the per-site table and summary lines for a finished campaign.
 fn print_campaign(ccfg: &CampaignConfig, results: &CampaignResults, wall: f64) {
     let mut per_site = report::Table::new(
@@ -328,6 +366,9 @@ fn cmd_campaign(flags: &Flags) -> Result<()> {
     let wall_start = std::time::Instant::now();
     let results = campaign::run(cfg, &ccfg);
     print_campaign(&ccfg, &results, wall_start.elapsed().as_secs_f64());
+    if flags.has("profile") {
+        print_allocator_profile(&results);
+    }
     Ok(())
 }
 
@@ -441,6 +482,9 @@ fn cmd_chaos(flags: &Flags) -> Result<()> {
     let wall_start = std::time::Instant::now();
     let results = campaign::run_on_with_faults(&mut fed, &ccfg, &faults);
     print_campaign(&ccfg, &results.campaign, wall_start.elapsed().as_secs_f64());
+    if flags.has("profile") {
+        print_allocator_profile(&results.campaign);
+    }
     println!("\nfault log:");
     for ev in &results.fault_log {
         println!("  {} {:?}", ev.at, ev.kind);
@@ -545,6 +589,18 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
         events,
         events as f64 / wall.max(1e-9),
     );
+    if flags.has("profile") {
+        let passes: u64 = results.trials.iter().map(|t| t.allocator_passes).sum();
+        let comps: u64 = results.trials.iter().map(|t| t.components_touched).sum();
+        let refixed: u64 = results.trials.iter().map(|t| t.flows_refixed).sum();
+        let peak = results
+            .trials
+            .iter()
+            .map(|t| t.peak_component)
+            .max()
+            .unwrap_or(0);
+        println!("{}", allocator_profile_line(passes, comps, refixed, events, peak));
+    }
 
     let out_dir = PathBuf::from(flags.get("out-dir").unwrap_or("."));
     let written = experiment::artifact::write_all(&out_dir, &results)?;

@@ -60,7 +60,9 @@ pub fn sweep_json(results: &SweepResults) -> String {
              \"aggregate_mbps\": {:.4}, \"p50_s\": {:.6}, \"p95_s\": {:.6}, \
              \"p99_s\": {:.6}, \"makespan_s\": {:.6}, \"peak_concurrent\": {}, \
              \"coalesced_joins\": {}, \"faults_applied\": {}, \"failovers\": {}, \
-             \"direct_fallbacks\": {}, \"events\": {}, \"records_digest\": \"{}\"}}",
+             \"direct_fallbacks\": {}, \"events\": {}, \"allocator_passes\": {}, \
+             \"components_touched\": {}, \"flows_refixed\": {}, \
+             \"peak_component\": {}, \"records_digest\": \"{}\"}}",
             t.spec.index,
             json_str(&t.spec.cell.label()),
             t.spec.rep,
@@ -79,6 +81,10 @@ pub fn sweep_json(results: &SweepResults) -> String {
             t.failovers,
             t.direct_fallbacks,
             t.events_processed,
+            t.allocator_passes,
+            t.components_touched,
+            t.flows_refixed,
+            t.peak_component,
             t.records_digest,
         );
         out.push_str(if i + 1 < results.trials.len() { ",\n" } else { "\n" });

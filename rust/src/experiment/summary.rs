@@ -38,6 +38,13 @@ pub struct TrialOutcome {
     pub failovers: u64,
     pub direct_fallbacks: u64,
     pub events_processed: u64,
+    /// Allocator counters (see `netsim::AllocStats`): passes run,
+    /// component water-fills, flow rate assignments, and the largest
+    /// component — the O(affected) observability the perf pass tracks.
+    pub allocator_passes: u64,
+    pub components_touched: u64,
+    pub flows_refixed: u64,
+    pub peak_component: usize,
     /// FNV-1a over every transfer record (order, paths, bytes,
     /// methods, hit flags, durations) — two runs agree on this iff
     /// they produced identical records in identical order.
@@ -110,6 +117,10 @@ pub fn outcome_of(spec: &TrialSpec, results: &CampaignResults, fed: &FedSim) -> 
         failovers: results.engine.failovers,
         direct_fallbacks: results.engine.direct_fallbacks,
         events_processed: results.events_processed,
+        allocator_passes: results.engine.allocator_passes,
+        components_touched: results.engine.components_touched,
+        flows_refixed: results.engine.flows_refixed,
+        peak_component: results.engine.peak_component,
         records_digest: digest_records(&results.records),
     }
 }

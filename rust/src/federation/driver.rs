@@ -93,6 +93,20 @@ pub struct EngineStats {
     pub aborted_bytes: u64,
     /// Sessions that gave up on caches and streamed from the origin.
     pub direct_fallbacks: u64,
+    /// Allocator passes the network ran while this engine drove it
+    /// (see [`crate::netsim::AllocStats`]; deltas over the run).
+    pub allocator_passes: u64,
+    /// Component water-fills across those passes — the O(affected)
+    /// unit of allocator work.
+    pub components_touched: u64,
+    /// Flow rate assignments across those water-fills. Divided by
+    /// `events_processed` this is the allocator's flows-touched-per-
+    /// event figure the perf benches report.
+    pub flows_refixed: u64,
+    /// Largest single component water-filled (flows) during this
+    /// engine's runs — per-run like the other allocator counters, even
+    /// when several engines share one federation.
+    pub peak_component: usize,
 }
 
 /// The event-driven download engine. Create one per batch of work; it
@@ -208,6 +222,10 @@ impl SessionEngine {
     /// world. Faults due after the last session completes stay pending
     /// for the next engine run.
     pub fn run(&mut self, fed: &mut FedSim) {
+        let alloc_before = fed.net.stats;
+        // Track this run's own component high-water mark; the
+        // network's lifetime peak is restored below.
+        fed.net.stats.peak_component = 0;
         let mut guard = 0u64;
         while self.outstanding > 0 {
             guard += 1;
@@ -243,6 +261,15 @@ impl SessionEngine {
                 ),
             }
         }
+        // Fold the network's allocator counters (deltas over this run)
+        // into the engine's stats for campaign/sweep observability.
+        let alloc = fed.net.stats;
+        self.stats.allocator_passes += alloc.allocations - alloc_before.allocations;
+        self.stats.components_touched +=
+            alloc.components_touched - alloc_before.components_touched;
+        self.stats.flows_refixed += alloc.flows_refixed - alloc_before.flows_refixed;
+        self.stats.peak_component = self.stats.peak_component.max(alloc.peak_component);
+        fed.net.stats.peak_component = alloc.peak_component.max(alloc_before.peak_component);
     }
 
     /// Advance the network to `t` and dispatch its completions.
@@ -290,7 +317,7 @@ impl SessionEngine {
 
     /// Apply one fault to the federation and unwind every session it
     /// interrupts. All iteration orders are deterministic (session-id
-    /// order, sorted waiter keys, FlowId order from the network).
+    /// order, sorted waiter keys, flow start order from the network).
     fn on_fault(&mut self, fed: &mut FedSim, kind: FaultKind, t: SimTime) {
         self.stats.faults_applied += 1;
         fed.fault_log.push(FaultEvent { at: t, kind });

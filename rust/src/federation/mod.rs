@@ -31,6 +31,13 @@
 //! and data transfer nodes during our tests", §4.1) runs as persistent
 //! flows on each origin's DTN link, respawned by whichever engine is
 //! advancing time.
+//!
+//! The network's component-local allocator ([`crate::netsim::network`])
+//! exposes its work counters through [`crate::netsim::AllocStats`];
+//! [`driver::SessionEngine::run`] folds the per-run deltas into
+//! [`driver::EngineStats`] (allocator passes, components touched,
+//! flows re-fixed, peak component), which campaigns and sweeps carry
+//! into their results and `--profile` output.
 
 pub mod backend;
 pub mod driver;

@@ -9,7 +9,12 @@
 //! paper's large-file crossover).
 //!
 //! * [`engine`] — deterministic event queue over [`crate::util::SimTime`].
-//! * [`network`] — links, flows, max-min rate allocation, completions.
+//! * [`network`] — links, flows, component-local incremental max-min
+//!   rate allocation, completions. A flow arrival or departure
+//!   re-allocates only the connected component of links it touches
+//!   (O(affected), not O(everything)); see the module doc for the
+//!   slab/heap/aggregate-rate machinery and ARCHITECTURE.md for the
+//!   per-event complexity table.
 //! * [`topology`] — builds the federation graph (workers, proxies,
 //!   caches, borders, WAN core) from a [`crate::config::FederationConfig`]
 //!   and answers path/RTT queries.
@@ -19,5 +24,5 @@ pub mod network;
 pub mod topology;
 
 pub use engine::EventQueue;
-pub use network::{Completion, FlowId, FlowSpec, LinkId, Network};
+pub use network::{AllocStats, Completion, FlowId, FlowSpec, LinkId, Network};
 pub use topology::{Endpoint, Route, Topology};

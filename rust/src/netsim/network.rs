@@ -1,4 +1,5 @@
-//! Flow-level network model with max-min fair bandwidth sharing.
+//! Flow-level network model with **component-local incremental**
+//! max-min fair bandwidth sharing.
 //!
 //! Each [`Link`] has a capacity in bytes/second. A [`Flow`] occupies a
 //! path (set of links) and optionally carries a per-connection rate
@@ -8,20 +9,68 @@
 //! water-filling: repeatedly saturate the most constrained link (or
 //! flow ceiling) and freeze the flows it bottlenecks.
 //!
-//! Completions are kinetic: the earliest projected completion is
-//! re-derived after every rate change, so the driver can interleave its
-//! own timer events with transfer completions deterministically.
+//! ## Component locality
+//!
+//! Max-min fairness decomposes exactly over the connected components
+//! of the link/flow graph (two links are connected when one flow
+//! crosses both): a flow's rate depends only on the links it can reach
+//! through shared links, because water-filling never moves capacity
+//! between links that share no flow. The allocator exploits this:
+//!
+//! * links are grouped into **components** ([`Component`]), merged when
+//!   a new flow spans several and re-derived (split) when a flow's
+//!   departure may have disconnected one;
+//! * a flow arrival/departure/link change re-waterfills **only the
+//!   component it touches** — other components keep their rates,
+//!   cached per-link aggregate rates, and projected completions;
+//! * flows live in a generation-tagged **slab** (`Vec`-backed, ids
+//!   never dangle) so the water-filling inner loops are index
+//!   arithmetic, not hashing;
+//! * each component keeps a **min-heap of projected completions**
+//!   (rebuilt only when the component's rates change), and the global
+//!   next-completion is the min over component heads — no O(flows)
+//!   rescans;
+//! * every link caches its **aggregate allocated rate** at fix time,
+//!   so advancing the clock charges `bytes_carried` in O(links), not
+//!   O(Σ member flows).
+//!
+//! In the federation's star-of-sites topologies (contention lives at
+//! site edges) warm traffic splits into many small per-site components,
+//! so the per-event allocator cost is O(affected component), not
+//! O(everything) — see ARCHITECTURE.md for the complexity table.
+//!
+//! Completions are kinetic: each flow's completion instant is computed
+//! when its rate is fixed and stays valid until the next rate change,
+//! so the driver can interleave its own timer events with transfer
+//! completions deterministically.
 
-use crate::util::{SimTime};
-use std::collections::HashMap;
+use crate::util::SimTime;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Handle to a link.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct LinkId(pub u32);
 
-/// Handle to an active flow.
+/// Handle to an active flow: a slab slot in the low 32 bits, the
+/// slot's generation in the high 32 bits. Handles to finished flows
+/// never resolve (the generation advances when a slot is reused), and
+/// comparing handles is **not** start-order — the allocator orders
+/// flows by their internal start sequence, not by `FlowId`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FlowId(pub u64);
+
+impl FlowId {
+    fn new(slot: u32, gen: u32) -> FlowId {
+        FlowId(((gen as u64) << 32) | slot as u64)
+    }
+    fn slot(self) -> usize {
+        (self.0 & 0xffff_ffff) as usize
+    }
+    fn generation(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+}
 
 /// Specification of a new flow.
 #[derive(Debug, Clone)]
@@ -34,6 +83,9 @@ pub struct FlowSpec {
     pub rate_cap: Option<f64>,
 }
 
+/// Sentinel for "link belongs to no component" (no member flows).
+const NO_COMP: u32 = u32::MAX;
+
 #[derive(Debug)]
 struct Link {
     capacity: f64, // bytes/sec
@@ -42,19 +94,63 @@ struct Link {
     factor: f64,
     /// Severed links carry no flows and reject new ones until restored.
     up: bool,
-    /// Active flows on this link (kept sorted for determinism).
+    /// Active flows on this link. Always sorted by flow start
+    /// sequence: new flows append (their sequence is the largest so
+    /// far) and removals preserve order, so sortedness is maintained,
+    /// never re-derived.
     flows: Vec<FlowId>,
     /// Cumulative bytes that have traversed this link.
     bytes_carried: f64,
+    /// Sum of the allocated rates of the member flows, cached at fix
+    /// time so clock advances charge `bytes_carried` in O(links).
+    agg_rate: f64,
+    /// Component this link currently belongs to (`NO_COMP` when it has
+    /// no member flows).
+    comp: u32,
 }
 
 #[derive(Debug)]
 struct Flow {
+    /// Start-order sequence number: the deterministic ordering key for
+    /// every allocator iteration (slab slots are reused; `seq` never
+    /// is).
+    seq: u64,
     path: Vec<LinkId>,
-    remaining: f64,
     rate: f64,
     rate_cap: Option<f64>,
     started: SimTime,
+    /// Remaining bytes as of `fixed_at`. Not decremented per segment:
+    /// it is materialised lazily (`remaining - rate·Δt`) only when the
+    /// flow's component is re-waterfilled or the flow is removed.
+    remaining: f64,
+    /// Instant `remaining` was last materialised (== the instant the
+    /// current `rate` took effect).
+    fixed_at: SimTime,
+}
+
+/// One slab slot: the generation advances every time the slot is
+/// freed, so stale [`FlowId`]s stop resolving.
+#[derive(Debug, Default)]
+struct Slot {
+    gen: u32,
+    flow: Option<Flow>,
+}
+
+/// A connected component of the link/flow graph: the unit of
+/// incremental re-allocation.
+#[derive(Debug, Default)]
+struct Component {
+    /// Member links, ascending. A link is a member iff it carries at
+    /// least one flow.
+    links: Vec<u32>,
+    /// Min-heap of `(eta µs, flow seq, flow slot)` — rebuilt whenever
+    /// the component is re-waterfilled, so entries are never stale.
+    heap: BinaryHeap<Reverse<(u64, u64, u32)>>,
+    /// Rates stale: re-waterfill at the next fix-up.
+    dirty: bool,
+    /// Membership stale: a flow was removed, so the component may have
+    /// split — re-derive connectivity before water-filling.
+    stale: bool,
 }
 
 /// A completed transfer, as reported by [`Network::advance`].
@@ -65,19 +161,42 @@ pub struct Completion {
     pub started: SimTime,
 }
 
+/// Lifetime allocator counters (perf observability; surfaced through
+/// `EngineStats` → campaign/sweep reports and `--profile`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct AllocStats {
+    /// Fix-up passes that did work (≥ 1 component re-waterfilled).
+    pub allocations: u64,
+    /// Component water-fills run (the O(affected) unit of work).
+    pub components_touched: u64,
+    /// Flow rate assignments across those water-fills.
+    pub flows_refixed: u64,
+    /// Largest single component water-filled, in flows.
+    pub peak_component: usize,
+}
+
 /// The link/flow state and allocator. Time never advances implicitly:
 /// the driver calls [`Network::advance`] to move to a chosen instant.
 #[derive(Debug, Default)]
 pub struct Network {
     links: Vec<Link>,
-    flows: HashMap<FlowId, Flow>,
-    next_flow: u64,
-    /// Last instant at which `remaining` was reconciled.
+    slots: Vec<Slot>,
+    free_slots: Vec<u32>,
+    /// Next flow start-order sequence number.
+    next_seq: u64,
+    /// Active flow count.
+    active: usize,
+    comps: Vec<Option<Component>>,
+    free_comps: Vec<u32>,
+    /// Any component dirty (cheap gate for the fix-up pass).
+    any_dirty: bool,
+    /// Last instant at which progress was reconciled.
     clock: SimTime,
-    /// Rates stale (flow set changed since last allocation)?
-    dirty: bool,
-    /// Lifetime counters for perf accounting.
-    pub allocations: u64,
+    /// Water-filling scratch, indexed by link (reset per component).
+    scratch_residual: Vec<f64>,
+    scratch_active: Vec<usize>,
+    /// Lifetime perf counters.
+    pub stats: AllocStats,
 }
 
 impl Network {
@@ -95,7 +214,11 @@ impl Network {
             up: true,
             flows: Vec::new(),
             bytes_carried: 0.0,
+            agg_rate: 0.0,
+            comp: NO_COMP,
         });
+        self.scratch_residual.push(0.0);
+        self.scratch_active.push(0);
         LinkId(self.links.len() as u32 - 1)
     }
 
@@ -104,7 +227,7 @@ impl Network {
     }
 
     pub fn active_flows(&self) -> usize {
-        self.flows.len()
+        self.active
     }
 
     /// Cumulative bytes carried by a link (for the Fig 5 WAN counters).
@@ -112,22 +235,52 @@ impl Network {
         self.links[link.0 as usize].bytes_carried
     }
 
-    /// Debug snapshot: (flow, remaining bytes, rate B/s, path).
+    fn flow(&self, id: FlowId) -> Option<&Flow> {
+        let s = self.slots.get(id.slot())?;
+        if s.gen == id.generation() {
+            s.flow.as_ref()
+        } else {
+            None
+        }
+    }
+
+    /// Remaining bytes of a flow materialised at the current clock.
+    fn remaining_now(&self, f: &Flow) -> f64 {
+        let dt = (self.clock - f.fixed_at).as_secs_f64();
+        (f.remaining - f.rate * dt).max(0.0)
+    }
+
+    /// Debug snapshot: (flow, remaining bytes, rate B/s, path), in
+    /// start order.
     pub fn flows_snapshot(&mut self) -> Vec<(FlowId, f64, f64, Vec<LinkId>)> {
-        self.reallocate_if_dirty();
-        let mut v: Vec<_> = self
-            .flows
+        self.fixup();
+        let mut order: Vec<(u64, u32)> = self
+            .slots
             .iter()
-            .map(|(&id, f)| (id, f.remaining, f.rate, f.path.clone()))
+            .enumerate()
+            .filter(|(_, s)| s.flow.is_some())
+            .map(|(slot, s)| (s.flow.as_ref().expect("live flow").seq, slot as u32))
             .collect();
-        v.sort_by_key(|e| e.0);
-        v
+        order.sort_unstable();
+        order
+            .into_iter()
+            .map(|(_, slot)| {
+                let s = &self.slots[slot as usize];
+                let f = s.flow.as_ref().expect("live flow");
+                (
+                    FlowId::new(slot, s.gen),
+                    self.remaining_now(f),
+                    f.rate,
+                    f.path.clone(),
+                )
+            })
+            .collect()
     }
 
     /// Current allocated rate of a flow (bytes/sec). Zero if unknown.
     pub fn flow_rate(&mut self, flow: FlowId) -> f64 {
-        self.reallocate_if_dirty();
-        self.flows.get(&flow).map(|f| f.rate).unwrap_or(0.0)
+        self.fixup();
+        self.flow(flow).map(|f| f.rate).unwrap_or(0.0)
     }
 
     /// Start a flow at time `now` (must be >= the last event time).
@@ -149,54 +302,57 @@ impl Network {
                 "starting a flow over a down link {l:?}"
             );
         }
-        self.reconcile(now);
-        let id = FlowId(self.next_flow);
-        self.next_flow += 1;
+        self.settle(now);
+        let slot = match self.free_slots.pop() {
+            Some(s) => s as usize,
+            None => {
+                self.slots.push(Slot::default());
+                self.slots.len() - 1
+            }
+        };
+        let id = FlowId::new(slot as u32, self.slots[slot].gen);
+        let seq = self.next_seq;
+        self.next_seq += 1;
         for l in &path {
+            // `seq` is the largest so far: appending keeps the member
+            // list sorted by start sequence.
             self.links[l.0 as usize].flows.push(id);
         }
-        self.flows.insert(
-            id,
-            Flow {
-                path,
-                remaining: spec.bytes as f64,
-                rate: 0.0,
-                rate_cap: spec.rate_cap,
-                started: now,
-            },
-        );
-        self.dirty = true;
+        self.merge_components(&path);
+        self.slots[slot].flow = Some(Flow {
+            seq,
+            path,
+            rate: 0.0,
+            rate_cap: spec.rate_cap,
+            started: now,
+            remaining: spec.bytes as f64,
+            fixed_at: now,
+        });
+        self.active += 1;
         id
     }
 
     /// Abort a flow (e.g. failure injection). Returns bytes left.
     pub fn cancel_flow(&mut self, flow: FlowId, now: SimTime) -> Option<u64> {
-        self.reconcile(now);
-        let f = self.flows.remove(&flow)?;
-        for l in &f.path {
-            self.links[l.0 as usize].flows.retain(|&x| x != flow);
-        }
-        self.dirty = true;
-        Some(f.remaining.ceil() as u64)
+        self.settle(now);
+        self.flow(flow)?;
+        let f = self.detach(flow.slot());
+        Some(self.remaining_now(&f).ceil() as u64)
     }
 
     /// Sever a link (failure injection): every flow crossing it is
-    /// killed and returned (with its remaining bytes, in `FlowId`
-    /// order), surviving flows are re-allocated max-min fairly, and new
-    /// flows may not use the link until [`Network::restore_link`].
+    /// killed and returned (with its remaining bytes, in start order),
+    /// surviving flows are re-allocated max-min fairly, and new flows
+    /// may not use the link until [`Network::restore_link`].
     pub fn cut_link(&mut self, link: LinkId, now: SimTime) -> Vec<(FlowId, u64)> {
-        self.reconcile(now);
+        self.settle(now);
         let li = link.0 as usize;
-        let mut ids = self.links[li].flows.clone();
-        ids.sort_unstable();
+        // Member list is maintained in start order already.
+        let ids = self.links[li].flows.clone();
         let mut killed = Vec::with_capacity(ids.len());
         for id in ids {
-            let f = self.flows.remove(&id).expect("flow on cut link");
-            for l in &f.path {
-                self.links[l.0 as usize].flows.retain(|&x| x != id);
-            }
-            killed.push((id, f.remaining.ceil() as u64));
-            self.dirty = true;
+            let f = self.detach(id.slot());
+            killed.push((id, self.remaining_now(&f).ceil() as u64));
         }
         self.links[li].up = false;
         killed
@@ -215,70 +371,83 @@ impl Network {
     /// Scale a link's effective capacity by `factor` in (0, 1] —
     /// origin brownouts and partial degradations. `1.0` restores full
     /// capacity. Progress up to `now` is applied at the old rates
-    /// first; active flows are then re-allocated.
+    /// first; the link's component is then re-allocated (other
+    /// components are untouched).
     pub fn scale_link_capacity(&mut self, link: LinkId, factor: f64, now: SimTime) {
         assert!(
             factor > 0.0 && factor <= 1.0 && factor.is_finite(),
             "capacity factor must be in (0, 1], got {factor}"
         );
-        self.reconcile(now);
-        self.links[link.0 as usize].factor = factor;
-        self.dirty = true;
+        self.settle(now);
+        let li = link.0 as usize;
+        self.links[li].factor = factor;
+        let c = self.links[li].comp;
+        if c != NO_COMP {
+            // Rates change but membership cannot: no `stale`.
+            self.comps[c as usize].as_mut().expect("live comp").dirty = true;
+            self.any_dirty = true;
+        }
     }
 
-    /// Earliest projected completion time, if any flow is active.
+    /// Earliest projected completion instant, if any flow is active:
+    /// the minimum over component heap heads, clamped to at least one
+    /// microsecond past the clock so callers always make progress.
+    ///
+    /// Zero-rate policy (one place, one rule): allocation assigns
+    /// every active flow a strictly positive rate — water-filling over
+    /// positive effective capacities cannot do otherwise — so every
+    /// flow has a finite projected completion. This is debug-asserted
+    /// where rates are fixed ([`Network::fix_flow`]); a zero-rate flow
+    /// would never complete and is an allocator bug, not a state to
+    /// skip silently.
     pub fn next_completion(&mut self) -> Option<SimTime> {
-        self.reallocate_if_dirty();
-        let mut best: Option<f64> = None;
-        for f in self.flows.values() {
-            debug_assert!(f.rate > 0.0, "allocated flow with zero rate");
-            let eta = f.remaining / f.rate;
-            best = Some(best.map_or(eta, |b: f64| b.min(eta)));
-        }
-        best.map(|eta| {
-            // Round up to the next microsecond so the completion event
-            // never lands before the flow actually finishes; for etas
-            // below the clock's f64 resolution, force a 1 µs tick so
-            // callers always make progress.
-            let t = self.clock.as_secs_f64() + eta;
-            SimTime(((t * 1e6).ceil() as u64).max(self.clock.0 + 1))
-        })
+        self.fixup();
+        self.earliest_eta().map(|eta| SimTime(eta.0.max(self.clock.0 + 1)))
+    }
+
+    /// Minimum stored completion instant across components. O(number
+    /// of components); heaps are exact after [`Network::fixup`].
+    fn earliest_eta(&self) -> Option<SimTime> {
+        self.comps
+            .iter()
+            .flatten()
+            .filter_map(|c| c.heap.peek())
+            .map(|&Reverse((eta, _, _))| SimTime(eta))
+            .min()
     }
 
     /// Advance to `t`, applying transfer progress and collecting flows
-    /// that finish at or before `t` (in deterministic FlowId order).
+    /// that finish at or before `t` (in deterministic start order).
     ///
     /// `t` should not exceed [`Network::next_completion`] by more than
     /// the 1 µs rounding slack; completions beyond `t` stay active.
     pub fn advance(&mut self, t: SimTime) -> Vec<Completion> {
-        self.reallocate_if_dirty();
+        self.fixup();
         let mut done = Vec::new();
         // Flows may complete in cascades: when one finishes, the others
-        // speed up. Process piecewise-constant segments. Finished flows
-        // are collected at the top so that flows whose completion
-        // instant was crossed by a reconcile (a new flow arriving after
-        // time already passed) are retired even when `t == clock`.
+        // speed up. Process piecewise-constant segments. Due flows are
+        // collected at the top so that a flow whose completion instant
+        // was crossed by a settle (a new flow arriving after time
+        // already passed) is retired promptly even when `t == clock` —
+        // immediately when its component was untouched, or within the
+        // 1 µs re-fix slack when the settle-time mutation re-filled it
+        // (the re-fix clamps its fresh eta to clock+1).
         loop {
-            let mut finished: Vec<FlowId> = self
-                .flows
-                .iter()
-                .filter(|(_, f)| f.remaining < 1.0) // sub-byte epsilon
-                .map(|(&id, _)| id)
-                .collect();
-            finished.sort_unstable();
-            for id in finished {
-                let f = self.flows.remove(&id).expect("flow exists");
-                for l in &f.path {
-                    self.links[l.0 as usize].flows.retain(|&x| x != id);
+            let due = self.pop_due();
+            if !due.is_empty() {
+                for (_seq, id) in due {
+                    let f = self.detach(id.slot());
+                    done.push(Completion {
+                        flow: id,
+                        at: self.clock,
+                        started: f.started,
+                    });
                 }
-                done.push(Completion {
-                    flow: id,
-                    at: self.clock,
-                    started: f.started,
-                });
-                self.dirty = true;
+                // Survivors in the affected components re-fix (and get
+                // fresh, strictly later completion instants).
+                self.fixup();
+                continue;
             }
-            self.reallocate_if_dirty();
             if self.clock >= t {
                 break;
             }
@@ -288,83 +457,310 @@ impl Network {
             };
             // Guarantee forward progress (≥ 1 µs) even when an eta
             // rounds onto the current clock, and never overshoot `t`.
-            self.apply_progress(seg_end.max(SimTime(self.clock.0 + 1)).min(t));
+            self.charge_to(seg_end.max(SimTime(self.clock.0 + 1)).min(t));
         }
         done
     }
 
-    /// Earliest completion instant given current rates.
-    fn earliest_eta(&self) -> Option<SimTime> {
-        let mut best: Option<f64> = None;
-        for f in self.flows.values() {
-            if f.rate > 0.0 {
-                let eta = f.remaining / f.rate;
-                best = Some(best.map_or(eta, |b: f64| b.min(eta)));
+    /// Pop every flow whose stored completion instant is at or before
+    /// the clock, across all components, sorted by start sequence.
+    fn pop_due(&mut self) -> Vec<(u64, FlowId)> {
+        let mut due: Vec<(u64, u32)> = Vec::new();
+        let clock = self.clock.0;
+        for comp in self.comps.iter_mut().flatten() {
+            while let Some(&Reverse((eta, seq, slot))) = comp.heap.peek() {
+                if eta > clock {
+                    break;
+                }
+                comp.heap.pop();
+                due.push((seq, slot));
             }
         }
-        best.map(|eta| {
-            SimTime((((self.clock.as_secs_f64() + eta) * 1e6).ceil() as u64).max(self.clock.0 + 1))
-        })
+        due.sort_unstable();
+        due.into_iter()
+            .map(|(seq, slot)| (seq, FlowId::new(slot, self.slots[slot as usize].gen)))
+            .collect()
     }
 
-    /// Apply progress from `self.clock` to `t` at current rates.
-    fn apply_progress(&mut self, t: SimTime) {
+    /// Remove a flow from the slab and every member list, and mark its
+    /// component for re-allocation. A multi-link departure may have
+    /// disconnected the component, so it is flagged for re-derivation;
+    /// a single-link departure never can (the hot warm-traffic case),
+    /// so it skips the BFS — at most pruning its link from the
+    /// component if the link just lost its last flow (a flow-less link
+    /// connects nothing).
+    fn detach(&mut self, slot: usize) -> Flow {
+        let f = self.slots[slot].flow.take().expect("detaching a live flow");
+        self.slots[slot].gen = self.slots[slot].gen.wrapping_add(1);
+        self.free_slots.push(slot as u32);
+        self.active -= 1;
+        for l in &f.path {
+            let link = &mut self.links[l.0 as usize];
+            let slots = &self.slots;
+            let pos = link
+                .flows
+                .binary_search_by_key(&f.seq, |id| {
+                    slots[id.slot()]
+                        .flow
+                        .as_ref()
+                        .map(|m| m.seq)
+                        .unwrap_or(f.seq) // the slot being detached
+                })
+                .expect("member list holds the flow");
+            link.flows.remove(pos);
+        }
+        // All the flow's links are in one component by construction.
+        let li = f.path[0].0 as usize;
+        let c = self.links[li].comp;
+        debug_assert_ne!(c, NO_COMP);
+        let emptied = self.links[li].flows.is_empty();
+        let comp = self.comps[c as usize].as_mut().expect("live comp");
+        comp.dirty = true;
+        if f.path.len() > 1 {
+            comp.stale = true;
+        } else if emptied && !comp.stale {
+            comp.links.retain(|&x| x as usize != li);
+            self.links[li].comp = NO_COMP;
+            self.links[li].agg_rate = 0.0;
+        }
+        self.any_dirty = true;
+        f
+    }
+
+    /// Reconcile to `now`: rates that changed at earlier instants take
+    /// effect there (fix-up), then the clock advances charging the
+    /// cached per-link aggregate rates.
+    fn settle(&mut self, now: SimTime) {
+        assert!(now >= self.clock, "network clock moved backwards");
+        self.fixup();
+        self.charge_to(now);
+    }
+
+    /// Advance the clock to `t`, charging each link's cached aggregate
+    /// rate — O(links), not O(Σ member flows). Flow `remaining` is not
+    /// touched: it is materialised lazily at the next re-fix.
+    fn charge_to(&mut self, t: SimTime) {
         if t <= self.clock {
             return;
         }
         let dt = (t - self.clock).as_secs_f64();
-        for f in self.flows.values_mut() {
-            f.remaining = (f.remaining - f.rate * dt).max(0.0);
-        }
         for link in &mut self.links {
-            let carried: f64 = link
-                .flows
-                .iter()
-                .map(|id| self.flows[id].rate * dt)
-                .sum();
-            link.bytes_carried += carried;
+            if link.agg_rate > 0.0 {
+                link.bytes_carried += link.agg_rate * dt;
+            }
         }
         self.clock = t;
     }
 
-    /// Reconcile progress up to `now` (before mutating the flow set).
-    fn reconcile(&mut self, now: SimTime) {
-        assert!(now >= self.clock, "network clock moved backwards");
-        self.reallocate_if_dirty();
-        self.apply_progress(now);
+    /// Merge the components of `path` into one (a new flow connects
+    /// them) and mark the result for re-allocation. Called after the
+    /// flow was appended to the member lists, with no pending dirty
+    /// components (every mutation settles first).
+    fn merge_components(&mut self, path: &[LinkId]) {
+        let mut target = NO_COMP;
+        for l in path {
+            let c = self.links[l.0 as usize].comp;
+            if c != NO_COMP && (target == NO_COMP || c < target) {
+                target = c;
+            }
+        }
+        let target = if target == NO_COMP {
+            self.alloc_comp()
+        } else {
+            target
+        };
+        for l in path {
+            let c = self.links[l.0 as usize].comp;
+            if c == target {
+                continue;
+            }
+            if c == NO_COMP {
+                self.links[l.0 as usize].comp = target;
+                self.comps[target as usize].as_mut().expect("live comp").links.push(l.0);
+            } else {
+                // Absorb the other component wholesale (into the
+                // lowest id, not by size — components stay small in
+                // the star-of-sites topologies this models).
+                let absorbed = self.comps[c as usize].take().expect("live comp");
+                self.free_comps.push(c);
+                for &li in &absorbed.links {
+                    self.links[li as usize].comp = target;
+                }
+                self.comps[target as usize]
+                    .as_mut()
+                    .expect("live comp")
+                    .links
+                    .extend(absorbed.links);
+            }
+        }
+        let comp = self.comps[target as usize].as_mut().expect("live comp");
+        comp.links.sort_unstable();
+        comp.links.dedup();
+        comp.dirty = true;
+        self.any_dirty = true;
     }
 
-    fn reallocate_if_dirty(&mut self) {
-        if self.dirty {
-            self.reallocate();
-            self.dirty = false;
+    fn alloc_comp(&mut self) -> u32 {
+        match self.free_comps.pop() {
+            Some(c) => {
+                self.comps[c as usize] = Some(Component::default());
+                c
+            }
+            None => {
+                self.comps.push(Some(Component::default()));
+                (self.comps.len() - 1) as u32
+            }
         }
     }
 
-    /// Max-min fair allocation by progressive filling.
+    /// Re-allocate every dirty component (ascending id, deterministic):
+    /// stale components are first split back into true connected
+    /// components, then each is water-filled. Cost is O(affected
+    /// components), never O(all flows).
+    fn fixup(&mut self) {
+        if !self.any_dirty {
+            return;
+        }
+        self.any_dirty = false;
+        self.stats.allocations += 1;
+        for c in 0..self.comps.len() as u32 {
+            let Some(comp) = &self.comps[c as usize] else {
+                continue;
+            };
+            if !comp.dirty {
+                continue;
+            }
+            if comp.stale {
+                for part in self.restructure(c) {
+                    self.waterfill(part);
+                }
+            } else {
+                self.waterfill(c);
+            }
+        }
+    }
+
+    /// Re-derive connectivity among a stale component's links (flow
+    /// removals may have disconnected it). Frees the old component and
+    /// returns the replacement components, each marked dirty. Links
+    /// left without flows drop out of the component structure (their
+    /// aggregate rate is zeroed).
+    fn restructure(&mut self, c: u32) -> Vec<u32> {
+        let old = self.comps[c as usize].take().expect("live comp");
+        self.free_comps.push(c);
+        for &li in &old.links {
+            self.links[li as usize].comp = NO_COMP;
+            self.links[li as usize].agg_rate = 0.0;
+        }
+        let mut parts = Vec::new();
+        // Each flow is expanded once (multi-link flows appear in
+        // several member lists; the seen-set skips the repeats).
+        let mut seen: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        for &seed in &old.links {
+            if self.links[seed as usize].comp != NO_COMP
+                || self.links[seed as usize].flows.is_empty()
+            {
+                continue;
+            }
+            let cid = self.alloc_comp();
+            let mut group = vec![seed];
+            self.links[seed as usize].comp = cid;
+            let mut qi = 0;
+            while qi < group.len() {
+                let li = group[qi] as usize;
+                qi += 1;
+                let member_ids = self.links[li].flows.clone();
+                for fid in member_ids {
+                    let slots = &self.slots;
+                    let f = slots[fid.slot()].flow.as_ref().expect("member flow is live");
+                    if !seen.insert(f.seq) {
+                        continue;
+                    }
+                    for pl in &f.path {
+                        let pli = pl.0 as usize;
+                        if self.links[pli].comp == NO_COMP {
+                            self.links[pli].comp = cid;
+                            group.push(pl.0);
+                        }
+                    }
+                }
+            }
+            group.sort_unstable();
+            let comp = self.comps[cid as usize].as_mut().expect("fresh comp");
+            comp.links = group;
+            comp.dirty = true;
+            parts.push(cid);
+        }
+        parts
+    }
+
+    /// Max-min fair allocation of one component by progressive
+    /// filling, identical round structure to a from-scratch global
+    /// water-filling restricted to this component (max-min decomposes
+    /// exactly over components, so the rates match a full rebuild
+    /// bit-for-bit — property-tested below).
     ///
     /// Invariants established (checked by property tests):
     /// 1. no link carries more than its capacity (within 1e-6 rel.);
     /// 2. no flow exceeds its rate ceiling;
     /// 3. every flow is bottlenecked: it either sits at its ceiling or
     ///    traverses a saturated link where it has a maximal share.
-    fn reallocate(&mut self) {
-        self.allocations += 1;
-        if self.flows.is_empty() {
+    fn waterfill(&mut self, c: u32) {
+        let comp_links =
+            std::mem::take(&mut self.comps[c as usize].as_mut().expect("live comp").links);
+        // Member flows: (seq, slot), merged from the per-link sorted
+        // lists. A component died when its last flow left.
+        let mut members: Vec<(u64, u32)> = Vec::new();
+        for &li in &comp_links {
+            for id in &self.links[li as usize].flows {
+                let seq = self.slots[id.slot()].flow.as_ref().expect("live member").seq;
+                members.push((seq, id.slot() as u32));
+            }
+        }
+        members.sort_unstable();
+        members.dedup();
+        if members.is_empty() {
+            for &li in &comp_links {
+                self.links[li as usize].comp = NO_COMP;
+                self.links[li as usize].agg_rate = 0.0;
+            }
+            self.comps[c as usize] = None;
+            self.free_comps.push(c);
             return;
         }
-        // Working copies.
-        let mut residual: Vec<f64> = self.links.iter().map(|l| l.capacity * l.factor).collect();
-        let mut active_on: Vec<usize> = self.links.iter().map(|l| l.flows.len()).collect();
-        let mut unfixed: Vec<FlowId> = self.flows.keys().copied().collect();
-        unfixed.sort_unstable(); // determinism
+        self.stats.components_touched += 1;
+        self.stats.peak_component = self.stats.peak_component.max(members.len());
 
+        // Materialise progress at the old rates up to the clock; the
+        // new rates take effect from here.
+        for &(_, slot) in &members {
+            let clock = self.clock;
+            let f = self.slots[slot as usize].flow.as_mut().expect("live member");
+            let dt = (clock - f.fixed_at).as_secs_f64();
+            f.remaining = (f.remaining - f.rate * dt).max(0.0);
+            f.fixed_at = clock;
+        }
+
+        // Working copies (scratch indexed by link id; only this
+        // component's entries are touched).
+        for &li in &comp_links {
+            let link = &mut self.links[li as usize];
+            self.scratch_residual[li as usize] = link.capacity * link.factor;
+            self.scratch_active[li as usize] = link.flows.len();
+            link.agg_rate = 0.0;
+        }
+
+        let mut heap: Vec<Reverse<(u64, u64, u32)>> = Vec::with_capacity(members.len());
+        let mut unfixed = members;
         while !unfixed.is_empty() {
-            // Fair share offered by each link still carrying unfixed flows.
+            // Fair share offered by each link still carrying unfixed
+            // flows.
             let mut bottleneck_share = f64::INFINITY;
-            for (i, _link) in self.links.iter().enumerate() {
-                if active_on[i] > 0 {
-                    bottleneck_share = bottleneck_share.min(residual[i] / active_on[i] as f64);
+            for &li in &comp_links {
+                let li = li as usize;
+                if self.scratch_active[li] > 0 {
+                    bottleneck_share = bottleneck_share
+                        .min(self.scratch_residual[li] / self.scratch_active[li] as f64);
                 }
             }
             debug_assert!(bottleneck_share.is_finite());
@@ -372,22 +768,28 @@ impl Network {
             // Flows whose ceiling binds below the bottleneck share are
             // fixed at their ceiling first. `capped` inherits the sort
             // order of `unfixed`, so one binary-searched retain sweep
-            // removes the whole round — the per-flow `retain` here was
-            // the O(n²) cost that capped the session engine at ~1k
-            // concurrent transfers.
-            let capped: Vec<FlowId> = unfixed
+            // removes the whole round.
+            let capped: Vec<(u64, u32)> = unfixed
                 .iter()
                 .copied()
-                .filter(|id| {
-                    self.flows[id]
+                .filter(|&(_, slot)| {
+                    self.slots[slot as usize]
+                        .flow
+                        .as_ref()
+                        .expect("live member")
                         .rate_cap
-                        .is_some_and(|c| c < bottleneck_share)
+                        .is_some_and(|cap| cap < bottleneck_share)
                 })
                 .collect();
             if !capped.is_empty() {
-                for &id in &capped {
-                    let cap = self.flows[&id].rate_cap.expect("cap exists");
-                    self.fix_flow(id, cap, &mut residual, &mut active_on);
+                for &(_, slot) in &capped {
+                    let cap = self.slots[slot as usize]
+                        .flow
+                        .as_ref()
+                        .expect("live member")
+                        .rate_cap
+                        .expect("cap exists");
+                    self.fix_flow(slot, cap, &mut heap);
                 }
                 unfixed.retain(|x| capped.binary_search(x).is_err());
                 continue; // shares changed; recompute bottleneck
@@ -398,14 +800,18 @@ impl Network {
             // share. Duplicates (a flow crossing two saturated links)
             // are removed by one sort+dedup instead of a `contains`
             // scan per push.
-            let mut to_fix: Vec<FlowId> = Vec::new();
-            for (i, _) in self.links.iter().enumerate() {
-                if active_on[i] > 0
-                    && residual[i] / active_on[i] as f64 <= bottleneck_share * (1.0 + 1e-12)
+            let mut to_fix: Vec<(u64, u32)> = Vec::new();
+            for &li in &comp_links {
+                let li = li as usize;
+                if self.scratch_active[li] > 0
+                    && self.scratch_residual[li] / self.scratch_active[li] as f64
+                        <= bottleneck_share * (1.0 + 1e-12)
                 {
-                    for id in &self.links[i].flows {
-                        if unfixed.binary_search(id).is_ok() {
-                            to_fix.push(*id);
+                    for id in &self.links[li].flows {
+                        let seq = self.slots[id.slot()].flow.as_ref().expect("live member").seq;
+                        let key = (seq, id.slot() as u32);
+                        if unfixed.binary_search(&key).is_ok() {
+                            to_fix.push(key);
                         }
                     }
                 }
@@ -413,26 +819,43 @@ impl Network {
             to_fix.sort_unstable();
             to_fix.dedup();
             debug_assert!(!to_fix.is_empty());
-            for &id in &to_fix {
-                self.fix_flow(id, bottleneck_share, &mut residual, &mut active_on);
+            for &(_, slot) in &to_fix {
+                self.fix_flow(slot, bottleneck_share, &mut heap);
             }
             unfixed.retain(|x| to_fix.binary_search(x).is_err());
         }
+
+        let comp = self.comps[c as usize].as_mut().expect("live comp");
+        comp.links = comp_links;
+        comp.heap = BinaryHeap::from(heap);
+        comp.dirty = false;
+        comp.stale = false;
     }
 
-    fn fix_flow(
-        &mut self,
-        id: FlowId,
-        rate: f64,
-        residual: &mut [f64],
-        active_on: &mut [usize],
-    ) {
-        let flow = self.flows.get_mut(&id).expect("flow exists");
+    /// Fix one flow's rate: update residual capacity and active counts
+    /// on its path, accumulate each link's cached aggregate rate, and
+    /// record the flow's projected completion.
+    fn fix_flow(&mut self, slot: u32, rate: f64, heap: &mut Vec<Reverse<(u64, u64, u32)>>) {
+        // See `next_completion` for the (single) zero-rate policy.
+        debug_assert!(rate > 0.0, "allocated flow with zero rate");
+        let Network { links, slots, clock, scratch_residual, scratch_active, stats, .. } = self;
+        stats.flows_refixed += 1;
+        let flow = slots[slot as usize].flow.as_mut().expect("live member");
         flow.rate = rate;
+        // Round up to the next microsecond so the completion event
+        // never lands before the flow actually finishes; for etas
+        // below the clock's f64 resolution, force a 1 µs tick so
+        // callers always make progress. The heap entry is the eta's
+        // sole home: it stays valid until the component re-fills,
+        // which rebuilds the heap.
+        let eta_secs = clock.as_secs_f64() + flow.remaining / rate;
+        let eta = ((eta_secs * 1e6).ceil() as u64).max(clock.0 + 1);
+        heap.push(Reverse((eta, flow.seq, slot)));
         for l in &flow.path {
-            let i = l.0 as usize;
-            residual[i] = (residual[i] - rate).max(0.0);
-            active_on[i] -= 1;
+            let li = l.0 as usize;
+            scratch_residual[li] = (scratch_residual[li] - rate).max(0.0);
+            scratch_active[li] -= 1;
+            links[li].agg_rate += rate;
         }
     }
 }
@@ -726,6 +1149,78 @@ mod tests {
     }
 
     #[test]
+    fn disjoint_components_are_independent() {
+        // Two single-link islands: events on one never re-fix the
+        // other (the tentpole property, observable via the counters).
+        let mut n = Network::new();
+        let a = n.add_link_gbps(8e-9 * 1000.0);
+        let b = n.add_link_gbps(8e-9 * 1000.0);
+        let spec = |l, bytes| FlowSpec { path: vec![l], bytes, rate_cap: None };
+        let fa = n.start_flow(spec(a, 10_000), SimTime::ZERO);
+        let fb = n.start_flow(spec(b, 10_000), SimTime::ZERO);
+        assert!((n.flow_rate(fa) - 1000.0).abs() < 1e-6);
+        let refixed_before = n.stats.flows_refixed;
+        // Churn on island a only.
+        for i in 0..5u64 {
+            let t = SimTime::from_secs_f64(0.1 * (i + 1) as f64);
+            let f = n.start_flow(spec(a, 100), t);
+            n.cancel_flow(f, t).unwrap();
+        }
+        let _ = n.flow_rate(fa);
+        // Island b's flow was never re-fixed by a's churn.
+        assert!((n.flow_rate(fb) - 1000.0).abs() < 1e-6);
+        let refixed = n.stats.flows_refixed - refixed_before;
+        // Each start re-fixes {fa, new}, each cancel re-fixes {fa}:
+        // ~3 per churn cycle and never fb. A global (non-component)
+        // allocator would re-fix both islands every op (≥ 25).
+        assert!(refixed <= 20, "island b was touched: {refixed} re-fixes");
+        assert!(n.stats.peak_component <= 2);
+    }
+
+    #[test]
+    fn components_merge_and_split() {
+        let mut n = Network::new();
+        let a = n.add_link_gbps(8e-9 * 1000.0);
+        let b = n.add_link_gbps(8e-9 * 1000.0);
+        let spec = |path, bytes| FlowSpec { path, bytes, rate_cap: None };
+        let fa = n.start_flow(spec(vec![a], 100_000), SimTime::ZERO);
+        let fb = n.start_flow(spec(vec![b], 100_000), SimTime::ZERO);
+        // A bridging flow merges the islands: all three now share.
+        let bridge = n.start_flow(spec(vec![a, b], 100_000), SimTime::ZERO);
+        assert!((n.flow_rate(fa) - 500.0).abs() < 1e-6);
+        assert!((n.flow_rate(fb) - 500.0).abs() < 1e-6);
+        assert!((n.flow_rate(bridge) - 500.0).abs() < 1e-6);
+        assert_eq!(n.stats.peak_component, 3);
+        // Removing the bridge splits them again; both islands recover
+        // the full link.
+        n.cancel_flow(bridge, SimTime::from_secs_f64(1.0)).unwrap();
+        assert!((n.flow_rate(fa) - 1000.0).abs() < 1e-6);
+        assert!((n.flow_rate(fb) - 1000.0).abs() < 1e-6);
+        // Post-split churn on a must not re-fix fb: the start fixes
+        // {fa, f}, the cancel re-fixes {fa} — never island b.
+        let refixed_before = n.stats.flows_refixed;
+        let f = n.start_flow(spec(vec![a], 100), SimTime::from_secs_f64(1.0));
+        n.cancel_flow(f, SimTime::from_secs_f64(1.0)).unwrap();
+        let _ = n.flow_rate(fa);
+        assert!(n.stats.flows_refixed - refixed_before <= 4);
+    }
+
+    #[test]
+    fn stale_flow_ids_never_resolve() {
+        let (mut n, l) = net1();
+        let spec = |bytes| FlowSpec { path: vec![l], bytes, rate_cap: None };
+        let f1 = n.start_flow(spec(1000), SimTime::ZERO);
+        n.cancel_flow(f1, SimTime::ZERO).unwrap();
+        // The slot is reused; the old handle must not alias it.
+        let f2 = n.start_flow(spec(1000), SimTime::ZERO);
+        assert_eq!(f1.slot(), f2.slot(), "slab reuses the slot");
+        assert_ne!(f1, f2);
+        assert_eq!(n.flow_rate(f1), 0.0, "stale handle resolves to nothing");
+        assert!(n.cancel_flow(f1, SimTime::ZERO).is_none());
+        assert!((n.flow_rate(f2) - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
     fn property_capacity_and_ceiling_respected() {
         use crate::util::prop::check;
         check("netsim invariants", 60, |g| {
@@ -750,22 +1245,21 @@ mod tests {
                 let cap = if g.bool() { Some(g.f64(10.0, 5_000.0)) } else { None };
                 specs.push((path, cap));
             }
+            let mut ids = Vec::new();
             for (path, cap) in &specs {
-                n.start_flow(
+                ids.push(n.start_flow(
                     FlowSpec {
                         path: path.clone(),
                         bytes: 1_000_000,
                         rate_cap: *cap,
                     },
                     SimTime::ZERO,
-                );
+                ));
             }
             // Invariant 1: per-link load <= capacity.
             let mut load = vec![0.0f64; n_links];
-            let ids: Vec<FlowId> = n.flows.keys().copied().collect();
-            for id in &ids {
+            for (id, (path, _)) in ids.iter().zip(&specs) {
                 let rate = n.flow_rate(*id);
-                let path = n.flows[id].path.clone();
                 for l in path {
                     load[l.0 as usize] += rate;
                 }
@@ -776,14 +1270,14 @@ mod tests {
                 }
             }
             // Invariant 2: ceilings respected; rates positive.
-            for id in &ids {
-                let f = &n.flows[id];
-                if f.rate <= 0.0 {
-                    return (false, format!("flow {id:?} has rate {}", f.rate));
+            for (id, (_, cap)) in ids.iter().zip(&specs) {
+                let rate = n.flow_rate(*id);
+                if rate <= 0.0 {
+                    return (false, format!("flow {id:?} has rate {rate}"));
                 }
-                if let Some(c) = f.rate_cap {
-                    if f.rate > c * (1.0 + 1e-9) {
-                        return (false, format!("flow {id:?} exceeds cap: {} > {c}", f.rate));
+                if let Some(c) = cap {
+                    if rate > c * (1.0 + 1e-9) {
+                        return (false, format!("flow {id:?} exceeds cap: {rate} > {c}"));
                     }
                 }
             }
@@ -820,5 +1314,191 @@ mod tests {
                 format!("k={k} bytes={bytes} expected {expected} got {got}"),
             )
         });
+    }
+
+    /// The tentpole correctness bar: after an arbitrary op sequence,
+    /// the incremental allocator's full rate vector equals a
+    /// from-scratch allocation on a freshly rebuilt network — **exact
+    /// equality**, not epsilon. (Max-min decomposes over components
+    /// and the component water-fill is the only rate producer in both
+    /// paths, so every intermediate f64 is the same.)
+    #[test]
+    fn property_incremental_equals_rebuild() {
+        use crate::util::prop::check;
+        check("incremental == from-scratch rebuild", 40, |g| {
+            let n_links = g.usize(2, 8);
+            let caps_gbps: Vec<f64> =
+                (0..n_links).map(|_| 8e-9 * g.f64(100.0, 10_000.0)).collect();
+            let mut n = Network::new();
+            let links: Vec<LinkId> =
+                caps_gbps.iter().map(|&c| n.add_link_gbps(c)).collect();
+            // Live flows in start order: (id, path, cap).
+            let mut live: Vec<(FlowId, Vec<LinkId>, Option<f64>)> = Vec::new();
+            let mut now = SimTime::ZERO;
+            let ops = g.usize(5, 40);
+            for _ in 0..ops {
+                match g.usize(0, 5) {
+                    // start
+                    0 | 1 => {
+                        let up: Vec<LinkId> = links
+                            .iter()
+                            .copied()
+                            .filter(|&l| n.link_is_up(l))
+                            .collect();
+                        if up.is_empty() {
+                            continue;
+                        }
+                        let mut path = Vec::new();
+                        for _ in 0..g.usize(1, 3.min(up.len())) {
+                            let l = *g.choose(&up);
+                            if !path.contains(&l) {
+                                path.push(l);
+                            }
+                        }
+                        let cap =
+                            if g.bool() { Some(g.f64(10.0, 5_000.0)) } else { None };
+                        let id = n.start_flow(
+                            FlowSpec {
+                                path: path.clone(),
+                                bytes: g.u64(1_000, 10_000_000),
+                                rate_cap: cap,
+                            },
+                            now,
+                        );
+                        live.push((id, path, cap));
+                    }
+                    // cancel
+                    2 => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = g.usize(0, live.len() - 1);
+                        let (id, _, _) = live.remove(i);
+                        n.cancel_flow(id, now).expect("live flow");
+                    }
+                    // cut + restore bookkeeping
+                    3 => {
+                        let l = *g.choose(&links);
+                        if n.link_is_up(l) {
+                            let killed = n.cut_link(l, now);
+                            live.retain(|(id, _, _)| {
+                                !killed.iter().any(|(k, _)| k == id)
+                            });
+                        } else {
+                            n.restore_link(l);
+                        }
+                    }
+                    // scale
+                    4 => {
+                        let l = *g.choose(&links);
+                        n.scale_link_capacity(l, g.f64(0.1, 1.0), now);
+                    }
+                    // advance past the next completion(s)
+                    _ => {
+                        now += crate::util::Duration::from_micros(g.u64(1, 2_000_000));
+                        for c in n.advance(now) {
+                            live.retain(|(id, _, _)| *id != c.flow);
+                        }
+                    }
+                }
+            }
+            // Rebuild: same links, same factors, the same surviving
+            // flows in the same start order (bytes are irrelevant to
+            // rates).
+            let mut r = Network::new();
+            let rlinks: Vec<LinkId> =
+                caps_gbps.iter().map(|&c| r.add_link_gbps(c)).collect();
+            for (i, &l) in rlinks.iter().enumerate() {
+                let factor = n.links[i].factor;
+                if factor != 1.0 {
+                    r.scale_link_capacity(l, factor, SimTime::ZERO);
+                }
+            }
+            let mut pairs = Vec::new();
+            for (id, path, cap) in &live {
+                let rid = r.start_flow(
+                    FlowSpec {
+                        path: path.clone(),
+                        bytes: 1,
+                        rate_cap: *cap,
+                    },
+                    SimTime::ZERO,
+                );
+                pairs.push((*id, rid));
+            }
+            for (id, rid) in pairs {
+                let a = n.flow_rate(id);
+                let b = r.flow_rate(rid);
+                if a.to_bits() != b.to_bits() {
+                    return (
+                        false,
+                        format!("flow {id:?}: incremental {a:?} != rebuild {b:?}"),
+                    );
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    /// Satellite regression: carried-bytes accounting through the
+    /// cached per-link aggregate rate matches the old per-member
+    /// summation — on a multi-link scenario run to completion, each
+    /// link carried the bytes of exactly the flows that crossed it
+    /// (within the ≤1-byte-per-completion µs rounding slack both
+    /// accountings share).
+    #[test]
+    fn bytes_carried_matches_per_member_summation() {
+        let mut n = Network::new();
+        let l1 = n.add_link_gbps(8e-9 * 1000.0);
+        let l2 = n.add_link_gbps(8e-9 * 400.0);
+        let l3 = n.add_link_gbps(8e-9 * 2000.0);
+        let flows: Vec<(Vec<LinkId>, u64)> = vec![
+            (vec![l1], 10_000),
+            (vec![l1, l2], 4_000),
+            (vec![l2], 6_000),
+            (vec![l1, l3], 12_000),
+            (vec![l3], 20_000),
+        ];
+        // Reference accounting: per-member summation at every rate
+        // segment (the pre-refactor algorithm), driven via snapshots.
+        let mut expected = vec![0.0f64; 3];
+        let mut prev = SimTime::ZERO;
+        for (path, bytes) in &flows {
+            n.start_flow(
+                FlowSpec { path: path.clone(), bytes: *bytes, rate_cap: None },
+                SimTime::ZERO,
+            );
+        }
+        loop {
+            let snap = n.flows_snapshot();
+            let Some(t) = n.next_completion() else { break };
+            let dt = (t - prev).as_secs_f64();
+            for (_, _, rate, path) in &snap {
+                for l in path {
+                    expected[l.0 as usize] += rate * dt;
+                }
+            }
+            prev = t;
+            n.advance(t);
+        }
+        for (i, l) in [l1, l2, l3].into_iter().enumerate() {
+            let got = n.link_bytes_carried(l);
+            assert!(
+                (got - expected[i]).abs() <= 1e-6 * expected[i].max(1.0),
+                "link {i}: cached-aggregate {got} vs per-member {e}",
+                e = expected[i]
+            );
+            // And both equal the sum of crossing flows' payloads to
+            // within the shared µs-rounding slack (≤ 1 byte/flow).
+            let payload: u64 = flows
+                .iter()
+                .filter(|(p, _)| p.contains(&l))
+                .map(|(_, b)| *b)
+                .sum();
+            assert!(
+                (got - payload as f64).abs() < flows.len() as f64,
+                "link {i}: carried {got} vs payload {payload}"
+            );
+        }
     }
 }

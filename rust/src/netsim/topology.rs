@@ -147,6 +147,22 @@ impl Topology {
         self.site_links[site_idx].wan
     }
 
+    /// Every link owned by one site (WAN edge, worker leg, proxy and
+    /// cache legs where present). Sites share no links — only routes
+    /// crossing the WAN touch two sites' link sets — which is why warm
+    /// (same-site) traffic splits into per-site connected components
+    /// in the allocator (see `netsim::network`); the topology tests
+    /// pin this disjointness down.
+    pub fn site_local_links(&self, site_idx: usize) -> Vec<LinkId> {
+        let sl = &self.site_links[site_idx];
+        let mut links = vec![sl.wan, sl.worker_wan];
+        links.extend(sl.proxy_lan);
+        links.extend(sl.proxy_wan);
+        links.extend(sl.cache_lan);
+        links.extend(sl.cache_wan);
+        links
+    }
+
     /// An origin's DTN access link (background-load attachment point).
     pub fn origin_lan_link(&self, origin_idx: usize) -> LinkId {
         self.origin_lan[origin_idx]
@@ -362,5 +378,33 @@ mod tests {
         let col = topo.site_index("colorado").unwrap();
         let syr = topo.site_index("syracuse").unwrap();
         let _ = topo.route(Endpoint::Worker(syr), Endpoint::Cache(col));
+    }
+
+    #[test]
+    fn site_link_sets_are_disjoint() {
+        // The allocator's component-locality win rests on this: two
+        // sites share no links, so same-site (warm) serve routes at
+        // distinct sites can never join one connected component.
+        let (cfg, net, topo) = setup();
+        let mut seen = vec![false; net.link_count()];
+        let mut total = 0;
+        for s in 0..topo.site_count() {
+            for l in topo.site_local_links(s) {
+                assert!(
+                    !seen[l.0 as usize],
+                    "link {l:?} appears in two sites' link sets"
+                );
+                seen[l.0 as usize] = true;
+                total += 1;
+            }
+        }
+        // Everything except the per-origin DTN links is site-owned.
+        assert_eq!(total + cfg.origins.len(), net.link_count());
+        // And a same-site worker↔cache serve route stays inside the
+        // site's own link set.
+        let syr = topo.site_index("syracuse").unwrap();
+        let r = topo.route(Endpoint::Worker(syr), Endpoint::Cache(syr));
+        let local = topo.site_local_links(syr);
+        assert!(r.links.iter().all(|l| local.contains(l)));
     }
 }
