@@ -1,0 +1,193 @@
+//! Redirection-policy bench: the four cache-selection policies under
+//! one identical 4k-session campaign.
+//!
+//! 4096 Poisson jobs across the five §4.1 compute sites pull
+//! Zipf-popular files from a shared catalog, once per policy —
+//! `nearest`, `least-loaded`, `consistent-hash`, `tiered` — on
+//! otherwise identical federations (same seed, so the workload
+//! realization is the same draw every time). Reported per policy:
+//! hit ratio, origin bytes fetched upstream, aggregate Mbps,
+//! p50/p95/p99 download time, peak concurrency, coalesced joins,
+//! direct-to-origin fallbacks, and engine events/sec.
+//!
+//! Shape gates:
+//! * every policy completes all 4096 downloads;
+//! * `consistent-hash` fetches strictly fewer origin bytes than
+//!   `nearest` — the namespace-sharding claim of the XCache CDN
+//!   follow-on work: a hot file converges on one cache federation-wide
+//!   instead of being fetched once per site.
+//!
+//! Emits `BENCH_redirection.json` at the repository root for the perf
+//! trajectory.
+
+#[path = "harness.rs"]
+mod harness;
+
+use stashcache::config::defaults::paper_federation;
+use stashcache::experiment::summary::digest_records;
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::redirector::{PolicyKind, ALL_POLICIES};
+use stashcache::sim::campaign::{self, CampaignConfig};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+const JOBS: usize = 4096;
+
+struct Row {
+    policy: &'static str,
+    downloads: usize,
+    hit_ratio: f64,
+    origin_bytes: u64,
+    aggregate_mbps: f64,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    peak: usize,
+    coalesced: u64,
+    direct: u64,
+    events: u64,
+    wall: f64,
+    digest: u64,
+}
+
+fn bench_cfg() -> CampaignConfig {
+    CampaignConfig {
+        jobs: JOBS,
+        arrival_window_secs: 30.0,
+        catalog_files: 512,
+        zipf_s: 1.2,
+        background_flows: 0,
+        method: DownloadMethod::Stash,
+        ..CampaignConfig::default()
+    }
+}
+
+fn run_policy(policy: PolicyKind) -> Row {
+    let mut cfg = paper_federation();
+    cfg.redirection.policy = policy;
+    let mut fed = FedSim::build(cfg);
+    let ccfg = bench_cfg();
+    let start = Instant::now();
+    let results = campaign::run_on(&mut fed, &ccfg);
+    let wall = start.elapsed().as_secs_f64();
+
+    let downloads = results.records.len();
+    let hits = results
+        .records
+        .iter()
+        .filter(|r| r.record.cache_hit)
+        .count();
+    let origin_bytes: u64 = fed
+        .caches
+        .values()
+        .map(|c| c.stats.bytes_fetched_origin)
+        .sum::<u64>()
+        + fed
+            .proxies
+            .values()
+            .map(|p| p.stats.bytes_fetched_upstream)
+            .sum::<u64>();
+    let ps = results.duration_percentiles(&[50.0, 95.0, 99.0]);
+    Row {
+        policy: policy.name(),
+        downloads,
+        hit_ratio: hits as f64 / downloads.max(1) as f64,
+        origin_bytes,
+        aggregate_mbps: results.aggregate_mbps(),
+        p50: ps[0],
+        p95: ps[1],
+        p99: ps[2],
+        peak: results.peak_concurrent,
+        coalesced: results.coalesced_joins,
+        direct: results.engine.direct_fallbacks,
+        events: results.events_processed,
+        wall,
+        digest: digest_records(&results.records),
+    }
+}
+
+fn main() {
+    println!("redirection policies @ {JOBS} concurrent sessions (identical workload draw)\n");
+    let mut rows = Vec::new();
+    for policy in ALL_POLICIES {
+        let row = harness::timed(policy.name(), || run_policy(policy));
+        println!(
+            "  {:>15}: {} downloads | hit {:>5.1}% | origin {:>7.1} GB | {:>6.0} Mbps | \
+             p50 {:>6.2}s p95 {:>7.2}s | peak {} | joins {} | direct {} | {:.0} events/s",
+            row.policy,
+            row.downloads,
+            100.0 * row.hit_ratio,
+            row.origin_bytes as f64 / 1e9,
+            row.aggregate_mbps,
+            row.p50,
+            row.p95,
+            row.peak,
+            row.coalesced,
+            row.direct,
+            row.events as f64 / row.wall.max(1e-9),
+        );
+        rows.push(row);
+    }
+
+    let mut shape = harness::Shape::new();
+    for r in &rows {
+        shape.check(
+            r.downloads == JOBS,
+            &format!("{}: every one of the {JOBS} downloads completed", r.policy),
+        );
+    }
+    let by_name = |name: &str| rows.iter().find(|r| r.policy == name).expect("ran");
+    let nearest = by_name("nearest");
+    let ch = by_name("consistent-hash");
+    shape.check(
+        ch.origin_bytes < nearest.origin_bytes,
+        &format!(
+            "consistent-hash collapses origin refetches: {:.1} GB < {:.1} GB (nearest)",
+            ch.origin_bytes as f64 / 1e9,
+            nearest.origin_bytes as f64 / 1e9,
+        ),
+    );
+
+    // --- BENCH_redirection.json ------------------------------------------
+    let mut json = String::new();
+    let _ = write!(
+        json,
+        "{{\n  \"bench\": \"redirection\",\n  \"jobs\": {JOBS},\n  \"policies\": [\n"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"policy\": \"{}\", \"downloads\": {}, \"hit_ratio\": {:.6}, \
+             \"origin_bytes\": {}, \"aggregate_mbps\": {:.1}, \"p50_s\": {:.3}, \
+             \"p95_s\": {:.3}, \"p99_s\": {:.3}, \"peak_concurrent\": {}, \
+             \"coalesced_joins\": {}, \"direct_fallbacks\": {}, \"events\": {}, \
+             \"wall_s\": {:.4}, \"events_per_sec\": {:.0}, \"records_digest\": \"{}\"}}",
+            r.policy,
+            r.downloads,
+            r.hit_ratio,
+            r.origin_bytes,
+            r.aggregate_mbps,
+            r.p50,
+            r.p95,
+            r.p99,
+            r.peak,
+            r.coalesced,
+            r.direct,
+            r.events,
+            r.wall,
+            r.events as f64 / r.wall.max(1e-9),
+            r.digest,
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    // The repository root, independent of the bench's CWD (cargo runs
+    // benches from the package root, i.e. rust/).
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_redirection.json");
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => println!("\nWARNING: could not write {out}: {e}"),
+    }
+
+    shape.finish("redirection");
+}

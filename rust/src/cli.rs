@@ -5,6 +5,7 @@ use stashcache::config::{defaults, FederationConfig};
 use stashcache::experiment::{self, GridSpec};
 use stashcache::fault::{FaultKind, FaultTimeline};
 use stashcache::federation::{backend::GeoBackend, DownloadMethod, FedSim};
+use stashcache::redirector::PolicyKind;
 use stashcache::report::{self, paper};
 use stashcache::sim::campaign::{self, CampaignConfig, CampaignResults};
 use stashcache::sim::scenario::{self, ScenarioConfig};
@@ -73,6 +74,24 @@ fn load_config(flags: &Flags) -> Result<FederationConfig> {
     }
 }
 
+/// `--policy NAME`: override the federation's cache-selection policy
+/// (shared by `campaign` and `chaos`; sweeps use the `policies` axis).
+fn apply_policy_flag(flags: &Flags, cfg: &mut FederationConfig) -> Result<()> {
+    if let Some(name) = flags.get("policy") {
+        cfg.redirection.policy = parse_policy(name)?;
+    }
+    Ok(())
+}
+
+fn parse_policy(name: &str) -> Result<PolicyKind> {
+    PolicyKind::from_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown policy {name:?} ({})",
+            stashcache::redirector::POLICY_NAMES
+        )
+    })
+}
+
 fn geo_backend(flags: &Flags) -> Result<GeoBackend> {
     match flags.get("runtime").unwrap_or("rust") {
         "rust" => Ok(GeoBackend::rust()),
@@ -119,8 +138,10 @@ pub fn usage() -> String {
        campaign [--jobs N] [--sites a,b] [--window SECS] [--zipf S]\n\
                 [--catalog N] [--method stash|http] [--seed S]\n\
                 [--experiment NAME] [--background N] [--profile]\n\
+                [--policy nearest|least-loaded|consistent-hash|tiered]\n\
                                         run N concurrent Poisson/Zipf jobs through\n\
                                         the session engine (coalescing, contention);\n\
+                                        --policy picks the cache-selection rule;\n\
                                         --profile prints allocator counters\n\
        chaos    [campaign flags] [--kill-cache SITE [--down-at S] [--up-at S]]\n\
                 [--cut-wan SITE [--cut-at S] [--heal-at S]]\n\
@@ -129,12 +150,14 @@ pub fn usage() -> String {
                                         campaign with mid-transfer faults; sessions\n\
                                         fail over; prints the availability report\n\
                                         (default: single-cache outage at peak load)\n\
-       sweep    [--preset smoke|proxy-vs-stash] [--grid PATH.toml]\n\
+       sweep    [--preset smoke|proxy-vs-stash|policy] [--grid PATH.toml]\n\
                 [--threads N] [--reps N] [--seed S] [--out-dir DIR]\n\
-                [--profile]\n\
+                [--policy NAME | --policies a,b,c] [--profile]\n\
                                         run a deterministic parameter grid in\n\
                                         parallel; writes BENCH_sweep.json, CSVs and\n\
                                         the proxy-vs-StashCache frontier report;\n\
+                                        --policies sweeps cache-selection rules\n\
+                                        (the policy preset runs all four);\n\
                                         --profile prints allocator counters\n\
        usage --days D [--jobs-per-hour J]\n\
                                         run a usage simulation (Tables 1-2, Fig 4)\n\
@@ -361,7 +384,8 @@ fn print_campaign(ccfg: &CampaignConfig, results: &CampaignResults, wall: f64) {
 }
 
 fn cmd_campaign(flags: &Flags) -> Result<()> {
-    let cfg = load_config(flags)?;
+    let mut cfg = load_config(flags)?;
+    apply_policy_flag(flags, &mut cfg)?;
     let ccfg = parse_campaign(flags, &cfg)?;
     let wall_start = std::time::Instant::now();
     let results = campaign::run(cfg, &ccfg);
@@ -378,7 +402,8 @@ fn cmd_campaign(flags: &Flags) -> Result<()> {
 /// session fails over (or falls back to the origin) and the run still
 /// completes every download.
 fn cmd_chaos(flags: &Flags) -> Result<()> {
-    let cfg = load_config(flags)?;
+    let mut cfg = load_config(flags)?;
+    apply_policy_flag(flags, &mut cfg)?;
     let ccfg = parse_campaign(flags, &cfg)?;
     let mut fed = FedSim::build_with_backend(cfg, geo_backend(flags)?);
     let window = ccfg.arrival_window_secs;
@@ -540,7 +565,8 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
         None => match flags.get("preset").unwrap_or("smoke") {
             "smoke" => GridSpec::smoke(),
             "proxy-vs-stash" => GridSpec::proxy_vs_stash(),
-            other => bail!("--preset must be smoke|proxy-vs-stash, got {other:?}"),
+            "policy" => GridSpec::policy_smoke(),
+            other => bail!("--preset must be smoke|proxy-vs-stash|policy, got {other:?}"),
         },
     };
     if flags.has("reps") {
@@ -548,6 +574,19 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
     }
     if flags.has("seed") {
         grid.root_seed = flags.get_usize("seed", grid.root_seed as usize)? as u64;
+    }
+    if flags.has("policy") && flags.has("policies") {
+        bail!("--policy and --policies are mutually exclusive; pick one");
+    }
+    if let Some(name) = flags.get("policy") {
+        // Convenience alias: a single-policy sweep.
+        grid.policies = vec![parse_policy(name)?];
+    }
+    if let Some(list) = flags.get("policies") {
+        grid.policies = list
+            .split(',')
+            .map(parse_policy)
+            .collect::<Result<Vec<_>>>()?;
     }
     grid.validate()?;
     validate_workload_refs(
@@ -579,6 +618,9 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
 
     println!("{}", experiment::artifact::cells_table(&results).render());
     println!("{}", paper::frontier_table(&results).render());
+    if grid.policies.len() > 1 {
+        println!("{}", paper::policy_table(&results).render());
+    }
     if let Some(t3) = &results.table3 {
         println!("{}", paper::sweep_table3(t3).render());
     }

@@ -234,6 +234,7 @@ pub fn paper_federation() -> FederationConfig {
         name: "osg-stashcache".into(),
         seed: 20190728, // PEARC '19 started July 28
         redirector_instances: 2,
+        redirection: RedirectionConfig::default(),
         sites,
         origins,
         workload: paper_workload(),
@@ -317,6 +318,14 @@ pub fn example_toml() -> String {
 name = "osg-stashcache"
 seed = 20190728
 redirector_instances = 2
+
+# Cache-selection policy: nearest | least-loaded | consistent-hash | tiered
+[redirection]
+policy = "nearest"
+nearest_k = 3
+virtual_nodes = 64
+regional_km = 2000.0
+location_cache_cap = 65536
 
 [[site]]
 name = "syracuse"

@@ -14,5 +14,5 @@ pub mod toml;
 
 pub use schema::{
     CacheConfig, ClientKind, FederationConfig, LinkProfile, OriginConfig, ProxyConfig,
-    SiteConfig, WorkloadConfig,
+    RedirectionConfig, SiteConfig, WorkloadConfig,
 };

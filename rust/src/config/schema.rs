@@ -6,6 +6,7 @@
 //! starts.
 
 use super::toml::{self, Table, Value};
+use crate::redirector::policy::PolicyKind;
 use crate::util::ByteSize;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -19,12 +20,120 @@ pub struct FederationConfig {
     /// Number of redirector instances in the round-robin HA pool
     /// (the OSG runs two — paper §3).
     pub redirector_instances: usize,
+    /// Cache-selection policy and redirector tuning.
+    pub redirection: RedirectionConfig,
     /// One entry per site (compute sites, cache sites, or both).
     pub sites: Vec<SiteConfig>,
     /// Data origins and their namespace prefixes.
     pub origins: Vec<OriginConfig>,
     /// Workload description for the usage simulations.
     pub workload: WorkloadConfig,
+}
+
+/// Redirection-layer tuning: which cache-selection policy the
+/// federation runs ([`crate::redirector::policy`]) and the redirector's
+/// location-cache bound. Parsed from the `[redirection]` TOML table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RedirectionConfig {
+    /// Cache-selection policy (default: the paper's GeoIP nearest).
+    pub policy: PolicyKind,
+    /// `least-loaded`: how many nearest candidates compete on live
+    /// load (≥ 1; 1 degenerates to `nearest`).
+    pub nearest_k: usize,
+    /// `consistent-hash`: virtual nodes per cache on the ring (≥ 1).
+    pub virtual_nodes: usize,
+    /// `tiered`: radius of the regional ring in km (> 0); beyond it a
+    /// session streams from the origin instead of a WAN cache.
+    pub regional_km: f64,
+    /// Redirector location-cache LRU bound, entries (≥ 1).
+    pub location_cache_cap: usize,
+}
+
+impl Default for RedirectionConfig {
+    fn default() -> Self {
+        RedirectionConfig {
+            policy: PolicyKind::Nearest,
+            nearest_k: 3,
+            virtual_nodes: 64,
+            regional_km: 2_000.0,
+            location_cache_cap: crate::redirector::DEFAULT_LOCATION_CACHE_CAP,
+        }
+    }
+}
+
+impl RedirectionConfig {
+    /// Parse a `[redirection]` table. Strict like the sweep grid:
+    /// unknown keys, wrong types, and out-of-range values are errors —
+    /// never silently replaced by defaults.
+    pub fn from_table(t: &Table) -> Result<Self> {
+        const KNOWN_KEYS: [&str; 5] = [
+            "policy", "nearest_k", "virtual_nodes", "regional_km", "location_cache_cap",
+        ];
+        for key in t.keys() {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                bail!(
+                    "unknown key {key:?} in [redirection] (known: {})",
+                    KNOWN_KEYS.join(", ")
+                );
+            }
+        }
+        let mut r = RedirectionConfig::default();
+        if let Some(v) = t.get("policy") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| anyhow!("redirection policy must be a string"))?;
+            r.policy = PolicyKind::from_name(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown redirection policy {name:?} ({})",
+                    crate::redirector::POLICY_NAMES
+                )
+            })?;
+        }
+        let uint = |v: &Value, what: &str| -> Result<usize> {
+            let i = v
+                .as_int()
+                .ok_or_else(|| anyhow!("{what} must be an integer"))?;
+            if i < 1 {
+                bail!("{what} must be >= 1, got {i}");
+            }
+            Ok(i as usize)
+        };
+        if let Some(v) = t.get("nearest_k") {
+            r.nearest_k = uint(v, "nearest_k")?;
+        }
+        if let Some(v) = t.get("virtual_nodes") {
+            r.virtual_nodes = uint(v, "virtual_nodes")?;
+        }
+        if let Some(v) = t.get("regional_km") {
+            r.regional_km = v
+                .as_float()
+                .ok_or_else(|| anyhow!("regional_km must be numeric"))?;
+        }
+        if let Some(v) = t.get("location_cache_cap") {
+            r.location_cache_cap = uint(v, "location_cache_cap")?;
+        }
+        r.validate()?;
+        Ok(r)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nearest_k == 0 {
+            bail!("redirection nearest_k must be >= 1");
+        }
+        if self.virtual_nodes == 0 {
+            bail!("redirection virtual_nodes must be >= 1");
+        }
+        if !(self.regional_km > 0.0 && self.regional_km.is_finite()) {
+            bail!(
+                "redirection regional_km must be positive and finite, got {}",
+                self.regional_km
+            );
+        }
+        if self.location_cache_cap == 0 {
+            bail!("redirection location_cache_cap must be >= 1");
+        }
+        Ok(())
+    }
 }
 
 /// A site: a geographic location hosting any combination of worker
@@ -185,6 +294,18 @@ impl FederationConfig {
             .get("redirector_instances")
             .and_then(Value::as_int)
             .unwrap_or(2) as usize;
+        let redirection = match t.get("redirection") {
+            None => RedirectionConfig::default(),
+            Some(v) => {
+                let rt = v
+                    .as_table()
+                    .ok_or_else(|| anyhow!("[redirection] must be a table"))?;
+                // No context wrap: the shim's Display shows only the
+                // outermost layer, and every message below already
+                // names the [redirection] table.
+                RedirectionConfig::from_table(rt)?
+            }
+        };
 
         let mut sites = Vec::new();
         if let Some(arr) = t.get("site").and_then(Value::as_array) {
@@ -219,6 +340,7 @@ impl FederationConfig {
             name,
             seed,
             redirector_instances,
+            redirection,
             sites,
             origins,
             workload,
@@ -235,6 +357,7 @@ impl FederationConfig {
         if self.redirector_instances == 0 {
             bail!("redirector_instances must be >= 1");
         }
+        self.redirection.validate()?;
         let mut names = std::collections::HashSet::new();
         for s in &self.sites {
             if !names.insert(s.name.as_str()) {
@@ -585,6 +708,67 @@ mod tests {
         assert_eq!(s.cache.unwrap().capacity, ByteSize::tb(2));
         // defaults fill in unspecified knobs
         assert_eq!(s.cache.unwrap().chunk_size, ByteSize::mb(24));
+    }
+
+    #[test]
+    fn parse_redirection_table() {
+        let cfg = FederationConfig::from_toml(
+            r#"
+            [federation]
+            name = "mini"
+            seed = 7
+
+            [redirection]
+            policy = "consistent-hash"
+            virtual_nodes = 8
+
+            [[site]]
+            name = "a"
+            lat = 40.0
+            lon = -100.0
+            [site.cache]
+            capacity = "2TB"
+
+            [[origin]]
+            name = "o1"
+            site = "a"
+            prefix = "/data"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.redirection.policy, PolicyKind::ConsistentHash);
+        assert_eq!(cfg.redirection.virtual_nodes, 8);
+        // Unspecified knobs inherit the defaults.
+        let d = RedirectionConfig::default();
+        assert_eq!(cfg.redirection.nearest_k, d.nearest_k);
+        assert_eq!(cfg.redirection.location_cache_cap, d.location_cache_cap);
+    }
+
+    #[test]
+    fn redirection_defaults_to_nearest_without_table() {
+        let cfg = defaults::paper_federation();
+        assert_eq!(cfg.redirection.policy, PolicyKind::Nearest);
+        assert_eq!(cfg.redirection, RedirectionConfig::default());
+    }
+
+    #[test]
+    fn redirection_table_is_strict() {
+        let parse = |body: &str| {
+            FederationConfig::from_toml(&format!(
+                "[federation]\nname = \"x\"\nseed = 1\n\n[redirection]\n{body}\n\n\
+                 [[site]]\nname = \"a\"\nlat = 0.0\nlon = 0.0\n[site.cache]\ncapacity = \"1TB\"\n\n\
+                 [[origin]]\nname = \"o\"\nsite = \"a\"\nprefix = \"/d\"\n"
+            ))
+        };
+        let e = parse("polcy = \"nearest\"").unwrap_err();
+        assert!(e.to_string().contains("unknown key"), "{e}");
+        assert!(parse("policy = \"random\"").is_err());
+        assert!(parse("policy = 3").is_err());
+        assert!(parse("nearest_k = 0").is_err());
+        assert!(parse("virtual_nodes = -4").is_err());
+        assert!(parse("regional_km = 0.0").is_err());
+        assert!(parse("location_cache_cap = 0").is_err());
+        assert!(parse("policy = \"tiered\"\nregional_km = 500.0").is_ok());
     }
 
     #[test]

@@ -103,9 +103,10 @@ pub fn sweep_json(results: &SweepResults) -> String {
         };
         let _ = write!(
             out,
-            "    {{\"cell\": {}, \"method\": {}, \"reps\": {}, ",
+            "    {{\"cell\": {}, \"method\": {}, \"policy\": {}, \"reps\": {}, ",
             json_str(&c.cell.label()),
             json_str(method_name(c.cell.method)),
+            json_str(c.cell.policy.name()),
             c.reps,
         );
         m(&mut out, "hit_ratio", &c.hit_ratio, false);
@@ -146,8 +147,8 @@ pub fn trials_table(results: &SweepResults) -> Table {
     let mut t = Table::new(
         format!("Sweep {:?}: trials", results.grid.name),
         &[
-            "index", "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "rep",
-            "seed", "downloads", "hit_ratio", "origin_bytes", "aggregate_mbps", "p50_s",
+            "index", "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "policy",
+            "rep", "seed", "downloads", "hit_ratio", "origin_bytes", "aggregate_mbps", "p50_s",
             "p95_s", "p99_s", "failovers", "digest",
         ],
     );
@@ -162,6 +163,7 @@ pub fn trials_table(results: &SweepResults) -> Table {
             format!("{:.2}", c.zipf_s),
             c.size_profile.name().to_string(),
             c.fault_profile.name().to_string(),
+            c.policy.name().to_string(),
             o.spec.rep.to_string(),
             o.spec.seed.to_string(),
             o.downloads.to_string(),
@@ -188,7 +190,7 @@ pub fn cells_table(results: &SweepResults) -> Table {
             results.grid.reps,
         ),
         &[
-            "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "hit%",
+            "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "policy", "hit%",
             "origin GB", "Mbps", "±ci95", "p50 s", "p95 s", "p99 s", "failovers",
         ],
     );
@@ -202,6 +204,7 @@ pub fn cells_table(results: &SweepResults) -> Table {
             format!("{:.2}", k.zipf_s),
             k.size_profile.name().to_string(),
             k.fault_profile.name().to_string(),
+            k.policy.name().to_string(),
             format!("{:.1}", 100.0 * c.hit_ratio.mean),
             format!("{:.2}", c.origin_gb.mean),
             format!("{:.0}", c.aggregate_mbps.mean),
@@ -234,6 +237,12 @@ pub fn write_all(dir: &Path, results: &SweepResults) -> std::io::Result<Vec<Path
         results.grid.name
     );
     frontier.push_str(&paper::frontier_table(results).to_markdown());
+    if results.grid.policies.len() > 1 {
+        // The redirection-policy comparison (same workload, different
+        // cache-selection rule) rides next to the method frontier.
+        frontier.push('\n');
+        frontier.push_str(&paper::policy_table(results).to_markdown());
+    }
     if let Some(t3) = &results.table3 {
         frontier.push('\n');
         frontier.push_str(&paper::sweep_table3(t3).to_markdown());

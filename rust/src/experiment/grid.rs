@@ -2,21 +2,23 @@
 //!
 //! A [`GridSpec`] names one value list per experimental axis (client
 //! method, cache capacity scale, client count, arrival window, Zipf
-//! skew, file-size mix, fault profile) plus the shared knobs every
-//! trial inherits (sites, catalog, background load). `trials()`
-//! expands the cartesian product, `reps` innermost, into a flat list
-//! of fully-resolved [`TrialSpec`]s.
+//! skew, file-size mix, fault profile, redirection policy) plus the
+//! shared knobs every trial inherits (sites, catalog, background
+//! load). `trials()` expands the cartesian product, `reps` innermost,
+//! into a flat list of fully-resolved [`TrialSpec`]s.
 //!
 //! Every trial's campaign seed is **stateless**: a pure hash of the
-//! root seed, the cell's method-excluding label, and the repetition
-//! index. Adding an axis value, reordering axes, or changing `reps`
-//! never perturbs the seed (and therefore the result) of any other
-//! trial — the same property the campaign layer gives per-site RNG
-//! streams — and the stash/http twins of a cell share a seed so the
-//! frontier compares methods on identical workload draws.
+//! root seed, the cell's workload label (excluding the method *and*
+//! the redirection policy), and the repetition index. Adding an axis
+//! value, reordering axes, or changing `reps` never perturbs the seed
+//! (and therefore the result) of any other trial — the same property
+//! the campaign layer gives per-site RNG streams — and the stash/http
+//! twins of a cell, like its policy variants, share a seed so the
+//! frontier and the policy table compare on identical workload draws.
 
 use crate::config::toml::{self, Value};
 use crate::federation::DownloadMethod;
+use crate::redirector::policy::{PolicyKind, ALL_POLICIES};
 use anyhow::{anyhow, bail, Context, Result};
 
 /// Named file-size mixes a cell can run under.
@@ -145,12 +147,15 @@ pub struct CellKey {
     pub zipf_s: f64,
     pub size_profile: SizeProfile,
     pub fault_profile: FaultProfile,
+    /// Redirection policy the federation runs this cell under.
+    pub policy: PolicyKind,
 }
 
 impl CellKey {
-    /// Canonical label of the cell *excluding* the method axis — the
-    /// key the frontier report pairs proxy and StashCache cells on.
-    pub fn base_label(&self) -> String {
+    /// Canonical label of the cell's workload axes — everything except
+    /// the method *and* the policy. The policy comparison table pairs
+    /// cells on this (same workload, different placement rule).
+    pub fn workload_label(&self) -> String {
         format!(
             "cap={:.2} jobs={} window={:.1} zipf={:.2} sizes={} faults={}",
             self.capacity_scale,
@@ -160,6 +165,13 @@ impl CellKey {
             self.size_profile.name(),
             self.fault_profile.name(),
         )
+    }
+
+    /// Canonical label of the cell *excluding* the method axis — the
+    /// key the frontier report pairs proxy and StashCache cells on
+    /// (twins share the policy, so it is part of this label).
+    pub fn base_label(&self) -> String {
+        format!("{} policy={}", self.workload_label(), self.policy.name())
     }
 
     /// Canonical label of the full cell (seed material + report rows).
@@ -188,16 +200,19 @@ fn splitmix64(mut x: u64) -> u64 {
     x ^ (x >> 31)
 }
 
-/// Stateless per-trial seed: pure in (root, cell-minus-method, rep).
+/// Stateless per-trial seed: pure in (root, workload axes, rep).
 ///
-/// Deliberately hashes [`CellKey::base_label`] — *excluding* the
-/// method — so the stash and http twins of a frontier pair run the
+/// Deliberately hashes [`CellKey::workload_label`] — *excluding* the
+/// method and the redirection policy — so the stash/http twins of a
+/// frontier pair **and** every policy variant of a cell run the
 /// **identical workload realization** (same Poisson arrivals, same
-/// Zipf file draws). The frontier's %Δ then measures the method, not
-/// workload-draw noise, exactly like §4.1's four-passes-per-file
-/// design.
+/// Zipf file draws). The frontier's %Δ and the policy table's
+/// origin-byte gaps then measure the method/policy, not workload-draw
+/// noise, exactly like §4.1's four-passes-per-file design. (The label
+/// format predates the policy axis, so pre-policy cells keep their
+/// historical seeds.)
 pub fn trial_seed(root_seed: u64, cell: &CellKey, rep: usize) -> u64 {
-    let cell_hash = crate::util::fnv1a(cell.base_label().as_bytes());
+    let cell_hash = crate::util::fnv1a(cell.workload_label().as_bytes());
     splitmix64(root_seed ^ cell_hash ^ splitmix64(rep as u64 + 1))
 }
 
@@ -216,6 +231,8 @@ pub struct GridSpec {
     pub zipf_s: Vec<f64>,
     pub size_profiles: Vec<SizeProfile>,
     pub fault_profiles: Vec<FaultProfile>,
+    /// Redirection policies (cache-selection rules) to sweep.
+    pub policies: Vec<PolicyKind>,
     // Shared trial knobs.
     pub sites: Vec<String>,
     pub experiment: String,
@@ -242,9 +259,39 @@ impl GridSpec {
             zipf_s: vec![1.1],
             size_profiles: vec![SizeProfile::Paper],
             fault_profiles: vec![FaultProfile::None, FaultProfile::CacheOutage],
+            policies: vec![PolicyKind::Nearest],
             sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
             experiment: "gwosc".into(),
             catalog_files: 64,
+            files_per_job: (1, 1),
+            background_flows: 1,
+            table3_cell: false,
+        }
+    }
+
+    /// The redirection-policy smoke preset: every cache-selection
+    /// policy × both client methods on one Zipf-skewed shared-
+    /// namespace cell. Three compute sites each with a local cache
+    /// pull hot files from one catalog, so `nearest` fetches a hot
+    /// file from the origin once *per site* while `consistent-hash`
+    /// converges the federation on one cache and fetches it once —
+    /// the frontier and policy tables surface the origin-byte gap.
+    pub fn policy_smoke() -> Self {
+        GridSpec {
+            name: "policy".into(),
+            root_seed: 20190728,
+            reps: 1,
+            methods: vec![DownloadMethod::Stash, DownloadMethod::HttpProxy],
+            capacity_scales: vec![1.0],
+            jobs: vec![30],
+            arrival_windows: vec![10.0],
+            zipf_s: vec![1.3],
+            size_profiles: vec![SizeProfile::Paper],
+            fault_profiles: vec![FaultProfile::None],
+            policies: ALL_POLICIES.to_vec(),
+            sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+            experiment: "gwosc".into(),
+            catalog_files: 12,
             files_per_job: (1, 1),
             background_flows: 1,
             table3_cell: false,
@@ -266,6 +313,7 @@ impl GridSpec {
             zipf_s: vec![1.1],
             size_profiles: vec![SizeProfile::Paper, SizeProfile::Small],
             fault_profiles: vec![FaultProfile::None],
+            policies: vec![PolicyKind::Nearest],
             sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
             experiment: "gwosc".into(),
             catalog_files: 128,
@@ -284,6 +332,7 @@ impl GridSpec {
             * self.zipf_s.len()
             * self.size_profiles.len()
             * self.fault_profiles.len()
+            * self.policies.len()
             * self.reps
     }
 
@@ -298,23 +347,26 @@ impl GridSpec {
                         for &zipf_s in &self.zipf_s {
                             for &size_profile in &self.size_profiles {
                                 for &fault_profile in &self.fault_profiles {
-                                    let cell = CellKey {
-                                        method,
-                                        capacity_scale,
-                                        jobs,
-                                        arrival_window_secs,
-                                        zipf_s,
-                                        size_profile,
-                                        fault_profile,
-                                    };
-                                    for rep in 0..self.reps {
-                                        out.push(TrialSpec {
-                                            index,
-                                            cell: cell.clone(),
-                                            rep,
-                                            seed: trial_seed(self.root_seed, &cell, rep),
-                                        });
-                                        index += 1;
+                                    for &policy in &self.policies {
+                                        let cell = CellKey {
+                                            method,
+                                            capacity_scale,
+                                            jobs,
+                                            arrival_window_secs,
+                                            zipf_s,
+                                            size_profile,
+                                            fault_profile,
+                                            policy,
+                                        };
+                                        for rep in 0..self.reps {
+                                            out.push(TrialSpec {
+                                                index,
+                                                cell: cell.clone(),
+                                                rep,
+                                                seed: trial_seed(self.root_seed, &cell, rep),
+                                            });
+                                            index += 1;
+                                        }
                                     }
                                 }
                             }
@@ -339,6 +391,7 @@ impl GridSpec {
             ("zipf_s", self.zipf_s.is_empty()),
             ("size_profiles", self.size_profiles.is_empty()),
             ("fault_profiles", self.fault_profiles.is_empty()),
+            ("policies", self.policies.is_empty()),
         ] {
             if empty {
                 bail!("grid axis {axis:?} is empty");
@@ -393,6 +446,10 @@ impl GridSpec {
             self.fault_profiles.iter().map(|p| p.name().to_string()).collect(),
             "fault_profiles",
         )?;
+        unique(
+            self.policies.iter().map(|p| p.name().to_string()).collect(),
+            "policies",
+        )?;
         if self.sites.is_empty() {
             bail!("grid has no sites");
         }
@@ -417,10 +474,11 @@ impl GridSpec {
     /// are errors — never silently replaced by defaults. Omitted keys
     /// inherit the [`GridSpec::smoke`] baseline.
     pub fn from_toml(text: &str) -> Result<Self> {
-        const KNOWN_KEYS: [&str; 16] = [
+        const KNOWN_KEYS: [&str; 17] = [
             "name", "seed", "reps", "methods", "capacity_scales", "jobs",
-            "arrival_window_secs", "zipf_s", "size_profiles", "fault_profiles", "sites",
-            "experiment", "catalog_files", "files_per_job", "background_flows", "table3_cell",
+            "arrival_window_secs", "zipf_s", "size_profiles", "fault_profiles", "policies",
+            "sites", "experiment", "catalog_files", "files_per_job", "background_flows",
+            "table3_cell",
         ];
         let root = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
         let sweep = root
@@ -487,6 +545,20 @@ impl GridSpec {
                     let name = req_str(v, "fault_profiles entry")?;
                     FaultProfile::from_name(&name).ok_or_else(|| {
                         anyhow!("unknown fault profile {name:?} (none|cache-outage|origin-brownout)")
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = sweep.get("policies") {
+            grid.policies = req_array(v, "policies")?
+                .iter()
+                .map(|v| {
+                    let name = req_str(v, "policies entry")?;
+                    PolicyKind::from_name(&name).ok_or_else(|| {
+                        anyhow!(
+                            "unknown redirection policy {name:?} ({})",
+                            crate::redirector::POLICY_NAMES
+                        )
                     })
                 })
                 .collect::<Result<_>>()?;
@@ -616,6 +688,54 @@ mod tests {
                 .expect("http twin exists");
             assert_eq!(t.seed, twin.seed, "pair {} rep {}", t.cell.base_label(), t.rep);
         }
+    }
+
+    #[test]
+    fn policy_axis_expands_and_shares_workload_seeds() {
+        let grid = GridSpec {
+            policies: ALL_POLICIES.to_vec(),
+            ..GridSpec::smoke()
+        };
+        let trials = grid.trials();
+        assert_eq!(trials.len(), GridSpec::smoke().trial_count() * 4);
+        // Every policy variant of a cell draws the identical workload:
+        // same seed, distinct full label.
+        for t in trials.iter().filter(|t| t.cell.policy == PolicyKind::Nearest) {
+            for other in ALL_POLICIES.into_iter().filter(|&p| p != PolicyKind::Nearest) {
+                let variant = trials
+                    .iter()
+                    .find(|o| {
+                        o.cell.policy == other
+                            && o.cell.method == t.cell.method
+                            && o.cell.workload_label() == t.cell.workload_label()
+                            && o.rep == t.rep
+                    })
+                    .expect("policy variant exists");
+                assert_eq!(t.seed, variant.seed, "workload seed shared across policies");
+                assert_ne!(t.cell.label(), variant.cell.label());
+            }
+        }
+    }
+
+    #[test]
+    fn policies_parse_from_toml() {
+        let grid =
+            GridSpec::from_toml("[sweep]\npolicies = [\"nearest\", \"consistent-hash\"]\n")
+                .unwrap();
+        assert_eq!(
+            grid.policies,
+            vec![PolicyKind::Nearest, PolicyKind::ConsistentHash]
+        );
+        assert!(GridSpec::from_toml("[sweep]\npolicies = [\"geo\"]\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\npolicies = []\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\npolicies = [\"nearest\", \"nearest\"]\n").is_err());
+    }
+
+    #[test]
+    fn policy_smoke_preset_validates() {
+        let grid = GridSpec::policy_smoke();
+        grid.validate().unwrap();
+        assert_eq!(grid.trial_count(), 2 * 4, "4 policies × stash/http");
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //!
 //! * [`grid`] — parameter axes (client method, cache capacity scale,
 //!   client count, Poisson window, Zipf skew, file-size mix, fault
-//!   profile) expanded into a cartesian product of [`grid::TrialSpec`]s
-//!   with stateless per-trial seeds.
+//!   profile, redirection policy) expanded into a cartesian product of
+//!   [`grid::TrialSpec`]s with stateless per-trial seeds.
 //! * [`runner`] — a work-stealing pool of OS threads executing trials
 //!   through the existing [`crate::sim::campaign`] engine; each trial
 //!   owns its federation, so an N-thread run is bit-identical to a

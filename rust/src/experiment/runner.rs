@@ -106,6 +106,8 @@ pub fn execute_trial(
         }
     }
     spec.cell.size_profile.apply(&mut cfg.workload);
+    // The cell's redirection policy (cache-selection rule).
+    cfg.redirection.policy = spec.cell.policy;
 
     let mut fed = FedSim::build(cfg);
     let ccfg = CampaignConfig {

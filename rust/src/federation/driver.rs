@@ -120,6 +120,11 @@ pub struct SessionEngine {
     /// (cache site, path) → sessions parked until the in-flight fetch
     /// commits.
     waiters: HashMap<(usize, String), Vec<SessionId>>,
+    /// Sessions currently assigned per cache site (incremented when a
+    /// session binds a cache in `geo_resolve`, released on finish or
+    /// failover) — the live-load signal the `least-loaded` redirection
+    /// policy reads. Pure bookkeeping under every other policy.
+    cache_in_flight: HashMap<usize, u64>,
     /// Spawned sessions not yet `Done`.
     outstanding: usize,
     /// Started sessions not yet `Done`.
@@ -140,6 +145,7 @@ impl SessionEngine {
             sessions: Vec::new(),
             flow_owner: HashMap::new(),
             waiters: HashMap::new(),
+            cache_in_flight: HashMap::new(),
             outstanding: 0,
             in_flight: 0,
             completed: Vec::new(),
@@ -450,6 +456,7 @@ impl SessionEngine {
         exclude: Option<usize>,
     ) {
         self.stats.retries += 1;
+        self.release_cache_slot(id);
         let (method, transport, retries) = {
             let s = &mut self.sessions[id.0 as usize];
             if let Some(site) = exclude {
@@ -575,19 +582,24 @@ impl SessionEngine {
         }
     }
 
-    /// (stash) Startup paid: GeoIP nearest-cache decision (skipping
-    /// down caches and caches this session already failed against),
-    /// then the connection round trip to that cache.
+    /// (stash) Startup paid: the redirection policy picks a cache
+    /// (skipping down caches and caches this session already failed
+    /// against — ring holes under consistent hashing), then the
+    /// connection round trip to that cache.
     fn geo_resolve(&mut self, fed: &mut FedSim, id: SessionId, t: SimTime) {
-        let (site_idx, excluded) = {
+        let (site_idx, excluded, path) = {
             let s = &self.sessions[id.0 as usize];
-            (s.site_idx, s.excluded_caches.clone())
+            (s.site_idx, s.excluded_caches.clone(), s.file.path.clone())
         };
-        let Some(cache_site) = fed.nearest_cache_site_filtered(site_idx, &excluded) else {
-            // Every cache is excluded or down: stream from the origin.
+        let selected = fed.select_cache(site_idx, &path, &excluded, &self.cache_in_flight);
+        let Some(cache_site) = selected else {
+            // No cache should serve this session (all excluded/down,
+            // or the tiered ladder ran out of rungs): stream from the
+            // origin.
             self.enter_direct_fallback(fed, id, t);
             return;
         };
+        *self.cache_in_flight.entry(cache_site).or_insert(0) += 1;
         let route = fed
             .topo
             .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
@@ -1013,7 +1025,18 @@ impl SessionEngine {
         }
     }
 
+    /// Drop a session's claim on its assigned cache (in-flight load
+    /// accounting; no-op for sessions without one).
+    fn release_cache_slot(&mut self, id: SessionId) {
+        if let Some(site) = self.sessions[id.0 as usize].cache_site {
+            if let Some(n) = self.cache_in_flight.get_mut(&site) {
+                *n = n.saturating_sub(1);
+            }
+        }
+    }
+
     fn finish(&mut self, id: SessionId, t: SimTime, method: Method) {
+        self.release_cache_slot(id);
         let s = &mut self.sessions[id.0 as usize];
         let cache_hit = match method {
             Method::HttpProxy => s.proxy_hit,

@@ -57,6 +57,7 @@ use crate::namespace::{Namespace, OriginId};
 use crate::netsim::{FlowId, FlowSpec, Network, Topology};
 use crate::origin::{FileMeta, Origin};
 use crate::proxy::ProxyServer;
+use crate::redirector::policy::{self, FederationView, RedirectionPolicy};
 use crate::redirector::RedirectorPool;
 use crate::sim::workload::FileRef;
 use crate::util::{Pcg64, SimTime};
@@ -97,6 +98,10 @@ pub struct FedSim {
     pub geoip: NearestCache<GeoBackend>,
     /// Cache-site indices aligned with `geoip.caches()` order.
     geo_cache_sites: Vec<usize>,
+    /// Cache-selection policy (see [`crate::redirector::policy`]).
+    /// Built from `cfg.redirection`; `Nearest` is bit-identical to the
+    /// legacy hardcoded GeoIP ladder.
+    pub policy: Box<dyn RedirectionPolicy>,
     // Monitoring pipeline.
     pub collector: Collector,
     pub bus: Bus,
@@ -170,8 +175,13 @@ impl FedSim {
             }
         }
 
+        // The ring and every other policy hash on cache-site *names*
+        // (stable identity), in federation order.
+        let cache_names: Vec<&str> = geo_sites.iter().map(|c| c.name.as_str()).collect();
+        let policy = policy::build_policy(&cfg.redirection, &cache_names);
         let geoip = NearestCache::with_backend(geo_sites, geo);
-        let redirectors = RedirectorPool::new(cfg.redirector_instances);
+        let redirectors =
+            RedirectorPool::with_cap(cfg.redirector_instances, cfg.redirection.location_cache_cap);
         let rng = Pcg64::new(cfg.seed, 0xfed);
 
         FedSim {
@@ -184,6 +194,7 @@ impl FedSim {
             redirectors,
             geoip,
             geo_cache_sites,
+            policy,
             collector,
             bus,
             agg_sub,
@@ -355,11 +366,16 @@ impl FedSim {
         foreground
     }
 
-    // --- GeoIP -------------------------------------------------------------
+    // --- GeoIP + redirection ------------------------------------------------
 
     /// Pick the nearest cache for a worker at `site_idx`, given live
     /// cache load factors (the CVMFS GeoIP API call stashcp makes).
     /// Panics if every cache in the federation is down.
+    ///
+    /// This is the *geo* ladder, independent of the configured
+    /// [`FedSim::policy`] — chaos drills and sweeps use it to find
+    /// "the cache nearest to site X" (e.g. as an outage victim);
+    /// downloads go through [`FedSim::select_cache`].
     pub fn nearest_cache_site(&mut self, site_idx: usize) -> usize {
         self.nearest_cache_site_filtered(site_idx, &[])
             .expect("no cache in the federation is up")
@@ -369,6 +385,11 @@ impl FedSim {
     /// sites (caches a retrying client already failed against) and any
     /// cache that is currently down ([`FaultState`]). `None` when no
     /// cache remains — the caller must fall back to the origin.
+    ///
+    /// Tie-breaking is pinned: caches ranked by (score, geo index),
+    /// and the geo index order is the config's site order — so two
+    /// equal-distance, equally-loaded caches always resolve to the
+    /// one configured first.
     pub fn nearest_cache_site_filtered(
         &mut self,
         site_idx: usize,
@@ -385,6 +406,74 @@ impl FedSim {
             .iter()
             .map(|&(i, _)| self.geo_cache_sites[i])
             .find(|site| !excluded.contains(site) && !self.faults.is_cache_down(*site))
+    }
+
+    /// Snapshot what the redirection layer may observe when placing a
+    /// request from `site_idx`: the GeoIP ranking (identical inputs to
+    /// [`FedSim::nearest_cache_site_filtered`], so `Nearest` stays
+    /// bit-compatible), storage load, live WAN aggregate rates from
+    /// the netsim, the driving engine's per-cache in-flight counts,
+    /// distances, and up/down state.
+    pub fn federation_view(
+        &mut self,
+        site_idx: usize,
+        in_flight: &HashMap<usize, u64>,
+    ) -> FederationView {
+        let (lat, lon) = {
+            let s = &self.cfg.sites[site_idx];
+            (s.lat, s.lon)
+        };
+        let loads: Vec<f64> = self
+            .geo_cache_sites
+            .iter()
+            .map(|idx| self.caches[idx].load_factor())
+            .collect();
+        let ranked = self.geoip.rank(lat, lon, &loads);
+        let wan_rate_bps = self
+            .geo_cache_sites
+            .iter()
+            .map(|&idx| self.net.link_aggregate_rate(self.topo.cache_wan_link(idx)))
+            .collect();
+        let distance_km = self
+            .geo_cache_sites
+            .iter()
+            .map(|&idx| self.topo.distance_km(site_idx, idx))
+            .collect();
+        let up = self
+            .geo_cache_sites
+            .iter()
+            .map(|&idx| !self.faults.is_cache_down(idx))
+            .collect();
+        let in_flight = self
+            .geo_cache_sites
+            .iter()
+            .map(|idx| in_flight.get(idx).copied().unwrap_or(0))
+            .collect();
+        FederationView {
+            client_site: site_idx,
+            cache_sites: self.geo_cache_sites.clone(),
+            ranked,
+            wan_rate_bps,
+            in_flight,
+            distance_km,
+            up,
+        }
+    }
+
+    /// Choose the cache that serves `path` for a worker at `site_idx`
+    /// under the configured redirection policy, skipping `excluded`
+    /// caches and any cache that is down. `in_flight` is the driving
+    /// engine's sessions-per-cache map (pass an empty map from serial
+    /// drivers). `None` ⇒ stream from the origin.
+    pub fn select_cache(
+        &mut self,
+        site_idx: usize,
+        path: &str,
+        excluded: &[usize],
+        in_flight: &HashMap<usize, u64>,
+    ) -> Option<usize> {
+        let view = self.federation_view(site_idx, in_flight);
+        self.policy.select(path, &view, excluded)
     }
 
     // --- monitoring --------------------------------------------------------

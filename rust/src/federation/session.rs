@@ -60,8 +60,9 @@ pub enum Phase {
     /// Scheduled but not started (waiting for its arrival event).
     Pending,
     /// (stash) Waiting for stashcp's startup latency (tool spin-up +
-    /// GeoIP query); on fire, resolve the nearest cache and pay the
-    /// cache-connection RTT.
+    /// GeoIP query); on fire, the redirection policy
+    /// ([`crate::redirector::policy`]) picks a cache and the session
+    /// pays the cache-connection RTT.
     GeoResolve,
     /// (stash) At the cache — plan the read against resident chunks.
     CacheCheck,

@@ -10,7 +10,10 @@
 //!   registered for a subset of the global [`namespace`].
 //! * **Redirector** ([`redirector`]) — the data-discovery service; caches
 //!   query it to find which origin holds a path. Deployed as a
-//!   round-robin HA pair.
+//!   round-robin HA pair. Cache *selection* is its pluggable policy
+//!   layer ([`redirector::policy`]): GeoIP-nearest (the paper's rule),
+//!   least-loaded, consistent-hash namespace sharding, or a tiered
+//!   site-local → regional → origin ladder.
 //! * **Data caches** ([`cache`]) — regional chunk caches that capture
 //!   client requests, fetch misses from origins via the redirector, and
 //!   manage cache space with watermark LRU eviction.

@@ -235,6 +235,14 @@ impl Network {
         self.links[link.0 as usize].bytes_carried
     }
 
+    /// Live aggregate allocated rate (bytes/s) crossing a link right
+    /// now — the cached Σ of member-flow rates from the last fix.
+    /// This is the per-cache load telemetry the redirection layer's
+    /// `least-loaded` policy reads off each cache's WAN access link.
+    pub fn link_aggregate_rate(&self, link: LinkId) -> f64 {
+        self.links[link.0 as usize].agg_rate
+    }
+
     fn flow(&self, id: FlowId) -> Option<&Flow> {
         let s = self.slots.get(id.slot())?;
         if s.gen == id.generation() {

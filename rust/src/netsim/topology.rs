@@ -168,6 +168,14 @@ impl Topology {
         self.origin_lan[origin_idx]
     }
 
+    /// A cache site's WAN access link — the live-load signal the
+    /// redirection layer reads. Panics if the site hosts no cache.
+    pub fn cache_wan_link(&self, site_idx: usize) -> LinkId {
+        self.site_links[site_idx]
+            .cache_wan
+            .expect("site has no cache")
+    }
+
     /// Great-circle distance between two sites (km).
     pub fn distance_km(&self, a: usize, b: usize) -> f64 {
         let (la, lo) = self.coords[a];

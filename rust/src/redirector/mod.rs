@@ -6,23 +6,45 @@
 //! find the data and return the hostname of the origin ... There are
 //! two redirectors in a round robin, high availability configuration."
 //!
-//! [`Redirector`] holds a TTL'd location cache and broadcasts to the
-//! origin set on a miss (cmsd-style). [`RedirectorPool`] provides the
-//! round-robin HA front: lookups rotate across healthy instances and
-//! fail over when an instance is marked down (failure injection uses
-//! this in the integration tests).
+//! [`Redirector`] holds a TTL'd, LRU-bounded location cache and
+//! broadcasts to the origin set on a miss (cmsd-style). Entries are
+//! valid *through* their expiry instant and stale one microsecond
+//! after — the same freshness rule the site proxy uses — and the
+//! cache never exceeds `cache_cap` entries: inserting into a full
+//! cache evicts the least-recently-used location (`evictions` counts
+//! them), so months-long campaigns cannot grow it without bound.
+//! [`RedirectorPool`] provides the round-robin HA front: lookups
+//! rotate across healthy instances and fail over when an instance is
+//! marked down (failure injection uses this in the integration tests).
+//!
+//! Cache *selection* — which cache a client is redirected to — is the
+//! pluggable [`policy`] layer ([`policy::RedirectionPolicy`]).
+
+pub mod policy;
+
+pub use policy::{FederationView, PolicyKind, RedirectionPolicy, ALL_POLICIES, POLICY_NAMES};
 
 use crate::namespace::OriginId;
 use crate::origin::Origin;
 use crate::util::{Duration, SimTime};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+
+/// Default bound on a redirector's location cache (entries). Exposed
+/// through `[redirection] location_cache_cap` in the federation TOML.
+pub const DEFAULT_LOCATION_CACHE_CAP: usize = 65_536;
 
 /// One redirector instance.
 #[derive(Debug)]
 pub struct Redirector {
     pub id: usize,
-    /// path → (origin, cache-entry expiry).
-    location_cache: HashMap<String, (OriginId, SimTime)>,
+    /// path → (origin, cache-entry expiry, recency sequence).
+    location_cache: HashMap<String, (OriginId, SimTime, u64)>,
+    /// Recency sequence → path; the smallest key is the LRU victim.
+    lru: BTreeMap<u64, String>,
+    /// Monotone recency counter (bumped on hit and insert).
+    next_seq: u64,
+    /// Max location-cache entries before LRU eviction (≥ 1).
+    pub cache_cap: usize,
     /// TTL of location-cache entries.
     pub cache_ttl: Duration,
     /// Instance up? (failure injection)
@@ -31,18 +53,30 @@ pub struct Redirector {
     pub cache_hits: u64,
     /// Origin broadcasts performed (each asks every origin).
     pub broadcasts: u64,
+    /// Entries evicted by the LRU cap (not TTL expiry).
+    pub evictions: u64,
 }
 
 impl Redirector {
     pub fn new(id: usize) -> Self {
+        Self::with_cap(id, DEFAULT_LOCATION_CACHE_CAP)
+    }
+
+    /// An instance whose location cache holds at most `cap` entries.
+    pub fn with_cap(id: usize, cap: usize) -> Self {
+        assert!(cap >= 1, "location cache cap must be >= 1");
         Redirector {
             id,
             location_cache: HashMap::new(),
+            lru: BTreeMap::new(),
+            next_seq: 0,
+            cache_cap: cap,
             cache_ttl: Duration::from_mins(10),
             healthy: true,
             queries: 0,
             cache_hits: 0,
             broadcasts: 0,
+            evictions: 0,
         }
     }
 
@@ -56,27 +90,63 @@ impl Redirector {
         now: SimTime,
     ) -> Option<OriginId> {
         self.queries += 1;
-        if let Some(&(origin, expires)) = self.location_cache.get(path) {
-            if now < expires {
+        if let Some(&(origin, expires, seq)) = self.location_cache.get(path) {
+            // Valid through the expiry instant, stale 1 µs past it
+            // (mirrors the proxy's freshness rule).
+            if now <= expires {
                 self.cache_hits += 1;
+                self.touch(path, seq);
                 return Some(origin);
             }
             self.location_cache.remove(path);
+            self.lru.remove(&seq);
         }
         self.broadcasts += 1;
         for o in origins.iter_mut() {
             if o.locate(path) {
-                self.location_cache
-                    .insert(path.to_string(), (o.id, now + self.cache_ttl));
+                self.insert(path, o.id, now + self.cache_ttl);
                 return Some(o.id);
             }
         }
         None
     }
 
+    /// Refresh an entry's recency (LRU hit promotion). Updates the
+    /// seq in place — the hit path pays one `String` for the LRU map,
+    /// not a remove+insert cycle on the location cache.
+    fn touch(&mut self, path: &str, old_seq: u64) {
+        self.lru.remove(&old_seq);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.lru.insert(seq, path.to_string());
+        if let Some(entry) = self.location_cache.get_mut(path) {
+            entry.2 = seq;
+        }
+    }
+
+    /// Insert a fresh location, evicting LRU entries past the cap.
+    fn insert(&mut self, path: &str, origin: OriginId, expires: SimTime) {
+        if let Some((_, _, old_seq)) = self.location_cache.remove(path) {
+            self.lru.remove(&old_seq);
+        }
+        while self.location_cache.len() >= self.cache_cap {
+            let victim_seq = *self.lru.keys().next().expect("cap >= 1, cache full");
+            let victim = self.lru.remove(&victim_seq).expect("lru entry");
+            self.location_cache.remove(&victim);
+            self.evictions += 1;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.lru.insert(seq, path.to_string());
+        self.location_cache
+            .insert(path.to_string(), (origin, expires, seq));
+    }
+
     /// Drop a cached location (e.g. after an origin deletion event).
     pub fn invalidate(&mut self, path: &str) {
-        self.location_cache.remove(path);
+        if let Some((_, _, seq)) = self.location_cache.remove(path) {
+            self.lru.remove(&seq);
+        }
     }
 
     pub fn cached_locations(&self) -> usize {
@@ -115,9 +185,14 @@ impl std::error::Error for AllRedirectorsDown {}
 
 impl RedirectorPool {
     pub fn new(count: usize) -> Self {
+        Self::with_cap(count, DEFAULT_LOCATION_CACHE_CAP)
+    }
+
+    /// A pool whose instances cap their location caches at `cap`.
+    pub fn with_cap(count: usize, cap: usize) -> Self {
         assert!(count >= 1);
         RedirectorPool {
-            instances: (0..count).map(Redirector::new).collect(),
+            instances: (0..count).map(|id| Redirector::with_cap(id, cap)).collect(),
             rr: 0,
         }
     }
@@ -162,6 +237,11 @@ impl RedirectorPool {
     pub fn total_queries(&self) -> u64 {
         self.instances.iter().map(|r| r.queries).sum()
     }
+
+    /// Location-cache LRU evictions across the pool (stats).
+    pub fn total_evictions(&self) -> u64 {
+        self.instances.iter().map(|r| r.evictions).sum()
+    }
 }
 
 #[cfg(test)]
@@ -177,6 +257,19 @@ mod tests {
         o2.put_file("/ospool/des/d1", FileMeta { size: 20, mtime: 1, perm: 0o644 })
             .unwrap();
         vec![o1, o2]
+    }
+
+    /// Origins with `n` files under /ospool/ligo (LRU cap tests).
+    fn origin_with_files(n: usize) -> Vec<Origin> {
+        let mut o = Origin::new(OriginId(0), "o-ligo", "/ospool/ligo");
+        for i in 0..n {
+            o.put_file(
+                &format!("/ospool/ligo/f{i}"),
+                FileMeta { size: 10, mtime: 1, perm: 0o644 },
+            )
+            .unwrap();
+        }
+        vec![o]
     }
 
     #[test]
@@ -214,6 +307,74 @@ mod tests {
     }
 
     #[test]
+    fn ttl_edge_hit_at_expiry_stale_one_microsecond_past() {
+        // Mirrors the proxy's expiry edge: an entry cached at t=0 with
+        // a 60 s TTL serves *through* t=60 s and re-broadcasts at
+        // t=60 s + 1 µs.
+        let mut os = origins();
+        let mut r = Redirector::new(0);
+        r.cache_ttl = Duration::from_secs(60);
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO);
+        assert_eq!(r.broadcasts, 1);
+
+        let at_ttl = SimTime::ZERO + Duration::from_secs(60);
+        assert_eq!(
+            r.locate("/ospool/ligo/f1", &mut os, at_ttl),
+            Some(OriginId(0))
+        );
+        assert_eq!(r.broadcasts, 1, "age == ttl still serves from cache");
+        assert_eq!(r.cache_hits, 1);
+
+        let past_ttl = at_ttl + Duration::from_micros(1);
+        assert_eq!(
+            r.locate("/ospool/ligo/f1", &mut os, past_ttl),
+            Some(OriginId(0))
+        );
+        assert_eq!(r.broadcasts, 2, "1 µs past the ttl re-broadcasts");
+        // The re-broadcast re-armed the entry: fresh again afterwards.
+        r.locate("/ospool/ligo/f1", &mut os, past_ttl + Duration::from_secs(1));
+        assert_eq!(r.broadcasts, 2);
+        assert_eq!(r.cache_hits, 2);
+    }
+
+    #[test]
+    fn lru_cap_bounds_cache_and_counts_evictions() {
+        let mut os = origin_with_files(3);
+        let mut r = Redirector::with_cap(0, 2);
+        r.locate("/ospool/ligo/f0", &mut os, SimTime::ZERO);
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO);
+        assert_eq!(r.cached_locations(), 2);
+        assert_eq!(r.evictions, 0);
+        // Third insert evicts the coldest entry (f0).
+        r.locate("/ospool/ligo/f2", &mut os, SimTime::ZERO);
+        assert_eq!(r.cached_locations(), 2, "cap holds");
+        assert_eq!(r.evictions, 1);
+        let broadcasts = r.broadcasts;
+        // f1 and f2 are still cached; f0 was evicted and re-broadcasts.
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO);
+        r.locate("/ospool/ligo/f2", &mut os, SimTime::ZERO);
+        assert_eq!(r.broadcasts, broadcasts);
+        r.locate("/ospool/ligo/f0", &mut os, SimTime::ZERO);
+        assert_eq!(r.broadcasts, broadcasts + 1, "evicted entry re-broadcasts");
+    }
+
+    #[test]
+    fn lru_hit_promotes_entry() {
+        let mut os = origin_with_files(3);
+        let mut r = Redirector::with_cap(0, 2);
+        r.locate("/ospool/ligo/f0", &mut os, SimTime::ZERO);
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::ZERO);
+        // Touch f0: f1 becomes the LRU victim.
+        r.locate("/ospool/ligo/f0", &mut os, SimTime::from_secs_f64(1.0));
+        r.locate("/ospool/ligo/f2", &mut os, SimTime::from_secs_f64(2.0));
+        let broadcasts = r.broadcasts;
+        r.locate("/ospool/ligo/f0", &mut os, SimTime::from_secs_f64(3.0));
+        assert_eq!(r.broadcasts, broadcasts, "promoted entry survived");
+        r.locate("/ospool/ligo/f1", &mut os, SimTime::from_secs_f64(4.0));
+        assert_eq!(r.broadcasts, broadcasts + 1, "victim was the cold f1");
+    }
+
+    #[test]
     fn pool_round_robins() {
         let mut os = origins();
         let mut pool = RedirectorPool::new(2);
@@ -240,6 +401,36 @@ mod tests {
                 .unwrap();
             assert_eq!(out.instance, 1);
         }
+    }
+
+    #[test]
+    fn pool_rotation_skips_unhealthy_and_resumes_fair() {
+        let mut os = origins();
+        let mut pool = RedirectorPool::with_cap(3, DEFAULT_LOCATION_CACHE_CAP);
+        let answer = |pool: &mut RedirectorPool, os: &mut Vec<Origin>| {
+            pool.locate("/ospool/ligo/f1", os, SimTime::ZERO)
+                .unwrap()
+                .unwrap()
+                .instance
+        };
+        // Healthy warm-up: 0, 1, 2.
+        assert_eq!(
+            [answer(&mut pool, &mut os), answer(&mut pool, &mut os), answer(&mut pool, &mut os)],
+            [0, 1, 2]
+        );
+        // Instance 1 down: rotation skips it and alternates 0/2.
+        pool.set_healthy(1, false);
+        let while_down: Vec<usize> = (0..4).map(|_| answer(&mut pool, &mut os)).collect();
+        assert_eq!(while_down, vec![0, 2, 0, 2]);
+        assert!(!while_down.contains(&1), "down instance never answers");
+        // Recovery: over the next two full cycles every instance
+        // answers exactly twice — rotation is fair again.
+        pool.set_healthy(1, true);
+        let mut counts = [0usize; 3];
+        for _ in 0..6 {
+            counts[answer(&mut pool, &mut os)] += 1;
+        }
+        assert_eq!(counts, [2, 2, 2], "fair rotation after recovery");
     }
 
     #[test]

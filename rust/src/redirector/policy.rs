@@ -1,0 +1,458 @@
+//! Pluggable cache-selection policies: the redirection layer.
+//!
+//! The paper's clients pick a cache with one hardcoded rule — GeoIP
+//! nearest (§3). Follow-on deployments generalised exactly this seam:
+//! the XCache CDN work shards the namespace across caches so one file
+//! converges on one cache, and the OSDF operations paper motivates
+//! load-aware redirection from live cache telemetry. This module makes
+//! the rule a first-class [`RedirectionPolicy`]:
+//!
+//! * [`Nearest`] — GeoIP distance + storage-load penalty, first
+//!   reachable cache in rank order. **Bit-identical** to the legacy
+//!   `FedSim::nearest_cache_site_filtered` ladder (regression-locked
+//!   by `tests/redirection_policy.rs`).
+//! * [`LeastLoaded`] — the `k` nearest reachable caches compete on
+//!   *live* load: in-flight sessions first, then the cache WAN link's
+//!   aggregate allocated rate, then geo rank. Spreads a burst across
+//!   a region instead of piling onto one box.
+//! * [`ConsistentHash`] — the namespace is sharded over a hash ring of
+//!   cache sites with virtual nodes. Every client in the federation
+//!   maps one path to one cache, so origin refetches collapse: a file
+//!   requested at N sites is fetched from the origin once, not N
+//!   times. Within one selection, excluded or down caches are holes
+//!   in the ring — the walk continues to the next clockwise owner
+//!   (the engine's `MAX_FAILOVER_RETRIES` ladder still bounds how
+//!   many re-selections a session attempts).
+//! * [`Tiered`] — site-local cache, else the nearest cache within a
+//!   regional ring, else the origin: the generalisation of the
+//!   failover ladder stashcp walks today, with the WAN tier opt-out
+//!   that site operators actually configure.
+//!
+//! Policies are pure functions of a [`FederationView`] — an owned
+//! snapshot of what the redirection layer may observe (geo ranking,
+//! storage and live load, in-flight counts, up/down state). The view
+//! is assembled by [`crate::federation::FedSim::federation_view`]; the
+//! driver threads its per-cache in-flight counts in. Determinism: all
+//! inputs are deterministic simulator state and every tie-break is
+//! pinned (rank order, then cache-list order), so campaigns stay
+//! bit-reproducible under every policy.
+
+use crate::config::schema::RedirectionConfig;
+use crate::util::fnv1a;
+
+/// Which redirection policy a federation runs (config + sweep axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    Nearest,
+    LeastLoaded,
+    ConsistentHash,
+    Tiered,
+}
+
+/// Every policy, in canonical order (CLI help, sweep presets, bench).
+pub const ALL_POLICIES: [PolicyKind; 4] = [
+    PolicyKind::Nearest,
+    PolicyKind::LeastLoaded,
+    PolicyKind::ConsistentHash,
+    PolicyKind::Tiered,
+];
+
+/// The `a|b|c` list every "unknown policy" error shows. A test pins
+/// it to [`ALL_POLICIES`], so adding a policy updates one file.
+pub const POLICY_NAMES: &str = "nearest|least-loaded|consistent-hash|tiered";
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Nearest => "nearest",
+            PolicyKind::LeastLoaded => "least-loaded",
+            PolicyKind::ConsistentHash => "consistent-hash",
+            PolicyKind::Tiered => "tiered",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "nearest" => Some(PolicyKind::Nearest),
+            "least-loaded" => Some(PolicyKind::LeastLoaded),
+            "consistent-hash" => Some(PolicyKind::ConsistentHash),
+            "tiered" => Some(PolicyKind::Tiered),
+            _ => None,
+        }
+    }
+}
+
+/// What the redirection layer may observe when placing one request:
+/// an owned snapshot of the federation, indexed by *cache position*
+/// (0..n in `geoip.caches()` order). `cache_sites[pos]` maps a
+/// position back to the site index the rest of the simulator uses.
+#[derive(Debug, Clone)]
+pub struct FederationView {
+    /// Site index of the requesting worker.
+    pub client_site: usize,
+    /// Cache site indices, in federation (geo database) order.
+    pub cache_sites: Vec<usize>,
+    /// Geo ranking: (position, score) best-first — distance plus the
+    /// storage-load penalty, exactly the legacy GeoIP ordering (so the
+    /// storage load is already folded in; no policy re-reads it).
+    pub ranked: Vec<(usize, f64)>,
+    /// Live aggregate allocated rate (bytes/s) on each cache's WAN
+    /// access link — the netsim telemetry a load-aware redirector
+    /// would scrape.
+    pub wan_rate_bps: Vec<f64>,
+    /// Sessions currently assigned to each cache by the engine
+    /// driving this federation (all zero for serial drivers).
+    pub in_flight: Vec<u64>,
+    /// Great-circle km from the client site to each cache site.
+    pub distance_km: Vec<f64>,
+    /// Up/down per cache (the fault layer's view).
+    pub up: Vec<bool>,
+}
+
+impl FederationView {
+    /// May the cache at `pos` serve this request? (Up, and not one the
+    /// session already failed against.)
+    pub fn usable(&self, pos: usize, excluded: &[usize]) -> bool {
+        self.up[pos] && !excluded.contains(&self.cache_sites[pos])
+    }
+
+    /// Position of a site's cache in the view, if that site hosts one.
+    pub fn pos_of_site(&self, site: usize) -> Option<usize> {
+        self.cache_sites.iter().position(|&s| s == site)
+    }
+}
+
+/// A cache-selection rule. `select` returns the chosen cache *site
+/// index*, or `None` when no cache should serve this request — the
+/// caller then falls back to the origin (the tiered ladder's last
+/// rung, shared by every policy when the federation is dark).
+pub trait RedirectionPolicy: Send {
+    fn kind(&self) -> PolicyKind;
+
+    fn select(&self, path: &str, view: &FederationView, excluded: &[usize]) -> Option<usize>;
+}
+
+/// GeoIP nearest reachable cache — the paper's rule, bit-identical to
+/// the legacy `nearest_cache_site_filtered` ladder.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Nearest;
+
+impl RedirectionPolicy for Nearest {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Nearest
+    }
+
+    fn select(&self, _path: &str, view: &FederationView, excluded: &[usize]) -> Option<usize> {
+        view.ranked
+            .iter()
+            .map(|&(pos, _)| pos)
+            .find(|&pos| view.usable(pos, excluded))
+            .map(|pos| view.cache_sites[pos])
+    }
+}
+
+/// The `k` nearest reachable caches compete on live load. Ordering:
+/// fewest in-flight sessions, then lowest WAN aggregate rate, then
+/// geo rank — every comparison strict, so ties keep the nearer cache
+/// and selection is deterministic.
+#[derive(Debug, Clone, Copy)]
+pub struct LeastLoaded {
+    /// How many nearest candidates compete (≥ 1).
+    pub k: usize,
+}
+
+impl RedirectionPolicy for LeastLoaded {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::LeastLoaded
+    }
+
+    fn select(&self, _path: &str, view: &FederationView, excluded: &[usize]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        let mut best_key = (u64::MAX, f64::INFINITY);
+        let mut considered = 0;
+        for &(pos, _) in &view.ranked {
+            if !view.usable(pos, excluded) {
+                continue;
+            }
+            let key = (view.in_flight[pos], view.wan_rate_bps[pos]);
+            let better = key.0 < best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1);
+            if best.is_none() || better {
+                best = Some(pos);
+                best_key = key;
+            }
+            considered += 1;
+            if considered >= self.k {
+                break;
+            }
+        }
+        best.map(|pos| view.cache_sites[pos])
+    }
+}
+
+/// Namespace sharding over a hash ring of cache sites with virtual
+/// nodes: `hash(path)` lands on the ring and the first clockwise
+/// owner serves it, so one file converges on one cache federation-wide
+/// regardless of which site asks. Excluded and down caches are holes —
+/// the walk continues to the next owner, which is how a failed cache's
+/// shard redistributes without reshuffling anyone else's.
+#[derive(Debug, Clone)]
+pub struct ConsistentHash {
+    /// (point, cache position), sorted by point then position.
+    ring: Vec<(u64, usize)>,
+}
+
+impl ConsistentHash {
+    /// Build the ring from the federation's cache-site names (the
+    /// stable identity replicas hash under) with `virtual_nodes`
+    /// points per cache for ring balance.
+    pub fn new(cache_names: &[&str], virtual_nodes: usize) -> Self {
+        let vnodes = virtual_nodes.max(1);
+        let mut ring = Vec::with_capacity(cache_names.len() * vnodes);
+        for (pos, name) in cache_names.iter().enumerate() {
+            for v in 0..vnodes {
+                let point = fnv1a(format!("{name}#{v}").as_bytes());
+                ring.push((point, pos));
+            }
+        }
+        // Hash collisions between distinct caches tie-break on
+        // position, so the ring order is deterministic.
+        ring.sort_unstable();
+        ConsistentHash { ring }
+    }
+
+    /// Ring points (tests: balance + determinism).
+    pub fn ring_len(&self) -> usize {
+        self.ring.len()
+    }
+}
+
+impl RedirectionPolicy for ConsistentHash {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::ConsistentHash
+    }
+
+    fn select(&self, path: &str, view: &FederationView, excluded: &[usize]) -> Option<usize> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        let h = fnv1a(path.as_bytes());
+        let start = self.ring.partition_point(|&(point, _)| point < h);
+        for i in 0..self.ring.len() {
+            let (_, pos) = self.ring[(start + i) % self.ring.len()];
+            if pos < view.cache_sites.len() && view.usable(pos, excluded) {
+                return Some(view.cache_sites[pos]);
+            }
+        }
+        None
+    }
+}
+
+/// Site-local cache → nearest cache within `regional_km` → origin.
+/// The ladder a site operator configures when WAN caches cost more
+/// than they save: `None` here sends the session straight to the
+/// origin instead of across an ocean.
+#[derive(Debug, Clone, Copy)]
+pub struct Tiered {
+    /// Radius of the regional ring (km, > 0).
+    pub regional_km: f64,
+}
+
+impl RedirectionPolicy for Tiered {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Tiered
+    }
+
+    fn select(&self, _path: &str, view: &FederationView, excluded: &[usize]) -> Option<usize> {
+        // Tier 1: the client site's own cache.
+        if let Some(pos) = view.pos_of_site(view.client_site) {
+            if view.usable(pos, excluded) {
+                return Some(view.cache_sites[pos]);
+            }
+        }
+        // Tier 2: nearest usable cache inside the regional ring (rank
+        // order, so the storage-load penalty still applies).
+        for &(pos, _) in &view.ranked {
+            if view.distance_km[pos] <= self.regional_km && view.usable(pos, excluded) {
+                return Some(view.cache_sites[pos]);
+            }
+        }
+        // Tier 3: no regional cache — stream from the origin.
+        None
+    }
+}
+
+/// Instantiate the configured policy for a federation whose cache
+/// sites are named `cache_names` (federation order — ring identity).
+pub fn build_policy(cfg: &RedirectionConfig, cache_names: &[&str]) -> Box<dyn RedirectionPolicy> {
+    match cfg.policy {
+        PolicyKind::Nearest => Box::new(Nearest),
+        PolicyKind::LeastLoaded => Box::new(LeastLoaded { k: cfg.nearest_k }),
+        PolicyKind::ConsistentHash => {
+            Box::new(ConsistentHash::new(cache_names, cfg.virtual_nodes))
+        }
+        PolicyKind::Tiered => Box::new(Tiered {
+            regional_km: cfg.regional_km,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three caches: positions 0/1/2 at sites 10/20/30, ranked
+    /// 0 (near) → 1 → 2 (far), client at site 99 (no local cache).
+    fn view() -> FederationView {
+        FederationView {
+            client_site: 99,
+            cache_sites: vec![10, 20, 30],
+            ranked: vec![(0, 100.0), (1, 500.0), (2, 2500.0)],
+            wan_rate_bps: vec![0.0, 0.0, 0.0],
+            in_flight: vec![0, 0, 0],
+            distance_km: vec![100.0, 500.0, 2500.0],
+            up: vec![true, true, true],
+        }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for kind in ALL_POLICIES {
+            assert_eq!(PolicyKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(PolicyKind::from_name("geo"), None);
+        let joined: Vec<&str> = ALL_POLICIES.iter().map(|p| p.name()).collect();
+        assert_eq!(POLICY_NAMES, joined.join("|"), "help list matches ALL_POLICIES");
+    }
+
+    #[test]
+    fn nearest_walks_rank_order_with_holes() {
+        let v = view();
+        assert_eq!(Nearest.select("/f", &v, &[]), Some(10));
+        assert_eq!(Nearest.select("/f", &v, &[10]), Some(20));
+        let mut down = view();
+        down.up[0] = false;
+        assert_eq!(Nearest.select("/f", &down, &[20]), Some(30));
+        assert_eq!(Nearest.select("/f", &down, &[20, 30]), None);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_within_k() {
+        let mut v = view();
+        v.in_flight = vec![5, 1, 0];
+        // k=2: only positions 0 and 1 compete; 1 is idler.
+        assert_eq!(LeastLoaded { k: 2 }.select("/f", &v, &[]), Some(20));
+        // k=3 widens the pool to the idle far cache.
+        assert_eq!(LeastLoaded { k: 3 }.select("/f", &v, &[]), Some(30));
+        // k=1 degenerates to Nearest.
+        assert_eq!(LeastLoaded { k: 1 }.select("/f", &v, &[]), Some(10));
+    }
+
+    #[test]
+    fn least_loaded_ties_break_on_wan_rate_then_rank() {
+        let mut v = view();
+        v.in_flight = vec![2, 2, 2];
+        v.wan_rate_bps = vec![9e9, 1e9, 1e9];
+        // Equal sessions: lowest WAN rate wins; equal rate keeps the
+        // nearer cache (position 1 beats 2).
+        assert_eq!(LeastLoaded { k: 3 }.select("/f", &v, &[]), Some(20));
+        // All equal ⇒ pure rank order.
+        v.wan_rate_bps = vec![1e9, 1e9, 1e9];
+        assert_eq!(LeastLoaded { k: 3 }.select("/f", &v, &[]), Some(10));
+    }
+
+    #[test]
+    fn least_loaded_skips_unusable_before_counting_k() {
+        let mut v = view();
+        v.up[0] = false;
+        v.in_flight = vec![0, 3, 0];
+        // The dead cache is not a candidate: 1 and 2 compete, 2 idler.
+        assert_eq!(LeastLoaded { k: 2 }.select("/f", &v, &[]), Some(30));
+    }
+
+    #[test]
+    fn consistent_hash_is_client_independent_and_total() {
+        let ch = ConsistentHash::new(&["a", "b", "c"], 64);
+        assert_eq!(ch.ring_len(), 3 * 64);
+        let near = view();
+        let mut far = view();
+        far.client_site = 7;
+        far.ranked = vec![(2, 1.0), (1, 2.0), (0, 3.0)]; // reversed rank
+        for i in 0..50 {
+            let path = format!("/ospool/x/data/f{i:06}.dat");
+            let a = ch.select(&path, &near, &[]);
+            let b = ch.select(&path, &far, &[]);
+            assert!(a.is_some(), "ring covers every path");
+            assert_eq!(a, b, "placement must not depend on the client");
+        }
+    }
+
+    #[test]
+    fn consistent_hash_ring_spreads_over_caches() {
+        let ch = ConsistentHash::new(&["a", "b", "c"], 64);
+        let v = view();
+        let mut hits = [0usize; 3];
+        for i in 0..300 {
+            let path = format!("/ospool/x/data/f{i:06}.dat");
+            let site = ch.select(&path, &v, &[]).unwrap();
+            hits[v.cache_sites.iter().position(|&s| s == site).unwrap()] += 1;
+        }
+        for (pos, &n) in hits.iter().enumerate() {
+            assert!(n > 0, "cache {pos} owns no shard of 300 paths");
+        }
+    }
+
+    #[test]
+    fn consistent_hash_excluded_is_a_ring_hole() {
+        let ch = ConsistentHash::new(&["a", "b", "c"], 64);
+        let v = view();
+        let path = "/ospool/x/data/f000001.dat";
+        let owner = ch.select(path, &v, &[]).unwrap();
+        let next = ch.select(path, &v, &[owner]).unwrap();
+        assert_ne!(owner, next, "hole walks to the next owner");
+        // Same hole via the fault layer.
+        let mut down = view();
+        let owner_pos = down.cache_sites.iter().position(|&s| s == owner).unwrap();
+        down.up[owner_pos] = false;
+        assert_eq!(ch.select(path, &down, &[]), Some(next));
+        // Every cache gone ⇒ origin fallback.
+        assert_eq!(ch.select(path, &v, &[10, 20, 30]), None);
+    }
+
+    #[test]
+    fn consistent_hash_is_deterministic_across_builds() {
+        let a = ConsistentHash::new(&["a", "b", "c"], 32);
+        let b = ConsistentHash::new(&["a", "b", "c"], 32);
+        let v = view();
+        for i in 0..40 {
+            let path = format!("/p/{i}");
+            assert_eq!(a.select(&path, &v, &[]), b.select(&path, &v, &[]));
+        }
+    }
+
+    #[test]
+    fn tiered_ladder_local_then_regional_then_origin() {
+        let t = Tiered { regional_km: 600.0 };
+        // Client hosts cache site 20 (position 1): tier 1.
+        let mut v = view();
+        v.client_site = 20;
+        assert_eq!(t.select("/f", &v, &[]), Some(20));
+        // Local excluded: regional ring (0 and 1 are within 600 km).
+        assert_eq!(t.select("/f", &v, &[20]), Some(10));
+        // No local cache: nearest regional.
+        let v = view();
+        assert_eq!(t.select("/f", &v, &[]), Some(10));
+        // Regional ring exhausted ⇒ origin, never the 2500 km cache.
+        assert_eq!(t.select("/f", &v, &[10, 20]), None);
+        let tight = Tiered { regional_km: 50.0 };
+        assert_eq!(tight.select("/f", &v, &[]), None);
+    }
+
+    #[test]
+    fn build_policy_matches_kind() {
+        let mut cfg = RedirectionConfig::default();
+        for kind in ALL_POLICIES {
+            cfg.policy = kind;
+            assert_eq!(build_policy(&cfg, &["a", "b"]).kind(), kind);
+        }
+    }
+}

@@ -189,6 +189,50 @@ pub fn frontier_table(results: &crate::experiment::SweepResults) -> Table {
     t
 }
 
+/// Redirection-policy comparison of a parameter sweep: for every
+/// workload cell (same jobs, skew, sizes, faults — and the same
+/// workload *realization*, since policy variants share trial seeds),
+/// each cache-selection policy's hit ratio, origin bytes, and p95
+/// transfer time side by side. This is where consistent hashing's
+/// origin-traffic collapse shows up: one Zipf-hot file fetched once
+/// federation-wide instead of once per site.
+pub fn policy_table(results: &crate::experiment::SweepResults) -> Table {
+    use crate::experiment::grid::method_name;
+    let mut t = Table::new(
+        format!(
+            "Redirection policies {:?}: per-cell hit ratio / origin bytes / p95",
+            results.grid.name
+        ),
+        &["Cell", "method", "policy", "hit%", "origin GB", "p95 s", "failovers"],
+    );
+    // Group policy variants of one workload cell together: walk the
+    // distinct (workload, method) pairs in first-appearance order,
+    // then the policies in grid order within each.
+    let mut groups: Vec<(String, crate::federation::DownloadMethod)> = Vec::new();
+    for c in &results.cells {
+        let key = (c.cell.workload_label(), c.cell.method);
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    for (workload, method) in groups {
+        for c in results.cells.iter().filter(|c| {
+            c.cell.method == method && c.cell.workload_label() == workload
+        }) {
+            t.row(vec![
+                workload.clone(),
+                method_name(method).to_string(),
+                c.cell.policy.name().to_string(),
+                format!("{:.1}", 100.0 * c.hit_ratio.mean),
+                format!("{:.2}", c.origin_gb.mean),
+                format!("{:.2}", c.p95_s.mean),
+                format!("{:.1}", c.failovers.mean),
+            ]);
+        }
+    }
+    t
+}
+
 /// The sweep's Table 3 cell next to the paper's published numbers
 /// (same convention as [`table3`]).
 pub fn sweep_table3(cell: &crate::experiment::Table3Cell) -> Table {

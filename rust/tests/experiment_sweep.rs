@@ -26,6 +26,7 @@ fn acceptance_grid() -> GridSpec {
         zipf_s: vec![1.3],
         size_profiles: vec![SizeProfile::Paper],
         fault_profiles: vec![FaultProfile::None, FaultProfile::CacheOutage],
+        policies: vec![stashcache::redirector::PolicyKind::Nearest],
         sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
         experiment: "gwosc".into(),
         catalog_files: 32,

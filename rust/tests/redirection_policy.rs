@@ -1,0 +1,440 @@
+//! Integration: the policy-driven redirection layer (ISSUE 5).
+//!
+//! The contracts:
+//!
+//! 1. **Nearest is the legacy behavior, bit-for-bit** — the policy
+//!    machinery under `policy = "nearest"` returns exactly what the
+//!    hardcoded `nearest_cache_site_filtered` ladder returns, call for
+//!    call, and a campaign run under the explicit policy digests equal
+//!    to one built through the legacy default path.
+//! 2. **Consistent hashing converges federation-wide** — one path maps
+//!    to one cache no matter which site asks, excluded caches are ring
+//!    holes (the walk continues), and on a Zipf-skewed shared
+//!    namespace it fetches strictly fewer origin bytes than `nearest`.
+//! 3. **Least-loaded spreads a burst** that `nearest` serialises onto
+//!    one cache.
+//! 4. **Tiered stops at the regional ring** — a site with no cache
+//!    within `regional_km` streams from the origin instead of a WAN
+//!    cache.
+//! 5. The `policy` sweep axis runs every variant on the identical
+//!    workload draw and surfaces the comparison in the frontier and
+//!    policy tables.
+
+use std::collections::HashMap;
+
+use stashcache::client::Method;
+use stashcache::config::defaults::{paper_federation, paper_workload, COMPUTE_SITES};
+use stashcache::config::{
+    FederationConfig, LinkProfile, OriginConfig, RedirectionConfig, SiteConfig,
+};
+use stashcache::experiment::summary::digest_records;
+use stashcache::experiment::{grid::FaultProfile, grid::SizeProfile, run_grid, GridSpec};
+use stashcache::federation::{DownloadMethod, FedSim};
+use stashcache::redirector::{PolicyKind, ALL_POLICIES};
+use stashcache::report::paper;
+use stashcache::sim::campaign::{self, CampaignConfig};
+use stashcache::sim::workload::FileRef;
+use stashcache::util::ByteSize;
+
+fn file(path: &str, bytes: u64) -> FileRef {
+    FileRef {
+        path: path.into(),
+        size: ByteSize(bytes),
+        version: 1,
+    }
+}
+
+fn small_campaign() -> CampaignConfig {
+    CampaignConfig {
+        sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+        jobs: 24,
+        arrival_window_secs: 10.0,
+        catalog_files: 32,
+        zipf_s: 1.1,
+        background_flows: 1,
+        ..CampaignConfig::default()
+    }
+}
+
+fn fed_with_policy(policy: PolicyKind) -> FedSim {
+    let mut cfg = paper_federation();
+    cfg.redirection.policy = policy;
+    FedSim::build(cfg)
+}
+
+// --- contract 1: Nearest ≡ legacy ----------------------------------------
+
+#[test]
+fn nearest_policy_matches_legacy_ladder_call_for_call() {
+    let mut fed = fed_with_policy(PolicyKind::Nearest);
+    let none = HashMap::new();
+    let sites: Vec<usize> = COMPUTE_SITES
+        .iter()
+        .map(|s| fed.topo.site_index(s).unwrap())
+        .collect();
+    let mut cache_sites: Vec<usize> = fed.caches.keys().copied().collect();
+    cache_sites.sort_unstable();
+    for &site in &sites {
+        // No exclusions, then every ladder depth: knocking out the
+        // current best repeatedly must walk both APIs identically.
+        let mut excluded: Vec<usize> = Vec::new();
+        loop {
+            let legacy = fed.nearest_cache_site_filtered(site, &excluded);
+            let policy = fed.select_cache(site, "/ospool/gwosc/data/f000000.dat", &excluded, &none);
+            assert_eq!(
+                legacy, policy,
+                "site {site} excluded {excluded:?}: legacy {legacy:?} vs policy {policy:?}"
+            );
+            match legacy {
+                Some(best) => excluded.push(best),
+                None => break,
+            }
+        }
+        assert_eq!(excluded.len(), cache_sites.len(), "walked the whole ladder");
+    }
+}
+
+#[test]
+fn explicit_nearest_campaign_is_bit_identical_to_default_path() {
+    // Legacy default path: no [redirection] table at all.
+    let default_cfg = paper_federation();
+    assert_eq!(default_cfg.redirection, RedirectionConfig::default());
+    let a = campaign::run(default_cfg, &small_campaign());
+
+    // Explicit `policy = "nearest"` through the config surface.
+    let mut explicit_cfg = paper_federation();
+    explicit_cfg.redirection.policy = PolicyKind::Nearest;
+    let b = campaign::run(explicit_cfg, &small_campaign());
+
+    assert_eq!(a.records, b.records, "record streams must be identical");
+    assert_eq!(digest_records(&a.records), digest_records(&b.records));
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.peak_concurrent, b.peak_concurrent);
+}
+
+// --- satellite: tie-breaking is pinned ------------------------------------
+
+/// Two caches at *identical* coordinates plus one compute site. The
+/// geo scores tie exactly (same haversine, both unloaded), so the
+/// pinned order must win: (score, geo index), where the geo index is
+/// the config's site order.
+fn twin_cache_config(first: &str, second: &str) -> FederationConfig {
+    let cache_site = |name: &str| SiteConfig {
+        name: name.into(),
+        lat: 40.0,
+        lon: -100.0,
+        worker_slots: 0,
+        links: LinkProfile::default(),
+        proxy: None,
+        cache: Some(Default::default()),
+    };
+    let client = SiteConfig {
+        name: "client".into(),
+        lat: 30.0,
+        lon: -90.0,
+        worker_slots: 4,
+        links: LinkProfile::default(),
+        proxy: Some(Default::default()),
+        cache: None,
+    };
+    FederationConfig {
+        name: "twins".into(),
+        seed: 1,
+        redirector_instances: 2,
+        redirection: RedirectionConfig::default(),
+        sites: vec![cache_site(first), cache_site(second), client],
+        origins: vec![OriginConfig {
+            name: "origin".into(),
+            site: "client".into(),
+            prefix: "/ospool/gwosc".into(),
+        }],
+        workload: paper_workload(),
+    }
+}
+
+#[test]
+fn equal_distance_caches_tie_break_on_config_order() {
+    for (first, second) in [("twin-a", "twin-b"), ("twin-b", "twin-a")] {
+        let mut fed = FedSim::build(twin_cache_config(first, second));
+        let client = fed.topo.site_index("client").unwrap();
+        let expect = fed.topo.site_index(first).unwrap();
+        let pick = fed.nearest_cache_site(client);
+        assert_eq!(
+            pick, expect,
+            "first-configured cache must win the tie ({first} before {second})"
+        );
+        // Deterministic across repeated calls, and identical through
+        // the policy layer.
+        assert_eq!(fed.nearest_cache_site(client), pick);
+        assert_eq!(
+            fed.select_cache(client, "/ospool/gwosc/f", &[], &HashMap::new()),
+            Some(pick)
+        );
+        // Excluding the winner falls to its twin.
+        assert_eq!(
+            fed.nearest_cache_site_filtered(client, &[pick]),
+            Some(fed.topo.site_index(second).unwrap())
+        );
+    }
+}
+
+// --- contract 2: consistent hashing ---------------------------------------
+
+#[test]
+fn consistent_hash_converges_federation_wide() {
+    let mut fed = fed_with_policy(PolicyKind::ConsistentHash);
+    let none = HashMap::new();
+    let sites: Vec<usize> = COMPUTE_SITES
+        .iter()
+        .map(|s| fed.topo.site_index(s).unwrap())
+        .collect();
+    let mut owners = std::collections::HashSet::new();
+    for i in 0..16 {
+        let path = format!("/ospool/gwosc/data/f{i:06}.dat");
+        let owner = fed.select_cache(sites[0], &path, &[], &none);
+        assert!(owner.is_some(), "ring covers every path");
+        for &site in &sites[1..] {
+            assert_eq!(
+                fed.select_cache(site, &path, &[], &none),
+                owner,
+                "{path} must map to one cache from every site"
+            );
+        }
+        owners.insert(owner.unwrap());
+    }
+    assert!(
+        owners.len() > 1,
+        "16 paths must shard over more than one cache, got {owners:?}"
+    );
+}
+
+#[test]
+fn consistent_hash_excluded_cache_is_a_ring_hole() {
+    let mut fed = fed_with_policy(PolicyKind::ConsistentHash);
+    let none = HashMap::new();
+    let site = fed.topo.site_index("syracuse").unwrap();
+    let path = "/ospool/gwosc/data/f000001.dat";
+    let owner = fed.select_cache(site, path, &[], &none).unwrap();
+    let successor = fed.select_cache(site, path, &[owner], &none).unwrap();
+    assert_ne!(owner, successor, "hole walks to the next ring owner");
+    // The walk is stable: excluding unrelated caches does not move the
+    // owner.
+    let unrelated: Vec<usize> = fed
+        .caches
+        .keys()
+        .copied()
+        .filter(|&s| s != owner && s != successor)
+        .take(2)
+        .collect();
+    assert_eq!(fed.select_cache(site, path, &unrelated, &none), Some(owner));
+    // Every cache excluded ⇒ origin fallback.
+    let all: Vec<usize> = fed.caches.keys().copied().collect();
+    assert_eq!(fed.select_cache(site, path, &all, &none), None);
+}
+
+#[test]
+fn consistent_hash_campaign_is_deterministic() {
+    let run = || {
+        let mut fed = fed_with_policy(PolicyKind::ConsistentHash);
+        digest_records(&campaign::run_on(&mut fed, &small_campaign()).records)
+    };
+    assert_eq!(run(), run(), "same seed ⇒ identical records under CH");
+}
+
+// --- contract 3: least-loaded ---------------------------------------------
+
+/// How many caches saw any request during a run.
+fn caches_used(fed: &FedSim) -> usize {
+    fed.caches.values().filter(|c| c.stats.requests > 0).count()
+}
+
+#[test]
+fn least_loaded_prefers_idle_neighbours() {
+    // Deterministic view-level check: with the local cache busy, the
+    // policy must pick an idle cache from the nearest-k pool, and
+    // release of the load restores the local choice.
+    let mut fed = fed_with_policy(PolicyKind::LeastLoaded);
+    let syr = fed.topo.site_index("syracuse").unwrap();
+    let mut in_flight: HashMap<usize, u64> = HashMap::new();
+    let first = fed.select_cache(syr, "/p", &[], &in_flight).unwrap();
+    assert_eq!(
+        first,
+        fed.nearest_cache_site(syr),
+        "an idle federation degenerates to nearest"
+    );
+    in_flight.insert(first, 1);
+    let second = fed.select_cache(syr, "/p", &[], &in_flight).unwrap();
+    assert_ne!(second, first, "busy local cache loses to an idle neighbour");
+    in_flight.insert(second, 1);
+    let third = fed.select_cache(syr, "/p", &[], &in_flight).unwrap();
+    assert!(third != first && third != second, "k=3 pool spreads three ways");
+    in_flight.clear();
+    assert_eq!(fed.select_cache(syr, "/p", &[], &in_flight), Some(first));
+}
+
+#[test]
+fn least_loaded_spreads_a_burst_nearest_serialises() {
+    // One site, 32 jobs inside 50 ms — arrival gaps are far below any
+    // transfer time, so sessions overlap massively. Under `nearest`
+    // every session piles onto the local cache (storage load is
+    // negligible, so the GeoIP penalty never moves); under
+    // `least-loaded` the in-flight counts push the burst across the
+    // k nearest caches.
+    let burst = CampaignConfig {
+        sites: vec!["syracuse".into()],
+        jobs: 32,
+        arrival_window_secs: 0.05,
+        catalog_files: 64,
+        zipf_s: 0.0, // near-uniform file draws: mostly cold misses
+        background_flows: 0,
+        ..CampaignConfig::default()
+    };
+
+    let mut nearest_fed = fed_with_policy(PolicyKind::Nearest);
+    let r = campaign::run_on(&mut nearest_fed, &burst);
+    assert_eq!(r.records.len(), 32);
+    assert_eq!(
+        caches_used(&nearest_fed),
+        1,
+        "nearest must serialise the burst onto the local cache"
+    );
+
+    let mut ll_fed = fed_with_policy(PolicyKind::LeastLoaded);
+    let r = campaign::run_on(&mut ll_fed, &burst);
+    assert_eq!(r.records.len(), 32);
+    assert!(
+        caches_used(&ll_fed) >= 2,
+        "least-loaded must spread the burst, used {}",
+        caches_used(&ll_fed)
+    );
+}
+
+// --- contract 4: tiered ---------------------------------------------------
+
+#[test]
+fn tiered_falls_to_origin_outside_the_regional_ring() {
+    // A 1 km ring: only a site-local cache qualifies. Colorado has no
+    // local cache, so its downloads must stream from the origin.
+    let mut cfg = paper_federation();
+    cfg.redirection.policy = PolicyKind::Tiered;
+    cfg.redirection.regional_km = 1.0;
+    let mut fed = FedSim::build(cfg);
+    let colorado = fed.topo.site_index("colorado").unwrap();
+    let fr = file("/ospool/gwosc/data/t0.dat", 50_000_000);
+    let rec = fed.download(colorado, &fr, DownloadMethod::Stash);
+    assert_eq!(rec.method, Method::HttpOrigin, "no regional cache ⇒ origin");
+    assert!(!rec.cache_hit);
+
+    // Syracuse hosts a cache: tier 1 serves it, and the second pull
+    // is a local hit.
+    let syr = fed.topo.site_index("syracuse").unwrap();
+    let fr = file("/ospool/gwosc/data/t1.dat", 50_000_000);
+    let cold = fed.download(syr, &fr, DownloadMethod::Stash);
+    assert_eq!(cold.method, Method::Xrootd);
+    let hot = fed.download(syr, &fr, DownloadMethod::Stash);
+    assert!(hot.cache_hit, "tier-1 local cache must be warm");
+}
+
+#[test]
+fn tiered_default_ring_reaches_a_regional_cache() {
+    // With the default 2000 km ring Colorado reaches the midwest
+    // caches and never pays the origin path.
+    let mut fed = fed_with_policy(PolicyKind::Tiered);
+    let colorado = fed.topo.site_index("colorado").unwrap();
+    let fr = file("/ospool/gwosc/data/t2.dat", 50_000_000);
+    let rec = fed.download(colorado, &fr, DownloadMethod::Stash);
+    assert_eq!(rec.method, Method::Xrootd, "regional cache serves colorado");
+}
+
+// --- contract 5: the policy sweep axis ------------------------------------
+
+fn policy_axis_grid() -> GridSpec {
+    GridSpec {
+        name: "policy-acceptance".into(),
+        root_seed: 20190728,
+        reps: 1,
+        methods: vec![DownloadMethod::Stash, DownloadMethod::HttpProxy],
+        capacity_scales: vec![1.0],
+        jobs: vec![30],
+        arrival_windows: vec![10.0],
+        zipf_s: vec![1.5],
+        size_profiles: vec![SizeProfile::Paper],
+        fault_profiles: vec![FaultProfile::None],
+        policies: ALL_POLICIES.to_vec(),
+        sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+        experiment: "gwosc".into(),
+        catalog_files: 8,
+        files_per_job: (1, 1),
+        background_flows: 1,
+        table3_cell: false,
+    }
+}
+
+#[test]
+fn policy_sweep_consistent_hash_fetches_fewer_origin_bytes_than_nearest() {
+    let grid = policy_axis_grid();
+    let results = run_grid(&paper_federation(), &grid, 2);
+    assert_eq!(results.trials.len(), 2 * 4, "4 policies × stash/http");
+    for t in &results.trials {
+        assert_eq!(t.downloads, 30, "{} lost jobs", t.spec.cell.label());
+    }
+
+    let stash = |policy: PolicyKind| {
+        results
+            .trials
+            .iter()
+            .find(|t| {
+                t.spec.cell.method == DownloadMethod::Stash && t.spec.cell.policy == policy
+            })
+            .expect("stash trial for policy")
+    };
+    let nearest = stash(PolicyKind::Nearest);
+    let ch = stash(PolicyKind::ConsistentHash);
+    // The headline: a Zipf-hot shared namespace across three sites,
+    // each with a local cache. `nearest` fetches a hot file from the
+    // origin once per site; sharding converges the federation on one
+    // cache per file.
+    assert!(
+        ch.origin_bytes < nearest.origin_bytes,
+        "consistent-hash must fetch strictly fewer origin bytes: {} vs {}",
+        ch.origin_bytes,
+        nearest.origin_bytes,
+    );
+
+    // The proxy path never consults the redirection layer: its four
+    // policy variants (identical workload seeds) are bit-identical.
+    let http_digests: Vec<u64> = results
+        .trials
+        .iter()
+        .filter(|t| t.spec.cell.method == DownloadMethod::HttpProxy)
+        .map(|t| t.records_digest)
+        .collect();
+    assert_eq!(http_digests.len(), 4);
+    assert!(
+        http_digests.iter().all(|&d| d == http_digests[0]),
+        "http twins must not vary across policies"
+    );
+
+    // The comparison is surfaced: frontier rows carry the policy in
+    // their cell label, and the policy table ranks every variant.
+    let frontier_md = paper::frontier_table(&results).to_markdown();
+    assert!(
+        frontier_md.contains("policy=consistent-hash"),
+        "frontier markdown must surface the policy axis:\n{frontier_md}"
+    );
+    assert!(frontier_md.contains("policy=nearest"));
+    let policy_md = paper::policy_table(&results).to_markdown();
+    assert_eq!(
+        policy_md.matches("consistent-hash").count(),
+        2,
+        "policy table lists the stash and http consistent-hash cells:\n{policy_md}"
+    );
+}
+
+#[test]
+fn parallel_policy_sweep_is_bit_identical_to_serial() {
+    let grid = policy_axis_grid();
+    let serial = run_grid(&paper_federation(), &grid, 1);
+    let parallel = run_grid(&paper_federation(), &grid, 4);
+    assert_eq!(serial, parallel, "policy axis preserves sweep determinism");
+}
