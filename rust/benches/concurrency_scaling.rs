@@ -15,6 +15,14 @@
 //!    the 1024 tier (the pre-rewrite floor was 100k) and that the
 //!    allocator stays O(affected) at 16384 sessions: flows re-fixed
 //!    per event under 10% of the peak concurrency.
+//! 3. **Thread-scaling matrix** — the sharded session engine at
+//!    1/2/4/8 threads on (a) the 16384-session warmed tier and (b) a
+//!    131072-job latency-bound tier whose 4 KiB files retire flows
+//!    instantly, so ≥100k sessions are live at once in their
+//!    startup/RTT phase. Every thread count is digest-checked
+//!    bit-identical to serial; the JSON carries the speedup/efficiency
+//!    curve, and 4 threads must be ≥2× serial on the 16384 tier
+//!    (skipped on hosts with fewer than 4 cores).
 //!
 //! Emits `BENCH_concurrency.json` at the repository root for the perf
 //! trajectory.
@@ -24,8 +32,9 @@ mod harness;
 
 use stashcache::config::defaults::paper_federation;
 use stashcache::federation::{DownloadMethod, FedSim};
-use stashcache::sim::campaign::{self, CampaignConfig};
+use stashcache::sim::campaign::{self, CampaignConfig, CampaignRecord};
 use stashcache::sim::workload::Catalog;
+use stashcache::util::ByteSize;
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -52,6 +61,67 @@ struct WarmTier {
     flows_refixed: u64,
     components_touched: u64,
     peak_component: usize,
+}
+
+struct ThreadRow {
+    sessions: usize,
+    threads: usize,
+    wall: f64,
+    events: u64,
+    peak: usize,
+    speedup_vs_1t: f64,
+    efficiency: f64,
+    digest: u64,
+}
+
+/// FNV-1a digest over every observable field of the transfer records,
+/// in completion order — the bit-identity surface for the sharded
+/// engine (same stream the determinism tests hash).
+fn records_digest(records: &[CampaignRecord]) -> u64 {
+    let mut buf = String::new();
+    for r in records {
+        let _ = write!(
+            buf,
+            "{}|{}|{}|{}|{}|{:?}|{}|{};",
+            r.session,
+            r.site,
+            r.arrival.0,
+            r.record.path,
+            r.record.bytes,
+            r.record.method,
+            r.record.cache_hit,
+            r.record.duration.0,
+        );
+    }
+    stashcache::util::fnv1a(buf.as_bytes())
+}
+
+/// Build a fresh federation and serially pre-fetch the 32-file warm
+/// catalog at every cache site, so a following campaign is whole-hit
+/// from the first arrival (a rebuilt fed per run keeps the start state
+/// identical across thread counts).
+///
+/// `tiny_files` clamps every catalog file to 4 KiB: transfers retire
+/// almost instantly, so a 131072-job burst is latency-bound — ≥100k
+/// sessions alive at once in their startup/RTT phase without ≥100k
+/// simultaneous flows in the waterfill allocator.
+fn warmed_fed(tiny_files: bool) -> (FedSim, Vec<String>) {
+    let mut cfg = paper_federation();
+    if tiny_files {
+        cfg.workload.size_dist.min = ByteSize(4096);
+        cfg.workload.size_dist.max = ByteSize(4096);
+    }
+    let mut fed = FedSim::build(cfg);
+    let sites = cache_site_names(&fed);
+    let catalog = Catalog::new(fed.cfg.seed, &fed.cfg.workload);
+    for site in &sites {
+        let idx = fed.topo.site_index(site).expect("cache site exists");
+        for i in 0..32 {
+            let file = catalog.file("gwosc", i);
+            fed.download(idx, &file, DownloadMethod::Stash);
+        }
+    }
+    (fed, sites)
 }
 
 fn sweep_cfg(jobs: usize) -> CampaignConfig {
@@ -277,6 +347,103 @@ fn main() {
         });
     }
 
+    // --- sharded engine: thread-scaling matrix ---------------------------
+    // Two tiers, each run at 1/2/4/8 threads on a freshly rebuilt and
+    // rewarmed federation (identical start state per thread count):
+    //
+    //   * 16384 sessions, real §4.2 file sizes — the speedup gate tier.
+    //     Fully warmed + no faults + stable policy means the terminal
+    //     epoch engages on the first engine iteration, so the whole run
+    //     is one parallel epoch of ten site-local shards.
+    //   * 131072 sessions, 4 KiB files, 0.5 s arrival window — the
+    //     ≥100k-concurrency tier. Session lifetime is floored by the
+    //     ~920 ms stashcp startup chain (tool + GeoIP + connect), so
+    //     every job is still alive when the last one arrives.
+    //
+    // Every thread count must produce a record stream digest-identical
+    // to the serial run; speedups are measured against the 1-thread leg
+    // of the same tier.
+    println!("\n== sharded engine: thread scaling (bit-identical) ==");
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("host parallelism: {hw}");
+    println!(
+        "{:>9} {:>8} {:>10} {:>9} {:>8} {:>9} {:>11} {:>18}",
+        "sessions", "threads", "events", "wall s", "peak", "speedup", "efficiency", "digest"
+    );
+    let mut thread_rows: Vec<ThreadRow> = Vec::new();
+    // (sessions, arrival window secs, tiny 4 KiB files, campaign seed)
+    let matrix_tiers: [(usize, f64, bool, u64); 2] =
+        [(16384, 64.0, false, 71), (131_072, 0.5, true, 72)];
+    for &(jobs, window, tiny, seed) in &matrix_tiers {
+        let mut base_wall = 0.0f64;
+        let mut base_digest = 0u64;
+        for &threads in &[1usize, 2, 4, 8] {
+            let (mut fed, sites) = warmed_fed(tiny);
+            let ccfg = warm_cfg(sites, jobs, window, seed);
+            let start = Instant::now();
+            let r = campaign::run_on_threads(&mut fed, &ccfg, threads);
+            let wall = start.elapsed().as_secs_f64();
+            let digest = records_digest(&r.records);
+            shape.check(
+                r.records.len() == jobs,
+                &format!("{jobs}-session matrix tier completes every job at {threads} threads"),
+            );
+            if threads == 1 {
+                base_wall = wall;
+                base_digest = digest;
+                if tiny {
+                    shape.check(
+                        r.peak_concurrent >= 100_000,
+                        &format!(
+                            "131072-session tier overlaps ≥100k concurrent sessions \
+                             (peak {})",
+                            r.peak_concurrent
+                        ),
+                    );
+                }
+            } else {
+                shape.check(
+                    digest == base_digest,
+                    &format!(
+                        "{jobs}-session run at {threads} threads is bit-identical to serial"
+                    ),
+                );
+            }
+            let speedup = if threads == 1 {
+                1.0
+            } else {
+                base_wall / wall.max(1e-9)
+            };
+            let efficiency = speedup / threads as f64;
+            if jobs == 16384 && threads == 4 && hw >= 4 {
+                shape.check(
+                    speedup >= 2.0,
+                    &format!(
+                        "16384-session warmed tier reaches ≥2× at 4 threads \
+                         ({speedup:.2}×)"
+                    ),
+                );
+            }
+            println!(
+                "{:>9} {:>8} {:>10} {:>9.3} {:>8} {:>8.2}x {:>11.2} {:>#18x}",
+                jobs, threads, r.events_processed, wall, r.peak_concurrent, speedup, efficiency,
+                digest,
+            );
+            thread_rows.push(ThreadRow {
+                sessions: jobs,
+                threads,
+                wall,
+                events: r.events_processed,
+                peak: r.peak_concurrent,
+                speedup_vs_1t: speedup,
+                efficiency,
+                digest,
+            });
+        }
+    }
+
     // --- BENCH_concurrency.json ------------------------------------------
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"concurrency_scaling\",\n  \"sweep\": [\n");
@@ -322,6 +489,24 @@ fn main() {
             t.peak_component,
         );
         json.push_str(if i + 1 < warm_rows.len() { ",\n" } else { "\n" });
+    }
+    let _ = write!(json, "  ],\n  \"host_parallelism\": {hw},\n  \"threaded\": [\n");
+    for (i, t) in thread_rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"sessions\": {}, \"threads\": {}, \"wall_s\": {:.4}, \
+             \"events\": {}, \"peak_concurrent\": {}, \"speedup_vs_1t\": {:.3}, \
+             \"efficiency\": {:.3}, \"digest\": \"{:#x}\"}}",
+            t.sessions,
+            t.threads,
+            t.wall,
+            t.events,
+            t.peak,
+            t.speedup_vs_1t,
+            t.efficiency,
+            t.digest,
+        );
+        json.push_str(if i + 1 < thread_rows.len() { ",\n" } else { "\n" });
     }
     json.push_str("  ]\n}\n");
     // The repository root, independent of the bench's CWD (cargo runs

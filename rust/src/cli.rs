@@ -139,9 +139,12 @@ pub fn usage() -> String {
                 [--catalog N] [--method stash|http] [--seed S]\n\
                 [--experiment NAME] [--background N] [--profile]\n\
                 [--policy nearest|least-loaded|consistent-hash|tiered]\n\
+                [--threads N]\n\
                                         run N concurrent Poisson/Zipf jobs through\n\
                                         the session engine (coalescing, contention);\n\
                                         --policy picks the cache-selection rule;\n\
+                                        --threads shards the engine across cores,\n\
+                                        bit-identical to serial (default 1);\n\
                                         --profile prints allocator counters\n\
        chaos    [campaign flags] [--kill-cache SITE [--down-at S] [--up-at S]]\n\
                 [--cut-wan SITE [--cut-at S] [--heal-at S]]\n\
@@ -387,8 +390,11 @@ fn cmd_campaign(flags: &Flags) -> Result<()> {
     let mut cfg = load_config(flags)?;
     apply_policy_flag(flags, &mut cfg)?;
     let ccfg = parse_campaign(flags, &cfg)?;
+    // Default 1 = today's serial path byte-for-byte; N > 1 shards the
+    // session engine across OS threads with bit-identical results.
+    let threads = flags.get_usize("threads", 1)?.max(1);
     let wall_start = std::time::Instant::now();
-    let results = campaign::run(cfg, &ccfg);
+    let results = campaign::run_threads(cfg, &ccfg, threads);
     print_campaign(&ccfg, &results, wall_start.elapsed().as_secs_f64());
     if flags.has("profile") {
         print_allocator_profile(&results);
@@ -504,8 +510,9 @@ fn cmd_chaos(flags: &Flags) -> Result<()> {
         );
     }
 
+    let threads = flags.get_usize("threads", 1)?.max(1);
     let wall_start = std::time::Instant::now();
-    let results = campaign::run_on_with_faults(&mut fed, &ccfg, &faults);
+    let results = campaign::run_on_with_faults_threads(&mut fed, &ccfg, &faults, threads);
     print_campaign(&ccfg, &results.campaign, wall_start.elapsed().as_secs_f64());
     if flags.has("profile") {
         print_allocator_profile(&results.campaign);

@@ -45,14 +45,18 @@
 //! origin — a chaos campaign completes every download or panics; it
 //! never silently drops one.
 
+use crate::cache::CacheServer;
 use crate::client::stashcp;
 use crate::client::{curl, Method, TransferRecord};
 use crate::fault::{DIRECT_RETRY_BACKOFF, FaultEvent, FaultKind, MAX_FAILOVER_RETRIES};
 use crate::monitoring::packets::Protocol;
-use crate::netsim::{Completion, Endpoint, EventQueue, FlowId, FlowSpec, LinkId};
+use crate::netsim::{Completion, Endpoint, EventQueue, FlowId, FlowSpec, LinkId, Network};
 use crate::sim::workload::FileRef;
+use crate::util::stats::Welford;
 use crate::util::{Duration, SimTime};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use super::session::{Phase, Session, SessionId, Xfer};
 use super::{DownloadMethod, FedSim};
 
@@ -131,6 +135,13 @@ pub struct SessionEngine {
     in_flight: usize,
     /// Session ids in completion order.
     completed: Vec<SessionId>,
+    /// Summary of start→completion wall durations (seconds) for
+    /// sessions retired through sharded terminal epochs: per-shard
+    /// [`Welford`] accumulators merged in stable shard order at the
+    /// barrier, so the summary is independent of thread scheduling.
+    /// Empty after a purely serial run (diagnostics only — not part
+    /// of the serial-vs-threaded bit-identity surface).
+    pub epoch_durations: Welford,
     pub stats: EngineStats,
 }
 
@@ -149,6 +160,7 @@ impl SessionEngine {
             outstanding: 0,
             in_flight: 0,
             completed: Vec::new(),
+            epoch_durations: Welford::new(),
             stats: EngineStats::default(),
         }
     }
@@ -172,6 +184,15 @@ impl SessionEngine {
     /// Session ids in the order they finished.
     pub fn completed(&self) -> &[SessionId] {
         &self.completed
+    }
+
+    /// Per-cache-site live session counts — the load signal the
+    /// `least-loaded` policy reads. After a run drains, every count
+    /// must be back to zero (each exit path — finish, failover,
+    /// direct-origin fallback, fault abort — releases its slot); tests
+    /// assert this to catch leaks that would silently skew redirection.
+    pub fn cache_in_flight(&self) -> &HashMap<usize, u64> {
+        &self.cache_in_flight
     }
 
     /// The finished record of a session (panics if not done).
@@ -228,12 +249,44 @@ impl SessionEngine {
     /// world. Faults due after the last session completes stay pending
     /// for the next engine run.
     pub fn run(&mut self, fed: &mut FedSim) {
+        self.run_threaded(fed, 1);
+    }
+
+    /// [`SessionEngine::run`] on up to `threads` OS threads,
+    /// bit-identical to the serial run. The loop advances serially
+    /// until the remaining work is provably WAN-decoupled — every
+    /// outstanding session is a pending whole-hit stash download under
+    /// an epoch-stable redirection policy, with no faults pending —
+    /// then partitions the remainder by the links its serve flows
+    /// touch and advances each partition on its own thread against a
+    /// shard network (exact by PR 4's component decomposition). The
+    /// barrier merges shard results back in the serial interleaving
+    /// order, so records, stats, monitoring, and the RNG stream are
+    /// byte-for-byte what `threads == 1` produces. Workloads that
+    /// never satisfy the gate (cold caches, live-telemetry policies,
+    /// chaos timelines mid-fault) simply stay on the serial path.
+    pub fn run_threaded(&mut self, fed: &mut FedSim, threads: usize) {
         let alloc_before = fed.net.stats;
         // Track this run's own component high-water mark; the
         // network's lifetime peak is restored below.
         fed.net.stats.peak_component = 0;
         let mut guard = 0u64;
+        // Failed epoch probes cost O(outstanding): back off until half
+        // the sessions that were outstanding at the probe completed.
+        let mut next_probe = self.stats.sessions_completed;
         while self.outstanding > 0 {
+            if threads > 1
+                && self.in_flight == 0
+                && fed.pending_faults() == 0
+                && fed.policy.epoch_stable()
+                && self.stats.sessions_completed >= next_probe
+            {
+                if self.try_terminal_epoch(fed, threads) {
+                    continue; // nothing outstanding: the loop exits
+                }
+                next_probe =
+                    self.stats.sessions_completed + (self.outstanding as u64 / 2).max(1);
+            }
             guard += 1;
             assert!(
                 guard <= 500_000_000,
@@ -1057,5 +1110,625 @@ impl SessionEngine {
         self.in_flight -= 1;
         self.completed.push(id);
         self.stats.sessions_completed += 1;
+    }
+
+    // --- sharded terminal epoch -------------------------------------------
+
+    /// Attempt the terminal parallel epoch: plan it, fan the shards
+    /// out over up to `threads` worker threads, and merge. Returns
+    /// `false` — engine and federation untouched — when the remaining
+    /// work is not provably WAN-decoupled.
+    fn try_terminal_epoch(&mut self, fed: &mut FedSim, threads: usize) -> bool {
+        let Some((tasks, transport)) = self.plan_terminal_epoch(fed) else {
+            return false;
+        };
+        let workers = threads.min(tasks.len());
+        let slots: Vec<Mutex<Option<ShardTask>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<ShardOutcome>>> =
+            (0..slots.len()).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let sessions: &[Session] = &self.sessions;
+        // Work-stealing over indexed slots: claim order is racy but
+        // every result lands in its shard's slot, so the merge below
+        // sees a schedule-independent ordering.
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= slots.len() {
+                        break;
+                    }
+                    let task = slots[k].lock().unwrap().take().expect("each shard runs once");
+                    let outcome = run_shard(task, sessions);
+                    *results[k].lock().unwrap() = Some(outcome);
+                });
+            }
+        });
+        let outcomes: Vec<ShardOutcome> = results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker stored a result"))
+            .collect();
+        self.merge_epoch(fed, outcomes, transport);
+        true
+    }
+
+    /// Prove the remainder of the run is embarrassingly parallel and
+    /// split it into shard tasks. The proof obligations, checked per
+    /// pending session against the epoch-frozen federation:
+    ///
+    /// - stash method, nothing excluded (no failover history pending);
+    /// - the (epoch-stable) policy picks a cache — the same cache it
+    ///   would pick mid-run, since distance, up/down state, and cache
+    ///   load factors cannot change during a whole-hit-only epoch;
+    /// - the file is wholly resident at that cache (no origin fetch,
+    ///   no `JoinWait`, no WAN coupling through the redirector);
+    /// - the serve route is up and disjoint from every origin DTN
+    ///   link, so shard flows never share a component with background
+    ///   flows in the parent network.
+    ///
+    /// Sessions sharing a serve-route link — or a cache server, whose
+    /// LRU state must advance in request order — are grouped into one
+    /// shard by union-find. Returns `None` (federation untouched) if
+    /// any obligation fails or fewer than two shards would result.
+    fn plan_terminal_epoch(&mut self, fed: &mut FedSim) -> Option<(Vec<ShardTask>, Method)> {
+        // A foreground flow from an earlier engine still in the
+        // network would be invisible to the shards.
+        if fed.net.active_flows() != fed.background.len() {
+            return None;
+        }
+        let pending: Vec<usize> = self
+            .sessions
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.phase == Phase::Pending)
+            .map(|(i, _)| i)
+            .collect();
+        if pending.len() != self.outstanding {
+            return None;
+        }
+        let bg_links: HashSet<LinkId> = (0..fed.origins.len())
+            .map(|o| fed.topo.origin_lan_link(o))
+            .collect();
+        struct Pick {
+            cache_site: usize,
+            serve_links: Vec<LinkId>,
+            rtt_ms: f64,
+        }
+        let mut picks: Vec<Pick> = Vec::with_capacity(pending.len());
+        for &i in &pending {
+            let s = &self.sessions[i];
+            if s.method != DownloadMethod::Stash || !s.excluded_caches.is_empty() {
+                return None;
+            }
+            // One ranked lookup per session, exactly as geo_resolve
+            // pays mid-run.
+            let cache_site = fed.select_cache(
+                s.site_idx,
+                &s.file.path,
+                &s.excluded_caches,
+                &self.cache_in_flight,
+            )?;
+            if s.file.size.as_u64() > 0
+                && !fed.caches[&cache_site].contains_whole(&s.file.path, s.file.version)
+            {
+                return None;
+            }
+            let route = fed
+                .topo
+                .route(Endpoint::Cache(cache_site), Endpoint::Worker(s.site_idx));
+            if !route_is_up(fed, &route.links) {
+                return None;
+            }
+            if route.links.iter().any(|l| bg_links.contains(l)) {
+                return None;
+            }
+            picks.push(Pick {
+                cache_site,
+                serve_links: route.links,
+                rtt_ms: route.rtt_ms,
+            });
+        }
+        // Partition by shared links, with each cache site as an extra
+        // union-find node anchoring all of its clients (a cross-site
+        // serve and a same-site serve of one cache can be link-
+        // disjoint, but the cache's LRU state still serializes them).
+        let link_count = fed.net.link_count();
+        let mut uf = UnionFind::new(link_count + fed.topo.site_count());
+        for p in &picks {
+            let anchor = link_count + p.cache_site;
+            for l in &p.serve_links {
+                uf.union(anchor, l.0 as usize);
+            }
+        }
+        let mut group_of_root: HashMap<usize, usize> = HashMap::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (k, p) in picks.iter().enumerate() {
+            let root = uf.find(link_count + p.cache_site);
+            let g = *group_of_root.entry(root).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[g].push(k);
+        }
+        if groups.len() < 2 {
+            return None; // one shard would be serial with extra steps
+        }
+        // Point of no return: pull the Start events (with their
+        // original `(time, seq)` keys — the serial tie-breaks) off the
+        // queue and move per-group state out of the federation.
+        let drained = self.queue.drain_sorted();
+        assert_eq!(
+            drained.len(),
+            pending.len(),
+            "terminal epoch: queue holds more than the pending Starts"
+        );
+        let mut start_key: HashMap<u64, (SimTime, u64)> = HashMap::with_capacity(drained.len());
+        for (t, seq, ev) in drained {
+            match ev {
+                EngineEvent::Start(id) => {
+                    start_key.insert(id.0, (t, seq));
+                }
+                EngineEvent::Timer(id) => {
+                    unreachable!("pending timer for {id:?} with no session in flight")
+                }
+            }
+        }
+        // Startup pricing is per-transport, identical for every stash
+        // session (mirrors on_start).
+        let chain = stashcp::method_chain(fed.host_env);
+        let attempt = chain
+            .iter()
+            .position(|m| *m == Method::Xrootd || *m == Method::HttpCache)
+            .unwrap_or(0);
+        let transport = chain[attempt];
+        let startup_delay = stashcp::startup_latency(&fed.startup_costs, transport, attempt);
+        let epoch_start = fed.now;
+        let mut tasks = Vec::with_capacity(groups.len());
+        for group in groups {
+            let mut sessions: Vec<EpochSession> = group
+                .into_iter()
+                .map(|k| {
+                    let idx = pending[k];
+                    let (t0, seq) = start_key[&(idx as u64)];
+                    let p = &mut picks[k];
+                    EpochSession {
+                        id: SessionId(idx as u64),
+                        t0,
+                        seq,
+                        cache_site: p.cache_site,
+                        serve_links: std::mem::take(&mut p.serve_links),
+                        rtt_ms: p.rtt_ms,
+                    }
+                })
+                .collect();
+            sessions.sort_unstable_by_key(|s| (s.t0, s.seq));
+            let mut caches = HashMap::new();
+            for s in &sessions {
+                if !caches.contains_key(&s.cache_site) {
+                    let c = fed
+                        .caches
+                        .remove(&s.cache_site)
+                        .expect("cache site moves into exactly one shard");
+                    caches.insert(s.cache_site, c);
+                }
+            }
+            tasks.push(ShardTask {
+                sessions,
+                caches,
+                net: fed.net.shard_clone_empty(epoch_start),
+                startup_delay,
+                epoch_start,
+            });
+        }
+        Some((tasks, transport))
+    }
+
+    /// The epoch barrier: fold shard results back into the engine and
+    /// federation in the exact order the serial engine would have
+    /// produced them. Per-shard event relative order already matches
+    /// serial; across shards the serial completion order is recovered
+    /// by sorting on `(tc, t2, t1, t0, seq)` — completion instant,
+    /// then flow-creation (seq) order, which at equal creation
+    /// instants is the CacheCheck-timer scheduling chain rooted at the
+    /// original Start keys. Counters merge as order-independent sums
+    /// and maxes; the RNG-bearing side effects (monitoring emissions,
+    /// background respawns) are replayed serially in that recovered
+    /// order so `fed.rng` advances byte-for-byte like a serial run.
+    fn merge_epoch(&mut self, fed: &mut FedSim, outcomes: Vec<ShardOutcome>, transport: Method) {
+        let link_count = fed.net.link_count();
+        let mut all: Vec<ShardDone> = Vec::new();
+        // Ordering-independent duration summary: merge the per-shard
+        // Welford parts in stable shard order (`outcomes` is indexed
+        // by shard slot, not worker finish order).
+        let mut durations = Welford::new();
+        for o in outcomes {
+            durations.merge(&o.durations);
+            for (site, cache) in o.caches {
+                let prev = fed.caches.insert(site, cache);
+                debug_assert!(prev.is_none(), "cache {site} returned twice");
+            }
+            fed.net.stats.allocations += o.net.stats.allocations;
+            fed.net.stats.components_touched += o.net.stats.components_touched;
+            fed.net.stats.flows_refixed += o.net.stats.flows_refixed;
+            fed.net.stats.peak_component =
+                fed.net.stats.peak_component.max(o.net.stats.peak_component);
+            for l in 0..link_count {
+                let b = o.net.link_bytes_carried(LinkId(l as u32));
+                if b != 0.0 {
+                    fed.net.add_link_bytes(LinkId(l as u32), b);
+                }
+            }
+            self.stats.events_processed += o.events_processed;
+            all.extend(o.done);
+        }
+        debug_assert_eq!(
+            durations.count() as usize,
+            all.len(),
+            "shard duration summaries must cover every epoch session exactly once"
+        );
+        self.epoch_durations.merge(&durations);
+        all.sort_unstable_by_key(|d| (d.tc, d.t2, d.t1, d.t0, d.seq));
+
+        // Sessions finish in serial order (mirrors `finish`; in_flight
+        // never rose, so it does not fall here either).
+        let mut max_t2 = SimTime::ZERO;
+        for d in &all {
+            let s = &mut self.sessions[d.id.0 as usize];
+            s.transport = transport;
+            s.cache_site = Some(d.cache_site);
+            s.per_conn = d.per_conn;
+            s.opened_at = Some(d.t2);
+            s.initial_hit = true;
+            s.flow = None;
+            // Serial cache serves record `Method::Xrootd` regardless of
+            // the startup transport (see the `Xfer::CacheServe` arm of
+            // `on_flow_done`) — mirror that exactly.
+            s.record = Some(TransferRecord {
+                path: s.file.path.clone(),
+                bytes: s.file.size.as_u64(),
+                method: Method::Xrootd,
+                cache_hit: true,
+                duration: d.tc - s.arrival,
+            });
+            s.phase = Phase::Done;
+            self.outstanding -= 1;
+            self.completed.push(d.id);
+            self.stats.sessions_completed += 1;
+            // geo_resolve + finish leave the slot key present at its
+            // pre-epoch count.
+            self.cache_in_flight.entry(d.cache_site).or_insert(0);
+            max_t2 = max_t2.max(d.t2);
+        }
+        // Peak concurrency by interval sweep. A finish at the same
+        // instant as a start drains first — completions dispatch
+        // before same-instant timers in the serial loop — which the
+        // `(time, −1) < (time, +1)` sort encodes.
+        let mut marks: Vec<(SimTime, i8)> = Vec::with_capacity(all.len() * 2);
+        for d in &all {
+            marks.push((d.t0, 1));
+            marks.push((d.tc, -1));
+        }
+        marks.sort_unstable();
+        let mut live = 0isize;
+        for &(_, delta) in &marks {
+            live += delta as isize;
+            if live as usize > self.stats.peak_concurrent {
+                self.stats.peak_concurrent = live as usize;
+            }
+        }
+        // Replay the RNG-bearing interleaving against the parent
+        // network (background flows only): at each background
+        // completion batch, monitoring for serve flows that completed
+        // earlier — or were created earlier at the same batch instant
+        // — is emitted first.
+        let bound = all.last().map(|d| d.tc).expect("epoch had sessions");
+        let mut ei = 0usize;
+        while let Some(tn) = fed.net.next_completion() {
+            if tn > bound {
+                break; // stays pending, as after a serial run
+            }
+            while ei < all.len() && all[ei].tc < tn {
+                self.epoch_emit(fed, &all[ei], transport);
+                ei += 1;
+            }
+            fed.now = tn;
+            for c in fed.net.advance(tn) {
+                // A serve flow created at the instant this background
+                // flow respawned sorts after it: completion dispatch
+                // precedes same-instant timers, so the respawn drew
+                // the lower flow sequence.
+                while ei < all.len() && all[ei].tc == tn && all[ei].t2 < c.started {
+                    self.epoch_emit(fed, &all[ei], transport);
+                    ei += 1;
+                }
+                self.stats.events_processed += 1;
+                let origin_idx = fed
+                    .background
+                    .remove(&c.flow)
+                    .expect("only background flows live in the parent during an epoch");
+                fed.spawn_background(origin_idx);
+                self.stats.background_respawns += 1;
+            }
+        }
+        while ei < all.len() {
+            self.epoch_emit(fed, &all[ei], transport);
+            ei += 1;
+        }
+        // Land exactly where the serial run would: federation clock at
+        // the last completion, timer queue at the last popped timer.
+        fed.now = bound;
+        let tail = fed.net.advance(bound);
+        debug_assert!(tail.is_empty(), "completions past the replay bound");
+        self.queue.advance_to(max_t2);
+    }
+
+    /// Emit one epoch session's monitoring trio against the parent
+    /// federation — the barrier-ordered twin of `emit_monitoring`,
+    /// drawing the same RNG/user-id/file-id stream.
+    fn epoch_emit(&mut self, fed: &mut FedSim, d: &ShardDone, transport: Method) {
+        let s = &self.sessions[d.id.0 as usize];
+        let protocol = if transport == Method::HttpCache {
+            Protocol::Http
+        } else {
+            Protocol::Xrootd
+        };
+        fed.emit_transfer_monitoring(
+            d.cache_site,
+            s.site_idx,
+            &s.file.path,
+            s.file.size.as_u64(),
+            s.file.size.as_u64(),
+            d.t2,
+            d.tc,
+            protocol,
+        );
+    }
+}
+
+/// Minimal union-find over dense indices (links ∪ cache anchors),
+/// path-halving, smaller root wins for determinism.
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind {
+            parent: (0..n as u32).collect(),
+        }
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] as usize != x {
+            let grandparent = self.parent[self.parent[x] as usize];
+            self.parent[x] = grandparent;
+            x = grandparent as usize;
+        }
+        x
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra.max(rb)] = ra.min(rb) as u32;
+        }
+    }
+}
+
+/// One pending session's precomputed epoch itinerary: its original
+/// Start key (the serial tie-break), the cache the epoch-stable
+/// policy picked, and the serve route. Immutable session data (path,
+/// size, version) is read from the shared `&[Session]` slice.
+struct EpochSession {
+    id: SessionId,
+    t0: SimTime,
+    seq: u64,
+    cache_site: usize,
+    serve_links: Vec<LinkId>,
+    rtt_ms: f64,
+}
+
+/// One link-connected partition of the pending sessions, with the
+/// caches they hit (moved out of the federation for the epoch) and a
+/// flow-less copy of the network to advance against.
+struct ShardTask {
+    /// In `(t0, seq)` order, so shard-local event sequences preserve
+    /// the serial relative order.
+    sessions: Vec<EpochSession>,
+    caches: HashMap<usize, CacheServer>,
+    net: Network,
+    startup_delay: Duration,
+    epoch_start: SimTime,
+}
+
+/// A finished epoch session: the serial ordering key
+/// `(tc, t2, t1, t0, seq)` plus what the barrier writes back.
+struct ShardDone {
+    id: SessionId,
+    t0: SimTime,
+    seq: u64,
+    /// GeoResolve instant (startup paid).
+    t1: SimTime,
+    /// CacheCheck instant == `opened_at` == flow creation time.
+    t2: SimTime,
+    /// Completion instant.
+    tc: SimTime,
+    cache_site: usize,
+    per_conn: f64,
+}
+
+struct ShardOutcome {
+    net: Network,
+    caches: HashMap<usize, CacheServer>,
+    events_processed: u64,
+    done: Vec<ShardDone>,
+    /// Start→completion durations (seconds) of this shard's sessions,
+    /// accumulated in shard-local completion order; the barrier merges
+    /// these in stable shard order (parallel Welford reduction).
+    durations: Welford,
+}
+
+#[derive(Clone, Copy)]
+enum ShardPhase {
+    Start,
+    Geo,
+    Check,
+}
+
+/// The shard event loop: the whole-hit fast path of the serial engine
+/// (Start → startup timer → GeoResolve → RTT timer → CacheCheck →
+/// serve flow → completion) against the shard's own network and
+/// queue. The planner proved every session stays on this path, so
+/// anything else panics rather than silently diverging. Event
+/// arbitration mirrors [`SessionEngine::run`]: completions at or
+/// before the next timer drain first, and stragglers drain before a
+/// popped timer's handler runs.
+fn run_shard(task: ShardTask, all_sessions: &[Session]) -> ShardOutcome {
+    #[allow(clippy::too_many_arguments)]
+    fn retire(
+        completions: Vec<Completion>,
+        t: SimTime,
+        sessions: &[EpochSession],
+        all_sessions: &[Session],
+        flow_owner: &mut HashMap<FlowId, u32>,
+        caches: &mut HashMap<usize, CacheServer>,
+        t1: &[SimTime],
+        t2: &[SimTime],
+        per_conn: &[f64],
+        done: &mut Vec<ShardDone>,
+        events: &mut u64,
+    ) {
+        for c in completions {
+            *events += 1;
+            let i = flow_owner.remove(&c.flow).expect("shard flow has an owner") as usize;
+            let es = &sessions[i];
+            let size = all_sessions[es.id.0 as usize].file.size.as_u64();
+            caches
+                .get_mut(&es.cache_site)
+                .expect("shard cache")
+                .record_served(size, 0);
+            done.push(ShardDone {
+                id: es.id,
+                t0: es.t0,
+                seq: es.seq,
+                t1: t1[i],
+                t2: t2[i],
+                tc: t,
+                cache_site: es.cache_site,
+                per_conn: per_conn[i],
+            });
+        }
+    }
+
+    let ShardTask {
+        sessions,
+        mut caches,
+        mut net,
+        startup_delay,
+        epoch_start,
+    } = task;
+    let n = sessions.len();
+    let mut queue: EventQueue<(u32, ShardPhase)> = EventQueue::new();
+    queue.advance_to(epoch_start);
+    for (i, s) in sessions.iter().enumerate() {
+        queue.schedule_at(s.t0, (i as u32, ShardPhase::Start));
+    }
+    let mut flow_owner: HashMap<FlowId, u32> = HashMap::with_capacity(n);
+    let mut t1 = vec![SimTime::ZERO; n];
+    let mut t2 = vec![SimTime::ZERO; n];
+    let mut per_conn = vec![0.0f64; n];
+    let mut done: Vec<ShardDone> = Vec::with_capacity(n);
+    let mut events = 0u64;
+    while done.len() < n {
+        let next_timer = queue.peek_time();
+        let next_net = net.next_completion();
+        let net_first = match (next_timer, next_net) {
+            (Some(te), Some(tn)) => tn <= te,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (None, None) => panic!("shard stalled with {} sessions left", n - done.len()),
+        };
+        if net_first {
+            let tn = next_net.expect("checked");
+            let completions = net.advance(tn);
+            retire(
+                completions,
+                tn,
+                &sessions,
+                all_sessions,
+                &mut flow_owner,
+                &mut caches,
+                &t1,
+                &t2,
+                &per_conn,
+                &mut done,
+                &mut events,
+            );
+        } else {
+            let (t, (iu, phase)) = queue.pop().expect("peeked a timer");
+            events += 1;
+            let stragglers = net.advance(t);
+            retire(
+                stragglers,
+                t,
+                &sessions,
+                all_sessions,
+                &mut flow_owner,
+                &mut caches,
+                &t1,
+                &t2,
+                &per_conn,
+                &mut done,
+                &mut events,
+            );
+            let i = iu as usize;
+            match phase {
+                ShardPhase::Start => {
+                    queue.schedule_at(t + startup_delay, (iu, ShardPhase::Geo));
+                }
+                ShardPhase::Geo => {
+                    t1[i] = t;
+                    queue.schedule_at(
+                        t + Duration::from_secs_f64(sessions[i].rtt_ms / 1e3),
+                        (iu, ShardPhase::Check),
+                    );
+                }
+                ShardPhase::Check => {
+                    let es = &sessions[i];
+                    let s = &all_sessions[es.id.0 as usize];
+                    let size = s.file.size.as_u64();
+                    let cache = caches.get_mut(&es.cache_site).expect("shard cache");
+                    let plan = cache.plan_read(&s.file.path, 0, size, size, s.file.version, t);
+                    assert_eq!(
+                        plan.miss_bytes, 0,
+                        "epoch session missed; the planner promised a whole hit"
+                    );
+                    let cap = cache.cfg.per_conn_gbps * 1e9 / 8.0;
+                    per_conn[i] = cap;
+                    t2[i] = t;
+                    let flow = net.start_flow(
+                        FlowSpec {
+                            path: es.serve_links.clone(),
+                            bytes: size.max(1),
+                            rate_cap: Some(cap),
+                        },
+                        t,
+                    );
+                    flow_owner.insert(flow, iu);
+                }
+            }
+        }
+    }
+    let mut durations = Welford::new();
+    for d in &done {
+        durations.push((d.tc - d.t0).as_secs_f64());
+    }
+    ShardOutcome {
+        net,
+        caches,
+        events_processed: events,
+        done,
+        durations,
     }
 }

@@ -111,6 +111,17 @@ impl<E> EventQueue<E> {
         Some((entry.time, entry.event))
     }
 
+    /// Drain every pending event in `(time, seq)` order, returning the
+    /// original scheduling key alongside each event. The shard planner
+    /// uses this to extract pending arrivals with their exact serial
+    /// tie-break keys. The clock and sequence counter are untouched;
+    /// the queue is left empty.
+    pub fn drain_sorted(&mut self) -> Vec<(SimTime, u64, E)> {
+        let mut out: Vec<Entry<E>> = self.heap.drain().collect();
+        out.sort_by(|a, b| (a.time, a.seq).cmp(&(b.time, b.seq)));
+        out.into_iter().map(|e| (e.time, e.seq, e.event)).collect()
+    }
+
     /// Advance the clock without an event (e.g. synchronizing with an
     /// external completion source). Panics on backwards movement.
     pub fn advance_to(&mut self, t: SimTime) {

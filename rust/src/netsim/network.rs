@@ -165,7 +165,11 @@ pub struct Completion {
 /// `EngineStats` → campaign/sweep reports and `--profile`).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct AllocStats {
-    /// Fix-up passes that did work (≥ 1 component re-waterfilled).
+    /// Dirty components processed by fix-up passes. Counted per
+    /// component (not per pass) so the total is invariant to how
+    /// dirty work is batched — a sharded run that drains the same
+    /// dirty markings across several networks sums to the serial
+    /// count exactly.
     pub allocations: u64,
     /// Component water-fills run (the O(affected) unit of work).
     pub components_touched: u64,
@@ -233,6 +237,54 @@ impl Network {
     /// Cumulative bytes carried by a link (for the Fig 5 WAN counters).
     pub fn link_bytes_carried(&self, link: LinkId) -> f64 {
         self.links[link.0 as usize].bytes_carried
+    }
+
+    /// Credit bytes carried over a link directly — the shard barrier
+    /// folds each shard network's per-link byte counters back into the
+    /// parent network with this.
+    pub(crate) fn add_link_bytes(&mut self, link: LinkId, bytes: f64) {
+        self.links[link.0 as usize].bytes_carried += bytes;
+    }
+
+    /// A flow-less copy of this network for a shard: the same link
+    /// array (ids, capacities, degradation factors, and up/down state
+    /// all preserved, so shard components waterfill over the identical
+    /// global link ids in the identical ascending order as the parent
+    /// would) with no flows, no components, zeroed byte counters, fresh
+    /// stats, and the clock pinned at `clock`. Water-filling a flow set
+    /// here is therefore f64-bit-identical to water-filling the same
+    /// set in the parent (PR 4's component exactness, across network
+    /// instances).
+    pub(crate) fn shard_clone_empty(&self, clock: SimTime) -> Network {
+        assert!(clock >= self.clock, "shard clock behind parent");
+        let links = self
+            .links
+            .iter()
+            .map(|l| Link {
+                capacity: l.capacity,
+                factor: l.factor,
+                up: l.up,
+                flows: Vec::new(),
+                bytes_carried: 0.0,
+                agg_rate: 0.0,
+                comp: NO_COMP,
+            })
+            .collect::<Vec<_>>();
+        let n = links.len();
+        Network {
+            links,
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            next_seq: 0,
+            active: 0,
+            comps: Vec::new(),
+            free_comps: Vec::new(),
+            any_dirty: false,
+            clock,
+            scratch_residual: vec![0.0; n],
+            scratch_active: vec![0; n],
+            stats: AllocStats::default(),
+        }
     }
 
     /// Live aggregate allocated rate (bytes/s) crossing a link right
@@ -630,7 +682,6 @@ impl Network {
             return;
         }
         self.any_dirty = false;
-        self.stats.allocations += 1;
         for c in 0..self.comps.len() as u32 {
             let Some(comp) = &self.comps[c as usize] else {
                 continue;
@@ -638,6 +689,7 @@ impl Network {
             if !comp.dirty {
                 continue;
             }
+            self.stats.allocations += 1;
             if comp.stale {
                 for part in self.restructure(c) {
                     self.waterfill(part);

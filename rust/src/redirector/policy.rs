@@ -130,6 +130,18 @@ pub trait RedirectionPolicy: Send {
     fn kind(&self) -> PolicyKind;
 
     fn select(&self, path: &str, view: &FederationView, excluded: &[usize]) -> Option<usize>;
+
+    /// Does `select` ignore the view's *live* fields (`in_flight`,
+    /// `wan_rate_bps`)? A stable policy's choice is a pure function of
+    /// the epoch-frozen federation (geo ranking, storage load, up/down
+    /// state), so the sharded engine may snapshot one view per client
+    /// site at an epoch boundary and reuse it for every selection in
+    /// the epoch. Policies that read live telemetry must return
+    /// `false` (the default) — the engine then keeps them on the
+    /// serial path, where every selection sees fresh state.
+    fn epoch_stable(&self) -> bool {
+        false
+    }
 }
 
 /// GeoIP nearest reachable cache — the paper's rule, bit-identical to
@@ -148,6 +160,10 @@ impl RedirectionPolicy for Nearest {
             .map(|&(pos, _)| pos)
             .find(|&pos| view.usable(pos, excluded))
             .map(|pos| view.cache_sites[pos])
+    }
+
+    fn epoch_stable(&self) -> bool {
+        true
     }
 }
 
@@ -245,6 +261,10 @@ impl RedirectionPolicy for ConsistentHash {
         }
         None
     }
+
+    fn epoch_stable(&self) -> bool {
+        true
+    }
 }
 
 /// Site-local cache → nearest cache within `regional_km` → origin.
@@ -278,6 +298,10 @@ impl RedirectionPolicy for Tiered {
         }
         // Tier 3: no regional cache — stream from the origin.
         None
+    }
+
+    fn epoch_stable(&self) -> bool {
+        true
     }
 }
 
@@ -445,6 +469,24 @@ mod tests {
         assert_eq!(t.select("/f", &v, &[10, 20]), None);
         let tight = Tiered { regional_km: 50.0 };
         assert_eq!(tight.select("/f", &v, &[]), None);
+    }
+
+    #[test]
+    fn epoch_stability_matches_live_telemetry_use() {
+        // Stable = selection ignores in_flight / wan_rate_bps; flipping
+        // the live fields must not change the choice.
+        assert!(Nearest.epoch_stable());
+        assert!(ConsistentHash::new(&["a", "b", "c"], 8).epoch_stable());
+        assert!(Tiered { regional_km: 600.0 }.epoch_stable());
+        assert!(!LeastLoaded { k: 2 }.epoch_stable());
+        let mut busy = view();
+        busy.in_flight = vec![900, 1, 1];
+        busy.wan_rate_bps = vec![9e9, 0.0, 0.0];
+        assert_eq!(Nearest.select("/f", &busy, &[]), Nearest.select("/f", &view(), &[]));
+        assert_ne!(
+            LeastLoaded { k: 3 }.select("/f", &busy, &[]),
+            LeastLoaded { k: 3 }.select("/f", &view(), &[])
+        );
     }
 
     #[test]

@@ -138,13 +138,26 @@ fn site_stream(name: &str) -> u64 {
 
 /// Run a campaign on a fresh federation.
 pub fn run(cfg: FederationConfig, ccfg: &CampaignConfig) -> CampaignResults {
+    run_threads(cfg, ccfg, 1)
+}
+
+/// [`run`] with a worker-thread budget for the sharded session engine.
+/// `threads = 1` is the serial path byte-for-byte; any `threads` value
+/// yields bit-identical results (see
+/// [`SessionEngine::run_threaded`](crate::federation::driver::SessionEngine::run_threaded)).
+pub fn run_threads(cfg: FederationConfig, ccfg: &CampaignConfig, threads: usize) -> CampaignResults {
     let mut fed = FedSim::build(cfg);
-    run_on(&mut fed, ccfg)
+    run_on_threads(&mut fed, ccfg, threads)
 }
 
 /// Run a campaign on an existing federation (drivers can pre-warm
 /// caches or inject failures first).
 pub fn run_on(fed: &mut FedSim, ccfg: &CampaignConfig) -> CampaignResults {
+    run_on_threads(fed, ccfg, 1)
+}
+
+/// [`run_on`] with a worker-thread budget for the sharded engine.
+pub fn run_on_threads(fed: &mut FedSim, ccfg: &CampaignConfig, threads: usize) -> CampaignResults {
     assert!(!ccfg.sites.is_empty(), "campaign without sites");
     assert!(ccfg.files_per_job.0 <= ccfg.files_per_job.1);
     {
@@ -202,7 +215,7 @@ pub fn run_on(fed: &mut FedSim, ccfg: &CampaignConfig) -> CampaignResults {
         }
     }
 
-    engine.run(fed);
+    engine.run_threaded(fed, threads);
 
     let records = engine
         .completed()
@@ -250,8 +263,20 @@ pub fn run_with_faults(
     ccfg: &CampaignConfig,
     faults: &FaultTimeline,
 ) -> ChaosResults {
+    run_with_faults_threads(cfg, ccfg, faults, 1)
+}
+
+/// [`run_with_faults`] with a worker-thread budget for the sharded
+/// engine. While faults are pending the engine stays serial; once the
+/// timeline drains, the remaining sessions may shard across threads.
+pub fn run_with_faults_threads(
+    cfg: FederationConfig,
+    ccfg: &CampaignConfig,
+    faults: &FaultTimeline,
+    threads: usize,
+) -> ChaosResults {
     let mut fed = FedSim::build(cfg);
-    run_on_with_faults(&mut fed, ccfg, faults)
+    run_on_with_faults_threads(&mut fed, ccfg, faults, threads)
 }
 
 /// Run a campaign with a fault timeline on an existing federation.
@@ -259,6 +284,16 @@ pub fn run_on_with_faults(
     fed: &mut FedSim,
     ccfg: &CampaignConfig,
     faults: &FaultTimeline,
+) -> ChaosResults {
+    run_on_with_faults_threads(fed, ccfg, faults, 1)
+}
+
+/// [`run_on_with_faults`] with a worker-thread budget.
+pub fn run_on_with_faults_threads(
+    fed: &mut FedSim,
+    ccfg: &CampaignConfig,
+    faults: &FaultTimeline,
+    threads: usize,
 ) -> ChaosResults {
     fed.inject_faults(faults);
     // One time base for the whole availability report: the run span
@@ -278,7 +313,7 @@ pub fn run_on_with_faults(
             )
         })
         .collect();
-    let campaign = run_on(fed, ccfg);
+    let campaign = run_on_threads(fed, ccfg, threads);
     let window = fed.now - start;
     let caches = cache_sites
         .iter()

@@ -147,11 +147,24 @@ impl Welford {
     pub fn mean(&self) -> f64 {
         self.mean
     }
+    /// Sum of squared deviations from the mean (Welford's "M2" term;
+    /// `variance() == m2() / count()`). Exposed so parallel reductions
+    /// can be checked against hand-computed values.
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
     pub fn min(&self) -> f64 {
         self.min
     }
     pub fn max(&self) -> f64 {
         self.max
+    }
+
+    /// Rebuild an accumulator from previously extracted parts — the
+    /// inverse of the accessors, for shipping summaries across threads
+    /// (or serialization boundaries) without the raw samples.
+    pub fn from_parts(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Self {
+        Welford { n, mean, m2, min, max }
     }
 
     /// Population variance. Zero for n < 2.
@@ -311,5 +324,65 @@ mod tests {
         assert!((a.variance() - whole.variance()).abs() < 1e-6);
         assert_eq!(a.min(), whole.min());
         assert_eq!(a.max(), whole.max());
+    }
+
+    #[test]
+    fn welford_merge_known_values() {
+        // Hand-computed Chan et al. merge, exact in f64:
+        //   left  = {1, 3}:  n=2, mean=2, M2=2
+        //   right = {4, 8}:  n=2, mean=6, M2=8
+        //   union = {1,3,4,8}: n=4, mean=4, M2 = 9+1+0+16 = 26
+        let mut left = Welford::new();
+        left.push(1.0);
+        left.push(3.0);
+        let mut right = Welford::new();
+        right.push(4.0);
+        right.push(8.0);
+        assert_eq!((left.count(), left.mean(), left.m2()), (2, 2.0, 2.0));
+        assert_eq!((right.count(), right.mean(), right.m2()), (2, 6.0, 8.0));
+        left.merge(&right);
+        assert_eq!(left.count(), 4);
+        assert_eq!(left.mean(), 4.0);
+        assert_eq!(left.m2(), 26.0);
+        assert_eq!(left.min(), 1.0);
+        assert_eq!(left.max(), 8.0);
+    }
+
+    #[test]
+    fn welford_merge_is_order_independent() {
+        // The shard-merge reduction must not depend on which shard's
+        // summary arrives first: A∪B == B∪A for these exact parts.
+        let a = Welford::from_parts(2, 2.0, 2.0, 1.0, 3.0);
+        let b = Welford::from_parts(2, 6.0, 8.0, 4.0, 8.0);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.count(), ba.count());
+        assert_eq!(ab.mean(), ba.mean());
+        assert_eq!(ab.m2(), ba.m2());
+        assert_eq!((ab.min(), ab.max()), (ba.min(), ba.max()));
+    }
+
+    #[test]
+    fn welford_from_parts_round_trips() {
+        let mut w = Welford::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            w.push(x);
+        }
+        let r = Welford::from_parts(w.count(), w.mean(), w.m2(), w.min(), w.max());
+        assert_eq!(r.count(), w.count());
+        assert_eq!(r.mean(), w.mean());
+        assert_eq!(r.m2(), w.m2());
+        assert_eq!(r.variance(), w.variance());
+        assert_eq!((r.min(), r.max()), (w.min(), w.max()));
+        // Merging into an empty accumulator is the identity.
+        let mut empty = Welford::new();
+        empty.merge(&r);
+        assert_eq!(empty.mean(), w.mean());
+        assert_eq!(empty.m2(), w.m2());
+        let mut back = r.clone();
+        back.merge(&Welford::new());
+        assert_eq!(back.count(), w.count());
     }
 }

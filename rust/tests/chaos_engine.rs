@@ -326,3 +326,110 @@ fn restored_outage_campaign_bit_identical() {
     assert_eq!(chi.outages, 1);
     assert_eq!(chi.downtime, Duration::from_secs(2));
 }
+
+/// Thread-count determinism for chaos runs: once the restored outage
+/// heals and the fault timeline drains, the campaign tail is eligible
+/// to shard — and the whole run (records, engine counters, fault log,
+/// availability ledger) must stay bit-identical to serial.
+#[test]
+fn chaos_bit_identical_across_thread_counts() {
+    let ccfg = CampaignConfig {
+        jobs: 48,
+        arrival_window_secs: 6.0,
+        ..chaos_campaign()
+    };
+    let leg = |threads: usize| {
+        let mut fed = FedSim::build(paper_federation());
+        let victim = fed.topo.site_index("chicago").unwrap();
+        let mut faults = FaultTimeline::new();
+        faults.cache_outage(victim, t(2.0), t(4.0));
+        campaign::run_on_with_faults_threads(&mut fed, &ccfg, &faults, threads)
+    };
+    let serial = leg(1);
+    assert_eq!(serial.campaign.records.len(), 48);
+    for threads in [2usize, 8] {
+        let r = leg(threads);
+        assert_eq!(
+            r.campaign.records, serial.campaign.records,
+            "{threads}-thread records diverged from serial"
+        );
+        assert_eq!(
+            r.campaign.engine, serial.campaign.engine,
+            "{threads}-thread EngineStats"
+        );
+        assert_eq!(r.fault_log, serial.fault_log, "{threads}-thread fault log");
+        assert_eq!(
+            r.availability, serial.availability,
+            "{threads}-thread availability report"
+        );
+        assert_eq!(r.campaign.peak_concurrent, serial.campaign.peak_concurrent);
+        assert_eq!(r.campaign.events_processed, serial.campaign.events_processed);
+    }
+}
+
+/// Every session exit path releases its cache slot: after a run with
+/// mid-transfer failovers and JoinWait re-plans, the per-cache
+/// in-flight counts are all back to zero — a leak here would feed
+/// phantom load to the `least-loaded` policy forever after.
+#[test]
+fn cache_slots_drain_on_failover_exit_paths() {
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("syracuse").unwrap();
+    let f = file("/ospool/des/data/slot-drain.dat", 10_000_000_000);
+    let mut faults = FaultTimeline::new();
+    faults.push(t(5.0), FaultKind::CacheDown { site });
+    fed.inject_faults(&faults);
+
+    let mut engine = SessionEngine::new(fed.now);
+    let t0 = fed.now;
+    engine.spawn_at(&mut fed, t0, site, f.clone(), DownloadMethod::Stash);
+    engine.spawn_at(
+        &mut fed,
+        t0 + Duration::from_secs(2),
+        site,
+        f,
+        DownloadMethod::Stash,
+    );
+    engine.run(&mut fed);
+    assert_eq!(engine.completed().len(), 2);
+    assert!(engine.stats.failovers >= 1, "the outage must bite");
+    assert!(
+        engine.cache_in_flight().values().all(|&n| n == 0),
+        "cache slots leaked after failover: {:?}",
+        engine.cache_in_flight()
+    );
+}
+
+/// The direct-to-origin fallback (discovery fully dark) also releases
+/// its slot on every bounded retry before giving up on caches.
+#[test]
+fn cache_slots_drain_through_direct_fallback() {
+    use stashcache::client::Method;
+    let mut fed = FedSim::build(paper_federation());
+    let site = fed.topo.site_index("chicago").unwrap();
+    let mut faults = FaultTimeline::new();
+    faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 0 });
+    faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 1 });
+    fed.inject_faults(&faults);
+
+    let mut engine = SessionEngine::new(fed.now);
+    let id = engine.spawn_at(
+        &mut fed,
+        fed.now,
+        site,
+        file("/ospool/ligo/data/slot-direct.dat", 50_000_000),
+        DownloadMethod::Stash,
+    );
+    engine.run(&mut fed);
+    assert_eq!(
+        engine.record(id).method,
+        Method::HttpOrigin,
+        "with discovery dark, the session streams from the origin"
+    );
+    assert!(engine.stats.direct_fallbacks >= 1);
+    assert!(
+        engine.cache_in_flight().values().all(|&n| n == 0),
+        "cache slots leaked on the direct path: {:?}",
+        engine.cache_in_flight()
+    );
+}

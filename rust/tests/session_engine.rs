@@ -14,10 +14,10 @@
 use stashcache::config::defaults::paper_federation;
 use stashcache::federation::driver::SessionEngine;
 use stashcache::federation::{DownloadMethod, FedSim};
-use stashcache::sim::campaign::{self, CampaignConfig};
+use stashcache::sim::campaign::{self, CampaignConfig, CampaignRecord};
 use stashcache::sim::scenario::{self, ScenarioConfig};
 use stashcache::sim::workload::FileRef;
-use stashcache::util::{ByteSize, Duration, SimTime};
+use stashcache::util::{fnv1a, ByteSize, Duration, SimTime};
 
 fn file(path: &str, bytes: u64) -> FileRef {
     FileRef {
@@ -203,4 +203,113 @@ fn concurrent_proxy_sessions_share_the_proxy() {
     let c = engine2.spawn_at(&mut fed, fed.now, site, f, DownloadMethod::HttpProxy);
     engine2.run(&mut fed);
     assert!(engine2.record(c).cache_hit, "object cached after commit");
+}
+
+/// FNV-1a digest of a campaign's full record stream — the compact
+/// bit-identity witness the threaded determinism gate asserts on.
+fn record_digest(records: &[CampaignRecord]) -> u64 {
+    use std::fmt::Write;
+    let mut buf = String::new();
+    for r in records {
+        let _ = write!(
+            buf,
+            "{}|{}|{}|{}|{}|{:?}|{}|{};",
+            r.session,
+            r.site,
+            r.arrival.0,
+            r.record.path,
+            r.record.bytes,
+            r.record.method,
+            r.record.cache_hit,
+            r.record.duration.0,
+        );
+    }
+    fnv1a(buf.as_bytes())
+}
+
+#[test]
+fn campaign_bit_identical_across_thread_counts() {
+    // A hot, small catalog: the head of the run fills the caches, so
+    // the tail is whole hits — the shape the terminal epoch shards.
+    // Thread count must not change a single byte of the results.
+    let ccfg = CampaignConfig {
+        jobs: 96,
+        arrival_window_secs: 30.0,
+        catalog_files: 8,
+        zipf_s: 1.4,
+        background_flows: 1,
+        ..CampaignConfig::default()
+    };
+    let serial = campaign::run_threads(paper_federation(), &ccfg, 1);
+    assert_eq!(serial.records.len(), 96, "every job completes");
+    let digest = record_digest(&serial.records);
+    for threads in [2usize, 8] {
+        let r = campaign::run_threads(paper_federation(), &ccfg, threads);
+        assert_eq!(
+            record_digest(&r.records),
+            digest,
+            "{threads}-thread record digest diverged from serial"
+        );
+        assert_eq!(r.records, serial.records, "{threads}-thread records");
+        assert_eq!(r.engine, serial.engine, "{threads}-thread EngineStats");
+        assert_eq!(r.peak_concurrent, serial.peak_concurrent);
+        assert_eq!(r.events_processed, serial.events_processed);
+        assert_eq!(r.makespan, serial.makespan);
+    }
+}
+
+#[test]
+fn warmed_tail_shards_and_matches_serial_exactly() {
+    // Whole-hit sessions at two cache-owning sites: the terminal epoch
+    // must actually engage (two shards), and the merged results must
+    // be byte-for-byte what the serial loop produces — records, stats,
+    // the federation clock, and the cache-slot ledger.
+    let fa = file("/ospool/des/data/shard-a.dat", 50_000_000);
+    let fb = file("/ospool/nova/data/shard-b.dat", 80_000_000);
+    let leg = |threads: usize| {
+        let mut fed = FedSim::build(paper_federation());
+        let syr = fed.topo.site_index("syracuse").unwrap();
+        let neb = fed.topo.site_index("nebraska").unwrap();
+        // Warm both caches so every engine session is a whole hit.
+        fed.download(syr, &fa, DownloadMethod::Stash);
+        fed.download(neb, &fb, DownloadMethod::Stash);
+        let mut engine = SessionEngine::new(fed.now);
+        let t0 = fed.now;
+        for k in 0..4u64 {
+            let (site, f) = if k % 2 == 0 { (syr, &fa) } else { (neb, &fb) };
+            engine.spawn_at(
+                &mut fed,
+                t0 + Duration::from_millis(10 * k),
+                site,
+                f.clone(),
+                DownloadMethod::Stash,
+            );
+        }
+        engine.run_threaded(&mut fed, threads);
+        assert_eq!(engine.completed().len(), 4);
+        assert!(
+            engine.cache_in_flight().values().all(|&n| n == 0),
+            "cache slots leaked: {:?}",
+            engine.cache_in_flight()
+        );
+        let records: Vec<_> = engine
+            .completed()
+            .iter()
+            .map(|&id| engine.record(id))
+            .collect();
+        (records, engine.stats, engine.epoch_durations.count(), fed.now)
+    };
+    let (serial_recs, serial_stats, serial_epoch, serial_now) = leg(1);
+    assert_eq!(serial_epoch, 0, "1 thread is the serial path byte-for-byte");
+    assert!(serial_recs.iter().all(|r| r.cache_hit), "warmed ⇒ all hits");
+    for threads in [2usize, 8] {
+        let (recs, stats, epoch_count, now) = leg(threads);
+        assert_eq!(
+            epoch_count, 4,
+            "{threads} threads: the warmed whole-hit tail must shard"
+        );
+        assert_eq!(recs, serial_recs, "{threads}-thread records");
+        assert_eq!(stats, serial_stats, "{threads}-thread EngineStats");
+        assert_eq!(now, serial_now, "{threads}-thread federation clock");
+    }
 }
