@@ -157,10 +157,25 @@ mod tests {
     }
 
     #[test]
+    fn zero_byte_file_is_one_empty_chunk() {
+        let mut s = ChunkSet::new(0, 100);
+        assert_eq!(s.total_chunks(), 1);
+        assert_eq!(s.chunk_bytes(0), 0);
+        s.set(0);
+        assert_eq!(s.count_set(), 1);
+        assert_eq!(s.resident_bytes(), 0, "empty chunk carries no bytes");
+        s.clear(0);
+        assert_eq!(s.count_set(), 0);
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
     fn property_resident_bytes_matches_manual_sum() {
         use crate::util::prop::check;
         check("chunkset byte accounting", 80, |g| {
-            let file_size = g.u64(1, 10_000);
+            // file_size 0 (one empty chunk) is in range: set/clear on
+            // it must account zero bytes, never underflow.
+            let file_size = g.u64(0, 10_000);
             let chunk_size = g.u64(1, 500);
             let mut s = ChunkSet::new(file_size, chunk_size);
             for _ in 0..g.usize(0, 40) {

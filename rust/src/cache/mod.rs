@@ -365,6 +365,22 @@ impl CacheServer {
         v.sort();
         v
     }
+
+    /// Per-file reservation state: `(path, pins, in-flight chunk
+    /// indices)` for every file with any pin or reserved chunk, sorted
+    /// by path. The model checker hashes this into its canonical state
+    /// snapshot and asserts it drains to empty at every terminal state
+    /// — reserved chunks never leak across abort/failover.
+    pub fn reservation_snapshot(&self) -> Vec<(String, u32, Vec<u64>)> {
+        let mut v: Vec<(String, u32, Vec<u64>)> = self
+            .files
+            .iter()
+            .filter(|(_, f)| f.pins > 0 || f.in_flight.count_set() > 0)
+            .map(|(p, f)| (p.clone(), f.pins, f.in_flight.iter_set().collect()))
+            .collect();
+        v.sort();
+        v
+    }
 }
 
 #[cfg(test)]
@@ -579,10 +595,12 @@ mod tests {
             let n_ops = g.usize(1, 50);
             for i in 0..n_ops {
                 let now = t(i as f64);
-                match g.usize(0, 2) {
+                match g.usize(0, 3) {
                     0 if inflight.len() < 2 => {
                         let fnum = g.u64(0, 9);
                         let file = format!("/f{fnum}");
+                        // 96..960 bytes against chunk 64: every file has
+                        // a short 32-byte tail chunk.
                         let size = 96 * (fnum + 1);
                         let off = g.u64(0, size - 1);
                         let len = g.u64(0, size - off);
@@ -598,9 +616,23 @@ mod tests {
                             c.commit_chunks(&f, 1, &ch, now);
                         }
                     }
-                    _ => {
+                    2 => {
                         if let Some((f, ch)) = inflight.pop() {
                             c.abort_fetch(&f, 1, &ch);
+                        }
+                    }
+                    _ => {
+                        // Zero-byte file: its single empty chunk through
+                        // the full reserve → abort/commit cycle must
+                        // never move usage (and never underflow it).
+                        if !c.contains_whole("/zero", 1) {
+                            c.plan_read("/zero", 0, 0, 0, 1, now);
+                            c.begin_fetch("/zero", 1, &[0]);
+                            if g.bool() {
+                                c.commit_chunks("/zero", 1, &[0], now);
+                            } else {
+                                c.abort_fetch("/zero", 1, &[0]);
+                            }
                         }
                     }
                 }
@@ -642,9 +674,16 @@ mod tests {
             for i in 0..n_ops {
                 let fnum = g.u64(0, 5);
                 let file = format!("/f{fnum}");
-                let size = 150 * (fnum + 1); // fixed size per file
-                let off = g.u64(0, size - 1);
-                let len = g.u64(0, size - off);
+                // Fixed size per file; f0 is zero bytes (one empty
+                // chunk), the rest end in a short 50-byte tail chunk
+                // (150·n % 100) — both interleaved with abort_fetch.
+                let size = 150 * fnum;
+                let (off, len) = if size == 0 {
+                    (0, 0)
+                } else {
+                    let off = g.u64(0, size - 1);
+                    (off, g.u64(0, size - off))
+                };
                 let now = t(i as f64);
                 let p = c.plan_read(&file, off, len, size, 1, now);
                 if !p.fetch.is_empty() {
@@ -654,6 +693,16 @@ mod tests {
                     } else {
                         c.abort_fetch(&file, 1, &p.fetch);
                     }
+                } else if size == 0 && !c.contains_whole(&file, 1) {
+                    // A zero-length read plans no fetch, so drive the
+                    // empty chunk's reserve → abort/commit cycle
+                    // directly.
+                    c.begin_fetch(&file, 1, &[0]);
+                    if g.bool() {
+                        c.commit_chunks(&file, 1, &[0], now);
+                    } else {
+                        c.abort_fetch(&file, 1, &[0]);
+                    }
                 }
             }
             let sum: u64 = c.residency_snapshot().iter().map(|(_, b)| b).sum();
@@ -662,5 +711,45 @@ mod tests {
                 format!("sum {} != usage {}", sum, c.usage()),
             )
         });
+    }
+
+    #[test]
+    fn zero_byte_and_short_tail_reserve_abort_commit() {
+        let mut c = CacheServer::new("x", cfg(10_000, 100));
+        // Zero-byte file: one empty chunk through reserve → abort →
+        // re-reserve → commit. Usage must stay exactly zero throughout.
+        c.plan_read("/zero", 0, 0, 0, 1, t(0.0));
+        c.begin_fetch("/zero", 1, &[0]);
+        c.abort_fetch("/zero", 1, &[0]);
+        assert_eq!(c.usage().as_u64(), 0);
+        assert!(c.reservation_snapshot().is_empty(), "abort unpins");
+        c.begin_fetch("/zero", 1, &[0]);
+        c.commit_chunks("/zero", 1, &[0], t(1.0));
+        assert_eq!(c.usage().as_u64(), 0);
+        assert!(c.contains_whole("/zero", 1), "empty file fully resident");
+
+        // Short tail: 250 bytes over 100-byte chunks → the last chunk
+        // holds 50 bytes. An aborted whole-file fetch leaves nothing.
+        let p = c.plan_read("/tail", 0, 250, 250, 1, t(2.0));
+        assert_eq!(p.fetch, vec![0, 1, 2]);
+        c.begin_fetch("/tail", 1, &p.fetch);
+        c.abort_fetch("/tail", 1, &p.fetch);
+        let sum: u64 = c.residency_snapshot().iter().map(|(_, b)| b).sum();
+        assert_eq!(sum, c.usage().as_u64());
+        assert_eq!(c.usage().as_u64(), 0, "aborted fetch left bytes");
+
+        // Re-fetch just the tail chunk: usage counts its true 50 bytes,
+        // not a full chunk.
+        let p2 = c.plan_read("/tail", 200, 50, 250, 1, t(3.0));
+        assert_eq!(p2.fetch, vec![2]);
+        c.begin_fetch("/tail", 1, &p2.fetch);
+        c.commit_chunks("/tail", 1, &p2.fetch, t(4.0));
+        assert_eq!(c.usage().as_u64(), 50);
+
+        // Invalidation of both drains usage to zero without underflow.
+        c.invalidate("/zero");
+        c.invalidate("/tail");
+        assert_eq!(c.usage().as_u64(), 0);
+        assert!(c.residency_snapshot().is_empty());
     }
 }

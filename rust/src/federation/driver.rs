@@ -75,6 +75,26 @@ enum EngineEvent {
     Timer(SessionId),
 }
 
+/// One enabled event the model checker may fire next, in place of the
+/// deterministic virtual-time minimum the run loop would pick. The
+/// variants mirror the engine's three event sources (timer queue,
+/// network completions, fault schedule); see
+/// [`SessionEngine::mc_choices`] / [`SessionEngine::mc_fire`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum McChoice {
+    /// A pending timer-queue entry, addressed by its exact
+    /// `(time, seq)` scheduling key (stable across replays).
+    Timer {
+        at: SimTime,
+        seq: u64,
+        session: SessionId,
+    },
+    /// An in-flight foreground transfer completing.
+    Flow { flow: FlowId, owner: SessionId },
+    /// The earliest scheduled fault applying.
+    Fault,
+}
+
 /// Engine counters (perf + concurrency + fault observability).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct EngineStats {
@@ -193,6 +213,26 @@ impl SessionEngine {
     /// assert this to catch leaks that would silently skew redirection.
     pub fn cache_in_flight(&self) -> &HashMap<usize, u64> {
         &self.cache_in_flight
+    }
+
+    /// Spawned-but-unfinished session count. Drains to zero when a run
+    /// completes — the model checker's termination criterion.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Waiter lists: `(cache site, path)` → sessions parked in
+    /// `JoinWait` on that fetch. Exposed for the model checker's
+    /// waiter-symmetry invariant and the stale-waiter regression tests;
+    /// must be empty after every drained run.
+    pub fn waiters(&self) -> &HashMap<(usize, String), Vec<SessionId>> {
+        &self.waiters
+    }
+
+    /// Foreground flow → owning session. Exposed for the model
+    /// checker's choice enumeration and terminal drain check.
+    pub fn flow_owners(&self) -> &HashMap<FlowId, SessionId> {
+        &self.flow_owner
     }
 
     /// The finished record of a session (panics if not done).
@@ -510,6 +550,11 @@ impl SessionEngine {
     ) {
         self.stats.retries += 1;
         self.release_cache_slot(id);
+        // A session failing over out of JoinWait (e.g. its cache died
+        // before the fetch owner's commit) must leave the waiter list
+        // it was parked in, or a later commit would wake it in the
+        // wrong phase.
+        self.remove_waiter(id);
         let (method, transport, retries) = {
             let s = &mut self.sessions[id.0 as usize];
             if let Some(site) = exclude {
@@ -731,6 +776,7 @@ impl SessionEngine {
             }
             s.joins += 1;
             s.phase = Phase::JoinWait;
+            s.waiting_on = Some((cache_site, path.clone()));
             self.waiters
                 .entry((cache_site, path))
                 .or_default()
@@ -1072,9 +1118,37 @@ impl SessionEngine {
         };
         for wid in ids {
             let s = &mut self.sessions[wid.0 as usize];
-            debug_assert_eq!(s.phase, Phase::JoinWait);
+            // Hard invariant (upgraded from a debug_assert): every id
+            // in a waiter list is parked in JoinWait. Symmetric removal
+            // on every JoinWait exit path ([`Self::remove_waiter`])
+            // keeps this true; tripping it means a stale waiter — the
+            // lost-wakeup class of protocol bug the model checker
+            // hunts.
+            assert_eq!(
+                s.phase,
+                Phase::JoinWait,
+                "stale waiter: session {wid:?} still listed under ({cache_site}, {path})"
+            );
+            s.waiting_on = None;
             s.phase = Phase::CacheCheck;
             self.queue.schedule_at(t, EngineEvent::Timer(wid));
+        }
+    }
+
+    /// Symmetric counterpart of the `JoinWait` park in
+    /// [`Self::cache_check`]: if the session still sits in a waiter
+    /// list, scrub it. Every JoinWait exit path funnels through here or
+    /// [`Self::wake_waiters`], so a session can never linger in a list
+    /// it has left — the stale-waiter audit.
+    fn remove_waiter(&mut self, id: SessionId) {
+        let Some(key) = self.sessions[id.0 as usize].waiting_on.take() else {
+            return;
+        };
+        if let Some(ids) = self.waiters.get_mut(&key) {
+            ids.retain(|&wid| wid != id);
+            if ids.is_empty() {
+                self.waiters.remove(&key);
+            }
         }
     }
 
@@ -1090,6 +1164,7 @@ impl SessionEngine {
 
     fn finish(&mut self, id: SessionId, t: SimTime, method: Method) {
         self.release_cache_slot(id);
+        self.remove_waiter(id);
         let s = &mut self.sessions[id.0 as usize];
         let cache_hit = match method {
             Method::HttpProxy => s.proxy_hit,
@@ -1110,6 +1185,83 @@ impl SessionEngine {
         self.in_flight -= 1;
         self.completed.push(id);
         self.stats.sessions_completed += 1;
+    }
+
+    // --- model-checker seam -----------------------------------------------
+
+    /// Every event enabled right now, in a deterministic order: pending
+    /// timer entries in `(time, seq)` order, then in-flight foreground
+    /// flows in `FlowId` order, then the fault source if any fault is
+    /// scheduled. The deterministic run loop always fires the
+    /// virtual-time minimum of these; the model checker
+    /// ([`crate::mc`]) instead explores *every* element of this list
+    /// from every reached state.
+    pub fn mc_choices(&self, fed: &FedSim) -> Vec<McChoice> {
+        let mut out = Vec::new();
+        for (at, seq, ev) in self.queue.pending_entries() {
+            let session = match ev {
+                EngineEvent::Start(id) | EngineEvent::Timer(id) => id,
+            };
+            out.push(McChoice::Timer { at, seq, session });
+        }
+        let mut flows: Vec<(FlowId, SessionId)> =
+            self.flow_owner.iter().map(|(&f, &s)| (f, s)).collect();
+        flows.sort_unstable();
+        for (flow, owner) in flows {
+            out.push(McChoice::Flow { flow, owner });
+        }
+        if fed.next_fault_at().is_some() {
+            out.push(McChoice::Fault);
+        }
+        out
+    }
+
+    /// Fire one enabled event out of arbitration order. The instant is
+    /// clamped to `max(scheduled time, engine clock, federation clock)`
+    /// — the checker's time abstraction: event *orderings* are
+    /// explored, durations are not, so an event chosen "early" simply
+    /// fires at the clock the run has already reached. Clocks stay
+    /// monotone, so every handler's scheduling and network assertion
+    /// holds unchanged. Panics if the choice is no longer enabled (the
+    /// checker only fires freshly enumerated choices).
+    pub fn mc_fire(&mut self, fed: &mut FedSim, choice: McChoice) {
+        match choice {
+            McChoice::Timer { at, seq, .. } => {
+                let ev = self.queue.take(at, seq).expect("chosen timer is pending");
+                let t = at.max(self.queue.now()).max(fed.now);
+                self.queue.force_advance(t);
+                fed.now = t;
+                self.stats.events_processed += 1;
+                match ev {
+                    EngineEvent::Start(id) => self.on_start(fed, id, t),
+                    EngineEvent::Timer(id) => self.on_timer(fed, id, t),
+                }
+            }
+            McChoice::Flow { flow, owner } => {
+                let t = self.queue.now().max(fed.now);
+                self.queue.force_advance(t);
+                fed.now = t;
+                // Completing a flow "now" regardless of remaining
+                // bytes: the ordering choice is what matters.
+                let c = fed
+                    .net
+                    .force_complete(flow, t)
+                    .expect("chosen flow is live");
+                debug_assert_eq!(c.flow, flow);
+                self.stats.events_processed += 1;
+                let removed = self.flow_owner.remove(&flow);
+                debug_assert_eq!(removed, Some(owner));
+                self.on_flow_done(fed, owner, t);
+            }
+            McChoice::Fault => {
+                let ev = fed.pop_fault().expect("chosen fault is scheduled");
+                let t = ev.at.max(self.queue.now()).max(fed.now);
+                self.queue.force_advance(t);
+                fed.now = t;
+                self.stats.events_processed += 1;
+                self.on_fault(fed, ev.kind, t);
+            }
+        }
     }
 
     // --- sharded terminal epoch -------------------------------------------

@@ -268,6 +268,12 @@ impl FedSim {
         self.fault_schedule.front().map(|e| e.at)
     }
 
+    /// The next scheduled fault, if any (the model checker's trace
+    /// printer names it when describing a `Fault` choice).
+    pub fn peek_fault(&self) -> Option<&FaultEvent> {
+        self.fault_schedule.front()
+    }
+
     pub(crate) fn pop_fault(&mut self) -> Option<FaultEvent> {
         self.fault_schedule.pop_front()
     }

@@ -118,6 +118,11 @@ pub struct Session {
     pub(crate) per_conn: f64,
     /// Times this session parked in `JoinWait` (coalescing observability).
     pub joins: u32,
+    /// While parked in `JoinWait`: the waiter-list key this session sits
+    /// under. Symmetric bookkeeping with the engine's waiter lists —
+    /// set when parking, cleared on every exit path (wake, failover,
+    /// finish) so a session can never linger in a list it has left.
+    pub(crate) waiting_on: Option<(usize, String)>,
 
     // --- failover state ---------------------------------------------------
     /// Caches this session failed against (excluded from re-resolution).
@@ -166,6 +171,7 @@ impl Session {
             plan: None,
             per_conn: 0.0,
             joins: 0,
+            waiting_on: None,
             excluded_caches: Vec::new(),
             failovers: 0,
             retries: 0,

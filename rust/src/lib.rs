@@ -28,6 +28,9 @@
 //! redirector instances dying mid-transfer — live in [`fault`] and are
 //! applied by the session engine as first-class events; sessions fail
 //! over across caches and, as a last resort, stream from the origin.
+//! The session protocol itself is checked by a small-scope model
+//! checker ([`mc`]) that exhaustively enumerates event interleavings
+//! on tiny scenarios and asserts global invariants at every state.
 //!
 //! Because the paper's testbed is the production OSG WAN, the links and
 //! sites are reproduced by a deterministic flow-level discrete-event
@@ -51,6 +54,7 @@ pub mod fault;
 pub mod federation;
 pub mod geoip;
 pub mod live;
+pub mod mc;
 pub mod metrics;
 pub mod monitoring;
 pub mod namespace;

@@ -4,6 +4,7 @@
 //! stashcache topology                      # Fig 1/2: sites, caches, links
 //! stashcache scenario [--sites a,b] [--repeats N] [--runtime pjrt|rust]
 //! stashcache sweep [--preset proxy-vs-stash] [--threads N]  # parallel grid
+//! stashcache check [--scenario NAME]        # model-check the session protocol
 //! stashcache usage --days D [--jobs-per-hour J]
 //! stashcache report --all --out-dir reports
 //! stashcache init-config [path]            # write an example TOML

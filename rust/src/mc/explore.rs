@@ -1,0 +1,490 @@
+//! The exhaustive explorer: stateless BFS over choice-index prefixes.
+//!
+//! The federation is not cloneable (it owns a `Box<dyn
+//! RedirectionPolicy>`), so instead of snapshotting states the search
+//! re-materialises each node by rebuilding the scenario and replaying
+//! the choice-index prefix that first reached it. Builders are pure
+//! and the engine is deterministic, so replay is exact; breadth-first
+//! order keeps prefixes (and therefore counterexample traces) short.
+//!
+//! Engine `assert!`/`debug_assert!` failures inside a fired transition
+//! are caught with `catch_unwind` and reported as violations carrying
+//! the full event trace — the checker treats the engine's own internal
+//! assertions as invariants too.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+use crate::federation::driver::{McChoice, SessionEngine};
+use crate::federation::session::Phase;
+use crate::federation::FedSim;
+
+use super::scenario::Scenario;
+use super::snapshot::state_hash;
+
+/// A counterexample: which invariant broke, the numbered event trace
+/// from the initial state, and the replayable choice-index list.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// What went wrong (invariant text or engine panic message).
+    pub invariant: String,
+    /// Human-readable event descriptions, one per fired choice.
+    pub trace: Vec<String>,
+    /// Choice indices to feed back via `check --replay`.
+    pub choices: Vec<usize>,
+}
+
+/// Outcome of exhaustively exploring one scenario.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    pub scenario: &'static str,
+    /// Distinct states reached (hash-deduplicated), including the root.
+    pub states: usize,
+    /// Transitions fired (edges explored, including re-entries into
+    /// already-visited states).
+    pub transitions: usize,
+    /// Distinct terminal states (all sessions finished).
+    pub terminals: usize,
+    /// Longest choice-prefix among first visits.
+    pub max_depth: usize,
+    /// True if the transition budget ran out before the frontier
+    /// drained (liveness is then skipped — safety still holds for the
+    /// explored prefix).
+    pub truncated: bool,
+    pub violation: Option<Violation>,
+}
+
+/// What one fired transition produced, evaluated inside the
+/// `catch_unwind` boundary so engine panics become violations.
+struct Fired {
+    hash: u64,
+    n_choices: usize,
+    outstanding: usize,
+    violation: Option<String>,
+}
+
+fn eval_state(fed: &FedSim, engine: &SessionEngine) -> Fired {
+    let outstanding = engine.outstanding();
+    let mut violation = per_state_violation(fed, engine);
+    if violation.is_none() && outstanding == 0 {
+        violation = terminal_violation(fed, engine);
+    }
+    Fired {
+        hash: state_hash(fed, engine),
+        n_choices: engine.mc_choices(fed).len(),
+        outstanding,
+        violation,
+    }
+}
+
+/// Rebuild the scenario and replay a choice-index prefix. Panics (and
+/// is expected to be wrapped in `catch_unwind`) if the engine trips an
+/// assertion or the prefix diverges — the latter would mean a
+/// non-deterministic builder, itself a bug worth surfacing.
+fn replay(sc: &Scenario, prefix: &[usize]) -> (FedSim, SessionEngine) {
+    let (mut fed, mut engine) = sc.build();
+    for (step, &i) in prefix.iter().enumerate() {
+        let choices = engine.mc_choices(&fed);
+        let choice = choices
+            .get(i)
+            .unwrap_or_else(|| {
+                panic!(
+                    "replay diverged at step {step}: choice {i} of {} — \
+                     scenario builder is not deterministic",
+                    choices.len()
+                )
+            })
+            .clone();
+        engine.mc_fire(&mut fed, choice);
+    }
+    (fed, engine)
+}
+
+/// Exhaustively explore `sc`, firing at most `max_transitions` edges.
+pub fn check_scenario(sc: &Scenario, max_transitions: usize) -> CheckReport {
+    let mut report = CheckReport {
+        scenario: sc.name,
+        states: 0,
+        transitions: 0,
+        terminals: 0,
+        max_depth: 0,
+        truncated: false,
+        violation: None,
+    };
+
+    // Root node.
+    let root = match catch_unwind(AssertUnwindSafe(|| {
+        let (fed, engine) = replay(sc, &[]);
+        eval_state(&fed, &engine)
+    })) {
+        Ok(f) => f,
+        Err(payload) => {
+            report.violation = Some(build_violation(sc, vec![], panic_msg(payload)));
+            return report;
+        }
+    };
+    if let Some(msg) = root.violation {
+        report.violation = Some(build_violation(sc, vec![], msg));
+        return report;
+    }
+
+    // First choice-prefix that reached each visited state hash.
+    let mut prefix_of: HashMap<u64, Vec<usize>> = HashMap::new();
+    // Explored edges, for the liveness pass.
+    let mut succ: HashMap<u64, Vec<u64>> = HashMap::new();
+    let mut terminal_set: HashSet<u64> = HashSet::new();
+    let mut frontier: VecDeque<(u64, usize)> = VecDeque::new();
+
+    prefix_of.insert(root.hash, vec![]);
+    report.states = 1;
+    if root.outstanding == 0 {
+        terminal_set.insert(root.hash);
+        report.terminals = 1;
+    } else if root.n_choices == 0 {
+        report.violation = Some(build_violation(
+            sc,
+            vec![],
+            "deadlock: sessions outstanding but no event enabled".into(),
+        ));
+        return report;
+    } else {
+        frontier.push_back((root.hash, root.n_choices));
+    }
+
+    'search: while let Some((hash, n_choices)) = frontier.pop_front() {
+        let prefix = prefix_of[&hash].clone();
+        for i in 0..n_choices {
+            if report.transitions >= max_transitions {
+                report.truncated = true;
+                break 'search;
+            }
+            report.transitions += 1;
+
+            let fired = catch_unwind(AssertUnwindSafe(|| {
+                let (mut fed, mut engine) = replay(sc, &prefix);
+                let choice = engine.mc_choices(&fed)[i].clone();
+                engine.mc_fire(&mut fed, choice);
+                eval_state(&fed, &engine)
+            }));
+
+            let mut next = prefix.clone();
+            next.push(i);
+            let fired = match fired {
+                Ok(f) => f,
+                Err(payload) => {
+                    report.violation = Some(build_violation(sc, next, panic_msg(payload)));
+                    break 'search;
+                }
+            };
+            if let Some(msg) = fired.violation {
+                report.violation = Some(build_violation(sc, next, msg));
+                break 'search;
+            }
+            if fired.outstanding > 0 && fired.n_choices == 0 {
+                report.violation = Some(build_violation(
+                    sc,
+                    next,
+                    "deadlock: sessions outstanding but no event enabled".into(),
+                ));
+                break 'search;
+            }
+
+            succ.entry(hash).or_default().push(fired.hash);
+            if !prefix_of.contains_key(&fired.hash) {
+                report.states += 1;
+                report.max_depth = report.max_depth.max(next.len());
+                if fired.outstanding == 0 {
+                    // Terminal states are not expanded: the run is
+                    // over; late-scheduled faults firing into a drained
+                    // federation are uninteresting.
+                    terminal_set.insert(fired.hash);
+                    report.terminals += 1;
+                }
+                prefix_of.insert(fired.hash, next);
+                if fired.outstanding > 0 {
+                    frontier.push_back((fired.hash, fired.n_choices));
+                }
+            }
+        }
+    }
+
+    // Liveness: every explored state must be able to reach a terminal
+    // state. Only meaningful when the graph is complete.
+    if report.violation.is_none() && !report.truncated {
+        if let Some(stuck) = unreaching_state(&prefix_of, &succ, &terminal_set) {
+            let prefix = prefix_of[&stuck].clone();
+            report.violation = Some(build_violation(
+                sc,
+                prefix,
+                "liveness: state cannot reach any terminal state \
+                 (lost wakeup or livelock)"
+                    .into(),
+            ));
+        }
+    }
+
+    report
+}
+
+/// Reverse reachability from the terminal set; returns a state that
+/// cannot reach termination (shortest first-visit prefix preferred).
+fn unreaching_state(
+    prefix_of: &HashMap<u64, Vec<usize>>,
+    succ: &HashMap<u64, Vec<u64>>,
+    terminal_set: &HashSet<u64>,
+) -> Option<u64> {
+    let mut rev: HashMap<u64, Vec<u64>> = HashMap::new();
+    for (&from, outs) in succ {
+        for &to in outs {
+            rev.entry(to).or_default().push(from);
+        }
+    }
+    let mut reaching: HashSet<u64> = terminal_set.clone();
+    let mut queue: VecDeque<u64> = terminal_set.iter().copied().collect();
+    while let Some(s) = queue.pop_front() {
+        if let Some(preds) = rev.get(&s) {
+            for &p in preds {
+                if reaching.insert(p) {
+                    queue.push_back(p);
+                }
+            }
+        }
+    }
+    prefix_of
+        .keys()
+        .filter(|h| !reaching.contains(h))
+        .min_by_key(|h| prefix_of[h].len())
+        .copied()
+}
+
+/// Re-run a choice list step by step, describing each fired event.
+/// Returns the trace lines plus an error if a step panicked, diverged,
+/// or landed in a state violating an invariant.
+pub fn replay_trace(sc: &Scenario, choices: &[usize]) -> (Vec<String>, Option<String>) {
+    // The trace accumulates *across* the unwind boundary so a panicking
+    // final step still yields the lines before it.
+    let lines = Mutex::new(Vec::new());
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let (mut fed, mut engine) = sc.build();
+        for (step, &i) in choices.iter().enumerate() {
+            let enabled = engine.mc_choices(&fed);
+            let choice = match enabled.get(i) {
+                Some(c) => c.clone(),
+                None => {
+                    return Some(format!(
+                        "step {step}: choice index {i} out of range \
+                         ({} events enabled)",
+                        enabled.len()
+                    ));
+                }
+            };
+            lines
+                .lock()
+                .unwrap()
+                .push(format!("{step:3}. {}", describe(&choice, &fed, &engine)));
+            engine.mc_fire(&mut fed, choice);
+            if let Some(msg) = per_state_violation(&fed, &engine) {
+                return Some(format!("invariant violated after step {step}: {msg}"));
+            }
+            if engine.outstanding() == 0 {
+                if let Some(msg) = terminal_violation(&fed, &engine) {
+                    return Some(format!("terminal invariant violated after step {step}: {msg}"));
+                }
+            }
+        }
+        None
+    }));
+    let error = match result {
+        Ok(e) => e,
+        Err(payload) => Some(format!("engine panic: {}", panic_msg(payload))),
+    };
+    (lines.into_inner().unwrap(), error)
+}
+
+/// Build a violation report by replaying and describing the trace.
+fn build_violation(sc: &Scenario, choices: Vec<usize>, invariant: String) -> Violation {
+    let (trace, _) = replay_trace(sc, &choices);
+    Violation {
+        invariant,
+        trace,
+        choices,
+    }
+}
+
+fn describe(c: &McChoice, fed: &FedSim, engine: &SessionEngine) -> String {
+    match c {
+        McChoice::Timer { session, .. } => {
+            let s = engine.session(*session);
+            match s.phase {
+                Phase::Pending => format!("session {} arrives", session.0),
+                p => format!("session {} timer fires in {:?}", session.0, p),
+            }
+        }
+        McChoice::Flow { flow, owner } => {
+            let s = engine.session(*owner);
+            format!(
+                "flow {} of session {} completes (in {:?})",
+                flow.0, owner.0, s.phase
+            )
+        }
+        McChoice::Fault => match fed.peek_fault() {
+            Some(ev) => format!("fault applies: {:?}", ev.kind),
+            None => "fault applies".to_string(),
+        },
+    }
+}
+
+fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Invariants
+// ---------------------------------------------------------------------
+
+/// Invariants that must hold in *every* reached state: waiter
+/// symmetry, cache-slot accounting, and byte accounting.
+fn per_state_violation(fed: &FedSim, engine: &SessionEngine) -> Option<String> {
+    // 1. Waiter symmetry. Every listed waiter is parked in JoinWait on
+    // exactly that key, and every JoinWait session is listed exactly
+    // once (count equality rules out double listing).
+    let mut listed = 0usize;
+    for ((site, path), ids) in engine.waiters() {
+        if ids.is_empty() {
+            return Some(format!("empty waiter list left under ({site}, {path})"));
+        }
+        for id in ids {
+            listed += 1;
+            let s = engine.session(*id);
+            if s.phase != Phase::JoinWait {
+                return Some(format!(
+                    "stale waiter: session {} listed under ({site}, {path}) \
+                     but is in {:?}",
+                    id.0, s.phase
+                ));
+            }
+            let key = s.waiting_on.as_ref().map(|(ws, wp)| (*ws, wp.as_str()));
+            if key != Some((*site, path.as_str())) {
+                return Some(format!(
+                    "waiter key mismatch: session {} listed under \
+                     ({site}, {path}) but waiting_on {:?}",
+                    id.0, s.waiting_on
+                ));
+            }
+        }
+    }
+    let mut parked = 0usize;
+    for s in engine.sessions() {
+        let in_join = s.phase == Phase::JoinWait;
+        if in_join != s.waiting_on.is_some() {
+            return Some(format!(
+                "session {} is in {:?} but waiting_on is {:?}",
+                s.id.0, s.phase, s.waiting_on
+            ));
+        }
+        parked += in_join as usize;
+    }
+    if listed != parked {
+        return Some(format!(
+            "waiter-list entries ({listed}) != sessions parked in JoinWait ({parked})"
+        ));
+    }
+
+    // 2. Slot accounting: cache_in_flight[site] == live assigned sessions.
+    let mut live: HashMap<usize, u64> = HashMap::new();
+    for s in engine.sessions() {
+        if s.phase != Phase::Done {
+            if let Some(site) = s.cache_site {
+                *live.entry(site).or_insert(0) += 1;
+            }
+        }
+    }
+    for (&site, &n) in engine.cache_in_flight() {
+        let expect = live.remove(&site).unwrap_or(0);
+        if n != expect {
+            return Some(format!(
+                "cache_in_flight[{site}] is {n} but {expect} unfinished \
+                 sessions are assigned to that cache"
+            ));
+        }
+    }
+    if let Some((&site, &n)) = live.iter().next() {
+        return Some(format!(
+            "{n} unfinished sessions assigned to cache {site} but no \
+             cache_in_flight entry"
+        ));
+    }
+
+    // 3. Byte accounting: usage == Σ resident chunk bytes, per cache.
+    for (&site, cache) in &fed.caches {
+        let sum: u64 = cache.residency_snapshot().iter().map(|(_, b)| b).sum();
+        if sum != cache.usage().as_u64() {
+            return Some(format!(
+                "cache {site}: usage {} != sum of residency {sum}",
+                cache.usage().as_u64()
+            ));
+        }
+    }
+
+    None
+}
+
+/// Invariants that must hold once every session has finished: all
+/// bytes delivered, all bookkeeping drained, no leaked reservations.
+fn terminal_violation(fed: &FedSim, engine: &SessionEngine) -> Option<String> {
+    for s in engine.sessions() {
+        if s.phase != Phase::Done {
+            return Some(format!(
+                "terminal state but session {} is in {:?}",
+                s.id.0, s.phase
+            ));
+        }
+        match &s.record {
+            Some(r) if r.bytes == s.file.size.as_u64() => {}
+            Some(r) => {
+                return Some(format!(
+                    "bytes not conserved: session {} delivered {} of {} bytes",
+                    s.id.0,
+                    r.bytes,
+                    s.file.size.as_u64()
+                ));
+            }
+            None => {
+                return Some(format!("session {} is Done without a record", s.id.0));
+            }
+        }
+    }
+    if !engine.waiters().is_empty() {
+        return Some(format!(
+            "waiter lists not drained at termination: {:?}",
+            engine.waiters().keys().collect::<Vec<_>>()
+        ));
+    }
+    if !engine.flow_owners().is_empty() {
+        return Some(format!(
+            "flow ownership not drained at termination: {:?}",
+            engine.flow_owners().keys().collect::<Vec<_>>()
+        ));
+    }
+    if let Some((&site, &n)) = engine.cache_in_flight().iter().find(|&(_, &n)| n > 0) {
+        return Some(format!(
+            "cache_in_flight[{site}] is {n} at termination"
+        ));
+    }
+    for (&site, cache) in &fed.caches {
+        let leaked = cache.reservation_snapshot();
+        if !leaked.is_empty() {
+            return Some(format!(
+                "cache {site} leaked reservations at termination: {leaked:?}"
+            ));
+        }
+    }
+    None
+}

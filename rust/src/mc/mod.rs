@@ -1,0 +1,78 @@
+//! Small-scope model checker for the session protocol.
+//!
+//! The session state machine (GeoResolve → CacheCheck →
+//! FetchBegin/JoinWait → Transfer, plus failover and direct-origin
+//! paths) interacts with faults, policy reroutes, and chunk
+//! reservation — the classic breeding ground for lost-wakeup and
+//! leaked-reservation bugs that randomized chaos runs only *sample*.
+//! This module explores them *exhaustively*, in the small-scope spirit
+//! of TLC and the machine-check exemplar: tiny scenarios (2–3
+//! sessions, a cache or two, a fault pair), every event interleaving,
+//! global invariants asserted at every reached state.
+//!
+//! ## How it works
+//!
+//! The deterministic engine always fires the virtual-time minimum of
+//! its three event sources (timer queue, network completions, fault
+//! schedule). [`SessionEngine::mc_choices`] exposes that arbitration
+//! as a *choice list* — every enabled event — and
+//! [`SessionEngine::mc_fire`] fires any one of them, clamping its
+//! instant to the clocks already reached. Time is thereby abstracted
+//! away: the checker explores event *orderings*, not durations, which
+//! is exactly the space where wakeup/reservation protocols break.
+//!
+//! The explorer ([`explore`]) runs a depth-first search over choice
+//! sequences. States are deduplicated by a canonical, time-free hash
+//! ([`snapshot`]) over session phases, waiter lists, per-cache
+//! residency/reservations, in-flight counts, link state, and the
+//! fault schedule. Because the federation owns a `Box<dyn
+//! RedirectionPolicy>` (not cloneable), the search is *stateless*:
+//! each node is re-materialised by rebuilding the scenario and
+//! replaying its choice-index prefix — builders are deterministic, so
+//! replay is exact.
+//!
+//! ## Invariants
+//!
+//! Checked at **every** reached state:
+//!
+//! 1. **Waiter symmetry** — every id in a waiter list is a session
+//!    parked in `JoinWait` on exactly that key, and every `JoinWait`
+//!    session appears in exactly one list (no stale waiters, no lost
+//!    parks).
+//! 2. **Slot accounting** — `cache_in_flight[site]` equals the number
+//!    of unfinished sessions assigned to `site` (every exit path
+//!    releases its slot).
+//! 3. **Byte accounting** — each cache's `usage` equals the sum of its
+//!    resident chunk bytes.
+//!
+//! Checked at every **terminal** state (all sessions finished):
+//!
+//! 4. **Termination & conservation** — every session is `Done` with a
+//!    record of exactly `file.size` bytes; waiter lists, flow
+//!    ownership, and in-flight counts have drained to zero.
+//! 5. **No leaked reservations** — every cache's pins and in-flight
+//!    chunk bits are empty ([`crate::cache::CacheServer::reservation_snapshot`]).
+//!
+//! Liveness — *every session terminates* — is checked globally after
+//! the search: every explored state must reach some terminal state in
+//! the explored graph (reverse reachability); a state that cannot is a
+//! lost wakeup or livelock, and a state with sessions outstanding but
+//! no enabled event is a deadlock.
+//!
+//! ## Counterexamples
+//!
+//! A violation (invariant failure, engine panic, deadlock, or
+//! unreachable termination) is reported as the full event trace from
+//! the initial state — one numbered line per fired event — plus the
+//! replayable choice-index list; `stashcache check --scenario NAME
+//! --replay I,J,K` re-runs it step by step.
+//!
+//! [`SessionEngine::mc_choices`]: crate::federation::driver::SessionEngine::mc_choices
+//! [`SessionEngine::mc_fire`]: crate::federation::driver::SessionEngine::mc_fire
+
+pub mod explore;
+pub mod scenario;
+pub mod snapshot;
+
+pub use explore::{check_scenario, replay_trace, CheckReport, Violation};
+pub use scenario::{builtin_scenarios, Scenario};

@@ -1,0 +1,142 @@
+//! Built-in small-scope scenarios: the hit/miss/join × cache-death ×
+//! link-cut family.
+//!
+//! Each scenario is a deterministic *builder* for a tiny run on the
+//! paper federation: 2–3 sessions, one victim cache, a fault pair. The
+//! explorer rebuilds the scenario from scratch for every choice-prefix
+//! replay, so builders must be pure functions of nothing — the
+//! federation seed is fixed and no background flows are started (every
+//! network flow then belongs to a session, so the enabled-event set is
+//! exactly the protocol's own events).
+
+use crate::config::defaults::paper_federation;
+use crate::fault::{FaultKind, FaultTimeline};
+use crate::federation::driver::SessionEngine;
+use crate::federation::{DownloadMethod, FedSim};
+use crate::sim::workload::FileRef;
+use crate::util::{ByteSize, SimTime};
+
+/// A named model-checking scenario.
+pub struct Scenario {
+    pub name: &'static str,
+    pub summary: &'static str,
+    build: fn() -> (FedSim, SessionEngine),
+}
+
+impl Scenario {
+    /// Materialise a fresh copy of the initial state (federation with
+    /// faults scheduled + engine with sessions spawned).
+    pub fn build(&self) -> (FedSim, SessionEngine) {
+        (self.build)()
+    }
+}
+
+/// The built-in scenario family. Every entry is exhaustively explored
+/// by `stashcache check` and the `model_check` integration test.
+pub fn builtin_scenarios() -> &'static [Scenario] {
+    &[
+        Scenario {
+            name: "join-cache-death",
+            summary: "3 sessions coalesce on one file at one cache; the cache \
+                      dies and recovers mid-protocol (JoinWait wake/abort paths)",
+            build: build_join_cache_death,
+        },
+        Scenario {
+            name: "miss-failover",
+            summary: "2 cold-miss sessions; their cache dies with no recovery \
+                      (failover + reservation-abort paths)",
+            build: build_miss_failover,
+        },
+        Scenario {
+            name: "hit-link-cut",
+            summary: "2 warmed-hit sessions behind a thin WAN; the link is cut \
+                      and healed (serve-abort, direct-fallback, retry-poll paths)",
+            build: build_hit_link_cut,
+        },
+    ]
+}
+
+fn file(path: &str, bytes: u64) -> FileRef {
+    FileRef {
+        path: path.into(),
+        size: ByteSize(bytes),
+        version: 1,
+    }
+}
+
+fn fed() -> FedSim {
+    FedSim::build(paper_federation())
+}
+
+fn secs(s: f64) -> SimTime {
+    SimTime::from_secs_f64(s)
+}
+
+/// Three sessions race for the same cold file at Syracuse's local
+/// cache; the cache dies and later recovers. Depending on the
+/// interleaving the fault lands before the first plan, between plan
+/// and fetch start, mid-fetch (aborting the owner and waking joiners),
+/// or after the commit — every JoinWait entry/exit path is reachable.
+fn build_join_cache_death() -> (FedSim, SessionEngine) {
+    let mut fed = fed();
+    let site = fed.topo.site_index("syracuse").expect("paper site");
+    let mut faults = FaultTimeline::new();
+    faults.push(secs(1.0), FaultKind::CacheDown { site });
+    faults.push(secs(2.0), FaultKind::CacheUp { site });
+    fed.inject_faults(&faults);
+
+    let mut engine = SessionEngine::new(fed.now);
+    let f = file("/ospool/des/data/mc-join.dat", 512 * 1024 * 1024);
+    for _ in 0..3 {
+        engine.spawn_at(&mut fed, fed.now, site, f.clone(), DownloadMethod::Stash);
+    }
+    (fed, engine)
+}
+
+/// Two sessions cold-miss different files at the same cache; the cache
+/// dies and never recovers. Both must fail over to the next-nearest
+/// cache (or direct-origin) on every interleaving, and the dead
+/// cache's reservations must drain.
+fn build_miss_failover() -> (FedSim, SessionEngine) {
+    let mut fed = fed();
+    let site = fed.topo.site_index("syracuse").expect("paper site");
+    let mut faults = FaultTimeline::new();
+    faults.push(secs(1.0), FaultKind::CacheDown { site });
+    fed.inject_faults(&faults);
+
+    let mut engine = SessionEngine::new(fed.now);
+    let fa = file("/ospool/des/data/mc-miss-a.dat", 256 * 1024 * 1024);
+    let fb = file("/ospool/des/data/mc-miss-b.dat", 128 * 1024 * 1024);
+    engine.spawn_at(&mut fed, fed.now, site, fa, DownloadMethod::Stash);
+    engine.spawn_at(&mut fed, fed.now, site, fb, DownloadMethod::Stash);
+    (fed, engine)
+}
+
+/// Two sessions read a file already fully resident at Bellarmine's
+/// nearest cache (pre-warmed by a serial download), then Bellarmine's
+/// WAN link is cut and healed. The serve path crosses that link, so
+/// interleavings cover clean hits, mid-serve aborts, failovers whose
+/// alternative caches are equally unreachable, the direct-origin
+/// fallback, and its `DIRECT_RETRY_BACKOFF` poll loop until the heal.
+fn build_hit_link_cut() -> (FedSim, SessionEngine) {
+    let mut fed = fed();
+    let site = fed.topo.site_index("bellarmine").expect("paper site");
+    let f = file("/ospool/des/data/mc-hit.dat", 64 * 1024 * 1024);
+    // Pre-warm: one serial download makes the file wholly resident at
+    // the nearest cache, so the checked sessions start from a hit.
+    let warm = fed.download(site, &f, DownloadMethod::Stash);
+    assert_eq!(warm.bytes, f.size.as_u64());
+
+    let wan = fed.topo.wan_link(site);
+    let mut faults = FaultTimeline::new();
+    // Past-dated instants (the warm-up advanced the clock) are fine:
+    // the checker clamps every firing to the clocks already reached.
+    faults.push(secs(1.0), FaultKind::LinkCut { link: wan });
+    faults.push(secs(2.0), FaultKind::LinkRestored { link: wan });
+    fed.inject_faults(&faults);
+
+    let mut engine = SessionEngine::new(fed.now);
+    engine.spawn_at(&mut fed, fed.now, site, f.clone(), DownloadMethod::Stash);
+    engine.spawn_at(&mut fed, fed.now, site, f, DownloadMethod::Stash);
+    (fed, engine)
+}

@@ -1,0 +1,158 @@
+//! Canonical, time-free state hashing for the explorer's visited set.
+//!
+//! Two states hash equal iff the protocol cannot tell them apart: the
+//! snapshot covers session phases (with transfer kind), cache
+//! assignment, retry/failover/join counters (capped — a retry loop
+//! past the cap is behaviourally a self-loop), exclusion sets, waiter
+//! lists, per-cache in-flight session counts, per-cache residency and
+//! reservation state, link up/down state, which caches are down, and
+//! the length of the remaining fault schedule (the schedule itself is
+//! fixed per scenario, so its suffix is determined by its length).
+//! Clocks, sequence numbers, and monitoring/RNG state are deliberately
+//! excluded: under the checker's time abstraction they never influence
+//! which events are enabled or what firing them does.
+
+use crate::federation::driver::SessionEngine;
+use crate::federation::session::{Phase, Xfer};
+use crate::federation::FedSim;
+use crate::netsim::LinkId;
+
+/// FNV-1a, 64-bit — tiny, dependency-free, and stable across runs
+/// (unlike `DefaultHasher`, which is randomly seeded per process).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        for &b in s.as_bytes() {
+            self.byte(b);
+        }
+    }
+}
+
+/// Counters above this cap hash alike: a session polling its Nth retry
+/// behaves exactly like its (N+1)th, so folding them into one state
+/// turns unbounded retry loops into self-loop edges the search can
+/// close over.
+const COUNTER_CAP: u32 = 9;
+
+fn phase_code(p: Phase) -> u64 {
+    match p {
+        Phase::Pending => 0,
+        Phase::GeoResolve => 1,
+        Phase::CacheCheck => 2,
+        Phase::FetchBegin => 3,
+        Phase::JoinWait => 4,
+        Phase::ProxyLookup => 5,
+        Phase::ProxyConnect => 6,
+        Phase::DirectConnect => 7,
+        Phase::DirectFetch => 8,
+        Phase::Transfer(Xfer::StashServe) => 9,
+        Phase::Transfer(Xfer::StashFetch) => 10,
+        Phase::Transfer(Xfer::ProxyRelay) => 11,
+        Phase::Transfer(Xfer::DirectOrigin) => 12,
+        Phase::Done => 13,
+    }
+}
+
+/// Hash the protocol-relevant state of `(fed, engine)`.
+pub fn state_hash(fed: &FedSim, engine: &SessionEngine) -> u64 {
+    let mut h = Fnv::new();
+
+    // Sessions, in id order.
+    h.u64(engine.sessions().len() as u64);
+    for s in engine.sessions() {
+        h.u64(phase_code(s.phase));
+        h.u64(s.cache_site.map_or(0, |c| c as u64 + 1));
+        h.u64(s.retries.min(COUNTER_CAP) as u64);
+        h.u64(s.failovers.min(COUNTER_CAP) as u64);
+        h.u64(s.joins.min(COUNTER_CAP) as u64);
+        let mut excluded = s.excluded_caches.clone();
+        excluded.sort_unstable();
+        h.u64(excluded.len() as u64);
+        for e in excluded {
+            h.u64(e as u64);
+        }
+        h.u64(s.direct as u64);
+        h.u64(s.flow.is_some() as u64);
+        match &s.waiting_on {
+            Some((site, path)) => {
+                h.u64(*site as u64 + 1);
+                h.str(path);
+            }
+            None => h.u64(0),
+        }
+        h.u64(s.record.is_some() as u64);
+    }
+
+    // Waiter lists, key-sorted.
+    let mut waiter_keys: Vec<&(usize, String)> = engine.waiters().keys().collect();
+    waiter_keys.sort();
+    h.u64(waiter_keys.len() as u64);
+    for key in waiter_keys {
+        h.u64(key.0 as u64);
+        h.str(&key.1);
+        for id in &engine.waiters()[key] {
+            h.u64(id.0);
+        }
+    }
+
+    // Per-cache in-flight session counts (zero entries are identical
+    // to absent ones — a drained slot must not split states).
+    let mut in_flight: Vec<(usize, u64)> = engine
+        .cache_in_flight()
+        .iter()
+        .filter(|&(_, &n)| n > 0)
+        .map(|(&s, &n)| (s, n))
+        .collect();
+    in_flight.sort_unstable();
+    h.u64(in_flight.len() as u64);
+    for (site, n) in in_flight {
+        h.u64(site as u64);
+        h.u64(n);
+    }
+
+    // Cache content: usage, residency, reservations — site-sorted.
+    let mut cache_sites: Vec<usize> = fed.caches.keys().copied().collect();
+    cache_sites.sort_unstable();
+    for site in cache_sites {
+        let cache = &fed.caches[&site];
+        h.u64(site as u64);
+        h.u64(cache.usage().as_u64());
+        for (path, bytes) in cache.residency_snapshot() {
+            h.str(&path);
+            h.u64(bytes);
+        }
+        for (path, pins, chunks) in cache.reservation_snapshot() {
+            h.str(&path);
+            h.u64(pins as u64);
+            for c in chunks {
+                h.u64(c);
+            }
+        }
+        h.u64(fed.faults.is_cache_down(site) as u64);
+    }
+
+    // Link up/down bitmap and the remaining fault schedule length.
+    for i in 0..fed.net.link_count() {
+        h.byte(fed.net.link_is_up(LinkId(i as u32)) as u8);
+    }
+    h.u64(fed.pending_faults() as u64);
+    h.u64(engine.outstanding() as u64);
+
+    h.0
+}

@@ -122,6 +122,58 @@ impl<E> EventQueue<E> {
         out.into_iter().map(|e| (e.time, e.seq, e.event)).collect()
     }
 
+    /// Every pending entry as `(time, seq, event)` in `(time, seq)`
+    /// order, without disturbing the queue. The model checker
+    /// enumerates these as its "enabled timer" choices; the `(time,
+    /// seq)` key is stable across replays and addresses the entry for
+    /// [`take`](Self::take).
+    pub(crate) fn pending_entries(&self) -> Vec<(SimTime, u64, E)>
+    where
+        E: Clone,
+    {
+        let mut out: Vec<(SimTime, u64, E)> = self
+            .heap
+            .iter()
+            .map(|e| (e.time, e.seq, e.event.clone()))
+            .collect();
+        out.sort_by_key(|&(t, s, _)| (t, s));
+        out
+    }
+
+    /// Remove the pending entry scheduled with key `(at, seq)` without
+    /// advancing the clock. The model checker fires events out of time
+    /// order, so the caller advances the clock explicitly with
+    /// [`force_advance`](Self::force_advance). Returns `None` if no
+    /// such entry is pending.
+    pub(crate) fn take(&mut self, at: SimTime, seq: u64) -> Option<E> {
+        let entries: Vec<Entry<E>> = self.heap.drain().collect();
+        let mut found = None;
+        let mut rest = Vec::with_capacity(entries.len());
+        for e in entries {
+            if found.is_none() && e.time == at && e.seq == seq {
+                found = Some(e.event);
+            } else {
+                rest.push(e);
+            }
+        }
+        self.heap = rest.into_iter().collect();
+        if found.is_some() {
+            self.popped += 1;
+        }
+        found
+    }
+
+    /// Advance the clock to `t`, even past pending entries. This is the
+    /// model checker's time abstraction: a chosen event fires at the
+    /// max of its own scheduled time and the current clocks, so entries
+    /// that were *not* chosen may become past-dated — they later fire
+    /// at whatever the clock has reached. Only backwards movement is an
+    /// error.
+    pub(crate) fn force_advance(&mut self, t: SimTime) {
+        assert!(t >= self.now, "clock cannot move backwards");
+        self.now = t;
+    }
+
     /// Advance the clock without an event (e.g. synchronizing with an
     /// external completion source). Panics on backwards movement.
     pub fn advance_to(&mut self, t: SimTime) {
@@ -193,5 +245,42 @@ mod tests {
         let mut q: EventQueue<()> = EventQueue::new();
         q.advance_to(SimTime(42));
         assert_eq!(q.now(), SimTime(42));
+    }
+
+    #[test]
+    fn take_removes_one_entry_without_moving_clock() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(10), "a"); // seq 0
+        q.schedule_at(SimTime(20), "b"); // seq 1
+        q.schedule_at(SimTime(20), "c"); // seq 2
+        let pending = q.pending_entries();
+        assert_eq!(
+            pending,
+            vec![
+                (SimTime(10), 0, "a"),
+                (SimTime(20), 1, "b"),
+                (SimTime(20), 2, "c"),
+            ]
+        );
+        // Take the middle entry out of order: clock stays put, the
+        // other two survive in order.
+        assert_eq!(q.take(SimTime(20), 1), Some("b"));
+        assert_eq!(q.take(SimTime(20), 1), None);
+        assert_eq!(q.now(), SimTime::ZERO);
+        assert_eq!(q.events_processed(), 1);
+        assert_eq!(
+            q.pending_entries(),
+            vec![(SimTime(10), 0, "a"), (SimTime(20), 2, "c")]
+        );
+    }
+
+    #[test]
+    fn force_advance_skips_pending_entries() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(10), "late");
+        q.force_advance(SimTime(50));
+        assert_eq!(q.now(), SimTime(50));
+        // The past-dated entry is still addressable by its key.
+        assert_eq!(q.take(SimTime(10), 0), Some("late"));
     }
 }

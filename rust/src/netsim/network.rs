@@ -400,6 +400,25 @@ impl Network {
         Some(self.remaining_now(&f).ceil() as u64)
     }
 
+    /// Declare a flow complete *now*, regardless of its remaining
+    /// bytes. This is the model checker's time abstraction: it explores
+    /// event *orderings*, not durations, so a chosen completion fires
+    /// at the current clock instead of waiting out the transfer.
+    /// Survivors re-allocate exactly as if the flow had finished on its
+    /// own (detaching marks the component dirty, so any stale
+    /// completion-heap entry is rebuilt before the next regular
+    /// advance). Returns `None` for unknown or stale handles.
+    pub(crate) fn force_complete(&mut self, flow: FlowId, now: SimTime) -> Option<Completion> {
+        self.settle(now);
+        self.flow(flow)?;
+        let f = self.detach(flow.slot());
+        Some(Completion {
+            flow,
+            at: now,
+            started: f.started,
+        })
+    }
+
     /// Sever a link (failure injection): every flow crossing it is
     /// killed and returned (with its remaining bytes, in start order),
     /// surviving flows are re-allocated max-min fairly, and new flows

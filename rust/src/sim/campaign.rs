@@ -304,12 +304,19 @@ pub fn run_on_with_faults_threads(
     let log_start = fed.fault_log.len();
     let mut cache_sites: Vec<usize> = fed.caches.keys().copied().collect();
     cache_sites.sort_unstable();
-    let before: Vec<(u32, Duration)> = cache_sites
+    let before: Vec<(u32, Duration, bool)> = cache_sites
         .iter()
         .map(|&site| {
             (
                 fed.faults.outages_of(site),
                 fed.faults.downtime_of(site, start),
+                // An outage still open at `start` — a kill with no
+                // recovery event in an earlier run on this federation —
+                // keeps accruing downtime into this window, but its
+                // `outages_of` increment happened back when the cache
+                // went down. Without counting it here, a reused
+                // federation reports downtime > 0 with "0 outages".
+                fed.faults.is_cache_down(site),
             )
         })
         .collect();
@@ -318,9 +325,9 @@ pub fn run_on_with_faults_threads(
     let caches = cache_sites
         .iter()
         .zip(&before)
-        .map(|(&site, &(outages0, downtime0))| CacheAvailability {
+        .map(|(&site, &(outages0, downtime0, open_at_start))| CacheAvailability {
             site: fed.topo.site_name(site).to_string(),
-            outages: fed.faults.outages_of(site) - outages0,
+            outages: fed.faults.outages_of(site) - outages0 + u32::from(open_at_start),
             downtime: Duration(
                 fed.faults
                     .downtime_of(site, fed.now)
