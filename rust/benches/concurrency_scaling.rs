@@ -23,6 +23,11 @@
 //!    bit-identical to serial; the JSON carries the speedup/efficiency
 //!    curve, and 4 threads must be ≥2× serial on the 16384 tier
 //!    (skipped on hosts with fewer than 4 cores).
+//! 4. **Telemetry overhead** — the warmed 1024-session tier run twice
+//!    from identical rebuilt state, telemetry off vs on (full registry
+//!    plus a 100-deep trace ring). The on-leg must hold ≥285k
+//!    session-events/sec (95% of the 300k floor) and its record
+//!    digests must equal the off-leg's byte-for-byte.
 //!
 //! Emits `BENCH_concurrency.json` at the repository root for the perf
 //! trajectory.
@@ -149,6 +154,8 @@ fn cache_site_names(fed: &FedSim) -> Vec<String> {
 
 /// Warmed-tier campaign: `jobs` Poisson arrivals inside `window`
 /// seconds, Zipf-popular files from a 32-file catalog, no background.
+/// Telemetry is off so the throughput tiers keep measuring the bare
+/// engine; the dedicated overhead section turns it back on.
 fn warm_cfg(sites: Vec<String>, jobs: usize, window: f64, seed: u64) -> CampaignConfig {
     CampaignConfig {
         sites,
@@ -158,8 +165,33 @@ fn warm_cfg(sites: Vec<String>, jobs: usize, window: f64, seed: u64) -> Campaign
         zipf_s: 1.1,
         background_flows: 0,
         seed,
+        telemetry: false,
         ..CampaignConfig::default()
     }
+}
+
+/// One telemetry-overhead leg: `reps` warmed 1024-session campaigns,
+/// each on a freshly rebuilt + rewarmed federation (identical start
+/// state per leg), telemetry off or on (with a 100-deep trace ring).
+/// Returns the aggregate event rate and the per-rep record digests.
+fn telemetry_leg(telemetry: bool, reps: usize) -> (f64, Vec<u64>) {
+    let mut events = 0u64;
+    let mut wall = 0.0f64;
+    let mut digests = Vec::with_capacity(reps);
+    for rep in 0..reps {
+        let (mut fed, sites) = warmed_fed(false);
+        let ccfg = CampaignConfig {
+            telemetry,
+            trace: if telemetry { 100 } else { 0 },
+            ..warm_cfg(sites, 1024, 60.0, (100 + rep) as u64)
+        };
+        let start = Instant::now();
+        let r = campaign::run_on(&mut fed, &ccfg);
+        wall += start.elapsed().as_secs_f64();
+        events += r.events_processed;
+        digests.push(records_digest(&r.records));
+    }
+    (events as f64 / wall.max(1e-9), digests)
 }
 
 fn main() {
@@ -347,6 +379,30 @@ fn main() {
         });
     }
 
+    // --- telemetry overhead on the warmed 1024-session tier --------------
+    // Same shape as the ≥300k gate tier, but rebuilt per rep so the
+    // off- and on-legs start from identical state. Telemetry must stay
+    // off the bit-identity surface (digest-equal legs) and cost less
+    // than 5% of the throughput floor.
+    println!("\n== telemetry overhead (warmed 1024-session tier) ==");
+    let telem_reps = 8usize;
+    let (rate_off, digests_off) = telemetry_leg(false, telem_reps);
+    let (rate_on, digests_on) = telemetry_leg(true, telem_reps);
+    let overhead_pct = 100.0 * (1.0 - rate_on / rate_off.max(1e-9));
+    println!(
+        "telemetry off: {rate_off:.0} evt/s | on (+100-trace ring): {rate_on:.0} evt/s \
+         | overhead {overhead_pct:.1}%"
+    );
+    shape.check(
+        digests_on == digests_off,
+        "telemetry on/off legs are record-digest identical",
+    );
+    shape.check(
+        rate_on >= 285_000.0,
+        "telemetry-on warmed 1024 tier sustains ≥285k session-events/sec \
+         (95% of the 300k floor)",
+    );
+
     // --- sharded engine: thread-scaling matrix ---------------------------
     // Two tiers, each run at 1/2/4/8 threads on a freshly rebuilt and
     // rewarmed federation (identical start state per thread count):
@@ -490,7 +546,12 @@ fn main() {
         );
         json.push_str(if i + 1 < warm_rows.len() { ",\n" } else { "\n" });
     }
-    let _ = write!(json, "  ],\n  \"host_parallelism\": {hw},\n  \"threaded\": [\n");
+    let _ = write!(
+        json,
+        "  ],\n  \"telemetry_overhead\": {{\"events_per_sec_off\": {rate_off:.0}, \
+         \"events_per_sec_on\": {rate_on:.0}, \"overhead_pct\": {overhead_pct:.2}}},\n  \
+         \"host_parallelism\": {hw},\n  \"threaded\": [\n"
+    );
     for (i, t) in thread_rows.iter().enumerate() {
         let _ = write!(
             json,

@@ -10,6 +10,7 @@ use stashcache::report::{self, paper};
 use stashcache::sim::campaign::{self, CampaignConfig, CampaignResults};
 use stashcache::sim::scenario::{self, ScenarioConfig};
 use stashcache::sim::usage::UsageConfig;
+use stashcache::telemetry::{MetricsRegistry, TelemetrySnapshot};
 use stashcache::util::SimTime;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -140,14 +141,19 @@ pub fn usage() -> String {
                 [--catalog N] [--method stash|http] [--seed S]\n\
                 [--experiment NAME] [--background N] [--profile]\n\
                 [--policy nearest|least-loaded|consistent-hash|tiered]\n\
-                [--threads N]\n\
+                [--threads N] [--metrics-out PATH] [--trace N]\n\
                                         run N concurrent Poisson/Zipf jobs through\n\
                                         the session engine (coalescing, contention);\n\
                                         --policy picks the cache-selection rule;\n\
                                         --threads shards the engine across cores,\n\
                                         bit-identical to serial (default 1);\n\
-                                        --profile prints allocator counters\n\
-       chaos    [campaign flags] [--kill-cache SITE [--down-at S] [--up-at S]]\n\
+                                        --profile prints allocator + monitoring\n\
+                                        counters; --metrics-out writes metrics PATH\n\
+                                        (JSON) + PATH.prom (Prometheus exposition);\n\
+                                        --trace N dumps the last N sessions' phase\n\
+                                        spans as JSONL next to the metrics\n\
+       chaos    [campaign flags incl. --metrics-out/--trace]\n\
+                [--kill-cache SITE [--down-at S] [--up-at S]]\n\
                 [--cut-wan SITE [--cut-at S] [--heal-at S]]\n\
                 [--degrade-origin N [--factor F] [--degrade-at S] [--restore-at S]]\n\
                 [--kill-redirector N [--redir-down-at S] [--redir-up-at S]]\n\
@@ -164,6 +170,7 @@ pub fn usage() -> String {
        sweep    [--preset smoke|proxy-vs-stash|policy] [--grid PATH.toml]\n\
                 [--threads N] [--reps N] [--seed S] [--out-dir DIR]\n\
                 [--policy NAME | --policies a,b,c] [--profile]\n\
+                [--metrics-out PATH]\n\
                                         run a deterministic parameter grid in\n\
                                         parallel; writes BENCH_sweep.json, CSVs and\n\
                                         the proxy-vs-StashCache frontier report;\n\
@@ -297,6 +304,7 @@ fn parse_campaign(flags: &Flags, cfg: &FederationConfig) -> Result<CampaignConfi
     ccfg.catalog_files = flags.get_usize("catalog", ccfg.catalog_files as usize)? as u64;
     ccfg.background_flows = flags.get_usize("background", ccfg.background_flows)?;
     ccfg.seed = flags.get_usize("seed", ccfg.seed as usize)? as u64;
+    ccfg.trace = flags.get_usize("trace", ccfg.trace)?;
     if let Some(exp) = flags.get("experiment") {
         ccfg.experiment = exp.to_string();
     }
@@ -328,6 +336,56 @@ fn allocator_profile_line(
         "allocator: {passes} passes | {components} components touched | \
          {refixed} flows re-fixed ({per_event:.2} per event) | peak component {peak} flows"
     )
+}
+
+/// `--profile`: one monitoring-pipeline line next to the allocator
+/// counters — collector join health and bus queue state, read back
+/// from the telemetry registry.
+fn print_monitoring_profile(reg: &MetricsRegistry) {
+    println!(
+        "monitoring: {} packets → {} reports | {} orphan closes | {} expired | \
+         bus: {} published, {} compacted, depth {}",
+        reg.counter_value("stashcache_collector_packets_total"),
+        reg.counter_value("stashcache_collector_reports_published_total"),
+        reg.counter_value("stashcache_collector_orphan_closes_total"),
+        reg.counter_value("stashcache_collector_expired_entries_total"),
+        reg.counter_value("stashcache_bus_published_total"),
+        reg.counter_value("stashcache_bus_compacted_total"),
+        reg.gauge_value("stashcache_bus_queue_depth").unwrap_or(0.0) as u64,
+    );
+}
+
+/// `--metrics-out PATH` / `--trace N` export: `PATH` gets the
+/// metrics JSON, `PATH.prom` the Prometheus-style exposition, and
+/// `PATH.trace.jsonl` (or `trace.jsonl` without `--metrics-out`) the
+/// span traces when any were kept. Shared by campaign/chaos/sweep.
+fn write_telemetry_outputs(flags: &Flags, snap: &TelemetrySnapshot) -> Result<()> {
+    let mut written: Vec<PathBuf> = Vec::new();
+    if let Some(path) = flags.get("metrics-out") {
+        let json_path = PathBuf::from(path);
+        std::fs::write(&json_path, snap.to_json_string())
+            .with_context(|| format!("writing metrics {json_path:?}"))?;
+        let prom_path = json_path.with_extension("prom");
+        std::fs::write(&prom_path, snap.exposition())
+            .with_context(|| format!("writing exposition {prom_path:?}"))?;
+        written.push(json_path.clone());
+        written.push(prom_path);
+        if !snap.traces.is_empty() {
+            let trace_path = json_path.with_extension("trace.jsonl");
+            std::fs::write(&trace_path, snap.trace_jsonl())
+                .with_context(|| format!("writing trace {trace_path:?}"))?;
+            written.push(trace_path);
+        }
+    } else if !snap.traces.is_empty() {
+        let trace_path = PathBuf::from("trace.jsonl");
+        std::fs::write(&trace_path, snap.trace_jsonl())
+            .with_context(|| format!("writing trace {trace_path:?}"))?;
+        written.push(trace_path);
+    }
+    for p in written {
+        println!("wrote {}", p.display());
+    }
+    Ok(())
 }
 
 fn print_allocator_profile(results: &CampaignResults) {
@@ -404,9 +462,12 @@ fn cmd_campaign(flags: &Flags) -> Result<()> {
     let wall_start = std::time::Instant::now();
     let results = campaign::run_threads(cfg, &ccfg, threads);
     print_campaign(&ccfg, &results, wall_start.elapsed().as_secs_f64());
+    println!("{}", paper::phase_latency_table(&results.telemetry).render());
     if flags.has("profile") {
         print_allocator_profile(&results);
+        print_monitoring_profile(&results.telemetry.registry);
     }
+    write_telemetry_outputs(flags, &results.telemetry)?;
     Ok(())
 }
 
@@ -522,9 +583,15 @@ fn cmd_chaos(flags: &Flags) -> Result<()> {
     let wall_start = std::time::Instant::now();
     let results = campaign::run_on_with_faults_threads(&mut fed, &ccfg, &faults, threads);
     print_campaign(&ccfg, &results.campaign, wall_start.elapsed().as_secs_f64());
+    println!(
+        "{}",
+        paper::phase_latency_table(&results.campaign.telemetry).render()
+    );
     if flags.has("profile") {
         print_allocator_profile(&results.campaign);
+        print_monitoring_profile(&results.campaign.telemetry.registry);
     }
+    write_telemetry_outputs(flags, &results.campaign.telemetry)?;
     println!("\nfault log:");
     for ev in &results.fault_log {
         println!("  {} {:?}", ev.at, ev.kind);
@@ -764,6 +831,14 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
             .unwrap_or(0);
         println!("{}", allocator_profile_line(passes, comps, refixed, events, peak));
     }
+
+    // Merge every trial's telemetry (counters add, sketches merge) in
+    // grid order, so the sweep's export covers the whole grid.
+    let mut merged = TelemetrySnapshot::default();
+    for t in &results.trials {
+        merged.merge(&t.telemetry);
+    }
+    write_telemetry_outputs(flags, &merged)?;
 
     let out_dir = PathBuf::from(flags.get("out-dir").unwrap_or("."));
     let written = experiment::artifact::write_all(&out_dir, &results)?;

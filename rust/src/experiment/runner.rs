@@ -121,6 +121,7 @@ pub fn execute_trial(
         background_flows: grid.background_flows,
         method: spec.cell.method,
         seed: spec.seed,
+        ..CampaignConfig::default()
     };
 
     let window = spec.cell.arrival_window_secs;

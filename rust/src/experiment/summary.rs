@@ -14,6 +14,7 @@ use super::grid::{CellKey, GridSpec, TrialSpec};
 use crate::client::Method;
 use crate::federation::FedSim;
 use crate::sim::campaign::{CampaignRecord, CampaignResults};
+use crate::telemetry::TelemetrySnapshot;
 use crate::util::stats;
 
 /// Measured metrics of one finished trial.
@@ -49,6 +50,9 @@ pub struct TrialOutcome {
     /// methods, hit flags, durations) — two runs agree on this iff
     /// they produced identical records in identical order.
     pub records_digest: u64,
+    /// The trial's telemetry export bundle (sweeps merge these across
+    /// trials for `--metrics-out`).
+    pub telemetry: TelemetrySnapshot,
 }
 
 fn method_tag(method: Method) -> u64 {
@@ -122,6 +126,7 @@ pub fn outcome_of(spec: &TrialSpec, results: &CampaignResults, fed: &FedSim) -> 
         flows_refixed: results.engine.flows_refixed,
         peak_component: results.engine.peak_component,
         records_digest: digest_records(&results.records),
+        telemetry: results.telemetry.clone(),
     }
 }
 

@@ -52,6 +52,7 @@ use crate::fault::{DIRECT_RETRY_BACKOFF, FaultEvent, FaultKind, MAX_FAILOVER_RET
 use crate::monitoring::packets::Protocol;
 use crate::netsim::{Completion, Endpoint, EventQueue, FlowId, FlowSpec, LinkId, Network};
 use crate::sim::workload::FileRef;
+use crate::telemetry::{PhaseLabel, PhaseSpan, SpanTrace, Telemetry};
 use crate::util::stats::Welford;
 use crate::util::{Duration, SimTime};
 use std::collections::{HashMap, HashSet};
@@ -64,6 +65,26 @@ use super::{DownloadMethod, FedSim};
 /// severed link; the session retries or fails over instead.)
 fn route_is_up(fed: &FedSim, links: &[LinkId]) -> bool {
     links.iter().all(|&l| fed.net.link_is_up(l))
+}
+
+/// Telemetry label of a phase being exited. Pending (zero-length by
+/// construction: the arrival event fires at the instant the session
+/// entered it) and Done fold nothing; every Transfer variant folds
+/// into one Transfer histogram (the variant is visible in the record's
+/// method field already).
+fn phase_label(phase: Phase) -> Option<PhaseLabel> {
+    match phase {
+        Phase::Pending | Phase::Done => None,
+        Phase::GeoResolve => Some(PhaseLabel::GeoResolve),
+        Phase::CacheCheck => Some(PhaseLabel::CacheCheck),
+        Phase::JoinWait => Some(PhaseLabel::JoinWait),
+        Phase::FetchBegin => Some(PhaseLabel::FetchBegin),
+        Phase::Transfer(_) => Some(PhaseLabel::Transfer),
+        Phase::DirectConnect => Some(PhaseLabel::DirectConnect),
+        Phase::DirectFetch => Some(PhaseLabel::DirectFetch),
+        Phase::ProxyLookup => Some(PhaseLabel::ProxyLookup),
+        Phase::ProxyConnect => Some(PhaseLabel::ProxyConnect),
+    }
 }
 
 /// Events the engine schedules for itself.
@@ -163,6 +184,13 @@ pub struct SessionEngine {
     /// of the serial-vs-threaded bit-identity surface).
     pub epoch_durations: Welford,
     pub stats: EngineStats,
+    /// Always-on phase/rollup telemetry. Observation only: it never
+    /// touches the queue, the network, or the RNG, so records are
+    /// identical with it enabled or disabled — and unlike
+    /// `epoch_durations` its sketches *are* bit-identical across
+    /// thread counts (integer bucket counts, folded in the same
+    /// deterministic completion order the record stream uses).
+    pub tele: Telemetry,
 }
 
 impl SessionEngine {
@@ -182,7 +210,35 @@ impl SessionEngine {
             completed: Vec::new(),
             epoch_durations: Welford::new(),
             stats: EngineStats::default(),
+            tele: Telemetry::new(),
         }
+    }
+
+    /// Advance `s` to `next`, folding the time spent in the phase
+    /// being left into the telemetry histograms (and, under `--trace`,
+    /// the session's span list). An associated fn over disjoint
+    /// borrows so call sites holding `&mut self.sessions[i]` can pass
+    /// `&mut self.tele` alongside. Pending and Done fold nothing;
+    /// a pending failover re-route attributes the wait to Failover.
+    fn set_phase(tele: &mut Telemetry, s: &mut Session, now: SimTime, next: Phase) {
+        let label = if std::mem::take(&mut s.tele_failover) {
+            Some(PhaseLabel::Failover)
+        } else {
+            phase_label(s.phase)
+        };
+        if let Some(label) = label {
+            let dur = now - s.phase_entered_at;
+            tele.phase_span(label, dur);
+            if tele.trace_enabled() {
+                s.spans.push(PhaseSpan {
+                    label,
+                    start: s.phase_entered_at,
+                    dur,
+                });
+            }
+        }
+        s.phase = next;
+        s.phase_entered_at = now;
     }
 
     /// Current engine-queue clock (time of the last processed timer).
@@ -587,7 +643,11 @@ impl SessionEngine {
                 ),
             }
         };
-        self.sessions[id.0 as usize].phase = phase;
+        // The aborted phase folds under its own label first; the flag
+        // set afterwards attributes the upcoming retry wait (however
+        // the session leaves `phase`) to Failover.
+        Self::set_phase(&mut self.tele, &mut self.sessions[id.0 as usize], t, phase);
+        self.sessions[id.0 as usize].tele_failover = true;
         if give_up {
             self.mark_direct(id);
         }
@@ -601,7 +661,7 @@ impl SessionEngine {
     fn enter_direct_fallback(&mut self, fed: &FedSim, id: SessionId, t: SimTime) {
         let attempt = {
             let s = &mut self.sessions[id.0 as usize];
-            s.phase = Phase::DirectConnect;
+            Self::set_phase(&mut self.tele, s, t, Phase::DirectConnect);
             s.retries.min(8) as usize
         };
         self.mark_direct(id);
@@ -646,7 +706,7 @@ impl SessionEngine {
                 let delay = fed.startup_costs.curl_startup;
                 let s = &mut self.sessions[id.0 as usize];
                 s.url = curl::url_for(&s.file.path);
-                s.phase = Phase::ProxyLookup;
+                Self::set_phase(&mut self.tele, s, t, Phase::ProxyLookup);
                 self.queue.schedule_at(t + delay, EngineEvent::Timer(id));
             }
             DownloadMethod::Stash => {
@@ -661,7 +721,7 @@ impl SessionEngine {
                 let delay = stashcp::startup_latency(&fed.startup_costs, transport, attempt);
                 let s = &mut self.sessions[id.0 as usize];
                 s.transport = transport;
-                s.phase = Phase::GeoResolve;
+                Self::set_phase(&mut self.tele, s, t, Phase::GeoResolve);
                 self.queue.schedule_at(t + delay, EngineEvent::Timer(id));
             }
         }
@@ -703,7 +763,7 @@ impl SessionEngine {
             .route(Endpoint::Cache(cache_site), Endpoint::Worker(site_idx));
         let s = &mut self.sessions[id.0 as usize];
         s.cache_site = Some(cache_site);
-        s.phase = Phase::CacheCheck;
+        Self::set_phase(&mut self.tele, s, t, Phase::CacheCheck);
         self.queue.schedule_at(
             t + Duration::from_secs_f64(route.rtt_ms / 1e3),
             EngineEvent::Timer(id),
@@ -766,7 +826,7 @@ impl SessionEngine {
             self.flow_owner.insert(flow, id);
             let s = &mut self.sessions[id.0 as usize];
             s.flow = Some(flow);
-            s.phase = Phase::Transfer(Xfer::StashServe);
+            Self::set_phase(&mut self.tele, s, t, Phase::Transfer(Xfer::StashServe));
         } else if plan.fetch.is_empty() {
             // Every missing chunk is already on its way for another
             // session: join that fetch instead of duplicating it.
@@ -775,7 +835,7 @@ impl SessionEngine {
                 self.stats.coalesced_joins += 1;
             }
             s.joins += 1;
-            s.phase = Phase::JoinWait;
+            Self::set_phase(&mut self.tele, s, t, Phase::JoinWait);
             s.waiting_on = Some((cache_site, path.clone()));
             self.waiters
                 .entry((cache_site, path))
@@ -809,7 +869,7 @@ impl SessionEngine {
                 .route(Endpoint::Origin(origin.0), Endpoint::Cache(cache_site));
             let s = &mut self.sessions[id.0 as usize];
             s.plan = Some(plan);
-            s.phase = Phase::FetchBegin;
+            Self::set_phase(&mut self.tele, s, t, Phase::FetchBegin);
             self.queue.schedule_at(
                 t + Duration::from_secs_f64(2.0 * origin_route.rtt_ms / 1e3),
                 EngineEvent::Timer(id),
@@ -858,7 +918,7 @@ impl SessionEngine {
         self.flow_owner.insert(flow, id);
         let s = &mut self.sessions[id.0 as usize];
         s.flow = Some(flow);
-        s.phase = Phase::Transfer(Xfer::StashFetch);
+        Self::set_phase(&mut self.tele, s, t, Phase::Transfer(Xfer::StashFetch));
     }
 
     /// A reserved (pinned) fetch cannot start: release the
@@ -921,7 +981,7 @@ impl SessionEngine {
         s.cacheable = cacheable;
         s.relay_links = links;
         s.relay_cap = relay_cap;
-        s.phase = Phase::ProxyConnect;
+        Self::set_phase(&mut self.tele, s, t, Phase::ProxyConnect);
         self.queue.schedule_at(
             t + Duration::from_secs_f64(rtt_ms / 1e3 * crate::sim::estimate::HANDSHAKE_ROUNDS),
             EngineEvent::Timer(id),
@@ -952,7 +1012,7 @@ impl SessionEngine {
         self.flow_owner.insert(flow, id);
         let s = &mut self.sessions[id.0 as usize];
         s.flow = Some(flow);
-        s.phase = Phase::Transfer(Xfer::ProxyRelay);
+        Self::set_phase(&mut self.tele, s, t, Phase::Transfer(Xfer::ProxyRelay));
     }
 
     /// (fallback) Connect straight to the origin. If the direct path
@@ -973,7 +1033,12 @@ impl SessionEngine {
                 .schedule_at(t + DIRECT_RETRY_BACKOFF, EngineEvent::Timer(id));
             return;
         }
-        self.sessions[id.0 as usize].phase = Phase::DirectFetch;
+        Self::set_phase(
+            &mut self.tele,
+            &mut self.sessions[id.0 as usize],
+            t,
+            Phase::DirectFetch,
+        );
         self.queue.schedule_at(
             t + Duration::from_secs_f64(2.0 * route.rtt_ms / 1e3),
             EngineEvent::Timer(id),
@@ -994,7 +1059,7 @@ impl SessionEngine {
             self.stats.retries += 1;
             let s = &mut self.sessions[id.0 as usize];
             s.retries += 1;
-            s.phase = Phase::DirectConnect;
+            Self::set_phase(&mut self.tele, s, t, Phase::DirectConnect);
             self.queue
                 .schedule_at(t + DIRECT_RETRY_BACKOFF, EngineEvent::Timer(id));
             return;
@@ -1010,7 +1075,7 @@ impl SessionEngine {
         self.flow_owner.insert(flow, id);
         let s = &mut self.sessions[id.0 as usize];
         s.flow = Some(flow);
-        s.phase = Phase::Transfer(Xfer::DirectOrigin);
+        Self::set_phase(&mut self.tele, s, t, Phase::Transfer(Xfer::DirectOrigin));
     }
 
     /// A session's flow finished at `t`: post-transfer bookkeeping,
@@ -1130,7 +1195,7 @@ impl SessionEngine {
                 "stale waiter: session {wid:?} still listed under ({cache_site}, {path})"
             );
             s.waiting_on = None;
-            s.phase = Phase::CacheCheck;
+            Self::set_phase(&mut self.tele, s, t, Phase::CacheCheck);
             self.queue.schedule_at(t, EngineEvent::Timer(wid));
         }
     }
@@ -1179,8 +1244,26 @@ impl SessionEngine {
             cache_hit,
             duration: t - s.arrival,
         });
-        s.phase = Phase::Done;
+        Self::set_phase(&mut self.tele, s, t, Phase::Done);
         s.flow = None;
+        let s = &mut self.sessions[id.0 as usize];
+        self.tele
+            .on_complete(t, s.cache_site, s.file.size.as_u64(), cache_hit);
+        if self.tele.trace_enabled() {
+            let spans = std::mem::take(&mut s.spans);
+            let trace = SpanTrace {
+                session: id.0,
+                site: s.site_idx,
+                path: s.file.path.clone(),
+                arrival: s.arrival,
+                completed: t,
+                bytes: s.file.size.as_u64(),
+                cache_site: s.cache_site,
+                hit: cache_hit,
+                spans,
+            };
+            self.tele.push_trace(trace);
+        }
         self.outstanding -= 1;
         self.in_flight -= 1;
         self.completed.push(id);
@@ -1544,6 +1627,40 @@ impl SessionEngine {
                 duration: d.tc - s.arrival,
             });
             s.phase = Phase::Done;
+            s.phase_entered_at = d.tc;
+            // Reconstruct the serial run's phase spans: a whole-hit
+            // epoch session transitions exactly Pending → GeoResolve
+            // (t0) → CacheCheck (t1) → Transfer (t2) → Done (tc), so
+            // the serial engine would have folded these three spans in
+            // this completion order. Telemetry stays bit-identical
+            // across thread counts because `all` is already sorted to
+            // serial order.
+            let spans = [
+                (PhaseLabel::GeoResolve, d.t0, d.t1 - d.t0),
+                (PhaseLabel::CacheCheck, d.t1, d.t2 - d.t1),
+                (PhaseLabel::Transfer, d.t2, d.tc - d.t2),
+            ];
+            for &(label, _, dur) in &spans {
+                self.tele.phase_span(label, dur);
+            }
+            self.tele
+                .on_complete(d.tc, Some(d.cache_site), s.file.size.as_u64(), true);
+            if self.tele.trace_enabled() {
+                self.tele.push_trace(SpanTrace {
+                    session: d.id.0,
+                    site: s.site_idx,
+                    path: s.file.path.clone(),
+                    arrival: s.arrival,
+                    completed: d.tc,
+                    bytes: s.file.size.as_u64(),
+                    cache_site: Some(d.cache_site),
+                    hit: true,
+                    spans: spans
+                        .iter()
+                        .map(|&(label, start, dur)| PhaseSpan { label, start, dur })
+                        .collect(),
+                });
+            }
             self.outstanding -= 1;
             self.completed.push(d.id);
             self.stats.sessions_completed += 1;

@@ -142,6 +142,18 @@ pub struct Session {
     pub(crate) relay_links: Vec<LinkId>,
     pub(crate) relay_cap: f64,
 
+    // --- telemetry (observation only — never read by the protocol) --------
+    /// When the current phase was entered; each transition folds
+    /// `now − phase_entered_at` into that phase's latency histogram.
+    pub(crate) phase_entered_at: SimTime,
+    /// Set by a failure re-route: the *next* wait this session sits
+    /// through (back in GeoResolve/ProxyLookup/DirectConnect) is
+    /// recovery cost and is attributed to the synthetic Failover
+    /// phase. Consumed by the first transition after the failure.
+    pub(crate) tele_failover: bool,
+    /// Full span list, kept only while `--trace` is active.
+    pub(crate) spans: Vec<crate::telemetry::PhaseSpan>,
+
     // --- result -----------------------------------------------------------
     pub(crate) flow: Option<FlowId>,
     pub record: Option<TransferRecord>,
@@ -181,6 +193,9 @@ impl Session {
             cacheable: false,
             relay_links: Vec::new(),
             relay_cap: 0.0,
+            phase_entered_at: arrival,
+            tele_failover: false,
+            spans: Vec::new(),
             flow: None,
             record: None,
         }

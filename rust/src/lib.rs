@@ -40,6 +40,10 @@
 //! live in [`sim`] and [`report`]. The [`experiment`] lab fans whole
 //! parameter grids of such runs out across OS threads —
 //! deterministically — and reports proxy-vs-StashCache frontiers.
+//! Runtime observability of all of the above — engine phase-span
+//! histograms, per-cache windowed rollups, Prometheus-style exposition
+//! — is the always-on [`telemetry`] layer, deliberately kept off the
+//! engine's bit-identity surface.
 //!
 //! Numeric hot-spots (GeoIP nearest-cache scoring, monitoring histogram
 //! aggregation, WAN transfer-time estimation) are AOT-compiled from
@@ -65,6 +69,7 @@ pub mod redirector;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 /// Library-wide result type.

@@ -25,6 +25,10 @@ struct Topic {
 pub struct Bus {
     topics: HashMap<String, Topic>,
     pub published: u64,
+    /// Lifetime total of messages dropped by [`Bus::compact`] —
+    /// individual compactions report their count to the caller, but
+    /// until telemetry nothing accumulated them.
+    pub compacted: u64,
 }
 
 /// A subscription handle: pull messages with
@@ -82,7 +86,14 @@ impl Bus {
         for c in &mut t.cursors {
             *c -= min_cursor;
         }
+        self.compacted += min_cursor as u64;
         min_cursor
+    }
+
+    /// Messages currently retained across every topic (the bus's
+    /// total queue depth, for the telemetry registry).
+    pub fn total_depth(&self) -> usize {
+        self.topics.values().map(|t| t.messages.len()).sum()
     }
 }
 
@@ -171,6 +182,9 @@ mod tests {
         slow.drain(&mut bus);
         assert_eq!(bus.compact("t"), 9);
         assert_eq!(bus.depth("t"), 0);
+        // The lifetime drop counter accumulated both compactions.
+        assert_eq!(bus.compacted, 10);
+        assert_eq!(bus.total_depth(), 0);
     }
 
     #[test]

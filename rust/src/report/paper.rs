@@ -288,6 +288,45 @@ pub fn availability_table(report: &AvailabilityReport) -> Table {
     t
 }
 
+/// Phase-latency table from a campaign's telemetry snapshot: where a
+/// download's wall time goes, phase by phase (the paper's "anatomy of
+/// a transfer" rendered from measured spans instead of prose).
+/// Quantiles come from the per-phase [`QuantileSketch`]s, so the table
+/// costs O(buckets) regardless of session count; `Share` is each
+/// phase's approximate total time over the sum across phases.
+///
+/// [`QuantileSketch`]: crate::util::stats::QuantileSketch
+pub fn phase_latency_table(snap: &crate::telemetry::TelemetrySnapshot) -> Table {
+    let mut t = Table::new(
+        "Phase latency (per-session spans, sketch quantiles)",
+        &[
+            "Phase", "Spans", "p50 ms", "p95 ms", "p99 ms", "Max ms", "~Total s", "Share",
+        ],
+    );
+    let grand_total: f64 = snap.phases.iter().map(|(_, sk)| sk.approx_sum()).sum();
+    for (name, sk) in &snap.phases {
+        if sk.is_empty() {
+            continue;
+        }
+        let total = sk.approx_sum();
+        t.row(vec![
+            (*name).to_string(),
+            sk.count().to_string(),
+            format!("{:.3}", sk.quantile(0.5) * 1e3),
+            format!("{:.3}", sk.quantile(0.95) * 1e3),
+            format!("{:.3}", sk.quantile(0.99) * 1e3),
+            format!("{:.3}", sk.max() * 1e3),
+            format!("{total:.3}"),
+            if grand_total > 0.0 {
+                format!("{:.1}%", total / grand_total * 100.0)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t
+}
+
 /// Figures 6/7: per-filesize download speeds at one site, four bars
 /// each (http cold/hot, stash cold/hot), Mbit/s, higher is better.
 pub fn fig_site_performance(results: &ScenarioResults, site: &str) -> (String, Table) {

@@ -32,6 +32,7 @@ use crate::federation::driver::{EngineStats, SessionEngine};
 use crate::federation::{DownloadMethod, FedSim};
 use crate::monitoring::availability::{AvailabilityReport, CacheAvailability};
 use crate::sim::workload::Catalog;
+use crate::telemetry::{MetricsRegistry, PhaseLabel, TelemetrySnapshot, TraceRow};
 use crate::util::{Duration, Pcg64, SimTime, Zipf};
 
 /// Campaign knobs.
@@ -59,6 +60,12 @@ pub struct CampaignConfig {
     pub method: DownloadMethod,
     /// Extra seed XORed with the federation seed.
     pub seed: u64,
+    /// Keep the last N completed sessions' full span traces
+    /// (`--trace N`; 0 = off).
+    pub trace: usize,
+    /// Master switch for the telemetry layer. Off skips every span
+    /// fold and rollup tick; records are bit-identical either way.
+    pub telemetry: bool,
 }
 
 impl Default for CampaignConfig {
@@ -74,6 +81,8 @@ impl Default for CampaignConfig {
             background_flows: 2,
             method: DownloadMethod::Stash,
             seed: 0,
+            trace: 0,
+            telemetry: true,
         }
     }
 }
@@ -103,6 +112,9 @@ pub struct CampaignResults {
     pub makespan: Duration,
     /// Full engine counters (failovers, retries, aborted bytes, …).
     pub engine: EngineStats,
+    /// End-of-run telemetry export bundle (empty when
+    /// [`CampaignConfig::telemetry`] is off).
+    pub telemetry: TelemetrySnapshot,
 }
 
 impl CampaignResults {
@@ -185,6 +197,8 @@ pub fn run_on_threads(fed: &mut FedSim, ccfg: &CampaignConfig, threads: usize) -
     let zipf = Zipf::new(support, ccfg.zipf_s);
 
     let mut engine = SessionEngine::new(base);
+    engine.tele.set_enabled(ccfg.telemetry);
+    engine.tele.set_trace_cap(ccfg.trace);
     let mut first_arrival: Option<SimTime> = None;
     let n_sites = ccfg.sites.len();
     for (i, site_name) in ccfg.sites.iter().enumerate() {
@@ -239,7 +253,185 @@ pub fn run_on_threads(fed: &mut FedSim, ccfg: &CampaignConfig, threads: usize) -
         // First arrival → last completion (the idle lead-in before the
         // first Poisson arrival is not campaign time).
         makespan: fed.now - first_arrival.unwrap_or(base),
+        telemetry: snapshot_telemetry(fed, &engine),
         engine: engine.stats,
+    }
+}
+
+/// Fold the run's telemetry into its export bundle: the engine's
+/// thread-invariant counters, per-cache and per-link end-of-run
+/// gauges, the monitoring pipeline's counters, phase histograms,
+/// rollup series, and resolved span traces.
+///
+/// Everything registered here must be bit-identical across thread
+/// counts — `EngineStats` equality at 1/2/8 threads is asserted by
+/// `tests/session_engine.rs`, cache/collector/bus state is replayed
+/// serially at the epoch barrier, and the one f64 integrated in
+/// event order (per-link WAN bytes) is rounded to whole bytes so
+/// split-point ulps cannot leak into the export.
+pub fn snapshot_telemetry(fed: &FedSim, engine: &SessionEngine) -> TelemetrySnapshot {
+    if !engine.tele.enabled() {
+        return TelemetrySnapshot::default();
+    }
+    let mut reg = MetricsRegistry::new();
+    let e = &engine.stats;
+    reg.counter("stashcache_engine_events_total", e.events_processed);
+    reg.counter("stashcache_engine_sessions_completed_total", e.sessions_completed);
+    reg.counter("stashcache_engine_coalesced_joins_total", e.coalesced_joins);
+    reg.counter("stashcache_engine_faults_applied_total", e.faults_applied);
+    reg.counter("stashcache_engine_failovers_total", e.failovers);
+    reg.counter("stashcache_engine_retries_total", e.retries);
+    reg.counter("stashcache_engine_aborted_bytes_total", e.aborted_bytes);
+    reg.counter("stashcache_engine_direct_fallbacks_total", e.direct_fallbacks);
+    reg.counter("stashcache_engine_background_respawns_total", e.background_respawns);
+    reg.counter("stashcache_netsim_allocator_passes_total", e.allocator_passes);
+    reg.counter("stashcache_netsim_components_touched_total", e.components_touched);
+    reg.counter("stashcache_netsim_flows_refixed_total", e.flows_refixed);
+    reg.gauge("stashcache_engine_peak_concurrent", e.peak_concurrent as f64);
+    reg.gauge("stashcache_netsim_peak_component", e.peak_component as f64);
+    reg.gauge(
+        &format!(
+            "stashcache_policy_info{{policy=\"{}\"}}",
+            fed.policy.kind().name()
+        ),
+        1.0,
+    );
+
+    let mut cache_sites: Vec<usize> = fed.caches.keys().copied().collect();
+    cache_sites.sort_unstable();
+    for &site in &cache_sites {
+        let c = &fed.caches[&site];
+        let l = format!("{{cache=\"{}\"}}", fed.topo.site_name(site));
+        let s = c.stats;
+        reg.counter(&format!("stashcache_cache_requests_total{l}"), s.requests);
+        reg.counter(
+            &format!("stashcache_cache_whole_file_hits_total{l}"),
+            s.whole_file_hits,
+        );
+        reg.counter(
+            &format!("stashcache_cache_bytes_served_hit_total{l}"),
+            s.bytes_served_hit,
+        );
+        reg.counter(
+            &format!("stashcache_cache_bytes_served_miss_total{l}"),
+            s.bytes_served_miss,
+        );
+        reg.counter(
+            &format!("stashcache_cache_bytes_fetched_origin_total{l}"),
+            s.bytes_fetched_origin,
+        );
+        reg.counter(&format!("stashcache_cache_evictions_total{l}"), s.evictions);
+        reg.counter(
+            &format!("stashcache_cache_bytes_evicted_total{l}"),
+            s.bytes_evicted,
+        );
+        let hit_ratio = if s.requests > 0 {
+            s.whole_file_hits as f64 / s.requests as f64
+        } else {
+            0.0
+        };
+        reg.gauge(&format!("stashcache_cache_hit_ratio{l}"), hit_ratio);
+        reg.gauge(
+            &format!("stashcache_cache_usage_bytes{l}"),
+            c.usage().as_u64() as f64,
+        );
+        reg.gauge(&format!("stashcache_cache_load_factor{l}"), c.load_factor());
+        reg.gauge(
+            &format!("stashcache_cache_resident_files{l}"),
+            c.resident_files() as f64,
+        );
+        reg.gauge(
+            &format!("stashcache_cache_in_flight{l}"),
+            engine.cache_in_flight().get(&site).copied().unwrap_or(0) as f64,
+        );
+        reg.gauge(
+            &format!("stashcache_cache_down{l}"),
+            f64::from(u8::from(fed.faults.is_cache_down(site))),
+        );
+        reg.counter(
+            &format!("stashcache_cache_outages_total{l}"),
+            u64::from(fed.faults.outages_of(site)),
+        );
+        reg.gauge(
+            &format!("stashcache_cache_downtime_seconds{l}"),
+            fed.faults.downtime_of(site, fed.now).as_secs_f64(),
+        );
+    }
+
+    for site in 0..fed.topo.site_count() {
+        let l = format!("{{site=\"{}\"}}", fed.topo.site_name(site));
+        // Per-link carried bytes are the one f64 the network
+        // integrates in event order; serial and sharded runs split
+        // the integration at different instants, so round to whole
+        // bytes before export (ulp-level noise, never whole bytes).
+        reg.counter(
+            &format!("stashcache_wan_bytes_total{l}"),
+            fed.wan_bytes(site).round() as u64,
+        );
+        reg.gauge(
+            &format!("stashcache_wan_link_up{l}"),
+            f64::from(u8::from(fed.net.link_is_up(fed.topo.wan_link(site)))),
+        );
+    }
+
+    let cs = fed.collector.stats;
+    reg.counter("stashcache_collector_packets_total", cs.packets);
+    reg.counter("stashcache_collector_reports_published_total", cs.reports_published);
+    reg.counter("stashcache_collector_orphan_closes_total", cs.orphan_closes);
+    reg.counter("stashcache_collector_unknown_users_total", cs.unknown_users);
+    reg.counter("stashcache_collector_expired_entries_total", cs.expired_entries);
+    reg.counter("stashcache_collector_decode_errors_total", cs.decode_errors);
+    reg.counter("stashcache_bus_published_total", fed.bus.published);
+    reg.counter("stashcache_bus_compacted_total", fed.bus.compacted);
+    reg.gauge("stashcache_bus_queue_depth", fed.bus.total_depth() as f64);
+
+    let mut phases = Vec::with_capacity(PhaseLabel::ALL.len());
+    for label in PhaseLabel::ALL {
+        let sk = engine.tele.phase_sketch(label);
+        if !sk.is_empty() {
+            reg.histogram(
+                &format!("stashcache_phase_seconds{{phase=\"{}\"}}", label.name()),
+                sk,
+            );
+        }
+        phases.push((label.name(), sk.clone()));
+    }
+
+    let rollup = engine.tele.rollup();
+    let rollups = rollup
+        .iter()
+        .map(|(key, windows)| {
+            let label = if key < 0 {
+                "(none)".to_string()
+            } else {
+                fed.topo.site_name(key as usize).to_string()
+            };
+            (label, windows.to_vec())
+        })
+        .collect();
+
+    let traces = engine
+        .tele
+        .traces()
+        .map(|t| TraceRow {
+            session: t.session,
+            site: fed.topo.site_name(t.site).to_string(),
+            path: t.path.clone(),
+            arrival: t.arrival,
+            completed: t.completed,
+            bytes: t.bytes,
+            cache: t.cache_site.map(|s| fed.topo.site_name(s).to_string()),
+            hit: t.hit,
+            spans: t.spans.clone(),
+        })
+        .collect();
+
+    TelemetrySnapshot {
+        registry: reg,
+        phases,
+        rollup_window_secs: rollup.window_secs(),
+        rollups,
+        traces,
     }
 }
 

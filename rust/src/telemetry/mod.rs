@@ -1,0 +1,720 @@
+//! Federation telemetry: metrics registry, per-session phase tracing,
+//! and O(1)-memory streaming rollups.
+//!
+//! The §3.2 monitoring pipeline observes *transfers*; this layer
+//! observes the *machinery* — engine phases, caches, links, policies,
+//! faults — the way the OSDF operations papers say a federation must
+//! be run. The flow is:
+//!
+//! ```text
+//!   session engine ──spans──▶ per-phase QuantileSketch  ┐
+//!   completions  ──────────▶ windowed Rollup (bounded)  ├─▶ TelemetrySnapshot
+//!   caches/links/faults ───▶ end-of-run gauges          ┘        │
+//!                                                    ┌───────────┼───────────┐
+//!                                              metrics.json   .prom       trace JSONL
+//! ```
+//!
+//! **Off the bit-identity surface.** Everything recorded here is
+//! either integer state (bucket counts, byte totals) or derived from
+//! the record stream itself, folded in a deterministic order: serial
+//! runs fold spans at transition time, and the terminal epoch
+//! reconstructs the identical spans per completed session in the same
+//! sorted completion order the record stream uses. Sketch merges are
+//! commutative on integer state, so `run_threaded` at 1/2/8 threads
+//! emits byte-identical telemetry — and nothing in this module touches
+//! the RNG, the event queue, or the network, so record digests are
+//! unchanged whether telemetry is on or off.
+
+use crate::monitoring::json::{self, Json, ObjBuilder};
+use crate::util::stats::QuantileSketch;
+use crate::util::{Duration, SimTime};
+use std::collections::{BTreeMap, VecDeque};
+
+/// The session-engine phases a span can be attributed to.
+///
+/// `Failover` is synthetic: when a session is re-routed after a fault,
+/// the retry wait it spends back in GeoResolve/ProxyLookup/
+/// DirectConnect is attributed here instead, so recovery cost is
+/// visible separately from first-try latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseLabel {
+    GeoResolve,
+    CacheCheck,
+    JoinWait,
+    FetchBegin,
+    Transfer,
+    Failover,
+    DirectConnect,
+    DirectFetch,
+    ProxyLookup,
+    ProxyConnect,
+}
+
+impl PhaseLabel {
+    pub const ALL: [PhaseLabel; 10] = [
+        PhaseLabel::GeoResolve,
+        PhaseLabel::CacheCheck,
+        PhaseLabel::JoinWait,
+        PhaseLabel::FetchBegin,
+        PhaseLabel::Transfer,
+        PhaseLabel::Failover,
+        PhaseLabel::DirectConnect,
+        PhaseLabel::DirectFetch,
+        PhaseLabel::ProxyLookup,
+        PhaseLabel::ProxyConnect,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseLabel::GeoResolve => "geo_resolve",
+            PhaseLabel::CacheCheck => "cache_check",
+            PhaseLabel::JoinWait => "join_wait",
+            PhaseLabel::FetchBegin => "fetch_begin",
+            PhaseLabel::Transfer => "transfer",
+            PhaseLabel::Failover => "failover",
+            PhaseLabel::DirectConnect => "direct_connect",
+            PhaseLabel::DirectFetch => "direct_fetch",
+            PhaseLabel::ProxyLookup => "proxy_lookup",
+            PhaseLabel::ProxyConnect => "proxy_connect",
+        }
+    }
+}
+
+/// One attributed interval of a session's lifetime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpan {
+    pub label: PhaseLabel,
+    pub start: SimTime,
+    pub dur: Duration,
+}
+
+/// A completed session's full span trace (raw site indices; resolved
+/// to names when the snapshot is taken).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanTrace {
+    pub session: u64,
+    pub site: usize,
+    pub path: String,
+    pub arrival: SimTime,
+    pub completed: SimTime,
+    pub bytes: u64,
+    pub cache_site: Option<usize>,
+    pub hit: bool,
+    pub spans: Vec<PhaseSpan>,
+}
+
+/// Per-window completion counters of one cache's rollup series.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WindowCounts {
+    pub completions: u64,
+    pub hits: u64,
+    pub bytes: u64,
+}
+
+impl WindowCounts {
+    fn absorb(&mut self, other: WindowCounts) {
+        self.completions += other.completions;
+        self.hits += other.hits;
+        self.bytes += other.bytes;
+    }
+}
+
+/// Default rollup window: one sim-minute per bucket.
+const ROLLUP_WINDOW_US: u64 = 60_000_000;
+/// Windows per series before the whole rollup coarsens (doubling the
+/// window, pair-merging counts) — bounds memory for year-long runs.
+const ROLLUP_MAX_WINDOWS: usize = 256;
+/// Key used for completions that never touched a cache (proxy relay,
+/// direct-to-origin).
+const ROLLUP_NO_CACHE: i64 = -1;
+
+/// Windowed per-cache completion rollups with bounded memory.
+///
+/// Driven purely by the completion stream (never by wall-clock
+/// polling), so serial and sharded runs — which retire the same
+/// completions in the same order — produce identical series. All
+/// counters are `u64`; coarsening pair-merges buckets and conserves
+/// every count exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rollup {
+    window_us: u64,
+    by_cache: BTreeMap<i64, Vec<WindowCounts>>,
+}
+
+impl Default for Rollup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Rollup {
+    pub fn new() -> Self {
+        Rollup {
+            window_us: ROLLUP_WINDOW_US,
+            by_cache: BTreeMap::new(),
+        }
+    }
+
+    pub fn window_secs(&self) -> f64 {
+        self.window_us as f64 / 1_000_000.0
+    }
+
+    pub fn observe(&mut self, at: SimTime, cache_site: Option<i64>, bytes: u64, hit: bool) {
+        while (at.as_micros() / self.window_us) as usize >= ROLLUP_MAX_WINDOWS {
+            self.coarsen();
+        }
+        let idx = (at.as_micros() / self.window_us) as usize;
+        let series = self
+            .by_cache
+            .entry(cache_site.unwrap_or(ROLLUP_NO_CACHE))
+            .or_default();
+        if idx >= series.len() {
+            series.resize(idx + 1, WindowCounts::default());
+        }
+        let w = &mut series[idx];
+        w.completions += 1;
+        w.hits += hit as u64;
+        w.bytes += bytes;
+    }
+
+    fn coarsen(&mut self) {
+        self.window_us *= 2;
+        for series in self.by_cache.values_mut() {
+            let mut merged = Vec::with_capacity(series.len().div_ceil(2));
+            for pair in series.chunks(2) {
+                let mut w = pair[0];
+                if let Some(&second) = pair.get(1) {
+                    w.absorb(second);
+                }
+                merged.push(w);
+            }
+            *series = merged;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (i64, &[WindowCounts])> {
+        self.by_cache.iter().map(|(&k, v)| (k, v.as_slice()))
+    }
+
+    /// Total completions across every series (conservation witness).
+    pub fn total_completions(&self) -> u64 {
+        self.by_cache
+            .values()
+            .flatten()
+            .map(|w| w.completions)
+            .sum()
+    }
+}
+
+/// The always-on telemetry state carried by the session engine.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    enabled: bool,
+    trace_cap: usize,
+    phases: Vec<QuantileSketch>,
+    traces: VecDeque<SpanTrace>,
+    rollup: Rollup,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Telemetry {
+            enabled: true,
+            trace_cap: 0,
+            phases: vec![QuantileSketch::new(); PhaseLabel::ALL.len()],
+            traces: VecDeque::new(),
+            rollup: Rollup::new(),
+        }
+    }
+
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+    /// `--trace N`: keep the last N completed sessions' full span
+    /// traces in a bounded ring (0 = span tracing off).
+    pub fn set_trace_cap(&mut self, cap: usize) {
+        self.trace_cap = cap;
+    }
+    pub fn trace_enabled(&self) -> bool {
+        self.enabled && self.trace_cap > 0
+    }
+
+    /// Fold one attributed span into its phase histogram.
+    pub fn phase_span(&mut self, label: PhaseLabel, dur: Duration) {
+        if self.enabled {
+            self.phases[label as usize].push(dur.as_secs_f64());
+        }
+    }
+
+    pub fn phase_sketch(&self, label: PhaseLabel) -> &QuantileSketch {
+        &self.phases[label as usize]
+    }
+
+    /// Completion-driven rollup tick (called once per finished
+    /// session, identically on the serial and epoch-merge paths).
+    pub fn on_complete(&mut self, at: SimTime, cache_site: Option<usize>, bytes: u64, hit: bool) {
+        if self.enabled {
+            self.rollup
+                .observe(at, cache_site.map(|s| s as i64), bytes, hit);
+        }
+    }
+
+    pub fn rollup(&self) -> &Rollup {
+        &self.rollup
+    }
+
+    /// Push a completed session's trace into the ring, evicting the
+    /// oldest past `trace_cap`.
+    pub fn push_trace(&mut self, trace: SpanTrace) {
+        if self.trace_cap == 0 {
+            return;
+        }
+        if self.traces.len() == self.trace_cap {
+            self.traces.pop_front();
+        }
+        self.traces.push_back(trace);
+    }
+
+    pub fn traces(&self) -> impl Iterator<Item = &SpanTrace> {
+        self.traces.iter()
+    }
+}
+
+/// Named counters, gauges, and quantile-sketch histograms.
+///
+/// Keys are full series names including Prometheus-style labels
+/// (`stashcache_cache_requests_total{cache="nebraska"}`), stored in
+/// `BTreeMap`s so both export formats are byte-deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, QuantileSketch>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add to (or create) a counter.
+    pub fn counter(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Set a gauge to its current value.
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Merge a sketch into (or install it as) a histogram series.
+    pub fn histogram(&mut self, name: &str, sk: &QuantileSketch) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(QuantileSketch::new)
+            .merge(sk);
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+    pub fn histogram_sketch(&self, name: &str) -> Option<&QuantileSketch> {
+        self.hists.get(name)
+    }
+
+    /// Fold another registry in: counters add, histograms merge,
+    /// gauges take the other side's value (point-in-time state has no
+    /// meaningful sum — the last merged trial wins).
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, &v) in &other.counters {
+            self.counter(k, v);
+        }
+        for (k, sk) in &other.hists {
+            self.histogram(k, sk);
+        }
+        for (k, &v) in &other.gauges {
+            self.gauges.insert(k.clone(), v);
+        }
+    }
+
+    /// Prometheus-style text exposition. Histograms render as
+    /// `summary` families with p50/p95/p99 quantile series.
+    pub fn exposition(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut typed: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        let mut type_line = |out: &mut String, name: &str, kind: &str| {
+            let family = name.split(['{', ' ']).next().unwrap_or(name);
+            if typed.insert(family.to_string()) {
+                let _ = writeln!(out, "# TYPE {family} {kind}");
+            }
+        };
+        for (name, v) in &self.counters {
+            type_line(&mut out, name, "counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            type_line(&mut out, name, "gauge");
+            let _ = writeln!(out, "{name} {}", fmt_f64(*v));
+        }
+        for (name, sk) in &self.hists {
+            type_line(&mut out, name, "summary");
+            let (base, labels) = split_labels(name);
+            for (q, qs) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                let _ = writeln!(
+                    out,
+                    "{base}{{{labels}quantile=\"{qs}\"}} {}",
+                    fmt_f64(sk.quantile(q))
+                );
+            }
+            let _ = writeln!(out, "{base}_count{{{labels}}} {}", sk.count());
+        }
+        out
+    }
+
+    fn json_obj(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, &v) in &self.counters {
+            counters.insert(k.clone(), Json::Num(v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, &v) in &self.gauges {
+            gauges.insert(k.clone(), Json::Num(v));
+        }
+        let mut hists = BTreeMap::new();
+        for (k, sk) in &self.hists {
+            hists.insert(k.clone(), sketch_json(sk));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+}
+
+/// `name{a="b"}` → `("name", "a=\"b\",")`; unlabeled → `("name", "")`.
+/// The returned label fragment carries its own trailing comma so a
+/// quantile label can always be appended.
+fn split_labels(name: &str) -> (&str, String) {
+    match name.split_once('{') {
+        Some((base, rest)) => {
+            let inner = rest.trim_end_matches('}');
+            (base, format!("{inner},"))
+        }
+        None => (name, String::new()),
+    }
+}
+
+/// Print an f64 the way `monitoring::json` does: integer-valued
+/// floats without a decimal point, so text output is deterministic
+/// and diff-friendly.
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn sketch_json(sk: &QuantileSketch) -> Json {
+    ObjBuilder::new()
+        .int("count", sk.count())
+        .num("min", sk.min())
+        .num("max", sk.max())
+        .num("p50", sk.quantile(0.5))
+        .num("p95", sk.quantile(0.95))
+        .num("p99", sk.quantile(0.99))
+        .num("approx_sum", sk.approx_sum())
+        .build()
+}
+
+/// A completed session's trace with site indices resolved to names —
+/// the JSONL row format `--trace` dumps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRow {
+    pub session: u64,
+    pub site: String,
+    pub path: String,
+    pub arrival: SimTime,
+    pub completed: SimTime,
+    pub bytes: u64,
+    pub cache: Option<String>,
+    pub hit: bool,
+    pub spans: Vec<PhaseSpan>,
+}
+
+/// The end-of-run export bundle a campaign returns: registry, phase
+/// histograms, rollup series, resolved traces.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub registry: MetricsRegistry,
+    /// `(phase name, sketch)` in [`PhaseLabel::ALL`] order.
+    pub phases: Vec<(&'static str, QuantileSketch)>,
+    pub rollup_window_secs: f64,
+    /// `(cache label, windows)` — the label is a site name or
+    /// `"(none)"` for proxy/direct completions.
+    pub rollups: Vec<(String, Vec<WindowCounts>)>,
+    pub traces: Vec<TraceRow>,
+}
+
+impl TelemetrySnapshot {
+    pub fn phase_sketch(&self, name: &str) -> Option<&QuantileSketch> {
+        self.phases.iter().find(|(n, _)| *n == name).map(|(_, s)| s)
+    }
+
+    /// Prometheus-style text exposition of the whole snapshot (the
+    /// phase histograms are registered as `stashcache_phase_seconds`
+    /// summaries, so the registry covers everything).
+    pub fn exposition(&self) -> String {
+        self.registry.exposition()
+    }
+
+    /// `metrics.json`: registry plus the windowed rollup series.
+    pub fn to_json_string(&self) -> String {
+        let Json::Obj(mut top) = self.registry.json_obj() else {
+            unreachable!("registry json is an object");
+        };
+        let mut per_cache = BTreeMap::new();
+        for (label, windows) in &self.rollups {
+            let arr = windows
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.completions > 0)
+                .map(|(i, w)| {
+                    ObjBuilder::new()
+                        .num("t_secs", i as f64 * self.rollup_window_secs)
+                        .int("completions", w.completions)
+                        .int("hits", w.hits)
+                        .int("bytes", w.bytes)
+                        .build()
+                })
+                .collect();
+            per_cache.insert(label.clone(), Json::Arr(arr));
+        }
+        let mut rollups = BTreeMap::new();
+        rollups.insert(
+            "window_secs".to_string(),
+            Json::Num(self.rollup_window_secs),
+        );
+        rollups.insert("per_cache".to_string(), Json::Obj(per_cache));
+        top.insert("rollups".to_string(), Json::Obj(rollups));
+        json::to_string(&Json::Obj(top))
+    }
+
+    /// One JSON object per line per traced session — the `--trace N`
+    /// dump format.
+    pub fn trace_jsonl(&self) -> String {
+        let mut out = String::new();
+        for t in &self.traces {
+            let spans = t
+                .spans
+                .iter()
+                .map(|s| {
+                    ObjBuilder::new()
+                        .str("phase", s.label.name())
+                        .int("start_us", s.start.as_micros())
+                        .int("dur_us", s.dur.as_micros())
+                        .build()
+                })
+                .collect();
+            let mut row = ObjBuilder::new()
+                .int("session", t.session)
+                .str("site", t.site.as_str())
+                .str("path", t.path.as_str())
+                .int("arrival_us", t.arrival.as_micros())
+                .int("completed_us", t.completed.as_micros())
+                .int("bytes", t.bytes)
+                .bool("hit", t.hit);
+            if let Some(cache) = &t.cache {
+                row = row.str("cache", cache.as_str());
+            }
+            let Json::Obj(mut obj) = row.build() else {
+                unreachable!("trace row is an object");
+            };
+            obj.insert("spans".to_string(), Json::Arr(spans));
+            out.push_str(&json::to_string(&Json::Obj(obj)));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Fold another snapshot in (sweep aggregation across trials):
+    /// counters add, histograms and phase sketches merge, traces
+    /// concatenate; rollup series are per-run time series and are
+    /// kept from the first non-empty snapshot only.
+    pub fn merge(&mut self, other: &TelemetrySnapshot) {
+        self.registry.merge(&other.registry);
+        if self.phases.is_empty() {
+            self.phases = other.phases.clone();
+        } else {
+            for ((_, mine), (_, theirs)) in self.phases.iter_mut().zip(other.phases.iter()) {
+                mine.merge(theirs);
+            }
+        }
+        if self.rollups.is_empty() {
+            self.rollup_window_secs = other.rollup_window_secs;
+            self.rollups = other.rollups.clone();
+        }
+        self.traces.extend(other.traces.iter().cloned());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_exposition_is_deterministic_and_typed() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("stashcache_engine_events_total", 42);
+        reg.counter("stashcache_cache_requests_total{cache=\"b\"}", 7);
+        reg.counter("stashcache_cache_requests_total{cache=\"a\"}", 3);
+        reg.gauge("stashcache_cache_hit_ratio{cache=\"a\"}", 0.75);
+        let mut sk = QuantileSketch::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            sk.push(x);
+        }
+        reg.histogram("stashcache_phase_seconds{phase=\"transfer\"}", &sk);
+
+        let text = reg.exposition();
+        // Labeled series sort deterministically and share one TYPE line.
+        let a = text
+            .find("stashcache_cache_requests_total{cache=\"a\"} 3")
+            .unwrap();
+        let b = text
+            .find("stashcache_cache_requests_total{cache=\"b\"} 7")
+            .unwrap();
+        assert!(a < b, "label order is sorted:\n{text}");
+        assert_eq!(
+            text.matches("# TYPE stashcache_cache_requests_total counter")
+                .count(),
+            1
+        );
+        assert!(text.contains("# TYPE stashcache_phase_seconds summary"));
+        assert!(
+            text.contains("stashcache_phase_seconds{phase=\"transfer\",quantile=\"0.5\"}"),
+            "quantile label appended after existing labels:\n{text}"
+        );
+        assert!(text.contains("stashcache_phase_seconds_count{phase=\"transfer\"} 4"));
+        assert!(text.contains("stashcache_cache_hit_ratio{cache=\"a\"} 0.75"));
+        // Identical registry ⇒ identical bytes.
+        assert_eq!(text, reg.clone().exposition());
+    }
+
+    #[test]
+    fn registry_merge_semantics() {
+        let mut a = MetricsRegistry::new();
+        a.counter("c", 2);
+        a.gauge("g", 1.0);
+        let mut b = MetricsRegistry::new();
+        b.counter("c", 3);
+        b.counter("only_b", 1);
+        b.gauge("g", 9.0);
+        a.merge(&b);
+        assert_eq!(a.counter_value("c"), 5);
+        assert_eq!(a.counter_value("only_b"), 1);
+        assert_eq!(a.gauge_value("g"), Some(9.0), "gauges: last merged wins");
+    }
+
+    #[test]
+    fn rollup_coarsens_and_conserves() {
+        let mut r = Rollup::new();
+        // Far beyond 256 windows of 60 s: forces repeated coarsening.
+        for i in 0..1_000u64 {
+            let t = SimTime::from_secs_f64(i as f64 * 3_600.0);
+            r.observe(t, Some((i % 3) as i64), 1_000 + i, i % 2 == 0);
+        }
+        assert_eq!(r.total_completions(), 1_000);
+        for (_, series) in r.iter() {
+            assert!(series.len() <= ROLLUP_MAX_WINDOWS);
+        }
+        assert!(r.window_secs() > 60.0, "window must have doubled");
+        let bytes: u64 = r.iter().flat_map(|(_, s)| s).map(|w| w.bytes).sum();
+        let expect: u64 = (0..1_000u64).map(|i| 1_000 + i).sum();
+        assert_eq!(bytes, expect, "coarsening conserves bytes");
+    }
+
+    #[test]
+    fn trace_ring_is_bounded_and_keeps_latest() {
+        let mut tele = Telemetry::new();
+        tele.set_trace_cap(3);
+        for i in 0..10u64 {
+            tele.push_trace(SpanTrace {
+                session: i,
+                site: 0,
+                path: format!("/f/{i}"),
+                arrival: SimTime::ZERO,
+                completed: SimTime::from_secs_f64(i as f64),
+                bytes: 1,
+                cache_site: None,
+                hit: false,
+                spans: Vec::new(),
+            });
+        }
+        let kept: Vec<u64> = tele.traces().map(|t| t.session).collect();
+        assert_eq!(kept, vec![7, 8, 9], "ring keeps the last N sessions");
+    }
+
+    #[test]
+    fn disabled_telemetry_records_nothing() {
+        let mut tele = Telemetry::new();
+        tele.set_enabled(false);
+        tele.set_trace_cap(4);
+        tele.phase_span(PhaseLabel::Transfer, Duration::from_secs(1));
+        tele.on_complete(SimTime::from_secs_f64(1.0), Some(3), 100, true);
+        assert!(tele.phase_sketch(PhaseLabel::Transfer).is_empty());
+        assert_eq!(tele.rollup().total_completions(), 0);
+        assert!(!tele.trace_enabled());
+    }
+
+    #[test]
+    fn snapshot_jsonl_one_object_per_line() {
+        let snap = TelemetrySnapshot {
+            traces: vec![TraceRow {
+                session: 5,
+                site: "syracuse".into(),
+                path: "/gwosc/x.dat".into(),
+                arrival: SimTime::ZERO,
+                completed: SimTime::from_secs_f64(2.0),
+                bytes: 1024,
+                cache: Some("syracuse".into()),
+                hit: true,
+                spans: vec![PhaseSpan {
+                    label: PhaseLabel::Transfer,
+                    start: SimTime::ZERO,
+                    dur: Duration::from_secs(2),
+                }],
+            }],
+            ..TelemetrySnapshot::default()
+        };
+        let jsonl = snap.trace_jsonl();
+        assert_eq!(jsonl.lines().count(), 1);
+        let parsed = json::parse(jsonl.lines().next().unwrap()).expect("valid JSON row");
+        assert_eq!(parsed.get("session").and_then(Json::as_u64), Some(5));
+        assert_eq!(
+            parsed.get("cache").and_then(Json::as_str),
+            Some("syracuse")
+        );
+        let Some(Json::Arr(spans)) = parsed.get("spans") else {
+            panic!("spans array present");
+        };
+        assert_eq!(spans.len(), 1);
+        assert_eq!(
+            spans[0].get("phase").and_then(Json::as_str),
+            Some("transfer")
+        );
+    }
+}

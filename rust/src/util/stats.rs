@@ -26,9 +26,28 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 }
 
 /// Compute several percentiles at once over unsorted data.
+///
+/// NaN samples are excluded before ranking (a zero-duration transfer
+/// divides 0 bytes by 0 seconds and yields NaN rates; one bad sample
+/// must not take down a whole campaign report). Panics only when no
+/// finite-orderable sample remains (empty or all-NaN input).
 pub fn percentiles(data: &mut [f64], ps: &[f64]) -> Vec<f64> {
-    data.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile data"));
-    ps.iter().map(|&p| percentile(data, p)).collect()
+    // Partition NaNs to the tail, then sort the clean prefix with the
+    // IEEE total order (deterministic, never panics).
+    let mut clean = data.len();
+    let mut i = 0;
+    while i < clean {
+        if data[i].is_nan() {
+            clean -= 1;
+            data.swap(i, clean);
+        } else {
+            i += 1;
+        }
+    }
+    let (prefix, _) = data.split_at_mut(clean);
+    prefix.sort_by(|a, b| a.total_cmp(b));
+    assert!(!prefix.is_empty(), "percentiles of empty/all-NaN sample");
+    ps.iter().map(|&p| percentile(prefix, p)).collect()
 }
 
 /// Inverse standard-normal CDF (probit), Acklam's rational
@@ -199,6 +218,195 @@ impl Welford {
     }
 }
 
+/// Buckets per octave in [`QuantileSketch`]: bucket boundaries grow by
+/// γ = 2^(1/64) ≈ 1.0109, so within-bucket linear interpolation is
+/// accurate to ~0.55% relative — comfortably inside the telemetry
+/// layer's 2% acceptance band against exact [`percentile`].
+const SKETCH_BUCKETS_PER_OCTAVE: f64 = 64.0;
+/// `1 / ln γ`: multiply `ln x` by this to get the bucket index.
+const SKETCH_INV_LN_GAMMA: f64 = SKETCH_BUCKETS_PER_OCTAVE / std::f64::consts::LN_2;
+/// Bucket-index clamp. `e^(-2048/92.33) ≈ 2.4e-10` and
+/// `e^(6143/92.33) ≈ 7e28`, so everything from sub-nanosecond
+/// durations to astronomical byte counts lands inside the range;
+/// values beyond it saturate into the edge buckets.
+const SKETCH_MIN_IDX: i32 = -2048;
+const SKETCH_MAX_IDX: i32 = 6143;
+
+/// Online quantile sketch: a log-bucketed counting histogram with
+/// bounded memory (one `u64` per occupied bucket) that answers
+/// p50/p95/p99 without retaining samples.
+///
+/// Two properties matter for the telemetry layer:
+///
+/// * **Mergeable and order-independent** — the state is integer bucket
+///   counts plus exact min/max, so `merge` is commutative and
+///   associative and a sharded run folds to bit-identical state in any
+///   order. Deliberately *no* running f64 sum is kept: float addition
+///   is non-associative, and a sum would put the sketch back on the
+///   bit-identity surface. [`Self::approx_sum`] derives a
+///   deterministic total from the counts instead.
+/// * **Bounded error** — buckets are geometric with ratio 2^(1/64)
+///   (~1.1% wide); [`Self::quantile`] interpolates linearly inside the
+///   winning bucket and clamps to the observed `[min, max]`.
+///
+/// Non-positive and NaN samples (zero-length phases are common) are
+/// counted in a dedicated zero bucket so `n` still matches the number
+/// of observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    n: u64,
+    zeros: u64,
+    min: f64,
+    max: f64,
+    /// Index of `counts[0]` on the global bucket scale (empty ⇒ unset).
+    offset: i32,
+    counts: Vec<u64>,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> Self {
+        QuantileSketch {
+            n: 0,
+            zeros: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            offset: 0,
+            counts: Vec::new(),
+        }
+    }
+
+    fn bucket_index(x: f64) -> i32 {
+        // f64→i32 casts saturate, so +∞ clamps to SKETCH_MAX_IDX here.
+        ((x.ln() * SKETCH_INV_LN_GAMMA).floor() as i32).clamp(SKETCH_MIN_IDX, SKETCH_MAX_IDX)
+    }
+
+    fn bucket_lo(idx: i32) -> f64 {
+        (idx as f64 / SKETCH_INV_LN_GAMMA).exp()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        if x.is_nan() || x <= 0.0 {
+            // Zero-length spans (and degenerate NaN rates) count as 0.
+            self.zeros += 1;
+            self.min = self.min.min(0.0);
+            self.max = self.max.max(0.0);
+            return;
+        }
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.bump(Self::bucket_index(x), 1);
+    }
+
+    fn bump(&mut self, idx: i32, by: u64) {
+        if self.counts.is_empty() {
+            self.offset = idx;
+            self.counts.push(by);
+            return;
+        }
+        if idx < self.offset {
+            let pad = (self.offset - idx) as usize;
+            self.counts.splice(0..0, std::iter::repeat(0).take(pad));
+            self.offset = idx;
+        }
+        let i = (idx - self.offset) as usize;
+        if i >= self.counts.len() {
+            self.counts.resize(i + 1, 0);
+        }
+        self.counts[i] += by;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+    /// Exact observed minimum (0.0 if any non-positive sample landed).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate, `q` in `[0, 1]` (numpy-linear rank
+    /// convention, like [`percentile`]). Returns 0.0 on an empty
+    /// sketch so always-on exports never panic.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile domain: {q}");
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = q * (self.n - 1) as f64;
+        if (rank as u64) < self.zeros || self.zeros == self.n {
+            return 0.0;
+        }
+        let mut cum = self.zeros as f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if rank < cum + c as f64 {
+                let idx = self.offset + i as i32;
+                let lo = Self::bucket_lo(idx);
+                let hi = Self::bucket_lo(idx + 1);
+                let frac = (rank - cum) / c as f64;
+                return (lo + (hi - lo) * frac).clamp(self.min.max(0.0), self.max);
+            }
+            cum += c as f64;
+        }
+        self.max
+    }
+
+    /// Deterministic approximate total: Σ count · bucket-midpoint.
+    /// Derived purely from the integer state, so it is identical no
+    /// matter how the sketch was sharded and merged (unlike a running
+    /// f64 sum). Relative error is bounded by the bucket half-width.
+    pub fn approx_sum(&self) -> f64 {
+        let mut sum = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let idx = self.offset + i as i32;
+            sum += c as f64 * 0.5 * (Self::bucket_lo(idx) + Self::bucket_lo(idx + 1));
+        }
+        sum
+    }
+
+    /// Merge another sketch (commutative, associative, exact on the
+    /// integer state — the shard-fold reduction).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.n == 0 {
+            return;
+        }
+        self.n += other.n;
+        self.zeros += other.zeros;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (i, &c) in other.counts.iter().enumerate() {
+            if c > 0 {
+                self.bump(other.offset + i as i32, c);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,6 +570,124 @@ mod tests {
         assert_eq!(ab.mean(), ba.mean());
         assert_eq!(ab.m2(), ba.m2());
         assert_eq!((ab.min(), ab.max()), (ba.min(), ba.max()));
+    }
+
+    #[test]
+    fn percentiles_skip_nan_samples() {
+        // Regression: a zero-duration transfer produces a NaN rate
+        // (0 bytes / 0 s); percentiles used to panic in the sort
+        // comparator. The NaN must be dropped, not ranked.
+        let mut rates = [120.0, 80.0, 0.0 / 0.0_f64, 100.0];
+        let ps = percentiles(&mut rates, &[0.0, 50.0, 100.0]);
+        assert_eq!(ps, vec![80.0, 100.0, 120.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty/all-NaN")]
+    fn percentiles_all_nan_panics() {
+        let mut d = [f64::NAN, f64::NAN];
+        percentiles(&mut d, &[50.0]);
+    }
+
+    #[test]
+    fn sketch_matches_exact_percentile_within_2pct() {
+        // The telemetry acceptance fixture: 10k samples from two very
+        // different shapes, sketch vs exact numpy-linear percentile.
+        use crate::util::Pcg64;
+        let mut rng = Pcg64::new(11, 7);
+        let lognormal: Vec<f64> = (0..10_000)
+            .map(|_| (rng.gen_normal() * 1.5 - 2.0).exp())
+            .collect();
+        let uniform: Vec<f64> = (0..10_000).map(|_| rng.gen_f64(0.01, 100.0)).collect();
+        for data in [&lognormal, &uniform] {
+            let mut sk = QuantileSketch::new();
+            for &x in data.iter() {
+                sk.push(x);
+            }
+            let mut sorted = data.clone();
+            sorted.sort_by(f64::total_cmp);
+            for p in [10.0, 50.0, 90.0, 95.0, 99.0] {
+                let exact = percentile(&sorted, p);
+                let approx = sk.quantile(p / 100.0);
+                assert!(
+                    (approx - exact).abs() <= 0.02 * exact.abs(),
+                    "p{p}: sketch {approx} vs exact {exact}"
+                );
+            }
+            assert_eq!(sk.count(), 10_000);
+            assert_eq!(sk.min(), sorted[0]);
+            assert_eq!(sk.max(), sorted[sorted.len() - 1]);
+        }
+    }
+
+    #[test]
+    fn sketch_merge_equals_sequential_and_commutes() {
+        use crate::util::Pcg64;
+        let mut rng = Pcg64::new(5, 9);
+        let data: Vec<f64> = (0..4_000).map(|_| rng.gen_f64(0.0, 500.0)).collect();
+        let mut whole = QuantileSketch::new();
+        for &x in &data {
+            whole.push(x);
+        }
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        for &x in &data[..1_500] {
+            a.push(x);
+        }
+        for &x in &data[1_500..] {
+            b.push(x);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        // Exact state equality, both orders — this is what makes
+        // shard-merged telemetry bit-identical to serial.
+        assert_eq!(ab, whole);
+        assert_eq!(ba, whole);
+        // Merging an empty sketch is the identity in both directions.
+        let mut e = QuantileSketch::new();
+        e.merge(&whole);
+        assert_eq!(e, whole);
+        let mut w2 = whole.clone();
+        w2.merge(&QuantileSketch::new());
+        assert_eq!(w2, whole);
+    }
+
+    #[test]
+    fn sketch_zero_and_nan_samples_count_without_poisoning() {
+        let mut sk = QuantileSketch::new();
+        sk.push(0.0); // a zero-length phase span
+        sk.push(f64::NAN); // a degenerate rate sample
+        for x in [4.0, 5.0, 6.0] {
+            sk.push(x);
+        }
+        assert_eq!(sk.count(), 5);
+        assert_eq!(sk.min(), 0.0);
+        assert_eq!(sk.max(), 6.0);
+        assert_eq!(sk.quantile(0.0), 0.0);
+        let p99 = sk.quantile(0.99);
+        assert!(p99 > 5.0 && p99 <= 6.0, "p99 {p99}");
+        // Empty sketch exports zeros rather than panicking.
+        let empty = QuantileSketch::new();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        assert_eq!((empty.min(), empty.max()), (0.0, 0.0));
+    }
+
+    #[test]
+    fn sketch_approx_sum_tracks_true_sum() {
+        let data: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.37).collect();
+        let mut sk = QuantileSketch::new();
+        for &x in &data {
+            sk.push(x);
+        }
+        let truth: f64 = data.iter().sum();
+        assert!(
+            (sk.approx_sum() - truth).abs() <= 0.01 * truth,
+            "approx {} vs {}",
+            sk.approx_sum(),
+            truth
+        );
     }
 
     #[test]

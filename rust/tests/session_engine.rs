@@ -313,3 +313,90 @@ fn warmed_tail_shards_and_matches_serial_exactly() {
         assert_eq!(now, serial_now, "{threads}-thread federation clock");
     }
 }
+
+#[test]
+fn telemetry_identical_across_thread_counts() {
+    // The telemetry export is built from thread-invariant state
+    // (EngineStats, cache/collector/bus counters, phase sketches folded
+    // in completion order), so the whole snapshot — JSON, exposition,
+    // and trace ring — must be byte-identical at 1/2/8 threads.
+    let ccfg = CampaignConfig {
+        jobs: 96,
+        arrival_window_secs: 30.0,
+        catalog_files: 8,
+        zipf_s: 1.4,
+        background_flows: 1,
+        trace: 64,
+        ..CampaignConfig::default()
+    };
+    let serial = campaign::run_threads(paper_federation(), &ccfg, 1);
+    let snap = &serial.telemetry;
+    // Sanity: the instrumentation actually fired on this run.
+    assert_eq!(
+        snap.registry
+            .counter_value("stashcache_engine_sessions_completed_total"),
+        96
+    );
+    for phase in ["geo_resolve", "cache_check", "transfer"] {
+        let sk = snap
+            .phase_sketch(phase)
+            .unwrap_or_else(|| panic!("missing phase sketch {phase}"));
+        assert!(sk.count() > 0, "phase {phase} recorded no spans");
+    }
+    assert_eq!(snap.traces.len(), 64, "trace ring kept the last 64");
+    assert!(snap.exposition().contains("stashcache_phase_seconds"));
+    for threads in [2usize, 8] {
+        let r = campaign::run_threads(paper_federation(), &ccfg, threads);
+        assert_eq!(
+            r.telemetry, serial.telemetry,
+            "{threads}-thread telemetry snapshot diverged from serial"
+        );
+        assert_eq!(
+            r.telemetry.to_json_string(),
+            snap.to_json_string(),
+            "{threads}-thread metrics JSON"
+        );
+        assert_eq!(
+            r.telemetry.exposition(),
+            snap.exposition(),
+            "{threads}-thread exposition"
+        );
+    }
+}
+
+#[test]
+fn telemetry_off_leaves_results_bit_identical() {
+    // Telemetry must live entirely off the bit-identity surface:
+    // disabling it (or enabling tracing) cannot perturb a single
+    // record, stat, or digest.
+    let on = CampaignConfig {
+        jobs: 96,
+        arrival_window_secs: 30.0,
+        catalog_files: 8,
+        zipf_s: 1.4,
+        background_flows: 1,
+        trace: 32,
+        telemetry: true,
+        ..CampaignConfig::default()
+    };
+    let off = CampaignConfig {
+        trace: 0,
+        telemetry: false,
+        ..on.clone()
+    };
+    let r_on = campaign::run(paper_federation(), &on);
+    let r_off = campaign::run(paper_federation(), &off);
+    assert_eq!(
+        record_digest(&r_on.records),
+        record_digest(&r_off.records),
+        "telemetry on/off changed the record digest"
+    );
+    assert_eq!(r_on.records, r_off.records);
+    assert_eq!(r_on.engine, r_off.engine);
+    assert_eq!(r_on.makespan, r_off.makespan);
+    assert_eq!(r_on.events_processed, r_off.events_processed);
+    // Disabled ⇒ an empty default snapshot, nothing collected.
+    assert!(r_off.telemetry.phases.is_empty());
+    assert!(r_off.telemetry.traces.is_empty());
+    assert!(!r_on.telemetry.traces.is_empty());
+}
