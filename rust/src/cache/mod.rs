@@ -22,7 +22,7 @@ pub mod chunks;
 use crate::config::CacheConfig;
 use crate::util::{ByteSize, SimTime};
 use chunks::ChunkSet;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 /// Per-file cache residency state.
 #[derive(Debug)]
@@ -92,6 +92,13 @@ pub struct CacheServer {
     pub stats: CacheStats,
     /// Every eviction sweep, timestamped (empty until pressure).
     pub eviction_log: Vec<EvictionSweep>,
+    /// Paths whose resident bytes are silently corrupted
+    /// ([`crate::fault::FaultKind::DataCorrupt`]). The cache itself
+    /// cannot tell — clients catch the damage at transfer end via the
+    /// content digest, invalidate, and refetch. The marker dies with
+    /// the residency (invalidate, eviction) or when fresh origin bytes
+    /// are committed over it.
+    poisoned: BTreeSet<String>,
 }
 
 impl CacheServer {
@@ -104,6 +111,7 @@ impl CacheServer {
             seq: 0,
             stats: CacheStats::default(),
             eviction_log: Vec::new(),
+            poisoned: BTreeSet::new(),
         }
     }
 
@@ -263,6 +271,10 @@ impl CacheServer {
         f.access_seq = seq;
         self.usage += added;
         self.stats.bytes_fetched_origin += added;
+        if added > 0 {
+            // Fresh origin bytes replace a poisoned copy.
+            self.poisoned.remove(path);
+        }
         self.maybe_evict(now);
     }
 
@@ -286,13 +298,43 @@ impl CacheServer {
         self.stats.bytes_served_miss += miss_bytes;
     }
 
-    /// Drop all residency for `path` (version change / admin purge).
+    /// Drop all residency for `path` (version change / admin purge /
+    /// client-detected corruption).
     pub fn invalidate(&mut self, path: &str) {
         if let Some(f) = self.files.remove(path) {
             let freed = f.resident.resident_bytes();
             self.usage -= freed;
             self.stats.invalidations += 1;
+            self.poisoned.remove(path);
         }
+    }
+
+    // --- silent corruption ([`crate::fault::FaultKind::DataCorrupt`]) ------
+
+    /// Mark `path`'s resident copy as corrupted. A no-op when nothing
+    /// is resident (there are no bytes to damage; a later fetch brings
+    /// clean ones). Returns whether the marker was set.
+    pub fn poison(&mut self, path: &str) -> bool {
+        let has_bytes = self
+            .files
+            .get(path)
+            .is_some_and(|f| f.resident.count_set() > 0);
+        if has_bytes {
+            self.poisoned.insert(path.to_string());
+        }
+        has_bytes
+    }
+
+    /// Is `path`'s resident copy corrupted? (What a client's digest
+    /// check would report at transfer end.)
+    pub fn is_poisoned(&self, path: &str) -> bool {
+        self.poisoned.contains(path)
+    }
+
+    /// Currently poisoned paths, sorted (the model checker hashes
+    /// these into the state fingerprint).
+    pub fn poisoned_paths(&self) -> impl Iterator<Item = &str> {
+        self.poisoned.iter().map(String::as_str)
     }
 
     /// Watermark eviction: when usage exceeds `high_watermark ×
@@ -329,6 +371,7 @@ impl CacheServer {
             self.usage -= freed;
             self.stats.evictions += 1;
             self.stats.bytes_evicted += freed;
+            self.poisoned.remove(&path);
             sweep.files += 1;
             sweep.bytes += freed;
         }

@@ -84,6 +84,27 @@ fn apply_policy_flag(flags: &Flags, cfg: &mut FederationConfig) -> Result<()> {
     Ok(())
 }
 
+/// `--deadline-factor F` / `--breaker on|off`: override the
+/// federation's gray-failure defences (shared by `campaign` and
+/// `chaos`; sweeps use the `deadline_factors`/`breakers` axes).
+fn apply_resilience_flags(flags: &Flags, cfg: &mut FederationConfig) -> Result<()> {
+    if flags.has("deadline-factor") {
+        let f = flags.get_f64("deadline-factor", cfg.resilience.deadline_factor)?;
+        if !f.is_finite() || f < 0.0 {
+            bail!("--deadline-factor must be finite and >= 0, got {f}");
+        }
+        cfg.resilience.deadline_factor = f;
+    }
+    if let Some(v) = flags.get("breaker") {
+        cfg.resilience.breaker = match v {
+            "on" => true,
+            "off" => false,
+            other => bail!("--breaker must be on|off, got {other:?}"),
+        };
+    }
+    Ok(())
+}
+
 fn parse_policy(name: &str) -> Result<PolicyKind> {
     PolicyKind::from_name(name).ok_or_else(|| {
         anyhow::anyhow!(
@@ -141,6 +162,7 @@ pub fn usage() -> String {
                 [--catalog N] [--method stash|http] [--seed S]\n\
                 [--experiment NAME] [--background N] [--profile]\n\
                 [--policy nearest|least-loaded|consistent-hash|tiered]\n\
+                [--deadline-factor F] [--breaker on|off]\n\
                 [--threads N] [--metrics-out PATH] [--trace N]\n\
                                         run N concurrent Poisson/Zipf jobs through\n\
                                         the session engine (coalescing, contention);\n\
@@ -156,10 +178,16 @@ pub fn usage() -> String {
                 [--kill-cache SITE [--down-at S] [--up-at S]]\n\
                 [--cut-wan SITE [--cut-at S] [--heal-at S]]\n\
                 [--degrade-origin N [--factor F] [--degrade-at S] [--restore-at S]]\n\
+                [--slow-cache SITE:FACTOR [--slow-at S] [--restore-slow-at S]]\n\
                 [--kill-redirector N [--redir-down-at S] [--redir-up-at S]]\n\
+                [--profile degraded]\n\
                                         campaign with mid-transfer faults; sessions\n\
                                         fail over; prints the availability report\n\
-                                        (default: single-cache outage at peak load)\n\
+                                        (default: single-cache outage at peak load);\n\
+                                        --slow-cache is a gray failure (no death\n\
+                                        event — only --deadline-factor/--breaker\n\
+                                        defences can react); --profile degraded is\n\
+                                        the canned 20x-slow-cache drill\n\
        check    [--scenario NAME] [--max-transitions N] [--replay I,J,K]\n\
                                         exhaustively model-check the session\n\
                                         protocol on small-scope scenarios: every\n\
@@ -167,15 +195,19 @@ pub fn usage() -> String {
                                         reservation / byte invariants at every\n\
                                         state; prints a replayable counterexample\n\
                                         trace on violation (--replay re-runs one)\n\
-       sweep    [--preset smoke|proxy-vs-stash|policy] [--grid PATH.toml]\n\
+       sweep    [--preset smoke|proxy-vs-stash|policy|resilience] [--grid PATH.toml]\n\
                 [--threads N] [--reps N] [--seed S] [--out-dir DIR]\n\
                 [--policy NAME | --policies a,b,c] [--profile]\n\
+                [--deadline-factor F] [--breaker on|off]\n\
                 [--metrics-out PATH]\n\
                                         run a deterministic parameter grid in\n\
                                         parallel; writes BENCH_sweep.json, CSVs and\n\
                                         the proxy-vs-StashCache frontier report;\n\
                                         --policies sweeps cache-selection rules\n\
                                         (the policy preset runs all four);\n\
+                                        the resilience preset pairs breaker on/off\n\
+                                        under a gray failure and adds\n\
+                                        BENCH_resilience.json;\n\
                                         --profile prints allocator counters\n\
        usage --days D [--jobs-per-hour J]\n\
                                         run a usage simulation (Tables 1-2, Fig 4)\n\
@@ -455,6 +487,7 @@ fn print_campaign(ccfg: &CampaignConfig, results: &CampaignResults, wall: f64) {
 fn cmd_campaign(flags: &Flags) -> Result<()> {
     let mut cfg = load_config(flags)?;
     apply_policy_flag(flags, &mut cfg)?;
+    apply_resilience_flags(flags, &mut cfg)?;
     let ccfg = parse_campaign(flags, &cfg)?;
     // Default 1 = today's serial path byte-for-byte; N > 1 shards the
     // session engine across OS threads with bit-identical results.
@@ -479,7 +512,18 @@ fn cmd_campaign(flags: &Flags) -> Result<()> {
 fn cmd_chaos(flags: &Flags) -> Result<()> {
     let mut cfg = load_config(flags)?;
     apply_policy_flag(flags, &mut cfg)?;
+    apply_resilience_flags(flags, &mut cfg)?;
     let ccfg = parse_campaign(flags, &cfg)?;
+    // `--profile` doubles as the fault-profile selector here: bare
+    // `--profile` (parsed as "true") keeps its campaign meaning of
+    // allocator counters, `--profile degraded` picks the gray-failure
+    // drill instead of the canonical kill drill.
+    let (degraded, show_profile) = match flags.get("profile") {
+        None => (false, false),
+        Some("true") => (false, true),
+        Some("degraded") => (true, false),
+        Some(other) => bail!("--profile takes no value or `degraded`, got {other:?}"),
+    };
     let mut fed = FedSim::build_with_backend(cfg, geo_backend(flags)?);
     let window = ccfg.arrival_window_secs;
     let mut faults = FaultTimeline::new();
@@ -542,6 +586,43 @@ fn cmd_chaos(flags: &Flags) -> Result<()> {
             SimTime::from_secs_f64(restore_at),
         );
     }
+    if let Some(spec) = flags.get("slow-cache") {
+        // `SITE:FACTOR`, e.g. `--slow-cache syracuse:0.05` — the cache
+        // keeps answering but serves at FACTOR of its provisioned rate.
+        // A gray failure: no death event fires, so only the deadline /
+        // breaker defences can route sessions around it.
+        let (site, factor) = spec.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!("--slow-cache wants SITE:FACTOR, got {spec:?}")
+        })?;
+        let idx = fed
+            .topo
+            .site_index(site)
+            .ok_or_else(|| anyhow::anyhow!("unknown site {site:?}"))?;
+        if !fed.caches.contains_key(&idx) {
+            bail!("site {site:?} has no cache (see `stashcache topology`)");
+        }
+        let factor: f64 = factor
+            .parse()
+            .with_context(|| format!("--slow-cache factor {factor:?} is not a number"))?;
+        if factor <= 0.0 || factor > 1.0 {
+            bail!("--slow-cache factor must be in (0, 1], got {factor}");
+        }
+        let slow_at = flags.get_f64("slow-at", window * 0.1)?;
+        faults.push(
+            SimTime::from_secs_f64(slow_at),
+            FaultKind::CacheSlow { site: idx, factor },
+        );
+        if flags.has("restore-slow-at") {
+            let restore_at = flags.get_f64("restore-slow-at", 0.0)?;
+            if restore_at <= slow_at {
+                bail!("--restore-slow-at ({restore_at}) must be after --slow-at ({slow_at})");
+            }
+            faults.push(
+                SimTime::from_secs_f64(restore_at),
+                FaultKind::CacheRestored { site: idx },
+            );
+        }
+    }
     if flags.has("kill-redirector") {
         let instance = flags.get_usize("kill-redirector", 0)?;
         if instance >= fed.redirectors.instances.len() {
@@ -559,6 +640,29 @@ fn cmd_chaos(flags: &Flags) -> Result<()> {
             instance,
             SimTime::from_secs_f64(down_at),
             SimTime::from_secs_f64(up_at),
+        );
+    }
+    if degraded {
+        // The gray-failure drill: the first campaign site's nearest
+        // cache slows to 5% of its rate early in the window and never
+        // recovers. Pair with --deadline-factor / --breaker on to
+        // watch the defences route sessions around it.
+        let first_site = fed
+            .topo
+            .site_index(&ccfg.sites[0])
+            .expect("site validated above");
+        let victim = fed.nearest_cache_site(first_site);
+        println!(
+            "profile degraded: cache {} slows to 5% at t={:.1}s (no recovery)\n",
+            fed.topo.site_name(victim),
+            window * 0.1,
+        );
+        faults.push(
+            SimTime::from_secs_f64(window * 0.1),
+            FaultKind::CacheSlow {
+                site: victim,
+                factor: 0.05,
+            },
         );
     }
     if faults.is_empty() {
@@ -587,7 +691,7 @@ fn cmd_chaos(flags: &Flags) -> Result<()> {
         "{}",
         paper::phase_latency_table(&results.campaign.telemetry).render()
     );
-    if flags.has("profile") {
+    if show_profile {
         print_allocator_profile(&results.campaign);
         print_monitoring_profile(&results.campaign.telemetry.registry);
     }
@@ -601,6 +705,22 @@ fn cmd_chaos(flags: &Flags) -> Result<()> {
             "  ({} scheduled fault(s) fell after the last completion and were not applied)",
             fed.pending_faults()
         );
+    }
+    if fed.resilience_armed() {
+        println!(
+            "resilience: {} deadline expir(y/ies) | {} corruption(s) detected",
+            results.campaign.engine.deadline_expiries,
+            results.campaign.engine.corruptions_detected,
+        );
+        if let Some(b) = &fed.breaker {
+            println!(
+                "breaker: {} trip(s) | {} reopen(s) | {} recover(y/ies) | {} cache(s) open at end",
+                b.trips,
+                b.reopens,
+                b.recoveries,
+                b.open_count(fed.now),
+            );
+        }
     }
     println!();
     println!("{}", paper::availability_table(&results.availability).render());
@@ -754,7 +874,10 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
             "smoke" => GridSpec::smoke(),
             "proxy-vs-stash" => GridSpec::proxy_vs_stash(),
             "policy" => GridSpec::policy_smoke(),
-            other => bail!("--preset must be smoke|proxy-vs-stash|policy, got {other:?}"),
+            "resilience" => GridSpec::resilience(),
+            other => {
+                bail!("--preset must be smoke|proxy-vs-stash|policy|resilience, got {other:?}")
+            }
         },
     };
     if flags.has("reps") {
@@ -775,6 +898,18 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
             .split(',')
             .map(parse_policy)
             .collect::<Result<Vec<_>>>()?;
+    }
+    // Convenience aliases: collapse a resilience axis to one value
+    // (grid TOMLs use the `deadline_factors` / `breakers` arrays).
+    if flags.has("deadline-factor") {
+        grid.deadline_factors = vec![flags.get_f64("deadline-factor", 0.0)?];
+    }
+    if let Some(v) = flags.get("breaker") {
+        grid.breakers = match v {
+            "on" => vec![true],
+            "off" => vec![false],
+            other => bail!("--breaker must be on|off, got {other:?}"),
+        };
     }
     grid.validate()?;
     validate_workload_refs(
@@ -808,6 +943,9 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
     println!("{}", paper::frontier_table(&results).render());
     if grid.policies.len() > 1 {
         println!("{}", paper::policy_table(&results).render());
+    }
+    if grid.breakers.len() > 1 {
+        println!("{}", paper::resilience_table(&results).render());
     }
     if let Some(t3) = &results.table3 {
         println!("{}", paper::sweep_table3(t3).render());

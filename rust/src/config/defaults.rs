@@ -235,6 +235,7 @@ pub fn paper_federation() -> FederationConfig {
         seed: 20190728, // PEARC '19 started July 28
         redirector_instances: 2,
         redirection: RedirectionConfig::default(),
+        resilience: ResilienceConfig::default(),
         sites,
         origins,
         workload: paper_workload(),
@@ -326,6 +327,18 @@ nearest_k = 3
 virtual_nodes = 64
 regional_km = 2000.0
 location_cache_cap = 65536
+
+# Failover ladder + gray-failure defence. The defaults reproduce the
+# pre-breaker engine exactly: deadline_factor = 0 arms no transfer
+# deadlines and breaker = false never ejects a cache.
+[resilience]
+max_failover_retries = 3
+direct_retry_backoff_secs = 2.0
+deadline_factor = 0.0
+breaker = false
+breaker_alpha = 0.3
+breaker_threshold = 0.5
+breaker_cooldown_secs = 30.0
 
 [[site]]
 name = "syracuse"

@@ -14,5 +14,5 @@ pub mod toml;
 
 pub use schema::{
     CacheConfig, ClientKind, FederationConfig, LinkProfile, OriginConfig, ProxyConfig,
-    RedirectionConfig, SiteConfig, WorkloadConfig,
+    RedirectionConfig, ResilienceConfig, SiteConfig, WorkloadConfig,
 };

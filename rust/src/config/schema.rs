@@ -22,6 +22,9 @@ pub struct FederationConfig {
     pub redirector_instances: usize,
     /// Cache-selection policy and redirector tuning.
     pub redirection: RedirectionConfig,
+    /// Failover ladder, transfer deadlines, and the cache circuit
+    /// breaker.
+    pub resilience: ResilienceConfig,
     /// One entry per site (compute sites, cache sites, or both).
     pub sites: Vec<SiteConfig>,
     /// Data origins and their namespace prefixes.
@@ -133,6 +136,159 @@ impl RedirectionConfig {
             bail!("redirection location_cache_cap must be >= 1");
         }
         Ok(())
+    }
+}
+
+/// Resilience tuning: the failover ladder the session engine walks on
+/// faults and timeouts, the per-transfer progress deadline, and the
+/// per-cache circuit breaker. Parsed from the `[resilience]` TOML
+/// table. The defaults reproduce the pre-breaker engine exactly:
+/// `deadline_factor = 0` arms no timers and `breaker = false` keeps
+/// every cache admitted, so no-fault runs stay byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResilienceConfig {
+    /// Failovers a session attempts before giving up on the cache
+    /// federation and streaming directly from the origin (≥ 1).
+    pub max_failover_retries: u32,
+    /// Backoff between direct-path connection retries while an origin
+    /// route is down, seconds (> 0).
+    pub direct_retry_backoff_secs: f64,
+    /// Transfer-deadline multiplier: a session in a cache transfer (or
+    /// parked on a join) fails over after `expected_time × factor`
+    /// without completing. `0` disables deadlines (the default —
+    /// pre-deadline behavior bit-for-bit); enabled values must be
+    /// ≥ 1 so a healthy transfer can always beat its own deadline.
+    pub deadline_factor: f64,
+    /// Master switch for the per-cache circuit breaker.
+    pub breaker: bool,
+    /// EWMA weight of the newest outcome in the health score (0, 1].
+    pub breaker_alpha: f64,
+    /// Health score at which a closed breaker trips open (0, 1): the
+    /// score is the EWMA of failure indicators, so higher = sicker.
+    pub breaker_threshold: f64,
+    /// Seconds an open breaker ejects its cache before admitting the
+    /// half-open probe session (> 0).
+    pub breaker_cooldown_secs: f64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            max_failover_retries: crate::fault::MAX_FAILOVER_RETRIES,
+            direct_retry_backoff_secs: crate::fault::DIRECT_RETRY_BACKOFF.as_secs_f64(),
+            deadline_factor: 0.0,
+            breaker: false,
+            breaker_alpha: 0.3,
+            breaker_threshold: 0.5,
+            breaker_cooldown_secs: 30.0,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// Parse a `[resilience]` table. Strict like `[redirection]`:
+    /// unknown keys, wrong types, and out-of-range values are errors.
+    pub fn from_table(t: &Table) -> Result<Self> {
+        const KNOWN_KEYS: [&str; 7] = [
+            "max_failover_retries",
+            "direct_retry_backoff_secs",
+            "deadline_factor",
+            "breaker",
+            "breaker_alpha",
+            "breaker_threshold",
+            "breaker_cooldown_secs",
+        ];
+        for key in t.keys() {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                bail!(
+                    "unknown key {key:?} in [resilience] (known: {})",
+                    KNOWN_KEYS.join(", ")
+                );
+            }
+        }
+        let mut r = ResilienceConfig::default();
+        if let Some(v) = t.get("max_failover_retries") {
+            let i = v
+                .as_int()
+                .ok_or_else(|| anyhow!("max_failover_retries must be an integer"))?;
+            if i < 1 {
+                bail!("max_failover_retries must be >= 1, got {i}");
+            }
+            r.max_failover_retries = i as u32;
+        }
+        let float = |v: &Value, what: &str| -> Result<f64> {
+            v.as_float()
+                .ok_or_else(|| anyhow!("{what} must be numeric"))
+        };
+        if let Some(v) = t.get("direct_retry_backoff_secs") {
+            r.direct_retry_backoff_secs = float(v, "direct_retry_backoff_secs")?;
+        }
+        if let Some(v) = t.get("deadline_factor") {
+            r.deadline_factor = float(v, "deadline_factor")?;
+        }
+        if let Some(v) = t.get("breaker") {
+            r.breaker = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("breaker must be a boolean"))?;
+        }
+        if let Some(v) = t.get("breaker_alpha") {
+            r.breaker_alpha = float(v, "breaker_alpha")?;
+        }
+        if let Some(v) = t.get("breaker_threshold") {
+            r.breaker_threshold = float(v, "breaker_threshold")?;
+        }
+        if let Some(v) = t.get("breaker_cooldown_secs") {
+            r.breaker_cooldown_secs = float(v, "breaker_cooldown_secs")?;
+        }
+        r.validate()?;
+        Ok(r)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_failover_retries == 0 {
+            bail!("resilience max_failover_retries must be >= 1");
+        }
+        if !(self.direct_retry_backoff_secs > 0.0 && self.direct_retry_backoff_secs.is_finite()) {
+            bail!(
+                "resilience direct_retry_backoff_secs must be positive and finite, got {}",
+                self.direct_retry_backoff_secs
+            );
+        }
+        if !(self.deadline_factor == 0.0
+            || (self.deadline_factor >= 1.0 && self.deadline_factor.is_finite()))
+        {
+            bail!(
+                "resilience deadline_factor must be 0 (disabled) or >= 1, got {}",
+                self.deadline_factor
+            );
+        }
+        if !(self.breaker_alpha > 0.0 && self.breaker_alpha <= 1.0) {
+            bail!(
+                "resilience breaker_alpha must be in (0, 1], got {}",
+                self.breaker_alpha
+            );
+        }
+        if !(self.breaker_threshold > 0.0 && self.breaker_threshold < 1.0) {
+            bail!(
+                "resilience breaker_threshold must be in (0, 1), got {}",
+                self.breaker_threshold
+            );
+        }
+        if !(self.breaker_cooldown_secs > 0.0 && self.breaker_cooldown_secs.is_finite()) {
+            bail!(
+                "resilience breaker_cooldown_secs must be positive and finite, got {}",
+                self.breaker_cooldown_secs
+            );
+        }
+        Ok(())
+    }
+
+    /// Whether this config changes engine behavior relative to the
+    /// defaults in a way that adds event sources or selection state —
+    /// armed runs stay on the serial engine path (see the epoch gate
+    /// in `federation::driver`).
+    pub fn armed(&self) -> bool {
+        self.deadline_factor > 0.0 || self.breaker
     }
 }
 
@@ -306,6 +462,15 @@ impl FederationConfig {
                 RedirectionConfig::from_table(rt)?
             }
         };
+        let resilience = match t.get("resilience") {
+            None => ResilienceConfig::default(),
+            Some(v) => {
+                let rt = v
+                    .as_table()
+                    .ok_or_else(|| anyhow!("[resilience] must be a table"))?;
+                ResilienceConfig::from_table(rt)?
+            }
+        };
 
         let mut sites = Vec::new();
         if let Some(arr) = t.get("site").and_then(Value::as_array) {
@@ -341,6 +506,7 @@ impl FederationConfig {
             seed,
             redirector_instances,
             redirection,
+            resilience,
             sites,
             origins,
             workload,
@@ -358,6 +524,7 @@ impl FederationConfig {
             bail!("redirector_instances must be >= 1");
         }
         self.redirection.validate()?;
+        self.resilience.validate()?;
         let mut names = std::collections::HashSet::new();
         for s in &self.sites {
             if !names.insert(s.name.as_str()) {
@@ -769,6 +936,85 @@ mod tests {
         assert!(parse("regional_km = 0.0").is_err());
         assert!(parse("location_cache_cap = 0").is_err());
         assert!(parse("policy = \"tiered\"\nregional_km = 500.0").is_ok());
+    }
+
+    #[test]
+    fn resilience_defaults_match_todays_consts() {
+        let cfg = defaults::paper_federation();
+        assert_eq!(
+            cfg.resilience.max_failover_retries,
+            crate::fault::MAX_FAILOVER_RETRIES
+        );
+        assert_eq!(
+            cfg.resilience.direct_retry_backoff_secs,
+            crate::fault::DIRECT_RETRY_BACKOFF.as_secs_f64()
+        );
+        assert_eq!(cfg.resilience.deadline_factor, 0.0);
+        assert!(!cfg.resilience.breaker);
+        assert!(!cfg.resilience.armed(), "defaults arm nothing");
+        assert_eq!(cfg.resilience, ResilienceConfig::default());
+    }
+
+    #[test]
+    fn parse_resilience_table() {
+        let cfg = FederationConfig::from_toml(
+            r#"
+            [federation]
+            name = "mini"
+            seed = 7
+
+            [resilience]
+            deadline_factor = 4.0
+            breaker = true
+            breaker_cooldown_secs = 12.5
+
+            [[site]]
+            name = "a"
+            lat = 40.0
+            lon = -100.0
+            [site.cache]
+            capacity = "2TB"
+
+            [[origin]]
+            name = "o1"
+            site = "a"
+            prefix = "/data"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.resilience.deadline_factor, 4.0);
+        assert!(cfg.resilience.breaker);
+        assert_eq!(cfg.resilience.breaker_cooldown_secs, 12.5);
+        assert!(cfg.resilience.armed());
+        // Unspecified knobs inherit the defaults.
+        let d = ResilienceConfig::default();
+        assert_eq!(cfg.resilience.max_failover_retries, d.max_failover_retries);
+        assert_eq!(cfg.resilience.breaker_alpha, d.breaker_alpha);
+    }
+
+    #[test]
+    fn resilience_table_is_strict() {
+        let parse = |body: &str| {
+            FederationConfig::from_toml(&format!(
+                "[federation]\nname = \"x\"\nseed = 1\n\n[resilience]\n{body}\n\n\
+                 [[site]]\nname = \"a\"\nlat = 0.0\nlon = 0.0\n[site.cache]\ncapacity = \"1TB\"\n\n\
+                 [[origin]]\nname = \"o\"\nsite = \"a\"\nprefix = \"/d\"\n"
+            ))
+        };
+        let e = parse("max_failover_retrys = 3").unwrap_err();
+        assert!(e.to_string().contains("unknown key"), "{e}");
+        assert!(parse("max_failover_retries = 0").is_err());
+        assert!(parse("max_failover_retries = \"three\"").is_err());
+        assert!(parse("direct_retry_backoff_secs = 0.0").is_err());
+        assert!(parse("deadline_factor = 0.5").is_err(), "sub-1 factors reject");
+        assert!(parse("deadline_factor = -2.0").is_err());
+        assert!(parse("breaker = \"yes\"").is_err());
+        assert!(parse("breaker_alpha = 0.0").is_err());
+        assert!(parse("breaker_alpha = 1.5").is_err());
+        assert!(parse("breaker_threshold = 1.0").is_err());
+        assert!(parse("breaker_cooldown_secs = -1.0").is_err());
+        assert!(parse("deadline_factor = 3.0\nbreaker = true").is_ok());
+        assert!(parse("deadline_factor = 0.0").is_ok(), "0 = disabled is valid");
     }
 
     #[test]

@@ -60,7 +60,8 @@ pub fn sweep_json(results: &SweepResults) -> String {
              \"aggregate_mbps\": {:.4}, \"p50_s\": {:.6}, \"p95_s\": {:.6}, \
              \"p99_s\": {:.6}, \"makespan_s\": {:.6}, \"peak_concurrent\": {}, \
              \"coalesced_joins\": {}, \"faults_applied\": {}, \"failovers\": {}, \
-             \"direct_fallbacks\": {}, \"events\": {}, \"allocator_passes\": {}, \
+             \"direct_fallbacks\": {}, \"deadline_expiries\": {}, \
+             \"corruptions_detected\": {}, \"events\": {}, \"allocator_passes\": {}, \
              \"components_touched\": {}, \"flows_refixed\": {}, \
              \"peak_component\": {}, \"records_digest\": \"{}\"}}",
             t.spec.index,
@@ -80,6 +81,8 @@ pub fn sweep_json(results: &SweepResults) -> String {
             t.faults_applied,
             t.failovers,
             t.direct_fallbacks,
+            t.deadline_expiries,
+            t.corruptions_detected,
             t.events_processed,
             t.allocator_passes,
             t.components_touched,
@@ -115,7 +118,8 @@ pub fn sweep_json(results: &SweepResults) -> String {
         m(&mut out, "p50_s", &c.p50_s, false);
         m(&mut out, "p95_s", &c.p95_s, false);
         m(&mut out, "p99_s", &c.p99_s, false);
-        m(&mut out, "failovers", &c.failovers, true);
+        m(&mut out, "failovers", &c.failovers, false);
+        m(&mut out, "deadline_expiries", &c.deadline_expiries, true);
         out.push('}');
         out.push_str(if i + 1 < results.cells.len() { ",\n" } else { "\n" });
     }
@@ -142,14 +146,74 @@ pub fn sweep_json(results: &SweepResults) -> String {
     out
 }
 
+/// Canonical resilience artifact (`BENCH_resilience.json`): the
+/// breaker-off/on cell pairs of [`paper::resilience_table`] as data.
+/// Cells are paired on [`CellKey::resilience_pair_label`] — everything
+/// but the breaker bit — so each pair compares identical workload,
+/// fault schedule, policy, and deadline settings. The pair list is
+/// empty when the grid swept only one breaker setting.
+///
+/// [`CellKey::resilience_pair_label`]:
+///     crate::experiment::grid::CellKey::resilience_pair_label
+pub fn resilience_json(results: &SweepResults) -> String {
+    let mut pairs = Vec::new();
+    for off in results.cells.iter().filter(|c| !c.cell.breaker) {
+        let Some(on) = results.cells.iter().find(|c| {
+            c.cell.breaker && c.cell.resilience_pair_label() == off.cell.resilience_pair_label()
+        }) else {
+            continue;
+        };
+        pairs.push((off, on));
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"bench\": \"resilience\",");
+    let _ = writeln!(out, "  \"grid\": {},", json_str(&results.grid.name));
+    let _ = writeln!(out, "  \"root_seed\": {},", results.grid.root_seed);
+    out.push_str("  \"pairs\": [\n");
+    for (i, (off, on)) in pairs.iter().enumerate() {
+        let side = |out: &mut String, name: &str, c: &super::summary::CellSummary| {
+            let _ = write!(
+                out,
+                "\"{name}\": {{\"aggregate_mbps\": {:.4}, \"p99_s\": {:.6}, \
+                 \"origin_gb\": {:.6}, \"failovers\": {:.2}, \
+                 \"deadline_expiries\": {:.2}}}",
+                c.aggregate_mbps.mean,
+                c.p99_s.mean,
+                c.origin_gb.mean,
+                c.failovers.mean,
+                c.deadline_expiries.mean,
+            );
+        };
+        let gain = if off.aggregate_mbps.mean > 0.0 {
+            (on.aggregate_mbps.mean - off.aggregate_mbps.mean) / off.aggregate_mbps.mean * 100.0
+        } else {
+            0.0
+        };
+        let _ = write!(
+            out,
+            "    {{\"cell\": {}, \"faults\": {}, ",
+            json_str(&off.cell.resilience_pair_label()),
+            json_str(off.cell.fault_profile.name()),
+        );
+        side(&mut out, "off", off);
+        out.push_str(", ");
+        side(&mut out, "on", on);
+        let _ = write!(out, ", \"goodput_gain_pct\": {gain:.4}}}");
+        out.push_str(if i + 1 < pairs.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 /// Per-trial flat table (CSV artifact).
 pub fn trials_table(results: &SweepResults) -> Table {
     let mut t = Table::new(
         format!("Sweep {:?}: trials", results.grid.name),
         &[
             "index", "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "policy",
-            "rep", "seed", "downloads", "hit_ratio", "origin_bytes", "aggregate_mbps", "p50_s",
-            "p95_s", "p99_s", "failovers", "digest",
+            "deadline", "breaker", "rep", "seed", "downloads", "hit_ratio", "origin_bytes",
+            "aggregate_mbps", "p50_s", "p95_s", "p99_s", "failovers", "expiries", "digest",
         ],
     );
     for o in &results.trials {
@@ -164,6 +228,8 @@ pub fn trials_table(results: &SweepResults) -> Table {
             c.size_profile.name().to_string(),
             c.fault_profile.name().to_string(),
             c.policy.name().to_string(),
+            format!("{:.2}", c.deadline_factor),
+            if c.breaker { "on" } else { "off" }.to_string(),
             o.spec.rep.to_string(),
             o.spec.seed.to_string(),
             o.downloads.to_string(),
@@ -174,6 +240,7 @@ pub fn trials_table(results: &SweepResults) -> Table {
             format!("{:.4}", o.p95_s),
             format!("{:.4}", o.p99_s),
             o.failovers.to_string(),
+            o.deadline_expiries.to_string(),
             o.records_digest.to_string(),
         ]);
     }
@@ -190,8 +257,9 @@ pub fn cells_table(results: &SweepResults) -> Table {
             results.grid.reps,
         ),
         &[
-            "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "policy", "hit%",
-            "origin GB", "Mbps", "±ci95", "p50 s", "p95 s", "p99 s", "failovers",
+            "method", "cap", "jobs", "window_s", "zipf", "sizes", "faults", "policy", "deadline",
+            "breaker", "hit%", "origin GB", "Mbps", "±ci95", "p50 s", "p95 s", "p99 s",
+            "failovers", "expiries",
         ],
     );
     for c in &results.cells {
@@ -205,6 +273,8 @@ pub fn cells_table(results: &SweepResults) -> Table {
             k.size_profile.name().to_string(),
             k.fault_profile.name().to_string(),
             k.policy.name().to_string(),
+            format!("{:.2}", k.deadline_factor),
+            if k.breaker { "on" } else { "off" }.to_string(),
             format!("{:.1}", 100.0 * c.hit_ratio.mean),
             format!("{:.2}", c.origin_gb.mean),
             format!("{:.0}", c.aggregate_mbps.mean),
@@ -213,6 +283,7 @@ pub fn cells_table(results: &SweepResults) -> Table {
             format!("{:.2}", c.p95_s.mean),
             format!("{:.2}", c.p99_s.mean),
             format!("{:.1}", c.failovers.mean),
+            format!("{:.1}", c.deadline_expiries.mean),
         ]);
     }
     t
@@ -242,6 +313,13 @@ pub fn write_all(dir: &Path, results: &SweepResults) -> std::io::Result<Vec<Path
         // cache-selection rule) rides next to the method frontier.
         frontier.push('\n');
         frontier.push_str(&paper::policy_table(results).to_markdown());
+    }
+    if results.grid.breakers.len() > 1 {
+        // Breaker-on/off pairs exist: emit the resilience comparison
+        // as both machine-readable JSON and a markdown table.
+        frontier.push('\n');
+        frontier.push_str(&paper::resilience_table(results).to_markdown());
+        emit("BENCH_resilience.json", resilience_json(results))?;
     }
     if let Some(t3) = &results.table3 {
         frontier.push('\n');
@@ -292,6 +370,31 @@ mod tests {
         assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
         // Non-ASCII passes through un-escaped (valid UTF-8 JSON).
         assert_eq!(json_str("café"), "\"café\"");
+    }
+
+    #[test]
+    fn resilience_json_pairs_breaker_twins() {
+        let grid = GridSpec {
+            jobs: vec![6],
+            reps: 1,
+            capacity_scales: vec![1.0],
+            methods: vec![DownloadMethod::Stash],
+            fault_profiles: vec![crate::experiment::grid::FaultProfile::Degraded],
+            deadline_factors: vec![3.0],
+            breakers: vec![false, true],
+            arrival_windows: vec![4.0],
+            catalog_files: 16,
+            background_flows: 0,
+            ..GridSpec::smoke()
+        };
+        let r = run_grid(&paper_federation(), &grid, 1);
+        let json = resilience_json(&r);
+        assert!(json.contains("\"bench\": \"resilience\""));
+        // One off-cell, one on-cell ⇒ exactly one pair.
+        assert_eq!(json.matches("goodput_gain_pct").count(), 1);
+        assert!(json.contains("\"faults\": \"degraded\""));
+        // Pure function of the results: rendering twice is stable.
+        assert_eq!(json, resilience_json(&r));
     }
 
     #[test]

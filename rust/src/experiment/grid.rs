@@ -97,6 +97,11 @@ pub enum FaultProfile {
     /// Origin 0's DTN capacity drops to 25% from 0.1·window to
     /// 0.9·window.
     OriginBrownout,
+    /// Gray failure: the first campaign site's nearest cache degrades
+    /// to 5% of its serving capacity (≈20× slower) at 0.1·window and
+    /// never recovers — no death event, so only transfer deadlines and
+    /// the circuit breaker get sessions off it.
+    Degraded,
 }
 
 impl FaultProfile {
@@ -105,6 +110,7 @@ impl FaultProfile {
             FaultProfile::None => "none",
             FaultProfile::CacheOutage => "cache-outage",
             FaultProfile::OriginBrownout => "origin-brownout",
+            FaultProfile::Degraded => "degraded",
         }
     }
 
@@ -113,6 +119,7 @@ impl FaultProfile {
             "none" => Some(FaultProfile::None),
             "cache-outage" => Some(FaultProfile::CacheOutage),
             "origin-brownout" => Some(FaultProfile::OriginBrownout),
+            "degraded" => Some(FaultProfile::Degraded),
             _ => None,
         }
     }
@@ -149,12 +156,19 @@ pub struct CellKey {
     pub fault_profile: FaultProfile,
     /// Redirection policy the federation runs this cell under.
     pub policy: PolicyKind,
+    /// Transfer-deadline multiplier this cell runs under (0 = off).
+    pub deadline_factor: f64,
+    /// Circuit breaker armed for this cell?
+    pub breaker: bool,
 }
 
 impl CellKey {
     /// Canonical label of the cell's workload axes — everything except
-    /// the method *and* the policy. The policy comparison table pairs
-    /// cells on this (same workload, different placement rule).
+    /// the method, the policy, and the resilience knobs. The policy
+    /// comparison table pairs cells on this (same workload, different
+    /// placement rule), and the breaker-on/off variants of a cell hash
+    /// it for their shared seed: resilience settings never perturb the
+    /// workload realization they are measured against.
     pub fn workload_label(&self) -> String {
         format!(
             "cap={:.2} jobs={} window={:.1} zipf={:.2} sizes={} faults={}",
@@ -169,14 +183,35 @@ impl CellKey {
 
     /// Canonical label of the cell *excluding* the method axis — the
     /// key the frontier report pairs proxy and StashCache cells on
-    /// (twins share the policy, so it is part of this label).
+    /// (twins share the policy and resilience knobs, so those are part
+    /// of this label).
     pub fn base_label(&self) -> String {
-        format!("{} policy={}", self.workload_label(), self.policy.name())
+        format!(
+            "{} policy={} deadline={:.2} breaker={}",
+            self.workload_label(),
+            self.policy.name(),
+            self.deadline_factor,
+            if self.breaker { "on" } else { "off" },
+        )
     }
 
     /// Canonical label of the full cell (seed material + report rows).
     pub fn label(&self) -> String {
         format!("method={} {}", method_name(self.method), self.base_label())
+    }
+
+    /// Pairing key of the resilience table: everything except the
+    /// breaker axis, so the breaker-on and breaker-off runs of one
+    /// cell (identical workload seed, identical fault schedule) land
+    /// in one row.
+    pub fn resilience_pair_label(&self) -> String {
+        format!(
+            "method={} {} policy={} deadline={:.2}",
+            method_name(self.method),
+            self.workload_label(),
+            self.policy.name(),
+            self.deadline_factor,
+        )
     }
 }
 
@@ -233,6 +268,11 @@ pub struct GridSpec {
     pub fault_profiles: Vec<FaultProfile>,
     /// Redirection policies (cache-selection rules) to sweep.
     pub policies: Vec<PolicyKind>,
+    /// Transfer-deadline multipliers to sweep (0 = deadlines off).
+    pub deadline_factors: Vec<f64>,
+    /// Circuit-breaker settings to sweep (`[false, true]` gives the
+    /// resilience table its breaker-on/off pairs).
+    pub breakers: Vec<bool>,
     // Shared trial knobs.
     pub sites: Vec<String>,
     pub experiment: String,
@@ -260,6 +300,8 @@ impl GridSpec {
             size_profiles: vec![SizeProfile::Paper],
             fault_profiles: vec![FaultProfile::None, FaultProfile::CacheOutage],
             policies: vec![PolicyKind::Nearest],
+            deadline_factors: vec![0.0],
+            breakers: vec![false],
             sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
             experiment: "gwosc".into(),
             catalog_files: 64,
@@ -289,6 +331,8 @@ impl GridSpec {
             size_profiles: vec![SizeProfile::Paper],
             fault_profiles: vec![FaultProfile::None],
             policies: ALL_POLICIES.to_vec(),
+            deadline_factors: vec![0.0],
+            breakers: vec![false],
             sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
             experiment: "gwosc".into(),
             catalog_files: 12,
@@ -314,12 +358,45 @@ impl GridSpec {
             size_profiles: vec![SizeProfile::Paper, SizeProfile::Small],
             fault_profiles: vec![FaultProfile::None],
             policies: vec![PolicyKind::Nearest],
+            deadline_factors: vec![0.0],
+            breakers: vec![false],
             sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
             experiment: "gwosc".into(),
             catalog_files: 128,
             files_per_job: (1, 1),
             background_flows: 1,
             table3_cell: true,
+        }
+    }
+
+    /// The gray-failure resilience preset: a no-fault baseline and a
+    /// degraded-cache cell (first site's nearest cache 20× slower, no
+    /// death event), each run with transfer deadlines armed and the
+    /// breaker both off and on. The breaker twins share a workload
+    /// seed and a fault schedule, so the resilience table isolates
+    /// what the breaker buys: breaker-on goodput must beat breaker-off
+    /// under the identical gray failure.
+    pub fn resilience() -> Self {
+        GridSpec {
+            name: "resilience".into(),
+            root_seed: 20190728,
+            reps: 1,
+            methods: vec![DownloadMethod::Stash],
+            capacity_scales: vec![1.0],
+            jobs: vec![48],
+            arrival_windows: vec![20.0],
+            zipf_s: vec![1.1],
+            size_profiles: vec![SizeProfile::Paper],
+            fault_profiles: vec![FaultProfile::None, FaultProfile::Degraded],
+            policies: vec![PolicyKind::Nearest],
+            deadline_factors: vec![3.0],
+            breakers: vec![false, true],
+            sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+            experiment: "gwosc".into(),
+            catalog_files: 64,
+            files_per_job: (1, 1),
+            background_flows: 1,
+            table3_cell: false,
         }
     }
 
@@ -333,6 +410,8 @@ impl GridSpec {
             * self.size_profiles.len()
             * self.fault_profiles.len()
             * self.policies.len()
+            * self.deadline_factors.len()
+            * self.breakers.len()
             * self.reps
     }
 
@@ -348,24 +427,34 @@ impl GridSpec {
                             for &size_profile in &self.size_profiles {
                                 for &fault_profile in &self.fault_profiles {
                                     for &policy in &self.policies {
-                                        let cell = CellKey {
-                                            method,
-                                            capacity_scale,
-                                            jobs,
-                                            arrival_window_secs,
-                                            zipf_s,
-                                            size_profile,
-                                            fault_profile,
-                                            policy,
-                                        };
-                                        for rep in 0..self.reps {
-                                            out.push(TrialSpec {
-                                                index,
-                                                cell: cell.clone(),
-                                                rep,
-                                                seed: trial_seed(self.root_seed, &cell, rep),
-                                            });
-                                            index += 1;
+                                        for &deadline_factor in &self.deadline_factors {
+                                            for &breaker in &self.breakers {
+                                                let cell = CellKey {
+                                                    method,
+                                                    capacity_scale,
+                                                    jobs,
+                                                    arrival_window_secs,
+                                                    zipf_s,
+                                                    size_profile,
+                                                    fault_profile,
+                                                    policy,
+                                                    deadline_factor,
+                                                    breaker,
+                                                };
+                                                for rep in 0..self.reps {
+                                                    out.push(TrialSpec {
+                                                        index,
+                                                        cell: cell.clone(),
+                                                        rep,
+                                                        seed: trial_seed(
+                                                            self.root_seed,
+                                                            &cell,
+                                                            rep,
+                                                        ),
+                                                    });
+                                                    index += 1;
+                                                }
+                                            }
                                         }
                                     }
                                 }
@@ -392,6 +481,8 @@ impl GridSpec {
             ("size_profiles", self.size_profiles.is_empty()),
             ("fault_profiles", self.fault_profiles.is_empty()),
             ("policies", self.policies.is_empty()),
+            ("deadline_factors", self.deadline_factors.is_empty()),
+            ("breakers", self.breakers.is_empty()),
         ] {
             if empty {
                 bail!("grid axis {axis:?} is empty");
@@ -408,6 +499,13 @@ impl GridSpec {
         }
         if self.zipf_s.iter().any(|&z| z < 0.0) {
             bail!("zipf skew must be >= 0");
+        }
+        if self
+            .deadline_factors
+            .iter()
+            .any(|&f| !f.is_finite() || f < 0.0)
+        {
+            bail!("deadline factors must be finite and >= 0 (0 disables deadlines)");
         }
         // Duplicate axis values would replay identical cell labels —
         // and therefore identical stateless seeds — corrupting cell
@@ -450,6 +548,14 @@ impl GridSpec {
             self.policies.iter().map(|p| p.name().to_string()).collect(),
             "policies",
         )?;
+        unique(
+            self.deadline_factors.iter().map(|f| format!("{f:.2}")).collect(),
+            "deadline_factors",
+        )?;
+        unique(
+            self.breakers.iter().map(|b| b.to_string()).collect(),
+            "breakers",
+        )?;
         if self.sites.is_empty() {
             bail!("grid has no sites");
         }
@@ -474,11 +580,11 @@ impl GridSpec {
     /// are errors — never silently replaced by defaults. Omitted keys
     /// inherit the [`GridSpec::smoke`] baseline.
     pub fn from_toml(text: &str) -> Result<Self> {
-        const KNOWN_KEYS: [&str; 17] = [
+        const KNOWN_KEYS: [&str; 19] = [
             "name", "seed", "reps", "methods", "capacity_scales", "jobs",
             "arrival_window_secs", "zipf_s", "size_profiles", "fault_profiles", "policies",
-            "sites", "experiment", "catalog_files", "files_per_job", "background_flows",
-            "table3_cell",
+            "deadline_factors", "breakers", "sites", "experiment", "catalog_files",
+            "files_per_job", "background_flows", "table3_cell",
         ];
         let root = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
         let sweep = root
@@ -544,7 +650,10 @@ impl GridSpec {
                 .map(|v| {
                     let name = req_str(v, "fault_profiles entry")?;
                     FaultProfile::from_name(&name).ok_or_else(|| {
-                        anyhow!("unknown fault profile {name:?} (none|cache-outage|origin-brownout)")
+                        anyhow!(
+                            "unknown fault profile {name:?} \
+                             (none|cache-outage|origin-brownout|degraded)"
+                        )
                     })
                 })
                 .collect::<Result<_>>()?;
@@ -560,6 +669,18 @@ impl GridSpec {
                             crate::redirector::POLICY_NAMES
                         )
                     })
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = sweep.get("deadline_factors") {
+            grid.deadline_factors = float_array(v, "deadline_factors")?;
+        }
+        if let Some(v) = sweep.get("breakers") {
+            grid.breakers = req_array(v, "breakers")?
+                .iter()
+                .map(|v| {
+                    v.as_bool()
+                        .ok_or_else(|| anyhow!("breakers entries must be booleans"))
                 })
                 .collect::<Result<_>>()?;
         }
@@ -736,6 +857,48 @@ mod tests {
         let grid = GridSpec::policy_smoke();
         grid.validate().unwrap();
         assert_eq!(grid.trial_count(), 2 * 4, "4 policies × stash/http");
+    }
+
+    #[test]
+    fn resilience_axes_expand_and_share_workload_seeds() {
+        let grid = GridSpec {
+            deadline_factors: vec![3.0],
+            breakers: vec![false, true],
+            ..GridSpec::smoke()
+        };
+        let trials = grid.trials();
+        assert_eq!(trials.len(), GridSpec::smoke().trial_count() * 2);
+        // The breaker-on twin of every cell draws the identical
+        // workload (same seed) — the resilience table's pairing rests
+        // on this — while the full label still distinguishes them.
+        for t in trials.iter().filter(|t| !t.cell.breaker) {
+            let twin = trials
+                .iter()
+                .find(|o| {
+                    o.cell.breaker
+                        && o.cell.resilience_pair_label() == t.cell.resilience_pair_label()
+                        && o.rep == t.rep
+                })
+                .expect("breaker twin exists");
+            assert_eq!(t.seed, twin.seed, "workload seed shared across breaker");
+            assert_ne!(t.cell.label(), twin.cell.label());
+        }
+        GridSpec::resilience().validate().unwrap();
+    }
+
+    #[test]
+    fn resilience_axes_parse_from_toml() {
+        let g = GridSpec::from_toml(
+            "[sweep]\ndeadline_factors = [2.0]\nbreakers = [false, true]\n",
+        )
+        .unwrap();
+        assert_eq!(g.deadline_factors, vec![2.0]);
+        assert_eq!(g.breakers, vec![false, true]);
+        assert!(GridSpec::from_toml("[sweep]\nfault_profiles = [\"degraded\"]\n").is_ok());
+        assert!(GridSpec::from_toml("[sweep]\nbreakers = [1]\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\nbreakers = []\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\ndeadline_factors = [-1.0]\n").is_err());
+        assert!(GridSpec::from_toml("[sweep]\nbreakers = [true, true]\n").is_err());
     }
 
     #[test]

@@ -108,6 +108,10 @@ pub fn execute_trial(
     spec.cell.size_profile.apply(&mut cfg.workload);
     // The cell's redirection policy (cache-selection rule).
     cfg.redirection.policy = spec.cell.policy;
+    // The cell's resilience knobs (gray-failure defences): transfer
+    // deadlines and the per-cache circuit breaker.
+    cfg.resilience.deadline_factor = spec.cell.deadline_factor;
+    cfg.resilience.breaker = spec.cell.breaker;
 
     let mut fed = FedSim::build(cfg);
     let ccfg = CampaignConfig {
@@ -147,6 +151,26 @@ pub fn execute_trial(
                 0.25,
                 SimTime::from_secs_f64(window * 0.1),
                 SimTime::from_secs_f64(window * 0.9),
+            );
+            campaign::run_on_with_faults(&mut fed, &ccfg, &faults).campaign
+        }
+        FaultProfile::Degraded => {
+            // Gray failure: the first site's nearest cache slows to 5%
+            // of its serving capacity early in the window and never
+            // recovers. No death event fires, so only the cell's
+            // deadline/breaker settings can route sessions around it.
+            let first = fed
+                .topo
+                .site_index(&grid.sites[0])
+                .unwrap_or_else(|| panic!("unknown grid site {}", grid.sites[0]));
+            let victim = fed.nearest_cache_site(first);
+            let mut faults = FaultTimeline::new();
+            faults.push(
+                SimTime::from_secs_f64(window * 0.1),
+                FaultKind::CacheSlow {
+                    site: victim,
+                    factor: 0.05,
+                },
             );
             campaign::run_on_with_faults(&mut fed, &ccfg, &faults).campaign
         }
@@ -236,5 +260,26 @@ mod tests {
         assert_eq!(r.trials.len(), 1);
         let t = &r.trials[0];
         assert_eq!(t.downloads, 12, "every job completes despite the outage");
+    }
+
+    #[test]
+    fn degraded_profile_completes_with_deadlines_and_breaker_armed() {
+        let base = paper_federation();
+        let grid = GridSpec {
+            fault_profiles: vec![FaultProfile::Degraded],
+            deadline_factors: vec![3.0],
+            breakers: vec![true],
+            jobs: vec![12],
+            arrival_windows: vec![4.0],
+            reps: 1,
+            ..tiny_grid()
+        };
+        let r = run_grid(&base, &grid, 2);
+        assert_eq!(r.trials.len(), 1);
+        let t = &r.trials[0];
+        assert_eq!(
+            t.downloads, 12,
+            "every job completes despite the 20x-slow cache"
+        );
     }
 }

@@ -38,6 +38,10 @@ pub struct TrialOutcome {
     pub faults_applied: u64,
     pub failovers: u64,
     pub direct_fallbacks: u64,
+    /// Transfer deadlines that expired (gray-failure failovers).
+    pub deadline_expiries: u64,
+    /// Digest-check failures caught at transfer end.
+    pub corruptions_detected: u64,
     pub events_processed: u64,
     /// Allocator counters (see `netsim::AllocStats`): passes run,
     /// component water-fills, flow rate assignments, and the largest
@@ -120,6 +124,8 @@ pub fn outcome_of(spec: &TrialSpec, results: &CampaignResults, fed: &FedSim) -> 
         faults_applied: results.engine.faults_applied,
         failovers: results.engine.failovers,
         direct_fallbacks: results.engine.direct_fallbacks,
+        deadline_expiries: results.engine.deadline_expiries,
+        corruptions_detected: results.engine.corruptions_detected,
         events_processed: results.events_processed,
         allocator_passes: results.engine.allocator_passes,
         components_touched: results.engine.components_touched,
@@ -162,6 +168,7 @@ pub struct CellSummary {
     pub p95_s: Metric,
     pub p99_s: Metric,
     pub failovers: Metric,
+    pub deadline_expiries: Metric,
 }
 
 /// One row of the §4.1 Table 3 cell (percent difference in download
@@ -222,6 +229,7 @@ pub fn summarize(
             p95_s: Metric::of(&col(&|t| t.p95_s)),
             p99_s: Metric::of(&col(&|t| t.p99_s)),
             failovers: Metric::of(&col(&|t| t.failovers as f64)),
+            deadline_expiries: Metric::of(&col(&|t| t.deadline_expiries as f64)),
         });
         i = j;
     }

@@ -28,7 +28,7 @@
 
 pub mod timeline;
 
-pub use timeline::FaultTimeline;
+pub use timeline::{FaultDims, FaultTimeline, TimelineError};
 
 use crate::netsim::LinkId;
 use crate::util::{Duration, SimTime};
@@ -45,7 +45,7 @@ pub const MAX_FAILOVER_RETRIES: u32 = 3;
 pub const DIRECT_RETRY_BACKOFF: Duration = Duration::from_secs(2);
 
 /// One kind of component failure (or recovery).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum FaultKind {
     /// The cache at `cfg.sites[site]` becomes unreachable. In-flight
     /// transfers it serves abort; its disk contents survive.
@@ -66,10 +66,23 @@ pub enum FaultKind {
     RedirectorDown { instance: usize },
     /// The redirector instance recovers.
     RedirectorUp { instance: usize },
+    /// Gray failure: the cache still answers, but its serving links
+    /// (worker LAN + WAN legs) degrade to `factor` of capacity — a
+    /// sick disk array, an overloaded host, a half-dead NIC. Sessions
+    /// keep transferring; only a transfer deadline (or the circuit
+    /// breaker) gets them off the slow cache.
+    CacheSlow { site: usize, factor: f64 },
+    /// The slow cache's serving links return to full capacity.
+    CacheRestored { site: usize },
+    /// A resident copy of `path` at the cache is silently corrupted.
+    /// Clients detect the damage at transfer end via the content
+    /// digest ([`crate::origin::content`]) and must exclude-and-refetch;
+    /// a fresh origin fetch replaces the poisoned bytes.
+    DataCorrupt { site: usize, path: String },
 }
 
 /// A scheduled fault: `kind` applies at virtual time `at`.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FaultEvent {
     pub at: SimTime,
     pub kind: FaultKind,

@@ -10,12 +10,88 @@
 use crate::netsim::LinkId;
 use crate::util::SimTime;
 use super::{FaultEvent, FaultKind};
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::fmt;
 
 /// An ordered set of scheduled faults.
 #[derive(Debug, Clone, Default)]
 pub struct FaultTimeline {
     events: Vec<FaultEvent>,
 }
+
+/// The federation dimensions a timeline is validated against — what
+/// exists to fail. Built by [`crate::federation::FedSim::fault_dims`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultDims {
+    /// Site indices that host a cache (cache faults must hit one).
+    pub cache_sites: BTreeSet<usize>,
+    /// Number of origins.
+    pub origins: usize,
+    /// Number of network links.
+    pub links: usize,
+    /// Number of redirector instances.
+    pub redirector_instances: usize,
+}
+
+/// Why a fault timeline was rejected at injection time. Every variant
+/// is a schedule that would otherwise panic (or silently misbehave)
+/// deep inside the engine mid-run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TimelineError {
+    /// A cache fault names a site with no cache (or out of range).
+    UnknownCacheSite { event: String, site: usize },
+    /// An origin fault's index is out of range.
+    OriginOutOfRange { event: String, origin: usize, origins: usize },
+    /// A link fault's index is out of range.
+    LinkOutOfRange { event: String, link: u32, links: usize },
+    /// A redirector fault's instance is out of range.
+    InstanceOutOfRange { event: String, instance: usize, instances: usize },
+    /// A recovery event (`*Up` / `*Restored`) with no matching open
+    /// failure at its instant.
+    UnmatchedRecovery { event: String, at: SimTime },
+    /// A recovery scheduled at or before the failure it closes.
+    NonMonotone { event: String, opened_at: SimTime, at: SimTime },
+    /// A degrade factor outside (0, 1].
+    BadFactor { event: String, factor: f64 },
+    /// A `DataCorrupt` with an empty path.
+    EmptyPath { at: SimTime },
+}
+
+impl fmt::Display for TimelineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TimelineError::UnknownCacheSite { event, site } => {
+                write!(f, "{event} names site {site}, which hosts no cache")
+            }
+            TimelineError::OriginOutOfRange { event, origin, origins } => {
+                write!(f, "{event} names origin {origin}, but only {origins} exist")
+            }
+            TimelineError::LinkOutOfRange { event, link, links } => {
+                write!(f, "{event} names link {link}, but only {links} exist")
+            }
+            TimelineError::InstanceOutOfRange { event, instance, instances } => write!(
+                f,
+                "{event} names redirector {instance}, but only {instances} exist"
+            ),
+            TimelineError::UnmatchedRecovery { event, at } => {
+                write!(f, "{event} at {at} has no matching open failure")
+            }
+            TimelineError::NonMonotone { event, opened_at, at } => write!(
+                f,
+                "{event} at {at} does not strictly follow the failure it closes (opened at {opened_at})"
+            ),
+            TimelineError::BadFactor { event, factor } => {
+                write!(f, "{event} factor must be in (0, 1], got {factor}")
+            }
+            TimelineError::EmptyPath { at } => {
+                write!(f, "DataCorrupt at {at} has an empty path")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TimelineError {}
 
 impl FaultTimeline {
     pub fn new() -> Self {
@@ -60,6 +136,37 @@ impl FaultTimeline {
         self.push(to, FaultKind::OriginRestored { origin })
     }
 
+    /// A cache slowdown (gray failure): the cache's serving links run
+    /// at `factor` of capacity from `from` to `to`.
+    pub fn cache_slowdown(
+        &mut self,
+        site: usize,
+        factor: f64,
+        from: SimTime,
+        to: SimTime,
+    ) -> &mut Self {
+        assert!(
+            factor > 0.0 && factor <= 1.0,
+            "slowdown factor must be in (0, 1], got {factor}"
+        );
+        assert!(from < to, "slowdown must end after it starts");
+        self.push(from, FaultKind::CacheSlow { site, factor });
+        self.push(to, FaultKind::CacheRestored { site })
+    }
+
+    /// Silent corruption of one resident file at a cache. No paired
+    /// recovery: the poison clears when a client detects it and the
+    /// refetched bytes commit.
+    pub fn data_corruption(&mut self, site: usize, path: impl Into<String>, at: SimTime) -> &mut Self {
+        self.push(
+            at,
+            FaultKind::DataCorrupt {
+                site,
+                path: path.into(),
+            },
+        )
+    }
+
     /// A redirector-instance outage (the HA pair degrades to one).
     pub fn redirector_outage(
         &mut self,
@@ -84,6 +191,161 @@ impl FaultTimeline {
 
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
+    }
+
+    /// Check the schedule against the federation's dimensions: every
+    /// index exists, every recovery closes an open failure, and every
+    /// recovery strictly follows the failure it closes. Runs at
+    /// injection time ([`crate::federation::FedSim::inject_faults`]),
+    /// so a bad schedule is a typed error up front instead of an
+    /// engine panic hours into a run.
+    ///
+    /// Events are walked in applied order (stable sort by instant,
+    /// insertion order breaking ties) — the same order the engine
+    /// fires them. A failure with no recovery is valid (the component
+    /// stays dark); duplicate failures are idempotent, like
+    /// [`super::FaultState`].
+    pub fn validate(&self, dims: &FaultDims) -> Result<(), TimelineError> {
+        let mut order: Vec<usize> = (0..self.events.len()).collect();
+        order.sort_by_key(|&i| self.events[i].at);
+
+        let cache_site = |event: &str, site: usize| -> Result<(), TimelineError> {
+            if dims.cache_sites.contains(&site) {
+                Ok(())
+            } else {
+                Err(TimelineError::UnknownCacheSite {
+                    event: event.into(),
+                    site,
+                })
+            }
+        };
+        let factor_ok = |event: &str, factor: f64| -> Result<(), TimelineError> {
+            if factor > 0.0 && factor <= 1.0 && factor.is_finite() {
+                Ok(())
+            } else {
+                Err(TimelineError::BadFactor {
+                    event: event.into(),
+                    factor,
+                })
+            }
+        };
+        // Open failures by component, keyed on the instant they began.
+        let mut down: BTreeMap<usize, SimTime> = BTreeMap::new();
+        let mut slow: BTreeMap<usize, SimTime> = BTreeMap::new();
+        let mut cut: BTreeMap<u32, SimTime> = BTreeMap::new();
+        let mut degraded: BTreeMap<usize, SimTime> = BTreeMap::new();
+        let mut redirector: BTreeMap<usize, SimTime> = BTreeMap::new();
+        let close = |opened: Option<SimTime>, event: &str, at: SimTime| -> Result<(), TimelineError> {
+            match opened {
+                None => Err(TimelineError::UnmatchedRecovery {
+                    event: event.into(),
+                    at,
+                }),
+                Some(opened_at) if opened_at >= at => Err(TimelineError::NonMonotone {
+                    event: event.into(),
+                    opened_at,
+                    at,
+                }),
+                Some(_) => Ok(()),
+            }
+        };
+
+        for &i in &order {
+            let ev = &self.events[i];
+            let at = ev.at;
+            match &ev.kind {
+                FaultKind::CacheDown { site } => {
+                    cache_site("CacheDown", *site)?;
+                    down.entry(*site).or_insert(at);
+                }
+                FaultKind::CacheUp { site } => {
+                    cache_site("CacheUp", *site)?;
+                    close(down.get(site).copied(), "CacheUp", at)?;
+                    down.remove(site);
+                }
+                FaultKind::CacheSlow { site, factor } => {
+                    cache_site("CacheSlow", *site)?;
+                    factor_ok("CacheSlow", *factor)?;
+                    slow.entry(*site).or_insert(at);
+                }
+                FaultKind::CacheRestored { site } => {
+                    cache_site("CacheRestored", *site)?;
+                    close(slow.get(site).copied(), "CacheRestored", at)?;
+                    slow.remove(site);
+                }
+                FaultKind::DataCorrupt { site, path } => {
+                    cache_site("DataCorrupt", *site)?;
+                    if path.is_empty() {
+                        return Err(TimelineError::EmptyPath { at });
+                    }
+                }
+                FaultKind::LinkCut { link } => {
+                    if link.0 as usize >= dims.links {
+                        return Err(TimelineError::LinkOutOfRange {
+                            event: "LinkCut".into(),
+                            link: link.0,
+                            links: dims.links,
+                        });
+                    }
+                    cut.entry(link.0).or_insert(at);
+                }
+                FaultKind::LinkRestored { link } => {
+                    if link.0 as usize >= dims.links {
+                        return Err(TimelineError::LinkOutOfRange {
+                            event: "LinkRestored".into(),
+                            link: link.0,
+                            links: dims.links,
+                        });
+                    }
+                    close(cut.get(&link.0).copied(), "LinkRestored", at)?;
+                    cut.remove(&link.0);
+                }
+                FaultKind::OriginDegraded { origin, factor } => {
+                    if *origin >= dims.origins {
+                        return Err(TimelineError::OriginOutOfRange {
+                            event: "OriginDegraded".into(),
+                            origin: *origin,
+                            origins: dims.origins,
+                        });
+                    }
+                    factor_ok("OriginDegraded", *factor)?;
+                    degraded.entry(*origin).or_insert(at);
+                }
+                FaultKind::OriginRestored { origin } => {
+                    if *origin >= dims.origins {
+                        return Err(TimelineError::OriginOutOfRange {
+                            event: "OriginRestored".into(),
+                            origin: *origin,
+                            origins: dims.origins,
+                        });
+                    }
+                    close(degraded.get(origin).copied(), "OriginRestored", at)?;
+                    degraded.remove(origin);
+                }
+                FaultKind::RedirectorDown { instance } => {
+                    if *instance >= dims.redirector_instances {
+                        return Err(TimelineError::InstanceOutOfRange {
+                            event: "RedirectorDown".into(),
+                            instance: *instance,
+                            instances: dims.redirector_instances,
+                        });
+                    }
+                    redirector.entry(*instance).or_insert(at);
+                }
+                FaultKind::RedirectorUp { instance } => {
+                    if *instance >= dims.redirector_instances {
+                        return Err(TimelineError::InstanceOutOfRange {
+                            event: "RedirectorUp".into(),
+                            instance: *instance,
+                            instances: dims.redirector_instances,
+                        });
+                    }
+                    close(redirector.get(instance).copied(), "RedirectorUp", at)?;
+                    redirector.remove(instance);
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -127,5 +389,151 @@ mod tests {
     #[should_panic(expected = "brownout factor")]
     fn zero_factor_panics() {
         FaultTimeline::new().origin_brownout(0, 0.0, t(1.0), t(2.0));
+    }
+
+    fn dims() -> FaultDims {
+        FaultDims {
+            cache_sites: [0, 3].into_iter().collect(),
+            origins: 2,
+            links: 8,
+            redirector_instances: 2,
+        }
+    }
+
+    #[test]
+    fn valid_timeline_passes_validation() {
+        let mut tl = FaultTimeline::new();
+        tl.cache_outage(3, t(10.0), t(20.0))
+            .cache_slowdown(0, 0.05, t(5.0), t(30.0))
+            .origin_brownout(1, 0.25, t(1.0), t(2.0))
+            .link_outage(LinkId(7), t(3.0), t(4.0))
+            .redirector_outage(1, t(0.5), t(9.0))
+            .data_corruption(0, "/ospool/x", t(6.0));
+        tl.validate(&dims()).unwrap();
+        // A failure with no recovery is a valid schedule too.
+        let mut dark = FaultTimeline::new();
+        dark.push(t(1.0), FaultKind::CacheDown { site: 0 });
+        dark.validate(&dims()).unwrap();
+    }
+
+    #[test]
+    fn rejects_recovery_without_open_failure() {
+        let mut tl = FaultTimeline::new();
+        tl.push(t(5.0), FaultKind::CacheUp { site: 0 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::UnmatchedRecovery { .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(5.0), FaultKind::CacheRestored { site: 0 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::UnmatchedRecovery { .. }
+        ));
+        // A slowdown does not satisfy a CacheUp (separate ledgers).
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::CacheSlow { site: 0, factor: 0.5 });
+        tl.push(t(2.0), FaultKind::CacheUp { site: 0 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::UnmatchedRecovery { .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(5.0), FaultKind::LinkRestored { link: LinkId(1) });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::UnmatchedRecovery { .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(5.0), FaultKind::OriginRestored { origin: 0 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::UnmatchedRecovery { .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(5.0), FaultKind::RedirectorUp { instance: 0 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::UnmatchedRecovery { .. }
+        ));
+    }
+
+    #[test]
+    fn rejects_out_of_range_indices() {
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::CacheDown { site: 1 }); // site 1 has no cache
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::UnknownCacheSite { site: 1, .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::CacheSlow { site: 99, factor: 0.5 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::UnknownCacheSite { site: 99, .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::OriginDegraded { origin: 2, factor: 0.5 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::OriginOutOfRange { origin: 2, .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::LinkCut { link: LinkId(8) });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::LinkOutOfRange { link: 8, .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::RedirectorDown { instance: 2 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::InstanceOutOfRange { instance: 2, .. }
+        ));
+    }
+
+    #[test]
+    fn rejects_non_monotone_pairs() {
+        // Same-instant down/up pushed out of builder reach: the
+        // recovery does not strictly follow the failure.
+        let mut tl = FaultTimeline::new();
+        tl.push(t(5.0), FaultKind::CacheDown { site: 0 });
+        tl.push(t(5.0), FaultKind::CacheUp { site: 0 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::NonMonotone { .. }
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_factors_and_empty_paths() {
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::CacheSlow { site: 0, factor: 0.0 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::BadFactor { .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::OriginDegraded { origin: 0, factor: 1.5 });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::BadFactor { .. }
+        ));
+        let mut tl = FaultTimeline::new();
+        tl.push(t(1.0), FaultKind::DataCorrupt { site: 0, path: String::new() });
+        assert!(matches!(
+            tl.validate(&dims()).unwrap_err(),
+            TimelineError::EmptyPath { .. }
+        ));
+    }
+
+    #[test]
+    fn validation_walks_in_time_order_not_insertion_order() {
+        // Recovery inserted first but scheduled after the failure is
+        // fine — injection sorts by instant.
+        let mut tl = FaultTimeline::new();
+        tl.push(t(20.0), FaultKind::CacheUp { site: 0 });
+        tl.push(t(10.0), FaultKind::CacheDown { site: 0 });
+        tl.validate(&dims()).unwrap();
     }
 }

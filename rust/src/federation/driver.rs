@@ -41,14 +41,49 @@
 //! brownouts rescale DTN capacity, and redirector outages degrade the
 //! HA pair. Interrupted sessions re-enter `GeoResolve` with the failed
 //! cache excluded, pay a fresh resolution latency per attempt, and
-//! after [`MAX_FAILOVER_RETRIES`] attempts stream directly from the
-//! origin — a chaos campaign completes every download or panics; it
-//! never silently drops one.
+//! after `[resilience] max_failover_retries` attempts stream directly
+//! from the origin — a chaos campaign completes every download or
+//! panics; it never silently drops one.
+//!
+//! ## Resilience layer (gray failures)
+//!
+//! Binary outages are the easy case. A *gray* failure — a cache whose
+//! serving links degraded 20× ([`FaultKind::CacheSlow`]) or whose
+//! resident copy is silently corrupted ([`FaultKind::DataCorrupt`]) —
+//! leaves the cache nominally up, so nothing above ejects it. Three
+//! mechanisms close the gap:
+//!
+//! * **Transfer deadlines** — when `[resilience] deadline_factor` > 0,
+//!   entering `Transfer(StashServe | StashFetch)` or `JoinWait` arms a
+//!   deterministic [`EngineEvent::Deadline`] at `expected transfer
+//!   time × deadline_factor`. On expiry the session cancels its flow
+//!   (or leaves the waiter list) and re-enters the standard failover
+//!   ladder with the slow cache excluded — the exact path a cache
+//!   death takes, so every fault invariant applies unchanged. Stale
+//!   deadlines (the phase was left, or re-armed) are no-ops by
+//!   generation check. At the default factor of 0 the timer is never
+//!   scheduled, keeping event counts byte-identical to pre-deadline
+//!   runs.
+//! * **End-to-end digests** — every whole-file cache serve is checked
+//!   against the origin keystream ([`crate::origin::content`], the
+//!   vendored sha2 pipeline) at transfer end; a poisoned copy fails
+//!   the digest, is invalidated at the cache, and the session
+//!   exclude-and-refetches.
+//! * **The circuit breaker** ([`crate::redirector::breaker`]) — every
+//!   timeout / corruption / abort / success outcome feeds a per-cache
+//!   health score; a tripped breaker ejects the cache from candidate
+//!   sets until a half-open probe succeeds.
+//!
+//! An armed resilience layer keeps [`SessionEngine::run_threaded`] on
+//! the serial path (see the epoch gate), preserving thread-count
+//! digest equality.
 
 use crate::cache::CacheServer;
 use crate::client::stashcp;
 use crate::client::{curl, Method, TransferRecord};
-use crate::fault::{DIRECT_RETRY_BACKOFF, FaultEvent, FaultKind, MAX_FAILOVER_RETRIES};
+use crate::fault::{FaultEvent, FaultKind};
+use crate::origin::content;
+use crate::redirector::breaker::BreakerOutcome;
 use crate::monitoring::packets::Protocol;
 use crate::netsim::{Completion, Endpoint, EventQueue, FlowId, FlowSpec, LinkId, Network};
 use crate::sim::workload::FileRef;
@@ -65,6 +100,30 @@ use super::{DownloadMethod, FedSim};
 /// severed link; the session retries or fails over instead.)
 fn route_is_up(fed: &FedSim, links: &[LinkId]) -> bool {
     links.iter().all(|&l| fed.net.link_is_up(l))
+}
+
+/// Bytes of leading extent the client digests at transfer end. Capped:
+/// the keystream check is O(extent), and a corrupted copy already
+/// differs within its first block (see [`CacheServer::poison`]).
+const DIGEST_CHECK_EXTENT: u64 = 4096;
+
+/// The client's end-to-end integrity check at transfer end — the
+/// consistency guarantee CVMFS chunk checksums give the production
+/// system, run through the vendored sha2 keystream
+/// ([`crate::origin::content`]). A healthy cache serves exactly the
+/// origin bytes, so the digest comparison passes; a poisoned resident
+/// copy differs (modelled as its first block flipped) and fails it.
+fn served_bytes_verify(cache: &CacheServer, path: &str, version: u64, size: u64) -> bool {
+    if size == 0 {
+        return true;
+    }
+    let len = size.min(DIGEST_CHECK_EXTENT) as usize;
+    let mut got = vec![0u8; len];
+    content::fill(path, version, 0, &mut got);
+    if cache.is_poisoned(path) {
+        got[0] ^= 0xff;
+    }
+    content::verify(path, version, 0, &got)
 }
 
 /// Telemetry label of a phase being exited. Pending (zero-length by
@@ -94,6 +153,11 @@ enum EngineEvent {
     Start(SessionId),
     /// A session's pending latency elapsed; advance its phase.
     Timer(SessionId),
+    /// A session's transfer deadline expired. The `u64` is the arming
+    /// generation: a firing whose generation no longer matches the
+    /// session's is stale (the guarded phase was already left) and
+    /// does nothing.
+    Deadline(SessionId, u64),
 }
 
 /// One enabled event the model checker may fire next, in place of the
@@ -138,6 +202,12 @@ pub struct EngineStats {
     pub aborted_bytes: u64,
     /// Sessions that gave up on caches and streamed from the origin.
     pub direct_fallbacks: u64,
+    /// Transfer deadlines that expired and triggered a failover
+    /// (armed deadlines superseded by normal progress do not count).
+    pub deadline_expiries: u64,
+    /// Whole-file serves whose end-to-end digest check failed
+    /// (poisoned cache copy detected, invalidated, and refetched).
+    pub corruptions_detected: u64,
     /// Allocator passes the network ran while this engine drove it
     /// (see [`crate::netsim::AllocStats`]; deltas over the run).
     pub allocator_passes: u64,
@@ -374,6 +444,7 @@ impl SessionEngine {
             if threads > 1
                 && self.in_flight == 0
                 && fed.pending_faults() == 0
+                && !fed.resilience_armed()
                 && fed.policy.epoch_stable()
                 && self.stats.sessions_completed >= next_probe
             {
@@ -450,6 +521,7 @@ impl SessionEngine {
         match ev {
             EngineEvent::Start(id) => self.on_start(fed, id, t),
             EngineEvent::Timer(id) => self.on_timer(fed, id, t),
+            EngineEvent::Deadline(id, gen) => self.on_deadline(fed, id, gen, t),
         }
     }
 
@@ -475,7 +547,10 @@ impl SessionEngine {
     /// order, sorted waiter keys, flow start order from the network).
     fn on_fault(&mut self, fed: &mut FedSim, kind: FaultKind, t: SimTime) {
         self.stats.faults_applied += 1;
-        fed.fault_log.push(FaultEvent { at: t, kind });
+        fed.fault_log.push(FaultEvent {
+            at: t,
+            kind: kind.clone(),
+        });
         match kind {
             FaultKind::CacheDown { site } => {
                 fed.faults.cache_down(site, t);
@@ -495,6 +570,9 @@ impl SessionEngine {
                     .map(|s| s.id)
                     .collect();
                 for id in victims {
+                    if let Some(b) = fed.breaker.as_mut() {
+                        b.record(site, BreakerOutcome::Abort, t);
+                    }
                     self.cancel_session_flow(fed, id, t);
                     self.on_flow_aborted(fed, id, t, Some(site));
                 }
@@ -525,6 +603,9 @@ impl SessionEngine {
                             (s.file.size.as_u64().max(1), s.cache_site)
                         };
                         self.stats.aborted_bytes += size.saturating_sub(left.min(size));
+                        if let (Some(cache), Some(b)) = (exclude, fed.breaker.as_mut()) {
+                            b.record(cache, BreakerOutcome::Abort, t);
+                        }
                         self.on_flow_aborted(fed, id, t, exclude);
                     }
                 }
@@ -546,6 +627,31 @@ impl SessionEngine {
             }
             FaultKind::RedirectorUp { instance } => {
                 fed.redirectors.set_healthy(instance, true);
+            }
+            FaultKind::CacheSlow { site, factor } => {
+                // Gray failure: both serving legs (worker LAN + WAN)
+                // degrade, but the cache still answers — in-flight
+                // transfers crawl instead of dying. Only a transfer
+                // deadline or the breaker gets sessions off it.
+                fed.net
+                    .scale_link_capacity(fed.topo.cache_lan_link(site), factor, t);
+                fed.net
+                    .scale_link_capacity(fed.topo.cache_wan_link(site), factor, t);
+            }
+            FaultKind::CacheRestored { site } => {
+                fed.net
+                    .scale_link_capacity(fed.topo.cache_lan_link(site), 1.0, t);
+                fed.net
+                    .scale_link_capacity(fed.topo.cache_wan_link(site), 1.0, t);
+            }
+            FaultKind::DataCorrupt { site, path } => {
+                // Silent: nothing aborts here. Clients discover the
+                // damage at transfer end via the digest check in
+                // `on_flow_done` and exclude-and-refetch.
+                fed.caches
+                    .get_mut(&site)
+                    .expect("cache site")
+                    .poison(&path);
             }
         }
     }
@@ -595,8 +701,9 @@ impl SessionEngine {
 
     /// Re-plan a failed session: exclude the cache it failed against,
     /// pay a fresh resolution latency, and re-enter `GeoResolve` (or
-    /// `ProxyLookup`). After [`MAX_FAILOVER_RETRIES`] attempts the
-    /// session gives up on caches and streams from the origin.
+    /// `ProxyLookup`). After `[resilience] max_failover_retries`
+    /// attempts the session gives up on caches and streams from the
+    /// origin.
     fn fail_session(
         &mut self,
         fed: &mut FedSim,
@@ -625,7 +732,7 @@ impl SessionEngine {
             (s.method, s.transport, s.retries)
         };
         let attempt = retries.min(8) as usize;
-        let give_up = retries > MAX_FAILOVER_RETRIES;
+        let give_up = retries > fed.cfg.resilience.max_failover_retries;
         let (phase, delay) = if give_up {
             (
                 Phase::DirectConnect,
@@ -676,6 +783,76 @@ impl SessionEngine {
         if !s.direct {
             s.direct = true;
             self.stats.direct_fallbacks += 1;
+        }
+    }
+
+    /// Poll interval for a direct-to-origin session whose own path is
+    /// cut (`[resilience] direct_retry_backoff_secs`).
+    fn direct_backoff(fed: &FedSim) -> Duration {
+        Duration::from_secs_f64(fed.cfg.resilience.direct_retry_backoff_secs)
+    }
+
+    // --- transfer deadlines -------------------------------------------------
+
+    /// Arm the session's progress deadline on entering a guarded phase
+    /// (`Transfer(StashServe | StashFetch)` or `JoinWait`): expected
+    /// transfer time (`bytes / per-connection rate`) times
+    /// `[resilience] deadline_factor`. At the default factor of 0 no
+    /// event is ever scheduled — event counts, and therefore campaign
+    /// digests, stay byte-identical to pre-deadline runs.
+    fn arm_deadline(&mut self, fed: &FedSim, id: SessionId, t: SimTime, bytes: u64, rate_bps: f64) {
+        let factor = fed.cfg.resilience.deadline_factor;
+        if factor <= 0.0 {
+            return;
+        }
+        let expected_s = bytes.max(1) as f64 / rate_bps.max(1.0);
+        let s = &mut self.sessions[id.0 as usize];
+        s.deadline_gen += 1;
+        let gen = s.deadline_gen;
+        self.queue.schedule_at(
+            t + Duration::from_secs_f64(expected_s * factor),
+            EngineEvent::Deadline(id, gen),
+        );
+    }
+
+    /// A transfer deadline fired. Stale firings — the generation was
+    /// superseded by a re-arm, or the session already left the guarded
+    /// phase (completions at the same instant dispatch first) — are
+    /// no-ops. A live expiry is a timeout strike against the cache:
+    /// the session cancels its flow (or leaves the waiter list) and
+    /// re-enters the failover ladder with that cache excluded, exactly
+    /// like a cache death.
+    fn on_deadline(&mut self, fed: &mut FedSim, id: SessionId, gen: u64, t: SimTime) {
+        let phase = {
+            let s = &self.sessions[id.0 as usize];
+            if s.deadline_gen != gen {
+                return;
+            }
+            match s.phase {
+                p @ (Phase::Transfer(Xfer::StashServe | Xfer::StashFetch) | Phase::JoinWait) => p,
+                _ => return,
+            }
+        };
+        self.stats.deadline_expiries += 1;
+        let cache_site = self.sessions[id.0 as usize].cache_site;
+        if let (Some(site), Some(b)) = (cache_site, fed.breaker.as_mut()) {
+            b.record(site, BreakerOutcome::Timeout, t);
+        }
+        match phase {
+            Phase::Transfer(_) => {
+                // Same unwind as a fault-driven abort: wasted bytes
+                // accounted, reserved chunks released (fetch path),
+                // joiners woken, session failed over.
+                self.cancel_session_flow(fed, id, t);
+                self.on_flow_aborted(fed, id, t, cache_site);
+            }
+            Phase::JoinWait => {
+                // Waited too long on another session's fetch at a slow
+                // cache: stop waiting and fail over (`fail_session`
+                // scrubs the waiter-list entry).
+                self.fail_session(fed, id, t, cache_site);
+            }
+            _ => unreachable!(),
         }
     }
 
@@ -827,6 +1004,7 @@ impl SessionEngine {
             let s = &mut self.sessions[id.0 as usize];
             s.flow = Some(flow);
             Self::set_phase(&mut self.tele, s, t, Phase::Transfer(Xfer::StashServe));
+            self.arm_deadline(fed, id, t, size, per_conn);
         } else if plan.fetch.is_empty() {
             // Every missing chunk is already on its way for another
             // session: join that fetch instead of duplicating it.
@@ -841,6 +1019,9 @@ impl SessionEngine {
                 .entry((cache_site, path))
                 .or_default()
                 .push(id);
+            // The owner's fetch is capped at the same per-connection
+            // rate, so its expected time bounds this wait too.
+            self.arm_deadline(fed, id, t, size, per_conn);
         } else {
             // Miss. The cache consults the redirector, which broadcasts
             // to origins (one WAN round trip to the redirector + one to
@@ -919,6 +1100,7 @@ impl SessionEngine {
         let s = &mut self.sessions[id.0 as usize];
         s.flow = Some(flow);
         Self::set_phase(&mut self.tele, s, t, Phase::Transfer(Xfer::StashFetch));
+        self.arm_deadline(fed, id, t, size, per_conn);
     }
 
     /// A reserved (pinned) fetch cannot start: release the
@@ -1030,7 +1212,7 @@ impl SessionEngine {
             self.stats.retries += 1;
             self.sessions[id.0 as usize].retries += 1;
             self.queue
-                .schedule_at(t + DIRECT_RETRY_BACKOFF, EngineEvent::Timer(id));
+                .schedule_at(t + Self::direct_backoff(fed), EngineEvent::Timer(id));
             return;
         }
         Self::set_phase(
@@ -1061,7 +1243,7 @@ impl SessionEngine {
             s.retries += 1;
             Self::set_phase(&mut self.tele, s, t, Phase::DirectConnect);
             self.queue
-                .schedule_at(t + DIRECT_RETRY_BACKOFF, EngineEvent::Timer(id));
+                .schedule_at(t + Self::direct_backoff(fed), EngineEvent::Timer(id));
             return;
         }
         let flow = fed.net.start_flow(
@@ -1087,14 +1269,41 @@ impl SessionEngine {
         };
         match xfer {
             Xfer::StashServe => {
-                let (cache_site, size) = {
+                let (cache_site, path, version, size) = {
                     let s = &self.sessions[id.0 as usize];
-                    (s.cache_site.expect("stash session"), s.file.size.as_u64())
+                    (
+                        s.cache_site.expect("stash session"),
+                        s.file.path.clone(),
+                        s.file.version,
+                        s.file.size.as_u64(),
+                    )
                 };
+                // Transfer end: the client digests what it received
+                // against the origin keystream. A poisoned copy fails,
+                // is dropped at the cache (the refetch pulls fresh
+                // bytes), and the session exclude-and-refetches.
+                if !served_bytes_verify(&fed.caches[&cache_site], &path, version, size) {
+                    self.stats.corruptions_detected += 1;
+                    self.stats.aborted_bytes += size;
+                    if let Some(b) = fed.breaker.as_mut() {
+                        b.record(cache_site, BreakerOutcome::Corruption, t);
+                    }
+                    fed.caches
+                        .get_mut(&cache_site)
+                        .expect("cache site")
+                        .invalidate(&path);
+                    self.sessions[id.0 as usize].failovers += 1;
+                    self.stats.failovers += 1;
+                    self.fail_session(fed, id, t, Some(cache_site));
+                    return;
+                }
                 fed.caches
                     .get_mut(&cache_site)
                     .expect("cache site")
                     .record_served(size, 0);
+                if let Some(b) = fed.breaker.as_mut() {
+                    b.record(cache_site, BreakerOutcome::Success, t);
+                }
                 self.emit_monitoring(fed, id, t);
                 self.finish(id, t, Method::Xrootd);
             }
@@ -1112,6 +1321,9 @@ impl SessionEngine {
                 let cache = fed.caches.get_mut(&cache_site).expect("cache site");
                 cache.commit_chunks(&path, version, &plan.fetch, t);
                 cache.record_served(plan.hit_bytes, plan.miss_bytes);
+                if let Some(b) = fed.breaker.as_mut() {
+                    b.record(cache_site, BreakerOutcome::Success, t);
+                }
                 fed.origins[origin.0].bytes_served += plan.miss_bytes;
                 // Chunks just became resident: wake sessions that
                 // joined this fetch so they can re-plan (usually into
@@ -1283,7 +1495,9 @@ impl SessionEngine {
         let mut out = Vec::new();
         for (at, seq, ev) in self.queue.pending_entries() {
             let session = match ev {
-                EngineEvent::Start(id) | EngineEvent::Timer(id) => id,
+                EngineEvent::Start(id)
+                | EngineEvent::Timer(id)
+                | EngineEvent::Deadline(id, _) => id,
             };
             out.push(McChoice::Timer { at, seq, session });
         }
@@ -1318,6 +1532,7 @@ impl SessionEngine {
                 match ev {
                     EngineEvent::Start(id) => self.on_start(fed, id, t),
                     EngineEvent::Timer(id) => self.on_timer(fed, id, t),
+                    EngineEvent::Deadline(id, gen) => self.on_deadline(fed, id, gen, t),
                 }
             }
             McChoice::Flow { flow, owner } => {
@@ -1506,6 +1721,11 @@ impl SessionEngine {
                 }
                 EngineEvent::Timer(id) => {
                     unreachable!("pending timer for {id:?} with no session in flight")
+                }
+                EngineEvent::Deadline(id, _) => {
+                    unreachable!(
+                        "pending deadline for {id:?} in a terminal epoch (resilience is disarmed)"
+                    )
                 }
             }
         }

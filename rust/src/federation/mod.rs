@@ -47,7 +47,7 @@ use crate::cache::CacheServer;
 use crate::client::stashcp::{HostEnvironment, StartupCosts};
 use crate::client::TransferRecord;
 use crate::config::FederationConfig;
-use crate::fault::{FaultEvent, FaultState, FaultTimeline};
+use crate::fault::{FaultDims, FaultEvent, FaultState, FaultTimeline, TimelineError};
 use crate::geoip::{CacheSite, NearestCache};
 use crate::monitoring::aggregator::Aggregator;
 use crate::monitoring::bus::{Bus, Subscription};
@@ -57,6 +57,7 @@ use crate::namespace::{Namespace, OriginId};
 use crate::netsim::{FlowId, FlowSpec, Network, Topology};
 use crate::origin::{FileMeta, Origin};
 use crate::proxy::ProxyServer;
+use crate::redirector::breaker::CacheBreaker;
 use crate::redirector::policy::{self, FederationView, RedirectionPolicy};
 use crate::redirector::RedirectorPool;
 use crate::sim::workload::FileRef;
@@ -115,6 +116,12 @@ pub struct FedSim {
     deferred_background: Vec<usize>,
     /// Live component-health view (down caches, downtime ledger).
     pub faults: FaultState,
+    /// Circuit breaker over cache health ([`crate::redirector::breaker`]).
+    /// `None` when `[resilience] breaker = false` (the default) —
+    /// candidate sets are then exactly the pre-breaker ones, bit for
+    /// bit. When armed, caches whose breaker is open are folded out of
+    /// [`FederationView::up`], composing with every redirection policy.
+    pub breaker: Option<CacheBreaker>,
     /// Scheduled faults not yet applied, sorted by time. Engines
     /// driving this federation pop and apply them as they come due.
     fault_schedule: VecDeque<FaultEvent>,
@@ -183,6 +190,10 @@ impl FedSim {
         let redirectors =
             RedirectorPool::with_cap(cfg.redirector_instances, cfg.redirection.location_cache_cap);
         let rng = Pcg64::new(cfg.seed, 0xfed);
+        let breaker = cfg
+            .resilience
+            .breaker
+            .then(|| CacheBreaker::new(&cfg.resilience));
 
         FedSim {
             net,
@@ -204,6 +215,7 @@ impl FedSim {
             background: HashMap::new(),
             deferred_background: Vec::new(),
             faults: FaultState::default(),
+            breaker,
             fault_schedule: VecDeque::new(),
             fault_log: Vec::new(),
             next_user_id: 1,
@@ -245,6 +257,17 @@ impl FedSim {
 
     // --- fault injection ----------------------------------------------------
 
+    /// The federation's component bounds, for validating a
+    /// [`FaultTimeline`] against what actually exists.
+    pub fn fault_dims(&self) -> FaultDims {
+        FaultDims {
+            cache_sites: self.caches.keys().copied().collect(),
+            origins: self.origins.len(),
+            links: self.net.link_count(),
+            redirector_instances: self.redirectors.instances.len(),
+        }
+    }
+
     /// Schedule a fault timeline against this federation. Events apply
     /// at their instants while *any* engine is driving virtual time
     /// (serial [`FedSim::download`] calls, campaigns, scenarios); an
@@ -252,11 +275,19 @@ impl FedSim {
     /// is applied immediately at that engine's clock. May be called
     /// repeatedly — the schedule stays sorted by time (ties keep
     /// injection order).
-    pub fn inject_faults(&mut self, timeline: &FaultTimeline) {
-        self.fault_schedule.extend(timeline.events().iter().copied());
+    ///
+    /// The timeline is validated against this federation's dimensions
+    /// first ([`FaultTimeline::validate`]): recoveries without a
+    /// matching open failure, out-of-range component indices, and
+    /// non-monotone pairs are rejected here, as a typed error, instead
+    /// of panicking mid-run.
+    pub fn inject_faults(&mut self, timeline: &FaultTimeline) -> Result<(), TimelineError> {
+        timeline.validate(&self.fault_dims())?;
+        self.fault_schedule.extend(timeline.events().iter().cloned());
         let mut v: Vec<FaultEvent> = self.fault_schedule.drain(..).collect();
         v.sort_by_key(|e| e.at); // stable: equal instants keep order
         self.fault_schedule = v.into();
+        Ok(())
     }
 
     /// Scheduled faults not yet applied.
@@ -276,6 +307,16 @@ impl FedSim {
 
     pub(crate) fn pop_fault(&mut self) -> Option<FaultEvent> {
         self.fault_schedule.pop_front()
+    }
+
+    /// Is any resilience machinery live on this federation? True when
+    /// transfer deadlines are armed or the circuit breaker is on.
+    /// While armed, the sharded engine's terminal-epoch gate stays
+    /// closed (breaker scores and deadline expiries are order-
+    /// sensitive), keeping runs serial — the same rule `least-loaded`
+    /// already obeys.
+    pub fn resilience_armed(&self) -> bool {
+        self.cfg.resilience.deadline_factor > 0.0 || self.breaker.is_some()
     }
 
     // --- background origin load --------------------------------------------
@@ -448,7 +489,13 @@ impl FedSim {
         let up = self
             .geo_cache_sites
             .iter()
-            .map(|&idx| !self.faults.is_cache_down(idx))
+            .map(|&idx| {
+                !self.faults.is_cache_down(idx)
+                    && self
+                        .breaker
+                        .as_ref()
+                        .is_none_or(|b| b.admits(idx, self.now))
+            })
             .collect();
         let in_flight = self
             .geo_cache_sites

@@ -134,6 +134,10 @@ pub struct Session {
     pub retries: u32,
     /// Has this session given up on caches (direct-to-origin path)?
     pub(crate) direct: bool,
+    /// Generation of the session's armed transfer deadline. Bumped on
+    /// every arm; a `Deadline` event whose generation does not match is
+    /// stale (the phase it guarded was left) and fires as a no-op.
+    pub(crate) deadline_gen: u64,
 
     // --- proxy path state -------------------------------------------------
     pub(crate) url: String,
@@ -188,6 +192,7 @@ impl Session {
             failovers: 0,
             retries: 0,
             direct: false,
+            deadline_gen: 0,
             url: String::new(),
             proxy_hit: false,
             cacheable: false,

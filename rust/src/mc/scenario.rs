@@ -53,6 +53,13 @@ pub fn builtin_scenarios() -> &'static [Scenario] {
                       and healed (serve-abort, direct-fallback, retry-poll paths)",
             build: build_hit_link_cut,
         },
+        Scenario {
+            name: "slow-cache-timeout",
+            summary: "2 sessions coalesce at a cache degraded 20x with transfer \
+                      deadlines armed and the breaker on (deadline failover, \
+                      stale-deadline no-ops, breaker trip/ejection paths)",
+            build: build_slow_cache_timeout,
+        },
     ]
 }
 
@@ -83,7 +90,8 @@ fn build_join_cache_death() -> (FedSim, SessionEngine) {
     let mut faults = FaultTimeline::new();
     faults.push(secs(1.0), FaultKind::CacheDown { site });
     faults.push(secs(2.0), FaultKind::CacheUp { site });
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults)
+        .expect("scenario faults fit the paper federation");
 
     let mut engine = SessionEngine::new(fed.now);
     let f = file("/ospool/des/data/mc-join.dat", 512 * 1024 * 1024);
@@ -102,7 +110,8 @@ fn build_miss_failover() -> (FedSim, SessionEngine) {
     let site = fed.topo.site_index("syracuse").expect("paper site");
     let mut faults = FaultTimeline::new();
     faults.push(secs(1.0), FaultKind::CacheDown { site });
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults)
+        .expect("scenario faults fit the paper federation");
 
     let mut engine = SessionEngine::new(fed.now);
     let fa = file("/ospool/des/data/mc-miss-a.dat", 256 * 1024 * 1024);
@@ -133,9 +142,41 @@ fn build_hit_link_cut() -> (FedSim, SessionEngine) {
     // the checker clamps every firing to the clocks already reached.
     faults.push(secs(1.0), FaultKind::LinkCut { link: wan });
     faults.push(secs(2.0), FaultKind::LinkRestored { link: wan });
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults)
+        .expect("scenario faults fit the paper federation");
 
     let mut engine = SessionEngine::new(fed.now);
+    engine.spawn_at(&mut fed, fed.now, site, f.clone(), DownloadMethod::Stash);
+    engine.spawn_at(&mut fed, fed.now, site, f, DownloadMethod::Stash);
+    (fed, engine)
+}
+
+/// Two sessions coalesce on one cold file while their cache is
+/// degraded 20× (a gray failure: the cache stays nominally up).
+/// Transfer deadlines are armed and the breaker is on, so the checker
+/// interleaves deadline expiries against flow completions, fault
+/// firings, and JoinWait wakes: it covers deadline-driven mid-fetch
+/// aborts (owner cancelled, joiner woken then failed over), JoinWait
+/// deadline expiry, stale-deadline no-ops racing the transfer they
+/// guarded, and breaker trips ejecting the slow cache from the very
+/// candidate sets the failover re-resolution consults.
+fn build_slow_cache_timeout() -> (FedSim, SessionEngine) {
+    let mut cfg = paper_federation();
+    cfg.resilience.deadline_factor = 2.0;
+    cfg.resilience.breaker = true;
+    cfg.resilience.breaker_alpha = 0.5;
+    cfg.resilience.breaker_threshold = 0.6;
+    cfg.resilience.breaker_cooldown_secs = 5.0;
+    let mut fed = FedSim::build(cfg);
+    let site = fed.topo.site_index("syracuse").expect("paper site");
+    let mut faults = FaultTimeline::new();
+    faults.push(secs(1.0), FaultKind::CacheSlow { site, factor: 0.05 });
+    faults.push(secs(3.0), FaultKind::CacheRestored { site });
+    fed.inject_faults(&faults)
+        .expect("scenario faults fit the paper federation");
+
+    let mut engine = SessionEngine::new(fed.now);
+    let f = file("/ospool/des/data/mc-slow.dat", 256 * 1024 * 1024);
     engine.spawn_at(&mut fed, fed.now, site, f.clone(), DownloadMethod::Stash);
     engine.spawn_at(&mut fed, fed.now, site, f, DownloadMethod::Stash);
     (fed, engine)

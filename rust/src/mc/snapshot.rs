@@ -4,13 +4,20 @@
 //! snapshot covers session phases (with transfer kind), cache
 //! assignment, retry/failover/join counters (capped — a retry loop
 //! past the cap is behaviourally a self-loop), exclusion sets, waiter
-//! lists, per-cache in-flight session counts, per-cache residency and
-//! reservation state, link up/down state, which caches are down, and
-//! the length of the remaining fault schedule (the schedule itself is
-//! fixed per scenario, so its suffix is determined by its length).
-//! Clocks, sequence numbers, and monitoring/RNG state are deliberately
-//! excluded: under the checker's time abstraction they never influence
-//! which events are enabled or what firing them does.
+//! lists, per-cache in-flight session counts, per-cache residency,
+//! reservation, and poison state, link up/down state, which caches are
+//! down, the length of the remaining fault schedule (the schedule
+//! itself is fixed per scenario, so its suffix is determined by its
+//! length), and — when the breaker is armed — each cache's health
+//! score plus whether it currently admits clients. Clocks, sequence
+//! numbers, and monitoring/RNG state are deliberately excluded: under
+//! the checker's time abstraction they never influence which events
+//! are enabled or what firing them does. The breaker's raw
+//! `open_until` instant is a clock and is projected down to the one
+//! bit the protocol observes (`admits` at the current instant);
+//! likewise stale deadline generations are excluded — a stale
+//! [`crate::federation::driver::EngineEvent::Deadline`] fires as a
+//! pure no-op, a self-loop the search closes over.
 
 use crate::federation::driver::SessionEngine;
 use crate::federation::session::{Phase, Xfer};
@@ -144,6 +151,11 @@ pub fn state_hash(fed: &FedSim, engine: &SessionEngine) -> u64 {
                 h.u64(c);
             }
         }
+        let poisoned: Vec<&str> = cache.poisoned_paths().collect();
+        h.u64(poisoned.len() as u64);
+        for path in poisoned {
+            h.str(path);
+        }
         h.u64(fed.faults.is_cache_down(site) as u64);
     }
 
@@ -153,6 +165,20 @@ pub fn state_hash(fed: &FedSim, engine: &SessionEngine) -> u64 {
     }
     h.u64(fed.pending_faults() as u64);
     h.u64(engine.outstanding() as u64);
+
+    // Breaker health, site-sorted. The EWMA score is a deterministic
+    // fold of the outcome stream; the trip instant is reduced to the
+    // admit/eject bit at the current clock (see the module doc).
+    if let Some(b) = &fed.breaker {
+        let fp = b.fingerprint();
+        h.u64(fp.len() as u64);
+        for (site, score_bits, until) in fp {
+            h.u64(site as u64);
+            h.u64(score_bits);
+            h.byte((until != u64::MAX) as u8);
+            h.byte(b.admits(site, fed.now) as u8);
+        }
+    }
 
     h.0
 }

@@ -176,6 +176,16 @@ impl Topology {
             .expect("site has no cache")
     }
 
+    /// A cache site's worker-facing LAN link. Together with
+    /// [`Topology::cache_wan_link`] these are the cache's serving legs,
+    /// which a [`crate::fault::FaultKind::CacheSlow`] gray failure
+    /// degrades. Panics if the site hosts no cache.
+    pub fn cache_lan_link(&self, site_idx: usize) -> LinkId {
+        self.site_links[site_idx]
+            .cache_lan
+            .expect("site has no cache")
+    }
+
     /// Great-circle distance between two sites (km).
     pub fn distance_km(&self, a: usize, b: usize) -> f64 {
         let (la, lo) = self.coords[a];

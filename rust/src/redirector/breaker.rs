@@ -1,0 +1,344 @@
+//! Per-cache circuit breaker: the redirection layer's gray-failure
+//! defence.
+//!
+//! A binary outage ([`crate::fault::FaultKind::CacheDown`]) is easy —
+//! the fault state ejects the cache from every candidate set. A *gray*
+//! failure (a 20×-slow cache, silent corruption) leaves the cache
+//! nominally up, so the redirector keeps routing clients at it and
+//! each one pays a transfer deadline before failing over. The breaker
+//! closes that loop: every session outcome at a cache (successful
+//! serve vs timeout / corruption / abort) feeds an EWMA health score,
+//! and when the score trips the threshold the cache is ejected from
+//! [`super::policy::FederationView`] candidate sets exactly like a
+//! dead one — composing with all four [`super::policy::RedirectionPolicy`]
+//! impls, which already consult the view's `up` vector.
+//!
+//! State machine (classic three-state, collapsed to two reps):
+//!
+//! ```text
+//!         score >= threshold
+//! Closed ────────────────────▶ Open { until = now + cooldown }
+//!    ▲                            │
+//!    │ probe success              │ now >= until: admits again
+//!    │ (score resets)             ▼ ("half-open" window)
+//!    └──────────────────────── HalfOpen ──▶ probe failure re-arms
+//!                                           Open (fresh cooldown)
+//! ```
+//!
+//! Everything is driven by the engine's virtual clock and the
+//! deterministic outcome stream, so breaker transitions are
+//! reproducible run-to-run — and an armed breaker keeps the sharded
+//! engine serial (see the epoch-stability gate in
+//! [`crate::federation::driver`]), preserving thread-count digest
+//! equality.
+
+use crate::config::ResilienceConfig;
+use crate::util::{Duration, SimTime};
+use std::collections::BTreeMap;
+
+/// What a finished (or abandoned) cache interaction tells the breaker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerOutcome {
+    /// The cache served the transfer to completion.
+    Success,
+    /// The session's transfer deadline expired at this cache.
+    Timeout,
+    /// The client's digest check caught corrupted bytes.
+    Corruption,
+    /// The transfer died under the session (fault-driven abort).
+    Abort,
+}
+
+impl BreakerOutcome {
+    /// EWMA failure indicator: 1 for any failure mode, 0 for success.
+    fn failure(self) -> f64 {
+        match self {
+            BreakerOutcome::Success => 0.0,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Health ledger of one cache site.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct CacheHealth {
+    /// EWMA of failure indicators: 0 = healthy, 1 = every recent
+    /// interaction failed.
+    score: f64,
+    /// `Some(until)`: tripped open, ejected from candidate sets until
+    /// the cooldown elapses; past `until` the breaker is half-open and
+    /// admits probe sessions. `None`: closed.
+    open_until: Option<SimTime>,
+}
+
+impl CacheHealth {
+    const CLOSED: CacheHealth = CacheHealth {
+        score: 0.0,
+        open_until: None,
+    };
+}
+
+/// Per-cache health scores + trip state for the whole federation.
+/// Lives on [`crate::federation::FedSim`] as `Option<CacheBreaker>`
+/// (`None` = breaker off = zero behavioral change).
+#[derive(Debug, Clone)]
+pub struct CacheBreaker {
+    alpha: f64,
+    threshold: f64,
+    cooldown: Duration,
+    /// cache site → health (absent = pristine closed).
+    states: BTreeMap<usize, CacheHealth>,
+    /// Closed → open transitions.
+    pub trips: u64,
+    /// Half-open probe failures (open re-armed).
+    pub reopens: u64,
+    /// Half-open probe successes (breaker closed again).
+    pub recoveries: u64,
+}
+
+impl CacheBreaker {
+    pub fn new(cfg: &ResilienceConfig) -> Self {
+        cfg.validate().expect("valid resilience config");
+        CacheBreaker {
+            alpha: cfg.breaker_alpha,
+            threshold: cfg.breaker_threshold,
+            cooldown: Duration::from_secs_f64(cfg.breaker_cooldown_secs),
+            states: BTreeMap::new(),
+            trips: 0,
+            reopens: 0,
+            recoveries: 0,
+        }
+    }
+
+    /// May the redirection layer hand `site` to a client at `now`?
+    /// Closed ⇒ yes; open ⇒ only once the cooldown has elapsed (the
+    /// half-open window, which admits the probe).
+    pub fn admits(&self, site: usize, now: SimTime) -> bool {
+        match self.states.get(&site) {
+            None => true,
+            Some(h) => match h.open_until {
+                None => true,
+                Some(until) => now >= until,
+            },
+        }
+    }
+
+    /// Is the breaker open (still cooling down) for `site` at `now`?
+    pub fn is_open(&self, site: usize, now: SimTime) -> bool {
+        !self.admits(site, now)
+    }
+
+    /// Caches currently ejected from candidate sets.
+    pub fn open_count(&self, now: SimTime) -> usize {
+        self.states
+            .keys()
+            .filter(|&&site| self.is_open(site, now))
+            .count()
+    }
+
+    /// Fold one session outcome at `site` into its health score and
+    /// walk the state machine. Called by the engine on every cache
+    /// serve completion, deadline expiry, corruption detection, and
+    /// fault-driven abort.
+    pub fn record(&mut self, site: usize, outcome: BreakerOutcome, now: SimTime) {
+        let h = self.states.entry(site).or_insert(CacheHealth::CLOSED);
+        h.score = (1.0 - self.alpha) * h.score + self.alpha * outcome.failure();
+        match h.open_until {
+            None => {
+                if h.score >= self.threshold {
+                    h.open_until = Some(now + self.cooldown);
+                    self.trips += 1;
+                }
+            }
+            Some(until) if now >= until => {
+                // Half-open: this outcome is the probe's verdict.
+                if outcome == BreakerOutcome::Success {
+                    *h = CacheHealth::CLOSED;
+                    self.recoveries += 1;
+                } else {
+                    h.open_until = Some(now + self.cooldown);
+                    self.reopens += 1;
+                }
+            }
+            // Straggler outcome from a transfer that began before the
+            // trip: folded into the score above, but the cooldown
+            // clock is not restarted.
+            Some(_) => {}
+        }
+    }
+
+    /// Deterministic state dump, sorted by site — the model checker
+    /// hashes this so interleavings that diverge only in breaker state
+    /// are distinct states. `(site, score bits, open-until micros or
+    /// MAX for closed)`.
+    pub fn fingerprint(&self) -> Vec<(usize, u64, u64)> {
+        self.states
+            .iter()
+            .map(|(&site, h)| {
+                (
+                    site,
+                    h.score.to_bits(),
+                    h.open_until.map_or(u64::MAX, |t| t.as_micros()),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ResilienceConfig {
+        ResilienceConfig {
+            breaker: true,
+            breaker_alpha: 0.5,
+            breaker_threshold: 0.6,
+            breaker_cooldown_secs: 10.0,
+            ..ResilienceConfig::default()
+        }
+    }
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn pristine_cache_is_admitted() {
+        let b = CacheBreaker::new(&cfg());
+        assert!(b.admits(3, SimTime::ZERO));
+        assert_eq!(b.open_count(SimTime::ZERO), 0);
+    }
+
+    #[test]
+    fn trips_after_repeated_failures_not_one() {
+        let mut b = CacheBreaker::new(&cfg());
+        b.record(0, BreakerOutcome::Timeout, t(1.0));
+        assert!(b.admits(0, t(1.0)), "one failure (score 0.5) stays closed");
+        b.record(0, BreakerOutcome::Timeout, t(2.0));
+        assert!(!b.admits(0, t(2.0)), "score 0.75 trips the 0.6 threshold");
+        assert_eq!(b.trips, 1);
+        // Other caches are untouched.
+        assert!(b.admits(1, t(2.0)));
+    }
+
+    #[test]
+    fn successes_decay_the_score() {
+        let mut b = CacheBreaker::new(&cfg());
+        b.record(0, BreakerOutcome::Timeout, t(1.0));
+        b.record(0, BreakerOutcome::Success, t(2.0));
+        b.record(0, BreakerOutcome::Timeout, t(3.0));
+        // 0.5 → 0.25 → 0.625: trips only because the last failure
+        // pushed it back over; a healthy mix stays below.
+        assert_eq!(b.trips, 1);
+        let mut healthy = CacheBreaker::new(&cfg());
+        for i in 0..10 {
+            healthy.record(0, BreakerOutcome::Success, t(i as f64));
+            healthy.record(0, BreakerOutcome::Timeout, t(i as f64 + 0.5));
+            healthy.record(0, BreakerOutcome::Success, t(i as f64 + 0.7));
+        }
+        assert_eq!(healthy.trips, 0, "1-in-3 failures never crosses 0.6");
+    }
+
+    #[test]
+    fn open_breaker_admits_again_after_cooldown() {
+        let mut b = CacheBreaker::new(&cfg());
+        b.record(0, BreakerOutcome::Timeout, t(1.0));
+        b.record(0, BreakerOutcome::Timeout, t(2.0));
+        assert!(b.is_open(0, t(5.0)), "cooling down");
+        assert!(b.admits(0, t(12.0)), "half-open at until = 2 + 10");
+    }
+
+    #[test]
+    fn half_open_probe_success_closes_and_resets() {
+        let mut b = CacheBreaker::new(&cfg());
+        b.record(0, BreakerOutcome::Timeout, t(1.0));
+        b.record(0, BreakerOutcome::Timeout, t(2.0));
+        b.record(0, BreakerOutcome::Success, t(13.0));
+        assert_eq!(b.recoveries, 1);
+        assert!(b.admits(0, t(13.0)));
+        // Score reset: one subsequent failure does not re-trip.
+        b.record(0, BreakerOutcome::Timeout, t(14.0));
+        assert!(b.admits(0, t(14.0)));
+    }
+
+    #[test]
+    fn half_open_probe_failure_rearms_the_cooldown() {
+        let mut b = CacheBreaker::new(&cfg());
+        b.record(0, BreakerOutcome::Timeout, t(1.0));
+        b.record(0, BreakerOutcome::Corruption, t(2.0));
+        b.record(0, BreakerOutcome::Timeout, t(13.0));
+        assert_eq!(b.reopens, 1);
+        assert!(b.is_open(0, t(20.0)), "fresh cooldown from t=13");
+        assert!(b.admits(0, t(23.0)));
+    }
+
+    #[test]
+    fn straggler_outcome_during_cooldown_does_not_restart_clock() {
+        let mut b = CacheBreaker::new(&cfg());
+        b.record(0, BreakerOutcome::Timeout, t(1.0));
+        b.record(0, BreakerOutcome::Abort, t(2.0));
+        // A transfer that started pre-trip fails at t=5, mid-cooldown.
+        b.record(0, BreakerOutcome::Abort, t(5.0));
+        assert_eq!(b.reopens, 0, "not a probe verdict");
+        assert!(b.admits(0, t(12.0)), "original until = 2 + 10 stands");
+    }
+
+    /// The satellite's property test: however the breaker got tripped,
+    /// a successful half-open probe always re-admits the cache.
+    #[test]
+    fn tripped_breaker_always_readmits_after_probe_success() {
+        let failures = [
+            BreakerOutcome::Timeout,
+            BreakerOutcome::Corruption,
+            BreakerOutcome::Abort,
+        ];
+        // Sweep trip histories: every failure-kind pair, varying run
+        // lengths, across alpha/threshold settings.
+        for &a in &failures {
+            for &b_kind in &failures {
+                for run in 2..6u32 {
+                    for (alpha, threshold) in [(0.3, 0.5), (0.5, 0.6), (0.9, 0.2)] {
+                        let rc = ResilienceConfig {
+                            breaker: true,
+                            breaker_alpha: alpha,
+                            breaker_threshold: threshold,
+                            breaker_cooldown_secs: 10.0,
+                            ..ResilienceConfig::default()
+                        };
+                        let mut b = CacheBreaker::new(&rc);
+                        for i in 0..run {
+                            let kind = if i % 2 == 0 { a } else { b_kind };
+                            b.record(7, kind, t(f64::from(i)));
+                        }
+                        if !b.is_open(7, t(f64::from(run))) {
+                            continue; // this history never tripped
+                        }
+                        // Wait out the cooldown, land the probe.
+                        let probe_at = t(f64::from(run) + 10.0);
+                        assert!(b.admits(7, probe_at), "half-open admits the probe");
+                        b.record(7, BreakerOutcome::Success, probe_at);
+                        assert!(
+                            b.admits(7, probe_at),
+                            "probe success must re-admit (α={alpha}, θ={threshold}, run={run})"
+                        );
+                        assert!(b.recoveries >= 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_sorted_and_content_sensitive() {
+        let mut b = CacheBreaker::new(&cfg());
+        b.record(5, BreakerOutcome::Timeout, t(1.0));
+        b.record(2, BreakerOutcome::Success, t(2.0));
+        let fp = b.fingerprint();
+        assert_eq!(fp.len(), 2);
+        assert!(fp[0].0 < fp[1].0, "sorted by site");
+        let before = fp.clone();
+        b.record(2, BreakerOutcome::Timeout, t(3.0));
+        assert_ne!(b.fingerprint(), before);
+    }
+}

@@ -20,8 +20,10 @@
 //! Cache *selection* — which cache a client is redirected to — is the
 //! pluggable [`policy`] layer ([`policy::RedirectionPolicy`]).
 
+pub mod breaker;
 pub mod policy;
 
+pub use breaker::{BreakerOutcome, CacheBreaker};
 pub use policy::{FederationView, PolicyKind, RedirectionPolicy, ALL_POLICIES, POLICY_NAMES};
 
 use crate::namespace::OriginId;

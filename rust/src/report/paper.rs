@@ -189,6 +189,57 @@ pub fn frontier_table(results: &crate::experiment::SweepResults) -> Table {
     t
 }
 
+/// Resilience report of a parameter sweep: every pair of grid cells
+/// that differ only in the circuit breaker, side by side. The twins
+/// share a workload seed and a fault schedule, so the comparison
+/// isolates the breaker. Under a gray failure (`faults=degraded`) the
+/// breaker-on column wins on goodput: the first deadline expiries trip
+/// the breaker and every later session skips the slow cache outright
+/// instead of paying a deadline before failing over.
+pub fn resilience_table(results: &crate::experiment::SweepResults) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Resilience {:?}: circuit breaker off vs on per cell \
+             (identical workload + fault schedule)",
+            results.grid.name
+        ),
+        &[
+            "Cell", "off Mbps", "on Mbps", "off p99 s", "on p99 s",
+            "off origin GB", "on origin GB", "off expiries", "on expiries",
+            "%Δ goodput",
+        ],
+    );
+    for s in &results.cells {
+        if s.cell.breaker {
+            continue;
+        }
+        let Some(on) = results.cells.iter().find(|c| {
+            c.cell.breaker
+                && c.cell.resilience_pair_label() == s.cell.resilience_pair_label()
+        }) else {
+            continue;
+        };
+        let pct = if s.aggregate_mbps.mean > 0.0 {
+            (on.aggregate_mbps.mean - s.aggregate_mbps.mean) / s.aggregate_mbps.mean * 100.0
+        } else {
+            0.0
+        };
+        t.row(vec![
+            s.cell.resilience_pair_label(),
+            format!("{:.0}", s.aggregate_mbps.mean),
+            format!("{:.0}", on.aggregate_mbps.mean),
+            format!("{:.2}", s.p99_s.mean),
+            format!("{:.2}", on.p99_s.mean),
+            format!("{:.2}", s.origin_gb.mean),
+            format!("{:.2}", on.origin_gb.mean),
+            format!("{:.1}", s.deadline_expiries.mean),
+            format!("{:.1}", on.deadline_expiries.mean),
+            format!("{pct:+.1}%"),
+        ]);
+    }
+    t
+}
+
 /// Redirection-policy comparison of a parameter sweep: for every
 /// workload cell (same jobs, skew, sizes, faults — and the same
 /// workload *realization*, since policy variants share trial seeds),

@@ -283,12 +283,23 @@ pub fn snapshot_telemetry(fed: &FedSim, engine: &SessionEngine) -> TelemetrySnap
     reg.counter("stashcache_engine_retries_total", e.retries);
     reg.counter("stashcache_engine_aborted_bytes_total", e.aborted_bytes);
     reg.counter("stashcache_engine_direct_fallbacks_total", e.direct_fallbacks);
+    reg.counter("stashcache_engine_deadline_expiries_total", e.deadline_expiries);
+    reg.counter(
+        "stashcache_engine_corruptions_detected_total",
+        e.corruptions_detected,
+    );
     reg.counter("stashcache_engine_background_respawns_total", e.background_respawns);
     reg.counter("stashcache_netsim_allocator_passes_total", e.allocator_passes);
     reg.counter("stashcache_netsim_components_touched_total", e.components_touched);
     reg.counter("stashcache_netsim_flows_refixed_total", e.flows_refixed);
     reg.gauge("stashcache_engine_peak_concurrent", e.peak_concurrent as f64);
     reg.gauge("stashcache_netsim_peak_component", e.peak_component as f64);
+    if let Some(b) = &fed.breaker {
+        reg.counter("stashcache_breaker_trips_total", b.trips);
+        reg.counter("stashcache_breaker_reopens_total", b.reopens);
+        reg.counter("stashcache_breaker_recoveries_total", b.recoveries);
+        reg.gauge("stashcache_breaker_open_caches", b.open_count(fed.now) as f64);
+    }
     reg.gauge(
         &format!(
             "stashcache_policy_info{{policy=\"{}\"}}",
@@ -487,7 +498,8 @@ pub fn run_on_with_faults_threads(
     faults: &FaultTimeline,
     threads: usize,
 ) -> ChaosResults {
-    fed.inject_faults(faults);
+    fed.inject_faults(faults)
+        .expect("fault timeline rejected by federation");
     // One time base for the whole availability report: the run span
     // [start, end]. Faults apply at clamped instants ≥ start, so
     // downtime deltas can never exceed the window; snapshotting the

@@ -238,7 +238,7 @@ mod tests {
             SimTime::from_secs_f64(1.0),
             FaultKind::CacheDown { site: syr },
         );
-        fed.inject_faults(&faults);
+        fed.inject_faults(&faults).expect("valid fault timeline");
         let scenario = ScenarioConfig {
             sites: vec!["syracuse".into()],
             files: vec![("p50".into(), ByteSize(467_852_000))],

@@ -122,7 +122,7 @@ fn joinwait_woken_and_replans_on_cache_death() {
     // dies at 5 s with A mid-transfer and B parked.
     let mut faults = FaultTimeline::new();
     faults.push(t(5.0), FaultKind::CacheDown { site });
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults).expect("valid fault timeline");
 
     let mut engine = SessionEngine::new(fed.now);
     let t0 = fed.now;
@@ -176,7 +176,7 @@ fn chaos_batch_vs_sequential_equivalence() {
     // Leg 1: sequential convenience API.
     let mut fed1 = FedSim::build(paper_federation());
     fed1.start_background_load(2);
-    fed1.inject_faults(&timeline(&fed1));
+    fed1.inject_faults(&timeline(&fed1)).expect("valid fault timeline");
     let site = fed1.topo.site_index(outage_site).unwrap();
     let r1a = fed1.download(site, &fa, DownloadMethod::Stash);
     fed1.advance_to(gap);
@@ -185,7 +185,7 @@ fn chaos_batch_vs_sequential_equivalence() {
     // Leg 2: one engine, both sessions spawned up front.
     let mut fed2 = FedSim::build(paper_federation());
     fed2.start_background_load(2);
-    fed2.inject_faults(&timeline(&fed2));
+    fed2.inject_faults(&timeline(&fed2)).expect("valid fault timeline");
     let mut engine = SessionEngine::new(fed2.now);
     let a = engine.spawn_at(&mut fed2, fed2.now, site, fa, DownloadMethod::Stash);
     let b = engine.spawn_at(&mut fed2, gap, site, fb, DownloadMethod::Stash);
@@ -212,7 +212,7 @@ fn wan_cut_mid_fetch_recovers_after_heal() {
     // file), heal at 30 s. Until then nothing reaches syracuse at all.
     let mut faults = FaultTimeline::new();
     faults.link_outage(wan, t(2.0), t(30.0));
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults).expect("valid fault timeline");
 
     let rec = fed.download(
         site,
@@ -246,7 +246,7 @@ fn origin_brownout_slows_cold_fetches() {
                     factor,
                 },
             );
-            fed.inject_faults(&faults);
+            fed.inject_faults(&faults).expect("valid fault timeline");
         }
         let site = fed.topo.site_index("bellarmine").unwrap();
         fed.download(site, &f, DownloadMethod::Stash).duration
@@ -275,7 +275,7 @@ fn total_redirector_outage_falls_back_then_recovers() {
     faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 0 });
     faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 1 });
     faults.push(t(8.0), FaultKind::RedirectorUp { instance: 0 });
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults).expect("valid fault timeline");
 
     let r1 = fed.download(
         site,
@@ -386,7 +386,7 @@ fn cache_slots_drain_on_failover_exit_paths() {
     let f = file("/ospool/des/data/slot-drain.dat", 10_000_000_000);
     let mut faults = FaultTimeline::new();
     faults.push(t(5.0), FaultKind::CacheDown { site });
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults).expect("valid fault timeline");
 
     let mut engine = SessionEngine::new(fed.now);
     let t0 = fed.now;
@@ -421,7 +421,7 @@ fn waiter_lists_scrubbed_when_cache_dies_then_refetch_commits() {
     let f = file("/ospool/des/data/stale-waiter.dat", 10_000_000_000);
     let mut faults = FaultTimeline::new();
     faults.push(t(5.0), FaultKind::CacheDown { site });
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults).expect("valid fault timeline");
 
     let mut engine = SessionEngine::new(fed.now);
     let t0 = fed.now;
@@ -538,7 +538,7 @@ fn direct_origin_retry_loop_bounded_and_heals() {
     faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 0 });
     faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 1 });
     faults.link_outage(wan, t(0.5), t(30.0));
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults).expect("valid fault timeline");
 
     let mut engine = SessionEngine::new(fed.now);
     let id = engine.spawn_at(
@@ -585,7 +585,7 @@ fn cache_slots_drain_through_direct_fallback() {
     let mut faults = FaultTimeline::new();
     faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 0 });
     faults.push(SimTime::ZERO, FaultKind::RedirectorDown { instance: 1 });
-    fed.inject_faults(&faults);
+    fed.inject_faults(&faults).expect("valid fault timeline");
 
     let mut engine = SessionEngine::new(fed.now);
     let id = engine.spawn_at(
@@ -606,5 +606,143 @@ fn cache_slots_drain_through_direct_fallback() {
         engine.cache_in_flight().values().all(|&n| n == 0),
         "cache slots leaked on the direct path: {:?}",
         engine.cache_in_flight()
+    );
+}
+
+/// Gray-failure acceptance (ISSUE 9): one cache degraded 20× — no
+/// death event, the cache keeps answering, just 20× slower — with
+/// transfer deadlines and the breaker armed. Every session completes,
+/// deadlines actually fire (the slow cache blows its budget), p99
+/// stays bounded relative to the undefended run, the breaker makes
+/// goodput strictly better than deadlines alone, and the whole run is
+/// bit-identical across reruns and thread counts.
+#[test]
+fn degraded_cache_with_deadlines_completes_bounded_and_reproduces() {
+    let ccfg = chaos_campaign();
+    let leg = |deadline_factor: f64, breaker: bool, threads: usize| {
+        let mut cfg = paper_federation();
+        cfg.resilience.deadline_factor = deadline_factor;
+        cfg.resilience.breaker = breaker;
+        let mut fed = FedSim::build(cfg);
+        let victim = fed.topo.site_index("syracuse").unwrap();
+        let mut faults = FaultTimeline::new();
+        faults.push(
+            t(0.4),
+            FaultKind::CacheSlow {
+                site: victim,
+                factor: 0.05,
+            },
+        );
+        campaign::run_on_with_faults_threads(&mut fed, &ccfg, &faults, threads)
+    };
+
+    let defended = leg(3.0, true, 1);
+    assert_eq!(defended.campaign.records.len(), 96, "every session completes");
+    assert!(defended.campaign.records.iter().all(|r| r.record.bytes > 0));
+    assert!(
+        defended.campaign.engine.deadline_expiries > 0,
+        "the 20x-slow cache must blow transfer deadlines"
+    );
+
+    // Bounded p99: without any defence a 20x-degraded cache stalls its
+    // sessions for ~20x the healthy duration; deadline failover caps
+    // the damage at the deadline plus a healthy retry.
+    let undefended = leg(0.0, false, 1);
+    assert_eq!(undefended.campaign.records.len(), 96);
+    let p99 = |r: &campaign::CampaignResults| r.duration_percentiles(&[99.0])[0];
+    assert!(
+        p99(&defended.campaign) < p99(&undefended.campaign),
+        "deadline failover must beat the unbounded stall: {:.2}s vs {:.2}s",
+        p99(&defended.campaign),
+        p99(&undefended.campaign),
+    );
+
+    // The breaker on top of deadlines is strictly better: ejecting the
+    // degraded cache spares later sessions the blown deadline that
+    // deadline-only runs pay before failing over.
+    let deadline_only = leg(3.0, false, 1);
+    assert_eq!(deadline_only.campaign.records.len(), 96);
+    assert!(
+        defended.campaign.aggregate_mbps() > deadline_only.campaign.aggregate_mbps(),
+        "breaker-on goodput must beat breaker-off: {:.0} vs {:.0} Mbps",
+        defended.campaign.aggregate_mbps(),
+        deadline_only.campaign.aggregate_mbps(),
+    );
+
+    // Digest determinism: reruns and thread counts agree exactly.
+    let rerun = leg(3.0, true, 1);
+    assert_eq!(defended.campaign.records, rerun.campaign.records);
+    assert_eq!(defended.campaign.engine, rerun.campaign.engine);
+    assert_eq!(defended.fault_log, rerun.fault_log);
+    for threads in [2usize, 8] {
+        let r = leg(3.0, true, threads);
+        assert_eq!(
+            r.campaign.records, defended.campaign.records,
+            "{threads}-thread gray-failure records diverged from serial"
+        );
+        assert_eq!(r.campaign.engine, defended.campaign.engine);
+        assert_eq!(r.campaign.events_processed, defended.campaign.events_processed);
+    }
+}
+
+/// Breaker transitions never strand a session mid-phase: a staggered
+/// stream of sessions at a degraded site drives the breaker through
+/// closed → open → half-open → closed (the cache is restored before
+/// the tail arrives), and every session still completes with clean
+/// waiter lists and drained cache slots.
+#[test]
+fn breaker_transitions_never_strand_sessions() {
+    let mut cfg = paper_federation();
+    cfg.resilience.deadline_factor = 2.0;
+    cfg.resilience.breaker = true;
+    cfg.resilience.breaker_alpha = 0.5;
+    cfg.resilience.breaker_threshold = 0.6;
+    cfg.resilience.breaker_cooldown_secs = 4.0;
+    let mut fed = FedSim::build(cfg);
+    let site = fed.topo.site_index("syracuse").unwrap();
+    let mut faults = FaultTimeline::new();
+    faults.push(
+        t(1.0),
+        FaultKind::CacheSlow {
+            site,
+            factor: 0.05,
+        },
+    );
+    faults.push(t(40.0), FaultKind::CacheRestored { site });
+    fed.inject_faults(&faults).expect("valid fault timeline");
+
+    let mut engine = SessionEngine::new(fed.now);
+    let t0 = fed.now;
+    let mut ids = Vec::new();
+    for i in 0..12u64 {
+        ids.push(engine.spawn_at(
+            &mut fed,
+            t0 + Duration::from_secs(4 * i),
+            site,
+            file(&format!("/ospool/des/data/strand-{i}.dat"), 400_000_000),
+            DownloadMethod::Stash,
+        ));
+    }
+    engine.run(&mut fed);
+
+    assert_eq!(engine.completed().len(), 12, "no session stranded by a breaker transition");
+    for id in ids {
+        assert_eq!(engine.record(id).bytes, 400_000_000);
+    }
+    assert!(
+        engine.waiters().is_empty(),
+        "stale waiter-list entries: {:?}",
+        engine.waiters()
+    );
+    assert!(
+        engine.cache_in_flight().values().all(|&n| n == 0),
+        "cache slots leaked: {:?}",
+        engine.cache_in_flight()
+    );
+    let b = fed.breaker.as_ref().expect("breaker armed");
+    assert!(b.trips >= 1, "the degraded cache must trip the breaker");
+    assert!(
+        engine.stats.deadline_expiries >= 1,
+        "deadline expiries drive the breaker's failure outcomes"
     );
 }

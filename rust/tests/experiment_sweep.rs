@@ -27,6 +27,8 @@ fn acceptance_grid() -> GridSpec {
         size_profiles: vec![SizeProfile::Paper],
         fault_profiles: vec![FaultProfile::None, FaultProfile::CacheOutage],
         policies: vec![stashcache::redirector::PolicyKind::Nearest],
+        deadline_factors: vec![0.0],
+        breakers: vec![false],
         sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
         experiment: "gwosc".into(),
         catalog_files: 32,

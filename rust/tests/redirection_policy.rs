@@ -25,7 +25,7 @@ use std::collections::HashMap;
 use stashcache::client::Method;
 use stashcache::config::defaults::{paper_federation, paper_workload, COMPUTE_SITES};
 use stashcache::config::{
-    FederationConfig, LinkProfile, OriginConfig, RedirectionConfig, SiteConfig,
+    FederationConfig, LinkProfile, OriginConfig, RedirectionConfig, ResilienceConfig, SiteConfig,
 };
 use stashcache::experiment::summary::digest_records;
 use stashcache::experiment::{grid::FaultProfile, grid::SizeProfile, run_grid, GridSpec};
@@ -142,6 +142,7 @@ fn twin_cache_config(first: &str, second: &str) -> FederationConfig {
         seed: 1,
         redirector_instances: 2,
         redirection: RedirectionConfig::default(),
+        resilience: ResilienceConfig::default(),
         sites: vec![cache_site(first), cache_site(second), client],
         origins: vec![OriginConfig {
             name: "origin".into(),
@@ -361,6 +362,8 @@ fn policy_axis_grid() -> GridSpec {
         size_profiles: vec![SizeProfile::Paper],
         fault_profiles: vec![FaultProfile::None],
         policies: ALL_POLICIES.to_vec(),
+        deadline_factors: vec![0.0],
+        breakers: vec![false],
         sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
         experiment: "gwosc".into(),
         catalog_files: 8,
