@@ -28,6 +28,13 @@
 //!    plus a 100-deep trace ring). The on-leg must hold ≥285k
 //!    session-events/sec (95% of the 300k floor) and its record
 //!    digests must equal the off-leg's byte-for-byte.
+//! 5. **Cold-start tier** — 16384 sessions against a never-warmed
+//!    federation whose nine experiment origins are spread across nine
+//!    cache sites (one each), so the all-miss traffic forms nine
+//!    disjoint origin components and the generalized epoch planner
+//!    shards the cold run too. Digest-checked bit-identical to serial
+//!    at every thread count; 4 threads must be ≥2× serial on ≥4-core
+//!    hosts, and the epoch counters must show the planner engaged.
 //!
 //! Emits `BENCH_concurrency.json` at the repository root for the perf
 //! trajectory.
@@ -76,6 +83,19 @@ struct ThreadRow {
     peak: usize,
     speedup_vs_1t: f64,
     efficiency: f64,
+    digest: u64,
+}
+
+struct ColdRow {
+    sessions: usize,
+    threads: usize,
+    wall: f64,
+    events: u64,
+    peak: usize,
+    speedup_vs_1t: f64,
+    efficiency: f64,
+    epochs_engaged: u64,
+    sessions_sharded: u64,
     digest: u64,
 }
 
@@ -168,6 +188,38 @@ fn warm_cfg(sites: Vec<String>, jobs: usize, window: f64, seed: u64) -> Campaign
         telemetry: false,
         ..CampaignConfig::default()
     }
+}
+
+/// Federation + campaign for the cold-start tier: the nine experiment
+/// origins move from Chicago to nine distinct cache sites (one each;
+/// `stash-chicago` stays put), and the campaign points each of those
+/// sites at its own experiment. Every site then pulls its cold misses
+/// from a same-site origin DTN — the fetch route never crosses the WAN
+/// — so the all-miss run splits into nine disjoint origin components
+/// the epoch planner can shard. The federation is never pre-warmed:
+/// wall time covers first touch to last byte.
+fn cold_multi_origin(
+    jobs: usize,
+    window: f64,
+    seed: u64,
+) -> (stashcache::config::FederationConfig, CampaignConfig) {
+    let mut cfg = paper_federation();
+    let mut sites: Vec<String> = cfg.cache_sites().map(|s| s.name.clone()).collect();
+    sites.sort();
+    sites.truncate(9);
+    let mut experiments: Vec<String> = Vec::new();
+    for o in &mut cfg.origins {
+        if let Some(exp) = o.prefix.strip_prefix("/ospool/") {
+            o.site = sites[experiments.len() % sites.len()].clone();
+            experiments.push(exp.to_string());
+        }
+    }
+    assert_eq!(experiments.len(), sites.len(), "one experiment per site");
+    let ccfg = CampaignConfig {
+        site_experiments: experiments,
+        ..warm_cfg(sites, jobs, window, seed)
+    };
+    (cfg, ccfg)
 }
 
 /// One telemetry-overhead leg: `reps` warmed 1024-session campaigns,
@@ -500,6 +552,100 @@ fn main() {
         }
     }
 
+    // --- sharded engine: cold-start tier ---------------------------------
+    // All-miss catalog, nine self-contained sites (local cache + local
+    // origin each): the generalized epoch planner must shard the cold
+    // run — no warm-up leg, the measured wall clock includes every
+    // origin fetch. Bit-identity and the ≥2× gate mirror the warmed
+    // matrix; the epoch counters prove the planner engaged rather than
+    // silently falling back to the serial loop.
+    println!("\n== sharded engine: cold-start scaling (multi-origin, all-miss) ==");
+    println!(
+        "{:>9} {:>8} {:>10} {:>9} {:>8} {:>9} {:>11} {:>7} {:>9} {:>18}",
+        "sessions", "threads", "events", "wall s", "peak", "speedup", "efficiency", "epochs",
+        "sharded", "digest"
+    );
+    let mut cold_rows: Vec<ColdRow> = Vec::new();
+    {
+        let jobs = 16384usize;
+        let mut base_wall = 0.0f64;
+        let mut base_digest = 0u64;
+        for &threads in &[1usize, 2, 4, 8] {
+            let (cfg, ccfg) = cold_multi_origin(jobs, 64.0, 73);
+            let mut fed = FedSim::build(cfg);
+            let start = Instant::now();
+            let r = campaign::run_on_threads(&mut fed, &ccfg, threads);
+            let wall = start.elapsed().as_secs_f64();
+            let digest = records_digest(&r.records);
+            shape.check(
+                r.records.len() == jobs,
+                &format!("{jobs}-session cold tier completes every job at {threads} threads"),
+            );
+            if threads == 1 {
+                base_wall = wall;
+                base_digest = digest;
+                shape.check(
+                    r.records.iter().any(|c| !c.record.cache_hit),
+                    "cold tier starts all-miss (first touches are misses)",
+                );
+                shape.check(
+                    r.epochs.epochs_engaged == 0,
+                    "serial cold leg never plans epochs",
+                );
+            } else {
+                shape.check(
+                    digest == base_digest,
+                    &format!("{jobs}-session cold run at {threads} threads is bit-identical to serial"),
+                );
+                shape.check(
+                    r.epochs.epochs_engaged >= 1 && r.epochs.sessions_sharded > 0,
+                    &format!(
+                        "cold epochs engage at {threads} threads \
+                         (engaged {}, sharded {})",
+                        r.epochs.epochs_engaged, r.epochs.sessions_sharded
+                    ),
+                );
+            }
+            let speedup = if threads == 1 {
+                1.0
+            } else {
+                base_wall / wall.max(1e-9)
+            };
+            let efficiency = speedup / threads as f64;
+            if threads == 4 && hw >= 4 {
+                shape.check(
+                    speedup >= 2.0,
+                    &format!("16384-session cold tier reaches ≥2× at 4 threads ({speedup:.2}×)"),
+                );
+            }
+            println!(
+                "{:>9} {:>8} {:>10} {:>9.3} {:>8} {:>8.2}x {:>11.2} {:>7} {:>9} {:>#18x}",
+                jobs,
+                threads,
+                r.events_processed,
+                wall,
+                r.peak_concurrent,
+                speedup,
+                efficiency,
+                r.epochs.epochs_engaged,
+                r.epochs.sessions_sharded,
+                digest,
+            );
+            cold_rows.push(ColdRow {
+                sessions: jobs,
+                threads,
+                wall,
+                events: r.events_processed,
+                peak: r.peak_concurrent,
+                speedup_vs_1t: speedup,
+                efficiency,
+                epochs_engaged: r.epochs.epochs_engaged,
+                sessions_sharded: r.epochs.sessions_sharded,
+                digest,
+            });
+        }
+    }
+
     // --- BENCH_concurrency.json ------------------------------------------
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"concurrency_scaling\",\n  \"sweep\": [\n");
@@ -568,6 +714,27 @@ fn main() {
             t.digest,
         );
         json.push_str(if i + 1 < thread_rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ],\n  \"cold\": [\n");
+    for (i, t) in cold_rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"sessions\": {}, \"threads\": {}, \"wall_s\": {:.4}, \
+             \"events\": {}, \"peak_concurrent\": {}, \"speedup_vs_1t\": {:.3}, \
+             \"efficiency\": {:.3}, \"epochs_engaged\": {}, \"sessions_sharded\": {}, \
+             \"digest\": \"{:#x}\"}}",
+            t.sessions,
+            t.threads,
+            t.wall,
+            t.events,
+            t.peak,
+            t.speedup_vs_1t,
+            t.efficiency,
+            t.epochs_engaged,
+            t.sessions_sharded,
+            t.digest,
+        );
+        json.push_str(if i + 1 < cold_rows.len() { ",\n" } else { "\n" });
     }
     json.push_str("  ]\n}\n");
     // The repository root, independent of the bench's CWD (cargo runs

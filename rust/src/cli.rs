@@ -432,6 +432,35 @@ fn print_allocator_profile(results: &CampaignResults) {
             e.peak_component,
         )
     );
+    print_epoch_profile(&results.epochs);
+}
+
+/// `--profile`: the epoch planner's outcome counters — how much of
+/// the run was sharded, how often planning ran, and why it bailed.
+/// All zeros on a serial (`--threads 1`) run.
+fn print_epoch_profile(ep: &stashcache::federation::driver::EpochStats) {
+    println!(
+        "epochs: {} planned, {} engaged | sessions: {} sharded, {} serial | \
+         {} probes skipped",
+        ep.epochs_planned, ep.epochs_engaged, ep.sessions_sharded, ep.sessions_serial,
+        ep.plans_skipped,
+    );
+    let bails = [
+        ("pending-fault", ep.bail_pending_fault),
+        ("wan-coupled", ep.bail_wan_coupled),
+        ("policy-unstable", ep.bail_policy_unstable),
+        ("below-threshold", ep.bail_below_threshold),
+        ("resilience", ep.bail_resilience),
+        ("other", ep.bail_other),
+    ];
+    let parts: Vec<String> = bails
+        .iter()
+        .filter(|(_, n)| *n > 0)
+        .map(|(k, n)| format!("{k} {n}"))
+        .collect();
+    if !parts.is_empty() {
+        println!("epoch bails: {}", parts.join(" | "));
+    }
 }
 
 /// Render the per-site table and summary lines for a finished campaign.

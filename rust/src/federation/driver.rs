@@ -78,7 +78,7 @@
 //! the serial path (see the epoch gate), preserving thread-count
 //! digest equality.
 
-use crate::cache::CacheServer;
+use crate::cache::{CacheServer, ReadPlan};
 use crate::client::stashcp;
 use crate::client::{curl, Method, TransferRecord};
 use crate::fault::{FaultEvent, FaultKind};
@@ -224,6 +224,59 @@ pub struct EngineStats {
     pub peak_component: usize,
 }
 
+/// Epoch-loop observability: how often the epoch planner ran, why it
+/// bailed, and how much of the run it actually parallelised. Kept
+/// *outside* [`EngineStats`] on purpose — these counters describe the
+/// execution strategy, not the simulation, so they legitimately differ
+/// between thread counts (a serial run plans zero epochs) while every
+/// [`EngineStats`] field stays digest-identical.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EpochStats {
+    /// Planning attempts that actually ran (gate passed, no cached
+    /// bail).
+    pub epochs_planned: u64,
+    /// Epochs that shipped shards and merged at the barrier.
+    pub epochs_engaged: u64,
+    /// Sessions retired inside shard workers.
+    pub sessions_sharded: u64,
+    /// Sessions retired on the serial path.
+    pub sessions_serial: u64,
+    /// Planning attempts skipped because nothing plan-relevant changed
+    /// since the last bail (the O(1) fast path between state changes).
+    pub plans_skipped: u64,
+    /// Bail: no session prefix provably completes strictly before the
+    /// next scheduled fault instant.
+    pub bail_pending_fault: u64,
+    /// Bail: epoch flows would share links with background (WAN /
+    /// origin-LAN) traffic, or a needed route is severed.
+    pub bail_wan_coupled: u64,
+    /// Bail: the policy reads live telemetry, or its cache pick could
+    /// flip as cold fetches shift cache load during the epoch.
+    pub bail_policy_unstable: u64,
+    /// Bail: too little pending work, work still in flight, or
+    /// everything lands in a single shard.
+    pub bail_below_threshold: u64,
+    /// Bail: resilience machinery (deadlines / circuit breaker) is
+    /// armed — gray-failure paths are serial-only.
+    pub bail_resilience: u64,
+    /// Bail: anything else — failover history, poisoned replicas,
+    /// redirector outage, eviction risk, non-stash transports.
+    pub bail_other: u64,
+}
+
+/// Why one epoch-planning attempt refused to shard. Cached together
+/// with the state version that produced it, so repeated probes against
+/// unchanged state cost one comparison instead of a re-plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PlanBail {
+    PendingFault,
+    WanCoupled,
+    PolicyUnstable,
+    BelowThreshold,
+    Resilience,
+    Other,
+}
+
 /// The event-driven download engine. Create one per batch of work; it
 /// borrows the [`FedSim`] only while spawning and running, so drivers
 /// can inspect the federation between runs.
@@ -253,6 +306,20 @@ pub struct SessionEngine {
     /// Empty after a purely serial run (diagnostics only — not part
     /// of the serial-vs-threaded bit-identity surface).
     pub epoch_durations: Welford,
+    /// Epoch-loop counters (planned/engaged/bails). Thread-count
+    /// dependent by design; never part of the bit-identity surface.
+    pub epochs: EpochStats,
+    /// Monotone stamp of plan-relevant state. Bumped whenever a fault
+    /// fires, a session finishes or fails over, or new work is
+    /// spawned — the events that can change a planning verdict.
+    /// Background-flow respawns deliberately do *not* bump it: they
+    /// are invisible to the planner's obligations, and re-probing on
+    /// every respawn is exactly the thrash the bail cache exists to
+    /// kill.
+    state_version: u64,
+    /// The last failed plan: `(state_version at the attempt, reason)`.
+    /// While the version still matches, probing is a no-op.
+    last_bail: Option<(u64, PlanBail)>,
     pub stats: EngineStats,
     /// Always-on phase/rollup telemetry. Observation only: it never
     /// touches the queue, the network, or the RNG, so records are
@@ -279,6 +346,9 @@ impl SessionEngine {
             in_flight: 0,
             completed: Vec::new(),
             epoch_durations: Welford::new(),
+            epochs: EpochStats::default(),
+            state_version: 0,
+            last_bail: None,
             stats: EngineStats::default(),
             tele: Telemetry::new(),
         }
@@ -398,6 +468,7 @@ impl SessionEngine {
         self.sessions
             .push(Session::new(id, site_idx, file, method, origin, at));
         self.outstanding += 1;
+        self.state_version += 1;
         self.queue.schedule_at(at, EngineEvent::Start(id));
         id
     }
@@ -419,40 +490,45 @@ impl SessionEngine {
     }
 
     /// [`SessionEngine::run`] on up to `threads` OS threads,
-    /// bit-identical to the serial run. The loop advances serially
-    /// until the remaining work is provably WAN-decoupled — every
-    /// outstanding session is a pending whole-hit stash download under
-    /// an epoch-stable redirection policy, with no faults pending —
-    /// then partitions the remainder by the links its serve flows
-    /// touch and advances each partition on its own thread against a
-    /// shard network (exact by PR 4's component decomposition). The
-    /// barrier merges shard results back in the serial interleaving
-    /// order, so records, stats, monitoring, and the RNG stream are
-    /// byte-for-byte what `threads == 1` produces. Workloads that
-    /// never satisfy the gate (cold caches, live-telemetry policies,
-    /// chaos timelines mid-fault) simply stay on the serial path.
+    /// bit-identical to the serial run. Whenever nothing is in flight,
+    /// the loop tries to plan a *bounded epoch*: a prefix of the
+    /// pending sessions that provably completes strictly before the
+    /// next fault instant (or runs to the end when none is scheduled),
+    /// partitioned by union-find over serve/fetch links ∪ cache
+    /// anchors ∪ origin-DTN anchors — so cold fetches shard by origin
+    /// component instead of forcing serial — and advanced on worker
+    /// threads against shard networks (exact by PR 4's component
+    /// decomposition). The barrier merges shard results back in the
+    /// serial interleaving order, the engine applies the fault at the
+    /// horizon serially, and the loop plans the next epoch. Records,
+    /// stats, monitoring, and the RNG stream are byte-for-byte what
+    /// `threads == 1` produces. Work that fails a proof obligation
+    /// (live-telemetry policies, WAN-coupled routes, armed resilience)
+    /// stays on the serial path, and the bail reason is cached against
+    /// [`Self::state_version`] so re-probing unchanged state is O(1) —
+    /// see [`EpochStats`] for the observable outcome counters.
     pub fn run_threaded(&mut self, fed: &mut FedSim, threads: usize) {
         let alloc_before = fed.net.stats;
         // Track this run's own component high-water mark; the
         // network's lifetime peak is restored below.
         fed.net.stats.peak_component = 0;
         let mut guard = 0u64;
-        // Failed epoch probes cost O(outstanding): back off until half
-        // the sessions that were outstanding at the probe completed.
-        let mut next_probe = self.stats.sessions_completed;
         while self.outstanding > 0 {
-            if threads > 1
-                && self.in_flight == 0
-                && fed.pending_faults() == 0
-                && !fed.resilience_armed()
-                && fed.policy.epoch_stable()
-                && self.stats.sessions_completed >= next_probe
-            {
-                if self.try_terminal_epoch(fed, threads) {
-                    continue; // nothing outstanding: the loop exits
+            if threads > 1 && self.in_flight == 0 {
+                match self.last_bail {
+                    Some((v, _)) if v == self.state_version => {
+                        // Nothing plan-relevant changed since the last
+                        // refusal: skip the probe outright.
+                        self.epochs.plans_skipped += 1;
+                    }
+                    _ => match self.try_epoch(fed, threads) {
+                        Ok(()) => continue,
+                        Err(bail) => {
+                            self.note_bail(bail);
+                            self.last_bail = Some((self.state_version, bail));
+                        }
+                    },
                 }
-                next_probe =
-                    self.stats.sessions_completed + (self.outstanding as u64 / 2).max(1);
             }
             guard += 1;
             assert!(
@@ -547,6 +623,7 @@ impl SessionEngine {
     /// order, sorted waiter keys, flow start order from the network).
     fn on_fault(&mut self, fed: &mut FedSim, kind: FaultKind, t: SimTime) {
         self.stats.faults_applied += 1;
+        self.state_version += 1;
         fed.fault_log.push(FaultEvent {
             at: t,
             kind: kind.clone(),
@@ -712,6 +789,7 @@ impl SessionEngine {
         exclude: Option<usize>,
     ) {
         self.stats.retries += 1;
+        self.state_version += 1;
         self.release_cache_slot(id);
         // A session failing over out of JoinWait (e.g. its cache died
         // before the fetch owner's commit) must leave the waiter list
@@ -1480,6 +1558,8 @@ impl SessionEngine {
         self.in_flight -= 1;
         self.completed.push(id);
         self.stats.sessions_completed += 1;
+        self.epochs.sessions_serial += 1;
+        self.state_version += 1;
     }
 
     // --- model-checker seam -----------------------------------------------
@@ -1562,16 +1642,39 @@ impl SessionEngine {
         }
     }
 
-    // --- sharded terminal epoch -------------------------------------------
+    // --- sharded epochs ---------------------------------------------------
 
-    /// Attempt the terminal parallel epoch: plan it, fan the shards
-    /// out over up to `threads` worker threads, and merge. Returns
-    /// `false` — engine and federation untouched — when the remaining
-    /// work is not provably WAN-decoupled.
-    fn try_terminal_epoch(&mut self, fed: &mut FedSim, threads: usize) -> bool {
-        let Some((tasks, transport)) = self.plan_terminal_epoch(fed) else {
-            return false;
+    /// Count one refused plan under its reason.
+    fn note_bail(&mut self, bail: PlanBail) {
+        let slot = match bail {
+            PlanBail::PendingFault => &mut self.epochs.bail_pending_fault,
+            PlanBail::WanCoupled => &mut self.epochs.bail_wan_coupled,
+            PlanBail::PolicyUnstable => &mut self.epochs.bail_policy_unstable,
+            PlanBail::BelowThreshold => &mut self.epochs.bail_below_threshold,
+            PlanBail::Resilience => &mut self.epochs.bail_resilience,
+            PlanBail::Other => &mut self.epochs.bail_other,
         };
+        *slot += 1;
+    }
+
+    /// Attempt one parallel epoch: plan a bounded prefix of the
+    /// pending work, fan the shards out over up to `threads` worker
+    /// threads, and merge at the barrier. On `Err` the engine and
+    /// federation are untouched and the caller caches the reason
+    /// against the current state version.
+    fn try_epoch(&mut self, fed: &mut FedSim, threads: usize) -> Result<(), PlanBail> {
+        // Gray-failure machinery (deadlines, circuit breaker) and
+        // load-coupled policies observe mid-epoch state the shards
+        // cannot reproduce: serial-only, checked before any planning
+        // work is spent.
+        if fed.resilience_armed() {
+            return Err(PlanBail::Resilience);
+        }
+        if !fed.policy.epoch_stable() {
+            return Err(PlanBail::PolicyUnstable);
+        }
+        self.epochs.epochs_planned += 1;
+        let (tasks, transport) = self.plan_epoch(fed)?;
         let workers = threads.min(tasks.len());
         let slots: Vec<Mutex<Option<ShardTask>>> =
             tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
@@ -1600,132 +1703,251 @@ impl SessionEngine {
             .map(|m| m.into_inner().unwrap().expect("worker stored a result"))
             .collect();
         self.merge_epoch(fed, outcomes, transport);
-        true
+        self.epochs.epochs_engaged += 1;
+        Ok(())
     }
 
-    /// Prove the remainder of the run is embarrassingly parallel and
-    /// split it into shard tasks. The proof obligations, checked per
+    /// Prove a prefix of the pending work is exactly parallelisable
+    /// within the current epoch window and split it into shard tasks.
+    /// The window's horizon is the next scheduled fault instant (or
+    /// unbounded when none is pending); proof obligations, checked per
     /// pending session against the epoch-frozen federation:
     ///
     /// - stash method, nothing excluded (no failover history pending);
-    /// - the (epoch-stable) policy picks a cache — the same cache it
-    ///   would pick mid-run, since distance, up/down state, and cache
-    ///   load factors cannot change during a whole-hit-only epoch;
-    /// - the file is wholly resident at that cache (no origin fetch,
-    ///   no `JoinWait`, no WAN coupling through the redirector);
-    /// - the serve route is up and disjoint from every origin DTN
-    ///   link, so shard flows never share a component with background
-    ///   flows in the parent network.
+    /// - the (epoch-stable) policy picks a cache, and — when cold
+    ///   fetches will shift cache load mid-epoch — the same pick
+    ///   survives an adversarial view charging the pick's cache its
+    ///   worst-case load ceiling (competitor scores only rise with
+    ///   load, so surviving the ceiling means no ordering flips);
+    /// - the serve route (and, for files not wholly resident, the
+    ///   combined origin→cache fetch route) is up, and disjoint from
+    ///   every origin DTN link whenever background flows exist —
+    ///   shard flows must never share a component with parent flows;
+    /// - cold fetches fit under each cache's eviction high watermark,
+    ///   so mid-epoch LRU evictions cannot invalidate the plan-time
+    ///   hit/miss snapshot the completion bounds price;
+    /// - the shipped prefix provably completes *strictly* before the
+    ///   horizon (a fault beats a same-instant timer in the serial
+    ///   arbitration, so a wake timer landing exactly on the horizon
+    ///   would fire post-fault) and no later than the first
+    ///   left-behind arrival (completions dispatch before same-
+    ///   instant Starts, so a tie is safe). The bound is pessimistic:
+    ///   per network component, `max arrival + Σ (latency legs +
+    ///   size / worst-case max-min floor)` — some session is always
+    ///   progressing at no less than the floor rate.
     ///
-    /// Sessions sharing a serve-route link — or a cache server, whose
-    /// LRU state must advance in request order — are grouped into one
-    /// shard by union-find. Returns `None` (federation untouched) if
-    /// any obligation fails or fewer than two shards would result.
-    fn plan_terminal_epoch(&mut self, fed: &mut FedSim) -> Option<(Vec<ShardTask>, Method)> {
+    /// Sessions sharing any flow link, a cache server (LRU /
+    /// reservation state advances in request order), or an origin DTN
+    /// are grouped into one shard by union-find. Cold fetches to
+    /// distinct origins therefore shard by origin component instead of
+    /// forcing the whole run serial. Returns `Err` (federation
+    /// untouched) if any obligation fails or fewer than two shards
+    /// would result.
+    fn plan_epoch(&mut self, fed: &mut FedSim) -> Result<(Vec<ShardTask>, Method), PlanBail> {
         // A foreground flow from an earlier engine still in the
         // network would be invisible to the shards.
         if fed.net.active_flows() != fed.background.len() {
-            return None;
+            return Err(PlanBail::BelowThreshold);
         }
-        let pending: Vec<usize> = self
+        let mut pending: Vec<usize> = self
             .sessions
             .iter()
             .enumerate()
             .filter(|(_, s)| s.phase == Phase::Pending)
             .map(|(i, _)| i)
             .collect();
-        if pending.len() != self.outstanding {
-            return None;
+        if pending.len() != self.outstanding || pending.len() < 2 {
+            return Err(PlanBail::BelowThreshold);
         }
+        // Arrival order with id tie-break is exactly the queue's
+        // `(time, seq)` order: `spawn_at` issues sequence numbers in
+        // session-id order, so the prefix cut below can reason about
+        // dispatch order without touching the queue.
+        pending.sort_unstable_by_key(|&i| (self.sessions[i].arrival, i));
+        let horizon = fed.next_fault_at();
         let bg_links: HashSet<LinkId> = (0..fed.origins.len())
             .map(|o| fed.topo.origin_lan_link(o))
             .collect();
-        struct Pick {
-            cache_site: usize,
-            serve_links: Vec<LinkId>,
-            rtt_ms: f64,
-        }
-        let mut picks: Vec<Pick> = Vec::with_capacity(pending.len());
+        // With no background flows in the parent network, routes may
+        // cross origin LANs freely — which is what lets cold fetches
+        // shard at all.
+        let have_bg = !fed.background.is_empty();
+        let mut picks: Vec<PlannedPick> = Vec::with_capacity(pending.len());
+        // Why the eligible prefix stopped growing; surfaces as the
+        // bail reason only when too little shippable work sits in
+        // front of the blocker.
+        let mut cap_reason: Option<PlanBail> = None;
+        // Version pinned per (cache, path): two sessions reading
+        // different versions of one path would invalidate each other's
+        // residency mid-epoch, which the plan-time hit/miss snapshot
+        // cannot price.
+        let mut pinned_version: HashMap<(usize, String), u64> = HashMap::new();
         for &i in &pending {
             let s = &self.sessions[i];
-            if s.method != DownloadMethod::Stash || !s.excluded_caches.is_empty() {
-                return None;
-            }
-            // One ranked lookup per session, exactly as geo_resolve
-            // pays mid-run.
-            let cache_site = fed.select_cache(
-                s.site_idx,
-                &s.file.path,
-                &s.excluded_caches,
-                &self.cache_in_flight,
-            )?;
-            if s.file.size.as_u64() > 0
-                && !fed.caches[&cache_site].contains_whole(&s.file.path, s.file.version)
-            {
-                return None;
-            }
-            let route = fed
-                .topo
-                .route(Endpoint::Cache(cache_site), Endpoint::Worker(s.site_idx));
-            if !route_is_up(fed, &route.links) {
-                return None;
-            }
-            if route.links.iter().any(|l| bg_links.contains(l)) {
-                return None;
-            }
-            picks.push(Pick {
-                cache_site,
-                serve_links: route.links,
-                rtt_ms: route.rtt_ms,
-            });
-        }
-        // Partition by shared links, with each cache site as an extra
-        // union-find node anchoring all of its clients (a cross-site
-        // serve and a same-site serve of one cache can be link-
-        // disjoint, but the cache's LRU state still serializes them).
-        let link_count = fed.net.link_count();
-        let mut uf = UnionFind::new(link_count + fed.topo.site_count());
-        for p in &picks {
-            let anchor = link_count + p.cache_site;
-            for l in &p.serve_links {
-                uf.union(anchor, l.0 as usize);
-            }
-        }
-        let mut group_of_root: HashMap<usize, usize> = HashMap::new();
-        let mut groups: Vec<Vec<usize>> = Vec::new();
-        for (k, p) in picks.iter().enumerate() {
-            let root = uf.find(link_count + p.cache_site);
-            let g = *group_of_root.entry(root).or_insert_with(|| {
-                groups.push(Vec::new());
-                groups.len() - 1
-            });
-            groups[g].push(k);
-        }
-        if groups.len() < 2 {
-            return None; // one shard would be serial with extra steps
-        }
-        // Point of no return: pull the Start events (with their
-        // original `(time, seq)` keys — the serial tie-breaks) off the
-        // queue and move per-group state out of the federation.
-        let drained = self.queue.drain_sorted();
-        assert_eq!(
-            drained.len(),
-            pending.len(),
-            "terminal epoch: queue holds more than the pending Starts"
-        );
-        let mut start_key: HashMap<u64, (SimTime, u64)> = HashMap::with_capacity(drained.len());
-        for (t, seq, ev) in drained {
-            match ev {
-                EngineEvent::Start(id) => {
-                    start_key.insert(id.0, (t, seq));
+            if let Some(h) = horizon {
+                if s.arrival >= h {
+                    cap_reason = Some(PlanBail::PendingFault);
+                    break;
                 }
-                EngineEvent::Timer(id) => {
-                    unreachable!("pending timer for {id:?} with no session in flight")
+            }
+            let verdict = (|| -> Result<PlannedPick, PlanBail> {
+                if s.method != DownloadMethod::Stash || !s.excluded_caches.is_empty() {
+                    return Err(PlanBail::Other);
                 }
-                EngineEvent::Deadline(id, _) => {
-                    unreachable!(
-                        "pending deadline for {id:?} in a terminal epoch (resilience is disarmed)"
+                // One ranked lookup per session, exactly as
+                // geo_resolve pays mid-run.
+                let cache_site = fed
+                    .select_cache(
+                        s.site_idx,
+                        &s.file.path,
+                        &s.excluded_caches,
+                        &self.cache_in_flight,
                     )
+                    .ok_or(PlanBail::Other)?;
+                let cache = &fed.caches[&cache_site];
+                if cache.is_poisoned(&s.file.path) {
+                    // A poisoned copy fails the digest check at serve
+                    // time and detours into invalidate + failover:
+                    // serial-only.
+                    return Err(PlanBail::Other);
+                }
+                match pinned_version.entry((cache_site, s.file.path.clone())) {
+                    std::collections::hash_map::Entry::Occupied(e) => {
+                        if *e.get() != s.file.version {
+                            return Err(PlanBail::Other);
+                        }
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(s.file.version);
+                    }
+                }
+                let whole = s.file.size.as_u64() == 0
+                    || cache.contains_whole(&s.file.path, s.file.version);
+                let route = fed
+                    .topo
+                    .route(Endpoint::Cache(cache_site), Endpoint::Worker(s.site_idx));
+                if !route_is_up(fed, &route.links) {
+                    return Err(PlanBail::WanCoupled);
+                }
+                if have_bg && route.links.iter().any(|l| bg_links.contains(l)) {
+                    return Err(PlanBail::WanCoupled);
+                }
+                let fetch = if whole {
+                    None
+                } else {
+                    if have_bg {
+                        // The fetch route crosses this origin's LAN
+                        // link, where background flows live.
+                        return Err(PlanBail::WanCoupled);
+                    }
+                    if fed.redirectors.healthy_count() == 0 {
+                        return Err(PlanBail::Other);
+                    }
+                    let origin_route = fed
+                        .topo
+                        .route(Endpoint::Origin(s.origin.0), Endpoint::Cache(cache_site));
+                    let origin_rtt_ms = origin_route.rtt_ms;
+                    // Combined fetch path, built exactly as
+                    // fetch_begin builds it (origin legs first).
+                    let mut links = origin_route.links;
+                    links.extend_from_slice(&route.links);
+                    if !route_is_up(fed, &links) {
+                        return Err(PlanBail::WanCoupled);
+                    }
+                    Some(EpochFetch {
+                        origin_idx: s.origin.0,
+                        fetch_links: links,
+                        origin_rtt_ms,
+                    })
+                };
+                Ok(PlannedPick {
+                    session: i,
+                    cache_site,
+                    serve_links: route.links,
+                    rtt_ms: route.rtt_ms,
+                    fetch,
+                })
+            })();
+            match verdict {
+                Ok(p) => picks.push(p),
+                Err(r) => {
+                    cap_reason = Some(r);
+                    break;
+                }
+            }
+        }
+        let kmax = picks.len();
+        if kmax < 2 {
+            return Err(cap_reason.unwrap_or(PlanBail::BelowThreshold));
+        }
+        // Upper-bound bytes each cache ingests this epoch: one whole-
+        // file fetch per distinct (cache, path) not wholly resident.
+        // Feeds the eviction-freedom check and the pick-stability load
+        // ceiling below. Computed at kmax; both checks only relax as
+        // the prefix shrinks, so they stay valid for any cut.
+        let mut inbound: HashMap<usize, u64> = HashMap::new();
+        {
+            let mut seen: HashSet<(usize, &str)> = HashSet::new();
+            for p in &picks {
+                if p.fetch.is_some() {
+                    let s = &self.sessions[p.session];
+                    if seen.insert((p.cache_site, s.file.path.as_str())) {
+                        *inbound.entry(p.cache_site).or_insert(0) += s.file.size.as_u64();
+                    }
+                }
+            }
+        }
+        for (&site, &add) in &inbound {
+            let cache = &fed.caches[&site];
+            let cap = cache.cfg.capacity.as_u64();
+            let high = (cache.cfg.high_watermark * cap as f64) as u64;
+            if cache.usage().as_u64() + add > high {
+                // Filling past the watermark would trigger mid-epoch
+                // LRU evictions; the plan-time residency snapshot (and
+                // with it every bound above) would be fiction.
+                return Err(PlanBail::Other);
+            }
+        }
+        if !inbound.is_empty() {
+            // Adversarial pick-stability: cold fetches raise cache
+            // usage mid-epoch, and the geo score charges load via
+            // LOAD_PENALTY_KM. For every pick whose cache ingests
+            // bytes, re-run the selection against a view where that
+            // cache's score carries its worst-case load growth (plus
+            // an epsilon absorbing f64 association noise — erring
+            // toward a bail). Competitor scores can only *rise* with
+            // load, so a pick that beats their floors from its own
+            // ceiling cannot flip at any instant inside the epoch.
+            for p in &picks {
+                let Some(&add) = inbound.get(&p.cache_site) else {
+                    continue;
+                };
+                let bump = {
+                    let cache = &fed.caches[&p.cache_site];
+                    let cap = cache.cfg.capacity.as_u64() as f64;
+                    let lf_max = (cache.usage().as_u64() + add) as f64 / cap;
+                    (lf_max - cache.load_factor()) * crate::geoip::LOAD_PENALTY_KM + 1e-6
+                };
+                let s = &self.sessions[p.session];
+                let mut view = fed.federation_view(s.site_idx, &self.cache_in_flight);
+                let Some(pos) = view.pos_of_site(p.cache_site) else {
+                    return Err(PlanBail::PolicyUnstable);
+                };
+                for r in view.ranked.iter_mut() {
+                    if r.0 == pos {
+                        r.1 += bump;
+                    }
+                }
+                // Re-sort with the ranker's exact comparator.
+                view.ranked.sort_by(|a, b| {
+                    a.1.partial_cmp(&b.1)
+                        .expect("rank scores are finite")
+                        .then(a.0.cmp(&b.0))
+                });
+                if fed.policy.select(&s.file.path, &view, &s.excluded_caches)
+                    != Some(p.cache_site)
+                {
+                    return Err(PlanBail::PolicyUnstable);
                 }
             }
         }
@@ -1738,15 +1960,135 @@ impl SessionEngine {
             .unwrap_or(0);
         let transport = chain[attempt];
         let startup_delay = stashcp::startup_latency(&fed.startup_costs, transport, attempt);
+        let startup_secs = startup_delay.as_secs_f64();
+        let link_count = fed.net.link_count();
+        let site_count = fed.topo.site_count();
+        let origin_count = fed.origins.len();
+        // Pessimistic completion bound for a candidate prefix, checked
+        // against the horizon (strict) and the first left-behind
+        // arrival (non-strict). Per component: every flow's max-min
+        // rate is at least min(per_conn, weakest link capacity /
+        // component flow count), some session is always progressing
+        // (joiners wait only while their owner streams), so the epoch
+        // drains within the sum of individual worst-case itineraries
+        // after the last arrival. Cold sessions are priced with their
+        // discovery round trips even if they end up joining — an
+        // overestimate, never an underestimate.
+        let fits = |picks_k: &[PlannedPick], groups: &[Vec<usize>]| -> bool {
+            let next_arrival = pending
+                .get(picks_k.len())
+                .map(|&i| self.sessions[i].arrival);
+            if horizon.is_none() && next_arrival.is_none() {
+                return true;
+            }
+            let mut worst = SimTime::ZERO;
+            for g in groups {
+                let mut min_cap = f64::INFINITY;
+                let mut max_arrival = SimTime::ZERO;
+                for &pi in g {
+                    let p = &picks_k[pi];
+                    max_arrival = max_arrival.max(self.sessions[p.session].arrival);
+                    for l in p
+                        .serve_links
+                        .iter()
+                        .chain(p.fetch.iter().flat_map(|f| f.fetch_links.iter()))
+                    {
+                        min_cap = min_cap.min(fed.net.link_effective_capacity(*l));
+                    }
+                }
+                let n_c = g.len() as f64;
+                let mut active = 0.0f64;
+                for &pi in g {
+                    let p = &picks_k[pi];
+                    let s = &self.sessions[p.session];
+                    let mut lat = startup_secs + p.rtt_ms / 1e3;
+                    if let Some(f) = &p.fetch {
+                        lat += 2.0 * f.origin_rtt_ms / 1e3;
+                    }
+                    let per_conn = fed.caches[&p.cache_site].cfg.per_conn_gbps * 1e9 / 8.0;
+                    let size = s.file.size.as_u64().max(1) as f64;
+                    active += lat + size / per_conn.min(min_cap / n_c);
+                }
+                // +1 µs absorbs the Duration conversion's rounding.
+                let bound = max_arrival + Duration::from_secs_f64(active) + Duration(1);
+                worst = worst.max(bound);
+            }
+            if let Some(h) = horizon {
+                if worst >= h {
+                    return false;
+                }
+            }
+            if let Some(a) = next_arrival {
+                if worst > a {
+                    return false;
+                }
+            }
+            true
+        };
+        // Prefix cut: largest k whose picks partition into ≥ 2 shards
+        // and provably drain inside the window. The fast path — no
+        // horizon and everything eligible — ships the whole run
+        // without computing any bound (PR 6's terminal epoch).
+        let full = horizon.is_none() && kmax == pending.len();
+        let mut k = kmax;
+        let (k, groups) = loop {
+            if k < 2 {
+                return Err(match (horizon, cap_reason) {
+                    (Some(_), _) => PlanBail::PendingFault,
+                    (None, Some(r)) => r,
+                    (None, None) => PlanBail::BelowThreshold,
+                });
+            }
+            let groups = group_picks(&picks[..k], link_count, site_count, origin_count);
+            // Shrinking the prefix removes union edges, so a 1-group
+            // cut can still split at smaller k — keep descending.
+            let viable = groups.len() >= 2
+                && ((full && k == kmax) || fits(&picks[..k], &groups));
+            if viable {
+                break (k, groups);
+            }
+            k = if k > 64 { k - k / 8 } else { k - 1 };
+        };
+        picks.truncate(k);
+        // Point of no return: pull the shipped Start events (with
+        // their original `(time, seq)` keys — the serial tie-breaks)
+        // off the queue, restore the left-behind tail with its keys
+        // intact, and move per-group state out of the federation.
+        let shipped: HashSet<u64> = picks.iter().map(|p| p.session as u64).collect();
+        let drained = self.queue.drain_sorted();
+        let mut start_key: HashMap<u64, (SimTime, u64)> = HashMap::with_capacity(picks.len());
+        let mut rest: Vec<(SimTime, u64, EngineEvent)> = Vec::new();
+        for (t, seq, ev) in drained {
+            match ev {
+                EngineEvent::Start(id) if shipped.contains(&id.0) => {
+                    start_key.insert(id.0, (t, seq));
+                }
+                EngineEvent::Start(_) => rest.push((t, seq, ev)),
+                EngineEvent::Timer(id) => {
+                    unreachable!("pending timer for {id:?} with no session in flight")
+                }
+                EngineEvent::Deadline(id, _) => {
+                    unreachable!(
+                        "pending deadline for {id:?} in an epoch (resilience is disarmed)"
+                    )
+                }
+            }
+        }
+        assert_eq!(
+            start_key.len(),
+            picks.len(),
+            "every shipped session had a pending Start"
+        );
+        self.queue.restore(rest);
         let epoch_start = fed.now;
         let mut tasks = Vec::with_capacity(groups.len());
         for group in groups {
             let mut sessions: Vec<EpochSession> = group
                 .into_iter()
-                .map(|k| {
-                    let idx = pending[k];
+                .map(|pi| {
+                    let p = &mut picks[pi];
+                    let idx = p.session;
                     let (t0, seq) = start_key[&(idx as u64)];
-                    let p = &mut picks[k];
                     EpochSession {
                         id: SessionId(idx as u64),
                         t0,
@@ -1754,6 +2096,7 @@ impl SessionEngine {
                         cache_site: p.cache_site,
                         serve_links: std::mem::take(&mut p.serve_links),
                         rtt_ms: p.rtt_ms,
+                        fetch: p.fetch.take(),
                     }
                 })
                 .collect();
@@ -1776,20 +2119,22 @@ impl SessionEngine {
                 epoch_start,
             });
         }
-        Some((tasks, transport))
+        Ok((tasks, transport))
     }
 
     /// The epoch barrier: fold shard results back into the engine and
     /// federation in the exact order the serial engine would have
     /// produced them. Per-shard event relative order already matches
     /// serial; across shards the serial completion order is recovered
-    /// by sorting on `(tc, t2, t1, t0, seq)` — completion instant,
-    /// then flow-creation (seq) order, which at equal creation
-    /// instants is the CacheCheck-timer scheduling chain rooted at the
-    /// original Start keys. Counters merge as order-independent sums
-    /// and maxes; the RNG-bearing side effects (monitoring emissions,
-    /// background respawns) are replayed serially in that recovered
-    /// order so `fed.rng` advances byte-for-byte like a serial run.
+    /// by sorting on each done session's dispatch chain key (see
+    /// `run_shard`): completion instant, then flow-creation instant,
+    /// then the timer-scheduling chain rooted at the original Start
+    /// keys. Counters merge as order-independent sums and maxes;
+    /// origin byte counters fold commutatively; redirector locates
+    /// replay in CacheCheck order; and the RNG-bearing side effects
+    /// (monitoring emissions, background respawns) are replayed
+    /// serially in the recovered order so `fed.rng` advances
+    /// byte-for-byte like a serial run.
     fn merge_epoch(&mut self, fed: &mut FedSim, outcomes: Vec<ShardOutcome>, transport: Method) {
         let link_count = fed.net.link_count();
         let mut all: Vec<ShardDone> = Vec::new();
@@ -1815,6 +2160,7 @@ impl SessionEngine {
                 }
             }
             self.stats.events_processed += o.events_processed;
+            self.stats.coalesced_joins += o.coalesced_joins;
             all.extend(o.done);
         }
         debug_assert_eq!(
@@ -1823,18 +2169,53 @@ impl SessionEngine {
             "shard duration summaries must cover every epoch session exactly once"
         );
         self.epoch_durations.merge(&durations);
-        all.sort_unstable_by_key(|d| (d.tc, d.t2, d.t1, d.t0, d.seq));
+        all.sort_unstable_by(|a, b| a.key.cmp(&b.key));
+
+        // Replay the redirector locates the serial engine would have
+        // issued at each miss's CacheCheck instant — pool round-robin
+        // state and origin locate counters advance identically (the
+        // outcome itself is latency-free, and the planner pinned its
+        // origin) — and fold each origin's fresh bytes, a commutative
+        // sum the serial run accumulates at fetch completion. Locates
+        // never draw `fed.rng`, so their order relative to the
+        // monitoring replay below is immaterial; among themselves they
+        // follow the CacheCheck timer chain.
+        let mut locates: Vec<(SimTime, SimTime, SimTime, u64, usize)> = Vec::new();
+        for (ai, d) in all.iter().enumerate() {
+            if let DoneKind::Miss {
+                origin_idx,
+                miss_bytes,
+            } = d.kind
+            {
+                fed.origins[origin_idx].bytes_served += miss_bytes;
+                locates.push((d.t2, d.t1, d.t0, d.seq, ai));
+            }
+        }
+        locates.sort_unstable();
+        for &(t2, .., ai) in &locates {
+            let s = &self.sessions[all[ai].id.0 as usize];
+            let located = fed
+                .redirectors
+                .locate(&s.file.path, &mut fed.origins, t2)
+                .expect("planner verified a live redirector")
+                .expect("file registered at an origin");
+            debug_assert_eq!(located.origin, s.origin);
+        }
 
         // Sessions finish in serial order (mirrors `finish`; in_flight
         // never rose, so it does not fall here either).
-        let mut max_t2 = SimTime::ZERO;
+        let mut max_timer = SimTime::ZERO;
         for d in &all {
             let s = &mut self.sessions[d.id.0 as usize];
+            let hit = matches!(d.kind, DoneKind::Hit);
             s.transport = transport;
             s.cache_site = Some(d.cache_site);
             s.per_conn = d.per_conn;
             s.opened_at = Some(d.t2);
-            s.initial_hit = true;
+            s.initial_hit = hit;
+            if matches!(d.kind, DoneKind::Join) {
+                s.joins += 1;
+            }
             s.flow = None;
             // Serial cache serves record `Method::Xrootd` regardless of
             // the startup transport (see the `Xfer::CacheServe` arm of
@@ -1843,28 +2224,37 @@ impl SessionEngine {
                 path: s.file.path.clone(),
                 bytes: s.file.size.as_u64(),
                 method: Method::Xrootd,
-                cache_hit: true,
+                cache_hit: hit,
                 duration: d.tc - s.arrival,
             });
             s.phase = Phase::Done;
             s.phase_entered_at = d.tc;
-            // Reconstruct the serial run's phase spans: a whole-hit
-            // epoch session transitions exactly Pending → GeoResolve
-            // (t0) → CacheCheck (t1) → Transfer (t2) → Done (tc), so
-            // the serial engine would have folded these three spans in
-            // this completion order. Telemetry stays bit-identical
-            // across thread counts because `all` is already sorted to
-            // serial order.
-            let spans = [
-                (PhaseLabel::GeoResolve, d.t0, d.t1 - d.t0),
-                (PhaseLabel::CacheCheck, d.t1, d.t2 - d.t1),
-                (PhaseLabel::Transfer, d.t2, d.tc - d.t2),
-            ];
+            // Reconstruct the serial phase spans per itinerary (the
+            // histograms are commutative integer buckets, so folding
+            // them at the barrier instead of at each serial transition
+            // is digest-neutral):
+            //   hit:  Geo → Check → Transfer
+            //   miss: Geo → Check → FetchBegin → Transfer
+            //   join: Geo → Check → JoinWait → Check(0) → Transfer
+            let mut spans: Vec<(PhaseLabel, SimTime, Duration)> = Vec::with_capacity(5);
+            spans.push((PhaseLabel::GeoResolve, d.t0, d.t1 - d.t0));
+            spans.push((PhaseLabel::CacheCheck, d.t1, d.t2 - d.t1));
+            match d.kind {
+                DoneKind::Hit => {}
+                DoneKind::Miss { .. } => {
+                    spans.push((PhaseLabel::FetchBegin, d.t2, d.tf - d.t2));
+                }
+                DoneKind::Join => {
+                    spans.push((PhaseLabel::JoinWait, d.t2, d.tf - d.t2));
+                    spans.push((PhaseLabel::CacheCheck, d.tf, Duration(0)));
+                }
+            }
+            spans.push((PhaseLabel::Transfer, d.tf, d.tc - d.tf));
             for &(label, _, dur) in &spans {
                 self.tele.phase_span(label, dur);
             }
             self.tele
-                .on_complete(d.tc, Some(d.cache_site), s.file.size.as_u64(), true);
+                .on_complete(d.tc, Some(d.cache_site), s.file.size.as_u64(), hit);
             if self.tele.trace_enabled() {
                 self.tele.push_trace(SpanTrace {
                     session: d.id.0,
@@ -1874,7 +2264,7 @@ impl SessionEngine {
                     completed: d.tc,
                     bytes: s.file.size.as_u64(),
                     cache_site: Some(d.cache_site),
-                    hit: true,
+                    hit,
                     spans: spans
                         .iter()
                         .map(|&(label, start, dur)| PhaseSpan { label, start, dur })
@@ -1887,7 +2277,13 @@ impl SessionEngine {
             // geo_resolve + finish leave the slot key present at its
             // pre-epoch count.
             self.cache_in_flight.entry(d.cache_site).or_insert(0);
-            max_t2 = max_t2.max(d.t2);
+            // The last timer instant each session popped: its Check
+            // (hit), Fetch (miss), or wake (join) — where the serial
+            // timer clock would sit after this session's last event.
+            max_timer = max_timer.max(match d.kind {
+                DoneKind::Hit => d.t2,
+                DoneKind::Miss { .. } | DoneKind::Join => d.tf,
+            });
         }
         // Peak concurrency by interval sweep. A finish at the same
         // instant as a start drains first — completions dispatch
@@ -1923,11 +2319,13 @@ impl SessionEngine {
             }
             fed.now = tn;
             for c in fed.net.advance(tn) {
-                // A serve flow created at the instant this background
-                // flow respawned sorts after it: completion dispatch
-                // precedes same-instant timers, so the respawn drew
-                // the lower flow sequence.
-                while ei < all.len() && all[ei].tc == tn && all[ei].t2 < c.started {
+                // A serve/fetch flow created at the instant this
+                // background flow respawned sorts after it: completion
+                // dispatch precedes same-instant timers, so the
+                // respawn drew the lower flow sequence. `tf` is each
+                // session's terminal-flow creation instant (== t2 for
+                // hits).
+                while ei < all.len() && all[ei].tc == tn && all[ei].tf < c.started {
                     self.epoch_emit(fed, &all[ei], transport);
                     ei += 1;
                 }
@@ -1949,7 +2347,11 @@ impl SessionEngine {
         fed.now = bound;
         let tail = fed.net.advance(bound);
         debug_assert!(tail.is_empty(), "completions past the replay bound");
-        self.queue.advance_to(max_t2);
+        self.queue.advance_to(max_timer);
+        self.epochs.sessions_sharded += all.len() as u64;
+        // An epoch retires sessions; the planner's cached bail (if
+        // any) no longer describes the engine state.
+        self.state_version += 1;
     }
 
     /// Emit one epoch session's monitoring trio against the parent
@@ -1975,8 +2377,9 @@ impl SessionEngine {
     }
 }
 
-/// Minimal union-find over dense indices (links ∪ cache anchors),
-/// path-halving, smaller root wins for determinism.
+/// Minimal union-find over dense indices (links ∪ cache anchors ∪
+/// origin-DTN anchors), path-halving, smaller root wins for
+/// determinism.
 struct UnionFind {
     parent: Vec<u32>,
 }
@@ -2005,10 +2408,72 @@ impl UnionFind {
     }
 }
 
+/// A planned cold leg: the origin the redirector pins at plan time,
+/// the combined fetch route (origin legs first, then the serve
+/// route, exactly as `fetch_begin` builds it), and the origin RTT
+/// that prices the redirect round trips.
+#[derive(Clone)]
+struct EpochFetch {
+    origin_idx: usize,
+    fetch_links: Vec<LinkId>,
+    origin_rtt_ms: f64,
+}
+
+/// The planner's per-session dry-run result, before sessions are
+/// grouped into shards: which cache serves, over which links, and
+/// whether a cold fetch couples the session to an origin DTN.
+struct PlannedPick {
+    session: usize,
+    cache_site: usize,
+    serve_links: Vec<LinkId>,
+    rtt_ms: f64,
+    fetch: Option<EpochFetch>,
+}
+
+/// Partition picks into link-connected components. Each pick unions
+/// its cache anchor with every serve link, every fetch link, and —
+/// for cold picks — the origin-DTN anchor, so two sessions land in
+/// one shard iff their flows could share a link, a cache, or an
+/// origin. Groups are keyed by the component root of the cache
+/// anchor and returned in first-appearance (plan prefix) order, so
+/// shard numbering is deterministic.
+fn group_picks(
+    picks: &[PlannedPick],
+    link_count: usize,
+    site_count: usize,
+    origin_count: usize,
+) -> Vec<Vec<usize>> {
+    let mut uf = UnionFind::new(link_count + site_count + origin_count);
+    for p in picks {
+        let anchor = link_count + p.cache_site;
+        for l in &p.serve_links {
+            uf.union(anchor, l.0 as usize);
+        }
+        if let Some(f) = &p.fetch {
+            for l in &f.fetch_links {
+                uf.union(anchor, l.0 as usize);
+            }
+            uf.union(anchor, link_count + site_count + f.origin_idx);
+        }
+    }
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut root_to_group: HashMap<usize, usize> = HashMap::new();
+    for (pi, p) in picks.iter().enumerate() {
+        let root = uf.find(link_count + p.cache_site);
+        let g = *root_to_group.entry(root).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[g].push(pi);
+    }
+    groups
+}
+
 /// One pending session's precomputed epoch itinerary: its original
 /// Start key (the serial tie-break), the cache the epoch-stable
-/// policy picked, and the serve route. Immutable session data (path,
-/// size, version) is read from the shared `&[Session]` slice.
+/// policy picked, the serve route, and — for planned misses — the
+/// cold leg. Immutable session data (path, size, version) is read
+/// from the shared `&[Session]` slice.
 struct EpochSession {
     id: SessionId,
     t0: SimTime,
@@ -2016,6 +2481,7 @@ struct EpochSession {
     cache_site: usize,
     serve_links: Vec<LinkId>,
     rtt_ms: f64,
+    fetch: Option<EpochFetch>,
 }
 
 /// One link-connected partition of the pending sessions, with the
@@ -2031,20 +2497,57 @@ struct ShardTask {
     epoch_start: SimTime,
 }
 
-/// A finished epoch session: the serial ordering key
-/// `(tc, t2, t1, t0, seq)` plus what the barrier writes back.
+/// How an epoch session resolved inside its shard — drives the
+/// barrier's per-kind write-back (record hit flag, phase spans,
+/// origin byte fold, locate replay, join counter).
+#[derive(Clone, Copy)]
+enum DoneKind {
+    /// Whole hit: served straight from the cache at `t2`.
+    Hit,
+    /// Cold miss: fetched from `origin_idx`, committing `miss_bytes`
+    /// fresh bytes at completion.
+    Miss { origin_idx: usize, miss_bytes: u64 },
+    /// Coalesced join: parked on another session's in-flight fetch
+    /// and woken whole at `tf`.
+    Join,
+}
+
+/// A finished epoch session: the serial dispatch chain key plus what
+/// the barrier writes back.
+///
+/// `key` recovers the serial completion-dispatch order across
+/// shards. Element 0 is the completion instant `tc`; each further
+/// element is the instant the next-outer timer/flow in the session's
+/// dispatch chain was scheduled, ending with the original Start key
+/// `[t0, 0, seq]` (0 < any timer instant, standing in for "arrival
+/// seq beats every later-issued timer seq at the same instant"):
+///   hit:  `[tc, t2, t1, t0, 0, seq]`
+///   miss: `[tc, tf, t2, t1, t0, 0, seq]`
+///   join: `[tc, w, w, <owner key[1..]>, widx]` — the wake timer was
+///         scheduled *at* the wake instant `w` during the owner
+///         fetch's completion dispatch, so `w` appears twice (flow
+///         creation, then timer scheduling), then ties break by the
+///         owner's own chain and park order `widx`.
+/// Ambiguity survives only when two distinct serial timers share ≥3
+/// consecutive chain instants (zero-RTT topologies); campaign
+/// topologies have nonzero RTTs.
 struct ShardDone {
     id: SessionId,
     t0: SimTime,
     seq: u64,
     /// GeoResolve instant (startup paid).
     t1: SimTime,
-    /// CacheCheck instant == `opened_at` == flow creation time.
+    /// CacheCheck instant == `opened_at`.
     t2: SimTime,
+    /// Terminal-flow creation instant: == `t2` for hits, the fetch
+    /// flow's start for misses, the wake instant for joins.
+    tf: SimTime,
     /// Completion instant.
     tc: SimTime,
     cache_site: usize,
     per_conn: f64,
+    kind: DoneKind,
+    key: Vec<u64>,
 }
 
 struct ShardOutcome {
@@ -2052,6 +2555,9 @@ struct ShardOutcome {
     caches: HashMap<usize, CacheServer>,
     events_processed: u64,
     done: Vec<ShardDone>,
+    /// Joins that latched onto a fetch already carrying a waiter
+    /// (mirrors the serial `coalesced_joins` counter).
+    coalesced_joins: u64,
     /// Start→completion durations (seconds) of this shard's sessions,
     /// accumulated in shard-local completion order; the barrier merges
     /// these in stable shard order (parallel Welford reduction).
@@ -2063,56 +2569,236 @@ enum ShardPhase {
     Start,
     Geo,
     Check,
+    /// Redirect round trips paid; create the fetch flow.
+    Fetch,
 }
 
-/// The shard event loop: the whole-hit fast path of the serial engine
-/// (Start → startup timer → GeoResolve → RTT timer → CacheCheck →
-/// serve flow → completion) against the shard's own network and
-/// queue. The planner proved every session stays on this path, so
-/// anything else panics rather than silently diverging. Event
-/// arbitration mirrors [`SessionEngine::run`]: completions at or
-/// before the next timer drain first, and stragglers drain before a
-/// popped timer's handler runs.
-fn run_shard(task: ShardTask, all_sessions: &[Session]) -> ShardOutcome {
-    #[allow(clippy::too_many_arguments)]
-    fn retire(
-        completions: Vec<Completion>,
-        t: SimTime,
-        sessions: &[EpochSession],
-        all_sessions: &[Session],
-        flow_owner: &mut HashMap<FlowId, u32>,
-        caches: &mut HashMap<usize, CacheServer>,
-        t1: &[SimTime],
-        t2: &[SimTime],
-        per_conn: &[f64],
-        done: &mut Vec<ShardDone>,
-        events: &mut u64,
-    ) {
+/// Per-shard mutable state, split off so the event loop's borrow of
+/// the network stays disjoint from everything the handlers mutate.
+struct ShardCtx<'a> {
+    sessions: &'a [EpochSession],
+    all_sessions: &'a [Session],
+    caches: HashMap<usize, CacheServer>,
+    queue: EventQueue<(u32, ShardPhase)>,
+    flow_owner: HashMap<FlowId, u32>,
+    /// Sessions parked on an in-flight fetch, keyed like the serial
+    /// engine's waiter map, in park order.
+    waiters: HashMap<(usize, String), Vec<u32>>,
+    t1: Vec<SimTime>,
+    t2: Vec<SimTime>,
+    tf: Vec<SimTime>,
+    per_conn: Vec<f64>,
+    /// First CacheCheck seen (distinguishes a wake re-check).
+    opened: Vec<bool>,
+    /// The owner's reserved plan, committed at fetch completion.
+    plans: Vec<Option<ReadPlan>>,
+    /// Set when a parked session is woken: the waking owner's chain
+    /// key (sans completion instant) and this waiter's park index.
+    wake: Vec<Option<(Vec<u64>, u64)>>,
+    done: Vec<ShardDone>,
+    coalesced_joins: u64,
+    events: u64,
+    startup: Duration,
+}
+
+impl ShardCtx<'_> {
+    /// Flow completions at `t`, dispatched in flow order exactly as
+    /// the serial completion handler would: a fetch commits its
+    /// chunks, credits the cache, and wakes its joiners in park
+    /// order; a serve (first-check hit or woken join) verifies and
+    /// credits. Each retirement also fixes the session's serial
+    /// dispatch chain key (see [`ShardDone`]).
+    fn retire(&mut self, completions: Vec<Completion>, t: SimTime) {
         for c in completions {
-            *events += 1;
-            let i = flow_owner.remove(&c.flow).expect("shard flow has an owner") as usize;
-            let es = &sessions[i];
-            let size = all_sessions[es.id.0 as usize].file.size.as_u64();
-            caches
+            self.events += 1;
+            let i = self
+                .flow_owner
+                .remove(&c.flow)
+                .expect("shard flow has an owner") as usize;
+            let es = &self.sessions[i];
+            let s = &self.all_sessions[es.id.0 as usize];
+            let size = s.file.size.as_u64();
+            let cache = self
+                .caches
                 .get_mut(&es.cache_site)
-                .expect("shard cache")
-                .record_served(size, 0);
-            done.push(ShardDone {
+                .expect("shard cache");
+            let (kind, key) = if let Some(plan) = self.plans[i].take() {
+                // Fetch completion: mirror the serial `StashFetch` arm
+                // (origin byte credit and monitoring replay at the
+                // barrier).
+                cache.commit_chunks(&s.file.path, s.file.version, &plan.fetch, t);
+                cache.record_served(plan.hit_bytes, plan.miss_bytes);
+                let fetch = es.fetch.as_ref().expect("owner had a planned cold leg");
+                let key = vec![t.0, self.tf[i].0, self.t2[i].0, self.t1[i].0, es.t0.0, 0, es.seq];
+                if let Some(ids) = self
+                    .waiters
+                    .remove(&(es.cache_site, s.file.path.clone()))
+                {
+                    for (widx, &ju) in ids.iter().enumerate() {
+                        // Serial `wake_waiters`: re-Check timers at the
+                        // commit instant, scheduled in park order.
+                        self.wake[ju as usize] = Some((key[1..].to_vec(), widx as u64));
+                        self.queue.schedule_at(t, (ju, ShardPhase::Check));
+                    }
+                }
+                (
+                    DoneKind::Miss {
+                        origin_idx: fetch.origin_idx,
+                        miss_bytes: plan.miss_bytes,
+                    },
+                    key,
+                )
+            } else {
+                // Serve completion. The planner proved the copy is
+                // unpoisoned, so the client digest must pass.
+                debug_assert!(
+                    served_bytes_verify(cache, &s.file.path, s.file.version, size),
+                    "epoch serve failed the digest; the planner vetted the copy"
+                );
+                cache.record_served(size, 0);
+                match self.wake[i].take() {
+                    Some((chain, widx)) => {
+                        // Woken join: wake instant twice (flow creation
+                        // and wake-timer scheduling both happened at
+                        // `w`), then the owner's chain, then park order.
+                        let w = self.tf[i].0;
+                        let mut key = Vec::with_capacity(chain.len() + 4);
+                        key.extend_from_slice(&[t.0, w, w]);
+                        key.extend_from_slice(&chain);
+                        key.push(widx);
+                        (DoneKind::Join, key)
+                    }
+                    None => (
+                        DoneKind::Hit,
+                        vec![t.0, self.t2[i].0, self.t1[i].0, es.t0.0, 0, es.seq],
+                    ),
+                }
+            };
+            self.done.push(ShardDone {
                 id: es.id,
                 t0: es.t0,
                 seq: es.seq,
-                t1: t1[i],
-                t2: t2[i],
+                t1: self.t1[i],
+                t2: self.t2[i],
+                tf: self.tf[i],
                 tc: t,
                 cache_site: es.cache_site,
-                per_conn: per_conn[i],
+                per_conn: self.per_conn[i],
+                kind,
+                key,
             });
         }
     }
 
+    /// One popped timer, routed like the serial `on_timer` for the
+    /// Stash itinerary.
+    fn handle(&mut self, net: &mut Network, iu: u32, phase: ShardPhase, t: SimTime) {
+        let i = iu as usize;
+        match phase {
+            ShardPhase::Start => {
+                self.queue
+                    .schedule_at(t + self.startup, (iu, ShardPhase::Geo));
+            }
+            ShardPhase::Geo => {
+                self.t1[i] = t;
+                self.queue.schedule_at(
+                    t + Duration::from_secs_f64(self.sessions[i].rtt_ms / 1e3),
+                    (iu, ShardPhase::Check),
+                );
+            }
+            ShardPhase::Check => {
+                let es = &self.sessions[i];
+                let s = &self.all_sessions[es.id.0 as usize];
+                let size = s.file.size.as_u64();
+                let cache = self
+                    .caches
+                    .get_mut(&es.cache_site)
+                    .expect("shard cache");
+                let plan = cache.plan_read(&s.file.path, 0, size, size, s.file.version, t);
+                let whole = plan.miss_bytes == 0;
+                let cap = cache.cfg.per_conn_gbps * 1e9 / 8.0;
+                self.per_conn[i] = cap;
+                if !self.opened[i] {
+                    self.opened[i] = true;
+                    self.t2[i] = t;
+                } else {
+                    // A wake re-check: the owner's commit made the copy
+                    // whole, exactly as the serial re-plan does.
+                    assert!(whole, "woken epoch session must re-plan into a whole hit");
+                }
+                if whole {
+                    self.tf[i] = t;
+                    let flow = net.start_flow(
+                        FlowSpec {
+                            path: es.serve_links.clone(),
+                            bytes: size.max(1),
+                            rate_cap: Some(cap),
+                        },
+                        t,
+                    );
+                    self.flow_owner.insert(flow, iu);
+                } else if plan.fetch.is_empty() {
+                    // Every missing chunk is in flight for another
+                    // epoch session: park. Planned-epoch sessions are
+                    // first attempts (the planner bails on retried
+                    // sessions), so the serial `joins == 0` guard on
+                    // `coalesced_joins` always passes.
+                    assert!(self.wake[i].is_none(), "parked session parked twice");
+                    self.coalesced_joins += 1;
+                    self.waiters
+                        .entry((es.cache_site, s.file.path.clone()))
+                        .or_default()
+                        .push(iu);
+                } else {
+                    // Miss: reserve now, pay the redirect round trips,
+                    // then start the fetch — serial `cache_check` miss
+                    // arm with the redirector locate replayed at the
+                    // barrier.
+                    cache.begin_fetch(&s.file.path, s.file.version, &plan.fetch);
+                    self.plans[i] = Some(plan);
+                    let f = es
+                        .fetch
+                        .as_ref()
+                        .expect("planner vetted a cold leg for every possible miss");
+                    self.queue.schedule_at(
+                        t + Duration::from_secs_f64(2.0 * f.origin_rtt_ms / 1e3),
+                        (iu, ShardPhase::Fetch),
+                    );
+                }
+            }
+            ShardPhase::Fetch => {
+                let es = &self.sessions[i];
+                let s = &self.all_sessions[es.id.0 as usize];
+                let f = es.fetch.as_ref().expect("Fetch timers only follow misses");
+                self.tf[i] = t;
+                let flow = net.start_flow(
+                    FlowSpec {
+                        path: f.fetch_links.clone(),
+                        bytes: s.file.size.as_u64().max(1),
+                        rate_cap: Some(self.per_conn[i]),
+                    },
+                    t,
+                );
+                self.flow_owner.insert(flow, iu);
+            }
+        }
+    }
+}
+
+/// The shard event loop: the Stash itinerary of the serial engine
+/// (Start → startup timer → GeoResolve → RTT timer → CacheCheck →
+/// serve flow | redirect timer → fetch flow | JoinWait park → wake →
+/// serve flow) against the shard's own network and queue. The
+/// planner proved every session stays on these paths — the cache
+/// stays up and unpoisoned, routes stay up, nothing evicts, versions
+/// don't conflict — so anything else panics rather than silently
+/// diverging. Event arbitration mirrors [`SessionEngine::run`]:
+/// completions at or before the next timer drain first, and
+/// stragglers drain before a popped timer's handler runs.
+fn run_shard(task: ShardTask, all_sessions: &[Session]) -> ShardOutcome {
     let ShardTask {
         sessions,
-        mut caches,
+        caches,
         mut net,
         startup_delay,
         epoch_start,
@@ -2123,101 +2809,56 @@ fn run_shard(task: ShardTask, all_sessions: &[Session]) -> ShardOutcome {
     for (i, s) in sessions.iter().enumerate() {
         queue.schedule_at(s.t0, (i as u32, ShardPhase::Start));
     }
-    let mut flow_owner: HashMap<FlowId, u32> = HashMap::with_capacity(n);
-    let mut t1 = vec![SimTime::ZERO; n];
-    let mut t2 = vec![SimTime::ZERO; n];
-    let mut per_conn = vec![0.0f64; n];
-    let mut done: Vec<ShardDone> = Vec::with_capacity(n);
-    let mut events = 0u64;
-    while done.len() < n {
-        let next_timer = queue.peek_time();
+    let mut ctx = ShardCtx {
+        sessions: &sessions,
+        all_sessions,
+        caches,
+        queue,
+        flow_owner: HashMap::with_capacity(n),
+        waiters: HashMap::new(),
+        t1: vec![SimTime::ZERO; n],
+        t2: vec![SimTime::ZERO; n],
+        tf: vec![SimTime::ZERO; n],
+        per_conn: vec![0.0f64; n],
+        opened: vec![false; n],
+        plans: (0..n).map(|_| None).collect(),
+        wake: (0..n).map(|_| None).collect(),
+        done: Vec::with_capacity(n),
+        coalesced_joins: 0,
+        events: 0,
+        startup: startup_delay,
+    };
+    while ctx.done.len() < n {
+        let next_timer = ctx.queue.peek_time();
         let next_net = net.next_completion();
         let net_first = match (next_timer, next_net) {
             (Some(te), Some(tn)) => tn <= te,
             (None, Some(_)) => true,
             (Some(_), None) => false,
-            (None, None) => panic!("shard stalled with {} sessions left", n - done.len()),
+            (None, None) => panic!("shard stalled with {} sessions left", n - ctx.done.len()),
         };
         if net_first {
             let tn = next_net.expect("checked");
             let completions = net.advance(tn);
-            retire(
-                completions,
-                tn,
-                &sessions,
-                all_sessions,
-                &mut flow_owner,
-                &mut caches,
-                &t1,
-                &t2,
-                &per_conn,
-                &mut done,
-                &mut events,
-            );
+            ctx.retire(completions, tn);
         } else {
-            let (t, (iu, phase)) = queue.pop().expect("peeked a timer");
-            events += 1;
+            let (t, (iu, phase)) = ctx.queue.pop().expect("peeked a timer");
+            ctx.events += 1;
             let stragglers = net.advance(t);
-            retire(
-                stragglers,
-                t,
-                &sessions,
-                all_sessions,
-                &mut flow_owner,
-                &mut caches,
-                &t1,
-                &t2,
-                &per_conn,
-                &mut done,
-                &mut events,
-            );
-            let i = iu as usize;
-            match phase {
-                ShardPhase::Start => {
-                    queue.schedule_at(t + startup_delay, (iu, ShardPhase::Geo));
-                }
-                ShardPhase::Geo => {
-                    t1[i] = t;
-                    queue.schedule_at(
-                        t + Duration::from_secs_f64(sessions[i].rtt_ms / 1e3),
-                        (iu, ShardPhase::Check),
-                    );
-                }
-                ShardPhase::Check => {
-                    let es = &sessions[i];
-                    let s = &all_sessions[es.id.0 as usize];
-                    let size = s.file.size.as_u64();
-                    let cache = caches.get_mut(&es.cache_site).expect("shard cache");
-                    let plan = cache.plan_read(&s.file.path, 0, size, size, s.file.version, t);
-                    assert_eq!(
-                        plan.miss_bytes, 0,
-                        "epoch session missed; the planner promised a whole hit"
-                    );
-                    let cap = cache.cfg.per_conn_gbps * 1e9 / 8.0;
-                    per_conn[i] = cap;
-                    t2[i] = t;
-                    let flow = net.start_flow(
-                        FlowSpec {
-                            path: es.serve_links.clone(),
-                            bytes: size.max(1),
-                            rate_cap: Some(cap),
-                        },
-                        t,
-                    );
-                    flow_owner.insert(flow, iu);
-                }
-            }
+            ctx.retire(stragglers, t);
+            ctx.handle(&mut net, iu, phase, t);
         }
     }
     let mut durations = Welford::new();
-    for d in &done {
+    for d in &ctx.done {
         durations.push((d.tc - d.t0).as_secs_f64());
     }
     ShardOutcome {
         net,
-        caches,
-        events_processed: events,
-        done,
+        caches: ctx.caches,
+        events_processed: ctx.events,
+        done: ctx.done,
+        coalesced_joins: ctx.coalesced_joins,
         durations,
     }
 }

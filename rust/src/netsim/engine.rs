@@ -122,6 +122,22 @@ impl<E> EventQueue<E> {
         out.into_iter().map(|e| (e.time, e.seq, e.event)).collect()
     }
 
+    /// Re-insert entries previously removed by
+    /// [`drain_sorted`](Self::drain_sorted), preserving their original
+    /// `(time, seq)` keys. The epoch planner drains the whole queue to
+    /// read the serial tie-break keys, ships a prefix into shards, and
+    /// restores the left-behind tail here — so a later pop sees
+    /// exactly the entry the serial run would have popped. Keys must
+    /// predate the current sequence counter (they were issued by this
+    /// queue) and must not be in the past.
+    pub fn restore(&mut self, entries: Vec<(SimTime, u64, E)>) {
+        for (time, seq, event) in entries {
+            assert!(time >= self.now, "restoring a past entry: {time} < {}", self.now);
+            assert!(seq < self.seq, "restoring a foreign key: seq {seq} never issued");
+            self.heap.push(Entry { time, seq, event });
+        }
+    }
+
     /// Every pending entry as `(time, seq, event)` in `(time, seq)`
     /// order, without disturbing the queue. The model checker
     /// enumerates these as its "enabled timer" choices; the `(time,
@@ -272,6 +288,26 @@ mod tests {
             q.pending_entries(),
             vec![(SimTime(10), 0, "a"), (SimTime(20), 2, "c")]
         );
+    }
+
+    #[test]
+    fn drain_then_restore_preserves_serial_keys() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(10), "a"); // seq 0
+        q.schedule_at(SimTime(20), "b"); // seq 1
+        q.schedule_at(SimTime(20), "c"); // seq 2
+        let mut drained = q.drain_sorted();
+        assert!(q.is_empty());
+        // Ship "a", restore the tail with its original keys.
+        let shipped = drained.remove(0);
+        assert_eq!(shipped, (SimTime(10), 0, "a"));
+        q.restore(drained);
+        // New scheduling continues the original sequence: FIFO ties
+        // still resolve as if the queue had never been drained.
+        q.schedule_at(SimTime(20), "d"); // seq 3
+        assert_eq!(q.pop(), Some((SimTime(20), "b")));
+        assert_eq!(q.pop(), Some((SimTime(20), "c")));
+        assert_eq!(q.pop(), Some((SimTime(20), "d")));
     }
 
     #[test]

@@ -295,6 +295,20 @@ impl Network {
         self.links[link.0 as usize].agg_rate
     }
 
+    /// Effective capacity (bytes/s) a link can move right now:
+    /// nominal capacity scaled by its degradation factor, zero while
+    /// severed. The epoch planner divides this by a flow count for its
+    /// pessimistic completion bounds — max-min fairness never hands a
+    /// flow less than `capacity / members` on any of its links.
+    pub fn link_effective_capacity(&self, link: LinkId) -> f64 {
+        let l = &self.links[link.0 as usize];
+        if l.up {
+            l.capacity * l.factor
+        } else {
+            0.0
+        }
+    }
+
     fn flow(&self, id: FlowId) -> Option<&Flow> {
         let s = self.slots.get(id.slot())?;
         if s.gen == id.generation() {

@@ -28,7 +28,7 @@ use crate::client::TransferRecord;
 use crate::config::defaults::COMPUTE_SITES;
 use crate::config::FederationConfig;
 use crate::fault::{FaultEvent, FaultTimeline};
-use crate::federation::driver::{EngineStats, SessionEngine};
+use crate::federation::driver::{EngineStats, EpochStats, SessionEngine};
 use crate::federation::{DownloadMethod, FedSim};
 use crate::monitoring::availability::{AvailabilityReport, CacheAvailability};
 use crate::sim::workload::Catalog;
@@ -55,6 +55,13 @@ pub struct CampaignConfig {
     pub zipf_s: f64,
     /// Experiment whose catalog (and origin) the campaign reads.
     pub experiment: String,
+    /// Per-site experiment override: when non-empty, the site at
+    /// position `i` in `sites` reads `site_experiments[i % len]`'s
+    /// catalog instead of `experiment`. Cold multi-origin campaigns
+    /// use this so each site's misses pull from its own origin DTN —
+    /// with origins placed at distinct sites the cold traffic forms
+    /// disjoint origin components the epoch planner can shard.
+    pub site_experiments: Vec<String>,
     /// Background flows per origin DTN link.
     pub background_flows: usize,
     pub method: DownloadMethod,
@@ -78,6 +85,7 @@ impl Default for CampaignConfig {
             catalog_files: 256,
             zipf_s: 1.1,
             experiment: "gwosc".into(),
+            site_experiments: Vec::new(),
             background_flows: 2,
             method: DownloadMethod::Stash,
             seed: 0,
@@ -112,6 +120,11 @@ pub struct CampaignResults {
     pub makespan: Duration,
     /// Full engine counters (failovers, retries, aborted bytes, …).
     pub engine: EngineStats,
+    /// Epoch-loop counters (epochs planned/engaged, shard vs serial
+    /// session counts, per-reason plan bails). Thread-count dependent
+    /// by design — execution-strategy observability, never part of
+    /// the cross-thread bit-identity surface.
+    pub epochs: EpochStats,
     /// End-of-run telemetry export bundle (empty when
     /// [`CampaignConfig::telemetry`] is off).
     pub telemetry: TelemetrySnapshot,
@@ -214,6 +227,11 @@ pub fn run_on_threads(fed: &mut FedSim, ccfg: &CampaignConfig, threads: usize) -
         // dropping, or reordering a site never perturbs the arrivals
         // at the others.
         let mut site_rng = Pcg64::new(fed.cfg.seed ^ ccfg.seed, site_stream(site_name));
+        let experiment = if ccfg.site_experiments.is_empty() {
+            &ccfg.experiment
+        } else {
+            &ccfg.site_experiments[i % ccfg.site_experiments.len()]
+        };
         let rate = site_jobs as f64 / ccfg.arrival_window_secs.max(1e-9);
         let mut t = base;
         for _ in 0..site_jobs {
@@ -223,7 +241,7 @@ pub fn run_on_threads(fed: &mut FedSim, ccfg: &CampaignConfig, threads: usize) -
             let n_files = site_rng.gen_range(lo, hi + 1).max(1);
             for _ in 0..n_files {
                 let idx = zipf.sample(&mut site_rng);
-                let file = catalog.file(&ccfg.experiment, idx);
+                let file = catalog.file(experiment, idx);
                 engine.spawn_at(fed, t, site_idx, file, ccfg.method);
             }
         }
@@ -255,6 +273,7 @@ pub fn run_on_threads(fed: &mut FedSim, ccfg: &CampaignConfig, threads: usize) -
         makespan: fed.now - first_arrival.unwrap_or(base),
         telemetry: snapshot_telemetry(fed, &engine),
         engine: engine.stats,
+        epochs: engine.epochs,
     }
 }
 

@@ -746,3 +746,86 @@ fn breaker_transitions_never_strand_sessions() {
         "deadline expiries drive the breaker's failure outcomes"
     );
 }
+
+/// [`paper_federation`] with `origin-des` relocated to syracuse and
+/// `origin-ligo` to nebraska (the same multi-origin shape as the
+/// session_engine cold twin), plus the size mixture clamped to small
+/// files so transfers are short relative to arrival spacing. That is
+/// the window shape the bounded epoch planner needs: many sessions
+/// finish comfortably before the next fault instant, in three disjoint
+/// origin components (syracuse, nebraska, chicago).
+fn multi_origin_small_files_federation() -> stashcache::config::FederationConfig {
+    let mut cfg = paper_federation();
+    for o in &mut cfg.origins {
+        if o.name == "origin-des" {
+            o.site = "syracuse".into();
+        } else if o.name == "origin-ligo" {
+            o.site = "nebraska".into();
+        }
+    }
+    cfg.workload.size_dist.min = ByteSize(64 * 1024);
+    cfg.workload.size_dist.max = ByteSize(4 * 1024 * 1024);
+    cfg
+}
+
+/// A cache dies mid-campaign and heals eight seconds later. The epoch
+/// planner must keep sharding *around* the fault — bounded epochs
+/// before the outage, more between outage and heal, and the full tail
+/// after — while every thread count reproduces the serial records,
+/// fault log, and availability report byte-for-byte. Arrivals are
+/// spaced wider than the ~1 s session lifetime so in-flight work
+/// drains between jobs, giving the epoch loop its re-plan points.
+#[test]
+fn chaos_mid_run_epochs_engage_and_stay_bit_identical() {
+    let ccfg = CampaignConfig {
+        sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+        site_experiments: vec!["des".into(), "ligo".into(), "gwosc".into()],
+        jobs: 24,
+        arrival_window_secs: 60.0,
+        catalog_files: 16,
+        zipf_s: 1.1,
+        background_flows: 0,
+        ..CampaignConfig::default()
+    };
+    let leg = |threads: usize| {
+        let mut fed = FedSim::build(multi_origin_small_files_federation());
+        let victim = fed.topo.site_index("chicago").unwrap();
+        let mut faults = FaultTimeline::new();
+        faults.cache_outage(victim, t(12.0), t(20.0));
+        campaign::run_on_with_faults_threads(&mut fed, &ccfg, &faults, threads)
+    };
+    let serial = leg(1);
+    assert_eq!(serial.campaign.records.len(), 24, "every job completes");
+    assert!(serial.campaign.records.iter().all(|r| r.record.bytes > 0));
+    assert_eq!(serial.availability.faults_applied, 2, "down + heal");
+    assert_eq!(
+        serial.campaign.epochs.epochs_engaged, 0,
+        "serial never shards"
+    );
+    for threads in [2usize, 8] {
+        let r = leg(threads);
+        assert_eq!(
+            r.campaign.records, serial.campaign.records,
+            "{threads}-thread chaos records diverged from serial"
+        );
+        assert_eq!(r.campaign.engine, serial.campaign.engine, "{threads}-thread EngineStats");
+        assert_eq!(
+            r.campaign.telemetry, serial.campaign.telemetry,
+            "{threads}-thread telemetry snapshot"
+        );
+        assert_eq!(r.fault_log, serial.fault_log, "{threads}-thread fault log");
+        assert_eq!(r.availability, serial.availability, "{threads}-thread availability");
+        assert_eq!(r.campaign.peak_concurrent, serial.campaign.peak_concurrent);
+        assert_eq!(r.campaign.events_processed, serial.campaign.events_processed);
+        assert_eq!(r.campaign.makespan, serial.campaign.makespan);
+        assert!(
+            r.campaign.epochs.epochs_engaged >= 2,
+            "{threads} threads: mid-run epochs must engage around the fault, got {:?}",
+            r.campaign.epochs
+        );
+        assert!(
+            r.campaign.epochs.sessions_sharded > 0,
+            "{threads} threads: chaos sessions must run on shard workers"
+        );
+    }
+}

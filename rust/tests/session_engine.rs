@@ -314,6 +314,79 @@ fn warmed_tail_shards_and_matches_serial_exactly() {
     }
 }
 
+/// [`paper_federation`] with two experiment origins relocated to
+/// cache-owning compute sites: `origin-des` moves to syracuse and
+/// `origin-ligo` to nebraska. Each of those sites then pulls its
+/// experiment's cold misses from a same-site origin DTN — the fetch
+/// route never crosses the WAN — so the epoch planner sees three
+/// disjoint origin components (syracuse, nebraska, chicago) instead of
+/// one blob coupled through Chicago's border.
+fn multi_origin_federation() -> stashcache::config::FederationConfig {
+    let mut cfg = paper_federation();
+    for o in &mut cfg.origins {
+        if o.name == "origin-des" {
+            o.site = "syracuse".into();
+        } else if o.name == "origin-ligo" {
+            o.site = "nebraska".into();
+        }
+    }
+    cfg
+}
+
+#[test]
+fn cold_start_campaign_shards_and_matches_serial_exactly() {
+    // All-miss start against three self-contained sites, each reading
+    // an experiment whose origin sits behind its own border: the epoch
+    // planner must shard the cold fetches by origin component, and the
+    // merged results must be byte-for-byte what the serial loop
+    // produces. This is the cold twin of
+    // `campaign_bit_identical_across_thread_counts`.
+    let ccfg = CampaignConfig {
+        sites: vec!["syracuse".into(), "nebraska".into(), "chicago".into()],
+        site_experiments: vec!["des".into(), "ligo".into(), "gwosc".into()],
+        jobs: 48,
+        arrival_window_secs: 20.0,
+        catalog_files: 12,
+        zipf_s: 1.1,
+        background_flows: 0,
+        ..CampaignConfig::default()
+    };
+    let serial = campaign::run_threads(multi_origin_federation(), &ccfg, 1);
+    assert_eq!(serial.records.len(), 48, "every job completes");
+    assert!(
+        serial.records.iter().any(|r| !r.record.cache_hit),
+        "a cold start must produce misses"
+    );
+    assert!(
+        serial.records.iter().any(|r| r.record.cache_hit),
+        "repeat reads within the window should hit the warming cache"
+    );
+    assert_eq!(serial.epochs.epochs_engaged, 0, "serial never shards");
+    let digest = record_digest(&serial.records);
+    for threads in [2usize, 8] {
+        let r = campaign::run_threads(multi_origin_federation(), &ccfg, threads);
+        assert_eq!(
+            record_digest(&r.records),
+            digest,
+            "{threads}-thread cold record digest diverged from serial"
+        );
+        assert_eq!(r.records, serial.records, "{threads}-thread records");
+        assert_eq!(r.engine, serial.engine, "{threads}-thread EngineStats");
+        assert_eq!(r.telemetry, serial.telemetry, "{threads}-thread telemetry");
+        assert_eq!(r.events_processed, serial.events_processed);
+        assert_eq!(r.makespan, serial.makespan);
+        assert!(
+            r.epochs.epochs_engaged >= 1,
+            "{threads} threads: a cold epoch must engage, got {:?}",
+            r.epochs
+        );
+        assert!(
+            r.epochs.sessions_sharded > 0,
+            "{threads} threads: cold sessions must run on shard workers"
+        );
+    }
+}
+
 #[test]
 fn telemetry_identical_across_thread_counts() {
     // The telemetry export is built from thread-invariant state
